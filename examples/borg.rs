@@ -1,0 +1,42 @@
+//! Borg-trace study (Fig 6, C.7, D.8): the 26-class, k=2048 workload
+//! derived from the Google Borg 2019 traces (synthesized per DESIGN.md
+//! §4 — calibrated to the paper's reported statistics).
+//!
+//! Run: `cargo run --release --example borg` (QS_SCALE=full for paper
+//! scale). Writes results/fig6_borg.csv, fig7_fairness.csv,
+//! fig8_preemptive.csv.
+
+use quickswap::experiments::{figures, Scale};
+use quickswap::workload::borg::borg_workload;
+
+fn main() {
+    let wl = borg_workload(1.0);
+    println!(
+        "Borg-derived workload: {} classes, k={}, λ* = {:.3}",
+        wl.num_classes(),
+        wl.k,
+        wl.lambda_critical_floored()
+    );
+    let heavy_rate: f64 = wl.classes.iter().filter(|c| c.need >= 512).map(|c| c.rate).sum();
+    println!(
+        "heavy group: {:.3}% of jobs, {:.1}% of load\n",
+        100.0 * heavy_rate / wl.total_rate(),
+        100.0 * (0..26)
+            .filter(|&c| wl.classes[c].need >= 512)
+            .map(|c| wl.rho_class(c))
+            .sum::<f64>()
+            / (0..26).map(|c| wl.rho_class(c)).sum::<f64>()
+    );
+
+    let scale = Scale::from_env();
+    let lambdas = [2.0, 3.0, 4.0, 4.5];
+
+    println!("--- Fig 6: weighted E[T] (nonpreemptive policies) ---");
+    let pts = figures::fig6(scale, &lambdas, false);
+
+    println!("\n--- Fig C.7: fairness ---");
+    figures::fig7(&pts);
+
+    println!("\n--- Fig D.8: including preemptive ServerFilling ---");
+    figures::fig6(scale, &lambdas, true);
+}

@@ -1,0 +1,31 @@
+//! Full one-or-all study: reproduces Figs 1–4 (time series, threshold
+//! sweep, λ sweep with analysis overlay, phase durations).
+//!
+//! Run: `QS_SCALE=full cargo run --release --example one_or_all`
+//! (QS_SCALE=bench for a faster pass; outputs land in results/).
+
+use quickswap::experiments::{figures, Scale};
+
+fn main() {
+    let scale = Scale::from_env();
+    println!("scale: {scale:?}\n");
+
+    println!("--- Fig 1: #jobs in system over time (MSF vs MSFQ) ---");
+    let f1 = figures::fig1(scale);
+    let (msf, msfq) = (&f1[0], &f1[1]);
+    println!(
+        "MSF holds {:.1}× more jobs on average than MSFQ\n",
+        msf.mean_n / msfq.mean_n
+    );
+
+    println!("--- Fig 2: E[T] vs quickswap threshold ℓ ---");
+    figures::fig2(scale, 7.5, &[0, 1, 2, 4, 8, 16, 24, 28, 31]);
+
+    println!("\n--- Fig 3: E[T] and E[T^w] vs λ, all policies ---");
+    figures::fig3(scale, &[4.0, 5.0, 6.0, 6.75, 7.25, 7.5]);
+
+    println!("\n--- Fig 4: phase durations vs λ ---");
+    figures::fig4(scale, &[6.0, 6.75, 7.25, 7.5]);
+
+    println!("\nCSV series written under results/ (fig1..fig4).");
+}

@@ -1,0 +1,5 @@
+"""Build-time compile path: L2 JAX model + L1 Pallas kernels + AOT export.
+
+Never imported at runtime — `make artifacts` lowers everything to HLO
+text under artifacts/, which the Rust runtime executes via PJRT.
+"""

@@ -1,0 +1,110 @@
+"""AOT export: lower the L2 solver/sweep to HLO *text* artifacts.
+
+HLO text (not `.serialize()`): the image's xla_extension 0.5.1 rejects
+jax>=0.5 protos with 64-bit instruction ids; the text parser reassigns
+ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts (consumed by rust/src/runtime):
+  artifacts/msfq_solver_k8.hlo.txt    small solver (tests, fast)
+  artifacts/msfq_solver_k32.hlo.txt   paper-scale solver (k = 32)
+  artifacts/msfq_sweep_k8.hlo.txt     full threshold sweep, k = 8
+  artifacts/meta.json                 shapes + input/output layouts
+
+Inputs of every solver artifact: params f32[8] (see kernels.ref), iters
+i32 scalar. Output: f32[16] metric vector (model.METRICS order). The
+sweep artifact returns (f32[k,16], i32, i32).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .kernels.ref import NPARAMS
+from .model import NMETRICS, default_shape, solve, sweep
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_solver(k: int, shape):
+    params = jax.ShapeDtypeStruct((NPARAMS,), jnp.float32)
+    iters = jax.ShapeDtypeStruct((), jnp.int32)
+    fn = lambda p, i: solve(p, i, shape=shape)  # noqa: E731
+    return jax.jit(fn).lower(params, iters)
+
+
+def lower_sweep(k: int, shape):
+    params = jax.ShapeDtypeStruct((NPARAMS,), jnp.float32)
+    iters = jax.ShapeDtypeStruct((), jnp.int32)
+    fn = lambda p, i: sweep(p, i, shape=shape, k=k)  # noqa: E731
+    return jax.jit(fn).lower(params, iters)
+
+
+# (name, k, shape, lower): shapes are the truncation used at export time.
+def artifact_specs():
+    # k=8 uses a deeper light-queue truncation (A=128) than
+    # default_shape so solves stay trustworthy (boundary mass ≪ 5%) up
+    # to ρ ≈ 0.95 — the autotuner's clamped operating point.
+    return [
+        ("msfq_solver_k8", 8, (128, 32, 9), lower_solver),
+        ("msfq_solver_k32", 32, (256, 64, 33), lower_solver),
+        ("msfq_sweep_k8", 8, (128, 32, 9), lower_sweep),
+    ]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=os.path.join("..", "artifacts"))
+    ap.add_argument("--only", default=None, help="emit a single artifact")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    meta = {
+        "params_layout": ["lam1", "lamk", "mu1", "muk", "ell", "k", "_", "_"],
+        "metrics_layout": [
+            "en1", "enk", "et1", "etk", "et", "etw", "m1", "m23", "m4",
+            "idle", "blocked1", "blockedk", "residual", "mass", "_", "_",
+        ],
+        "nmetrics": NMETRICS,
+        "artifacts": {},
+    }
+    for name, k, shape, lower in artifact_specs():
+        if args.only and args.only != name:
+            continue
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        text = to_hlo_text(lower(k, shape))
+        with open(path, "w") as f:
+            f.write(text)
+        meta["artifacts"][name] = {
+            "k": k,
+            "shape": list(shape),
+            "kind": "sweep" if "sweep" in name else "solver",
+            "file": f"{name}.hlo.txt",
+        }
+        print(f"wrote {path} ({len(text) / 1e6:.2f} MB, shape {shape})")
+
+    meta_path = os.path.join(args.out_dir, "meta.json")
+    # Merge with an existing meta.json when --only is used.
+    if args.only and os.path.exists(meta_path):
+        with open(meta_path) as f:
+            old = json.load(f)
+        old["artifacts"].update(meta["artifacts"])
+        meta = old
+    with open(meta_path, "w") as f:
+        json.dump(meta, f, indent=2)
+    print(f"wrote {meta_path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,225 @@
+"""Pure-jnp reference ("oracle") for the MSFQ CTMC uniformization step.
+
+The one-or-all MSFQ system is a CTMC over states (n1, nk, z):
+
+  z = 0      serving a heavy job (or idle when n1 = nk = 0),
+  z = 1      light-serving phase (paper phases 2 and 3: M/M/k on lights),
+  z = 1+u    drain phase (paper phase 4) with u lights still in service,
+             u in 1..k-1 (only u <= ell is reachable).
+
+`uniform_step_ref` applies one uniformized power step
+    p <- p + (inflow(p) - outrate .* p) / Lambda
+to a dense probability tensor p[A, B, Z] (A = n1 truncation + 1, etc.).
+Arrivals at the truncation boundary are deferred (no out-rate), so
+probability mass is conserved exactly.
+
+This file is the correctness oracle for the Pallas kernel
+(`uniform_step.py`) and mirrors the sparse Rust solver
+(rust/src/analysis/ctmc.rs) transition for transition.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+# Parameter-vector layout shared by ref, kernel, model and the Rust
+# runtime (artifacts/meta.json documents it for consumers).
+P_LAM1, P_LAMK, P_MU1, P_MUK, P_ELL, P_K = 0, 1, 2, 3, 4, 5
+NPARAMS = 8
+
+
+def make_params(lam1, lamk, mu1, muk, ell, k):
+    """Pack system parameters into the f32 vector the kernels consume."""
+    v = np.zeros(NPARAMS, dtype=np.float32)
+    v[P_LAM1], v[P_LAMK], v[P_MU1], v[P_MUK] = lam1, lamk, mu1, muk
+    v[P_ELL], v[P_K] = float(ell), float(k)
+    return v
+
+
+def uniformization_rate(params):
+    lam1, lamk, mu1, muk = (
+        params[P_LAM1],
+        params[P_LAMK],
+        params[P_MU1],
+        params[P_MUK],
+    )
+    k = params[P_K]
+    return lam1 + lamk + jnp.maximum(k * mu1, muk)
+
+
+def _shift(p, axis, by):
+    """Shift `p` so out[i] = p[i - by] along `axis`, zero-filled."""
+    if by == 0:
+        return p
+    pad = [(0, 0)] * p.ndim
+    if by > 0:
+        pad[axis] = (by, 0)
+        sl = [slice(None)] * p.ndim
+        sl[axis] = slice(0, p.shape[axis])
+        return jnp.pad(p, pad)[tuple(sl)]
+    pad[axis] = (0, -by)
+    sl = [slice(None)] * p.ndim
+    sl[axis] = slice(-by, p.shape[axis] - by)
+    return jnp.pad(p, pad)[tuple(sl)]
+
+
+def uniform_step_ref(p, params):
+    """One uniformized step of the MSFQ CTMC. p: f32[A, B, Z]."""
+    A, B, Z = p.shape
+    lam1, lamk, mu1, muk = (
+        params[P_LAM1],
+        params[P_LAMK],
+        params[P_MU1],
+        params[P_MUK],
+    )
+    ell, k = params[P_ELL], params[P_K]
+    lam = uniformization_rate(params)
+
+    f = jnp.float32
+    a = jnp.arange(A, dtype=f)[:, None, None]  # n1 index
+    b = jnp.arange(B, dtype=f)[None, :, None]  # nk index
+    z = jnp.arange(Z, dtype=f)[None, None, :]  # phase index
+
+    is_z0 = (z == 0).astype(f)
+    is_z1 = (z == 1).astype(f)
+    is_drain = (z >= 2).astype(f)
+    u = jnp.maximum(z - 1.0, 0.0)  # lights in service in drain states
+
+    # ---- out-rates ------------------------------------------------------
+    q = jnp.zeros_like(p)
+    q += lam1 * (a < A - 1).astype(f)
+    q += lamk * (b < B - 1).astype(f)
+    q += is_z0 * muk * (b >= 1).astype(f)
+    q += is_z1 * jnp.minimum(a, k) * mu1 * (a >= 1).astype(f)
+    q += is_drain * u * mu1 * (a >= 1).astype(f)
+
+    inflow = jnp.zeros_like(p)
+
+    # ---- light arrivals (rate lam1), source (a-1, b, z) -----------------
+    p_a = _shift(p, 0, 1)  # p[a-1, b, z]
+    # Normal: phase unchanged. In z=0 this requires b >= 1 (otherwise the
+    # arrival triggers a dispatch, handled below).
+    keep = is_z1 + is_drain + is_z0 * (b >= 1).astype(f)
+    inflow += lam1 * p_a * keep
+    # Dispatch from (a-1, 0, 0): new light count m = a lands in z=1 if
+    # m > ell else in drain z = 1+m.
+    src_l = _shift(p[:, :, 0] * (jnp.arange(B, dtype=f)[None, :] == 0), 0, 1)  # (A,B)
+    m_gt = (a > ell).astype(f) * (a >= 1).astype(f)
+    m_le = (a <= ell).astype(f) * (a >= 1).astype(f)
+    diag = (z == a + 1.0).astype(f)  # dest z = 1 + n1
+    inflow += lam1 * src_l[:, :, None] * (m_gt * is_z1 + m_le * diag)
+
+    # ---- heavy arrivals (rate lamk), source (a, b-1, z) ------------------
+    inflow += lamk * _shift(p, 1, 1)
+
+    # ---- heavy completions (z=0, rate muk) -------------------------------
+    p_b = _shift(p[:, :, 0], 1, -1)  # p[a, b+1, 0]
+    # Still heavies left: stay z=0 with b >= 1.
+    inflow += muk * (p_b * (b[:, :, 0] >= 1).astype(f))[:, :, None] * is_z0
+    # Last heavy done: source (a, 1, 0) -> dispatch(a, 0).
+    src_h = p[:, 1, 0] if B > 1 else jnp.zeros((A,), f)  # (A,)
+    av = jnp.arange(A, dtype=f)
+    at_b0 = (b == 0).astype(f)
+    gt = (av > ell).astype(f) * (av >= 1).astype(f)
+    le = (av <= ell).astype(f) * (av >= 1).astype(f)
+    idle = (av == 0).astype(f)
+    term = (
+        gt[:, None] * (z[0] == 1).astype(f)
+        + le[:, None] * (z[0] == av[:, None] + 1.0).astype(f)
+        + idle[:, None] * (z[0] == 0).astype(f)
+    )  # (A, Z)
+    inflow += muk * src_h[:, None, None] * at_b0 * term[:, None, :]
+
+    # ---- light completions in z=1 (rate min(a+1,k)*mu1) ------------------
+    p1_a = _shift(p[:, :, 1], 0, -1)  # p[a+1, b, 1]
+    rate1 = jnp.minimum(a[:, :, 0] + 1.0, k) * mu1
+    # a > ell: stay in z=1.
+    stay = (a[:, :, 0] > ell).astype(f)
+    inflow += (rate1 * stay * p1_a)[:, :, None] * is_z1
+    # a <= ell, ell >= 1: trigger -> drain with u = ell (z = 1 + ell).
+    # (Reachable only with a == ell, but we mirror the sparse solver's
+    # branch exactly so the oracle comparison holds on any input.)
+    trig = ((a[:, :, 0] <= ell) & (ell >= 1))
+    inflow += (rate1 * trig.astype(f) * p1_a)[:, :, None] * (z == ell + 1.0).astype(f)
+    # ell == 0 and a == 0: lights exhausted -> z=0 (serve heavy or idle).
+    exh = ((a[:, :, 0] == 0) & (ell == 0))
+    inflow += (rate1 * exh.astype(f) * p1_a)[:, :, None] * is_z0
+
+    # ---- light completions in drain z' = z+1 -> z (z >= 2) ---------------
+    p_d = _shift(_shift(p, 0, -1), 2, -1)  # p[a+1, b, z+1]
+    rate_d = u + 1.0  # source had u+1 in service
+    inflow += (z >= 2).astype(f) * rate_d * mu1 * p_d
+    # D_1 exit: source (a+1, b, 2), rate mu1 -> dispatch(a, b).
+    src_d = _shift(p[:, :, 2], 0, -1) if Z > 2 else jnp.zeros((A, B), f)  # (A,B)
+    b2 = b[:, :, 0]
+    a2 = a[:, :, 0]
+    disp_z0 = (b2 >= 1) | (a2 == 0)  # serve heavy, or idle
+    disp_z1 = (b2 == 0) & (a2 > ell)
+    disp_dg = (b2 == 0) & (a2 >= 1) & (a2 <= ell)
+    inflow += mu1 * (src_d * disp_z0.astype(f))[:, :, None] * is_z0
+    inflow += mu1 * (src_d * disp_z1.astype(f))[:, :, None] * is_z1
+    inflow += mu1 * (src_d * disp_dg.astype(f))[:, :, None] * diag
+
+    return p + (inflow - q * p) / lam
+
+
+def build_generator_dense(A, B, Z, params):
+    """Dense uniformized transition matrix P (numpy, python loops): the
+    slow-but-obviously-correct oracle used by the test-suite to verify
+    `uniform_step_ref` (and transitively the Pallas kernel)."""
+    lam1, lamk, mu1, muk = (float(params[i]) for i in range(4))
+    ell, k = int(params[P_ELL]), int(params[P_K])
+    lam = lam1 + lamk + max(k * mu1, muk)
+    n = A * B * Z
+
+    def idx(a, b, z):
+        return (a * B + b) * Z + z
+
+    def dispatch(a, b):
+        if b >= 1:
+            return (a, b, 0)
+        if a > ell:
+            return (a, 0, 1)
+        if a >= 1:
+            return (a, 0, 1 + a)
+        return (0, 0, 0)
+
+    P = np.zeros((n, n), dtype=np.float64)
+    for a in range(A):
+        for b in range(B):
+            for z in range(Z):
+                s = idx(a, b, z)
+                q = 0.0
+                if a < A - 1:
+                    if z == 0 and b == 0:
+                        d = dispatch(a + 1, 0)
+                    else:
+                        d = (a + 1, b, z)
+                    P[s, idx(*d)] += lam1 / lam
+                    q += lam1
+                if b < B - 1:
+                    P[s, idx(a, b + 1, z)] += lamk / lam
+                    q += lamk
+                if z == 0 and b >= 1:
+                    d = (a, b - 1, 0) if b - 1 >= 1 else dispatch(a, 0)
+                    P[s, idx(*d)] += muk / lam
+                    q += muk
+                elif z == 1 and a >= 1:
+                    rate = min(a, k) * mu1
+                    if a - 1 > ell:
+                        d = (a - 1, b, 1)
+                    elif ell >= 1:
+                        d = (a - 1, b, 1 + ell)
+                    else:
+                        d = dispatch(0, b)
+                    P[s, idx(*d)] += rate / lam
+                    q += rate
+                elif z >= 2 and a >= 1:
+                    u = z - 1
+                    rate = u * mu1
+                    d = (a - 1, b, z - 1) if u - 1 >= 1 else dispatch(a - 1, b)
+                    P[s, idx(*d)] += rate / lam
+                    q += rate
+                P[s, s] += 1.0 - q / lam
+    return P

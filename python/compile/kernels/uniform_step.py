@@ -1,0 +1,144 @@
+"""Layer-1 Pallas kernel: the MSFQ CTMC uniformization step.
+
+The whole state tensor p[A, B, Z] lives in one VMEM-resident block —
+for the paper-scale artifact (A, B, Z) = (256, 64, 33) that is ~2.2 MB of
+f32, comfortably inside a TPU core's ~16 MB VMEM, so the power iteration
+streams zero bytes to/from HBM between steps. The step itself is a
+shift-and-mask stencil (~14 shifted multiply-adds), i.e. a VPU-bound
+elementwise kernel; there is no MXU work in this paper's hot loop.
+DESIGN.md §Hardware-Adaptation records the footprint/roofline analysis.
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel is lowered to plain HLO (numerically
+identical; verified against `ref.py` and a dense-matrix oracle by
+python/tests).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import NPARAMS, P_ELL, P_K, P_LAM1, P_LAMK, P_MU1, P_MUK
+
+
+def _shift(x, axis, by):
+    """out[i] = x[i - by] along `axis`, zero-filled (in-kernel version)."""
+    if by == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    sl = [slice(None)] * x.ndim
+    if by > 0:
+        pad[axis] = (by, 0)
+        sl[axis] = slice(0, x.shape[axis])
+    else:
+        pad[axis] = (0, -by)
+        sl[axis] = slice(-by, x.shape[axis] - by)
+    return jnp.pad(x, pad)[tuple(sl)]
+
+
+def _uniform_step_kernel(p_ref, params_ref, out_ref):
+    """Pallas kernel body: one uniformized power step (see ref.py for the
+    transition-by-transition derivation; this is the same stencil)."""
+    p = p_ref[...]
+    params = params_ref[...]
+    A, B, Z = p.shape
+    lam1 = params[P_LAM1]
+    lamk = params[P_LAMK]
+    mu1 = params[P_MU1]
+    muk = params[P_MUK]
+    ell = params[P_ELL]
+    k = params[P_K]
+    lam = lam1 + lamk + jnp.maximum(k * mu1, muk)
+
+    f = jnp.float32
+    a = jax.lax.broadcasted_iota(f, (A, B, Z), 0)
+    b = jax.lax.broadcasted_iota(f, (A, B, Z), 1)
+    z = jax.lax.broadcasted_iota(f, (A, B, Z), 2)
+
+    is_z0 = (z == 0).astype(f)
+    is_z1 = (z == 1).astype(f)
+    is_drain = (z >= 2).astype(f)
+    u = jnp.maximum(z - 1.0, 0.0)
+
+    # Out-rates.
+    q = lam1 * (a < A - 1).astype(f)
+    q += lamk * (b < B - 1).astype(f)
+    q += is_z0 * muk * (b >= 1).astype(f)
+    q += is_z1 * jnp.minimum(a, k) * mu1 * (a >= 1).astype(f)
+    q += is_drain * u * mu1 * (a >= 1).astype(f)
+
+    diag = (z == a + 1.0).astype(f)  # dest z = 1 + n1
+    at_b0 = (b == 0).astype(f)
+
+    # Light arrivals.
+    p_a = _shift(p, 0, 1)
+    keep = is_z1 + is_drain + is_z0 * (b >= 1).astype(f)
+    inflow = lam1 * p_a * keep
+    src_l = _shift(p[:, :, 0:1] * (b[:, :, 0:1] == 0).astype(f), 0, 1)  # (A,B,1)
+    m_gt = ((a > ell) & (a >= 1)).astype(f)
+    m_le = ((a <= ell) & (a >= 1)).astype(f)
+    inflow += lam1 * src_l * (m_gt * is_z1 + m_le * diag)
+
+    # Heavy arrivals.
+    inflow += lamk * _shift(p, 1, 1)
+
+    # Heavy completions.
+    p_b = _shift(p[:, :, 0:1], 1, -1)  # p[a, b+1, 0]
+    inflow += muk * p_b * (b >= 1).astype(f) * is_z0
+    src_h = p[:, 1:2, 0:1] if B > 1 else jnp.zeros((A, 1, 1), f)  # p[a,1,0]
+    gt = ((a > ell) & (a >= 1)).astype(f)
+    le = ((a <= ell) & (a >= 1)).astype(f)
+    idle = (a == 0).astype(f)
+    inflow += muk * src_h * at_b0 * (gt * is_z1 + le * diag + idle * is_z0)
+
+    # Light completions in z=1.
+    p1_a = _shift(p[:, :, 1:2], 0, -1)  # p[a+1, b, 1]
+    rate1 = jnp.minimum(a + 1.0, k) * mu1
+    stay = (a > ell).astype(f)
+    inflow += rate1 * stay * p1_a * is_z1
+    trig = ((a <= ell) & (ell >= 1)).astype(f)
+    inflow += rate1 * trig * p1_a * (z == ell + 1.0).astype(f)
+    exh = ((a == 0) & (ell == 0)).astype(f)
+    inflow += rate1 * exh * p1_a * is_z0
+
+    # Drain-phase completions (z >= 2), and the D_1 exit dispatch.
+    p_d = _shift(_shift(p, 0, -1), 2, -1)  # p[a+1, b, z+1]
+    inflow += is_drain * (u + 1.0) * mu1 * p_d
+    if Z > 2:
+        src_d = _shift(p[:, :, 2:3], 0, -1)  # p[a+1, b, 2]
+    else:
+        src_d = jnp.zeros((A, B, 1), f)
+    disp_z0 = ((b >= 1) | (a == 0)).astype(f)
+    disp_z1 = ((b == 0) & (a > ell)).astype(f)
+    disp_dg = ((b == 0) & (a >= 1) & (a <= ell)).astype(f)
+    inflow += mu1 * src_d * (disp_z0 * is_z0 + disp_z1 * is_z1 + disp_dg * diag)
+
+    out_ref[...] = p + (inflow - q * p) / lam
+
+
+@functools.partial(jax.jit, static_argnames=())
+def uniform_step(p, params):
+    """One uniformized MSFQ power step as a Pallas call (interpret mode).
+
+    p: f32[A, B, Z] probability tensor; params: f32[NPARAMS].
+    """
+    assert params.shape == (NPARAMS,)
+    return pl.pallas_call(
+        _uniform_step_kernel,
+        out_shape=jax.ShapeDtypeStruct(p.shape, jnp.float32),
+        interpret=True,
+    )(p.astype(jnp.float32), params.astype(jnp.float32))
+
+
+def vmem_footprint_bytes(shape):
+    """Estimated VMEM working set of the kernel: in + out + ~3 shifted
+    temporaries of the full block (the XLA fusion reuses buffers; this is
+    the conservative upper bound quoted in DESIGN.md)."""
+    import math
+
+    elems = math.prod(shape)
+    return elems * 4 * 5

@@ -1,0 +1,151 @@
+"""Layer-2 JAX model: the MSFQ CTMC solver built on the L1 Pallas kernel.
+
+`solve` power-iterates the uniformized chain from the empty state and
+reduces the stationary distribution to the response-time metrics the
+Rust coordinator consumes (autotuning and analysis cross-checks).
+`sweep` evaluates every Quickswap threshold 0..k-1 and returns the metric
+matrix plus the E[T]-optimal threshold — the autotuner artifact.
+
+Everything here is build-time Python: `aot.py` lowers these functions to
+HLO text once, and the Rust runtime executes the artifacts via PJRT.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.ref import (
+    NPARAMS,
+    P_ELL,
+    P_K,
+    P_LAM1,
+    P_LAMK,
+    P_MU1,
+    P_MUK,
+    make_params,
+    uniform_step_ref,
+)
+from .kernels.uniform_step import uniform_step
+
+# Output-vector layout (documented in artifacts/meta.json for Rust).
+METRICS = [
+    "en1",        # 0  E[N1]
+    "enk",        # 1  E[Nk]
+    "et1",        # 2  E[T] light (Little)
+    "etk",        # 3  E[T] heavy
+    "et",         # 4  overall E[T]
+    "etw",        # 5  load-weighted E[T^w]
+    "m1",         # 6  fraction of time serving heavies (phase 1)
+    "m23",        # 7  light-serving fraction (phases 2+3)
+    "m4",         # 8  drain fraction (phase 4)
+    "idle",       # 9  idle fraction
+    "blocked1",   # 10 truncation-boundary mass (lights)
+    "blockedk",   # 11 truncation-boundary mass (heavies)
+    "residual",   # 12 L1 delta of the final step
+    "mass",       # 13 total probability (conservation check, ~1)
+]
+NMETRICS = 16
+
+
+def initial_state(shape):
+    """Point mass on the empty system (0, 0, z=0)."""
+    p0 = jnp.zeros(shape, jnp.float32)
+    return p0.at[0, 0, 0].set(1.0)
+
+
+def metrics_from_p(p, params, residual):
+    A, B, _Z = p.shape
+    f = jnp.float32
+    a = jax.lax.broadcasted_iota(f, p.shape, 0)
+    b = jax.lax.broadcasted_iota(f, p.shape, 1)
+    lam1, lamk = params[P_LAM1], params[P_LAMK]
+    mu1, muk, k = params[P_MU1], params[P_MUK], params[P_K]
+
+    en1 = jnp.sum(a * p)
+    enk = jnp.sum(b * p)
+    m1 = jnp.sum(p[:, 1:, 0])
+    idle = jnp.sum(p[:, 0, 0])
+    m23 = jnp.sum(p[:, :, 1])
+    m4 = jnp.sum(p[:, :, 2:])
+    blocked1 = jnp.sum(p[A - 1, :, :])
+    blockedk = jnp.sum(p[:, B - 1, :])
+    l1e = lam1 * (1.0 - blocked1)
+    lke = lamk * (1.0 - blockedk)
+    et1 = en1 / l1e
+    etk = enk / lke
+    et = (en1 + enk) / (l1e + lke)
+    rho1 = lam1 / mu1
+    rhok = k * lamk / muk
+    etw = (rho1 * et1 + rhok * etk) / (rho1 + rhok)
+    out = jnp.stack(
+        [
+            en1, enk, et1, etk, et, etw,
+            m1, m23, m4, idle,
+            blocked1, blockedk, residual, jnp.sum(p),
+        ]
+    )
+    return jnp.concatenate([out, jnp.zeros(NMETRICS - out.shape[0], f)])
+
+
+def _solve_impl(params, iters, shape, step_fn):
+    p0 = initial_state(shape)
+
+    def body(_, p):
+        return step_fn(p, params)
+
+    p = jax.lax.fori_loop(0, iters, body, p0)
+    p_next = step_fn(p, params)
+    residual = jnp.sum(jnp.abs(p_next - p))
+    return metrics_from_p(p_next, params, residual)
+
+
+@functools.partial(jax.jit, static_argnames=("shape",))
+def solve(params, iters, *, shape):
+    """Stationary metrics of the MSFQ chain after `iters` power steps.
+
+    params: f32[NPARAMS] (see kernels.ref.make_params); iters: i32 scalar.
+    Returns f32[NMETRICS].
+    """
+    return _solve_impl(params, iters, shape, uniform_step)
+
+
+@functools.partial(jax.jit, static_argnames=("shape",))
+def solve_ref(params, iters, *, shape):
+    """Same solver on the pure-jnp reference step (oracle path)."""
+    return _solve_impl(params, iters, shape, uniform_step_ref)
+
+
+@functools.partial(jax.jit, static_argnames=("shape", "k"))
+def sweep(base_params, iters, *, shape, k):
+    """Evaluate all thresholds ell = 0..k-1: returns (metrics[k, NMETRICS],
+    best_ell_by_et, best_ell_by_etw). The autotuner artifact."""
+
+    def one(ell):
+        p = base_params.at[P_ELL].set(ell.astype(jnp.float32))
+        return _solve_impl(p, iters, shape, uniform_step)
+
+    ells = jnp.arange(k, dtype=jnp.int32)
+    metrics = jax.lax.map(one, ells)
+    et = metrics[:, 4]
+    etw = metrics[:, 5]
+    best_et = jnp.argmin(jnp.where(jnp.isfinite(et), et, jnp.inf))
+    best_etw = jnp.argmin(jnp.where(jnp.isfinite(etw), etw, jnp.inf))
+    return metrics, best_et.astype(jnp.int32), best_etw.astype(jnp.int32)
+
+
+def default_shape(k, n1_mult=8, nk_mult=2):
+    """Truncation heuristic: A = n1_mult·k, B = max(32, nk_mult·k), Z = k+1."""
+    return (int(n1_mult * k), max(32, int(nk_mult * k)), int(k) + 1)
+
+
+def solve_py(k, ell, lam1, lamk, mu1=1.0, muk=1.0, iters=20000, shape=None,
+             use_ref=False):
+    """Convenience wrapper for tests/scripts."""
+    shape = shape or default_shape(k)
+    params = jnp.asarray(make_params(lam1, lamk, mu1, muk, ell, k))
+    fn = solve_ref if use_ref else solve
+    out = fn(params, jnp.int32(iters), shape=shape)
+    return {name: float(out[i]) for i, name in enumerate(METRICS)}

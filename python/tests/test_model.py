@@ -1,0 +1,71 @@
+"""L2 correctness: solver convergence, metric sanity, sweep behaviour.
+
+The k=4 numbers here are cross-checked against the Rust sparse CTMC
+solver (rust/src/analysis/ctmc.rs tests) and the DES simulator; the
+values asserted below were independently produced by that solver.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels.ref import make_params
+from compile.model import METRICS, default_shape, solve_py, sweep
+
+
+def test_metrics_layout_stable():
+    # The Rust runtime indexes this layout; do not reorder silently.
+    assert METRICS[:6] == ["en1", "enk", "et1", "etk", "et", "etw"]
+    assert METRICS[12] == "residual"
+
+
+def test_low_load_sanity():
+    # k=4, lambda=1.0, p1=0.9. Note MSFQ(ell=3) makes later lights queue
+    # behind a solo drain even at low load, so E[T1] sits well above the
+    # bare service time 1/mu1 = 1 (cross-checked with the Rust solver).
+    m = solve_py(4, 3, 0.9, 0.1, iters=4000, shape=(48, 16, 5))
+    assert abs(m["mass"] - 1.0) < 1e-3
+    assert m["blocked1"] < 1e-6 and m["blockedk"] < 1e-6
+    assert 1.0 < m["et1"] < 3.0, m
+    assert m["residual"] < 1e-5
+
+
+def test_matches_rust_ctmc_value():
+    # Rust solver: k=4, ell=3, lambda=2.9, p1=0.9 → E[T] ≈ 11.70;
+    # and ell=0 (MSF) → E[T] ≈ 13.35 (same truncation family).
+    msfq = solve_py(4, 3, 2.9 * 0.9, 2.9 * 0.1, iters=60000, shape=(384, 96, 5))
+    assert abs(msfq["et"] - 11.70) / 11.70 < 0.02, msfq["et"]
+    msf = solve_py(4, 0, 2.9 * 0.9, 2.9 * 0.1, iters=60000, shape=(384, 96, 5))
+    assert abs(msf["et"] - 13.35) / 13.35 < 0.02, msf["et"]
+    assert msfq["et"] < msf["et"]
+
+
+def test_ref_and_kernel_paths_agree_end_to_end():
+    a = solve_py(4, 2, 1.5, 0.2, iters=3000, shape=(48, 16, 5), use_ref=False)
+    b = solve_py(4, 2, 1.5, 0.2, iters=3000, shape=(48, 16, 5), use_ref=True)
+    for key in ("en1", "enk", "et", "m1", "m23", "m4"):
+        np.testing.assert_allclose(a[key], b[key], rtol=1e-4), key
+
+
+def test_phase_fractions_sum_to_one():
+    m = solve_py(4, 3, 2.0, 0.25, iters=20000, shape=(96, 32, 5))
+    total = m["m1"] + m["m23"] + m["m4"] + m["idle"]
+    assert abs(total - 1.0) < 1e-3, total
+
+
+@pytest.mark.slow
+def test_sweep_prefers_nonzero_threshold():
+    k = 4
+    shape = (192, 64, 5)
+    params = jnp.asarray(make_params(2.9 * 0.9, 2.9 * 0.1, 1.0, 1.0, 0, k))
+    metrics, best_et, best_etw = sweep(params, jnp.int32(40000), shape=shape, k=k)
+    metrics = np.asarray(metrics)
+    assert metrics.shape == (k, 16)
+    # E[T] at the chosen threshold beats MSF (ell = 0).
+    assert metrics[int(best_et), 4] <= metrics[0, 4]
+    assert int(best_et) > 0
+
+
+def test_default_shape_reasonable():
+    A, B, Z = default_shape(32)
+    assert Z == 33 and A >= 4 * 32 and B >= 32

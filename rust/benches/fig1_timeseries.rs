@@ -1,0 +1,18 @@
+//! Fig 1 bench: occupancy time-series, MSF vs MSFQ (k=32, λ=7.5).
+use quickswap::experiments::{figures, Scale};
+use quickswap::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new("fig1_timeseries").with_budget(std::time::Duration::from_millis(1));
+    let mut out = Vec::new();
+    b.bench("msf_vs_msfq_timeseries", || {
+        out = figures::fig1(Scale::smoke());
+    });
+    // Paper shape: MSF accumulates far more jobs than MSFQ.
+    assert!(out[0].mean_n > 2.0 * out[1].mean_n, "Fig 1 shape violated");
+    println!(
+        "fig1 OK: MSF mean #jobs {:.1} vs MSFQ {:.1}",
+        out[0].mean_n, out[1].mean_n
+    );
+    b.finish();
+}

@@ -1,0 +1,17 @@
+//! Fig 2 bench: E[T] vs quickswap threshold ℓ (sim + analysis).
+use quickswap::experiments::{figures, Scale};
+use quickswap::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new("fig2_threshold").with_budget(std::time::Duration::from_millis(1));
+    let mut rows = Vec::new();
+    b.bench("ell_sweep_lambda7.5", || {
+        rows = figures::fig2(Scale::smoke(), 7.5, &[0, 2, 8, 31]);
+    });
+    // Paper shape: any ℓ ≫ 0 beats MSF (ℓ=0) dramatically at high load.
+    let et0 = rows[0].1;
+    let et31 = rows.last().unwrap().1;
+    assert!(et31 < et0 / 3.0, "ℓ=31 ({et31}) must beat ℓ=0 ({et0})");
+    println!("fig2 OK: E[T](ℓ=0) = {et0:.1}, E[T](ℓ=31) = {et31:.1}");
+    b.finish();
+}

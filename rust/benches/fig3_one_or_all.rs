@@ -1,0 +1,23 @@
+//! Fig 3 bench: one-or-all λ sweep across all policies + analysis overlay.
+use quickswap::experiments::{figures, Scale};
+use quickswap::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new("fig3_one_or_all").with_budget(std::time::Duration::from_millis(1));
+    let mut pts = Vec::new();
+    b.bench("lambda_sweep_5_policies", || {
+        pts = figures::fig3(Scale::smoke(), &[6.0, 7.25]);
+    });
+    let at = |pol: &str, l: f64| {
+        pts.iter()
+            .find(|p| p.policy.to_lowercase().starts_with(pol) && p.lambda == l)
+            .map(|p| p.result.mean_t_all)
+            .unwrap()
+    };
+    // Paper shape at high load: MSFQ ≪ MSF and MSFQ ≪ FCFS.
+    let (msfq, msf, fcfs) = (at("msfq", 7.25), at("msf", 7.25), at("fcfs", 7.25));
+    assert!(msfq < msf / 2.0, "MSFQ {msfq} !< MSF {msf}/2");
+    assert!(msfq < fcfs, "MSFQ {msfq} !< FCFS {fcfs}");
+    println!("fig3 OK @λ=7.25: MSFQ={msfq:.1} MSF={msf:.1} FCFS={fcfs:.1}");
+    b.finish();
+}

@@ -1,0 +1,21 @@
+//! Fig 4 bench: phase durations, MSF vs MSFQ.
+use quickswap::experiments::{figures, Scale};
+use quickswap::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new("fig4_phases").with_budget(std::time::Duration::from_millis(1));
+    let mut rows = Vec::new();
+    b.bench("phase_durations", || {
+        rows = figures::fig4(Scale::smoke(), &[7.25]);
+    });
+    // Paper shape: MSFQ's phases 1 and 2 are much shorter than MSF's.
+    let msf = rows.iter().find(|r| r.policy == "MSF").unwrap();
+    let msfq = rows.iter().find(|r| r.policy.starts_with("MSFQ")).unwrap();
+    assert!(msfq.mean[1] < msf.mean[1], "H1: {} !< {}", msfq.mean[1], msf.mean[1]);
+    assert!(msfq.mean[2] < msf.mean[2], "H2: {} !< {}", msfq.mean[2], msf.mean[2]);
+    println!(
+        "fig4 OK: E[H1] {:.1}→{:.1}, E[H2] {:.1}→{:.1}",
+        msf.mean[1], msfq.mean[1], msf.mean[2], msfq.mean[2]
+    );
+    b.finish();
+}

@@ -1,0 +1,23 @@
+//! Fig 5 bench: 4-class (k=15) weighted E[T] sweep.
+use quickswap::experiments::{figures, Scale};
+use quickswap::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new("fig5_multiclass").with_budget(std::time::Duration::from_millis(1));
+    let mut pts = Vec::new();
+    b.bench("four_class_sweep", || {
+        pts = figures::fig5(Scale::smoke(), &[4.5]);
+    });
+    let at = |pol: &str| {
+        pts.iter()
+            .find(|p| p.policy.to_lowercase().replace('-', "").contains(pol))
+            .map(|p| p.result.weighted_t)
+            .unwrap()
+    };
+    // Paper shape: both Quickswap generalizations beat MSF (weighted).
+    let (adaptive, stat, msf) = (at("adaptiveqs"), at("staticqs"), at("msf"));
+    assert!(adaptive < msf, "AdaptiveQS {adaptive} !< MSF {msf}");
+    assert!(stat < msf, "StaticQS {stat} !< MSF {msf}");
+    println!("fig5 OK @λ=4.5: AdaptiveQS={adaptive:.1} StaticQS={stat:.1} MSF={msf:.1}");
+    b.finish();
+}

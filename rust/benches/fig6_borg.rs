@@ -1,0 +1,21 @@
+//! Fig 6 bench: Borg-derived workload (k=2048, 26 classes), weighted E[T].
+use quickswap::experiments::{figures, Scale};
+use quickswap::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new("fig6_borg").with_budget(std::time::Duration::from_millis(1));
+    let mut pts = Vec::new();
+    b.bench("borg_sweep", || {
+        pts = figures::fig6(Scale::smoke(), &[4.0], false);
+    });
+    let at = |pol: &str| {
+        pts.iter()
+            .find(|p| p.policy.to_lowercase().replace('-', "").contains(pol))
+            .map(|p| p.result.weighted_t)
+            .unwrap()
+    };
+    let (adaptive, msf) = (at("adaptiveqs"), at("msf"));
+    assert!(adaptive < msf, "AdaptiveQS {adaptive} !< MSF {msf}");
+    println!("fig6 OK @λ=4.0: AdaptiveQS={adaptive:.1} MSF={msf:.1}");
+    b.finish();
+}

@@ -1,0 +1,23 @@
+//! Fig C.7 bench: fairness (Jain index) on the Borg workload.
+use quickswap::experiments::{figures, Scale};
+use quickswap::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new("fig7_fairness").with_budget(std::time::Duration::from_millis(1));
+    let mut rows = Vec::new();
+    b.bench("borg_fairness", || {
+        let pts = figures::fig6(Scale::smoke(), &[4.0], false);
+        rows = figures::fig7(&pts);
+    });
+    let jain = |pol: &str| {
+        rows.iter()
+            .find(|r| r.policy.to_lowercase().replace('-', "").contains(pol))
+            .map(|r| r.jain)
+            .unwrap()
+    };
+    // Paper shape: Quickswap policies are fairer than MSF.
+    let (aq, msf) = (jain("adaptiveqs"), jain("msf"));
+    assert!(aq > msf, "AdaptiveQS jain {aq} !> MSF {msf}");
+    println!("fig7 OK: jain AdaptiveQS={aq:.3} MSF={msf:.3}");
+    b.finish();
+}

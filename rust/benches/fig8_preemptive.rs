@@ -1,0 +1,22 @@
+//! Fig D.8 bench: preemptive ServerFilling vs nonpreemptive policies.
+use quickswap::experiments::{figures, Scale};
+use quickswap::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new("fig8_preemptive").with_budget(std::time::Duration::from_millis(1));
+    let mut pts = Vec::new();
+    b.bench("borg_with_serverfilling", || {
+        pts = figures::fig6(Scale::smoke(), &[4.0], true);
+    });
+    let at = |pol: &str| {
+        pts.iter()
+            .find(|p| p.policy.to_lowercase().replace('-', "").contains(pol))
+            .map(|p| p.result.weighted_t)
+            .unwrap()
+    };
+    // Paper shape: free preemption beats every nonpreemptive policy.
+    let (sf, aq) = (at("serverfilling"), at("adaptiveqs"));
+    assert!(sf < aq, "ServerFilling {sf} !< AdaptiveQS {aq}");
+    println!("fig8 OK: ServerFilling={sf:.2} AdaptiveQS={aq:.2}");
+    b.finish();
+}

@@ -1,0 +1,43 @@
+//! L3 perf microbenches: DES engine event throughput and policy decision
+//! cost. Targets recorded in EXPERIMENTS.md §Perf.
+use quickswap::sim::{run_named, SimConfig};
+use quickswap::util::bench::{black_box, Bench};
+use quickswap::workload::{borg::borg_workload, Workload};
+
+fn events_per_sec(wl: &Workload, policy: &str, completions: u64) -> f64 {
+    let cfg = SimConfig {
+        target_completions: completions,
+        warmup_completions: 0,
+        ..Default::default()
+    };
+    let r = run_named(wl, policy, &cfg, 7).unwrap();
+    r.events as f64 / r.wall_s
+}
+
+fn main() {
+    let mut b = Bench::new("perf_engine");
+    let one_or_all = Workload::one_or_all(32, 7.5, 0.9, 1.0, 1.0);
+    for policy in ["fcfs", "msf", "msfq:31", "first-fit"] {
+        let mut rate = 0.0;
+        b.bench(&format!("sim_{policy}"), || {
+            rate = events_per_sec(&one_or_all, policy, 100_000);
+        });
+        println!("  -> {policy}: {:.2} M events/s", rate / 1e6);
+    }
+    let borg = borg_workload(4.0);
+    let mut rate = 0.0;
+    b.bench("sim_borg_adaptive_qs", || {
+        rate = events_per_sec(&borg, "adaptive-qs", 50_000);
+    });
+    println!("  -> borg/adaptive-qs: {:.2} M events/s", rate / 1e6);
+
+    // Analytical calculator throughput (the autotuner's native fallback).
+    b.bench("theorem2_calculator_k32", || {
+        let a = quickswap::analysis::analyze(&quickswap::analysis::MsfqParams::standard(
+            32, 31, 7.5, 0.9,
+        ))
+        .unwrap();
+        black_box(a.et);
+    });
+    b.finish();
+}

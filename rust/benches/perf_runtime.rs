@@ -1,0 +1,31 @@
+//! Runtime perf: PJRT artifact load/compile and per-solve latency — the
+//! autotuner's hot path. Requires `make artifacts`.
+use quickswap::runtime::{Runtime, SolverArtifact};
+use quickswap::util::bench::{black_box, Bench};
+
+fn main() {
+    let rt = match Runtime::new(Runtime::default_dir()) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("skipping perf_runtime (no PJRT): {e}");
+            return;
+        }
+    };
+    let mut b = Bench::new("perf_runtime");
+    b.bench("compile_solver_k8", || {
+        let a = rt.load("msfq_solver_k8").unwrap();
+        black_box(&a);
+    });
+    let solver = SolverArtifact::load(&rt, 8).unwrap();
+    for iters in [1_000, 10_000] {
+        b.bench(&format!("solve_k8_iters{iters}"), || {
+            let m = solver.solve(7, 3.0, 0.3, 1.0, 1.0, iters).unwrap();
+            black_box(m.et);
+        });
+    }
+    b.bench("autotune_k8", || {
+        let (ell, m) = solver.autotune(3.0, 0.3, 1.0, 1.0, 5_000, false).unwrap();
+        black_box((ell, m.et));
+    });
+    b.finish();
+}

@@ -1,0 +1,100 @@
+//! M/G/1 busy-period moments (Remark 3) and the EFS system (Remark 2).
+
+use crate::analysis::taylor::T2;
+
+/// First two moments of the busy period of an M/G/1 queue started by a
+/// single job, given arrival rate `lam` and job-size moments (es1, es2):
+/// E[B] = E[S]/(1−ρ);  E[B²] = E[S²]/(1−ρ)³.
+pub fn busy_period_moments(lam: f64, es1: f64, es2: f64) -> (f64, f64) {
+    let rho = lam * es1;
+    assert!(rho < 1.0, "busy period requires rho < 1 (rho = {rho})");
+    let m1 = es1 / (1.0 - rho);
+    let m2 = es2 / (1.0 - rho).powi(3);
+    (m1, m2)
+}
+
+/// Busy-period LST (as a `T2` around s = 0) for exponential sizes Exp(mu).
+pub fn busy_period_t2_exp(lam: f64, mu: f64) -> T2 {
+    let (m1, m2) = busy_period_moments(lam, 1.0 / mu, 2.0 / (mu * mu));
+    T2::from_moments(m1, m2)
+}
+
+/// M/G/1 with Exceptional First Service (Remark 2, from Bose 2002).
+/// `s` = (E[S], E[S²]) for ordinary jobs, `sp` = (E[S'], E[S'²]) for the
+/// job opening each busy period.
+pub struct Efs {
+    pub lam: f64,
+    pub es: (f64, f64),
+    pub esp: (f64, f64),
+}
+
+impl Efs {
+    /// Mean work in system, E[W^{EFS}].
+    pub fn mean_work(&self) -> f64 {
+        let (es1, es2) = self.es;
+        let (ep1, ep2) = self.esp;
+        let lam = self.lam;
+        let rho = lam * es1;
+        assert!(rho < 1.0, "EFS requires lam*E[S] < 1");
+        lam * es2 / (2.0 * (1.0 - rho)) + lam * (ep2 - es2) / (2.0 * (1.0 - rho + lam * ep1))
+    }
+
+    /// Probability an arrival opens a busy period (gets exceptional svc).
+    pub fn p_exceptional(&self) -> f64 {
+        let rho = self.lam * self.es.0;
+        (1.0 - rho) / (1.0 - rho + self.lam * self.esp.0)
+    }
+
+    /// Mean work seen by a *non-exceptional* arrival:
+    /// E[W | no exceptional service] = E[W]/(1 − p^{EFS}) in the paper's
+    /// Lemma-2 usage.
+    pub fn mean_work_non_exceptional(&self) -> f64 {
+        self.mean_work() / (1.0 - self.p_exceptional())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_mm1_closed_form() {
+        let (m1, m2) = busy_period_moments(0.5, 1.0, 2.0);
+        assert!((m1 - 2.0).abs() < 1e-12);
+        assert!((m2 - 16.0).abs() < 1e-12);
+    }
+
+    /// With S' ≡ S the EFS system is a plain M/G/1: E[W] must equal the
+    /// Pollaczek–Khinchine mean workload λE[S²]/(2(1−ρ)).
+    #[test]
+    fn efs_degenerates_to_pk() {
+        let lam = 0.7;
+        let es = (1.0, 2.0);
+        let efs = Efs {
+            lam,
+            es,
+            esp: es,
+        };
+        let pk = lam * es.1 / (2.0 * (1.0 - lam * es.0));
+        assert!((efs.mean_work() - pk).abs() < 1e-12);
+        // p^EFS = P(empty on arrival) = 1 − ρ for M/M/1-like setting.
+        assert!((efs.p_exceptional() - (1.0 - 0.7)).abs() < 1e-12);
+    }
+
+    /// Larger exceptional first service increases mean work.
+    #[test]
+    fn efs_monotone_in_exceptional_size() {
+        let base = Efs {
+            lam: 0.5,
+            es: (1.0, 2.0),
+            esp: (1.0, 2.0),
+        };
+        let bigger = Efs {
+            lam: 0.5,
+            es: (1.0, 2.0),
+            esp: (3.0, 18.0),
+        };
+        assert!(bigger.mean_work() > base.mean_work());
+        assert!(bigger.p_exceptional() < base.p_exceptional());
+    }
+}

@@ -1,0 +1,94 @@
+//! M/M/k utilities: Erlang-C waiting probability, mean response time,
+//! and busy-period moments — building blocks for the MSFQ calculator
+//! (the phase-2/3 dynamics are M/M/k on light jobs).
+
+/// Erlang-C: probability an arrival waits in an M/M/k with arrival rate
+/// `lam` and per-server rate `mu`. Requires ρ = λ/(kμ) < 1.
+pub fn erlang_c(k: u32, lam: f64, mu: f64) -> f64 {
+    let a = lam / mu; // offered load
+    let k_f = k as f64;
+    let rho = a / k_f;
+    assert!(rho < 1.0, "Erlang-C needs rho < 1");
+    // Compute iteratively to avoid overflow: term_j = a^j/j!.
+    let mut term = 1.0; // j = 0
+    let mut sum = 1.0;
+    for j in 1..k {
+        term *= a / j as f64;
+        sum += term;
+    }
+    let term_k = term * a / k_f; // a^k/k!
+    let c = term_k / (1.0 - rho);
+    c / (sum + c)
+}
+
+/// Mean waiting time E[W] in M/M/k.
+pub fn mean_wait(k: u32, lam: f64, mu: f64) -> f64 {
+    let pw = erlang_c(k, lam, mu);
+    pw / (k as f64 * mu - lam)
+}
+
+/// Mean response time E[T] = E[W] + 1/μ in M/M/k.
+pub fn mean_response_time(k: u32, lam: f64, mu: f64) -> f64 {
+    mean_wait(k, lam, mu) + 1.0 / mu
+}
+
+/// Mean number in system (Little).
+pub fn mean_number(k: u32, lam: f64, mu: f64) -> f64 {
+    lam * mean_response_time(k, lam, mu)
+}
+
+/// First two moments of the M/M/1 busy period started by one job:
+/// E[B] = 1/(μ−λ), E[B²] = 2/(μ(1−ρ)³) · (1/μ) … standard results
+/// (e.g. Harchol-Balter 2013): E[B²] = E[S²]/(1−ρ)³ with S ~ Exp(μ).
+pub fn mm1_busy_period_moments(lam: f64, mu: f64) -> (f64, f64) {
+    let rho = lam / mu;
+    assert!(rho < 1.0);
+    let m1 = (1.0 / mu) / (1.0 - rho);
+    let es2 = 2.0 / (mu * mu);
+    let m2 = es2 / (1.0 - rho).powi(3);
+    (m1, m2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn erlang_c_reduces_to_mm1() {
+        // k=1: C = ρ.
+        for rho in [0.1, 0.5, 0.9] {
+            assert!((erlang_c(1, rho, 1.0) - rho).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn mm1_response_time() {
+        // k=1: E[T] = 1/(μ−λ).
+        let t = mean_response_time(1, 0.5, 1.0);
+        assert!((t - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn erlang_c_known_value() {
+        // Classic table value: k=4, a=3 (ρ=0.75) → C ≈ 0.509.
+        let c = erlang_c(4, 3.0, 1.0);
+        assert!((c - 0.5094).abs() < 5e-4, "c={c}");
+    }
+
+    #[test]
+    fn busy_period_moments() {
+        let (m1, m2) = mm1_busy_period_moments(0.5, 1.0);
+        assert!((m1 - 2.0).abs() < 1e-12);
+        assert!((m2 - 16.0).abs() < 1e-12);
+        // Variance must be positive.
+        assert!(m2 > m1 * m1);
+    }
+
+    #[test]
+    fn mmk_monotone_in_load() {
+        let t1 = mean_response_time(8, 2.0, 1.0);
+        let t2 = mean_response_time(8, 6.0, 1.0);
+        let t3 = mean_response_time(8, 7.5, 1.0);
+        assert!(t1 < t2 && t2 < t3);
+    }
+}

@@ -1,0 +1,12 @@
+//! Analytical results from the paper: Theorem 1/3/4 stability regions,
+//! the Theorem-2 mean-response-time calculator (Lemmas 1–8), and a native
+//! CTMC solver used as a near-exact oracle for tests and the autotuner.
+
+pub mod busy;
+pub mod ctmc;
+pub mod mmk;
+pub mod msfq_calc;
+pub mod taylor;
+
+pub use ctmc::{CtmcSolution, MsfqCtmc};
+pub use msfq_calc::{analyze, best_threshold, MsfqAnalysis, MsfqParams};

@@ -1,0 +1,455 @@
+//! The MSFQ mean-response-time calculator — Theorem 2, assembled from
+//! Lemmas 1–8 of the paper, for the one-or-all system with parameters
+//! (k, ℓ, λ₁, λ_k, μ₁, μ_k). Setting ℓ = 0 analyzes MSF itself.
+//!
+//! Pipeline (§5.3–§5.4):
+//!  1. Closed-form busy-period moments (Remark 3) for heavy and light
+//!     M/G/1s → `T2` transforms.
+//!  2. H₄ (Lemma 8) and H₃ (Lemma 7, continued-fraction recursion) as T2.
+//!  3. Fixed point over H₂: N₁ᴴ and N₂ᴸ (Lemma 6) feed H₁ and H₂
+//!     (Lemma 5), which feed back into the N's. Iterated to convergence.
+//!  4. Conditional response times: Lemma 2 (EFS coupling), Lemma 3
+//!     (age/excess of phase unions), Lemma 4 (Cⱼ visit counts).
+//!  5. E[T] via Lemma 1's time fractions and Eq. (1).
+
+use crate::analysis::busy::{busy_period_t2_exp, Efs};
+use crate::analysis::taylor::T2;
+
+/// Parameters of the one-or-all MSFQ system.
+#[derive(Clone, Copy, Debug)]
+pub struct MsfqParams {
+    pub k: u32,
+    pub ell: u32,
+    pub lam1: f64,
+    pub lamk: f64,
+    pub mu1: f64,
+    pub muk: f64,
+}
+
+impl MsfqParams {
+    /// The paper's standard configuration: total rate λ, light fraction
+    /// p1, unit service rates.
+    pub fn standard(k: u32, ell: u32, lambda: f64, p1: f64) -> MsfqParams {
+        MsfqParams {
+            k,
+            ell,
+            lam1: lambda * p1,
+            lamk: lambda * (1.0 - p1),
+            mu1: 1.0,
+            muk: 1.0,
+        }
+    }
+
+    /// Normalized system load ρ = λ₁/(kμ₁) + λ_k/μ_k (Theorem 3/4).
+    pub fn load(&self) -> f64 {
+        self.lam1 / (self.k as f64 * self.mu1) + self.lamk / self.muk
+    }
+}
+
+/// Calculator output: everything the figures need.
+#[derive(Clone, Copy, Debug)]
+pub struct MsfqAnalysis {
+    /// Overall mean response time E[T] (Eq. 1).
+    pub et: f64,
+    /// Per-class means.
+    pub et_light: f64,
+    pub et_heavy: f64,
+    /// Load-weighted mean response time (§6.1).
+    pub etw: f64,
+    /// Mean phase durations E[H₁..H₄] (index 1..=4).
+    pub eh: [f64; 5],
+    /// Second moments E[H_i²].
+    pub eh2: [f64; 5],
+    /// Time fraction per phase m₁..m₄ (Lemma 1).
+    pub m: [f64; 5],
+    /// E[N₁ᴴ], E[(N₁ᴴ)²]: heavies at the start of phase 1.
+    pub en1h: (f64, f64),
+    /// E[N₂ᴸ], E[(N₂ᴸ)²]: lights at the start of phase 2.
+    pub en2l: (f64, f64),
+    /// Conditional response times (diagnostics).
+    pub t1h: f64,
+    pub t234h: f64,
+    pub t14l: f64,
+    pub t2l: f64,
+    pub t3l: f64,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum CalcError {
+    #[error("system unstable: rho = {0:.4} >= 1 (Theorem 4)")]
+    Unstable(f64),
+    #[error("invalid parameters: {0}")]
+    Invalid(String),
+    #[error("fixed point did not converge after {0} iterations")]
+    NoConvergence(usize),
+}
+
+/// Compute the Theorem-2 approximation of MSFQ mean response time.
+pub fn analyze(p: &MsfqParams) -> Result<MsfqAnalysis, CalcError> {
+    let MsfqParams {
+        k,
+        ell,
+        lam1,
+        lamk,
+        mu1,
+        muk,
+    } = *p;
+    let kf = k as f64;
+    if k < 2 || ell >= k {
+        return Err(CalcError::Invalid(format!("need k ≥ 2, 0 ≤ ell < k (k={k}, ell={ell})")));
+    }
+    if lam1 <= 0.0 || lamk <= 0.0 || mu1 <= 0.0 || muk <= 0.0 {
+        return Err(CalcError::Invalid(
+            "rates must be positive (one-or-all analysis)".into(),
+        ));
+    }
+    let rho = p.load();
+    if rho >= 1.0 {
+        return Err(CalcError::Unstable(rho));
+    }
+
+    // --- Busy periods (Remark 3) ---------------------------------------
+    // Heavy: M/M/1 with arrival λk, service Exp(μk).
+    let bh = busy_period_t2_exp(lamk, muk);
+    // Light: "k-speed" M/M/1 with arrival λ1, service Exp(kμ1) — the
+    // phase-2 dynamics of the lights (all k servers busy).
+    let bl = busy_period_t2_exp(lam1, kf * mu1);
+
+    // --- H4 (Lemma 8): sum of Exp(jμ1), j = 1..ℓ ------------------------
+    let mut h4_m1 = 0.0;
+    let mut h4_var = 0.0;
+    for j in 1..=ell {
+        let r = j as f64 * mu1;
+        h4_m1 += 1.0 / r;
+        h4_var += 1.0 / (r * r);
+    }
+    let h4 = T2::from_moments(h4_m1, h4_var + h4_m1 * h4_m1);
+
+    // --- H3 (Lemma 7): transit k−1 → ℓ continued fraction ---------------
+    // H̃3,k = B̃ᴸ; H̃3,j = jμ1 / (λ1 + jμ1 + s − λ1·H̃3,j+1).
+    let mut h3 = T2::ONE;
+    if ell + 1 <= k - 1 {
+        let mut t_next = bl; // H̃_{3,k}
+        for j in (ell + 1..k).rev() {
+            let jf = j as f64;
+            let denom = T2::new(lam1 + jf * mu1, 1.0, 0.0).sub(t_next.scale(lam1));
+            let t_j = T2::cst(jf * mu1).div(denom);
+            h3 = h3.mul(t_j);
+            t_next = t_j;
+        }
+    }
+
+    // --- Fixed point over H2 (Lemmas 5 & 6) ----------------------------
+    // Series-variable conventions: LSTs in s; z-transforms in x = z−1.
+    let lin = |a: f64| T2::new(0.0, a, 0.0); // the map s/x ↦ a·x
+    let beta = bh.compose0(lin(-lam1)); // β(z) = B̃ᴴ(λ1(1−z)), in x
+    let arg_a = (T2::ONE.sub(beta)).scale(lamk); // λk(1−β(z)), in x
+    let arg_b = arg_a.add(lin(-lam1)); // λk(1−β(z)) + λ1(1−z), in x
+
+    let h3_a = h3.compose0(arg_a);
+    let h4_b = h4.compose0(arg_b);
+    let h3_sk = h3.compose0(lin(-lamk)); // H̃3(λk(1−z))
+    let h4_sk = h4.compose0(lin(-lamk));
+    let bl_m1 = bl.sub(T2::ONE); // B̃ᴸ(s) − 1 (inner for compositions)
+    let bl_pow = bl.powf(1.0 - kf); // (B̃ᴸ)^{1−k}
+
+    let mut h2 = T2::ONE;
+    let mut converged = false;
+    const MAX_ITERS: usize = 20_000;
+    // §5.2's approximation assumes ≥ k lights at the start of phase 2;
+    // when the light load is very low, N₂ᴸ − k + 1 goes negative and the
+    // raw transforms leave the valid moment cone. Project back
+    // (E[H₂] ≥ 0, E[H₂²] ≥ E[H₂]²) so the calculator always returns a
+    // sane — if approximate — answer in that regime.
+    let sanitize = |t: T2| -> T2 {
+        let m1 = t.mean().max(0.0);
+        let m2 = t.second().max(m1 * m1);
+        T2::from_moments(m1, m2)
+    };
+    for _ in 0..MAX_ITERS {
+        // N̂2L(z) = H̃2(λk(1−β)) H̃3(λk(1−β)) H̃4(λk(1−β)+λ1(1−z)).
+        let n2l = h2.compose0(arg_a).mul(h3_a).mul(h4_b);
+        // H̃2(s) = N̂2L(B̃ᴸ(s)) · B̃ᴸ(s)^{1−k}  (Lemma 5).
+        let h2_new = sanitize(n2l.compose0(bl_m1).mul(bl_pow));
+        let delta = (h2_new.c1 - h2.c1).abs() + (h2_new.c2 - h2.c2).abs();
+        h2 = h2_new;
+        if delta < 1e-13 * (1.0 + h2.c1.abs() + h2.c2.abs()) {
+            converged = true;
+            break;
+        }
+        if !h2.c1.is_finite() || !h2.c2.is_finite() {
+            return Err(CalcError::NoConvergence(MAX_ITERS));
+        }
+    }
+    if !converged {
+        return Err(CalcError::NoConvergence(MAX_ITERS));
+    }
+
+    // N̂1H(z) = H̃2 H̃3 H̃4 all at λk(1−z)  (Lemma 6).
+    let n1h = h2.compose0(lin(-lamk)).mul(h3_sk).mul(h4_sk);
+    // H̃1(s) = N̂1H(B̃ᴴ(s))  (Lemma 5).
+    let h1 = sanitize(n1h.compose0(bh.sub(T2::ONE)));
+    let n2l = h2.compose0(arg_a).mul(h3_a).mul(h4_b);
+
+    let eh = [
+        f64::NAN,
+        h1.mean(),
+        h2.mean(),
+        h3.mean(),
+        h4.mean(),
+    ];
+    let eh2 = [
+        f64::NAN,
+        h1.second(),
+        h2.second(),
+        h3.second(),
+        h4.second(),
+    ];
+    let en1h = (n1h.zt_mean(), n1h.zt_second());
+    let en2l = (n2l.zt_mean(), n2l.zt_second());
+
+    // --- Lemma 1: time fractions ---------------------------------------
+    let cycle: f64 = eh[1] + eh[2] + eh[3] + eh[4];
+    let m = [
+        f64::NAN,
+        eh[1] / cycle,
+        eh[2] / cycle,
+        eh[3] / cycle,
+        eh[4] / cycle,
+    ];
+
+    // --- Lemma 2: EFS couplings ----------------------------------------
+    // Heavy arrivals in phase 1.
+    let es_h = (1.0 / muk, 2.0 / (muk * muk));
+    let sp1 = en1h.0 / muk;
+    let sp2 = (en1h.1 + en1h.0) / (muk * muk);
+    let efs_h = Efs {
+        lam: lamk,
+        es: es_h,
+        esp: (sp1, sp2),
+    };
+    let t1h = efs_h.mean_work_non_exceptional() + 1.0 / muk;
+
+    // Light arrivals in phase 2: effective single server of speed k.
+    let es_l = (1.0 / (kf * mu1), 2.0 / (kf * mu1).powi(2));
+    // Σ(N2L − k + 1, S1/k): the paper's moment formulas; clamp the count
+    // at 0 for low loads where E[N2L] < k−1 (approximation regime).
+    let cnt1 = (en2l.0 - kf + 1.0).max(0.0);
+    let cnt2 = (en2l.1 - (2.0 * kf - 3.0) * en2l.0 + kf * kf - 3.0 * kf + 2.0).max(cnt1 * cnt1);
+    let spl = (
+        cnt1 / (kf * mu1),
+        cnt2 / (kf * mu1).powi(2),
+    );
+    let efs_l = Efs {
+        lam: lam1,
+        es: es_l,
+        esp: spl,
+    };
+    let t2l = efs_l.mean_work_non_exceptional() + 1.0 / mu1;
+
+    // --- Lemma 3: age/excess over phase unions -------------------------
+    // E[(H2+H3+H4)²] with H2 ⊥ H3 ⊥ H4 (H3, H4 start from fixed states).
+    let e234 = eh[2] + eh[3] + eh[4];
+    let e234_sq = eh2[2]
+        + eh2[3]
+        + eh2[4]
+        + 2.0 * (eh[2] * eh[3] + eh[2] * eh[4] + eh[3] * eh[4]);
+    let t234h = (lamk / muk + 1.0) * e234_sq / (2.0 * e234) + 1.0 / muk;
+
+    // E[(H4+H1)²]: H1 is a busy period started by the heavies that arrive
+    // during phases 2–4, so H4 and H1 are positively correlated:
+    // E[H4·H1] = E[Bᴴ]·λk·(E[H4](E[H2]+E[H3]) + E[H4²]).
+    let e41 = eh[4] + eh[1];
+    let cov_h4h1 = bh.mean() * lamk * (eh[4] * (eh[2] + eh[3]) + eh2[4]);
+    let e41_sq = eh2[4] + eh2[1] + 2.0 * cov_h4h1;
+    let t14l = (lam1 / (kf * mu1) + 1.0) * e41_sq / (2.0 * e41) + 1.0 / mu1;
+
+    // --- Lemma 4: lights arriving during phase 3 ------------------------
+    let t3l = lemma4_t3(k, ell, lam1, mu1);
+
+    // --- Eq. (1): assemble ----------------------------------------------
+    // A phase with zero duration contributes nothing even if its
+    // conditional response time is degenerate (e.g. the clamped
+    // low-light-load regime makes E[T₂ᴸ] → ∞ while m₂ = 0).
+    let wt = |m: f64, t: f64| if m > 0.0 { m * t } else { 0.0 };
+    let lam = lam1 + lamk;
+    let (p1f, pkf) = (lam1 / lam, lamk / lam);
+    let et_heavy = wt(m[1], t1h) + wt(m[2] + m[3] + m[4], t234h);
+    let et_light = wt(m[1] + m[4], t14l) + wt(m[2], t2l) + wt(m[3], t3l);
+    let et = pkf * et_heavy + p1f * et_light;
+    let rho1 = lam1 / mu1;
+    let rhok = kf * lamk / muk;
+    let etw = (rho1 * et_light + rhok * et_heavy) / (rho1 + rhok);
+
+    Ok(MsfqAnalysis {
+        et,
+        et_light,
+        et_heavy,
+        etw,
+        eh,
+        eh2,
+        m,
+        en1h,
+        en2l,
+        t1h,
+        t234h,
+        t14l,
+        t2l,
+        t3l,
+    })
+}
+
+/// Lemma 4: E[T₃ᴸ] via the Cⱼ visit-count recursion of the absorbing
+/// M/M/k on light jobs during phase 3 (from k−1 down to ℓ).
+fn lemma4_t3(k: u32, ell: u32, lam1: f64, mu1: f64) -> f64 {
+    let kf = k as f64;
+    if ell + 1 >= k {
+        return 0.0; // phase 3 has zero length when ℓ = k−1
+    }
+    let resp = |j: f64| (kf + (j - kf + 1.0).max(0.0)) / (kf * mu1);
+    let mut num = 0.0;
+    let mut den = 0.0;
+    // C_{ℓ+1}: the indicator 1{ℓ+1 ≤ k−1} holds here by the guard above.
+    let l1 = (ell + 1) as f64;
+    let mut c_prev = (lam1 + l1 * mu1) / (l1 * mu1);
+    let w = c_prev / (lam1 + l1.min(kf) * mu1);
+    num += w * resp(l1);
+    den += w;
+    // ℓ+1 < j ≤ k.
+    for j in (ell + 2)..=k {
+        let jf = j as f64;
+        let ind = if j <= k - 1 { 1.0 } else { 0.0 };
+        let c = c_prev * lam1 * (lam1 + jf * mu1) / (jf * mu1 * (lam1 + (jf - 1.0) * mu1))
+            + (lam1 + jf * mu1) / (jf * mu1) * ind;
+        let w = c / (lam1 + jf.min(kf) * mu1);
+        num += w * resp(jf);
+        den += w;
+        c_prev = c;
+    }
+    // Geometric tail j > k: C_j = (λ1/(kμ1))·C_{j−1}.
+    let r = lam1 / (kf * mu1);
+    debug_assert!(r < 1.0);
+    let mut c = c_prev;
+    let mut j = kf;
+    for _ in 0..1_000_000 {
+        j += 1.0;
+        c *= r;
+        let w = c / (lam1 + kf * mu1);
+        let dn = w * resp(j);
+        num += dn;
+        den += w;
+        if dn < 1e-15 * num {
+            break;
+        }
+    }
+    num / den
+}
+
+/// Sweep all thresholds and return (best ℓ, its E[T]) by the calculator —
+/// the native autotuner (mirrors the AOT sweep artifact).
+pub fn best_threshold(
+    k: u32,
+    lam1: f64,
+    lamk: f64,
+    mu1: f64,
+    muk: f64,
+    weighted: bool,
+) -> Option<(u32, f64)> {
+    let mut best: Option<(u32, f64)> = None;
+    for ell in 0..k {
+        let p = MsfqParams {
+            k,
+            ell,
+            lam1,
+            lamk,
+            mu1,
+            muk,
+        };
+        if let Ok(a) = analyze(&p) {
+            let v = if weighted { a.etw } else { a.et };
+            if v.is_finite() && best.map(|(_, b)| v < b).unwrap_or(true) {
+                best = Some((ell, v));
+            }
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params(ell: u32, lambda: f64) -> MsfqParams {
+        MsfqParams::standard(32, ell, lambda, 0.9)
+    }
+
+    #[test]
+    fn rejects_unstable() {
+        // k=32, p1=0.9: load = λ(0.9/32 + 0.1) → λ* ≈ 7.804.
+        assert!(matches!(
+            analyze(&params(31, 8.0)),
+            Err(CalcError::Unstable(_))
+        ));
+        assert!(analyze(&params(31, 7.5)).is_ok());
+    }
+
+    #[test]
+    fn phase_means_sane() {
+        let a = analyze(&params(31, 7.5)).unwrap();
+        for i in 1..=4 {
+            assert!(a.eh[i] >= 0.0, "E[H{i}] = {}", a.eh[i]);
+            assert!(a.eh2[i] >= a.eh[i] * a.eh[i] - 1e-9, "Var[H{i}] < 0");
+        }
+        // ℓ = 31 ⇒ phase 3 is empty.
+        assert!(a.eh[3].abs() < 1e-12);
+        let msum: f64 = (1..=4).map(|i| a.m[i]).sum();
+        assert!((msum - 1.0).abs() < 1e-9);
+        assert!(a.et > 0.0 && a.et.is_finite());
+    }
+
+    /// The headline claim: MSFQ(k−1) dramatically beats MSF (= ℓ=0) at
+    /// high load.
+    #[test]
+    fn msfq_beats_msf_at_high_load() {
+        let msf = analyze(&params(0, 7.5)).unwrap();
+        let msfq = analyze(&params(31, 7.5)).unwrap();
+        assert!(
+            msfq.et < msf.et / 5.0,
+            "MSFQ E[T]={} should be ≪ MSF E[T]={}",
+            msfq.et,
+            msf.et
+        );
+    }
+
+    /// H4 mean is the harmonic sum Σ 1/(jμ1).
+    #[test]
+    fn h4_closed_form() {
+        let a = analyze(&params(3, 5.0)).unwrap();
+        let expect: f64 = (1..=3).map(|j| 1.0 / j as f64).sum();
+        assert!((a.eh[4] - expect).abs() < 1e-9);
+    }
+
+    /// Lemma 4 in the M/M/k-free corner: when ℓ = k−1, t3 = 0.
+    #[test]
+    fn t3_zero_at_max_threshold() {
+        assert_eq!(lemma4_t3(32, 31, 6.75, 1.0), 0.0);
+        // And positive otherwise, larger than a bare service time.
+        let t3 = lemma4_t3(32, 16, 6.75, 1.0);
+        assert!(t3 >= 1.0 / 1.0, "t3={t3}");
+    }
+
+    #[test]
+    fn best_threshold_prefers_large_ell() {
+        let (ell, _) = best_threshold(32, 6.75, 0.75, 1.0, 1.0, false).unwrap();
+        assert!(ell > 8, "best ell = {ell} should be far from 0");
+    }
+
+    /// Monotone degradation with load for fixed ℓ.
+    #[test]
+    fn et_monotone_in_lambda() {
+        let a1 = analyze(&params(31, 4.0)).unwrap();
+        let a2 = analyze(&params(31, 6.0)).unwrap();
+        let a3 = analyze(&params(31, 7.5)).unwrap();
+        assert!(a1.et < a2.et && a2.et < a3.et);
+    }
+}

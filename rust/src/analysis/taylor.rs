@@ -1,0 +1,228 @@
+//! Second-order truncated Taylor arithmetic ("dual numbers, order 2").
+//!
+//! A Laplace–Stieltjes transform H̃(s) of a nonnegative random variable H
+//! is represented by its expansion at s = 0:
+//!     H̃(s) ≈ c0 + c1·s + c2·s²,  with c0 = 1, c1 = −E[H], c2 = E[H²]/2.
+//! A z-transform N̂(z) is represented in x = z − 1:
+//!     N̂ ≈ 1 + E[N]·x + E[N(N−1)]/2·x².
+//! All the transform manipulations of Lemmas 5–8 (products, quotients,
+//! compositions, powers) then reduce to `T2` arithmetic, which yields
+//! exact first and second moments without symbolic differentiation.
+
+/// Truncated Taylor series c0 + c1·x + c2·x².
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct T2 {
+    pub c0: f64,
+    pub c1: f64,
+    pub c2: f64,
+}
+
+impl T2 {
+    pub const ONE: T2 = T2 {
+        c0: 1.0,
+        c1: 0.0,
+        c2: 0.0,
+    };
+
+    pub fn new(c0: f64, c1: f64, c2: f64) -> T2 {
+        T2 { c0, c1, c2 }
+    }
+
+    /// Constant.
+    pub fn cst(c: f64) -> T2 {
+        T2::new(c, 0.0, 0.0)
+    }
+
+    /// The variable x itself.
+    pub fn var() -> T2 {
+        T2::new(0.0, 1.0, 0.0)
+    }
+
+    /// Build the LST Taylor of a variable with given first two moments.
+    pub fn from_moments(m1: f64, m2: f64) -> T2 {
+        T2::new(1.0, -m1, m2 / 2.0)
+    }
+
+    /// Mean of the underlying variable (LST convention).
+    pub fn mean(&self) -> f64 {
+        -self.c1
+    }
+
+    /// Second raw moment (LST convention).
+    pub fn second(&self) -> f64 {
+        2.0 * self.c2
+    }
+
+    /// z-transform convention: E[N] and E[N(N−1)] from expansion in z−1.
+    pub fn zt_mean(&self) -> f64 {
+        self.c1
+    }
+
+    pub fn zt_factorial2(&self) -> f64 {
+        2.0 * self.c2
+    }
+
+    /// Second raw moment of N for a z-transform: E[N²] = E[N(N−1)] + E[N].
+    pub fn zt_second(&self) -> f64 {
+        self.zt_factorial2() + self.zt_mean()
+    }
+
+    pub fn add(self, o: T2) -> T2 {
+        T2::new(self.c0 + o.c0, self.c1 + o.c1, self.c2 + o.c2)
+    }
+
+    pub fn sub(self, o: T2) -> T2 {
+        T2::new(self.c0 - o.c0, self.c1 - o.c1, self.c2 - o.c2)
+    }
+
+    pub fn scale(self, a: f64) -> T2 {
+        T2::new(a * self.c0, a * self.c1, a * self.c2)
+    }
+
+    pub fn mul(self, o: T2) -> T2 {
+        T2::new(
+            self.c0 * o.c0,
+            self.c0 * o.c1 + self.c1 * o.c0,
+            self.c0 * o.c2 + self.c1 * o.c1 + self.c2 * o.c0,
+        )
+    }
+
+    pub fn div(self, o: T2) -> T2 {
+        debug_assert!(o.c0 != 0.0);
+        let c0 = self.c0 / o.c0;
+        let c1 = (self.c1 - c0 * o.c1) / o.c0;
+        let c2 = (self.c2 - c0 * o.c2 - c1 * o.c1) / o.c0;
+        T2::new(c0, c1, c2)
+    }
+
+    /// Composition self(g(x)) where g(0) = 0 (i.e. g.c0 == 0): the outer
+    /// series is re-expanded through the inner one.
+    pub fn compose0(self, g: T2) -> T2 {
+        debug_assert!(
+            g.c0.abs() < 1e-9,
+            "compose0 requires inner value 0 at x=0, got {}",
+            g.c0
+        );
+        T2::new(
+            self.c0,
+            self.c1 * g.c1,
+            self.c1 * g.c2 + self.c2 * g.c1 * g.c1,
+        )
+    }
+
+    /// Natural log of a series with c0 > 0.
+    pub fn ln(self) -> T2 {
+        debug_assert!(self.c0 > 0.0);
+        let l1 = self.c1 / self.c0;
+        let l2 = self.c2 / self.c0 - 0.5 * l1 * l1;
+        T2::new(self.c0.ln(), l1, l2)
+    }
+
+    /// Exponential of a series.
+    pub fn exp(self) -> T2 {
+        let e = self.c0.exp();
+        T2::new(e, e * self.c1, e * (self.c2 + 0.5 * self.c1 * self.c1))
+    }
+
+    /// Real power (via exp(p·ln)).
+    pub fn powf(self, p: f64) -> T2 {
+        self.ln().scale(p).exp()
+    }
+}
+
+impl std::ops::Add for T2 {
+    type Output = T2;
+    fn add(self, o: T2) -> T2 {
+        T2::add(self, o)
+    }
+}
+impl std::ops::Sub for T2 {
+    type Output = T2;
+    fn sub(self, o: T2) -> T2 {
+        T2::sub(self, o)
+    }
+}
+impl std::ops::Mul for T2 {
+    type Output = T2;
+    fn mul(self, o: T2) -> T2 {
+        T2::mul(self, o)
+    }
+}
+impl std::ops::Div for T2 {
+    type Output = T2;
+    fn div(self, o: T2) -> T2 {
+        T2::div(self, o)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn close(a: f64, b: f64) -> bool {
+        (a - b).abs() < 1e-10 * (1.0 + a.abs().max(b.abs()))
+    }
+
+    #[test]
+    fn moments_roundtrip() {
+        let t = T2::from_moments(3.0, 11.0);
+        assert!(close(t.mean(), 3.0) && close(t.second(), 11.0));
+    }
+
+    /// Product of independent LSTs = LST of the sum: moments must match
+    /// E[X+Y] and E[(X+Y)²].
+    #[test]
+    fn product_is_sum_of_variables() {
+        let x = T2::from_moments(2.0, 6.0); // Var=2
+        let y = T2::from_moments(1.0, 3.0); // Var=2
+        let s = x.mul(y);
+        assert!(close(s.mean(), 3.0));
+        // E[(X+Y)²] = E[X²]+2E[X]E[Y]+E[Y²] = 6+4+3 = 13.
+        assert!(close(s.second(), 13.0));
+    }
+
+    /// Exp(μ) LST is μ/(μ+s): build via div and check moments.
+    #[test]
+    fn exponential_lst_via_div() {
+        let mu = 2.0;
+        let denom = T2::new(mu, 1.0, 0.0); // μ + s
+        let lst = T2::cst(mu).div(denom);
+        assert!(close(lst.mean(), 0.5));
+        assert!(close(lst.second(), 2.0 / (mu * mu)));
+    }
+
+    /// Geometric-sum composition: N̂(B̃(s)) with N ~ const n gives
+    /// moments of n·B.
+    #[test]
+    fn compose_deterministic_count() {
+        let n = 4.0;
+        let b = T2::from_moments(2.0, 10.0); // Var = 6
+        // N̂(z) = z^n → in x = z−1: 1 + n x + n(n−1)/2 x².
+        let nz = T2::new(1.0, n, n * (n - 1.0) / 2.0);
+        let inner = b.sub(T2::ONE); // B̃(s) − 1, value 0 at s=0
+        let h = nz.compose0(inner);
+        assert!(close(h.mean(), n * 2.0));
+        // E[(ΣB)²] = n·E[B²] + n(n−1)·E[B]² = 4·10 + 12·4 = 88.
+        assert!(close(h.second(), 88.0));
+    }
+
+    #[test]
+    fn pow_matches_repeated_mul() {
+        let b = T2::from_moments(1.5, 4.0);
+        let p3 = b.powf(3.0);
+        let m3 = b.mul(b).mul(b);
+        assert!(close(p3.c0, m3.c0) && close(p3.c1, m3.c1) && close(p3.c2, m3.c2));
+        // Negative powers invert.
+        let inv = b.powf(-1.0).mul(b);
+        assert!(close(inv.c0, 1.0) && inv.c1.abs() < 1e-12);
+    }
+
+    #[test]
+    fn div_is_mul_inverse() {
+        let a = T2::new(2.0, 3.0, 4.0);
+        let b = T2::new(1.5, -0.5, 0.25);
+        let q = a.div(b);
+        let back = q.mul(b);
+        assert!(close(back.c0, a.c0) && close(back.c1, a.c1) && close(back.c2, a.c2));
+    }
+}

@@ -1,0 +1,183 @@
+//! Experiment/system configuration: JSON-backed specs for workloads,
+//! policies and run parameters, so experiments are declarative and
+//! reproducible (`quickswap simulate --config exp.json`).
+
+use crate::dist::Dist;
+use crate::sim::SimConfig;
+use crate::util::json::Value;
+use crate::workload::{ClassSpec, Workload};
+
+/// Declarative experiment: a workload, a set of policies, run controls.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub name: String,
+    pub workload: Workload,
+    pub policies: Vec<String>,
+    pub sim: SimConfig,
+    pub seed: u64,
+    pub replications: u32,
+}
+
+impl ExperimentConfig {
+    pub fn from_json(text: &str) -> anyhow::Result<ExperimentConfig> {
+        let v = Value::parse(text)?;
+        let name = v
+            .get("name")
+            .and_then(|x| x.as_str())
+            .unwrap_or("experiment")
+            .to_string();
+        let workload = parse_workload(
+            v.get("workload")
+                .ok_or_else(|| anyhow::anyhow!("missing 'workload'"))?,
+        )?;
+        let policies = v
+            .get("policies")
+            .and_then(|x| x.as_arr())
+            .map(|arr| {
+                arr.iter()
+                    .filter_map(|p| p.as_str().map(|s| s.to_string()))
+                    .collect()
+            })
+            .unwrap_or_else(|| vec!["msfq".to_string()]);
+        let mut sim = SimConfig::default();
+        if let Some(s) = v.get("sim") {
+            if let Some(t) = s.get("target_completions").and_then(|x| x.as_u64()) {
+                sim.target_completions = t;
+            }
+            if let Some(w) = s.get("warmup_completions").and_then(|x| x.as_u64()) {
+                sim.warmup_completions = w;
+            }
+            if let Some(m) = s.get("max_time").and_then(|x| x.as_f64()) {
+                sim.max_time = m;
+            }
+            if s.get("track_phases").and_then(|x| x.as_bool()) == Some(true) {
+                sim.track_phases = true;
+            }
+        }
+        let seed = v.get("seed").and_then(|x| x.as_u64()).unwrap_or(1);
+        let replications = v
+            .get("replications")
+            .and_then(|x| x.as_u64())
+            .unwrap_or(1) as u32;
+        Ok(ExperimentConfig {
+            name,
+            workload,
+            policies,
+            sim,
+            seed,
+            replications,
+        })
+    }
+}
+
+/// Workload spec:
+/// `{"kind":"one_or_all","k":32,"lambda":7.5,"p1":0.9,"mu1":1,"muk":1}`,
+/// `{"kind":"four_class","lambda":4.0}`, `{"kind":"borg","lambda":4.0}`,
+/// or `{"kind":"custom","k":8,"classes":[{"need":1,"rate":1.0,"mean":1.0}]}`.
+pub fn parse_workload(v: &Value) -> anyhow::Result<Workload> {
+    let kind = v
+        .get("kind")
+        .and_then(|x| x.as_str())
+        .ok_or_else(|| anyhow::anyhow!("workload needs 'kind'"))?;
+    let f = |key: &str, d: f64| v.get(key).and_then(|x| x.as_f64()).unwrap_or(d);
+    match kind {
+        "one_or_all" => {
+            let k = v
+                .get("k")
+                .and_then(|x| x.as_u64())
+                .ok_or_else(|| anyhow::anyhow!("one_or_all needs 'k'"))? as u32;
+            Ok(Workload::one_or_all(
+                k,
+                f("lambda", 1.0),
+                f("p1", 0.9),
+                f("mu1", 1.0),
+                f("muk", 1.0),
+            ))
+        }
+        "four_class" => Ok(Workload::four_class(f("lambda", 1.0))),
+        "borg" => Ok(crate::workload::borg::borg_workload(f("lambda", 1.0))),
+        "custom" => {
+            let k = v
+                .get("k")
+                .and_then(|x| x.as_u64())
+                .ok_or_else(|| anyhow::anyhow!("custom needs 'k'"))? as u32;
+            let classes = v
+                .get("classes")
+                .and_then(|x| x.as_arr())
+                .ok_or_else(|| anyhow::anyhow!("custom needs 'classes'"))?;
+            let mut specs = Vec::new();
+            for c in classes {
+                let need = c
+                    .get("need")
+                    .and_then(|x| x.as_u64())
+                    .ok_or_else(|| anyhow::anyhow!("class needs 'need'"))?
+                    as u32;
+                let rate = c
+                    .get("rate")
+                    .and_then(|x| x.as_f64())
+                    .ok_or_else(|| anyhow::anyhow!("class needs 'rate'"))?;
+                let mean = c.get("mean").and_then(|x| x.as_f64()).unwrap_or(1.0);
+                let scv = c.get("scv").and_then(|x| x.as_f64()).unwrap_or(1.0);
+                let dist = if (scv - 1.0).abs() < 1e-12 {
+                    Dist::exp_mean(mean)
+                } else if scv > 1.0 {
+                    Dist::hyper2_mean_scv(mean, scv)
+                } else {
+                    // SCV < 1 → Erlang with the nearest stage count.
+                    let stages = (1.0 / scv).round().max(1.0) as u32;
+                    Dist::Erlang {
+                        k: stages,
+                        rate: stages as f64 / mean,
+                    }
+                };
+                specs.push(ClassSpec::new(need, rate, dist));
+            }
+            Ok(Workload::new(k, specs))
+        }
+        other => anyhow::bail!("unknown workload kind '{other}'"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_experiment() {
+        let cfg = ExperimentConfig::from_json(
+            r#"{
+              "name": "fig3",
+              "workload": {"kind": "one_or_all", "k": 32, "lambda": 7.5, "p1": 0.9},
+              "policies": ["msf", "msfq:31", "fcfs"],
+              "sim": {"target_completions": 1000, "warmup_completions": 100},
+              "seed": 7, "replications": 3
+            }"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.name, "fig3");
+        assert_eq!(cfg.workload.k, 32);
+        assert_eq!(cfg.policies.len(), 3);
+        assert_eq!(cfg.sim.target_completions, 1000);
+        assert_eq!(cfg.replications, 3);
+    }
+
+    #[test]
+    fn parses_custom_workload_with_scv() {
+        let v = Value::parse(
+            r#"{"kind":"custom","k":8,"classes":[
+                {"need":1,"rate":1.0,"mean":2.0,"scv":4.0},
+                {"need":8,"rate":0.1,"mean":1.0,"scv":0.25}]}"#,
+        )
+        .unwrap();
+        let wl = parse_workload(&v).unwrap();
+        assert_eq!(wl.num_classes(), 2);
+        assert!((wl.classes[0].size.scv() - 4.0).abs() < 1e-9);
+        assert!((wl.classes[1].size.scv() - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rejects_unknown_kind() {
+        let v = Value::parse(r#"{"kind":"nope"}"#).unwrap();
+        assert!(parse_workload(&v).is_err());
+    }
+}

@@ -1,0 +1,552 @@
+//! Coordinator core: scheduler thread + completion-timer thread.
+
+use crate::analysis;
+use crate::coordinator::rates::RateEstimator;
+use crate::policy::test_support::Harness;
+use crate::policy::{JobId, Msfq, Policy};
+use crate::runtime::{Runtime, SolverArtifact};
+use crate::util::stats::Welford;
+use crate::workload::Workload;
+use std::collections::BinaryHeap;
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct CoordinatorConfig {
+    /// Wall seconds per unit of virtual job size (e.g. 1e-3 ⇒ a job of
+    /// size 1.0 runs 1 ms).
+    pub time_scale: f64,
+    /// Autotune every N arrivals (0 = never).
+    pub autotune_every: u64,
+    /// Use the PJRT solver artifact when available for this k.
+    pub use_artifact: bool,
+    /// Power-iteration budget per artifact execution.
+    pub solver_iters: i32,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        Self {
+            time_scale: 1e-3,
+            autotune_every: 0,
+            use_artifact: true,
+            solver_iters: 20_000,
+        }
+    }
+}
+
+/// Point-in-time statistics exposed over the API.
+#[derive(Clone, Debug, Default)]
+pub struct StatsSnapshot {
+    pub policy: String,
+    pub submitted: u64,
+    pub completed: u64,
+    pub in_system: u64,
+    pub used_servers: u32,
+    pub k: u32,
+    /// Per-class (count, mean response, mean size) in virtual time units.
+    pub per_class: Vec<(u64, f64, f64)>,
+    pub mean_t: f64,
+    pub weighted_t: f64,
+    pub current_ell: Option<u32>,
+    pub retunes: u64,
+}
+
+enum Cmd {
+    Submit {
+        class: usize,
+        size: f64,
+        reply: Option<Sender<JobId>>,
+    },
+    Complete {
+        job: JobId,
+        epoch: u32,
+    },
+    Stats {
+        reply: Sender<StatsSnapshot>,
+    },
+    Autotune {
+        reply: Sender<Option<u32>>,
+    },
+    /// Result of an asynchronous tune solve (worker thread → scheduler).
+    ApplyTuned {
+        ell: Option<u32>,
+        reply: Option<Sender<Option<u32>>>,
+    },
+    Shutdown,
+}
+
+/// Cloneable handle to a running coordinator.
+#[derive(Clone)]
+pub struct CoordinatorHandle {
+    tx: Sender<Cmd>,
+}
+
+impl CoordinatorHandle {
+    /// A handle wired to a dead channel — for exercising API error paths.
+    #[doc(hidden)]
+    pub fn test_only(tx: Sender<()>) -> CoordinatorHandle {
+        drop(tx);
+        let (tx, rx) = mpsc::channel();
+        drop(rx);
+        CoordinatorHandle { tx }
+    }
+
+    pub fn submit(&self, class: usize, size: f64) {
+        let _ = self.tx.send(Cmd::Submit {
+            class,
+            size,
+            reply: None,
+        });
+    }
+
+    pub fn submit_wait(&self, class: usize, size: f64) -> Option<JobId> {
+        let (tx, rx) = mpsc::channel();
+        self.tx
+            .send(Cmd::Submit {
+                class,
+                size,
+                reply: Some(tx),
+            })
+            .ok()?;
+        rx.recv().ok()
+    }
+
+    pub fn stats(&self) -> Option<StatsSnapshot> {
+        let (tx, rx) = mpsc::channel();
+        self.tx.send(Cmd::Stats { reply: tx }).ok()?;
+        rx.recv().ok()
+    }
+
+    /// Trigger a retune now; returns the chosen ℓ if any.
+    pub fn autotune(&self) -> Option<u32> {
+        let (tx, rx) = mpsc::channel();
+        self.tx.send(Cmd::Autotune { reply: tx }).ok()?;
+        rx.recv().ok().flatten()
+    }
+
+    /// Block until all submitted jobs have completed (polling).
+    pub fn drain(&self, timeout: Duration) -> bool {
+        let start = Instant::now();
+        loop {
+            match self.stats() {
+                Some(s) if s.in_system == 0 => return true,
+                None => return false,
+                _ => {}
+            }
+            if start.elapsed() > timeout {
+                return false;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+
+    pub fn shutdown(&self) {
+        let _ = self.tx.send(Cmd::Shutdown);
+    }
+}
+
+/// Completion-timer entry (min-heap by deadline).
+struct TimerEntry {
+    at: Instant,
+    job: JobId,
+    epoch: u32,
+}
+
+impl PartialEq for TimerEntry {
+    fn eq(&self, o: &Self) -> bool {
+        self.at == o.at
+    }
+}
+impl Eq for TimerEntry {}
+impl PartialOrd for TimerEntry {
+    fn partial_cmp(&self, o: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(o))
+    }
+}
+impl Ord for TimerEntry {
+    fn cmp(&self, o: &Self) -> std::cmp::Ordering {
+        o.at.cmp(&self.at) // reverse: min-heap
+    }
+}
+
+pub struct Coordinator {
+    handle: CoordinatorHandle,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Coordinator {
+    /// Spawn the scheduler + timer threads for `wl` under `policy`.
+    pub fn spawn(
+        wl: &Workload,
+        policy: Box<dyn Policy + Send>,
+        cfg: CoordinatorConfig,
+    ) -> Coordinator {
+        let (tx, rx) = mpsc::channel::<Cmd>();
+        let (timer_tx, timer_rx) = mpsc::channel::<TimerEntry>();
+        // Timer thread: fires completions back into the command channel.
+        {
+            let sched_tx = tx.clone();
+            std::thread::Builder::new()
+                .name("qs-timer".into())
+                .spawn(move || timer_loop(timer_rx, sched_tx))
+                .expect("spawn timer thread");
+        }
+        let wl2 = wl.clone();
+        let tx2 = tx.clone();
+        let thread = std::thread::Builder::new()
+            .name("qs-sched".into())
+            .spawn(move || scheduler_loop(wl2, policy, cfg, rx, tx2, timer_tx))
+            .expect("spawn scheduler thread");
+        Coordinator {
+            handle: CoordinatorHandle { tx },
+            thread: Some(thread),
+        }
+    }
+
+    pub fn handle(&self) -> CoordinatorHandle {
+        self.handle.clone()
+    }
+
+    /// Shut down and join.
+    pub fn join(mut self) {
+        self.handle.shutdown();
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+fn timer_loop(rx: Receiver<TimerEntry>, sched: Sender<Cmd>) {
+    let mut heap: BinaryHeap<TimerEntry> = BinaryHeap::new();
+    loop {
+        let now = Instant::now();
+        // Fire everything due.
+        while heap.peek().map(|e| e.at <= now).unwrap_or(false) {
+            let e = heap.pop().unwrap();
+            if sched
+                .send(Cmd::Complete {
+                    job: e.job,
+                    epoch: e.epoch,
+                })
+                .is_err()
+            {
+                return; // scheduler gone
+            }
+        }
+        let wait = heap
+            .peek()
+            .map(|e| e.at.saturating_duration_since(now))
+            .unwrap_or(Duration::from_millis(50));
+        match rx.recv_timeout(wait) {
+            Ok(e) => heap.push(e),
+            Err(mpsc::RecvTimeoutError::Timeout) => {}
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                // Drain remaining deadlines, then exit.
+                while let Some(e) = heap.pop() {
+                    let now = Instant::now();
+                    if e.at > now {
+                        std::thread::sleep(e.at - now);
+                    }
+                    if sched
+                        .send(Cmd::Complete {
+                            job: e.job,
+                            epoch: e.epoch,
+                        })
+                        .is_err()
+                    {
+                        return;
+                    }
+                }
+                return;
+            }
+        }
+    }
+}
+
+fn scheduler_loop(
+    wl: Workload,
+    mut policy: Box<dyn Policy + Send>,
+    cfg: CoordinatorConfig,
+    rx: Receiver<Cmd>,
+    self_tx: Sender<Cmd>,
+    timer: Sender<TimerEntry>,
+) {
+    let needs = wl.needs();
+    let mut state = Harness::new(wl.k, &needs);
+    let mut resp: Vec<Welford> = vec![Welford::new(); needs.len()];
+    let mut arrive_wall: std::collections::HashMap<JobId, Instant> = Default::default();
+    let mut start_virtual: std::collections::HashMap<JobId, f64> = Default::default();
+    // Two estimators: `rates` is windowed (reset after each retune, so
+    // the tuner tracks the recent regime); `rates_all` is all-time and
+    // feeds the stats snapshot (load weights must never vanish).
+    let mut rates = RateEstimator::new(needs.len());
+    let mut rates_all = RateEstimator::new(needs.len());
+    let (mut submitted, mut completed, mut retunes) = (0u64, 0u64, 0u64);
+    let mut current_ell: Option<u32> = None;
+    let mut tune_in_flight = false;
+    let epoch0 = Instant::now();
+
+    let vnow = |epoch0: Instant, scale: f64| epoch0.elapsed().as_secs_f64() / scale;
+
+    loop {
+        let cmd = match rx.recv() {
+            Ok(c) => c,
+            Err(_) => return,
+        };
+        match cmd {
+            Cmd::Submit { class, size, reply } => {
+                let t = vnow(epoch0, cfg.time_scale);
+                let id = state.arrive_sized(class, t, size);
+                arrive_wall.insert(id, Instant::now());
+                start_virtual.insert(id, t);
+                rates.observe_arrival(t, class, size);
+                rates_all.observe_arrival(t, class, size);
+                submitted += 1;
+                if let Some(r) = reply {
+                    let _ = r.send(id);
+                }
+                dispatch(&mut state, policy.as_mut(), &timer, cfg.time_scale);
+                if cfg.autotune_every > 0
+                    && submitted % cfg.autotune_every == 0
+                    && rates.ready(5)
+                    && !tune_in_flight
+                {
+                    tune_in_flight =
+                        spawn_tune(&wl, &rates, &cfg, self_tx.clone(), None);
+                }
+            }
+            Cmd::Complete { job, epoch } => {
+                // Stale timers can exist if a job was resubmitted; guard.
+                if !state.jobs.is_running(job) || state.jobs.get(job).epoch != epoch {
+                    continue;
+                }
+                let t = vnow(epoch0, cfg.time_scale);
+                let class = state.jobs.get(job).class;
+                state.complete(job, t);
+                completed += 1;
+                if let (Some(w0), Some(_)) =
+                    (arrive_wall.remove(&job), start_virtual.remove(&job))
+                {
+                    let vresp = w0.elapsed().as_secs_f64() / cfg.time_scale;
+                    resp[class].push(vresp);
+                }
+                dispatch(&mut state, policy.as_mut(), &timer, cfg.time_scale);
+            }
+            Cmd::Stats { reply } => {
+                let per_class: Vec<(u64, f64, f64)> = (0..needs.len())
+                    .map(|c| (resp[c].count(), resp[c].mean(), rates_all.mean_size(c)))
+                    .collect();
+                let rho: Vec<f64> = (0..needs.len())
+                    .map(|c| {
+                        needs[c] as f64 * rates_all.rate(c) * rates_all.mean_size(c).max(0.0)
+                    })
+                    .collect();
+                let rho_tot: f64 = rho.iter().filter(|x| x.is_finite()).sum();
+                let weighted_t = if rho_tot > 0.0 {
+                    (0..needs.len())
+                        .filter(|&c| resp[c].count() > 0 && rho[c].is_finite())
+                        .map(|c| rho[c] / rho_tot * resp[c].mean())
+                        .sum()
+                } else {
+                    f64::NAN
+                };
+                let all: Welford = {
+                    let mut w = Welford::new();
+                    for r in &resp {
+                        w.merge(r);
+                    }
+                    w
+                };
+                let _ = reply.send(StatsSnapshot {
+                    policy: policy.name(),
+                    submitted,
+                    completed,
+                    in_system: state.jobs.len() as u64,
+                    used_servers: state.used(),
+                    k: wl.k,
+                    per_class,
+                    mean_t: all.mean(),
+                    weighted_t,
+                    current_ell,
+                    retunes,
+                });
+            }
+            Cmd::Autotune { reply } => {
+                if tune_in_flight
+                    || !spawn_tune(&wl, &rates, &cfg, self_tx.clone(), Some(reply.clone()))
+                {
+                    let _ = reply.send(None);
+                } else {
+                    tune_in_flight = true;
+                }
+            }
+            Cmd::ApplyTuned { ell, reply } => {
+                tune_in_flight = false;
+                let applied = ell.and_then(|e| match Msfq::new(&wl, e) {
+                    Ok(p) => {
+                        policy = Box::new(p);
+                        current_ell = Some(e);
+                        retunes += 1;
+                        rates.reset(vnow(epoch0, cfg.time_scale));
+                        Some(e)
+                    }
+                    Err(_) => None,
+                });
+                // The swapped-in policy may want to act immediately.
+                dispatch(&mut state, policy.as_mut(), &timer, cfg.time_scale);
+                if let Some(r) = reply {
+                    let _ = r.send(applied);
+                }
+            }
+            Cmd::Shutdown => return,
+        }
+    }
+}
+
+/// Consult the policy and start any admitted jobs, arming their timers.
+fn dispatch(
+    state: &mut Harness,
+    policy: &mut dyn Policy,
+    timer: &Sender<TimerEntry>,
+    scale: f64,
+) {
+    let admitted = state.consult(policy);
+    let now = Instant::now();
+    for id in admitted {
+        let j = state.jobs.get(id);
+        let dur = Duration::from_secs_f64((j.remaining * scale).max(0.0));
+        let _ = timer.send(TimerEntry {
+            at: now + dur,
+            job: id,
+            epoch: j.epoch,
+        });
+    }
+}
+
+/// Snapshot the observed rates and solve for the best Quickswap
+/// threshold on a WORKER thread (the PJRT solve takes seconds — it must
+/// never block the scheduler's event loop). The result comes back as
+/// `Cmd::ApplyTuned`. Returns false if no tune could be started
+/// (multiclass workload, not enough signal).
+fn spawn_tune(
+    wl: &Workload,
+    rates: &RateEstimator,
+    cfg: &CoordinatorConfig,
+    back: Sender<Cmd>,
+    reply: Option<Sender<Option<u32>>>,
+) -> bool {
+    let snapshot = (|| {
+        if !wl.is_one_or_all() {
+            return None;
+        }
+        let (mut light, mut heavy) = (None, None);
+        for (c, cl) in wl.classes.iter().enumerate() {
+            if cl.need == 1 {
+                light = Some(c);
+            } else {
+                heavy = Some(c);
+            }
+        }
+        let (lc, hc) = (light?, heavy?);
+        let (mut lam1, mut lamk) = (rates.rate(lc), rates.rate(hc));
+        let (mu1, muk) = (
+            1.0 / rates.mean_size(lc).max(1e-12),
+            1.0 / rates.mean_size(hc).max(1e-12),
+        );
+        if lam1 <= 0.0 || lamk <= 0.0 {
+            return None;
+        }
+        // Estimated rates can exceed the stability region (bursty
+        // submission or genuine overload). Tune for the clamped
+        // operating point ρ = 0.95 instead of refusing: the optimal ℓ
+        // is insensitive to the exact ρ near saturation (Fig 2).
+        let rho = lam1 / (wl.k as f64 * mu1) + lamk / muk;
+        if rho >= 0.95 {
+            let scale = 0.95 / rho;
+            lam1 *= scale;
+            lamk *= scale;
+        }
+        Some((lam1, lamk, mu1, muk))
+    })();
+    let Some((lam1, lamk, mu1, muk)) = snapshot else {
+        return false;
+    };
+    let (k, use_artifact, iters) = (wl.k, cfg.use_artifact, cfg.solver_iters);
+    std::thread::Builder::new()
+        .name("qs-tune".into())
+        .spawn(move || {
+            let ell = solve_threshold(k, lam1, lamk, mu1, muk, use_artifact, iters);
+            let _ = back.send(Cmd::ApplyTuned { ell, reply });
+        })
+        .is_ok()
+}
+
+/// The tune computation itself: PJRT solver artifact when available,
+/// native Theorem-2 calculator otherwise.
+fn solve_threshold(
+    k: u32,
+    lam1: f64,
+    lamk: f64,
+    mu1: f64,
+    muk: f64,
+    use_artifact: bool,
+    iters: i32,
+) -> Option<u32> {
+    if use_artifact {
+        let tuned = Runtime::new(Runtime::default_dir())
+            .ok()
+            .and_then(|rt| SolverArtifact::load(&rt, k).ok())
+            .and_then(|solver| {
+                solver
+                    .autotune(lam1, lamk, mu1, muk, iters, false)
+                    .ok()
+                    .map(|(ell, _)| ell)
+            });
+        if tuned.is_some() {
+            return tuned;
+        }
+    }
+    analysis::best_threshold(k, lam1, lamk, mu1, muk, false).map(|(e, _)| e)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::Dist;
+    use crate::workload::ClassSpec;
+
+    fn wl() -> Workload {
+        Workload::new(
+            4,
+            vec![
+                ClassSpec::new(1, 1.0, Dist::exp_mean(1.0)),
+                ClassSpec::new(4, 0.2, Dist::exp_mean(1.0)),
+            ],
+        )
+    }
+
+    #[test]
+    fn submits_complete_and_report() {
+        let w = wl();
+        let policy = crate::policy::by_name("msfq:3", &w).unwrap();
+        let coord = Coordinator::spawn(
+            &w,
+            policy,
+            CoordinatorConfig {
+                time_scale: 5e-4, // 1.0 job size = 0.5 ms
+                ..Default::default()
+            },
+        );
+        let h = coord.handle();
+        for i in 0..50 {
+            h.submit(if i % 5 == 0 { 1 } else { 0 }, 1.0);
+        }
+        assert!(h.drain(Duration::from_secs(20)), "did not drain");
+        let s = h.stats().unwrap();
+        assert_eq!(s.completed, 50);
+        assert_eq!(s.in_system, 0);
+        assert!(s.mean_t > 0.0);
+        coord.join();
+    }
+}

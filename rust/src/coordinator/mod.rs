@@ -1,0 +1,20 @@
+//! The cluster-scheduler coordinator: a deployable daemon that admits
+//! multiserver jobs under any [`crate::policy::Policy`], executes them in
+//! scaled real time, exposes a TCP JSONL control API, and autotunes the
+//! Quickswap threshold online by invoking the AOT-compiled CTMC solver
+//! through PJRT (or the native Theorem-2 calculator as fallback).
+//!
+//! Threading model (std threads; the offline registry has no tokio —
+//! see DESIGN.md §4):
+//!   * scheduler thread — owns all mutable state, consumes a command
+//!     channel (submissions, completions, control ops);
+//!   * timer thread — fires job completions at their deadlines;
+//!   * TCP acceptor + per-connection threads — parse JSONL into commands.
+
+pub mod core;
+pub mod rates;
+pub mod tcp;
+
+pub use self::core::{Coordinator, CoordinatorConfig, CoordinatorHandle, StatsSnapshot};
+pub use rates::RateEstimator;
+pub use tcp::serve_tcp;

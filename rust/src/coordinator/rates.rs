@@ -1,0 +1,83 @@
+//! Online estimation of per-class arrival rates and mean sizes, feeding
+//! the Quickswap-threshold autotuner.
+
+use crate::util::stats::Welford;
+
+/// Windowless estimator: exact totals since the last `reset`, which the
+/// autotuner calls after each retune so estimates track the recent regime.
+#[derive(Clone, Debug)]
+pub struct RateEstimator {
+    start: f64,
+    now: f64,
+    arrivals: Vec<u64>,
+    sizes: Vec<Welford>,
+}
+
+impl RateEstimator {
+    pub fn new(num_classes: usize) -> RateEstimator {
+        RateEstimator {
+            start: 0.0,
+            now: 0.0,
+            arrivals: vec![0; num_classes],
+            sizes: vec![Welford::new(); num_classes],
+        }
+    }
+
+    pub fn observe_arrival(&mut self, t: f64, class: usize, size: f64) {
+        self.now = self.now.max(t);
+        self.arrivals[class] += 1;
+        self.sizes[class].push(size);
+    }
+
+    /// Observed arrival rate of `class` (jobs per unit virtual time).
+    pub fn rate(&self, class: usize) -> f64 {
+        let span = self.now - self.start;
+        if span <= 0.0 {
+            return 0.0;
+        }
+        self.arrivals[class] as f64 / span
+    }
+
+    /// Observed mean size (NaN until a sample arrives).
+    pub fn mean_size(&self, class: usize) -> f64 {
+        self.sizes[class].mean()
+    }
+
+    pub fn total_arrivals(&self) -> u64 {
+        self.arrivals.iter().sum()
+    }
+
+    /// Enough signal to retune? Require samples in every class.
+    pub fn ready(&self, min_per_class: u64) -> bool {
+        self.arrivals.iter().all(|&a| a >= min_per_class)
+    }
+
+    pub fn reset(&mut self, t: f64) {
+        let n = self.arrivals.len();
+        self.start = t;
+        self.now = t;
+        self.arrivals = vec![0; n];
+        self.sizes = vec![Welford::new(); n];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn estimates_rates_and_sizes() {
+        let mut e = RateEstimator::new(2);
+        for i in 0..100 {
+            e.observe_arrival(i as f64 * 0.1, 0, 2.0);
+        }
+        e.observe_arrival(10.0, 1, 5.0);
+        assert!((e.rate(0) - 10.0).abs() < 0.5, "{}", e.rate(0));
+        assert!((e.mean_size(0) - 2.0).abs() < 1e-12);
+        assert!((e.mean_size(1) - 5.0).abs() < 1e-12);
+        assert!(e.ready(1));
+        assert!(!e.ready(2));
+        e.reset(20.0);
+        assert_eq!(e.total_arrivals(), 0);
+    }
+}

@@ -1,0 +1,150 @@
+//! TCP JSONL control API for the coordinator.
+//!
+//! One JSON object per line. Requests:
+//!   {"op":"submit","class":0,"size":1.5}      → {"ok":true,"id":N}
+//!   {"op":"stats"}                            → {"ok":true, ...snapshot}
+//!   {"op":"autotune"}                         → {"ok":true,"ell":L|null}
+//!   {"op":"ping"}                             → {"ok":true,"pong":true}
+//! Malformed input → {"ok":false,"error":"..."} (connection stays open).
+
+use crate::coordinator::core::CoordinatorHandle;
+use crate::util::json::Value;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+
+/// Serve the coordinator API on `addr` (e.g. "127.0.0.1:0"). Returns the
+/// bound address; the acceptor runs on a background thread until the
+/// process exits or the listener errors out.
+pub fn serve_tcp(addr: &str, handle: CoordinatorHandle) -> anyhow::Result<std::net::SocketAddr> {
+    let listener = TcpListener::bind(addr)?;
+    let bound = listener.local_addr()?;
+    std::thread::Builder::new()
+        .name("qs-accept".into())
+        .spawn(move || {
+            for conn in listener.incoming() {
+                match conn {
+                    Ok(stream) => {
+                        let h = handle.clone();
+                        let _ = std::thread::Builder::new()
+                            .name("qs-conn".into())
+                            .spawn(move || handle_conn(stream, h));
+                    }
+                    Err(_) => break,
+                }
+            }
+        })?;
+    Ok(bound)
+}
+
+fn handle_conn(stream: TcpStream, handle: CoordinatorHandle) {
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = match line {
+            Ok(l) => l,
+            Err(_) => return,
+        };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let resp = respond(&line, &handle);
+        if writeln!(writer, "{resp}").is_err() {
+            return;
+        }
+    }
+}
+
+fn err(msg: &str) -> Value {
+    Value::obj().set("ok", false).set("error", msg)
+}
+
+fn respond(line: &str, handle: &CoordinatorHandle) -> Value {
+    let req = match Value::parse(line) {
+        Ok(v) => v,
+        Err(e) => return err(&format!("bad json: {e}")),
+    };
+    match req.get("op").and_then(|o| o.as_str()) {
+        Some("ping") => Value::obj().set("ok", true).set("pong", true),
+        Some("submit") => {
+            let class = match req.get("class").and_then(|c| c.as_u64()) {
+                Some(c) => c as usize,
+                None => return err("submit needs integer 'class'"),
+            };
+            let size = req.get("size").and_then(|s| s.as_f64()).unwrap_or(1.0);
+            if size <= 0.0 || !size.is_finite() {
+                return err("'size' must be positive");
+            }
+            match handle.submit_wait(class, size) {
+                Some(id) => Value::obj().set("ok", true).set("id", id),
+                None => err("coordinator unavailable"),
+            }
+        }
+        Some("stats") => match handle.stats() {
+            Some(s) => {
+                let per_class: Vec<Value> = s
+                    .per_class
+                    .iter()
+                    .map(|&(n, t, sz)| {
+                        Value::obj()
+                            .set("count", n)
+                            .set("mean_t", if t.is_nan() { 0.0 } else { t })
+                            .set("mean_size", if sz.is_nan() { 0.0 } else { sz })
+                    })
+                    .collect();
+                let mut v = Value::obj()
+                    .set("ok", true)
+                    .set("policy", s.policy.as_str())
+                    .set("submitted", s.submitted)
+                    .set("completed", s.completed)
+                    .set("in_system", s.in_system)
+                    .set("used", s.used_servers)
+                    .set("k", s.k)
+                    .set("mean_t", if s.mean_t.is_nan() { 0.0 } else { s.mean_t })
+                    .set(
+                        "weighted_t",
+                        if s.weighted_t.is_nan() { 0.0 } else { s.weighted_t },
+                    )
+                    .set("retunes", s.retunes)
+                    .set("per_class", per_class);
+                if let Some(ell) = s.current_ell {
+                    v = v.set("ell", ell as u64);
+                }
+                v
+            }
+            None => err("coordinator unavailable"),
+        },
+        Some("autotune") => match handle.autotune() {
+            Some(ell) => Value::obj().set("ok", true).set("ell", ell as u64),
+            None => Value::obj().set("ok", true).set("ell", Value::Null),
+        },
+        Some(other) => err(&format!("unknown op '{other}'")),
+        None => err("missing 'op'"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn error_paths_are_json() {
+        // Exercise respond() without a live coordinator where possible.
+        let (tx, _rx) = std::sync::mpsc::channel();
+        let h = CoordinatorHandle::test_only(tx);
+        assert_eq!(respond("{", &h).get("ok").unwrap().as_bool(), Some(false));
+        assert_eq!(
+            respond(r#"{"op":"nope"}"#, &h).get("ok").unwrap().as_bool(),
+            Some(false)
+        );
+        assert_eq!(
+            respond(r#"{"op":"submit"}"#, &h)
+                .get("ok")
+                .unwrap()
+                .as_bool(),
+            Some(false)
+        );
+    }
+}

@@ -1,0 +1,299 @@
+//! One harness per paper figure. See DESIGN.md §3 for the experiment
+//! index and EXPERIMENTS.md for recorded paper-vs-measured outcomes.
+
+use crate::analysis::{analyze, MsfqParams};
+use crate::experiments::{print_sweep, sweep, write_sweep_csv, Point, Scale};
+use crate::sim::{Engine, SimConfig, TimeseriesSpec};
+use crate::util::csv::CsvWriter;
+use crate::util::rng::Rng;
+use crate::workload::{borg::borg_workload, SyntheticSource, Workload};
+
+/// The paper's one-or-all configuration (Figs 1–4): k=32, 90% lights,
+/// unit mean sizes.
+pub fn one_or_all_at(lambda: f64) -> Workload {
+    Workload::one_or_all(32, lambda, 0.9, 1.0, 1.0)
+}
+
+fn results_path(name: &str) -> String {
+    std::fs::create_dir_all("results").ok();
+    format!("results/{name}")
+}
+
+// ---------------------------------------------------------------------
+// Fig 1: number of jobs in system over time, MSF vs MSFQ(k−1).
+// ---------------------------------------------------------------------
+pub struct Fig1Out {
+    pub policy: String,
+    pub mean_n: f64,
+    pub peak_n: u32,
+    pub samples: usize,
+}
+
+pub fn fig1(scale: Scale) -> Vec<Fig1Out> {
+    let wl = one_or_all_at(7.5);
+    let mut out = Vec::new();
+    for policy in ["msf", "msfq:31"] {
+        let cfg = SimConfig {
+            target_completions: scale.completions.min(400_000),
+            warmup_completions: scale.completions.min(400_000) / 5,
+            timeseries: Some(TimeseriesSpec {
+                dt: 1.0,
+                max_samples: 20_000,
+            }),
+            ..Default::default()
+        };
+        let mut engine = Engine::new(&wl, cfg.clone());
+        let mut src = SyntheticSource::new(wl.clone());
+        let mut rng = Rng::new(scale.seed);
+        let mut pol = crate::policy::by_name(policy, &wl).unwrap();
+        let r = engine.run(&mut src, pol.as_mut(), &mut rng);
+        let ts = r.timeseries.as_ref().unwrap();
+        let total: Vec<u32> = (0..ts.len())
+            .map(|i| ts.per_class.iter().map(|c| c[i]).sum())
+            .collect();
+        let mean_n = total.iter().map(|&x| x as f64).sum::<f64>() / total.len().max(1) as f64;
+        let peak_n = total.iter().copied().max().unwrap_or(0);
+        let tag = if policy == "msf" { "msf" } else { "msfq" };
+        ts.write_csv(
+            results_path(&format!("fig1_{tag}.csv")),
+            &wl.classes.iter().map(|c| c.name.clone()).collect::<Vec<_>>(),
+        )
+        .ok();
+        println!(
+            "fig1 {:<10} mean #jobs = {:>9.1}   peak = {:>6}   ({} samples)",
+            r.policy, mean_n, peak_n, total.len()
+        );
+        out.push(Fig1Out {
+            policy: r.policy.clone(),
+            mean_n,
+            peak_n,
+            samples: total.len(),
+        });
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// Fig 2: E[T] vs threshold ℓ (simulation + Theorem-2 analysis).
+// ---------------------------------------------------------------------
+pub fn fig2(scale: Scale, lambda: f64, ells: &[u32]) -> Vec<(u32, f64, f64)> {
+    let wl = one_or_all_at(lambda);
+    let policies: Vec<String> = ells.iter().map(|e| format!("msfq:{e}")).collect();
+    let policy_refs: Vec<&str> = policies.iter().map(|s| s.as_str()).collect();
+    let cfg = scale.config();
+    let pts = sweep(&one_or_all_at, &[lambda], &policy_refs, &cfg, scale.seed);
+    let mut rows = Vec::new();
+    let mut w = CsvWriter::create(
+        results_path("fig2_threshold.csv"),
+        &["ell", "et_sim", "et_analysis"],
+    )
+    .unwrap();
+    println!("\nfig2: E[T] vs ℓ at λ={lambda} (k=32, p1=0.9)");
+    for (i, &ell) in ells.iter().enumerate() {
+        let sim_et = pts
+            .iter()
+            .find(|p| p.policy == policies[i])
+            .map(|p| p.result.mean_t_all)
+            .unwrap_or(f64::NAN);
+        let ana = analyze(&MsfqParams::standard(wl.k, ell, lambda, 0.9))
+            .map(|a| a.et)
+            .unwrap_or(f64::NAN);
+        println!("  ℓ={ell:<3} sim={sim_et:>10.2}  analysis={ana:>10.2}");
+        w.row_f64(&[ell as f64, sim_et, ana]).unwrap();
+        rows.push((ell, sim_et, ana));
+    }
+    w.flush().unwrap();
+    rows
+}
+
+// ---------------------------------------------------------------------
+// Fig 3: E[T]/E[T^w]/per-class vs λ for all one-or-all policies, with
+// the analysis overlay for MSF and MSFQ.
+// ---------------------------------------------------------------------
+pub fn fig3(scale: Scale, lambdas: &[f64]) -> Vec<Point> {
+    let policies = ["msf", "msfq:31", "fcfs", "first-fit", "nmsr"];
+    let cfg = scale.config();
+    let pts = sweep(&one_or_all_at, lambdas, &policies, &cfg, scale.seed);
+    let wl = one_or_all_at(1.0);
+    let names: Vec<String> = wl.classes.iter().map(|c| c.name.clone()).collect();
+    write_sweep_csv(&results_path("fig3_one_or_all.csv"), &pts, &names).ok();
+    // Analysis overlay (Theorem 2): MSFQ(31) and MSF(= ℓ0).
+    let mut w = CsvWriter::create(
+        results_path("fig3_analysis.csv"),
+        &["lambda", "policy", "et", "etw", "et_light", "et_heavy"],
+    )
+    .unwrap();
+    for &l in lambdas {
+        for (name, ell) in [("analysis-msfq", 31u32), ("analysis-msf", 0u32)] {
+            if let Ok(a) = analyze(&MsfqParams::standard(32, ell, l, 0.9)) {
+                w.row(&[
+                    format!("{l}"),
+                    name.into(),
+                    format!("{}", a.et),
+                    format!("{}", a.etw),
+                    format!("{}", a.et_light),
+                    format!("{}", a.et_heavy),
+                ])
+                .unwrap();
+            }
+        }
+    }
+    w.flush().unwrap();
+    print_sweep("fig3: one-or-all, k=32, p1=0.9 (unweighted)", &pts, false);
+    print_sweep("fig3: one-or-all (weighted)", &pts, true);
+    pts
+}
+
+// ---------------------------------------------------------------------
+// Fig 4: phase durations vs λ, MSF vs MSFQ.
+// ---------------------------------------------------------------------
+pub struct Fig4Row {
+    pub lambda: f64,
+    pub policy: String,
+    /// Mean duration of phases 1..4 (index 0 unused).
+    pub mean: [f64; 5],
+}
+
+pub fn fig4(scale: Scale, lambdas: &[f64]) -> Vec<Fig4Row> {
+    let mut rows = Vec::new();
+    let mut w = CsvWriter::create(
+        results_path("fig4_phases.csv"),
+        &["lambda", "policy", "h1", "h2", "h3", "h4"],
+    )
+    .unwrap();
+    for &l in lambdas {
+        for policy in ["msf", "msfq:31"] {
+            let wl = one_or_all_at(l);
+            let cfg = SimConfig {
+                track_phases: true,
+                ..scale.config()
+            };
+            let r = crate::sim::run_named(&wl, policy, &cfg, scale.seed).unwrap();
+            let ph = r.phases.as_ref().unwrap();
+            let mean = [
+                f64::NAN,
+                ph.mean(1),
+                ph.mean(2),
+                ph.mean(3),
+                ph.mean(4),
+            ];
+            println!(
+                "fig4 λ={l:<5} {:<12} E[H1]={:>9.2} E[H2]={:>9.2} E[H3]={:>7.3} E[H4]={:>7.3}",
+                r.policy, mean[1], mean[2], mean[3], mean[4]
+            );
+            w.row(&[
+                crate::util::csv::format_g(l),
+                r.policy.clone(),
+                crate::util::csv::format_g(mean[1]),
+                crate::util::csv::format_g(mean[2]),
+                crate::util::csv::format_g(mean[3]),
+                crate::util::csv::format_g(mean[4]),
+            ])
+            .ok();
+            rows.push(Fig4Row {
+                lambda: l,
+                policy: r.policy.clone(),
+                mean,
+            });
+        }
+    }
+    w.flush().ok();
+    rows
+}
+
+// ---------------------------------------------------------------------
+// Fig 5: weighted E[T] vs λ in the 4-class system (k=15).
+// ---------------------------------------------------------------------
+pub fn fig5(scale: Scale, lambdas: &[f64]) -> Vec<Point> {
+    let policies = ["static-qs", "adaptive-qs", "msf", "first-fit", "fcfs"];
+    let cfg = scale.config();
+    let pts = sweep(&Workload::four_class, lambdas, &policies, &cfg, scale.seed);
+    let names: Vec<String> = Workload::four_class(1.0)
+        .classes
+        .iter()
+        .map(|c| c.name.clone())
+        .collect();
+    write_sweep_csv(&results_path("fig5_multiclass.csv"), &pts, &names).ok();
+    print_sweep("fig5: 4 classes, k=15 (weighted)", &pts, true);
+    pts
+}
+
+// ---------------------------------------------------------------------
+// Fig 6 / C.7 / D.8: Borg-derived workload (k=2048, 26 classes).
+// ---------------------------------------------------------------------
+pub fn fig6(scale: Scale, lambdas: &[f64], include_preemptive: bool) -> Vec<Point> {
+    let mut policies = vec!["adaptive-qs", "static-qs", "msf", "first-fit"];
+    if include_preemptive {
+        policies.push("server-filling");
+    }
+    let cfg = scale.config();
+    let pts = sweep(&borg_workload, lambdas, &policies, &cfg, scale.seed);
+    let names: Vec<String> = borg_workload(1.0)
+        .classes
+        .iter()
+        .map(|c| c.name.clone())
+        .collect();
+    let file = if include_preemptive {
+        "fig8_preemptive.csv"
+    } else {
+        "fig6_borg.csv"
+    };
+    write_sweep_csv(&results_path(file), &pts, &names).ok();
+    print_sweep(
+        if include_preemptive {
+            "fig D.8: Borg workload incl. preemptive ServerFilling"
+        } else {
+            "fig6: Borg workload (weighted)"
+        },
+        &pts,
+        true,
+    );
+    pts
+}
+
+/// C.7: fairness view of the Borg sweep — per-class extremes + Jain index.
+pub struct FairnessRow {
+    pub lambda: f64,
+    pub policy: String,
+    pub et: f64,
+    pub et_lightest: f64,
+    pub et_heaviest: f64,
+    pub jain: f64,
+}
+
+pub fn fig7(points: &[Point]) -> Vec<FairnessRow> {
+    let mut rows = Vec::new();
+    let mut w = CsvWriter::create(
+        results_path("fig7_fairness.csv"),
+        &["lambda", "policy", "et", "et_lightest", "et_heaviest", "jain"],
+    )
+    .unwrap();
+    println!("\nfig C.7: fairness (Borg workload)");
+    for p in points {
+        let nc = p.result.mean_t.len();
+        let row = FairnessRow {
+            lambda: p.lambda,
+            policy: p.policy.clone(),
+            et: p.result.mean_t_all,
+            et_lightest: p.result.mean_t[0],
+            et_heaviest: p.result.mean_t[nc - 1],
+            jain: p.result.jain,
+        };
+        println!(
+            "  λ={:<5} {:<16} E[T]={:>9.2} light={:>8.2} heavy={:>11.2} jain={:.3}",
+            row.lambda, row.policy, row.et, row.et_lightest, row.et_heaviest, row.jain
+        );
+        w.row(&[
+            format!("{}", row.lambda),
+            row.policy.clone(),
+            crate::util::csv::format_g(row.et),
+            crate::util::csv::format_g(row.et_lightest),
+            crate::util::csv::format_g(row.et_heaviest),
+            crate::util::csv::format_g(row.jain),
+        ])
+        .ok();
+        rows.push(row);
+    }
+    w.flush().ok();
+    rows
+}

@@ -1,0 +1,189 @@
+//! Experiment harnesses: one entry point per table/figure in the paper's
+//! evaluation (§6, Appendices C–D). Each harness runs the simulations
+//! (in parallel across (λ, policy) points), prints the paper-style rows,
+//! and writes CSV series under `results/`.
+//!
+//! Scale: `Scale::full()` reproduces the paper-quality curves (minutes);
+//! `Scale::bench()` is the reduced-but-faithful version the `cargo
+//! bench` targets run; `Scale::smoke()` is for tests.
+
+pub mod figures;
+
+use crate::sim::{SimConfig, SimResult};
+use crate::workload::Workload;
+
+/// Run-length control shared by all harnesses.
+#[derive(Clone, Copy, Debug)]
+pub struct Scale {
+    pub completions: u64,
+    pub seed: u64,
+    pub threads: usize,
+}
+
+impl Scale {
+    pub fn full() -> Scale {
+        Scale {
+            completions: 2_000_000,
+            seed: 20250710,
+            threads: default_threads(),
+        }
+    }
+
+    pub fn bench() -> Scale {
+        Scale {
+            completions: 200_000,
+            seed: 20250710,
+            threads: default_threads(),
+        }
+    }
+
+    pub fn smoke() -> Scale {
+        Scale {
+            completions: 30_000,
+            seed: 20250710,
+            threads: default_threads(),
+        }
+    }
+
+    /// From the environment: QS_SCALE=full|bench|smoke (default bench).
+    pub fn from_env() -> Scale {
+        match std::env::var("QS_SCALE").as_deref() {
+            Ok("full") => Scale::full(),
+            Ok("smoke") => Scale::smoke(),
+            _ => Scale::bench(),
+        }
+    }
+
+    pub fn config(&self) -> SimConfig {
+        SimConfig::default().with_completions(self.completions)
+    }
+}
+
+fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+}
+
+/// One simulation point in a sweep.
+#[derive(Clone, Debug)]
+pub struct Point {
+    pub lambda: f64,
+    pub policy: String,
+    pub result: SimResult,
+}
+
+/// Run `policies × lambdas` simulations in parallel threads.
+pub fn sweep(
+    wl_at: &(dyn Fn(f64) -> Workload + Sync),
+    lambdas: &[f64],
+    policies: &[&str],
+    cfg: &SimConfig,
+    seed: u64,
+) -> Vec<Point> {
+    let mut jobs: Vec<(f64, String)> = Vec::new();
+    for &l in lambdas {
+        for &p in policies {
+            jobs.push((l, p.to_string()));
+        }
+    }
+    let results = std::sync::Mutex::new(Vec::<Point>::new());
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    let threads = default_threads().min(jobs.len().max(1));
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if i >= jobs.len() {
+                    break;
+                }
+                let (lambda, policy) = &jobs[i];
+                let wl = wl_at(*lambda);
+                // Derive a per-point seed so replications differ but are
+                // reproducible.
+                let pseed = seed
+                    .wrapping_mul(0x9E3779B97F4A7C15)
+                    .wrapping_add(i as u64);
+                match crate::sim::run_named(&wl, policy, cfg, pseed) {
+                    Ok(result) => results.lock().unwrap().push(Point {
+                        lambda: *lambda,
+                        policy: policy.clone(),
+                        result,
+                    }),
+                    Err(e) => eprintln!("point ({lambda}, {policy}) failed: {e}"),
+                }
+            });
+        }
+    });
+    let mut out = results.into_inner().unwrap();
+    out.sort_by(|a, b| {
+        a.policy
+            .cmp(&b.policy)
+            .then(a.lambda.partial_cmp(&b.lambda).unwrap())
+    });
+    out
+}
+
+/// Write a sweep as CSV: lambda, policy, et, etw, ci95, jain, util, and
+/// per-class means.
+pub fn write_sweep_csv(
+    path: &str,
+    points: &[Point],
+    class_names: &[String],
+) -> std::io::Result<()> {
+    let mut header: Vec<String> = vec![
+        "lambda".into(),
+        "policy".into(),
+        "et".into(),
+        "etw".into(),
+        "ci95".into(),
+        "jain".into(),
+        "util".into(),
+    ];
+    header.extend(class_names.iter().map(|n| format!("et_{n}")));
+    let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut w = crate::util::csv::CsvWriter::create(path, &header_refs)?;
+    for p in points {
+        let mut row = vec![
+            crate::util::csv::format_g(p.lambda),
+            p.policy.clone(),
+            crate::util::csv::format_g(p.result.mean_t_all),
+            crate::util::csv::format_g(p.result.weighted_t),
+            crate::util::csv::format_g(p.result.ci95),
+            crate::util::csv::format_g(p.result.jain),
+            crate::util::csv::format_g(p.result.utilization),
+        ];
+        for c in 0..class_names.len() {
+            row.push(crate::util::csv::format_g(p.result.mean_t[c]));
+        }
+        w.row(&row)?;
+    }
+    w.flush()
+}
+
+/// Pretty-print a sweep grouped by λ.
+pub fn print_sweep(title: &str, points: &[Point], weighted: bool) {
+    println!("\n=== {title} ===");
+    let mut lambdas: Vec<f64> = points.iter().map(|p| p.lambda).collect();
+    lambdas.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    lambdas.dedup();
+    for l in lambdas {
+        println!("λ = {l}:");
+        for p in points.iter().filter(|p| p.lambda == l) {
+            let v = if weighted {
+                p.result.weighted_t
+            } else {
+                p.result.mean_t_all
+            };
+            println!(
+                "  {:<16} {}[T] = {:>12.3}   (±{:.3}, util {:.3}, jain {:.3})",
+                p.policy,
+                if weighted { "E_w" } else { "E" },
+                v,
+                p.result.ci95,
+                p.result.utilization,
+                p.result.jain
+            );
+        }
+    }
+}

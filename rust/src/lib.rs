@@ -1,0 +1,35 @@
+//! # Quickswap — nonpreemptive multiserver-job scheduling
+//!
+//! A reproduction of *"Improving Nonpreemptive Multiserver Job Scheduling
+//! with Quickswap"* (Chen et al., 2025) as a deployable framework:
+//!
+//! * [`sim`] — discrete-event simulation engine for multiserver-job (MSJ)
+//!   systems with per-class response-time statistics.
+//! * [`policy`] — the paper's Quickswap policy family (MSFQ, Static
+//!   Quickswap, Adaptive Quickswap) and every baseline it is evaluated
+//!   against (FCFS, First-Fit, MSF, nMSR, preemptive ServerFilling).
+//! * [`analysis`] — the Theorem-2 analytical calculator (transform moments
+//!   via second-order Taylor arithmetic) and a native CTMC solver.
+//! * [`workload`] — synthetic and Borg-trace-derived workload generators.
+//! * [`coordinator`] — a cluster-scheduler daemon with a TCP JSONL API and
+//!   an online Quickswap-threshold autotuner.
+//! * [`runtime`] — loads the AOT-compiled JAX/Pallas CTMC solver
+//!   (`artifacts/*.hlo.txt`) through PJRT and exposes typed wrappers.
+//! * [`experiments`] — one harness per paper figure/table.
+//!
+//! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+pub mod analysis;
+pub mod config;
+pub mod coordinator;
+pub mod dist;
+pub mod experiments;
+pub mod policy;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+pub mod workload;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,305 @@
+//! `quickswap` — CLI for the multiserver-job scheduling framework.
+//!
+//! Subcommands:
+//!   simulate   run one policy on a workload, print metrics
+//!   sweep      λ × policy sweep, CSV output
+//!   analyze    Theorem-2 calculator for MSFQ (one-or-all)
+//!   solve      stationary CTMC solve (native sparse or PJRT artifact)
+//!   autotune   pick the best quickswap threshold ℓ for given rates
+//!   fig        reproduce a paper figure (1..8)
+//!   serve      start the coordinator daemon (TCP JSONL API)
+//!   trace      generate a workload trace CSV
+
+use quickswap::analysis::{self, MsfqCtmc, MsfqParams};
+use quickswap::config::parse_workload;
+use quickswap::coordinator::{serve_tcp, Coordinator, CoordinatorConfig};
+use quickswap::experiments::{figures, Scale};
+use quickswap::sim::SimConfig;
+use quickswap::util::cli::{render_help, Args, OptSpec};
+use quickswap::util::json::Value;
+use quickswap::workload::{borg::borg_workload, trace::Trace, Workload};
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() || argv[0] == "--help" || argv[0] == "help" {
+        print!("{}", help());
+        return;
+    }
+    let cmd = argv[0].clone();
+    let args = match Args::parse(argv.into_iter().skip(1)) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let result = match cmd.as_str() {
+        "simulate" => cmd_simulate(&args),
+        "sweep" => cmd_sweep(&args),
+        "analyze" => cmd_analyze(&args),
+        "solve" => cmd_solve(&args),
+        "autotune" => cmd_autotune(&args),
+        "fig" => cmd_fig(&args),
+        "serve" => cmd_serve(&args),
+        "trace" => cmd_trace(&args),
+        other => {
+            eprintln!("unknown command '{other}'\n{}", help());
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn help() -> String {
+    render_help(
+        "quickswap",
+        "nonpreemptive multiserver-job scheduling with Quickswap",
+        &[
+            ("simulate", "run one policy on a workload"),
+            ("sweep", "lambda × policy sweep to CSV"),
+            ("analyze", "Theorem-2 MSFQ calculator"),
+            ("solve", "stationary CTMC solve (native or PJRT artifact)"),
+            ("autotune", "best quickswap threshold for given rates"),
+            ("fig", "reproduce a paper figure: --id 1..8"),
+            ("serve", "start the coordinator daemon"),
+            ("trace", "generate a workload trace CSV"),
+        ],
+        &[
+            OptSpec { name: "workload", help: "one_or_all|four_class|borg or JSON file", default: Some("one_or_all".into()) },
+            OptSpec { name: "k", help: "servers (one_or_all)", default: Some("32".into()) },
+            OptSpec { name: "lambda", help: "total arrival rate", default: Some("7.5".into()) },
+            OptSpec { name: "p1", help: "light-job fraction", default: Some("0.9".into()) },
+            OptSpec { name: "policy", help: "fcfs|first-fit|msf|msfq[:ell]|static-qs|adaptive-qs|nmsr|server-filling", default: Some("msfq".into()) },
+            OptSpec { name: "completions", help: "measured completions", default: Some("1000000".into()) },
+            OptSpec { name: "seed", help: "RNG seed", default: Some("1".into()) },
+        ],
+    )
+}
+
+fn workload_from(args: &Args) -> anyhow::Result<Workload> {
+    let kind = args.str_or("workload", "one_or_all");
+    let lambda = args.f64_or("lambda", 7.5)?;
+    match kind.as_str() {
+        "one_or_all" => {
+            let k = args.u64_or("k", 32)? as u32;
+            Ok(Workload::one_or_all(
+                k,
+                lambda,
+                args.f64_or("p1", 0.9)?,
+                args.f64_or("mu1", 1.0)?,
+                args.f64_or("muk", 1.0)?,
+            ))
+        }
+        "four_class" => Ok(Workload::four_class(lambda)),
+        "borg" => Ok(borg_workload(lambda)),
+        path => {
+            let text = std::fs::read_to_string(path)?;
+            let v = Value::parse(&text)?;
+            let wl = parse_workload(&v)?;
+            Ok(wl.with_total_rate(lambda))
+        }
+    }
+}
+
+fn sim_config_from(args: &Args) -> anyhow::Result<SimConfig> {
+    let completions = args.u64_or("completions", 1_000_000)?;
+    let mut cfg = SimConfig::default().with_completions(completions);
+    cfg.track_phases = args.flag("phases");
+    Ok(cfg)
+}
+
+fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
+    let wl = workload_from(args)?;
+    let cfg = sim_config_from(args)?;
+    let seed = args.u64_or("seed", 1)?;
+    let policy = args.str_or("policy", "msfq");
+    let r = quickswap::sim::run_named(&wl, &policy, &cfg, seed)?;
+    println!("{}", r.summary());
+    for (c, cl) in wl.classes.iter().enumerate() {
+        println!(
+            "  class {:<8} (need {:>4}): E[T] = {:>10.3}  n = {:>9}  E[N] = {:>9.2}",
+            cl.name, cl.need, r.mean_t[c], r.count[c], r.mean_n[c]
+        );
+    }
+    if let Some(ph) = &r.phases {
+        for i in 1..=4 {
+            println!(
+                "  phase {i}: E[H] = {:>9.3} (visits {:>7}, {:>5.1}% of time)",
+                ph.mean(i),
+                ph.visits[i],
+                100.0 * ph.fraction(i)
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
+    let lambdas = args.f64_list("lambdas", &[4.0, 5.0, 6.0, 7.0, 7.5])?;
+    let policies_s = args.str_or("policies", "msf,msfq:31,fcfs,first-fit");
+    let policies: Vec<&str> = policies_s.split(',').map(|s| s.trim()).collect();
+    let cfg = sim_config_from(args)?;
+    let seed = args.u64_or("seed", 1)?;
+    let kind = args.str_or("workload", "one_or_all");
+    let k = args.u64_or("k", 32)? as u32;
+    let p1 = args.f64_or("p1", 0.9)?;
+    let builder = move |l: f64| -> Workload {
+        match kind.as_str() {
+            "four_class" => Workload::four_class(l),
+            "borg" => borg_workload(l),
+            _ => Workload::one_or_all(k, l, p1, 1.0, 1.0),
+        }
+    };
+    let pts = quickswap::experiments::sweep(&builder, &lambdas, &policies, &cfg, seed);
+    quickswap::experiments::print_sweep("sweep", &pts, args.flag("weighted"));
+    if let Some(out) = args.get("out") {
+        let names: Vec<String> = builder(1.0).classes.iter().map(|c| c.name.clone()).collect();
+        quickswap::experiments::write_sweep_csv(out, &pts, &names)?;
+        println!("wrote {out}");
+    }
+    Ok(())
+}
+
+fn cmd_analyze(args: &Args) -> anyhow::Result<()> {
+    let k = args.u64_or("k", 32)? as u32;
+    let lambda = args.f64_or("lambda", 7.5)?;
+    let p1 = args.f64_or("p1", 0.9)?;
+    let ell = args.u64_or("ell", (k - 1) as u64)? as u32;
+    let a = analysis::analyze(&MsfqParams::standard(k, ell, lambda, p1))
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    println!("MSFQ analysis (Theorem 2): k={k} ell={ell} lambda={lambda} p1={p1}");
+    println!("  E[T]       = {:>12.4}", a.et);
+    println!("  E[T] light = {:>12.4}", a.et_light);
+    println!("  E[T] heavy = {:>12.4}", a.et_heavy);
+    println!("  E[T^w]     = {:>12.4}", a.etw);
+    for i in 1..=4 {
+        println!(
+            "  phase {i}: E[H]={:>10.4}  E[H^2]={:>12.4}  m={:.4}",
+            a.eh[i], a.eh2[i], a.m[i]
+        );
+    }
+    println!("  E[N1H]={:.3} E[N2L]={:.3}", a.en1h.0, a.en2l.0);
+    Ok(())
+}
+
+fn cmd_solve(args: &Args) -> anyhow::Result<()> {
+    let k = args.u64_or("k", 8)? as u32;
+    let lambda = args.f64_or("lambda", 4.4)?;
+    let p1 = args.f64_or("p1", 0.9)?;
+    let ell = args.u64_or("ell", (k - 1) as u64)? as u32;
+    let p = MsfqParams::standard(k, ell, lambda, p1);
+    if args.flag("artifact") {
+        let rt = quickswap::runtime::Runtime::new(quickswap::runtime::Runtime::default_dir())?;
+        let solver = quickswap::runtime::SolverArtifact::load(&rt, k)?;
+        let iters = args.u64_or("iters", 30_000)? as i32;
+        let m = solver.solve(ell, p.lam1, p.lamk, p.mu1, p.muk, iters)?;
+        println!("PJRT artifact solve (k={k}, ell={ell}, iters={iters}):");
+        println!("  E[T]={:.4} E[T1]={:.4} E[Tk]={:.4} E[T^w]={:.4}", m.et, m.et1, m.etk, m.etw);
+        println!("  m1={:.4} m23={:.4} m4={:.4} idle={:.4}", m.m1, m.m23, m.m4, m.idle);
+        println!("  residual={:.2e} mass={:.6} blocked=({:.1e},{:.1e})", m.residual, m.mass, m.blocked1, m.blockedk);
+    } else {
+        let n1 = args.u64_or("n1max", 8 * k as u64)? as usize;
+        let nk = args.u64_or("nkmax", (2 * k as u64).max(32))? as usize;
+        let iters = args.u64_or("iters", 200_000)? as usize;
+        let s = MsfqCtmc::new(&p, n1, nk).solve(iters, 1e-11);
+        println!("native CTMC solve (k={k}, ell={ell}, {n1}×{nk}):");
+        println!("  E[T]={:.4} E[T1]={:.4} E[Tk]={:.4} E[T^w]={:.4}", s.et, s.et1, s.etk, s.etw);
+        println!("  m1={:.4} m23={:.4} m4={:.4} idle={:.4}", s.m1, s.m23, s.m4, s.idle);
+        println!("  iters={} residual={:.2e} boundary={:.2e}", s.iters, s.residual, s.boundary_mass);
+    }
+    Ok(())
+}
+
+fn cmd_autotune(args: &Args) -> anyhow::Result<()> {
+    let k = args.u64_or("k", 32)? as u32;
+    let lambda = args.f64_or("lambda", 7.5)?;
+    let p1 = args.f64_or("p1", 0.9)?;
+    let p = MsfqParams::standard(k, 0, lambda, p1);
+    let weighted = args.flag("weighted");
+    let (ell, v) = analysis::best_threshold(k, p.lam1, p.lamk, p.mu1, p.muk, weighted)
+        .ok_or_else(|| anyhow::anyhow!("no stable threshold (system overloaded?)"))?;
+    println!("calculator: best ell = {ell} ({}[T] = {v:.4})", if weighted { "E_w" } else { "E" });
+    if args.flag("artifact") {
+        let rt = quickswap::runtime::Runtime::new(quickswap::runtime::Runtime::default_dir())?;
+        let solver = quickswap::runtime::SolverArtifact::load(&rt, k)?;
+        let iters = args.u64_or("iters", 30_000)? as i32;
+        let (aell, m) = solver.autotune(p.lam1, p.lamk, p.mu1, p.muk, iters, weighted)?;
+        println!("artifact:   best ell = {aell} (E[T] = {:.4})", m.et);
+    }
+    Ok(())
+}
+
+fn cmd_fig(args: &Args) -> anyhow::Result<()> {
+    let id = args.required("id")?.to_string();
+    let scale = Scale::from_env();
+    match id.as_str() {
+        "1" => {
+            figures::fig1(scale);
+        }
+        "2" => {
+            let lambda = args.f64_or("lambda", 7.5)?;
+            figures::fig2(scale, lambda, &[0, 1, 2, 4, 8, 16, 24, 31]);
+        }
+        "3" => {
+            let ls = args.f64_list("lambdas", &[4.0, 5.0, 6.0, 6.75, 7.25, 7.5])?;
+            figures::fig3(scale, &ls);
+        }
+        "4" => {
+            let ls = args.f64_list("lambdas", &[6.0, 6.75, 7.25, 7.5])?;
+            figures::fig4(scale, &ls);
+        }
+        "5" => {
+            let ls = args.f64_list("lambdas", &[2.0, 3.0, 4.0, 4.5, 4.75])?;
+            figures::fig5(scale, &ls);
+        }
+        "6" => {
+            let ls = args.f64_list("lambdas", &[2.0, 3.0, 4.0, 4.5])?;
+            let pts = figures::fig6(scale, &ls, false);
+            figures::fig7(&pts);
+        }
+        "7" => {
+            let ls = args.f64_list("lambdas", &[2.0, 3.0, 4.0, 4.5])?;
+            let pts = figures::fig6(scale, &ls, false);
+            figures::fig7(&pts);
+        }
+        "8" => {
+            let ls = args.f64_list("lambdas", &[2.0, 3.0, 4.0, 4.5])?;
+            figures::fig6(scale, &ls, true);
+        }
+        other => anyhow::bail!("unknown figure '{other}' (1..8)"),
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let wl = workload_from(args)?;
+    let policy = args.str_or("policy", "msfq");
+    let pol = quickswap::policy::by_name(&policy, &wl)?;
+    let cfg = CoordinatorConfig {
+        time_scale: args.f64_or("time-scale", 1e-3)?,
+        autotune_every: args.u64_or("autotune-every", 0)?,
+        use_artifact: !args.flag("no-artifact"),
+        solver_iters: args.u64_or("iters", 20_000)? as i32,
+    };
+    let coord = Coordinator::spawn(&wl, pol, cfg);
+    let addr = serve_tcp(&args.str_or("addr", "127.0.0.1:7077"), coord.handle())?;
+    println!("quickswap coordinator listening on {addr} (policy {policy}, k={})", wl.k);
+    println!("protocol: one JSON per line, e.g. {{\"op\":\"submit\",\"class\":0,\"size\":1.0}}");
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_trace(args: &Args) -> anyhow::Result<()> {
+    let wl = workload_from(args)?;
+    let n = args.u64_or("n", 100_000)? as usize;
+    let seed = args.u64_or("seed", 1)?;
+    let out = args.str_or("out", "results/trace.csv");
+    let tr = Trace::generate(&wl, n, seed);
+    tr.write_csv(&out)?;
+    println!("wrote {n} arrivals to {out}");
+    Ok(())
+}

@@ -1,0 +1,147 @@
+//! Adaptive Quickswap (§4.4): admit in MSF order during the working
+//! phase; quickswap to a draining phase when some class is waiting but
+//! not served while every in-service class has no waiting jobs (i.e.,
+//! continuing to backfill would only starve the waiting class). During
+//! the drain, only the largest-need queued job may enter; once it does,
+//! return to the working phase.
+
+use crate::policy::msf::msf_admit;
+use crate::policy::{Decision, PhaseLabel, Policy, SysView};
+
+#[derive(Debug, Default)]
+pub struct AdaptiveQuickswap {
+    draining: bool,
+    by_need: Vec<usize>,
+}
+
+impl AdaptiveQuickswap {
+    pub fn new() -> AdaptiveQuickswap {
+        AdaptiveQuickswap::default()
+    }
+
+    fn ensure_order(&mut self, needs: &[u32]) {
+        if self.by_need.len() != needs.len() {
+            let mut idx: Vec<usize> = (0..needs.len()).collect();
+            idx.sort_by_key(|&c| std::cmp::Reverse(needs[c]));
+            self.by_need = idx;
+        }
+    }
+
+    /// §4.4 trigger: ∃ class queued with nothing in service, and every
+    /// class in service has an empty queue.
+    fn trigger(&self, sys: &SysView<'_>) -> bool {
+        let mut starving = false;
+        for c in 0..sys.needs.len() {
+            if sys.queued[c] > 0 && sys.running[c] == 0 {
+                starving = true;
+            }
+            if sys.running[c] > 0 && sys.queued[c] > 0 {
+                return false; // an in-service class still has backlog
+            }
+        }
+        starving
+    }
+}
+
+impl Policy for AdaptiveQuickswap {
+    fn name(&self) -> String {
+        "AdaptiveQS".into()
+    }
+
+    fn schedule(&mut self, sys: &SysView<'_>, out: &mut Decision) {
+        self.ensure_order(sys.needs);
+        if self.draining {
+            // Only the largest-need queued job may enter service.
+            let target = self
+                .by_need
+                .iter()
+                .copied()
+                .find(|&c| sys.queued[c] > 0);
+            match target {
+                None => {
+                    self.draining = false; // queue empty: resume working
+                }
+                Some(c) => {
+                    if sys.needs[c] <= sys.free() {
+                        if let Some(id) = sys.queued_head(c) {
+                            out.admit.push(id);
+                            self.draining = false;
+                        }
+                    }
+                }
+            }
+            return;
+        }
+        // Working phase: MSF-order admission.
+        msf_admit(sys, &self.by_need, out);
+        if out.admit.is_empty() && self.trigger(sys) {
+            self.draining = true;
+        }
+    }
+
+    fn phase_label(&self, _sys: &SysView<'_>) -> PhaseLabel {
+        if self.draining {
+            4
+        } else {
+            2
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policy::test_support::Harness;
+
+    /// Lights keep the system busy; a heavy waits. Once no light is
+    /// queued, the trigger fires and lights stop entering, letting the
+    /// heavy in after the drain.
+    #[test]
+    fn quickswaps_to_starving_heavy() {
+        let k = 4;
+        let mut h = Harness::new(k, &[1, 4]);
+        let mut p = AdaptiveQuickswap::new();
+        let lights: Vec<_> = (0..4).map(|i| h.arrive(0, i as f64 * 0.01)).collect();
+        assert_eq!(h.consult(&mut p).len(), 4);
+        let heavy = h.arrive(1, 0.5);
+        let extra = h.arrive(0, 0.6);
+        // A light completes; `extra` is queued so no trigger yet: MSF
+        // admission puts `extra` straight in.
+        h.complete(lights[0], 1.0);
+        assert_eq!(h.consult(&mut p), vec![extra]);
+        // Next completion: no lights queued, heavy starving → drain.
+        h.complete(lights[1], 1.1);
+        assert!(h.consult(&mut p).is_empty());
+        assert!(p.draining);
+        // New light arrivals must NOT enter during the drain.
+        let late = h.arrive(0, 1.2);
+        assert!(h.consult(&mut p).is_empty());
+        h.complete(lights[2], 1.3);
+        h.consult(&mut p);
+        h.complete(lights[3], 1.4);
+        h.consult(&mut p);
+        h.complete(extra, 1.5);
+        // All free: heavy enters, drain ends (it may re-arm because the
+        // late light is now the starving class behind the full system).
+        let adm = h.consult(&mut p);
+        assert_eq!(adm[0], heavy);
+        // After the heavy completes, the late light resumes service.
+        h.complete(heavy, 2.5);
+        assert_eq!(h.consult(&mut p), vec![late]);
+    }
+
+    /// With needs that don't divide k, AdaptiveQS backfills smaller
+    /// classes in the working phase (unlike StaticQS exclusivity).
+    #[test]
+    fn backfills_mixed_classes() {
+        let mut h = Harness::new(8, &[1, 5]);
+        let mut p = AdaptiveQuickswap::new();
+        h.arrive(1, 0.0);
+        for i in 0..4 {
+            h.arrive(0, 0.1 + i as f64 * 0.01);
+        }
+        h.consult(&mut p);
+        assert_eq!(h.used(), 8); // 5 + 3×1
+        assert_eq!(h.running[0], 3);
+    }
+}

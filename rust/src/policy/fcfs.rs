@@ -1,0 +1,67 @@
+//! First-Come First-Served: admit jobs strictly in arrival order; stop at
+//! the first job that does not fit (Head-of-the-Line blocking).
+
+use crate::policy::{Decision, Policy, SysView};
+
+#[derive(Default, Debug)]
+pub struct Fcfs;
+
+impl Fcfs {
+    pub fn new() -> Fcfs {
+        Fcfs
+    }
+}
+
+impl Policy for Fcfs {
+    fn name(&self) -> String {
+        "FCFS".into()
+    }
+
+    fn schedule(&mut self, sys: &SysView<'_>, out: &mut Decision) {
+        let mut free = sys.free();
+        sys.for_each_in_arrival_order(&mut |id, class, running| {
+            if running {
+                return true; // skip jobs already in service
+            }
+            let need = sys.needs[class];
+            if need <= free {
+                out.admit.push(id);
+                free -= need;
+                true
+            } else {
+                false // head-of-line blocking: stop at first misfit
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policy::test_support::Harness;
+
+    #[test]
+    fn head_of_line_blocks() {
+        // k=4; arrivals: need-1, need-4, need-1.
+        // FCFS admits the first job, then blocks on the 4-server job even
+        // though the third (need-1) would fit.
+        let mut h = Harness::new(4, &[1, 4]);
+        h.arrive(0, 0.0); // class 0: need 1
+        h.arrive(1, 0.1); // class 1: need 4
+        h.arrive(0, 0.2);
+        let admitted = h.consult(&mut Fcfs::new());
+        assert_eq!(admitted, vec![0]); // only the first job starts
+        assert_eq!(h.used(), 1);
+    }
+
+    #[test]
+    fn admits_in_order_while_fitting() {
+        let mut h = Harness::new(4, &[1, 4]);
+        for i in 0..6 {
+            h.arrive(0, i as f64 * 0.1);
+        }
+        let admitted = h.consult(&mut Fcfs::new());
+        assert_eq!(admitted.len(), 4);
+        assert_eq!(h.used(), 4);
+    }
+}

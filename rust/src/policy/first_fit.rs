@@ -1,0 +1,80 @@
+//! First-Fit: like FCFS, but keeps scanning the queue in arrival order
+//! past jobs that do not fit, admitting any later job that does
+//! (eliminates head-of-the-line blocking at the cost of potentially
+//! starving large jobs).
+
+use crate::policy::{Decision, Policy, SysView};
+
+#[derive(Default, Debug)]
+pub struct FirstFit;
+
+impl FirstFit {
+    pub fn new() -> FirstFit {
+        FirstFit
+    }
+}
+
+impl Policy for FirstFit {
+    fn name(&self) -> String {
+        "First-Fit".into()
+    }
+
+    fn schedule(&mut self, sys: &SysView<'_>, out: &mut Decision) {
+        let mut free = sys.free();
+        if free == 0 {
+            return;
+        }
+        // The smallest need among queued classes lets us stop the scan
+        // early once nothing can possibly fit.
+        let min_need = sys
+            .queued
+            .iter()
+            .enumerate()
+            .filter(|(_, &q)| q > 0)
+            .map(|(c, _)| sys.needs[c])
+            .min()
+            .unwrap_or(u32::MAX);
+        if min_need > free {
+            return;
+        }
+        sys.for_each_in_arrival_order(&mut |id, class, running| {
+            if running {
+                return true;
+            }
+            let need = sys.needs[class];
+            if need <= free {
+                out.admit.push(id);
+                free -= need;
+            }
+            free >= min_need // keep scanning while anything could fit
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policy::test_support::Harness;
+
+    #[test]
+    fn skips_blocked_head() {
+        let mut h = Harness::new(4, &[1, 4]);
+        h.arrive(0, 0.0);
+        h.arrive(1, 0.1); // need 4: cannot fit after first admit
+        let third = h.arrive(0, 0.2);
+        let admitted = h.consult(&mut FirstFit::new());
+        assert!(admitted.contains(&third), "first-fit must backfill");
+        assert_eq!(h.used(), 2);
+    }
+
+    #[test]
+    fn respects_arrival_order_within_fits() {
+        let mut h = Harness::new(3, &[2, 1]);
+        let a = h.arrive(0, 0.0); // need 2
+        let b = h.arrive(0, 0.1); // need 2: doesn't fit after a
+        let c = h.arrive(1, 0.2); // need 1: fits
+        let admitted = h.consult(&mut FirstFit::new());
+        assert_eq!(admitted, vec![a, c]);
+        assert!(h.jobs.is_queued(b));
+    }
+}

@@ -1,0 +1,200 @@
+//! Scheduling policies for the multiserver-job (MSJ) model.
+//!
+//! A [`Policy`] observes the system through a [`SysView`] after every
+//! event (arrival, departure, policy timer) and emits a [`Decision`]:
+//! which queued jobs to admit (and, for preemptive policies, which running
+//! jobs to preempt). The engine enforces feasibility (`Σ need ≤ k`) and
+//! non-preemption for policies that declare themselves non-preemptive.
+
+pub mod adaptive_qs;
+pub mod fcfs;
+pub mod test_support;
+pub mod first_fit;
+pub mod msf;
+pub mod msfq;
+pub mod nmsr;
+pub mod server_filling;
+pub mod static_qs;
+
+pub use adaptive_qs::AdaptiveQuickswap;
+pub use fcfs::Fcfs;
+pub use first_fit::FirstFit;
+pub use msf::Msf;
+pub use msfq::Msfq;
+pub use nmsr::Nmsr;
+pub use server_filling::ServerFilling;
+pub use static_qs::StaticQuickswap;
+
+use crate::workload::Workload;
+
+pub type ClassId = usize;
+pub type JobId = u64;
+
+/// Paper phase labels used by the phase-duration tracker (Fig 4).
+/// 0 = untracked/other; 1..=4 = the MSFQ phases of §4.2.
+pub type PhaseLabel = u8;
+
+/// What a policy can see. Borrow-backed by the engine; all accessors are
+/// O(1) except the arrival-order iterator.
+pub struct SysView<'a> {
+    pub now: f64,
+    /// Total servers.
+    pub k: u32,
+    /// Busy servers.
+    pub used: u32,
+    /// Server need per class.
+    pub needs: &'a [u32],
+    /// Jobs waiting (not in service) per class.
+    pub queued: &'a [u32],
+    /// Jobs currently in service per class.
+    pub running: &'a [u32],
+    /// Job table (lookup class/need/state by id).
+    pub jobs: &'a crate::sim::job::JobTable,
+    /// All jobs in the system in arrival order (queued and running),
+    /// possibly containing departed tombstones — filtered on iteration.
+    pub(crate) order: &'a std::collections::VecDeque<JobId>,
+    /// Per-class FIFO of waiting jobs (front = oldest).
+    pub(crate) class_fifo: &'a [std::collections::VecDeque<JobId>],
+}
+
+impl<'a> SysView<'a> {
+    #[inline]
+    pub fn free(&self) -> u32 {
+        self.k - self.used
+    }
+
+    /// Total jobs in system for class `c`.
+    #[inline]
+    pub fn in_system(&self, c: ClassId) -> u32 {
+        self.queued[c] + self.running[c]
+    }
+
+    /// Total jobs in system across classes.
+    pub fn total_in_system(&self) -> u32 {
+        (0..self.needs.len()).map(|c| self.in_system(c)).sum()
+    }
+
+    /// Oldest waiting job of class `c` (front of the class FIFO).
+    #[inline]
+    pub fn queued_head(&self, c: ClassId) -> Option<JobId> {
+        self.class_fifo[c]
+            .iter()
+            .copied()
+            .find(|&id| self.jobs.is_queued(id))
+    }
+
+    /// First `n` oldest waiting jobs of class `c`.
+    pub fn queued_front(&self, c: ClassId, n: usize) -> Vec<JobId> {
+        self.class_fifo[c]
+            .iter()
+            .copied()
+            .filter(|&id| self.jobs.is_queued(id))
+            .take(n)
+            .collect()
+    }
+
+    /// Visit jobs in arrival order; `f` returns false to stop early.
+    /// Includes running jobs (`running` flag) so prefix-based policies
+    /// (ServerFilling) can reason over the full arrival order.
+    pub fn for_each_in_arrival_order(&self, f: &mut dyn FnMut(JobId, ClassId, bool) -> bool) {
+        for &id in self.order.iter() {
+            if !self.jobs.in_system(id) {
+                continue;
+            }
+            let running = self.jobs.is_running(id);
+            if !f(id, self.jobs.get(id).class, running) {
+                break;
+            }
+        }
+    }
+
+    /// Number of distinct classes with at least one waiting job.
+    pub fn classes_with_queue(&self) -> usize {
+        self.queued.iter().filter(|&&q| q > 0).count()
+    }
+}
+
+/// Scheduling decision. Buffers are reused across events by the engine.
+#[derive(Default, Debug)]
+pub struct Decision {
+    /// Queued job ids to put into service now (validated by the engine).
+    pub admit: Vec<JobId>,
+    /// Running job ids to preempt (only honored for preemptive policies).
+    pub preempt: Vec<JobId>,
+    /// Absolute time at which the policy wants `on_timer` to fire.
+    /// Replaces any previously-set timer.
+    pub set_timer: Option<f64>,
+}
+
+impl Decision {
+    pub fn clear(&mut self) {
+        self.admit.clear();
+        self.preempt.clear();
+        self.set_timer = None;
+    }
+}
+
+/// A scheduling policy.
+pub trait Policy {
+    fn name(&self) -> String;
+
+    /// Called after every event until it produces an empty decision.
+    fn schedule(&mut self, sys: &SysView<'_>, out: &mut Decision);
+
+    /// Called when the timer requested via `Decision::set_timer` fires
+    /// (immediately before `schedule`).
+    fn on_timer(&mut self, _now: f64) {}
+
+    /// Preemptive policies may return running jobs in `Decision::preempt`.
+    fn is_preemptive(&self) -> bool {
+        false
+    }
+
+    /// Current paper-phase label for the phase-duration tracker.
+    fn phase_label(&self, _sys: &SysView<'_>) -> PhaseLabel {
+        0
+    }
+}
+
+/// Construct a policy by name (CLI / config entry point).
+///
+/// Names: `fcfs`, `first-fit`, `msf`, `msfq[:ell]`, `static-qs[:ell]`,
+/// `adaptive-qs`, `nmsr[:cycle]`, `server-filling`.
+pub fn by_name(name: &str, wl: &Workload) -> anyhow::Result<Box<dyn Policy + Send>> {
+    let (base, arg) = match name.split_once(':') {
+        Some((b, a)) => (b, Some(a)),
+        None => (name, None),
+    };
+    let parse_u32 = |a: Option<&str>, d: u32| -> anyhow::Result<u32> {
+        Ok(match a {
+            Some(s) => s.parse()?,
+            None => d,
+        })
+    };
+    Ok(match base {
+        "fcfs" => Box::new(Fcfs::new()),
+        "first-fit" | "firstfit" | "ff" => Box::new(FirstFit::new()),
+        "msf" => Box::new(Msf::new()),
+        "msfq" => {
+            let ell = parse_u32(arg, wl.k.saturating_sub(1))?;
+            Box::new(Msfq::new(wl, ell)?)
+        }
+        "static-qs" | "staticqs" => {
+            let ell = parse_u32(arg, wl.k.saturating_sub(1))?;
+            Box::new(StaticQuickswap::new(wl, ell))
+        }
+        "adaptive-qs" | "adaptiveqs" => Box::new(AdaptiveQuickswap::new()),
+        "nmsr" => {
+            let cycle: f64 = match arg {
+                Some(s) => s.parse()?,
+                None => 50.0,
+            };
+            Box::new(Nmsr::new(wl, cycle)?)
+        }
+        "server-filling" | "serverfilling" | "sf" => Box::new(ServerFilling::new()),
+        _ => anyhow::bail!("unknown policy '{name}'"),
+    })
+}
+
+/// All nonpreemptive policy names used across the paper's figures.
+pub const NONPREEMPTIVE: &[&str] = &["fcfs", "first-fit", "msf", "msfq", "static-qs", "adaptive-qs", "nmsr"];

@@ -1,0 +1,147 @@
+//! Most Servers First (§4.1): whenever servers free up, admit queued jobs
+//! in descending order of server need (FIFO within a class) until no
+//! further job fits.
+
+use crate::policy::{Decision, PhaseLabel, Policy, SysView};
+
+#[derive(Default, Debug)]
+pub struct Msf {
+    /// Class indices sorted by descending need (lazily computed).
+    by_need: Vec<usize>,
+}
+
+impl Msf {
+    pub fn new() -> Msf {
+        Msf::default()
+    }
+
+    fn ensure_order(&mut self, needs: &[u32]) {
+        if self.by_need.len() != needs.len() {
+            let mut idx: Vec<usize> = (0..needs.len()).collect();
+            idx.sort_by_key(|&c| std::cmp::Reverse(needs[c]));
+            self.by_need = idx;
+        }
+    }
+}
+
+/// Shared MSF admission pass: admit greedily in descending-need order.
+/// Returns the number of admissions pushed.
+pub(crate) fn msf_admit(sys: &SysView<'_>, by_need: &[usize], out: &mut Decision) -> usize {
+    let mut free = sys.free();
+    let mut count = 0;
+    for &c in by_need {
+        let need = sys.needs[c];
+        if need > free {
+            continue;
+        }
+        let can_take = (free / need) as usize;
+        if can_take == 0 {
+            continue;
+        }
+        for id in sys.queued_front(c, can_take.min(sys.queued[c] as usize)) {
+            out.admit.push(id);
+            free -= need;
+            count += 1;
+        }
+    }
+    count
+}
+
+impl Policy for Msf {
+    fn name(&self) -> String {
+        "MSF".into()
+    }
+
+    fn schedule(&mut self, sys: &SysView<'_>, out: &mut Decision) {
+        self.ensure_order(sys.needs);
+        msf_admit(sys, &self.by_need, out);
+    }
+
+    /// In the one-or-all case MSF behaves like MSFQ with ℓ=0: label
+    /// phase 1 while heavies run, phase 2/3 while lights run.
+    fn phase_label(&self, sys: &SysView<'_>) -> PhaseLabel {
+        one_or_all_label(sys)
+    }
+}
+
+/// Phase labelling shared by MSF/MSFQ for one-or-all workloads: find the
+/// light (need 1) and heavy (need k) classes and classify the instant.
+pub(crate) fn one_or_all_label(sys: &SysView<'_>) -> PhaseLabel {
+    let mut light = None;
+    let mut heavy = None;
+    for (c, &n) in sys.needs.iter().enumerate() {
+        if n == 1 {
+            light = Some(c);
+        } else if n == sys.k {
+            heavy = Some(c);
+        }
+    }
+    let (l, h) = match (light, heavy) {
+        (Some(l), Some(h)) => (l, h),
+        _ => return 0,
+    };
+    if sys.running[h] > 0 {
+        1
+    } else if sys.running[l] > 0 {
+        if sys.in_system(l) >= sys.k {
+            2
+        } else if sys.queued[l] > 0 {
+            4 // draining: lights waiting but not admitted
+        } else {
+            3
+        }
+    } else {
+        0 // idle
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policy::test_support::Harness;
+
+    #[test]
+    fn prefers_larger_needs() {
+        // k=8, classes need {1, 4}. Queue: 6 small then 2 big.
+        let mut h = Harness::new(8, &[1, 4]);
+        for i in 0..6 {
+            h.arrive(0, i as f64 * 0.01);
+        }
+        let b1 = h.arrive(1, 0.9);
+        let b2 = h.arrive(1, 0.95);
+        let admitted = h.consult(&mut Msf::new());
+        // Both 4-server jobs run; no 1-server job fits afterwards.
+        assert!(admitted.contains(&b1) && admitted.contains(&b2));
+        assert_eq!(h.used(), 8);
+        assert_eq!(h.running[0], 0);
+    }
+
+    #[test]
+    fn fills_remainder_with_small_jobs() {
+        let mut h = Harness::new(8, &[1, 3]);
+        h.arrive(1, 0.0); // 3
+        h.arrive(1, 0.1); // 3 → 6 used
+        for i in 0..5 {
+            h.arrive(0, 0.2 + i as f64 * 0.01);
+        }
+        h.consult(&mut Msf::new());
+        assert_eq!(h.used(), 8); // 2 big + 2 small
+        assert_eq!(h.running[0], 2);
+    }
+
+    #[test]
+    fn one_or_all_alternates_exhaustively() {
+        // k=4 one-or-all. Heavy arrives first, then lights queue behind.
+        let mut h = Harness::new(4, &[1, 4]);
+        let hv = h.arrive(1, 0.0);
+        let mut p = Msf::new();
+        assert_eq!(h.consult(&mut p), vec![hv]);
+        for i in 0..3 {
+            h.arrive(0, 0.1 + i as f64 * 0.01);
+        }
+        assert!(h.consult(&mut p).is_empty(), "lights blocked behind heavy");
+        h.complete(hv, 1.0);
+        let admitted = h.consult(&mut p);
+        assert_eq!(admitted.len(), 3, "all lights admitted once heavy done");
+    }
+}

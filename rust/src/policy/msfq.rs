@@ -1,0 +1,256 @@
+//! Most Servers First with Quickswap (§4.2) — the paper's contribution
+//! for the one-or-all setting.
+//!
+//! MSFQ is MSF plus a threshold ℓ: while serving light (1-server) jobs,
+//! as soon as the number of lights in service would drop to ℓ, the policy
+//! stops admitting lights, drains the ones already running (phase 4), and
+//! switches to heavy (k-server) jobs. ℓ = 0 recovers MSF exactly; the
+//! paper's recommended heuristic is ℓ = k − 1.
+//!
+//! Phases (paper labels, exposed for the Fig-4 tracker):
+//!   1 — serving heavy jobs until none remain,
+//!   2 — serving lights with all k servers busy (n₁ ≥ k),
+//!   3 — serving lights with n₁ < k, still admitting,
+//!   4 — draining: lights in service complete, no admissions.
+
+use crate::policy::{ClassId, Decision, PhaseLabel, Policy, SysView};
+use crate::workload::Workload;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Mode {
+    /// Serving heavy jobs (or idle).
+    Heavy,
+    /// Serving light jobs, admissions allowed (paper phases 2/3).
+    Light,
+    /// Quickswap triggered: draining in-service lights (paper phase 4).
+    Drain,
+}
+
+#[derive(Debug)]
+pub struct Msfq {
+    pub ell: u32,
+    light: ClassId,
+    heavy: ClassId,
+    mode: Mode,
+}
+
+impl Msfq {
+    /// `ell` ∈ [0, k−1]. The workload must be one-or-all: exactly one
+    /// class with need 1 and one with need k.
+    pub fn new(wl: &Workload, ell: u32) -> anyhow::Result<Msfq> {
+        anyhow::ensure!(
+            ell < wl.k,
+            "quickswap threshold ell={ell} must be < k={}",
+            wl.k
+        );
+        let mut light = None;
+        let mut heavy = None;
+        for (c, cl) in wl.classes.iter().enumerate() {
+            if cl.need == 1 {
+                anyhow::ensure!(light.is_none(), "multiple light classes");
+                light = Some(c);
+            } else if cl.need == wl.k {
+                anyhow::ensure!(heavy.is_none(), "multiple heavy classes");
+                heavy = Some(c);
+            } else {
+                anyhow::bail!(
+                    "MSFQ requires a one-or-all workload; class {c} needs {} of {}",
+                    cl.need,
+                    wl.k
+                );
+            }
+        }
+        Ok(Msfq {
+            ell,
+            light: light.ok_or_else(|| anyhow::anyhow!("no light (need-1) class"))?,
+            heavy: heavy.ok_or_else(|| anyhow::anyhow!("no heavy (need-k) class"))?,
+            mode: Mode::Heavy,
+        })
+    }
+
+    /// Decide the next mode at a switch point (no job of either class in
+    /// service), admitting as appropriate. Mirrors the zero-length-phase
+    /// cascade of §4.2: phase 1 ends only when no heavies remain; then
+    /// lights are served (phase 2/3) if n₁ > ℓ, else drained (phase 4).
+    fn dispatch(&mut self, sys: &SysView<'_>, out: &mut Decision) {
+        if sys.in_system(self.heavy) > 0 {
+            self.mode = Mode::Heavy;
+            if let Some(id) = sys.queued_head(self.heavy) {
+                out.admit.push(id);
+            }
+            return;
+        }
+        let n1 = sys.in_system(self.light);
+        if n1 == 0 {
+            self.mode = Mode::Heavy; // idle
+        } else if n1 > self.ell {
+            self.mode = Mode::Light;
+            self.admit_lights(sys, out);
+        } else {
+            // All n₁ ≤ ℓ lights enter service, then the door closes.
+            self.mode = Mode::Drain;
+            for id in sys.queued_front(self.light, sys.queued[self.light] as usize) {
+                out.admit.push(id);
+            }
+        }
+    }
+
+    fn admit_lights(&self, sys: &SysView<'_>, out: &mut Decision) {
+        let free = sys.free() as usize;
+        let take = free.min(sys.queued[self.light] as usize);
+        for id in sys.queued_front(self.light, take) {
+            out.admit.push(id);
+        }
+    }
+}
+
+impl Policy for Msfq {
+    fn name(&self) -> String {
+        format!("MSFQ(ell={})", self.ell)
+    }
+
+    fn schedule(&mut self, sys: &SysView<'_>, out: &mut Decision) {
+        let (l, h) = (self.light, self.heavy);
+        if sys.running[l] == 0 && sys.running[h] == 0 {
+            // Switch point: previous phase fully drained (or idle).
+            self.dispatch(sys, out);
+            return;
+        }
+        match self.mode {
+            Mode::Heavy => {
+                // A heavy occupies all k servers; nothing to add.
+            }
+            Mode::Light => {
+                if sys.in_system(l) <= self.ell {
+                    // Quickswap trigger: in-service lights ≤ ℓ.
+                    self.mode = Mode::Drain;
+                } else {
+                    self.admit_lights(sys, out);
+                }
+            }
+            Mode::Drain => {
+                // No admissions while draining.
+            }
+        }
+    }
+
+    fn phase_label(&self, sys: &SysView<'_>) -> PhaseLabel {
+        match self.mode {
+            Mode::Heavy => {
+                if sys.running[self.heavy] > 0 {
+                    1
+                } else {
+                    0 // idle
+                }
+            }
+            Mode::Light => {
+                if sys.in_system(self.light) >= sys.k {
+                    2
+                } else {
+                    3
+                }
+            }
+            Mode::Drain => 4,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::Dist;
+    use crate::policy::test_support::Harness;
+    use crate::workload::{ClassSpec, Workload};
+
+    fn wl(k: u32) -> Workload {
+        Workload::new(
+            k,
+            vec![
+                ClassSpec::new(1, 1.0, Dist::exp_mean(1.0)),
+                ClassSpec::new(k, 0.1, Dist::exp_mean(1.0)),
+            ],
+        )
+    }
+
+    #[test]
+    fn rejects_bad_workloads() {
+        let w = Workload::new(
+            8,
+            vec![
+                ClassSpec::new(1, 1.0, Dist::exp_mean(1.0)),
+                ClassSpec::new(4, 1.0, Dist::exp_mean(1.0)),
+            ],
+        );
+        assert!(Msfq::new(&w, 3).is_err());
+        assert!(Msfq::new(&wl(8), 8).is_err()); // ell must be < k
+        assert!(Msfq::new(&wl(8), 7).is_ok());
+    }
+
+    /// The quickswap: serving lights, once n₁ ≤ ℓ no more lights enter
+    /// service even though servers are idle; heavies go next.
+    #[test]
+    fn drains_at_threshold_and_switches_to_heavy() {
+        let k = 4;
+        let mut h = Harness::new(k, &[1, k]);
+        let mut p = Msfq::new(&wl(k), 2).unwrap();
+        // 5 lights arrive; 4 enter service (phase 2: n1=5 ≥ k).
+        let ids: Vec<_> = (0..5).map(|i| h.arrive(0, i as f64 * 0.01)).collect();
+        let adm = h.consult(&mut p);
+        assert_eq!(adm.len(), 4);
+        // A heavy arrives and must wait.
+        let heavy = h.arrive(1, 0.5);
+        assert!(h.consult(&mut p).is_empty());
+        // One light completes: n1 = 4 > ℓ=2 → the 5th light is admitted.
+        h.complete(ids[0], 1.0);
+        assert_eq!(h.consult(&mut p), vec![ids[4]]);
+        // Two more complete: n1 = 2 ≤ ℓ → drain begins; new lights queue.
+        h.complete(ids[1], 1.1);
+        h.consult(&mut p);
+        h.complete(ids[2], 1.2);
+        assert!(h.consult(&mut p).is_empty());
+        let late_light = h.arrive(0, 1.25);
+        assert!(h.consult(&mut p).is_empty(), "no admissions in drain");
+        // Remaining two lights finish → heavy admitted (phase 1).
+        h.complete(ids[3], 1.3);
+        assert!(h.consult(&mut p).is_empty());
+        h.complete(ids[4], 1.4);
+        assert_eq!(h.consult(&mut p), vec![heavy]);
+        // Heavy done → the queued light (n1=1 ≤ ℓ) enters via drain mode.
+        h.complete(heavy, 2.0);
+        assert_eq!(h.consult(&mut p), vec![late_light]);
+        assert_eq!(p.phase_label(&h.view()), 4);
+    }
+
+    /// ℓ=0 must reproduce MSF's exhaustive light service.
+    #[test]
+    fn ell_zero_is_exhaustive() {
+        let k = 3;
+        let mut h = Harness::new(k, &[1, k]);
+        let mut p = Msfq::new(&wl(k), 0).unwrap();
+        let l1 = h.arrive(0, 0.0);
+        assert_eq!(h.consult(&mut p), vec![l1]);
+        let hv = h.arrive(1, 0.1);
+        let l2 = h.arrive(0, 0.2);
+        // With ℓ=0 lights keep being admitted while any light is in system.
+        assert_eq!(h.consult(&mut p), vec![l2]);
+        h.complete(l1, 1.0);
+        h.complete(l2, 1.1);
+        assert_eq!(h.consult(&mut p), vec![hv]);
+    }
+
+    /// A light arriving to an empty system under ℓ≥1 enters service in
+    /// drain mode: later lights must wait for it (§4.2 as defined).
+    #[test]
+    fn empty_system_light_enters_drain() {
+        let k = 4;
+        let mut h = Harness::new(k, &[1, k]);
+        let mut p = Msfq::new(&wl(k), k - 1).unwrap();
+        let a = h.arrive(0, 0.0);
+        assert_eq!(h.consult(&mut p), vec![a]);
+        assert_eq!(p.phase_label(&h.view()), 4);
+        let b = h.arrive(0, 0.1);
+        assert!(h.consult(&mut p).is_empty());
+        h.complete(a, 1.0);
+        assert_eq!(h.consult(&mut p), vec![b]);
+    }
+}

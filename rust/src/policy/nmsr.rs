@@ -1,0 +1,173 @@
+//! Nonpreemptive Markovian Service Rate (nMSR) policy, reimplemented from
+//! its description in [13] (Chen, Grosof & Berg 2025): precompute one
+//! saturated schedule per class (⌊k/need⌋ slots), and switch between
+//! schedules according to a continuous-time Markov chain that is
+//! *independent of queue lengths*. Because switching ignores the state,
+//! capacity is wasted whenever the active schedule's class has too few
+//! jobs — exactly the weakness Quickswap fixes.
+//!
+//! Chain: cycle over schedules with exponential holding times whose means
+//! are proportional to each class's required capacity share
+//! s_i ∝ λ_i/(⌊k/need_i⌋·μ_i) (plus uniform slack), scaled by a nominal
+//! cycle length. When the timer fires the policy stops admitting, drains,
+//! and activates the next schedule.
+
+use crate::policy::{ClassId, Decision, PhaseLabel, Policy, SysView};
+use crate::util::rng::Rng;
+use crate::workload::Workload;
+
+#[derive(Debug)]
+pub struct Nmsr {
+    order: Vec<ClassId>,
+    /// Mean holding time per schedule (exponential).
+    hold_mean: Vec<f64>,
+    cur: usize,
+    switching: bool,
+    timer_armed: bool,
+    rng: Rng,
+}
+
+impl Nmsr {
+    /// `cycle` = nominal total cycle duration (sum of mean holds).
+    pub fn new(wl: &Workload, cycle: f64) -> anyhow::Result<Nmsr> {
+        anyhow::ensure!(cycle > 0.0, "cycle must be positive");
+        let m = wl.num_classes();
+        // Required capacity share per class under its own schedule.
+        let mut share: Vec<f64> = wl
+            .classes
+            .iter()
+            .map(|c| {
+                let slots = (wl.k / c.need).max(1) as f64;
+                c.rate * c.size.mean() / slots
+            })
+            .collect();
+        let total: f64 = share.iter().sum();
+        anyhow::ensure!(total > 0.0, "workload has no load");
+        // Normalize and mix with uniform slack so every schedule gets
+        // strictly positive time even for tiny classes.
+        for s in share.iter_mut() {
+            *s = 0.9 * (*s / total) + 0.1 / m as f64;
+        }
+        Ok(Nmsr {
+            order: (0..m).collect(),
+            hold_mean: share.iter().map(|s| s * cycle).collect(),
+            cur: 0,
+            switching: false,
+            timer_armed: false,
+            rng: Rng::new(0x6d73725f), // deterministic: policy-internal chain
+        })
+    }
+
+    fn admit_current(&self, sys: &SysView<'_>, out: &mut Decision) {
+        let c = self.order[self.cur];
+        let need = sys.needs[c];
+        let slots = sys.k / need;
+        let can = (slots.saturating_sub(sys.running[c])).min(sys.queued[c]) as usize;
+        // Capacity check: other classes may still be draining.
+        let mut free = sys.free();
+        for id in sys.queued_front(c, can) {
+            if need > free {
+                break;
+            }
+            out.admit.push(id);
+            free -= need;
+        }
+    }
+}
+
+impl Policy for Nmsr {
+    fn name(&self) -> String {
+        "nMSR".into()
+    }
+
+    fn schedule(&mut self, sys: &SysView<'_>, out: &mut Decision) {
+        if !self.timer_armed {
+            // First consult: arm the modulating chain.
+            self.timer_armed = true;
+            let hold = self.rng.exp(1.0 / self.hold_mean[self.cur]);
+            out.set_timer = Some(sys.now + hold);
+        }
+        if self.switching {
+            // Wait for the previous schedule to drain completely.
+            if sys.used > 0 {
+                return;
+            }
+            self.switching = false;
+            self.cur = (self.cur + 1) % self.order.len();
+            let hold = self.rng.exp(1.0 / self.hold_mean[self.cur]);
+            out.set_timer = Some(sys.now + hold);
+        }
+        self.admit_current(sys, out);
+    }
+
+    fn on_timer(&mut self, _now: f64) {
+        self.switching = true;
+    }
+
+    fn phase_label(&self, _sys: &SysView<'_>) -> PhaseLabel {
+        if self.switching {
+            4
+        } else {
+            2
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::Dist;
+    use crate::policy::test_support::Harness;
+    use crate::workload::{ClassSpec, Workload};
+
+    fn wl() -> Workload {
+        Workload::new(
+            4,
+            vec![
+                ClassSpec::new(1, 1.0, Dist::exp_mean(1.0)),
+                ClassSpec::new(4, 0.2, Dist::exp_mean(1.0)),
+            ],
+        )
+    }
+
+    #[test]
+    fn serves_only_active_schedule() {
+        let w = wl();
+        let mut p = Nmsr::new(&w, 10.0).unwrap();
+        let mut h = Harness::new(4, &[1, 4]);
+        h.arrive(0, 0.0);
+        h.arrive(1, 0.1);
+        let adm = h.consult(&mut p);
+        // Schedule 0 = class 0 (need 1): only lights admitted.
+        assert_eq!(adm.len(), 1);
+        assert_eq!(h.running[0], 1);
+        assert_eq!(h.running[1], 0, "inactive schedule gets nothing");
+    }
+
+    #[test]
+    fn switch_drains_then_advances() {
+        let w = wl();
+        let mut p = Nmsr::new(&w, 10.0).unwrap();
+        let mut h = Harness::new(4, &[1, 4]);
+        let l = h.arrive(0, 0.0);
+        let hv = h.arrive(1, 0.1);
+        h.consult(&mut p);
+        // Chain fires: switching begins; no admissions until drain done.
+        p.on_timer(1.0);
+        h.arrive(0, 1.1);
+        assert!(h.consult(&mut p).is_empty());
+        h.complete(l, 2.0);
+        // Drained → schedule advances to class 1 → heavy admitted.
+        let adm = h.consult(&mut p);
+        assert_eq!(adm, vec![hv]);
+    }
+
+    #[test]
+    fn share_sums_reasonable() {
+        let w = wl();
+        let p = Nmsr::new(&w, 10.0).unwrap();
+        let total: f64 = p.hold_mean.iter().sum();
+        assert!((total - 10.0).abs() < 1e-9);
+        assert!(p.hold_mean.iter().all(|&h| h > 0.0));
+    }
+}

@@ -1,0 +1,145 @@
+//! ServerFilling [22] — the preemptive comparison policy of Appendix D.
+//!
+//! At every event, take the minimal prefix of the arrival-ordered queue
+//! whose total server need is ≥ k (or all jobs if the total is smaller),
+//! then serve jobs from that prefix largest-need-first while they fit.
+//! With power-of-two needs dividing k this fills all k servers whenever
+//! ≥ k servers' worth of work is present. Preemption is assumed free
+//! (preempt-resume; remaining service is tracked exactly).
+
+use crate::policy::{Decision, JobId, PhaseLabel, Policy, SysView};
+
+#[derive(Debug, Default)]
+pub struct ServerFilling {
+    /// Scratch: candidate prefix (id, need, running).
+    prefix: Vec<(JobId, u32, bool)>,
+    /// Scratch: selected job ids.
+    selected: Vec<JobId>,
+}
+
+impl ServerFilling {
+    pub fn new() -> ServerFilling {
+        ServerFilling::default()
+    }
+}
+
+impl Policy for ServerFilling {
+    fn name(&self) -> String {
+        "ServerFilling".into()
+    }
+
+    fn is_preemptive(&self) -> bool {
+        true
+    }
+
+    fn schedule(&mut self, sys: &SysView<'_>, out: &mut Decision) {
+        // 1. Minimal prefix with total need ≥ k (or everything).
+        self.prefix.clear();
+        let mut total = 0u32;
+        let k = sys.k;
+        let prefix = &mut self.prefix;
+        sys.for_each_in_arrival_order(&mut |id, class, running| {
+            prefix.push((id, sys.needs[class], running));
+            total += sys.needs[class];
+            total < k
+        });
+
+        // 2. Largest-need-first greedy fill within the prefix
+        //    (stable: arrival order breaks ties).
+        self.prefix.sort_by_key(|&(_, need, _)| std::cmp::Reverse(need));
+        self.selected.clear();
+        let mut free = k;
+        for &(id, need, _) in self.prefix.iter() {
+            if need <= free {
+                self.selected.push(id);
+                free -= need;
+            }
+        }
+
+        // 3. Diff against the current service set.
+        for &(id, _, running) in self.prefix.iter() {
+            let want = self.selected.contains(&id);
+            if running && !want {
+                out.preempt.push(id);
+            } else if !running && want {
+                out.admit.push(id);
+            }
+        }
+        // Jobs beyond the prefix that are running must be preempted too
+        // (they can only be running due to an earlier, different prefix).
+        let in_prefix_len = self.prefix.len();
+        let prefix_ref = &self.prefix;
+        let preempt = &mut out.preempt;
+        let mut idx = 0usize;
+        sys.for_each_in_arrival_order(&mut |id, _class, running| {
+            idx += 1;
+            if idx <= in_prefix_len {
+                return true;
+            }
+            if running && !prefix_ref.iter().any(|&(p, _, _)| p == id) {
+                preempt.push(id);
+            }
+            true
+        });
+    }
+
+    fn phase_label(&self, _sys: &SysView<'_>) -> PhaseLabel {
+        0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policy::test_support::Harness;
+
+    /// With ≥ k total demand and power-of-two needs, all k servers busy.
+    #[test]
+    fn fills_all_servers() {
+        let mut h = Harness::new(8, &[1, 2, 4, 8]);
+        let mut p = ServerFilling::new();
+        h.arrive(1, 0.0); // 2
+        h.arrive(0, 0.1); // 1
+        h.arrive(2, 0.2); // 4
+        h.arrive(0, 0.3); // 1
+        h.arrive(2, 0.4); // 4 — prefix reaches ≥ 8 at job 3 already
+        h.consult(&mut p);
+        assert_eq!(h.used(), 8, "ServerFilling must fill k when load ≥ k");
+    }
+
+    /// A newly arrived large job displaces smaller later arrivals via
+    /// preemption when the prefix shifts.
+    #[test]
+    fn preempts_when_prefix_changes() {
+        let mut h = Harness::new(4, &[1, 4]);
+        let mut p = ServerFilling::new();
+        let l1 = h.arrive(0, 0.0);
+        let l2 = h.arrive(0, 0.1);
+        h.consult(&mut p);
+        assert_eq!(h.used(), 2);
+        // Heavy arrives: prefix = {l1, l2, heavy} (total 6 ≥ 4), sorted
+        // by need → heavy first, fills k=4 alone → lights preempted.
+        let hv = h.arrive(1, 0.5);
+        let adm = h.consult(&mut p);
+        assert!(adm.contains(&hv));
+        assert_eq!(h.used(), 4);
+        assert_eq!(h.running[0], 0);
+        assert!(h.jobs.is_queued(l1) && h.jobs.is_queued(l2));
+        // Heavy completes → lights resume.
+        h.complete(hv, 1.5);
+        h.consult(&mut p);
+        assert_eq!(h.running[0], 2);
+    }
+
+    /// Below k total demand everything runs.
+    #[test]
+    fn runs_everything_under_capacity() {
+        let mut h = Harness::new(8, &[1, 2]);
+        let mut p = ServerFilling::new();
+        h.arrive(0, 0.0);
+        h.arrive(1, 0.1);
+        h.arrive(1, 0.2);
+        h.consult(&mut p);
+        assert_eq!(h.used(), 5);
+    }
+}

@@ -1,0 +1,178 @@
+//! Static Quickswap (§4.3): cycle through job classes in a fixed order
+//! (descending server need). For the current class i:
+//!
+//! * **Working phase** — serve class-i exclusively with up to ⌊k/i⌋ jobs
+//!   in service, until the number of idle servers exceeds k − ℓ
+//!   (equivalently: busy servers < ℓ).
+//! * **Draining phase** — no admissions; once the in-service class-i jobs
+//!   complete, move to the next class in the cycle.
+//!
+//! ℓ is a *server-count* threshold (the MSFQ analogue: for the light class
+//! in a one-or-all workload, busy servers = jobs in service).
+
+use crate::policy::{ClassId, Decision, PhaseLabel, Policy, SysView};
+use crate::workload::Workload;
+
+#[derive(Debug)]
+pub struct StaticQuickswap {
+    /// Busy-server threshold: quickswap to draining when `used < ell`.
+    pub ell: u32,
+    /// Visit order (descending need).
+    cycle: Vec<ClassId>,
+    cur: usize,
+    draining: bool,
+}
+
+impl StaticQuickswap {
+    pub fn new(wl: &Workload, ell: u32) -> StaticQuickswap {
+        let mut cycle: Vec<ClassId> = (0..wl.num_classes()).collect();
+        let needs = wl.needs();
+        cycle.sort_by_key(|&c| std::cmp::Reverse(needs[c]));
+        StaticQuickswap {
+            ell: ell.min(wl.k),
+            cycle,
+            cur: 0,
+            draining: false,
+        }
+    }
+
+    /// Current class being served/drained.
+    pub fn current_class(&self) -> ClassId {
+        self.cycle[self.cur]
+    }
+}
+
+impl Policy for StaticQuickswap {
+    fn name(&self) -> String {
+        format!("StaticQS(ell={})", self.ell)
+    }
+
+    fn schedule(&mut self, sys: &SysView<'_>, out: &mut Decision) {
+        // At most one full tour of the cycle per consult.
+        for _ in 0..=self.cycle.len() {
+            let c = self.cycle[self.cur];
+            let need = sys.needs[c];
+            let slots = sys.k / need;
+
+            if self.draining {
+                if sys.running[c] > 0 {
+                    return; // still draining
+                }
+                self.draining = false;
+                self.cur = (self.cur + 1) % self.cycle.len();
+                continue;
+            }
+
+            // Working phase: top up class-c slots.
+            let can = (slots - sys.running[c]).min(sys.queued[c]) as usize;
+            if can > 0 {
+                for id in sys.queued_front(c, can) {
+                    out.admit.push(id);
+                }
+                // Admissions will retrigger schedule(); evaluate the
+                // quickswap condition on the next consult.
+                return;
+            }
+            // Quickswap trigger: idle servers exceed k − ℓ. The
+            // threshold is capped at the class's achievable busy level
+            // need·⌊k/need⌋ — otherwise classes whose need does not
+            // divide k would drain even with a full queue (they can
+            // never exceed ℓ = k−1 busy servers).
+            let busy = sys.running[c] * need;
+            let cap = (need * slots).min(self.ell + 1);
+            if busy < cap {
+                if sys.running[c] > 0 {
+                    self.draining = true;
+                    return;
+                }
+                // Nothing in service: skip straight past the drain.
+                self.cur = (self.cur + 1) % self.cycle.len();
+                // If the whole system is empty, park here.
+                if sys.total_in_system() == 0 {
+                    return;
+                }
+                continue;
+            }
+            return; // working, fully loaded
+        }
+    }
+
+    fn phase_label(&self, sys: &SysView<'_>) -> PhaseLabel {
+        let c = self.cycle[self.cur];
+        if self.draining {
+            4
+        } else if sys.running[c] > 0 {
+            2
+        } else {
+            0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::Dist;
+    use crate::policy::test_support::Harness;
+    use crate::workload::{ClassSpec, Workload};
+
+    fn wl4() -> Workload {
+        Workload::four_class(1.0) // k=15, needs {1,3,5,15}
+    }
+
+    #[test]
+    fn serves_one_class_exclusively() {
+        let wl = wl4();
+        let mut p = StaticQuickswap::new(&wl, wl.k - 1);
+        let mut h = Harness::new(15, &[1, 3, 5, 15]);
+        // Queue jobs of class 1 (need 3) and class 0 (need 1).
+        for i in 0..6 {
+            h.arrive(1, i as f64 * 0.01);
+        }
+        for i in 0..4 {
+            h.arrive(0, 0.1 + i as f64 * 0.01);
+        }
+        let adm = h.consult(&mut p);
+        // Cycle starts at need-15, empty → need-5, empty → need-3: 5 slots.
+        assert_eq!(adm.len(), 5);
+        assert_eq!(h.running[1], 5);
+        assert_eq!(h.running[0], 0, "exclusive service");
+        assert_eq!(h.used(), 15);
+    }
+
+    #[test]
+    fn drains_then_advances() {
+        let wl = wl4();
+        let mut p = StaticQuickswap::new(&wl, wl.k - 1);
+        let mut h = Harness::new(15, &[1, 3, 5, 15]);
+        let a = h.arrive(1, 0.0); // need 3
+        let b = h.arrive(1, 0.01);
+        for i in 0..3 {
+            h.arrive(0, 0.1 + i as f64 * 0.01);
+        }
+        let adm = h.consult(&mut p);
+        assert_eq!(adm.len(), 2); // both need-3 jobs in service, busy=6 < 14 → drain
+        assert!(h.consult(&mut p).is_empty(), "draining: no admissions");
+        h.complete(a, 1.0);
+        assert!(h.consult(&mut p).is_empty());
+        h.complete(b, 1.1);
+        // Drain over → next classes in cycle → class need-1 gets served.
+        let adm = h.consult(&mut p);
+        assert_eq!(adm.len(), 3);
+        assert_eq!(h.running[0], 3);
+    }
+
+    #[test]
+    fn full_queue_keeps_working() {
+        let wl = wl4();
+        let mut p = StaticQuickswap::new(&wl, wl.k - 1);
+        let mut h = Harness::new(15, &[1, 3, 5, 15]);
+        let ids: Vec<_> = (0..8).map(|i| h.arrive(1, i as f64 * 0.01)).collect();
+        h.consult(&mut p); // 5 in service
+        h.complete(ids[0], 1.0);
+        // Replacement admitted immediately: still working, busy stays 15.
+        let adm = h.consult(&mut p);
+        assert_eq!(adm.len(), 1);
+        assert_eq!(h.used(), 15);
+    }
+}

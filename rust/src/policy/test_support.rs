@@ -1,0 +1,137 @@
+//! A miniature system-state container: manually arrive/complete jobs and
+//! collect policy decisions, without the full DES engine. Used by unit
+//! tests, the property-test suite, AND the coordinator daemon (which
+//! drives it from real-time events instead of simulated ones).
+
+use crate::policy::{Decision, JobId, Policy, SysView};
+use crate::sim::job::{JobState, JobTable};
+use std::collections::VecDeque;
+
+pub struct Harness {
+    pub k: u32,
+    pub needs: Vec<u32>,
+    pub jobs: JobTable,
+    pub order: VecDeque<JobId>,
+    pub class_fifo: Vec<VecDeque<JobId>>,
+    pub queued: Vec<u32>,
+    pub running: Vec<u32>,
+    used: u32,
+    pub now: f64,
+}
+
+impl Harness {
+    pub fn new(k: u32, needs: &[u32]) -> Harness {
+        Harness {
+            k,
+            needs: needs.to_vec(),
+            jobs: JobTable::new(),
+            order: VecDeque::new(),
+            class_fifo: vec![VecDeque::new(); needs.len()],
+            queued: vec![0; needs.len()],
+            running: vec![0; needs.len()],
+            used: 0,
+            now: 0.0,
+        }
+    }
+
+    pub fn view(&self) -> SysView<'_> {
+        SysView {
+            now: self.now,
+            k: self.k,
+            used: self.used,
+            needs: &self.needs,
+            queued: &self.queued,
+            running: &self.running,
+            jobs: &self.jobs,
+            order: &self.order,
+            class_fifo: &self.class_fifo,
+        }
+    }
+
+    pub fn arrive(&mut self, class: usize, t: f64) -> JobId {
+        self.arrive_sized(class, t, 1.0)
+    }
+
+    pub fn arrive_sized(&mut self, class: usize, t: f64, size: f64) -> JobId {
+        self.now = self.now.max(t);
+        let id = self.jobs.insert(class, self.needs[class], size, t);
+        self.order.push_back(id);
+        self.class_fifo[class].push_back(id);
+        self.queued[class] += 1;
+        id
+    }
+
+    /// Complete a running job.
+    pub fn complete(&mut self, id: JobId, t: f64) {
+        self.now = self.now.max(t);
+        let j = self.jobs.get(id);
+        assert_eq!(j.state, JobState::Running);
+        let (class, need) = (j.class, j.need);
+        self.used -= need;
+        self.running[class] -= 1;
+        self.jobs.remove(id);
+        while let Some(&f) = self.order.front() {
+            if self.jobs.in_system(f) {
+                break;
+            }
+            self.order.pop_front();
+        }
+    }
+
+    /// Repeatedly consult the policy (as the engine does) and apply its
+    /// decisions; returns all newly admitted job ids in admission order.
+    pub fn consult(&mut self, policy: &mut dyn Policy) -> Vec<JobId> {
+        let mut all = Vec::new();
+        let mut out = Decision::default();
+        loop {
+            out.clear();
+            policy.schedule(&self.view(), &mut out);
+            if out.admit.is_empty() && out.preempt.is_empty() {
+                break;
+            }
+            assert!(
+                policy.is_preemptive() || out.preempt.is_empty(),
+                "non-preemptive policy attempted preemption"
+            );
+            let preempt = out.preempt.clone();
+            for id in preempt {
+                let j = self.jobs.get_mut(id);
+                assert_eq!(j.state, JobState::Running);
+                j.state = JobState::Queued;
+                j.epoch += 1;
+                let (class, need) = (j.class, j.need);
+                self.used -= need;
+                self.running[class] -= 1;
+                self.queued[class] += 1;
+                self.class_fifo[class].push_front(id);
+            }
+            let admit = out.admit.clone();
+            for id in admit {
+                let j = self.jobs.get(id);
+                assert_eq!(j.state, JobState::Queued, "admitted non-queued job");
+                let (class, need) = (j.class, j.need);
+                assert!(self.used + need <= self.k, "capacity violated");
+                if let Some(pos) = self.class_fifo[class].iter().position(|&x| x == id) {
+                    self.class_fifo[class].remove(pos);
+                }
+                let j = self.jobs.get_mut(id);
+                j.state = JobState::Running;
+                j.started = self.now;
+                j.epoch += 1;
+                self.used += need;
+                self.running[class] += 1;
+                self.queued[class] -= 1;
+                all.push(id);
+            }
+        }
+        all
+    }
+
+    pub fn used(&self) -> u32 {
+        self.used
+    }
+
+    pub fn in_system(&self, class: usize) -> u32 {
+        self.queued[class] + self.running[class]
+    }
+}

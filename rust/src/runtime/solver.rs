@@ -1,0 +1,186 @@
+//! Typed wrapper for the MSFQ solver/sweep artifacts.
+//!
+//! Input layout (python/compile/kernels/ref.py):
+//!   params f32[8] = [λ1, λk, μ1, μk, ℓ, k, _, _],  iters i32.
+//! Output layout (python/compile/model.py METRICS): f32[16].
+
+use super::{Artifact, Runtime};
+use anyhow::{Context, Result};
+
+/// Decoded metric vector from one solver execution.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SolverMetrics {
+    pub en1: f64,
+    pub enk: f64,
+    pub et1: f64,
+    pub etk: f64,
+    pub et: f64,
+    pub etw: f64,
+    pub m1: f64,
+    pub m23: f64,
+    pub m4: f64,
+    pub idle: f64,
+    pub blocked1: f64,
+    pub blockedk: f64,
+    pub residual: f64,
+    pub mass: f64,
+}
+
+impl SolverMetrics {
+    pub fn from_vec(v: &[f32]) -> Result<SolverMetrics> {
+        anyhow::ensure!(v.len() >= 14, "metric vector too short: {}", v.len());
+        Ok(SolverMetrics {
+            en1: v[0] as f64,
+            enk: v[1] as f64,
+            et1: v[2] as f64,
+            etk: v[3] as f64,
+            et: v[4] as f64,
+            etw: v[5] as f64,
+            m1: v[6] as f64,
+            m23: v[7] as f64,
+            m4: v[8] as f64,
+            idle: v[9] as f64,
+            blocked1: v[10] as f64,
+            blockedk: v[11] as f64,
+            residual: v[12] as f64,
+            mass: v[13] as f64,
+        })
+    }
+
+    /// Sanity: did the power iteration converge on a conserved chain?
+    /// Thresholds are calibrated for threshold *ranking* (the autotuner's
+    /// use), not absolute E[T] accuracy.
+    pub fn trustworthy(&self) -> bool {
+        (self.mass - 1.0).abs() < 2e-2
+            && self.residual < 1e-2
+            && self.blocked1 < 0.10
+            && self.blockedk < 0.10
+    }
+}
+
+/// A loaded solver artifact bound to a specific `k` and truncation.
+pub struct SolverArtifact {
+    artifact: Artifact,
+    pub k: u32,
+}
+
+impl SolverArtifact {
+    /// Load `msfq_solver_k{k}.hlo.txt` from the runtime's directory.
+    pub fn load(rt: &Runtime, k: u32) -> Result<SolverArtifact> {
+        let artifact = rt.load(&format!("msfq_solver_k{k}"))?;
+        Ok(SolverArtifact { artifact, k })
+    }
+
+    fn params_literal(&self, ell: u32, lam1: f64, lamk: f64, mu1: f64, muk: f64) -> xla::Literal {
+        let params: Vec<f32> = vec![
+            lam1 as f32,
+            lamk as f32,
+            mu1 as f32,
+            muk as f32,
+            ell as f32,
+            self.k as f32,
+            0.0,
+            0.0,
+        ];
+        xla::Literal::vec1(&params)
+    }
+
+    /// Solve for stationary metrics with `iters` power steps.
+    pub fn solve(
+        &self,
+        ell: u32,
+        lam1: f64,
+        lamk: f64,
+        mu1: f64,
+        muk: f64,
+        iters: i32,
+    ) -> Result<SolverMetrics> {
+        anyhow::ensure!(ell < self.k, "ell must be < k");
+        let params = self.params_literal(ell, lam1, lamk, mu1, muk);
+        let iters = xla::Literal::from(iters);
+        let out = self.artifact.execute(&[params, iters])?;
+        let v = out[0]
+            .to_vec::<f32>()
+            .context("reading solver metric vector")?;
+        SolverMetrics::from_vec(&v)
+    }
+
+    /// Pick the best Quickswap threshold for the given rates by scanning
+    /// a candidate set through the solver artifact (the coordinator's
+    /// autotune path — O(|candidates|) artifact executions).
+    pub fn autotune(
+        &self,
+        lam1: f64,
+        lamk: f64,
+        mu1: f64,
+        muk: f64,
+        iters: i32,
+        weighted: bool,
+    ) -> Result<(u32, SolverMetrics)> {
+        let mut cands: Vec<u32> = vec![0, self.k / 4, self.k / 2, 3 * self.k / 4, self.k - 1];
+        cands.dedup();
+        let mut best: Option<(u32, SolverMetrics)> = None;
+        for ell in cands {
+            let m = self.solve(ell, lam1, lamk, mu1, muk, iters)?;
+            if !m.trustworthy() {
+                continue;
+            }
+            let v = if weighted { m.etw } else { m.et };
+            if best
+                .as_ref()
+                .map(|(_, b)| v < if weighted { b.etw } else { b.et })
+                .unwrap_or(true)
+            {
+                best = Some((ell, m));
+            }
+        }
+        best.ok_or_else(|| anyhow::anyhow!("no trustworthy solver result; raise iters"))
+    }
+}
+
+/// The full-sweep artifact (all thresholds in one execution).
+pub struct SweepArtifact {
+    artifact: Artifact,
+    pub k: u32,
+}
+
+impl SweepArtifact {
+    pub fn load(rt: &Runtime, k: u32) -> Result<SweepArtifact> {
+        let artifact = rt.load(&format!("msfq_sweep_k{k}"))?;
+        Ok(SweepArtifact { artifact, k })
+    }
+
+    /// Returns per-threshold metrics plus (best ℓ by E[T], by E[T^w]).
+    pub fn sweep(
+        &self,
+        lam1: f64,
+        lamk: f64,
+        mu1: f64,
+        muk: f64,
+        iters: i32,
+    ) -> Result<(Vec<SolverMetrics>, u32, u32)> {
+        let params: Vec<f32> = vec![
+            lam1 as f32,
+            lamk as f32,
+            mu1 as f32,
+            muk as f32,
+            0.0,
+            self.k as f32,
+            0.0,
+            0.0,
+        ];
+        let out = self
+            .artifact
+            .execute(&[xla::Literal::vec1(&params), xla::Literal::from(iters)])?;
+        anyhow::ensure!(out.len() >= 3, "sweep artifact returned {} outputs", out.len());
+        let flat = out[0].to_vec::<f32>()?;
+        let m = flat.len() / self.k as usize;
+        let metrics = flat
+            .chunks(m)
+            .map(SolverMetrics::from_vec)
+            .collect::<Result<Vec<_>>>()?;
+        let best_et = out[1].to_vec::<i32>()?[0] as u32;
+        let best_etw = out[2].to_vec::<i32>()?[0] as u32;
+        Ok((metrics, best_et, best_etw))
+    }
+}

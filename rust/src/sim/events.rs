@@ -1,0 +1,107 @@
+//! Event queue: a binary min-heap over event time.
+
+use crate::policy::JobId;
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum EventKind {
+    /// Next arrival from the workload source.
+    Arrival,
+    /// Service completion of `job` started at epoch `epoch`; discarded if
+    /// the job was preempted (epoch mismatch) since it was scheduled.
+    Departure { job: JobId, epoch: u32 },
+    /// Policy-requested timer; discarded unless `seq` is the latest.
+    PolicyTimer { seq: u64 },
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct Event {
+    pub t: f64,
+    pub kind: EventKind,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.t == other.t
+    }
+}
+impl Eq for Event {}
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Min-heap on time (BinaryHeap is a max-heap → reverse).
+        other
+            .t
+            .partial_cmp(&self.t)
+            .unwrap_or(Ordering::Equal)
+    }
+}
+
+/// Min-heap event queue.
+#[derive(Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Event>,
+}
+
+impl EventQueue {
+    pub fn new() -> Self {
+        Self {
+            heap: BinaryHeap::with_capacity(1024),
+        }
+    }
+
+    #[inline]
+    pub fn push(&mut self, t: f64, kind: EventKind) {
+        debug_assert!(t.is_finite(), "event time must be finite");
+        self.heap.push(Event { t, kind });
+    }
+
+    #[inline]
+    pub fn pop(&mut self) -> Option<Event> {
+        self.heap.pop()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn clear(&mut self) {
+        self.heap.clear()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(3.0, EventKind::Arrival);
+        q.push(1.0, EventKind::Arrival);
+        q.push(2.0, EventKind::PolicyTimer { seq: 0 });
+        let times: Vec<f64> = std::iter::from_fn(|| q.pop()).map(|e| e.t).collect();
+        assert_eq!(times, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn ties_are_fine() {
+        let mut q = EventQueue::new();
+        for _ in 0..10 {
+            q.push(1.0, EventKind::Arrival);
+        }
+        assert_eq!(q.len(), 10);
+        while let Some(e) = q.pop() {
+            assert_eq!(e.t, 1.0);
+        }
+    }
+}

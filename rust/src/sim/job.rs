@@ -1,0 +1,196 @@
+//! Job storage: a generational slab keyed by `JobId`.
+//!
+//! The engine keeps every job in the system (queued or running) in this
+//! table; slots are recycled after departure so memory is O(jobs in
+//! system), not O(jobs simulated). Ids are *generational* — a `JobId`
+//! packs (generation, slot) so an id that lingers in an index (e.g. the
+//! arrival-order deque) after its job departed can never alias a new job
+//! occupying the same slot.
+
+use crate::policy::{ClassId, JobId};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobState {
+    Queued,
+    Running,
+    /// Slot is free (job departed); `next_free` threads the free list.
+    Free,
+}
+
+#[derive(Clone, Debug)]
+pub struct Job {
+    pub class: ClassId,
+    pub need: u32,
+    /// Remaining service requirement (= full size until first run).
+    pub remaining: f64,
+    /// Absolute arrival time.
+    pub arrival: f64,
+    /// Time service (re)started; valid while Running.
+    pub started: f64,
+    pub state: JobState,
+    /// Incremented on every (re)start/preemption; stale departure events
+    /// carry an old epoch and are discarded.
+    pub epoch: u32,
+    /// Slot generation; must match the id's generation half.
+    gen: u32,
+    next_free: u32,
+}
+
+const NIL: u32 = u32::MAX;
+
+#[inline]
+fn pack(gen: u32, slot: u32) -> JobId {
+    ((gen as u64) << 32) | slot as u64
+}
+
+#[inline]
+fn unpack(id: JobId) -> (u32, u32) {
+    ((id >> 32) as u32, id as u32)
+}
+
+/// Generational slab of jobs with O(1) insert/remove and safe id reuse.
+#[derive(Default)]
+pub struct JobTable {
+    slots: Vec<Job>,
+    free_head: u32,
+    live: usize,
+}
+
+impl JobTable {
+    pub fn new() -> Self {
+        Self {
+            slots: Vec::new(),
+            free_head: NIL,
+            live: 0,
+        }
+    }
+
+    pub fn insert(&mut self, class: ClassId, need: u32, size: f64, arrival: f64) -> JobId {
+        self.live += 1;
+        let job = Job {
+            class,
+            need,
+            remaining: size,
+            arrival,
+            started: f64::NAN,
+            state: JobState::Queued,
+            epoch: 0,
+            gen: 0,
+            next_free: NIL,
+        };
+        if self.free_head != NIL {
+            let slot = self.free_head;
+            let s = &mut self.slots[slot as usize];
+            self.free_head = s.next_free;
+            let gen = s.gen.wrapping_add(1);
+            *s = job;
+            s.gen = gen;
+            pack(gen, slot)
+        } else {
+            self.slots.push(job);
+            pack(0, (self.slots.len() - 1) as u32)
+        }
+    }
+
+    pub fn remove(&mut self, id: JobId) {
+        let (gen, slot) = unpack(id);
+        let s = &mut self.slots[slot as usize];
+        debug_assert!(s.gen == gen && s.state != JobState::Free);
+        s.state = JobState::Free;
+        s.next_free = self.free_head;
+        self.free_head = slot;
+        self.live -= 1;
+    }
+
+    /// Panics if the id is stale (generation mismatch).
+    #[inline]
+    pub fn get(&self, id: JobId) -> &Job {
+        let (gen, slot) = unpack(id);
+        let j = &self.slots[slot as usize];
+        assert!(j.gen == gen, "stale JobId");
+        j
+    }
+
+    #[inline]
+    pub fn get_mut(&mut self, id: JobId) -> &mut Job {
+        let (gen, slot) = unpack(id);
+        let j = &mut self.slots[slot as usize];
+        assert!(j.gen == gen, "stale JobId");
+        j
+    }
+
+    #[inline]
+    fn state_of(&self, id: JobId) -> Option<JobState> {
+        let (gen, slot) = unpack(id);
+        match self.slots.get(slot as usize) {
+            Some(j) if j.gen == gen => Some(j.state),
+            _ => None,
+        }
+    }
+
+    #[inline]
+    pub fn is_queued(&self, id: JobId) -> bool {
+        self.state_of(id) == Some(JobState::Queued)
+    }
+
+    #[inline]
+    pub fn is_running(&self, id: JobId) -> bool {
+        self.state_of(id) == Some(JobState::Running)
+    }
+
+    /// True iff the id refers to a live (queued or running) job.
+    #[inline]
+    pub fn in_system(&self, id: JobId) -> bool {
+        matches!(
+            self.state_of(id),
+            Some(JobState::Queued) | Some(JobState::Running)
+        )
+    }
+
+    pub fn len(&self) -> usize {
+        self.live
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.live == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_remove_reuse() {
+        let mut t = JobTable::new();
+        let a = t.insert(0, 1, 1.0, 0.0);
+        let b = t.insert(1, 2, 2.0, 0.1);
+        assert_eq!(t.len(), 2);
+        assert_eq!(t.get(b).need, 2);
+        t.remove(a);
+        assert_eq!(t.len(), 1);
+        assert!(!t.in_system(a));
+        // Freed slot is reused under a NEW generation.
+        let c = t.insert(2, 4, 3.0, 0.2);
+        assert_ne!(c, a, "generational ids must not alias");
+        assert_eq!(c as u32, a as u32, "slot is reused");
+        assert_eq!(t.get(c).class, 2);
+        assert_eq!(t.capacity(), 2);
+    }
+
+    #[test]
+    fn stale_ids_are_dead() {
+        let mut t = JobTable::new();
+        let a = t.insert(0, 1, 1.0, 0.0);
+        t.remove(a);
+        let _b = t.insert(0, 1, 1.0, 0.5);
+        // The stale id must read as not-in-system even though the slot
+        // now holds a live job.
+        assert!(!t.in_system(a));
+        assert!(!t.is_queued(a));
+    }
+}

@@ -1,0 +1,196 @@
+//! Simulation output metrics: per-class response times, time-averaged
+//! occupancy and utilization, Jain fairness, weighted mean response time.
+
+use crate::util::stats::{jain_index, BatchMeans, TimeAverage, Welford};
+use crate::workload::Workload;
+
+/// Collects per-class and aggregate statistics; `reset` is called at the
+/// end of warmup so reported numbers cover only the measurement window.
+pub struct Metrics {
+    /// Response-time accumulators per class.
+    pub resp: Vec<Welford>,
+    /// Batch-means accumulator for the overall response time CI.
+    pub resp_all: BatchMeans,
+    /// Time-average of jobs-in-system per class.
+    pub n_avg: Vec<TimeAverage>,
+    /// Time-average of busy servers.
+    pub busy_avg: TimeAverage,
+    /// Completions counted (post-warmup).
+    pub completed: u64,
+    /// Measurement window start.
+    pub window_start: f64,
+    batch: u64,
+}
+
+impl Metrics {
+    pub fn new(num_classes: usize, batch: u64) -> Self {
+        Self {
+            resp: vec![Welford::new(); num_classes],
+            resp_all: BatchMeans::new(batch),
+            n_avg: vec![TimeAverage::new(); num_classes],
+            busy_avg: TimeAverage::new(),
+            completed: 0,
+            window_start: 0.0,
+            batch,
+        }
+    }
+
+    pub fn record_response(&mut self, class: usize, t: f64) {
+        self.resp[class].push(t);
+        self.resp_all.push(t);
+        self.completed += 1;
+    }
+
+    pub fn occupancy_changed(&mut self, now: f64, class: usize, n: u32) {
+        self.n_avg[class].update(now, n as f64);
+    }
+
+    pub fn busy_changed(&mut self, now: f64, busy: u32) {
+        self.busy_avg.update(now, busy as f64);
+    }
+
+    /// Drop warmup samples: zero all accumulators but re-seed the
+    /// time-averages at the current occupancy.
+    pub fn reset_at(&mut self, now: f64, n_by_class: &[u32], busy: u32) {
+        for w in &mut self.resp {
+            *w = Welford::new();
+        }
+        self.resp_all = BatchMeans::new(self.batch);
+        for (c, ta) in self.n_avg.iter_mut().enumerate() {
+            *ta = TimeAverage::new();
+            ta.update(now, n_by_class[c] as f64);
+        }
+        self.busy_avg = TimeAverage::new();
+        self.busy_avg.update(now, busy as f64);
+        self.completed = 0;
+        self.window_start = now;
+    }
+}
+
+/// Final, immutable result of one simulation run.
+#[derive(Clone, Debug)]
+pub struct SimResult {
+    pub policy: String,
+    /// Mean response time per class (NaN if no completions).
+    pub mean_t: Vec<f64>,
+    /// Completions per class.
+    pub count: Vec<u64>,
+    /// Time-average number in system per class.
+    pub mean_n: Vec<f64>,
+    /// Overall mean response time.
+    pub mean_t_all: f64,
+    /// 95% CI half-width for the overall mean (batch means).
+    pub ci95: f64,
+    /// Load-weighted mean response time E[T^w] (§6.1).
+    pub weighted_t: f64,
+    /// Jain fairness index over per-class means (Eq. C.1).
+    pub jain: f64,
+    /// Time-average busy servers / k.
+    pub utilization: f64,
+    /// Simulated (virtual) measurement time.
+    pub sim_time: f64,
+    /// Total events processed (incl. warmup).
+    pub events: u64,
+    /// Completions in the measurement window.
+    pub completed: u64,
+    /// Wall-clock seconds.
+    pub wall_s: f64,
+    /// Phase-duration statistics (when tracked).
+    pub phases: Option<crate::sim::phase::PhaseStats>,
+    /// Occupancy time-series (when recorded).
+    pub timeseries: Option<crate::sim::timeseries::Timeseries>,
+}
+
+impl SimResult {
+    pub fn from_metrics(
+        policy: &str,
+        m: &Metrics,
+        wl: &Workload,
+        now: f64,
+        events: u64,
+        wall_s: f64,
+    ) -> SimResult {
+        let nc = m.resp.len();
+        let mean_t: Vec<f64> = m.resp.iter().map(|w| w.mean()).collect();
+        let count: Vec<u64> = m.resp.iter().map(|w| w.count()).collect();
+        let mean_n: Vec<f64> = m.n_avg.iter().map(|ta| ta.average(now)).collect();
+        let mean_t_all = m.resp_all.mean();
+        // Load weights ρ_j = need_j · λ_j / μ_j from the workload spec.
+        let rho: Vec<f64> = (0..nc).map(|c| wl.rho_class(c)).collect();
+        let rho_tot: f64 = rho.iter().sum();
+        let weighted_t = if rho_tot > 0.0 {
+            (0..nc)
+                .map(|c| {
+                    if count[c] > 0 {
+                        rho[c] / rho_tot * mean_t[c]
+                    } else {
+                        0.0
+                    }
+                })
+                .sum()
+        } else {
+            f64::NAN
+        };
+        SimResult {
+            policy: policy.to_string(),
+            jain: jain_index(&mean_t),
+            mean_t,
+            count,
+            mean_n,
+            mean_t_all,
+            ci95: m.resp_all.ci95_half_width(),
+            weighted_t,
+            utilization: m.busy_avg.average(now) / wl.k as f64,
+            sim_time: now - m.window_start,
+            events,
+            completed: m.completed,
+            wall_s,
+            phases: None,
+            timeseries: None,
+        }
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<14} E[T]={:>9.3} ±{:<8.3} E[T^w]={:>10.3} util={:.3} jain={:.3} (n={})",
+            self.policy, self.mean_t_all, self.ci95, self.weighted_t, self.utilization, self.jain,
+            self.completed
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::Dist;
+    use crate::workload::{ClassSpec, Workload};
+
+    fn wl2() -> Workload {
+        Workload::new(
+            4,
+            vec![
+                ClassSpec::new(1, 1.0, Dist::exp_mean(1.0)),
+                ClassSpec::new(4, 0.25, Dist::exp_mean(1.0)),
+            ],
+        )
+    }
+
+    #[test]
+    fn weighted_mean_uses_load_shares() {
+        let wl = wl2();
+        let mut m = Metrics::new(2, 10);
+        for _ in 0..100 {
+            m.record_response(0, 1.0);
+            m.record_response(1, 3.0);
+        }
+        m.n_avg[0].update(0.0, 1.0);
+        m.n_avg[1].update(0.0, 1.0);
+        m.busy_avg.update(0.0, 2.0);
+        let r = SimResult::from_metrics("t", &m, &wl, 10.0, 200, 0.1);
+        // ρ_1 = 1·1/1 = 1, ρ_2 = 4·0.25/1 = 1 → weights 1/2, 1/2.
+        assert!((r.weighted_t - 2.0).abs() < 1e-12);
+        assert!((r.mean_t_all - 2.0).abs() < 1e-12);
+        assert!((r.utilization - 0.5).abs() < 1e-12);
+    }
+}

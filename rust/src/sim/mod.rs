@@ -1,0 +1,36 @@
+//! Discrete-event simulation of multiserver-job systems.
+
+pub mod engine;
+pub mod events;
+pub mod job;
+pub mod metrics;
+pub mod phase;
+pub mod timeseries;
+
+pub use engine::{Engine, SimConfig};
+pub use metrics::{Metrics, SimResult};
+pub use phase::PhaseStats;
+pub use timeseries::{Timeseries, TimeseriesSpec};
+
+use crate::policy::Policy;
+use crate::util::rng::Rng;
+use crate::workload::{SyntheticSource, Workload};
+
+/// Convenience: simulate `policy` on `wl` with default config and a seed.
+pub fn run(
+    wl: &Workload,
+    policy: &mut dyn Policy,
+    cfg: &SimConfig,
+    seed: u64,
+) -> SimResult {
+    let mut src = SyntheticSource::new(wl.clone());
+    let mut rng = Rng::new(seed);
+    let mut engine = Engine::new(wl, cfg.clone());
+    engine.run(&mut src, policy, &mut rng)
+}
+
+/// Convenience: simulate the named policy.
+pub fn run_named(wl: &Workload, policy: &str, cfg: &SimConfig, seed: u64) -> crate::Result<SimResult> {
+    let mut p = crate::policy::by_name(policy, wl)?;
+    Ok(run(wl, p.as_mut(), cfg, seed))
+}

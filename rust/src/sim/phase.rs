@@ -1,0 +1,120 @@
+//! Phase-duration tracking (reproduces Fig 4).
+//!
+//! Policies expose a [`crate::policy::PhaseLabel`] after every event; this
+//! tracker records the duration of each maximal run of a label. Label 0
+//! means "untracked" and is ignored.
+
+use crate::util::stats::Welford;
+
+pub const MAX_PHASE: usize = 5; // labels 1..=4 used by MSFQ/MSF
+
+#[derive(Clone, Debug)]
+pub struct PhaseStats {
+    /// Per-label duration accumulators (index = label).
+    pub durations: Vec<Welford>,
+    /// Number of completed visits per label.
+    pub visits: Vec<u64>,
+    /// Total time per label (for time-fraction m_i).
+    pub total_time: Vec<f64>,
+    current: u8,
+    since: f64,
+}
+
+impl PhaseStats {
+    pub fn new() -> Self {
+        Self {
+            durations: vec![Welford::new(); MAX_PHASE],
+            visits: vec![0; MAX_PHASE],
+            total_time: vec![0.0; MAX_PHASE],
+            current: 0,
+            since: 0.0,
+        }
+    }
+
+    /// Observe the label at time `now`; closes the previous run on change.
+    pub fn observe(&mut self, now: f64, label: u8) {
+        if label == self.current {
+            return;
+        }
+        self.close(now);
+        self.current = label;
+        self.since = now;
+    }
+
+    fn close(&mut self, now: f64) {
+        let c = self.current as usize;
+        if c != 0 && c < MAX_PHASE {
+            let d = now - self.since;
+            self.durations[c].push(d);
+            self.visits[c] += 1;
+            self.total_time[c] += d;
+        }
+    }
+
+    /// Reset at warmup boundary, preserving the in-progress label.
+    pub fn reset_at(&mut self, now: f64) {
+        let cur = self.current;
+        *self = PhaseStats::new();
+        self.current = cur;
+        self.since = now;
+    }
+
+    /// Finalize at simulation end.
+    pub fn finish(&mut self, now: f64) {
+        self.close(now);
+        self.current = 0;
+    }
+
+    /// Mean duration of phase `i` (label), NaN if never visited.
+    pub fn mean(&self, label: usize) -> f64 {
+        self.durations[label].mean()
+    }
+
+    /// Fraction of tracked time spent in phase `label` (Lemma 1's m_i,
+    /// relative to time covered by labels 1..=4).
+    pub fn fraction(&self, label: usize) -> f64 {
+        let tot: f64 = self.total_time.iter().sum();
+        if tot <= 0.0 {
+            f64::NAN
+        } else {
+            self.total_time[label] / tot
+        }
+    }
+}
+
+impl Default for PhaseStats {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tracks_runs() {
+        let mut p = PhaseStats::new();
+        p.observe(0.0, 1);
+        p.observe(2.0, 2); // phase 1 lasted 2
+        p.observe(3.0, 2); // no-op
+        p.observe(6.0, 1); // phase 2 lasted 4
+        p.finish(7.0); // phase 1 lasted 1
+        assert_eq!(p.visits[1], 2);
+        assert_eq!(p.visits[2], 1);
+        assert!((p.mean(1) - 1.5).abs() < 1e-12);
+        assert!((p.mean(2) - 4.0).abs() < 1e-12);
+        assert!((p.fraction(2) - 4.0 / 7.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn label_zero_ignored() {
+        let mut p = PhaseStats::new();
+        p.observe(0.0, 0);
+        p.observe(1.0, 1);
+        p.observe(2.0, 0);
+        p.finish(5.0);
+        assert_eq!(p.visits[1], 1);
+        assert!((p.mean(1) - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,178 @@
+//! Criterion-style benchmark harness (the registry has no criterion).
+//!
+//! Usage inside a `harness = false` bench target:
+//! ```no_run
+//! use quickswap::util::bench::Bench;
+//! let mut b = Bench::new("fig3_one_or_all");
+//! b.bench("msfq_lambda_7.5", || { /* workload */ });
+//! b.finish();
+//! ```
+//! Each benchmark is warmed up, then timed over adaptively-chosen
+//! iterations until a wall-time budget is met; reports mean, median, p95
+//! and stddev. Results are also appended to `target/bench_results.csv`.
+
+use std::time::{Duration, Instant};
+
+pub struct Bench {
+    group: String,
+    budget: Duration,
+    warmup: Duration,
+    results: Vec<BenchResult>,
+}
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub group: String,
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p95_ns: f64,
+    pub stddev_ns: f64,
+}
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+impl Bench {
+    pub fn new(group: &str) -> Self {
+        // QS_BENCH_FAST=1 shrinks budgets for CI runs.
+        let fast = std::env::var("QS_BENCH_FAST").ok().as_deref() == Some("1");
+        Self {
+            group: group.to_string(),
+            budget: if fast {
+                Duration::from_millis(300)
+            } else {
+                Duration::from_secs(2)
+            },
+            warmup: if fast {
+                Duration::from_millis(50)
+            } else {
+                Duration::from_millis(300)
+            },
+            results: Vec::new(),
+        }
+    }
+
+    pub fn with_budget(mut self, budget: Duration) -> Self {
+        self.budget = budget;
+        self
+    }
+
+    /// Time `f`, printing a criterion-like summary line.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        // Warmup and estimate per-iteration cost.
+        let wstart = Instant::now();
+        let mut witers = 0u64;
+        while wstart.elapsed() < self.warmup || witers == 0 {
+            f();
+            witers += 1;
+            if witers > 1_000_000 {
+                break;
+            }
+        }
+        let per_iter = wstart.elapsed().as_nanos() as f64 / witers as f64;
+        // Choose sample batching: aim for ~50 samples within budget.
+        let budget_ns = self.budget.as_nanos() as f64;
+        let samples = 50usize;
+        let iters_per_sample = ((budget_ns / samples as f64 / per_iter.max(1.0)) as u64).max(1);
+
+        let mut times = Vec::with_capacity(samples);
+        let start = Instant::now();
+        for _ in 0..samples {
+            let t0 = Instant::now();
+            for _ in 0..iters_per_sample {
+                f();
+            }
+            times.push(t0.elapsed().as_nanos() as f64 / iters_per_sample as f64);
+            if start.elapsed() > self.budget * 2 {
+                break;
+            }
+        }
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = times.len();
+        let mean = times.iter().sum::<f64>() / n as f64;
+        let median = times[n / 2];
+        let p95 = times[((n as f64 * 0.95) as usize).min(n - 1)];
+        let var = times.iter().map(|t| (t - mean) * (t - mean)).sum::<f64>() / n as f64;
+        let result = BenchResult {
+            group: self.group.clone(),
+            name: name.to_string(),
+            iters: iters_per_sample * n as u64,
+            mean_ns: mean,
+            median_ns: median,
+            p95_ns: p95,
+            stddev_ns: var.sqrt(),
+        };
+        println!(
+            "{}/{:<40} time: [{} {} {}]  (n={}, sd={})",
+            self.group,
+            name,
+            fmt_ns(median * 0.98),
+            fmt_ns(median),
+            fmt_ns(p95),
+            result.iters,
+            fmt_ns(result.stddev_ns),
+        );
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    /// Append all results to target/bench_results.csv and return them.
+    pub fn finish(self) -> Vec<BenchResult> {
+        let path = std::path::Path::new("target/bench_results.csv");
+        let existed = path.exists();
+        if let Ok(mut f) = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)
+        {
+            use std::io::Write;
+            if !existed {
+                let _ = writeln!(f, "group,name,iters,mean_ns,median_ns,p95_ns,stddev_ns");
+            }
+            for r in &self.results {
+                let _ = writeln!(
+                    f,
+                    "{},{},{},{:.1},{:.1},{:.1},{:.1}",
+                    r.group, r.name, r.iters, r.mean_ns, r.median_ns, r.p95_ns, r.stddev_ns
+                );
+            }
+        }
+        self.results
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        std::env::set_var("QS_BENCH_FAST", "1");
+        let mut b = Bench::new("self_test").with_budget(Duration::from_millis(50));
+        let r = b
+            .bench("sum_1k", || {
+                let s: u64 = black_box((0..1000u64).sum());
+                black_box(s);
+            })
+            .clone();
+        assert!(r.mean_ns > 0.0);
+        assert!(r.iters > 0);
+    }
+}

@@ -1,0 +1,190 @@
+//! Tiny declarative CLI parser (clap substitute): subcommands, `--flag`,
+//! `--key value` / `--key=value` options with typed accessors and
+//! generated `--help` text.
+
+use std::collections::BTreeMap;
+
+/// Declared option for help text.
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<String>,
+}
+
+/// Parsed arguments for one (sub)command invocation.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("missing required option --{0}")]
+    Missing(&'static str),
+    #[error("invalid value for --{0}: {1}")]
+    Invalid(&'static str, String),
+    #[error("{0}")]
+    Usage(String),
+}
+
+impl Args {
+    /// Parse a raw argv tail (after the subcommand name).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args, CliError> {
+        let mut a = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(rest) = tok.strip_prefix("--") {
+                if rest.is_empty() {
+                    // `--` terminates options.
+                    a.positional.extend(it);
+                    break;
+                }
+                if let Some((k, v)) = rest.split_once('=') {
+                    a.opts.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--") || n.parse::<f64>().is_ok())
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    a.opts.insert(rest.to_string(), v);
+                } else {
+                    a.flags.push(rest.to_string());
+                }
+            } else {
+                a.positional.push(tok);
+            }
+        }
+        Ok(a)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name) || self.opts.get(name).map(|v| v == "true").unwrap_or(false)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn f64_or(&self, name: &'static str, default: f64) -> Result<f64, CliError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError::Invalid(name, v.to_string())),
+        }
+    }
+
+    pub fn u64_or(&self, name: &'static str, default: u64) -> Result<u64, CliError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError::Invalid(name, v.to_string())),
+        }
+    }
+
+    pub fn usize_or(&self, name: &'static str, default: usize) -> Result<usize, CliError> {
+        Ok(self.u64_or(name, default as u64)? as usize)
+    }
+
+    pub fn required(&self, name: &'static str) -> Result<&str, CliError> {
+        self.get(name).ok_or(CliError::Missing(name))
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// Comma-separated f64 list, e.g. `--rates 1.0,2.5,7.5`.
+    pub fn f64_list(&self, name: &'static str, default: &[f64]) -> Result<Vec<f64>, CliError> {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|x| {
+                    x.trim()
+                        .parse()
+                        .map_err(|_| CliError::Invalid(name, v.to_string()))
+                })
+                .collect(),
+        }
+    }
+}
+
+/// Render a help screen for a command with subcommands/options.
+pub fn render_help(
+    program: &str,
+    about: &str,
+    subcommands: &[(&str, &str)],
+    options: &[OptSpec],
+) -> String {
+    let mut s = format!("{program} — {about}\n\nUSAGE:\n  {program} <command> [options]\n");
+    if !subcommands.is_empty() {
+        s.push_str("\nCOMMANDS:\n");
+        for (name, help) in subcommands {
+            s.push_str(&format!("  {name:<14} {help}\n"));
+        }
+    }
+    if !options.is_empty() {
+        s.push_str("\nOPTIONS:\n");
+        for o in options {
+            let d = o
+                .default
+                .as_ref()
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            s.push_str(&format!("  --{:<16} {}{}\n", o.name, o.help, d));
+        }
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toks: &[&str]) -> Args {
+        Args::parse(toks.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn options_flags_positionals() {
+        let a = parse(&[
+            "run", "--k", "32", "--lambda=7.5", "--verbose", "--out", "x.csv",
+        ]);
+        assert_eq!(a.positional(), &["run".to_string()]);
+        assert_eq!(a.u64_or("k", 0).unwrap(), 32);
+        assert_eq!(a.f64_or("lambda", 0.0).unwrap(), 7.5);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.get("out"), Some("x.csv"));
+    }
+
+    #[test]
+    fn negative_numbers_as_values() {
+        let a = parse(&["--offset", "-3.5"]);
+        assert_eq!(a.f64_or("offset", 0.0).unwrap(), -3.5);
+    }
+
+    #[test]
+    fn lists_and_defaults() {
+        let a = parse(&["--rates", "1,2,3.5"]);
+        assert_eq!(a.f64_list("rates", &[]).unwrap(), vec![1.0, 2.0, 3.5]);
+        assert_eq!(a.f64_list("other", &[9.0]).unwrap(), vec![9.0]);
+        assert_eq!(a.str_or("mode", "sim"), "sim");
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        let a = parse(&[]);
+        assert!(a.required("k").is_err());
+        assert!(parse(&["--k", "abc"]).u64_or("k", 1).is_err());
+    }
+}

@@ -1,0 +1,143 @@
+//! CSV writing/reading for experiment outputs and trace files.
+//! Quoting is supported on read; experiment writers only emit
+//! numeric/simple-identifier cells so writes stay unquoted.
+
+use std::fs::File;
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::Path;
+
+/// Incremental CSV writer with a fixed header.
+pub struct CsvWriter<W: Write> {
+    w: W,
+    cols: usize,
+}
+
+impl CsvWriter<BufWriter<File>> {
+    pub fn create(path: impl AsRef<Path>, header: &[&str]) -> std::io::Result<Self> {
+        if let Some(dir) = path.as_ref().parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let f = BufWriter::new(File::create(path)?);
+        Self::new(f, header)
+    }
+}
+
+impl<W: Write> CsvWriter<W> {
+    pub fn new(mut w: W, header: &[&str]) -> std::io::Result<Self> {
+        writeln!(w, "{}", header.join(","))?;
+        Ok(Self {
+            w,
+            cols: header.len(),
+        })
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> std::io::Result<()> {
+        assert_eq!(cells.len(), self.cols, "csv row width mismatch");
+        writeln!(self.w, "{}", cells.join(","))
+    }
+
+    pub fn row_f64(&mut self, cells: &[f64]) -> std::io::Result<()> {
+        let cells: Vec<String> = cells.iter().map(|x| format_g(*x)).collect();
+        self.row(&cells)
+    }
+
+    pub fn flush(&mut self) -> std::io::Result<()> {
+        self.w.flush()
+    }
+}
+
+/// Compact float formatting (up to 9 significant digits, no trailing zeros).
+pub fn format_g(x: f64) -> String {
+    if x.is_nan() {
+        return "nan".into();
+    }
+    if x == x.trunc() && x.abs() < 1e15 {
+        return format!("{}", x as i64);
+    }
+    let s = format!("{x:.9}");
+    let s = s.trim_end_matches('0').trim_end_matches('.');
+    s.to_string()
+}
+
+/// Parse a CSV file into (header, rows of string cells).
+pub fn read_csv(path: impl AsRef<Path>) -> std::io::Result<(Vec<String>, Vec<Vec<String>>)> {
+    let f = BufReader::new(File::open(path)?);
+    let mut lines = f.lines();
+    let header = match lines.next() {
+        Some(h) => split_line(&h?),
+        None => return Ok((vec![], vec![])),
+    };
+    let mut rows = Vec::new();
+    for line in lines {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        rows.push(split_line(&line));
+    }
+    Ok((header, rows))
+}
+
+/// Split a CSV line, honoring double-quoted cells with `""` escapes.
+pub fn split_line(line: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut cur = String::new();
+    let mut quoted = false;
+    let mut chars = line.chars().peekable();
+    while let Some(c) = chars.next() {
+        match c {
+            '"' if quoted => {
+                if chars.peek() == Some(&'"') {
+                    chars.next();
+                    cur.push('"');
+                } else {
+                    quoted = false;
+                }
+            }
+            '"' if cur.is_empty() => quoted = true,
+            ',' if !quoted => {
+                out.push(std::mem::take(&mut cur));
+            }
+            c => cur.push(c),
+        }
+    }
+    out.push(cur);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn write_and_read_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("qs_csv_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.csv");
+        {
+            let mut w = CsvWriter::create(&path, &["a", "b"]).unwrap();
+            w.row_f64(&[1.0, 2.5]).unwrap();
+            w.row(&["x".into(), "y".into()]).unwrap();
+            w.flush().unwrap();
+        }
+        let (h, rows) = read_csv(&path).unwrap();
+        assert_eq!(h, vec!["a", "b"]);
+        assert_eq!(rows, vec![vec!["1", "2.5"], vec!["x", "y"]]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn quoted_cells() {
+        assert_eq!(
+            split_line(r#"a,"b,c","d""e""#),
+            vec!["a", "b,c", r#"d"e"#]
+        );
+    }
+
+    #[test]
+    fn format_g_compact() {
+        assert_eq!(format_g(3.0), "3");
+        assert_eq!(format_g(0.25), "0.25");
+        assert_eq!(format_g(f64::NAN), "nan");
+    }
+}

@@ -1,0 +1,15 @@
+//! In-tree substrates.
+//!
+//! The build environment is fully offline and its registry carries only the
+//! `xla` crate's transitive closure, so the usual ecosystem crates (rand,
+//! serde, clap, criterion, proptest, tokio) are unavailable. Everything a
+//! downstream user would expect from those is implemented here with
+//! equivalent observable behaviour (documented in DESIGN.md §4).
+
+pub mod bench;
+pub mod cli;
+pub mod csv;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod stats;

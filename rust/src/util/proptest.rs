@@ -1,0 +1,130 @@
+//! Property-based testing harness (proptest substitute): random case
+//! generation from a seeded RNG, failure reporting with the seed and case
+//! index for reproduction, and greedy input shrinking for integer vectors.
+
+use crate::util::rng::Rng;
+
+/// Number of cases per property (override with QS_PROP_CASES).
+pub fn default_cases() -> usize {
+    std::env::var("QS_PROP_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(128)
+}
+
+/// Run `prop` on `cases` random inputs produced by `gen`.
+/// Panics with seed/case diagnostics on the first failure.
+pub fn check<T: std::fmt::Debug, G, P>(name: &str, mut gen: G, mut prop: P)
+where
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    let seed = std::env::var("QS_PROP_SEED")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0xC0FFEE_u64);
+    let cases = default_cases();
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property '{name}' failed (seed={seed}, case={case}):\n  input: {input:?}\n  error: {msg}"
+            );
+        }
+    }
+}
+
+/// Shrinkable u64-vector property: on failure, greedily tries removing
+/// elements and halving values to find a smaller failing input.
+pub fn check_vec_u64<P>(name: &str, len_range: (usize, usize), max_val: u64, mut prop: P)
+where
+    P: FnMut(&[u64]) -> Result<(), String>,
+{
+    let seed = std::env::var("QS_PROP_SEED")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0xC0FFEE_u64);
+    let mut rng = Rng::new(seed);
+    for case in 0..default_cases() {
+        let len = len_range.0 + rng.index(len_range.1 - len_range.0 + 1);
+        let input: Vec<u64> = (0..len).map(|_| rng.below(max_val + 1)).collect();
+        if let Err(first_msg) = prop(&input) {
+            let (shrunk, msg) = shrink(input, first_msg, &mut prop);
+            panic!(
+                "property '{name}' failed (seed={seed}, case={case}):\n  shrunk input: {shrunk:?}\n  error: {msg}"
+            );
+        }
+    }
+}
+
+fn shrink<P>(mut input: Vec<u64>, mut msg: String, prop: &mut P) -> (Vec<u64>, String)
+where
+    P: FnMut(&[u64]) -> Result<(), String>,
+{
+    loop {
+        let mut improved = false;
+        // Try removing each element.
+        let mut i = 0;
+        while i < input.len() {
+            let mut cand = input.clone();
+            cand.remove(i);
+            if let Err(m) = prop(&cand) {
+                input = cand;
+                msg = m;
+                improved = true;
+            } else {
+                i += 1;
+            }
+        }
+        // Try halving each value.
+        for i in 0..input.len() {
+            while input[i] > 0 {
+                let mut cand = input.clone();
+                cand[i] /= 2;
+                if let Err(m) = prop(&cand) {
+                    input = cand;
+                    msg = m;
+                    improved = true;
+                } else {
+                    break;
+                }
+            }
+        }
+        if !improved {
+            return (input, msg);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(
+            "sum_commutes",
+            |r| (r.below(100), r.below(100)),
+            |(a, b)| {
+                if a + b == b + a {
+                    Ok(())
+                } else {
+                    Err("math broke".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "shrunk input")]
+    fn failing_property_shrinks() {
+        check_vec_u64("no_big_values", (0, 20), 1000, |v| {
+            if v.iter().any(|&x| x > 500) {
+                Err(format!("found {v:?}"))
+            } else {
+                Ok(())
+            }
+        });
+    }
+}

@@ -1,0 +1,344 @@
+//! Streaming statistics: Welford accumulators, batch-means confidence
+//! intervals, and a fixed-memory streaming histogram for tail metrics.
+
+/// Welford online mean/variance accumulator.
+#[derive(Clone, Debug, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Welford {
+    pub fn new() -> Self {
+        Self {
+            n: 0,
+            mean: 0.0,
+            m2: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    #[inline]
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        if x < self.min {
+            self.min = x;
+        }
+        if x > self.max {
+            self.max = x;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            f64::NAN
+        } else {
+            self.mean
+        }
+    }
+
+    /// Sample variance (n−1 denominator).
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            f64::NAN
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std_dev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    /// Second raw moment E[X²].
+    pub fn second_moment(&self) -> f64 {
+        if self.n == 0 {
+            f64::NAN
+        } else {
+            self.m2 / self.n as f64 + self.mean * self.mean
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Merge another accumulator (parallel replication combine).
+    pub fn merge(&mut self, o: &Welford) {
+        if o.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = o.clone();
+            return;
+        }
+        let n = self.n + o.n;
+        let d = o.mean - self.mean;
+        self.m2 += o.m2 + d * d * (self.n as f64 * o.n as f64) / n as f64;
+        self.mean += d * o.n as f64 / n as f64;
+        self.n = n;
+        self.min = self.min.min(o.min);
+        self.max = self.max.max(o.max);
+    }
+}
+
+/// Batch-means confidence intervals for correlated (steady-state
+/// simulation) output: samples are grouped into `batches` consecutive
+/// batches, and the batch means are treated as ~i.i.d.
+#[derive(Clone, Debug)]
+pub struct BatchMeans {
+    batch_size: u64,
+    current: Welford,
+    batch_means: Vec<f64>,
+    overall: Welford,
+}
+
+impl BatchMeans {
+    pub fn new(batch_size: u64) -> Self {
+        assert!(batch_size > 0);
+        Self {
+            batch_size,
+            current: Welford::new(),
+            batch_means: Vec::new(),
+            overall: Welford::new(),
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.overall.push(x);
+        self.current.push(x);
+        if self.current.count() == self.batch_size {
+            self.batch_means.push(self.current.mean());
+            self.current = Welford::new();
+        }
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.overall.mean()
+    }
+
+    pub fn count(&self) -> u64 {
+        self.overall.count()
+    }
+
+    pub fn num_batches(&self) -> usize {
+        self.batch_means.len()
+    }
+
+    /// 95% CI half-width from the batch means (normal approximation,
+    /// z=1.96; requires ≥2 completed batches).
+    pub fn ci95_half_width(&self) -> f64 {
+        let m = self.batch_means.len();
+        if m < 2 {
+            return f64::NAN;
+        }
+        let mut w = Welford::new();
+        for &b in &self.batch_means {
+            w.push(b);
+        }
+        1.96 * (w.variance() / m as f64).sqrt()
+    }
+}
+
+/// Fixed-memory log-scale histogram (bins per decade) for response-time
+/// tails. Range: [1e-9, 1e9); out-of-range values clamp to edge bins.
+#[derive(Clone, Debug)]
+pub struct LogHistogram {
+    counts: Vec<u64>,
+    #[allow(dead_code)]
+    per_decade: usize,
+    total: u64,
+}
+
+const LOG_MIN: f64 = -9.0;
+const LOG_MAX: f64 = 9.0;
+
+impl LogHistogram {
+    pub fn new(per_decade: usize) -> Self {
+        let decades = (LOG_MAX - LOG_MIN) as usize;
+        Self {
+            counts: vec![0; decades * per_decade],
+            per_decade,
+            total: 0,
+        }
+    }
+
+    fn bin_of(&self, x: f64) -> usize {
+        let lx = if x <= 0.0 { LOG_MIN } else { x.log10() };
+        let pos = (lx - LOG_MIN) / (LOG_MAX - LOG_MIN);
+        let b = (pos * self.counts.len() as f64) as isize;
+        b.clamp(0, self.counts.len() as isize - 1) as usize
+    }
+
+    pub fn push(&mut self, x: f64) {
+        let b = self.bin_of(x);
+        self.counts[b] += 1;
+        self.total += 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    /// Approximate quantile (upper edge of the bin containing it).
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return f64::NAN;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.total as f64).ceil() as u64;
+        let mut acc = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target.max(1) {
+                let frac = (i + 1) as f64 / self.counts.len() as f64;
+                return 10f64.powf(LOG_MIN + frac * (LOG_MAX - LOG_MIN));
+            }
+        }
+        10f64.powf(LOG_MAX)
+    }
+}
+
+/// Jain's fairness index over per-class mean response times (Eq. C.1).
+pub fn jain_index(values: &[f64]) -> f64 {
+    let vals: Vec<f64> = values.iter().copied().filter(|v| v.is_finite()).collect();
+    if vals.is_empty() {
+        return f64::NAN;
+    }
+    let s: f64 = vals.iter().sum();
+    let s2: f64 = vals.iter().map(|v| v * v).sum();
+    if s2 == 0.0 {
+        return 1.0;
+    }
+    s * s / (vals.len() as f64 * s2)
+}
+
+/// Time-weighted average of a piecewise-constant process (e.g. number of
+/// jobs in system): accumulates `value × dt` between updates.
+#[derive(Clone, Debug, Default)]
+pub struct TimeAverage {
+    last_t: f64,
+    last_v: f64,
+    area: f64,
+    start_t: f64,
+    started: bool,
+}
+
+impl TimeAverage {
+    pub fn new() -> Self {
+        Default::default()
+    }
+
+    /// Record that the process had value `v` starting at time `t`.
+    pub fn update(&mut self, t: f64, v: f64) {
+        if !self.started {
+            self.start_t = t;
+            self.started = true;
+        } else {
+            self.area += self.last_v * (t - self.last_t);
+        }
+        self.last_t = t;
+        self.last_v = v;
+    }
+
+    /// Time average up to time `t_end` (process held at its last value).
+    pub fn average(&self, t_end: f64) -> f64 {
+        if !self.started || t_end <= self.start_t {
+            return f64::NAN;
+        }
+        let area = self.area + self.last_v * (t_end - self.last_t);
+        area / (t_end - self.start_t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn welford_basic() {
+        let mut w = Welford::new();
+        for x in [1.0, 2.0, 3.0, 4.0] {
+            w.push(x);
+        }
+        assert_eq!(w.count(), 4);
+        assert!((w.mean() - 2.5).abs() < 1e-12);
+        assert!((w.variance() - 5.0 / 3.0).abs() < 1e-12);
+        assert!((w.second_moment() - 7.5).abs() < 1e-12);
+        assert_eq!(w.min(), 1.0);
+        assert_eq!(w.max(), 4.0);
+    }
+
+    #[test]
+    fn welford_merge_equals_sequential() {
+        let xs: Vec<f64> = (0..100).map(|i| (i as f64).sin() * 10.0).collect();
+        let mut all = Welford::new();
+        for &x in &xs {
+            all.push(x);
+        }
+        let mut a = Welford::new();
+        let mut b = Welford::new();
+        for &x in &xs[..37] {
+            a.push(x);
+        }
+        for &x in &xs[37..] {
+            b.push(x);
+        }
+        a.merge(&b);
+        assert!((a.mean() - all.mean()).abs() < 1e-10);
+        assert!((a.variance() - all.variance()).abs() < 1e-10);
+    }
+
+    #[test]
+    fn batch_means_ci_shrinks() {
+        let mut bm = BatchMeans::new(100);
+        let mut r = crate::util::rng::Rng::new(3);
+        for _ in 0..100_00 {
+            bm.push(r.f64());
+        }
+        assert!(bm.num_batches() >= 90);
+        let hw = bm.ci95_half_width();
+        assert!(hw > 0.0 && hw < 0.02, "hw={hw}");
+        assert!((bm.mean() - 0.5).abs() < 0.02);
+    }
+
+    #[test]
+    fn jain_uniform_is_one() {
+        assert!((jain_index(&[2.0, 2.0, 2.0]) - 1.0).abs() < 1e-12);
+        // Fully skewed → 1/n.
+        let j = jain_index(&[1.0, 0.0, 0.0, 0.0]);
+        assert!((j - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn time_average_piecewise() {
+        let mut ta = TimeAverage::new();
+        ta.update(0.0, 1.0); // value 1 on [0,2)
+        ta.update(2.0, 3.0); // value 3 on [2,4)
+        assert!((ta.average(4.0) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn log_histogram_quantiles() {
+        let mut h = LogHistogram::new(32);
+        for i in 1..=1000 {
+            h.push(i as f64 / 100.0); // 0.01 .. 10
+        }
+        let med = h.quantile(0.5);
+        assert!(med > 3.0 && med < 8.0, "med={med}");
+    }
+}

@@ -1,0 +1,254 @@
+//! Workload specification and arrival sources.
+
+pub mod borg;
+pub mod trace;
+
+use crate::dist::Dist;
+use crate::util::rng::Rng;
+
+/// One job class: all class members need `need` servers; sizes are drawn
+/// i.i.d. from `size`; arrivals are Poisson with rate `rate`.
+#[derive(Clone, Debug)]
+pub struct ClassSpec {
+    pub need: u32,
+    pub rate: f64,
+    pub size: Dist,
+    pub name: String,
+}
+
+impl ClassSpec {
+    pub fn new(need: u32, rate: f64, size: Dist) -> ClassSpec {
+        ClassSpec {
+            name: format!("c{need}"),
+            need,
+            rate,
+            size,
+        }
+    }
+
+    pub fn named(mut self, name: &str) -> ClassSpec {
+        self.name = name.to_string();
+        self
+    }
+}
+
+/// A multiserver-job workload: `k` servers and a set of job classes.
+#[derive(Clone, Debug)]
+pub struct Workload {
+    pub k: u32,
+    pub classes: Vec<ClassSpec>,
+}
+
+impl Workload {
+    pub fn new(k: u32, classes: Vec<ClassSpec>) -> Workload {
+        assert!(k >= 1);
+        for c in &classes {
+            assert!(c.need >= 1 && c.need <= k, "class need must be in [1,k]");
+            assert!(c.rate >= 0.0);
+        }
+        Workload { k, classes }
+    }
+
+    /// The paper's one-or-all workload: class-1 ("light") and class-k
+    /// ("heavy") jobs; `lambda` is the total arrival rate, `p1` the light
+    /// fraction. Class 0 = light, class 1 = heavy.
+    pub fn one_or_all(k: u32, lambda: f64, p1: f64, mu1: f64, muk: f64) -> Workload {
+        Workload::new(
+            k,
+            vec![
+                ClassSpec::new(1, lambda * p1, Dist::Exp { mu: mu1 }).named("light"),
+                ClassSpec::new(k, lambda * (1.0 - p1), Dist::Exp { mu: muk }).named("heavy"),
+            ],
+        )
+    }
+
+    /// The Fig-5 4-class workload: k=15, needs {1,3,5,15},
+    /// p = {0.5, 0.25, 0.2, 0.05}, unit mean sizes, total rate `lambda`.
+    pub fn four_class(lambda: f64) -> Workload {
+        let p = [0.5, 0.25, 0.2, 0.05];
+        let needs = [1u32, 3, 5, 15];
+        Workload::new(
+            15,
+            needs
+                .iter()
+                .zip(p.iter())
+                .map(|(&n, &pi)| ClassSpec::new(n, lambda * pi, Dist::exp_mean(1.0)))
+                .collect(),
+        )
+    }
+
+    pub fn num_classes(&self) -> usize {
+        self.classes.len()
+    }
+
+    pub fn needs(&self) -> Vec<u32> {
+        self.classes.iter().map(|c| c.need).collect()
+    }
+
+    /// Total arrival rate λ.
+    pub fn total_rate(&self) -> f64 {
+        self.classes.iter().map(|c| c.rate).sum()
+    }
+
+    /// Load contributed by class `c`: ρ_c = need·λ_c·E[S_c] / k? —
+    /// NOTE: the paper defines ρ_j = j·λ_j/μ_j (server-hours per unit
+    /// time, *not* normalized by k); `rho_class` follows the paper.
+    pub fn rho_class(&self, c: usize) -> f64 {
+        let cl = &self.classes[c];
+        cl.need as f64 * cl.rate * cl.size.mean()
+    }
+
+    /// Normalized total system load ρ/k ∈ [0, 1) for stability.
+    pub fn load(&self) -> f64 {
+        (0..self.classes.len())
+            .map(|c| self.rho_class(c))
+            .sum::<f64>()
+            / self.k as f64
+    }
+
+    /// Upper bound on any policy's stability (Theorem 4 / Remark 1):
+    /// stable only if Σ_j λ_j/((k/j)·μ_j) < 1, i.e. `load() < 1`.
+    /// Returns the critical total arrival rate λ* keeping class mix fixed.
+    pub fn lambda_critical(&self) -> f64 {
+        let lam = self.total_rate();
+        if lam == 0.0 {
+            return f64::INFINITY;
+        }
+        lam / self.load().max(1e-300) * 1.0
+    }
+
+    /// Sufficient stability bound for Static Quickswap (Remark 1):
+    /// Σ_j λ_j/(⌊k/j⌋·μ_j) < 1. Returns critical λ with mix fixed.
+    pub fn lambda_critical_floored(&self) -> f64 {
+        let lam = self.total_rate();
+        let denom: f64 = self
+            .classes
+            .iter()
+            .map(|c| c.rate * c.size.mean() / (self.k / c.need) as f64)
+            .sum();
+        if denom <= 0.0 {
+            f64::INFINITY
+        } else {
+            lam / denom
+        }
+    }
+
+    /// Same workload with total arrival rate scaled to `lambda`
+    /// (class mix preserved).
+    pub fn with_total_rate(&self, lambda: f64) -> Workload {
+        let cur = self.total_rate();
+        assert!(cur > 0.0);
+        let mut wl = self.clone();
+        for c in &mut wl.classes {
+            c.rate *= lambda / cur;
+        }
+        wl
+    }
+
+    /// True if this is a one-or-all workload (needs ⊆ {1, k}).
+    pub fn is_one_or_all(&self) -> bool {
+        self.classes.iter().all(|c| c.need == 1 || c.need == self.k)
+    }
+}
+
+/// One arrival produced by a source.
+#[derive(Clone, Copy, Debug)]
+pub struct Arrival {
+    /// Absolute arrival time.
+    pub t: f64,
+    pub class: usize,
+    /// Service requirement (duration on `need` servers).
+    pub size: f64,
+}
+
+/// Produces the arrival stream consumed by the engine.
+pub trait ArrivalSource {
+    /// The next arrival at or after the previous one, or None when the
+    /// stream is exhausted (finite traces).
+    fn next_arrival(&mut self, rng: &mut Rng) -> Option<Arrival>;
+    fn workload(&self) -> &Workload;
+}
+
+/// Poisson arrivals per class with i.i.d. sizes (the paper's model).
+pub struct SyntheticSource {
+    wl: Workload,
+    t: f64,
+    total_rate: f64,
+    weights: Vec<f64>,
+}
+
+impl SyntheticSource {
+    pub fn new(wl: Workload) -> SyntheticSource {
+        let total_rate = wl.total_rate();
+        assert!(total_rate > 0.0, "workload has zero arrival rate");
+        let weights = wl.classes.iter().map(|c| c.rate).collect();
+        SyntheticSource {
+            wl,
+            t: 0.0,
+            total_rate,
+            weights,
+        }
+    }
+}
+
+impl ArrivalSource for SyntheticSource {
+    #[inline]
+    fn next_arrival(&mut self, rng: &mut Rng) -> Option<Arrival> {
+        self.t += rng.exp(self.total_rate);
+        let class = rng.discrete(&self.weights);
+        let size = self.wl.classes[class].size.sample(rng);
+        Some(Arrival {
+            t: self.t,
+            class,
+            size,
+        })
+    }
+
+    fn workload(&self) -> &Workload {
+        &self.wl
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn one_or_all_loads() {
+        // k=32, λ=7.5, p1=0.9, μ=1: ρ = (0.9·7.5·1 + 0.1·7.5·32)/32.
+        let wl = Workload::one_or_all(32, 7.5, 0.9, 1.0, 1.0);
+        let expect = (0.9 * 7.5 + 0.1 * 7.5 * 32.0) / 32.0;
+        assert!((wl.load() - expect).abs() < 1e-12);
+        assert!(wl.is_one_or_all());
+        // Critical λ: load scales linearly in λ.
+        let crit = wl.lambda_critical();
+        assert!((wl.with_total_rate(crit).load() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn four_class_critical_rate_is_five() {
+        // All needs divide k=15 ⇒ ⌊k/j⌋ = k/j and λ* = 5 (paper §6.3).
+        let wl = Workload::four_class(1.0);
+        assert!((wl.lambda_critical() - 5.0).abs() < 1e-9);
+        assert!((wl.lambda_critical_floored() - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn synthetic_interarrivals_match_rate() {
+        let wl = Workload::one_or_all(8, 4.0, 0.5, 1.0, 1.0);
+        let mut src = SyntheticSource::new(wl);
+        let mut rng = Rng::new(1);
+        let n = 100_000;
+        let mut last = 0.0;
+        let mut counts = [0u64; 2];
+        for _ in 0..n {
+            let a = src.next_arrival(&mut rng).unwrap();
+            assert!(a.t >= last);
+            last = a.t;
+            counts[a.class] += 1;
+        }
+        let rate = n as f64 / last;
+        assert!((rate - 4.0).abs() < 0.05, "rate={rate}");
+        assert!((counts[0] as f64 / n as f64 - 0.5).abs() < 0.01);
+    }
+}

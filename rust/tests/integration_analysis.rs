@@ -1,0 +1,99 @@
+//! Integration: the three analysis paths (Theorem-2 calculator, sparse
+//! CTMC, DES simulation) must tell one consistent story.
+
+use quickswap::analysis::{analyze, best_threshold, MsfqCtmc, MsfqParams};
+use quickswap::sim::{run_named, SimConfig};
+use quickswap::workload::Workload;
+
+/// Calculator vs near-exact CTMC at k=8 across loads: the Theorem-2
+/// approximation is accurate at moderate-to-high load (paper §5.2 notes
+/// it is an approximation; tolerances widen at low load).
+#[test]
+fn calculator_tracks_ctmc() {
+    // Tolerances reflect that Theorem 2 is an approximation (§5.2); at
+    // k=8 and ρ→1 the k-light phase-2 start assumption costs ~12%.
+    for (lambda, tol) in [(3.2, 0.25), (4.0, 0.12), (4.4, 0.15)] {
+        let p = MsfqParams::standard(8, 7, lambda, 0.9);
+        let a = analyze(&p).unwrap();
+        let c = MsfqCtmc::new(&p, 256, 64).solve(300_000, 1e-11);
+        let rel = (a.et - c.et).abs() / c.et;
+        assert!(
+            rel < tol,
+            "λ={lambda}: calculator {} vs CTMC {} (rel {rel:.3})",
+            a.et,
+            c.et
+        );
+    }
+}
+
+/// Phase-fraction agreement: m1 (time serving heavies) from the
+/// calculator matches the CTMC's stationary fraction.
+#[test]
+fn phase_fractions_agree() {
+    let p = MsfqParams::standard(8, 7, 4.2, 0.9);
+    let a = analyze(&p).unwrap();
+    let c = MsfqCtmc::new(&p, 256, 64).solve(300_000, 1e-11);
+    // CTMC m1 excludes idle; calculator's m1 is per busy-cycle. At high
+    // load idle ≈ 0 and the two coincide.
+    let m1_ctmc = c.m1 / (1.0 - c.idle);
+    assert!(
+        (a.m[1] - m1_ctmc).abs() < 0.05,
+        "m1: calculator {} vs CTMC {}",
+        a.m[1],
+        m1_ctmc
+    );
+}
+
+/// The calculator's threshold ranking is borne out by simulation:
+/// simulate at the calculator's best ℓ and at ℓ=0 (MSF).
+#[test]
+fn threshold_choice_validates_in_simulation() {
+    let (k, lambda) = (16u32, 3.8); // rho ≈ 0.93... (0.9·3.8/16 + 0.1·3.8)
+    let p = MsfqParams::standard(k, 0, lambda, 0.9);
+    let (best_ell, predicted) = best_threshold(k, p.lam1, p.lamk, p.mu1, p.muk, false).unwrap();
+    assert!(best_ell > 0);
+    let wl = Workload::one_or_all(k, lambda, 0.9, 1.0, 1.0);
+    let cfg = SimConfig {
+        target_completions: 300_000,
+        warmup_completions: 60_000,
+        ..Default::default()
+    };
+    let best = run_named(&wl, &format!("msfq:{best_ell}"), &cfg, 31).unwrap();
+    let msf = run_named(&wl, "msf", &cfg, 31).unwrap();
+    assert!(
+        best.mean_t_all < msf.mean_t_all,
+        "chosen ℓ={best_ell} ({}) must beat MSF ({})",
+        best.mean_t_all,
+        msf.mean_t_all
+    );
+    let rel = (best.mean_t_all - predicted).abs() / predicted;
+    assert!(rel < 0.25, "prediction {predicted} vs sim {} (rel {rel})", best.mean_t_all);
+}
+
+/// Stability boundaries (Theorems 3/4): just inside the region the
+/// calculator succeeds; outside it must refuse.
+#[test]
+fn stability_region_boundaries() {
+    // k=32, p1=0.9: λ* = 1/(0.9/32 + 0.1) ≈ 7.805.
+    let lam_star = 1.0 / (0.9 / 32.0 + 0.1);
+    assert!(analyze(&MsfqParams::standard(32, 31, lam_star * 0.99, 0.9)).is_ok());
+    assert!(analyze(&MsfqParams::standard(32, 31, lam_star * 1.01, 0.9)).is_err());
+    assert!(analyze(&MsfqParams::standard(32, 0, lam_star * 1.01, 0.9)).is_err());
+}
+
+/// MSF phase blowup (§4.1): phase durations explode with load under
+/// MSF but stay moderate under MSFQ — the calculator shows the same
+/// contrast the simulation does (Fig 4).
+#[test]
+fn msf_phase_blowup_vs_msfq() {
+    let lo = analyze(&MsfqParams::standard(32, 0, 6.0, 0.9)).unwrap();
+    let hi = analyze(&MsfqParams::standard(32, 0, 7.5, 0.9)).unwrap();
+    let q = analyze(&MsfqParams::standard(32, 31, 7.5, 0.9)).unwrap();
+    // MSF's light-serving phase grows superlinearly in load.
+    assert!(hi.eh[2] > 4.0 * lo.eh[2]);
+    // MSFQ keeps the cycle short.
+    assert!(q.eh[2] < hi.eh[2] / 4.0, "q={} msf={}", q.eh[2], hi.eh[2]);
+    // And the resulting E[T] gap is large (two orders per the paper; we
+    // assert one order conservatively at this λ).
+    assert!(q.et * 10.0 < hi.et, "MSFQ {} vs MSF {}", q.et, hi.et);
+}

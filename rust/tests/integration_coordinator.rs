@@ -1,0 +1,127 @@
+//! Integration: the coordinator daemon end-to-end — TCP API, real-time
+//! execution, statistics, and autotuning.
+
+use quickswap::coordinator::{serve_tcp, Coordinator, CoordinatorConfig};
+use quickswap::util::json::Value;
+use quickswap::workload::Workload;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+fn spawn(policy: &str, wl: &Workload, scale: f64) -> Coordinator {
+    let pol = quickswap::policy::by_name(policy, wl).unwrap();
+    Coordinator::spawn(
+        wl,
+        pol,
+        CoordinatorConfig {
+            time_scale: scale,
+            autotune_every: 0,
+            use_artifact: true,
+            solver_iters: 20_000,
+        },
+    )
+}
+
+#[test]
+fn submit_drain_stats_roundtrip() {
+    let wl = Workload::one_or_all(4, 1.0, 0.9, 1.0, 1.0);
+    let coord = spawn("msfq:3", &wl, 2e-4);
+    let h = coord.handle();
+    for i in 0..120 {
+        h.submit(usize::from(i % 10 == 0), 1.0);
+    }
+    assert!(h.drain(Duration::from_secs(30)));
+    let s = h.stats().unwrap();
+    assert_eq!(s.submitted, 120);
+    assert_eq!(s.completed, 120);
+    assert_eq!(s.used_servers, 0);
+    assert!(s.mean_t >= 1.0, "E[T] = {} below service time", s.mean_t);
+    coord.join();
+}
+
+#[test]
+fn tcp_api_full_protocol() {
+    let wl = Workload::one_or_all(4, 1.0, 0.9, 1.0, 1.0);
+    let coord = spawn("msf", &wl, 1e-4);
+    let addr = serve_tcp("127.0.0.1:0", coord.handle()).unwrap();
+    let stream = TcpStream::connect(addr).unwrap();
+    let mut w = stream.try_clone().unwrap();
+    let mut r = BufReader::new(stream);
+    let mut line = String::new();
+
+    let mut rpc = |req: &str, line: &mut String| -> Value {
+        writeln!(w, "{req}").unwrap();
+        line.clear();
+        r.read_line(line).unwrap();
+        Value::parse(line.trim()).unwrap()
+    };
+
+    let pong = rpc(r#"{"op":"ping"}"#, &mut line);
+    assert_eq!(pong.get("pong").unwrap().as_bool(), Some(true));
+
+    for _ in 0..30 {
+        let resp = rpc(r#"{"op":"submit","class":0,"size":0.5}"#, &mut line);
+        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true), "{resp}");
+    }
+    // Malformed requests keep the connection alive.
+    let bad = rpc(r#"{"op":"submit"}"#, &mut line);
+    assert_eq!(bad.get("ok").unwrap().as_bool(), Some(false));
+    let bad2 = rpc("not json", &mut line);
+    assert_eq!(bad2.get("ok").unwrap().as_bool(), Some(false));
+
+    assert!(coord.handle().drain(Duration::from_secs(30)));
+    let stats = rpc(r#"{"op":"stats"}"#, &mut line);
+    assert_eq!(stats.get("completed").unwrap().as_u64(), Some(30));
+    assert_eq!(stats.get("in_system").unwrap().as_u64(), Some(0));
+    coord.join();
+}
+
+/// The autotuner swaps MSF for MSFQ(ℓ*>0) using the PJRT artifact (or
+/// the native calculator fallback) from observed rates.
+#[test]
+fn autotune_swaps_policy_online() {
+    // Burst submission: the estimated arrival rates blow past the
+    // stability region, so the tuner clamps to ρ = 0.95 while keeping
+    // the observed 9:1 class mix — decisively in the regime where
+    // Quickswap (ℓ > 0) beats MSF. (Paced submission would depend on
+    // sub-millisecond sleep accuracy; the clamp path is deterministic.)
+    let wl = Workload::one_or_all(8, 4.5, 0.9, 1.0, 1.0);
+    let coord = spawn("msf", &wl, 1e-4);
+    let h = coord.handle();
+    for i in 0..200 {
+        h.submit(usize::from(i % 10 == 0), 1.0);
+    }
+    let ell = h.autotune();
+    assert!(ell.is_some(), "autotune produced no threshold");
+    let ell = ell.unwrap();
+    assert!(ell > 0, "high-load autotune must pick ell > 0");
+    let s = h.stats().unwrap();
+    assert!(s.policy.contains("MSFQ"), "policy now {}", s.policy);
+    assert_eq!(s.current_ell, Some(ell));
+    assert_eq!(s.retunes, 1);
+    assert!(h.drain(Duration::from_secs(60)));
+    coord.join();
+}
+
+/// Multiclass coordinator run under Adaptive Quickswap.
+#[test]
+fn multiclass_coordinator_run() {
+    let wl = Workload::four_class(3.0);
+    let coord = spawn("adaptive-qs", &wl, 1e-4);
+    let h = coord.handle();
+    let mut rng = quickswap::util::rng::Rng::new(9);
+    for _ in 0..200 {
+        let class = rng.discrete(&[0.5, 0.25, 0.2, 0.05]);
+        h.submit(class, rng.exp(1.0));
+    }
+    assert!(h.drain(Duration::from_secs(60)));
+    let s = h.stats().unwrap();
+    assert_eq!(s.completed, 200);
+    // All classes that got jobs report finite response times.
+    for (count, mean_t, _) in s.per_class.iter() {
+        if *count > 0 {
+            assert!(mean_t.is_finite() && *mean_t > 0.0);
+        }
+    }
+    coord.join();
+}

@@ -1,0 +1,178 @@
+//! Integration: policy semantics under adversarial event sequences,
+//! exercised through the mini-harness (no stochastic noise).
+
+use quickswap::dist::Dist;
+use quickswap::policy::test_support::Harness;
+use quickswap::policy::{by_name, Policy};
+use quickswap::workload::{ClassSpec, Workload};
+
+fn one_or_all(k: u32) -> Workload {
+    Workload::one_or_all(k, 1.0, 0.9, 1.0, 1.0)
+}
+
+/// MSFQ never serves lights and heavies simultaneously (one-or-all
+/// exclusivity, the structural invariant behind the phase analysis).
+#[test]
+fn msfq_never_mixes_classes() {
+    let k = 6;
+    let wl = one_or_all(k);
+    let mut p = by_name("msfq:5", &wl).unwrap();
+    let mut h = Harness::new(k, &[1, k]);
+    let mut running = Vec::new();
+    // Deterministic stress: bursts of arrivals interleaved with
+    // completions in FIFO order.
+    let mut t = 0.0;
+    for round in 0..200 {
+        t += 0.1;
+        let class = usize::from(round % 7 == 0);
+        h.arrive(class, t);
+        running.extend(h.consult(p.as_mut()));
+        assert!(
+            h.running[0] == 0 || h.running[1] == 0,
+            "lights and heavies in service together at round {round}"
+        );
+        if round % 3 == 0 && !running.is_empty() {
+            let id = running.remove(0);
+            if h.jobs.is_running(id) {
+                t += 0.05;
+                h.complete(id, t);
+                running.extend(h.consult(p.as_mut()));
+            }
+        }
+    }
+}
+
+/// Drain-phase invariant: once MSFQ stops admitting lights, no light
+/// enters service until the drain empties — even under heavy arrivals.
+#[test]
+fn msfq_drain_is_sealed() {
+    let k = 4;
+    let wl = one_or_all(k);
+    let mut p = by_name("msfq:2", &wl).unwrap();
+    let mut h = Harness::new(k, &[1, k]);
+    let l: Vec<_> = (0..4).map(|i| h.arrive(0, i as f64 * 0.01)).collect();
+    h.consult(p.as_mut());
+    // Complete down to the threshold (n1 = 2 ⇒ drain).
+    h.complete(l[0], 1.0);
+    h.consult(p.as_mut());
+    h.complete(l[1], 1.1);
+    h.consult(p.as_mut());
+    // Flood with arrivals of both classes: nothing may start.
+    for i in 0..10 {
+        h.arrive(0, 1.2 + i as f64 * 0.01);
+        h.arrive(1, 1.25 + i as f64 * 0.01);
+        assert!(h.consult(p.as_mut()).is_empty(), "drain leaked at i={i}");
+    }
+    assert_eq!(h.running[0], 2);
+}
+
+/// Static Quickswap serves exactly one class at a time, in cycle order.
+#[test]
+fn static_qs_exclusivity() {
+    let wl = Workload::four_class(1.0);
+    let mut p = by_name("static-qs", &wl).unwrap();
+    let mut h = Harness::new(15, &[1, 3, 5, 15]);
+    for i in 0..5 {
+        h.arrive(0, 0.01 * i as f64);
+        h.arrive(1, 0.02 * i as f64);
+        h.arrive(2, 0.03 * i as f64);
+    }
+    h.consult(p.as_mut());
+    let classes_running = (0..4).filter(|&c| h.running[c] > 0).count();
+    assert_eq!(classes_running, 1, "StaticQS must serve one class");
+}
+
+/// nMSR ignores queue state: with jobs of an inactive class queued and
+/// servers idle, it still refuses to serve them (the paper's critique).
+#[test]
+fn nmsr_wastes_capacity_by_design() {
+    let wl = Workload::new(
+        4,
+        vec![
+            ClassSpec::new(1, 1.0, Dist::exp_mean(1.0)),
+            ClassSpec::new(4, 0.2, Dist::exp_mean(1.0)),
+        ],
+    );
+    let mut p = by_name("nmsr:1000", &wl).unwrap();
+    let mut h = Harness::new(4, &[1, 4]);
+    // Schedule 0 (class 0) is active for ~the whole long cycle; a heavy
+    // arrives and must wait despite 4 idle servers.
+    h.arrive(1, 0.0);
+    assert!(h.consult(p.as_mut()).is_empty(), "nMSR served inactive class");
+    // A light arrival is admitted immediately.
+    let l = h.arrive(0, 0.1);
+    assert_eq!(h.consult(p.as_mut()), vec![l]);
+}
+
+/// FCFS head-of-line blocking vs First-Fit backfilling on the same
+/// deterministic sequence (the §1.1 motivating example).
+#[test]
+fn fcfs_blocks_first_fit_backfills() {
+    let k = 4;
+    let seq = |p: &mut dyn Policy| {
+        let mut h = Harness::new(k, &[1, k]);
+        h.arrive(0, 0.0);
+        h.arrive(1, 0.1); // heavy cannot fit
+        h.arrive(0, 0.2);
+        h.arrive(0, 0.3);
+        h.consult(p);
+        h.running[0]
+    };
+    let wl = one_or_all(k);
+    let mut fcfs = by_name("fcfs", &wl).unwrap();
+    let mut ff = by_name("first-fit", &wl).unwrap();
+    assert_eq!(seq(fcfs.as_mut()), 1, "FCFS must block at the heavy");
+    assert_eq!(seq(ff.as_mut()), 3, "First-Fit must backfill the lights");
+}
+
+/// ServerFilling keeps all k servers busy whenever total queued demand
+/// ≥ k with power-of-two needs (the [22] guarantee).
+#[test]
+fn server_filling_full_utilization() {
+    let k = 16;
+    let wl = Workload::new(
+        k,
+        vec![
+            ClassSpec::new(1, 1.0, Dist::exp_mean(1.0)),
+            ClassSpec::new(2, 1.0, Dist::exp_mean(1.0)),
+            ClassSpec::new(4, 1.0, Dist::exp_mean(1.0)),
+            ClassSpec::new(8, 1.0, Dist::exp_mean(1.0)),
+        ],
+    );
+    let mut p = by_name("server-filling", &wl).unwrap();
+    let mut h = Harness::new(k, &[1, 2, 4, 8]);
+    let mut rng = quickswap::util::rng::Rng::new(5);
+    let mut in_service: Vec<quickswap::policy::JobId> = Vec::new();
+    for step in 0..300 {
+        let class = rng.index(4);
+        h.arrive(class, step as f64);
+        in_service.extend(h.consult(p.as_mut()));
+        in_service.retain(|&id| h.jobs.is_running(id));
+        let demand: u32 = (0..4)
+            .map(|c| (h.queued[c] + h.running[c]) * h.needs[c])
+            .sum();
+        if demand >= k {
+            assert_eq!(h.used(), k, "not fully packed at step {step}");
+        }
+        // Random completion.
+        if !in_service.is_empty() && rng.chance(0.7) {
+            let id = in_service.swap_remove(rng.index(in_service.len()));
+            h.complete(id, step as f64 + 0.5);
+            in_service.extend(h.consult(p.as_mut()));
+            in_service.retain(|&id| h.jobs.is_running(id));
+        }
+    }
+}
+
+/// Policy construction errors: bad names, bad thresholds, wrong
+/// workload shapes.
+#[test]
+fn constructor_validation() {
+    let wl = one_or_all(8);
+    assert!(by_name("bogus", &wl).is_err());
+    assert!(by_name("msfq:8", &wl).is_err()); // ell must be < k
+    assert!(by_name("msfq:abc", &wl).is_err());
+    let multi = Workload::four_class(1.0);
+    assert!(by_name("msfq:3", &multi).is_err()); // not one-or-all
+    assert!(by_name("msfq:7", &wl).is_ok());
+}

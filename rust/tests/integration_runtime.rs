@@ -1,0 +1,86 @@
+//! Integration: PJRT runtime × AOT artifacts × native oracles.
+//!
+//! Requires `make artifacts` (the Makefile's `test` target guarantees
+//! this ordering).
+
+use quickswap::analysis::{MsfqCtmc, MsfqParams};
+use quickswap::runtime::solver::SweepArtifact;
+use quickswap::runtime::{Runtime, SolverArtifact};
+
+fn runtime() -> Runtime {
+    Runtime::new(Runtime::default_dir()).expect("PJRT CPU client")
+}
+
+#[test]
+fn loads_and_reports_platform() {
+    let rt = runtime();
+    assert!(rt.platform().to_lowercase().contains("cpu"), "{}", rt.platform());
+}
+
+#[test]
+fn solver_artifact_executes_and_conserves_mass() {
+    let rt = runtime();
+    let solver = SolverArtifact::load(&rt, 8).expect("load msfq_solver_k8");
+    let m = solver.solve(7, 1.8, 0.1, 1.0, 1.0, 4000).unwrap();
+    assert!((m.mass - 1.0).abs() < 1e-3, "mass = {}", m.mass);
+    assert!(m.et.is_finite() && m.et > 0.0);
+    assert!(m.trustworthy(), "{m:?}");
+}
+
+/// The artifact must agree with the native sparse CTMC solver — the
+/// three-layer stack and the Rust oracle implement the same chain.
+#[test]
+fn artifact_matches_native_ctmc() {
+    let rt = runtime();
+    let solver = SolverArtifact::load(&rt, 8).expect("load msfq_solver_k8");
+    let (lam1, lamk) = (2.7, 0.3); // rho = 2.7/8 + 0.3 = 0.6375
+    let art = solver.solve(7, lam1, lamk, 1.0, 1.0, 20_000).unwrap();
+    // Same truncation as the artifact (aot.py: (128, 32, 9)).
+    let p = MsfqParams {
+        k: 8,
+        ell: 7,
+        lam1,
+        lamk,
+        mu1: 1.0,
+        muk: 1.0,
+    };
+    let native = MsfqCtmc::new(&p, 127, 31).solve(60_000, 1e-12);
+    let rel = (art.et - native.et).abs() / native.et;
+    assert!(
+        rel < 0.02,
+        "artifact E[T]={} vs native E[T]={} (rel {rel})",
+        art.et,
+        native.et
+    );
+    let rel1 = (art.et1 - native.et1).abs() / native.et1;
+    assert!(rel1 < 0.02, "light: {} vs {}", art.et1, native.et1);
+}
+
+#[test]
+fn autotune_picks_nonzero_threshold_at_high_load() {
+    let rt = runtime();
+    let solver = SolverArtifact::load(&rt, 8).expect("load msfq_solver_k8");
+    // rho = 0.9: quickswap should clearly beat MSF.
+    let (ell, m) = solver.autotune(4.0, 0.4, 1.0, 1.0, 30_000, false).unwrap();
+    assert!(ell > 0, "autotuner chose MSF (ell=0) at high load");
+    assert!(m.trustworthy());
+    let msf = solver.solve(0, 4.0, 0.4, 1.0, 1.0, 30_000).unwrap();
+    assert!(m.et <= msf.et + 1e-6);
+}
+
+#[test]
+fn sweep_artifact_orders_thresholds() {
+    let rt = runtime();
+    let sweep = SweepArtifact::load(&rt, 8).expect("load msfq_sweep_k8");
+    let (metrics, best_et, _best_etw) = sweep.sweep(4.0, 0.4, 1.0, 1.0, 20_000).unwrap();
+    assert_eq!(metrics.len(), 8);
+    assert!(best_et < 8);
+    // The argmin returned by the artifact really is the minimum.
+    let min_idx = metrics
+        .iter()
+        .enumerate()
+        .min_by(|a, b| a.1.et.partial_cmp(&b.1.et).unwrap())
+        .unwrap()
+        .0;
+    assert_eq!(best_et as usize, min_idx);
+}

@@ -1,0 +1,138 @@
+//! Property tests for the analysis layer: Taylor arithmetic, calculator
+//! sanity across the stable parameter space, CTMC consistency.
+
+use quickswap::analysis::taylor::T2;
+use quickswap::analysis::{analyze, MsfqCtmc, MsfqParams};
+use quickswap::util::proptest::check;
+use quickswap::util::rng::Rng;
+
+/// Random stable one-or-all parameters (ρ bounded away from 1).
+fn gen_params(r: &mut Rng) -> MsfqParams {
+    let k = 2 + r.below(31) as u32; // 2..=32
+    let ell = r.below(k as u64) as u32;
+    let mu1 = 0.5 + r.f64() * 2.0;
+    let muk = 0.5 + r.f64() * 2.0;
+    let rho = 0.2 + r.f64() * 0.65; // 0.2..0.85
+    let p1 = 0.5 + r.f64() * 0.45;
+    // Split load: rho = lam1/(k mu1) + lamk/muk with job fraction p1.
+    // Choose lam so the class-arrival fractions match p1.
+    let denom = p1 / (k as f64 * mu1) + (1.0 - p1) / muk;
+    let lam = rho / denom;
+    MsfqParams {
+        k,
+        ell,
+        lam1: lam * p1,
+        lamk: lam * (1.0 - p1),
+        mu1,
+        muk,
+    }
+}
+
+#[test]
+fn prop_calculator_always_sane_on_stable_params() {
+    check("calculator_sane", gen_params, |p| {
+        let a = match analyze(p) {
+            Ok(a) => a,
+            Err(e) => return Err(format!("analyze failed: {e}")),
+        };
+        for i in 1..=4 {
+            if !(a.eh[i] >= -1e-9) {
+                return Err(format!("E[H{i}] = {} < 0", a.eh[i]));
+            }
+            // Jensen: E[H²] ≥ E[H]².
+            if a.eh2[i] + 1e-9 < a.eh[i] * a.eh[i] {
+                return Err(format!(
+                    "E[H{i}²]={} < E[H{i}]²={}",
+                    a.eh2[i],
+                    a.eh[i] * a.eh[i]
+                ));
+            }
+        }
+        let msum: f64 = (1..=4).map(|i| a.m[i]).sum();
+        if (msum - 1.0).abs() > 1e-6 {
+            return Err(format!("phase fractions sum to {msum}"));
+        }
+        // Response times exceed a bare service time.
+        if a.et_light < 0.99 / p.mu1 || a.et_heavy < 0.99 / p.muk {
+            return Err(format!(
+                "E[T] below service time: light {} heavy {}",
+                a.et_light, a.et_heavy
+            ));
+        }
+        if !a.et.is_finite() || !a.etw.is_finite() {
+            return Err("non-finite E[T]".into());
+        }
+        Ok(())
+    });
+}
+
+/// N moments consistency: E[N1H] must equal λk·E[H2+H3+H4] (arrivals
+/// during the non-heavy phases — the defining relation of Lemma 6).
+#[test]
+fn prop_n1h_consistent_with_phase_means() {
+    check("n1h_consistency", gen_params, |p| {
+        let a = match analyze(p) {
+            Ok(a) => a,
+            Err(_) => return Ok(()),
+        };
+        let expect = p.lamk * (a.eh[2] + a.eh[3] + a.eh[4]);
+        let rel = (a.en1h.0 - expect).abs() / expect.max(1e-12);
+        if rel > 1e-6 {
+            return Err(format!("E[N1H]={} vs λk·E[H234]={expect}", a.en1h.0));
+        }
+        Ok(())
+    });
+}
+
+/// Taylor arithmetic: (a·b)/b == a and exp(ln(x)) == x over random
+/// coefficient vectors.
+#[test]
+fn prop_taylor_field_identities() {
+    check(
+        "taylor_identities",
+        |r| {
+            let g = |r: &mut Rng| 0.2 + r.f64() * 3.0;
+            (
+                T2::new(g(r), r.f64() - 0.5, r.f64() - 0.5),
+                T2::new(g(r), r.f64() - 0.5, r.f64() - 0.5),
+            )
+        },
+        |(a, b)| {
+            let close = |x: f64, y: f64| (x - y).abs() < 1e-8 * (1.0 + x.abs().max(y.abs()));
+            let q = a.mul(*b).div(*b);
+            if !(close(q.c0, a.c0) && close(q.c1, a.c1) && close(q.c2, a.c2)) {
+                return Err(format!("(a*b)/b != a: {q:?} vs {a:?}"));
+            }
+            let e = a.ln().exp();
+            if !(close(e.c0, a.c0) && close(e.c1, a.c1) && close(e.c2, a.c2)) {
+                return Err(format!("exp(ln(a)) != a: {e:?} vs {a:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// CTMC solver mass conservation over random small systems.
+#[test]
+fn prop_ctmc_conserves_mass() {
+    check(
+        "ctmc_mass",
+        |r| {
+            let mut p = gen_params(r);
+            p.k = 2 + r.below(5) as u32; // keep the state space small
+            p.ell = p.ell.min(p.k - 1);
+            p
+        },
+        |p| {
+            let sol = MsfqCtmc::new(p, 48, 24).solve(4000, 1e-9);
+            let total = sol.m1 + sol.m23 + sol.m4 + sol.idle;
+            if (total - 1.0).abs() > 1e-3 {
+                return Err(format!("fractions sum to {total}"));
+            }
+            if sol.en1 < -1e-9 || sol.enk < -1e-9 {
+                return Err("negative occupancy".into());
+            }
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,226 @@
+//! Property tests: policy invariants under randomized event sequences.
+//!
+//! Uses the in-tree generate-and-check harness (util::proptest). Each
+//! property drives a random arrival/completion schedule through a policy
+//! and asserts the structural invariants the analysis relies on.
+
+use quickswap::policy::test_support::Harness;
+use quickswap::policy::{by_name, JobId};
+use quickswap::util::proptest::check;
+use quickswap::util::rng::Rng;
+use quickswap::workload::Workload;
+
+/// A random scenario: class needs, arrival pattern, completion order.
+#[derive(Debug, Clone)]
+struct Scenario {
+    k: u32,
+    needs: Vec<u32>,
+    /// (event, class): true = arrival of class, false = completion.
+    script: Vec<(bool, usize)>,
+    seed: u64,
+}
+
+fn gen_scenario(r: &mut Rng) -> Scenario {
+    let k = 2 + r.below(15) as u32; // 2..=16
+    let nclasses = 1 + r.index(4);
+    let mut needs: Vec<u32> = (0..nclasses)
+        .map(|_| 1 + r.below(k as u64) as u32)
+        .collect();
+    needs.dedup();
+    let script = (0..200)
+        .map(|_| (r.chance(0.6), r.index(needs.len())))
+        .collect();
+    Scenario {
+        k,
+        needs,
+        script,
+        seed: r.next_u64(),
+    }
+}
+
+/// Drive the scenario; panics inside Harness::consult enforce capacity
+/// and queued-state correctness. Extra invariants checked per event.
+fn run_scenario(sc: &Scenario, policy: &str) -> Result<(), String> {
+    let wl = Workload::new(
+        sc.k,
+        sc.needs
+            .iter()
+            .map(|&n| {
+                quickswap::workload::ClassSpec::new(n, 1.0, quickswap::dist::Dist::exp_mean(1.0))
+            })
+            .collect(),
+    );
+    let mut pol = match by_name(policy, &wl) {
+        Ok(p) => p,
+        Err(_) => return Ok(()), // policy not applicable (e.g. msfq on multiclass)
+    };
+    let mut h = Harness::new(sc.k, &sc.needs);
+    let mut rng = Rng::new(sc.seed);
+    let mut running: Vec<JobId> = Vec::new();
+    let mut t = 0.0;
+    for &(arrive, class) in &sc.script {
+        t += 0.1;
+        if arrive {
+            h.arrive(class, t);
+        } else if !running.is_empty() {
+            let id = running.swap_remove(rng.index(running.len()));
+            if h.jobs.is_running(id) {
+                h.complete(id, t);
+            }
+        }
+        running.extend(h.consult(pol.as_mut()));
+        running.retain(|&id| h.jobs.is_running(id));
+
+        // Capacity invariant (also asserted inside consult).
+        let used: u32 = (0..sc.needs.len())
+            .map(|c| h.running[c] * h.needs[c])
+            .sum();
+        if used != h.used() {
+            return Err(format!("used-counter drift: {} vs {}", used, h.used()));
+        }
+        if used > sc.k {
+            return Err(format!("capacity violated: {used} > {}", sc.k));
+        }
+        // Non-preemptive policies must never shrink the running set
+        // except via completions — captured by Harness (it panics if a
+        // nonpreemptive policy emits preempts).
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_capacity_and_state_all_policies() {
+    for policy in [
+        "fcfs",
+        "first-fit",
+        "msf",
+        "static-qs",
+        "adaptive-qs",
+        "nmsr",
+        "server-filling",
+    ] {
+        check(
+            &format!("capacity/{policy}"),
+            gen_scenario,
+            |sc| run_scenario(sc, policy),
+        );
+    }
+}
+
+/// MSF admission is maximal in descending-need order: after consult, no
+/// queued job of any class fits in the free servers *unless* a larger
+/// class was (correctly) preferred and exhausted the space.
+#[test]
+fn prop_msf_greedy_maximal() {
+    check("msf_maximal", gen_scenario, |sc| {
+        let wl = Workload::new(
+            sc.k,
+            sc.needs
+                .iter()
+                .map(|&n| {
+                    quickswap::workload::ClassSpec::new(
+                        n,
+                        1.0,
+                        quickswap::dist::Dist::exp_mean(1.0),
+                    )
+                })
+                .collect(),
+        );
+        let mut pol = by_name("msf", &wl).unwrap();
+        let mut h = Harness::new(sc.k, &sc.needs);
+        let mut rng = Rng::new(sc.seed);
+        let mut running: Vec<JobId> = Vec::new();
+        let mut t = 0.0;
+        for &(arrive, class) in &sc.script {
+            t += 0.1;
+            if arrive {
+                h.arrive(class, t);
+            } else if !running.is_empty() {
+                let id = running.swap_remove(rng.index(running.len()));
+                if h.jobs.is_running(id) {
+                    h.complete(id, t);
+                }
+            }
+            running.extend(h.consult(pol.as_mut()));
+            running.retain(|&id| h.jobs.is_running(id));
+            // Maximality: no queued job fits into the remaining space.
+            let free = sc.k - h.used();
+            for c in 0..sc.needs.len() {
+                if h.queued[c] > 0 && sc.needs[c] <= free {
+                    return Err(format!(
+                        "MSF left class {c} (need {}) waiting with {free} free",
+                        sc.needs[c]
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// One-or-all MSFQ: threshold semantics — whenever lights are in service
+/// and their in-system count exceeds ℓ, no server may idle (phases 2/3
+/// are work-conserving for lights).
+#[test]
+fn prop_msfq_no_idle_above_threshold() {
+    check(
+        "msfq_work_conserving",
+        |r| {
+            let k = 2 + r.below(10) as u32;
+            let ell = r.below(k as u64) as u32;
+            let script: Vec<(bool, usize)> = (0..200)
+                .map(|_| (r.chance(0.65), usize::from(r.chance(0.15))))
+                .collect();
+            (k, ell, script, r.next_u64())
+        },
+        |(k, ell, script, seed)| {
+            let wl = Workload::one_or_all(*k, 1.0, 0.9, 1.0, 1.0);
+            let mut pol = by_name(&format!("msfq:{ell}"), &wl).unwrap();
+            let mut h = Harness::new(*k, &[1, *k]);
+            let mut rng = Rng::new(*seed);
+            let mut running: Vec<JobId> = Vec::new();
+            let mut t = 0.0;
+            for &(arrive, class) in script {
+                t += 0.1;
+                if arrive {
+                    h.arrive(class, t);
+                } else if !running.is_empty() {
+                    let id = running.swap_remove(rng.index(running.len()));
+                    if h.jobs.is_running(id) {
+                        h.complete(id, t);
+                    }
+                }
+                running.extend(h.consult(pol.as_mut()));
+                running.retain(|&id| h.jobs.is_running(id));
+                // Exclusivity always.
+                if h.running[0] > 0 && h.running[1] > 0 {
+                    return Err("mixed service".into());
+                }
+                // Work conservation for lights while above threshold:
+                // if lights are being served and more lights are queued
+                // and in-system count > ell, no server may be idle
+                // (unless we are draining, i.e. queued lights exist but
+                // none was admitted this round — detectable as: queued
+                // lights > 0, free > 0, in_system > ell, lights running).
+                let n1 = h.in_system(0);
+                if h.running[0] > 0
+                    && h.queued[0] > 0
+                    && h.used() < *k
+                    && n1 > *ell
+                    && h.running[0] + h.queued[0] == n1
+                {
+                    // Phase 2/3 with spare room and waiting lights, yet
+                    // not admitted ⇒ must be the drain phase. The drain
+                    // only holds when in-service ≤ ℓ.
+                    if h.running[0] > *ell {
+                        return Err(format!(
+                            "idle servers with {} lights waiting (n1={n1}, ell={ell})",
+                            h.queued[0]
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
