@@ -1,35 +1,103 @@
 //! L3 perf microbenches: DES engine event throughput and policy decision
-//! cost. Targets recorded in EXPERIMENTS.md §Perf.
-use quickswap::sim::{run_named, SimConfig};
+//! cost. Targets recorded in EXPERIMENTS.md §Perf; machine-readable
+//! events/s land in BENCH_perf_engine.json (override with QS_BENCH_OUT)
+//! so successive PRs have a perf trajectory to compare against — see
+//! scripts/bench_smoke.sh.
+//!
+//! Engines are constructed once per workload and reset between runs, so
+//! the numbers measure the steady-state hot path (indexed event heap +
+//! SoA job table), not allocator traffic.
+use quickswap::experiments::Scale;
+use quickswap::sim::{Engine, SimConfig};
 use quickswap::util::bench::{black_box, Bench};
-use quickswap::workload::{borg::borg_workload, Workload};
+use quickswap::util::json::Value;
+use quickswap::util::rng::Rng;
+use quickswap::workload::{borg::borg_workload, SyntheticSource, Workload};
 
-fn events_per_sec(wl: &Workload, policy: &str, completions: u64) -> f64 {
+/// One replication on a reused engine; returns events per wall second.
+fn events_per_sec(engine: &mut Engine, wl: &Workload, policy: &str, seed: u64) -> f64 {
+    engine.reset();
+    let mut pol = quickswap::policy::by_name(policy, wl).unwrap();
+    let mut src = SyntheticSource::new(wl.clone());
+    let mut rng = Rng::new(seed);
+    let r = engine.run(&mut src, pol.as_mut(), &mut rng);
+    r.events as f64 / r.wall_s.max(1e-12)
+}
+
+fn write_json(measured: &[(String, f64)], completions: u64) {
+    let path =
+        std::env::var("QS_BENCH_OUT").unwrap_or_else(|_| "BENCH_perf_engine.json".to_string());
+    let mut results = Value::obj();
+    for (name, rate) in measured {
+        results = results.set(name, *rate);
+    }
+    let doc = Value::obj()
+        .set("bench", "perf_engine")
+        .set("unit", "events_per_sec")
+        .set("scale", Scale::env_name())
+        .set("completions", completions)
+        .set("results", results);
+    match std::fs::write(&path, format!("{doc}\n")) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}
+
+fn main() {
+    let scale = Scale::from_env();
+    // Cap the per-run length: throughput saturates well before this and
+    // the Bench harness repeats runs anyway.
+    let completions = scale.completions.min(100_000).max(10_000);
+    let mut measured: Vec<(String, f64)> = Vec::new();
+    let mut b = Bench::new("perf_engine");
+
+    let one_or_all = Workload::one_or_all(32, 7.5, 0.9, 1.0, 1.0);
     let cfg = SimConfig {
         target_completions: completions,
         warmup_completions: 0,
         ..Default::default()
     };
-    let r = run_named(wl, policy, &cfg, 7).unwrap();
-    r.events as f64 / r.wall_s
-}
-
-fn main() {
-    let mut b = Bench::new("perf_engine");
-    let one_or_all = Workload::one_or_all(32, 7.5, 0.9, 1.0, 1.0);
+    let mut engine = Engine::new(&one_or_all, cfg);
     for policy in ["fcfs", "msf", "msfq:31", "first-fit"] {
         let mut rate = 0.0;
         b.bench(&format!("sim_{policy}"), || {
-            rate = events_per_sec(&one_or_all, policy, 100_000);
+            rate = events_per_sec(&mut engine, &one_or_all, policy, 7);
+            black_box(rate);
         });
         println!("  -> {policy}: {:.2} M events/s", rate / 1e6);
+        measured.push((format!("sim_{policy}"), rate));
     }
+
     let borg = borg_workload(4.0);
+    let borg_cfg = SimConfig {
+        target_completions: completions / 2,
+        warmup_completions: 0,
+        ..Default::default()
+    };
+    let mut borg_engine = Engine::new(&borg, borg_cfg);
     let mut rate = 0.0;
     b.bench("sim_borg_adaptive_qs", || {
-        rate = events_per_sec(&borg, "adaptive-qs", 50_000);
+        rate = events_per_sec(&mut borg_engine, &borg, "adaptive-qs", 7);
+        black_box(rate);
     });
     println!("  -> borg/adaptive-qs: {:.2} M events/s", rate / 1e6);
+    measured.push(("sim_borg_adaptive_qs".to_string(), rate));
+
+    // Preemptive policy: stresses departure cancel/reschedule.
+    let sf_wl = Workload::one_or_all(16, 4.0, 0.9, 1.0, 1.0);
+    let sf_cfg = SimConfig {
+        target_completions: completions / 2,
+        warmup_completions: 0,
+        ..Default::default()
+    };
+    let mut sf_engine = Engine::new(&sf_wl, sf_cfg);
+    let mut rate = 0.0;
+    b.bench("sim_server_filling", || {
+        rate = events_per_sec(&mut sf_engine, &sf_wl, "server-filling", 7);
+        black_box(rate);
+    });
+    println!("  -> server-filling: {:.2} M events/s", rate / 1e6);
+    measured.push(("sim_server_filling".to_string(), rate));
 
     // Analytical calculator throughput (the autotuner's native fallback).
     b.bench("theorem2_calculator_k32", || {
@@ -40,4 +108,6 @@ fn main() {
         black_box(a.et);
     });
     b.finish();
+
+    write_json(&measured, completions);
 }

@@ -60,7 +60,7 @@ enum Cmd {
     },
     Complete {
         job: JobId,
-        epoch: u32,
+        starts: u32,
     },
     Stats {
         reply: Sender<StatsSnapshot>,
@@ -150,7 +150,9 @@ impl CoordinatorHandle {
 struct TimerEntry {
     at: Instant,
     job: JobId,
-    epoch: u32,
+    /// Job's service-start count when the timer was armed; a later
+    /// preemption/restart bumps it, invalidating this timer.
+    starts: u32,
 }
 
 impl PartialEq for TimerEntry {
@@ -227,7 +229,7 @@ fn timer_loop(rx: Receiver<TimerEntry>, sched: Sender<Cmd>) {
             if sched
                 .send(Cmd::Complete {
                     job: e.job,
-                    epoch: e.epoch,
+                    starts: e.starts,
                 })
                 .is_err()
             {
@@ -251,7 +253,7 @@ fn timer_loop(rx: Receiver<TimerEntry>, sched: Sender<Cmd>) {
                     if sched
                         .send(Cmd::Complete {
                             job: e.job,
-                            epoch: e.epoch,
+                            starts: e.starts,
                         })
                         .is_err()
                     {
@@ -316,13 +318,13 @@ fn scheduler_loop(
                         spawn_tune(&wl, &rates, &cfg, self_tx.clone(), None);
                 }
             }
-            Cmd::Complete { job, epoch } => {
-                // Stale timers can exist if a job was resubmitted; guard.
-                if !state.jobs.is_running(job) || state.jobs.get(job).epoch != epoch {
+            Cmd::Complete { job, starts } => {
+                // Stale timers can exist if a job was restarted; guard.
+                if !state.jobs.is_running(job) || state.jobs.starts(job) != starts {
                     continue;
                 }
                 let t = vnow(epoch0, cfg.time_scale);
-                let class = state.jobs.get(job).class;
+                let class = state.jobs.class(job);
                 state.complete(job, t);
                 completed += 1;
                 if let (Some(w0), Some(_)) =
@@ -419,7 +421,7 @@ fn dispatch(
         let _ = timer.send(TimerEntry {
             at: now + dur,
             job: id,
-            epoch: j.epoch,
+            starts: j.starts,
         });
     }
 }

@@ -1,0 +1,146 @@
+//! Service-size distributions for job classes.
+//!
+//! The paper's experiments use exponential sizes; Appendix C checks
+//! robustness under deterministic, Erlang (SCV < 1) and hyperexponential
+//! (SCV > 1) sizes. All four are provided with exact closed-form moments
+//! so the analysis layer and the config system (`scv` knob) can match a
+//! distribution to a requested mean/SCV pair.
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Dist {
+    /// Exponential with rate `mu` (mean 1/mu, SCV 1).
+    Exp { mu: f64 },
+    /// Deterministic: point mass at `v` (SCV 0).
+    Det { v: f64 },
+    /// Erlang-k: sum of `k` i.i.d. Exp(rate) stages (mean k/rate, SCV 1/k).
+    Erlang { k: u32, rate: f64 },
+    /// Two-phase hyperexponential: Exp(mu1) w.p. `p`, else Exp(mu2)
+    /// (SCV > 1 for distinct phases).
+    Hyper2 { p: f64, mu1: f64, mu2: f64 },
+}
+
+impl Dist {
+    /// Exponential with the given mean.
+    pub fn exp_mean(mean: f64) -> Dist {
+        assert!(mean > 0.0, "mean must be positive");
+        Dist::Exp { mu: 1.0 / mean }
+    }
+
+    /// Balanced-means H2 fitted to (mean, scv) with scv > 1: the standard
+    /// two-moment fit with p/mu1 = (1-p)/mu2,
+    /// p = (1 + sqrt((scv-1)/(scv+1)))/2. Moments are matched exactly.
+    pub fn hyper2_mean_scv(mean: f64, scv: f64) -> Dist {
+        assert!(mean > 0.0, "mean must be positive");
+        assert!(scv > 1.0, "hyperexponential fit needs scv > 1");
+        let p = 0.5 * (1.0 + ((scv - 1.0) / (scv + 1.0)).sqrt());
+        Dist::Hyper2 {
+            p,
+            mu1: 2.0 * p / mean,
+            mu2: 2.0 * (1.0 - p) / mean,
+        }
+    }
+
+    pub fn mean(&self) -> f64 {
+        match *self {
+            Dist::Exp { mu } => 1.0 / mu,
+            Dist::Det { v } => v,
+            Dist::Erlang { k, rate } => k as f64 / rate,
+            Dist::Hyper2 { p, mu1, mu2 } => p / mu1 + (1.0 - p) / mu2,
+        }
+    }
+
+    /// Second raw moment E[X²].
+    pub fn second_moment(&self) -> f64 {
+        match *self {
+            Dist::Exp { mu } => 2.0 / (mu * mu),
+            Dist::Det { v } => v * v,
+            Dist::Erlang { k, rate } => (k as f64 * (k as f64 + 1.0)) / (rate * rate),
+            Dist::Hyper2 { p, mu1, mu2 } => {
+                2.0 * p / (mu1 * mu1) + 2.0 * (1.0 - p) / (mu2 * mu2)
+            }
+        }
+    }
+
+    pub fn variance(&self) -> f64 {
+        let m = self.mean();
+        self.second_moment() - m * m
+    }
+
+    /// Squared coefficient of variation Var[X]/E[X]².
+    pub fn scv(&self) -> f64 {
+        let m = self.mean();
+        self.variance() / (m * m)
+    }
+
+    /// Draw one sample.
+    #[inline]
+    pub fn sample(&self, rng: &mut Rng) -> f64 {
+        match *self {
+            Dist::Exp { mu } => rng.exp(mu),
+            Dist::Det { v } => v,
+            Dist::Erlang { k, rate } => {
+                let mut s = 0.0;
+                for _ in 0..k {
+                    s += rng.exp(rate);
+                }
+                s
+            }
+            Dist::Hyper2 { p, mu1, mu2 } => {
+                if rng.chance(p) {
+                    rng.exp(mu1)
+                } else {
+                    rng.exp(mu2)
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exp_mean_roundtrips() {
+        let d = Dist::exp_mean(2.5);
+        assert!((d.mean() - 2.5).abs() < 1e-12);
+        assert!((d.scv() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hyper2_matches_mean_and_scv_exactly() {
+        for (m, c) in [(1.0, 4.0), (2.0, 1.5), (0.5, 10.0)] {
+            let d = Dist::hyper2_mean_scv(m, c);
+            assert!((d.mean() - m).abs() < 1e-12, "mean {m} scv {c}");
+            assert!((d.scv() - c).abs() < 1e-9, "mean {m} scv {c}: {}", d.scv());
+        }
+    }
+
+    #[test]
+    fn erlang_moments() {
+        let d = Dist::Erlang { k: 4, rate: 4.0 }; // mean 1, scv 1/4
+        assert!((d.mean() - 1.0).abs() < 1e-12);
+        assert!((d.scv() - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sample_means_converge() {
+        let mut rng = Rng::new(17);
+        for d in [
+            Dist::exp_mean(2.0),
+            Dist::Det { v: 2.0 },
+            Dist::Erlang { k: 3, rate: 1.5 },
+            Dist::hyper2_mean_scv(2.0, 4.0),
+        ] {
+            let n = 200_000;
+            let mean: f64 = (0..n).map(|_| d.sample(&mut rng)).sum::<f64>() / n as f64;
+            assert!(
+                (mean - d.mean()).abs() / d.mean() < 0.05,
+                "{d:?}: sample mean {mean} vs {}",
+                d.mean()
+            );
+        }
+    }
+}

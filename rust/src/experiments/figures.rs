@@ -2,7 +2,7 @@
 //! index and EXPERIMENTS.md for recorded paper-vs-measured outcomes.
 
 use crate::analysis::{analyze, MsfqParams};
-use crate::experiments::{print_sweep, sweep, write_sweep_csv, Point, Scale};
+use crate::experiments::{print_sweep, sweep_with, write_sweep_csv, Point, Scale};
 use crate::sim::{Engine, SimConfig, TimeseriesSpec};
 use crate::util::csv::CsvWriter;
 use crate::util::rng::Rng;
@@ -81,7 +81,14 @@ pub fn fig2(scale: Scale, lambda: f64, ells: &[u32]) -> Vec<(u32, f64, f64)> {
     let policies: Vec<String> = ells.iter().map(|e| format!("msfq:{e}")).collect();
     let policy_refs: Vec<&str> = policies.iter().map(|s| s.as_str()).collect();
     let cfg = scale.config();
-    let pts = sweep(&one_or_all_at, &[lambda], &policy_refs, &cfg, scale.seed);
+    let pts = sweep_with(
+        &one_or_all_at,
+        &[lambda],
+        &policy_refs,
+        &cfg,
+        scale.seed,
+        &scale.sweep_opts(),
+    );
     let mut rows = Vec::new();
     let mut w = CsvWriter::create(
         results_path("fig2_threshold.csv"),
@@ -113,7 +120,14 @@ pub fn fig2(scale: Scale, lambda: f64, ells: &[u32]) -> Vec<(u32, f64, f64)> {
 pub fn fig3(scale: Scale, lambdas: &[f64]) -> Vec<Point> {
     let policies = ["msf", "msfq:31", "fcfs", "first-fit", "nmsr"];
     let cfg = scale.config();
-    let pts = sweep(&one_or_all_at, lambdas, &policies, &cfg, scale.seed);
+    let pts = sweep_with(
+        &one_or_all_at,
+        lambdas,
+        &policies,
+        &cfg,
+        scale.seed,
+        &scale.sweep_opts(),
+    );
     let wl = one_or_all_at(1.0);
     let names: Vec<String> = wl.classes.iter().map(|c| c.name.clone()).collect();
     write_sweep_csv(&results_path("fig3_one_or_all.csv"), &pts, &names).ok();
@@ -207,7 +221,14 @@ pub fn fig4(scale: Scale, lambdas: &[f64]) -> Vec<Fig4Row> {
 pub fn fig5(scale: Scale, lambdas: &[f64]) -> Vec<Point> {
     let policies = ["static-qs", "adaptive-qs", "msf", "first-fit", "fcfs"];
     let cfg = scale.config();
-    let pts = sweep(&Workload::four_class, lambdas, &policies, &cfg, scale.seed);
+    let pts = sweep_with(
+        &Workload::four_class,
+        lambdas,
+        &policies,
+        &cfg,
+        scale.seed,
+        &scale.sweep_opts(),
+    );
     let names: Vec<String> = Workload::four_class(1.0)
         .classes
         .iter()
@@ -227,7 +248,14 @@ pub fn fig6(scale: Scale, lambdas: &[f64], include_preemptive: bool) -> Vec<Poin
         policies.push("server-filling");
     }
     let cfg = scale.config();
-    let pts = sweep(&borg_workload, lambdas, &policies, &cfg, scale.seed);
+    let pts = sweep_with(
+        &borg_workload,
+        lambdas,
+        &policies,
+        &cfg,
+        scale.seed,
+        &scale.sweep_opts(),
+    );
     let names: Vec<String> = borg_workload(1.0)
         .classes
         .iter()

@@ -1,16 +1,27 @@
 //! Experiment harnesses: one entry point per table/figure in the paper's
 //! evaluation (§6, Appendices C–D). Each harness runs the simulations
-//! (in parallel across (λ, policy) points), prints the paper-style rows,
-//! and writes CSV series under `results/`.
+//! (in parallel across fine-grained replication units), prints the
+//! paper-style rows, and writes CSV series under `results/`.
 //!
 //! Scale: `Scale::full()` reproduces the paper-quality curves (minutes);
 //! `Scale::bench()` is the reduced-but-faithful version the `cargo
 //! bench` targets run; `Scale::smoke()` is for tests.
+//!
+//! Parallelism model: every (λ, policy) point fans out into R
+//! independent, seed-streamed replications, and worker threads pull
+//! *(point, replication)* units off a shared counter. Short points no
+//! longer serialize behind long ones (the old sweep scheduled whole
+//! points), workers reuse one resettable [`Engine`] per point (no
+//! per-replication allocation), and the per-point replications pool
+//! their batch means into a single CI ([`ReplicationPool`]).
 
 pub mod figures;
 
-use crate::sim::{SimConfig, SimResult};
-use crate::workload::Workload;
+use crate::sim::{Engine, Metrics, ReplicationPool, SimConfig, SimResult};
+use crate::util::rng::{Rng, SplitMix64};
+use crate::workload::{SyntheticSource, Workload};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 
 /// Run-length control shared by all harnesses.
 #[derive(Clone, Copy, Debug)]
@@ -45,17 +56,35 @@ impl Scale {
         }
     }
 
+    /// The scale name QS_SCALE resolves to (unknown values fall back to
+    /// "bench", mirroring [`Scale::from_env`]).
+    pub fn env_name() -> &'static str {
+        match std::env::var("QS_SCALE").as_deref() {
+            Ok("full") => "full",
+            Ok("smoke") => "smoke",
+            _ => "bench",
+        }
+    }
+
     /// From the environment: QS_SCALE=full|bench|smoke (default bench).
     pub fn from_env() -> Scale {
-        match std::env::var("QS_SCALE").as_deref() {
-            Ok("full") => Scale::full(),
-            Ok("smoke") => Scale::smoke(),
+        match Self::env_name() {
+            "full" => Scale::full(),
+            "smoke" => Scale::smoke(),
             _ => Scale::bench(),
         }
     }
 
     pub fn config(&self) -> SimConfig {
         SimConfig::default().with_completions(self.completions)
+    }
+
+    /// Sweep options bound to this scale's thread budget.
+    pub fn sweep_opts(&self) -> SweepOpts {
+        SweepOpts {
+            threads: self.threads,
+            ..SweepOpts::from_env()
+        }
     }
 }
 
@@ -65,15 +94,65 @@ fn default_threads() -> usize {
         .unwrap_or(4)
 }
 
+/// Replication/threading knobs for [`sweep_with`].
+#[derive(Clone, Copy, Debug)]
+pub struct SweepOpts {
+    /// Independent replications per (λ, policy) point; the configured
+    /// completion budget is split evenly across them.
+    pub replications: u32,
+    pub threads: usize,
+}
+
+impl SweepOpts {
+    /// QS_REPS overrides the replication count (default 4).
+    pub fn from_env() -> SweepOpts {
+        let replications = std::env::var("QS_REPS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(4);
+        SweepOpts {
+            replications: replications.max(1),
+            threads: default_threads(),
+        }
+    }
+}
+
+impl Default for SweepOpts {
+    fn default() -> SweepOpts {
+        SweepOpts::from_env()
+    }
+}
+
 /// One simulation point in a sweep.
 #[derive(Clone, Debug)]
 pub struct Point {
     pub lambda: f64,
+    /// The requested policy name (e.g. "msfq:31"), as passed in.
     pub policy: String,
     pub result: SimResult,
 }
 
-/// Run `policies × lambdas` simulations in parallel threads.
+/// Everything a finished replication contributes to its point's pool.
+struct RepRun {
+    metrics: Metrics,
+    now: f64,
+    events: u64,
+    wall_s: f64,
+    /// Policy display name (e.g. "MSFQ(ell=31)"), captured from the run.
+    display: String,
+}
+
+/// Deterministic per-(point, replication) seed stream: thread scheduling
+/// can never change which random numbers a replication consumes.
+fn rep_seed(seed: u64, point: u64, rep: u64) -> u64 {
+    let mixed = seed
+        ^ point.wrapping_mul(0x9E3779B97F4A7C15)
+        ^ rep.wrapping_mul(0xD1B54A32D192ED03);
+    SplitMix64::new(mixed).next_u64()
+}
+
+/// Run `policies × lambdas` with environment-default replication and
+/// threading (see [`SweepOpts::from_env`]).
 pub fn sweep(
     wl_at: &(dyn Fn(f64) -> Workload + Sync),
     lambdas: &[f64],
@@ -81,41 +160,111 @@ pub fn sweep(
     cfg: &SimConfig,
     seed: u64,
 ) -> Vec<Point> {
-    let mut jobs: Vec<(f64, String)> = Vec::new();
+    sweep_with(wl_at, lambdas, policies, cfg, seed, &SweepOpts::from_env())
+}
+
+/// Run `policies × lambdas`, each point as `opts.replications`
+/// independent replications scheduled as fine-grained parallel units.
+/// Output order and every statistic are deterministic for a given
+/// (workloads, cfg, seed, replications) regardless of thread count.
+pub fn sweep_with(
+    wl_at: &(dyn Fn(f64) -> Workload + Sync),
+    lambdas: &[f64],
+    policies: &[&str],
+    cfg: &SimConfig,
+    seed: u64,
+    opts: &SweepOpts,
+) -> Vec<Point> {
+    let mut pts: Vec<(f64, String)> = Vec::new();
     for &l in lambdas {
         for &p in policies {
-            jobs.push((l, p.to_string()));
+            pts.push((l, p.to_string()));
         }
     }
-    let results = std::sync::Mutex::new(Vec::<Point>::new());
-    let next = std::sync::atomic::AtomicUsize::new(0);
-    let threads = default_threads().min(jobs.len().max(1));
+    let reps = opts.replications.max(1) as usize;
+    // Split the measured-completion budget so total measured work matches
+    // the single-replication configuration. Warmup is NOT split: the
+    // transient length is a property of the system, not of the run
+    // length, and every replication starts from an empty system — each
+    // stream discards the full configured warmup.
+    let rep_cfg = SimConfig {
+        target_completions: (cfg.target_completions + reps as u64 - 1) / reps as u64,
+        warmup_completions: cfg.warmup_completions,
+        ..cfg.clone()
+    };
+    let n_units = pts.len() * reps;
+    let slots: Vec<Mutex<Vec<Option<RepRun>>>> = pts
+        .iter()
+        .map(|_| Mutex::new((0..reps).map(|_| None).collect()))
+        .collect();
+    let next = AtomicUsize::new(0);
+    let threads = opts.threads.max(1).min(n_units.max(1));
     std::thread::scope(|s| {
         for _ in 0..threads {
-            s.spawn(|| loop {
-                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                if i >= jobs.len() {
-                    break;
-                }
-                let (lambda, policy) = &jobs[i];
-                let wl = wl_at(*lambda);
-                // Derive a per-point seed so replications differ but are
-                // reproducible.
-                let pseed = seed
-                    .wrapping_mul(0x9E3779B97F4A7C15)
-                    .wrapping_add(i as u64);
-                match crate::sim::run_named(&wl, policy, cfg, pseed) {
-                    Ok(result) => results.lock().unwrap().push(Point {
-                        lambda: *lambda,
-                        policy: policy.clone(),
-                        result,
-                    }),
-                    Err(e) => eprintln!("point ({lambda}, {policy}) failed: {e}"),
+            s.spawn(|| {
+                // Engine cache: consecutive units of the same point reuse
+                // one engine's allocations via reset().
+                let mut cached: Option<(usize, Engine)> = None;
+                loop {
+                    let u = next.fetch_add(1, Ordering::Relaxed);
+                    if u >= n_units {
+                        break;
+                    }
+                    let (p, r) = (u / reps, u % reps);
+                    let (lambda, policy) = &pts[p];
+                    let wl = wl_at(*lambda);
+                    let reuse = matches!(&cached, Some((idx, _)) if *idx == p);
+                    if !reuse {
+                        cached = Some((p, Engine::new(&wl, rep_cfg.clone())));
+                    }
+                    let engine = &mut cached.as_mut().expect("cached engine").1;
+                    if reuse {
+                        engine.reset();
+                    }
+                    match crate::policy::by_name(policy, &wl) {
+                        Ok(mut pol) => {
+                            let mut src = SyntheticSource::new(wl.clone());
+                            let mut rng = Rng::new(rep_seed(seed, p as u64, r as u64));
+                            let result = engine.run(&mut src, pol.as_mut(), &mut rng);
+                            let run = RepRun {
+                                metrics: engine.metrics().clone(),
+                                now: engine.now(),
+                                events: result.events,
+                                wall_s: result.wall_s,
+                                display: result.policy,
+                            };
+                            slots[p].lock().unwrap()[r] = Some(run);
+                        }
+                        Err(e) => eprintln!("point ({lambda}, {policy}) failed: {e}"),
+                    }
                 }
             });
         }
     });
-    let mut out = results.into_inner().unwrap();
+    // Pool each point's replications in replication order (deterministic
+    // floating-point merge order).
+    let mut out = Vec::with_capacity(pts.len());
+    for (slot, (lambda, policy)) in slots.into_iter().zip(pts.into_iter()) {
+        let wl = wl_at(lambda);
+        let mut pool = ReplicationPool::new(wl.num_classes());
+        let runs = slot.into_inner().unwrap();
+        let mut display = None;
+        for run in runs.iter().flatten() {
+            pool.absorb(&run.metrics, run.now, run.events, run.wall_s);
+            if display.is_none() {
+                display = Some(run.display.clone());
+            }
+        }
+        if pool.replications() == 0 {
+            continue; // every replication failed (bad policy name)
+        }
+        let display = display.unwrap_or_else(|| policy.clone());
+        out.push(Point {
+            lambda,
+            policy,
+            result: pool.result(&display, &wl),
+        });
+    }
     out.sort_by(|a, b| {
         a.policy
             .cmp(&b.policy)

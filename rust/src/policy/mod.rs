@@ -35,7 +35,9 @@ pub type JobId = u64;
 pub type PhaseLabel = u8;
 
 /// What a policy can see. Borrow-backed by the engine; all accessors are
-/// O(1) except the arrival-order iterator.
+/// O(1) except the arrival-order iterator and `queued_front`, which are
+/// O(items visited) — both walk intrusive lists of live jobs only (no
+/// tombstone filtering).
 pub struct SysView<'a> {
     pub now: f64,
     /// Total servers.
@@ -50,11 +52,8 @@ pub struct SysView<'a> {
     pub running: &'a [u32],
     /// Job table (lookup class/need/state by id).
     pub jobs: &'a crate::sim::job::JobTable,
-    /// All jobs in the system in arrival order (queued and running),
-    /// possibly containing departed tombstones — filtered on iteration.
-    pub(crate) order: &'a std::collections::VecDeque<JobId>,
-    /// Per-class FIFO of waiting jobs (front = oldest).
-    pub(crate) class_fifo: &'a [std::collections::VecDeque<JobId>],
+    /// Per-class intrusive FIFO of waiting jobs (front = oldest).
+    pub(crate) fifos: &'a crate::sim::job::ClassFifos,
 }
 
 impl<'a> SysView<'a> {
@@ -77,19 +76,15 @@ impl<'a> SysView<'a> {
     /// Oldest waiting job of class `c` (front of the class FIFO).
     #[inline]
     pub fn queued_head(&self, c: ClassId) -> Option<JobId> {
-        self.class_fifo[c]
-            .iter()
-            .copied()
-            .find(|&id| self.jobs.is_queued(id))
+        self.fifos.head_slot(c).map(|s| self.jobs.id_at(s))
     }
 
     /// First `n` oldest waiting jobs of class `c`.
     pub fn queued_front(&self, c: ClassId, n: usize) -> Vec<JobId> {
-        self.class_fifo[c]
-            .iter()
-            .copied()
-            .filter(|&id| self.jobs.is_queued(id))
+        self.fifos
+            .iter(c)
             .take(n)
+            .map(|s| self.jobs.id_at(s))
             .collect()
     }
 
@@ -97,15 +92,7 @@ impl<'a> SysView<'a> {
     /// Includes running jobs (`running` flag) so prefix-based policies
     /// (ServerFilling) can reason over the full arrival order.
     pub fn for_each_in_arrival_order(&self, f: &mut dyn FnMut(JobId, ClassId, bool) -> bool) {
-        for &id in self.order.iter() {
-            if !self.jobs.in_system(id) {
-                continue;
-            }
-            let running = self.jobs.is_running(id);
-            if !f(id, self.jobs.get(id).class, running) {
-                break;
-            }
-        }
+        self.jobs.for_each_in_order(f);
     }
 
     /// Number of distinct classes with at least one waiting job.

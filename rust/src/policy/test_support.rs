@@ -4,15 +4,13 @@
 //! drives it from real-time events instead of simulated ones).
 
 use crate::policy::{Decision, JobId, Policy, SysView};
-use crate::sim::job::{JobState, JobTable};
-use std::collections::VecDeque;
+use crate::sim::job::{ClassFifos, JobState, JobTable};
 
 pub struct Harness {
     pub k: u32,
     pub needs: Vec<u32>,
     pub jobs: JobTable,
-    pub order: VecDeque<JobId>,
-    pub class_fifo: Vec<VecDeque<JobId>>,
+    fifos: ClassFifos,
     pub queued: Vec<u32>,
     pub running: Vec<u32>,
     used: u32,
@@ -25,8 +23,7 @@ impl Harness {
             k,
             needs: needs.to_vec(),
             jobs: JobTable::new(),
-            order: VecDeque::new(),
-            class_fifo: vec![VecDeque::new(); needs.len()],
+            fifos: ClassFifos::new(needs.len()),
             queued: vec![0; needs.len()],
             running: vec![0; needs.len()],
             used: 0,
@@ -43,8 +40,7 @@ impl Harness {
             queued: &self.queued,
             running: &self.running,
             jobs: &self.jobs,
-            order: &self.order,
-            class_fifo: &self.class_fifo,
+            fifos: &self.fifos,
         }
     }
 
@@ -55,8 +51,7 @@ impl Harness {
     pub fn arrive_sized(&mut self, class: usize, t: f64, size: f64) -> JobId {
         self.now = self.now.max(t);
         let id = self.jobs.insert(class, self.needs[class], size, t);
-        self.order.push_back(id);
-        self.class_fifo[class].push_back(id);
+        self.fifos.push_back(class, JobTable::slot_of(id));
         self.queued[class] += 1;
         id
     }
@@ -64,18 +59,12 @@ impl Harness {
     /// Complete a running job.
     pub fn complete(&mut self, id: JobId, t: f64) {
         self.now = self.now.max(t);
-        let j = self.jobs.get(id);
-        assert_eq!(j.state, JobState::Running);
-        let (class, need) = (j.class, j.need);
+        assert_eq!(self.jobs.state(id), JobState::Running);
+        let class = self.jobs.class(id);
+        let need = self.jobs.need(id);
         self.used -= need;
         self.running[class] -= 1;
         self.jobs.remove(id);
-        while let Some(&f) = self.order.front() {
-            if self.jobs.in_system(f) {
-                break;
-            }
-            self.order.pop_front();
-        }
     }
 
     /// Repeatedly consult the policy (as the engine does) and apply its
@@ -93,38 +82,38 @@ impl Harness {
                 policy.is_preemptive() || out.preempt.is_empty(),
                 "non-preemptive policy attempted preemption"
             );
-            let preempt = out.preempt.clone();
-            for id in preempt {
-                let j = self.jobs.get_mut(id);
-                assert_eq!(j.state, JobState::Running);
-                j.state = JobState::Queued;
-                j.epoch += 1;
-                let (class, need) = (j.class, j.need);
-                self.used -= need;
-                self.running[class] -= 1;
-                self.queued[class] += 1;
-                self.class_fifo[class].push_front(id);
+            for i in 0..out.preempt.len() {
+                self.apply_preempt(out.preempt[i]);
             }
-            let admit = out.admit.clone();
-            for id in admit {
-                let j = self.jobs.get(id);
-                assert_eq!(j.state, JobState::Queued, "admitted non-queued job");
-                let (class, need) = (j.class, j.need);
-                assert!(self.used + need <= self.k, "capacity violated");
-                if let Some(pos) = self.class_fifo[class].iter().position(|&x| x == id) {
-                    self.class_fifo[class].remove(pos);
-                }
-                let j = self.jobs.get_mut(id);
-                j.state = JobState::Running;
-                j.started = self.now;
-                j.epoch += 1;
-                self.used += need;
-                self.running[class] += 1;
-                self.queued[class] -= 1;
+            for i in 0..out.admit.len() {
+                let id = out.admit[i];
+                self.apply_admit(id);
                 all.push(id);
             }
         }
         all
+    }
+
+    fn apply_preempt(&mut self, id: JobId) {
+        self.jobs.preempt(id, self.now); // asserts Running
+        let class = self.jobs.class(id);
+        let need = self.jobs.need(id);
+        self.used -= need;
+        self.running[class] -= 1;
+        self.queued[class] += 1;
+        self.fifos.push_front(class, JobTable::slot_of(id));
+    }
+
+    fn apply_admit(&mut self, id: JobId) {
+        assert!(self.jobs.is_queued(id), "admitted non-queued job");
+        let class = self.jobs.class(id);
+        let need = self.jobs.need(id);
+        assert!(self.used + need <= self.k, "capacity violated");
+        self.fifos.remove(class, JobTable::slot_of(id));
+        self.jobs.start_service(id, self.now);
+        self.used += need;
+        self.running[class] += 1;
+        self.queued[class] -= 1;
     }
 
     pub fn used(&self) -> u32 {

@@ -5,107 +5,177 @@
 //! Pattern (see /opt/xla-example/load_hlo): HLO *text* →
 //! `HloModuleProto::from_text_file` → `XlaComputation` →
 //! `PjRtClient::compile` → `execute`.
+//!
+//! The PJRT path needs the external `xla` crate, which the offline build
+//! registry does not always carry, so it is gated behind the `pjrt`
+//! cargo feature (see rust/Cargo.toml). Without the feature a stub with
+//! the same API compiles in: `Runtime::new` reports "unavailable" and
+//! every caller (coordinator autotuner, CLI `--artifact` paths) falls
+//! back to the native Theorem-2 calculator / sparse CTMC solver.
 
 pub mod solver;
 
 pub use solver::{SolverArtifact, SolverMetrics};
 
-use anyhow::{Context, Result};
-use std::path::{Path, PathBuf};
+use std::path::PathBuf;
 
-/// A compiled HLO artifact ready to execute on the PJRT CPU client.
-pub struct Artifact {
-    pub name: String,
-    exe: xla::PjRtLoadedExecutable,
-}
-
-/// Shared PJRT client; creating one per artifact is wasteful.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    dir: PathBuf,
-}
-
-impl Runtime {
-    /// `dir` is the artifacts directory (built by `make artifacts`).
-    pub fn new(dir: impl AsRef<Path>) -> Result<Runtime> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Runtime {
-            client,
-            dir: dir.as_ref().to_path_buf(),
-        })
+/// Resolve the artifacts directory: $QS_ARTIFACTS or ./artifacts
+/// (searching upward so tests work from any cwd).
+fn resolve_default_dir() -> PathBuf {
+    if let Ok(d) = std::env::var("QS_ARTIFACTS") {
+        return PathBuf::from(d);
     }
-
-    /// Resolve the artifacts directory: $QS_ARTIFACTS or ./artifacts
-    /// (searching upward so tests work from any cwd).
-    pub fn default_dir() -> PathBuf {
-        if let Ok(d) = std::env::var("QS_ARTIFACTS") {
-            return PathBuf::from(d);
+    let mut cur = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    loop {
+        let cand = cur.join("artifacts");
+        if cand.join("meta.json").exists() {
+            return cand;
         }
-        let mut cur = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
-        loop {
-            let cand = cur.join("artifacts");
-            if cand.join("meta.json").exists() {
-                return cand;
-            }
-            if !cur.pop() {
-                return PathBuf::from("artifacts");
-            }
+        if !cur.pop() {
+            return PathBuf::from("artifacts");
         }
     }
+}
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
+#[cfg(feature = "pjrt")]
+mod imp {
+    use anyhow::{Context, Result};
+    use std::path::{Path, PathBuf};
+
+    /// A compiled HLO artifact ready to execute on the PJRT CPU client.
+    pub struct Artifact {
+        pub name: String,
+        exe: xla::PjRtLoadedExecutable,
     }
 
-    pub fn dir(&self) -> &Path {
-        &self.dir
+    /// Shared PJRT client; creating one per artifact is wasteful.
+    pub struct Runtime {
+        client: xla::PjRtClient,
+        dir: PathBuf,
     }
 
-    /// Load and compile `<name>.hlo.txt` from the artifacts directory.
-    pub fn load(&self, name: &str) -> Result<Artifact> {
-        let path = self.dir.join(format!("{name}.hlo.txt"));
-        anyhow::ensure!(
-            path.exists(),
-            "artifact {path:?} not found — run `make artifacts` first"
-        );
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("non-utf8 artifact path")?,
-        )
-        .with_context(|| format!("parsing HLO text {path:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling artifact {name}"))?;
-        Ok(Artifact {
-            name: name.to_string(),
-            exe,
-        })
+    impl Runtime {
+        /// `dir` is the artifacts directory (built by `make artifacts`).
+        pub fn new(dir: impl AsRef<Path>) -> Result<Runtime> {
+            let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+            Ok(Runtime {
+                client,
+                dir: dir.as_ref().to_path_buf(),
+            })
+        }
+
+        pub fn default_dir() -> PathBuf {
+            super::resolve_default_dir()
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        pub fn dir(&self) -> &Path {
+            &self.dir
+        }
+
+        /// Load and compile `<name>.hlo.txt` from the artifacts directory.
+        pub fn load(&self, name: &str) -> Result<Artifact> {
+            let path = self.dir.join(format!("{name}.hlo.txt"));
+            anyhow::ensure!(
+                path.exists(),
+                "artifact {path:?} not found — run `make artifacts` first"
+            );
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 artifact path")?,
+            )
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling artifact {name}"))?;
+            Ok(Artifact {
+                name: name.to_string(),
+                exe,
+            })
+        }
+    }
+
+    impl Artifact {
+        /// Execute with literal inputs; returns the flattened tuple outputs
+        /// (aot.py lowers with `return_tuple=True`).
+        pub fn execute(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+            let result = self
+                .exe
+                .execute::<xla::Literal>(inputs)
+                .with_context(|| format!("executing artifact {}", self.name))?;
+            let out = result[0][0]
+                .to_literal_sync()
+                .context("fetching result literal")?;
+            out.to_tuple().context("decomposing result tuple")
+        }
     }
 }
 
-impl Artifact {
-    /// Execute with literal inputs; returns the flattened tuple outputs
-    /// (aot.py lowers with `return_tuple=True`).
-    pub fn execute(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
-        let result = self
-            .exe
-            .execute::<xla::Literal>(inputs)
-            .with_context(|| format!("executing artifact {}", self.name))?;
-        let out = result[0][0]
-            .to_literal_sync()
-            .context("fetching result literal")?;
-        out.to_tuple().context("decomposing result tuple")
+#[cfg(not(feature = "pjrt"))]
+mod imp {
+    use anyhow::Result;
+    use std::path::{Path, PathBuf};
+
+    /// Stub artifact (never constructed without the `pjrt` feature).
+    pub struct Artifact {
+        pub name: String,
+    }
+
+    /// Stub runtime: construction always fails so callers take their
+    /// native fallback paths.
+    pub struct Runtime {
+        #[allow(dead_code)]
+        dir: PathBuf,
+    }
+
+    impl Runtime {
+        pub fn new(dir: impl AsRef<Path>) -> Result<Runtime> {
+            let _ = dir.as_ref();
+            anyhow::bail!(
+                "PJRT runtime unavailable: quickswap was built without the `pjrt` feature \
+                 (the native Theorem-2 calculator / CTMC solver remain available)"
+            )
+        }
+
+        pub fn default_dir() -> PathBuf {
+            super::resolve_default_dir()
+        }
+
+        pub fn platform(&self) -> String {
+            "unavailable".into()
+        }
+
+        pub fn dir(&self) -> &Path {
+            &self.dir
+        }
+
+        pub fn load(&self, name: &str) -> Result<Artifact> {
+            anyhow::bail!("cannot load artifact {name}: built without the `pjrt` feature")
+        }
     }
 }
+
+pub use imp::{Artifact, Runtime};
 
 #[cfg(test)]
 mod tests {
     // Runtime behaviour is exercised by rust/tests/integration_runtime.rs
-    // (requires built artifacts). Here: path resolution only.
+    // (requires the `pjrt` feature and built artifacts). Here: path
+    // resolution only.
     #[test]
     fn default_dir_resolves() {
         let d = super::Runtime::default_dir();
         assert!(d.ends_with("artifacts"), "{d:?}");
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_runtime_reports_unavailable() {
+        let err = super::Runtime::new("artifacts").err().expect("stub must fail");
+        assert!(err.to_string().contains("pjrt"), "{err}");
     }
 }

@@ -3,9 +3,18 @@
 //! Input layout (python/compile/kernels/ref.py):
 //!   params f32[8] = [λ1, λk, μ1, μk, ℓ, k, _, _],  iters i32.
 //! Output layout (python/compile/model.py METRICS): f32[16].
+//!
+//! Like [`super::Runtime`], the executing halves are gated on the `pjrt`
+//! feature; without it `load`/`solve`/`autotune` return errors and the
+//! coordinator falls back to the native calculator.
 
-use super::{Artifact, Runtime};
-use anyhow::{Context, Result};
+use super::Runtime;
+use anyhow::Result;
+
+#[cfg(feature = "pjrt")]
+use super::Artifact;
+#[cfg(feature = "pjrt")]
+use anyhow::Context;
 
 /// Decoded metric vector from one solver execution.
 #[derive(Clone, Copy, Debug, Default)]
@@ -59,11 +68,13 @@ impl SolverMetrics {
 }
 
 /// A loaded solver artifact bound to a specific `k` and truncation.
+#[cfg(feature = "pjrt")]
 pub struct SolverArtifact {
     artifact: Artifact,
     pub k: u32,
 }
 
+#[cfg(feature = "pjrt")]
 impl SolverArtifact {
     /// Load `msfq_solver_k{k}.hlo.txt` from the runtime's directory.
     pub fn load(rt: &Runtime, k: u32) -> Result<SolverArtifact> {
@@ -139,11 +150,13 @@ impl SolverArtifact {
 }
 
 /// The full-sweep artifact (all thresholds in one execution).
+#[cfg(feature = "pjrt")]
 pub struct SweepArtifact {
     artifact: Artifact,
     pub k: u32,
 }
 
+#[cfg(feature = "pjrt")]
 impl SweepArtifact {
     pub fn load(rt: &Runtime, k: u32) -> Result<SweepArtifact> {
         let artifact = rt.load(&format!("msfq_sweep_k{k}"))?;
@@ -182,5 +195,70 @@ impl SweepArtifact {
         let best_et = out[1].to_vec::<i32>()?[0] as u32;
         let best_etw = out[2].to_vec::<i32>()?[0] as u32;
         Ok((metrics, best_et, best_etw))
+    }
+}
+
+// ---- stubs without the `pjrt` feature ----
+
+/// Stub: loading always fails; the autotuner falls back to the native
+/// Theorem-2 calculator.
+#[cfg(not(feature = "pjrt"))]
+pub struct SolverArtifact {
+    pub k: u32,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl SolverArtifact {
+    pub fn load(rt: &Runtime, k: u32) -> Result<SolverArtifact> {
+        let _ = rt;
+        anyhow::bail!("solver artifact k={k} unavailable: built without the `pjrt` feature")
+    }
+
+    pub fn solve(
+        &self,
+        _ell: u32,
+        _lam1: f64,
+        _lamk: f64,
+        _mu1: f64,
+        _muk: f64,
+        _iters: i32,
+    ) -> Result<SolverMetrics> {
+        anyhow::bail!("built without the `pjrt` feature")
+    }
+
+    pub fn autotune(
+        &self,
+        _lam1: f64,
+        _lamk: f64,
+        _mu1: f64,
+        _muk: f64,
+        _iters: i32,
+        _weighted: bool,
+    ) -> Result<(u32, SolverMetrics)> {
+        anyhow::bail!("built without the `pjrt` feature")
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+pub struct SweepArtifact {
+    pub k: u32,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl SweepArtifact {
+    pub fn load(rt: &Runtime, k: u32) -> Result<SweepArtifact> {
+        let _ = rt;
+        anyhow::bail!("sweep artifact k={k} unavailable: built without the `pjrt` feature")
+    }
+
+    pub fn sweep(
+        &self,
+        _lam1: f64,
+        _lamk: f64,
+        _mu1: f64,
+        _muk: f64,
+        _iters: i32,
+    ) -> Result<(Vec<SolverMetrics>, u32, u32)> {
+        anyhow::bail!("built without the `pjrt` feature")
     }
 }

@@ -5,16 +5,27 @@
 //! policy until it makes no further admission/preemption. Feasibility
 //! (`Σ need ≤ k`) and non-preemption are enforced here, not trusted to
 //! the policy.
+//!
+//! Hot-path design (see sim/events.rs and sim/job.rs):
+//!
+//! * departures are **cancelled in place** on preemption — there are no
+//!   epoch tombstones and no stale pops;
+//! * waiting-queue membership is intrusive, so out-of-FIFO admissions
+//!   (MSF order, backfilling) are O(1);
+//! * an [`Engine`] is **resettable**: [`Engine::reset`] returns it to the
+//!   initial state while retaining every allocation (event arena, job
+//!   slab, FIFO links, metrics buffers), so repeated replications pay no
+//!   construction cost and a reset engine is bit-for-bit equivalent to a
+//!   fresh one.
 
 use crate::policy::{Decision, JobId, Policy, SysView};
 use crate::sim::events::{EventKind, EventQueue};
-use crate::sim::job::{JobState, JobTable};
+use crate::sim::job::{ClassFifos, JobTable};
 use crate::sim::metrics::{Metrics, SimResult};
 use crate::sim::phase::PhaseStats;
 use crate::sim::timeseries::{Timeseries, TimeseriesSpec};
 use crate::util::rng::Rng;
 use crate::workload::{Arrival, ArrivalSource, Workload};
-use std::collections::VecDeque;
 
 #[derive(Clone, Debug)]
 pub struct SimConfig {
@@ -70,10 +81,8 @@ pub struct Engine {
 
     now: f64,
     jobs: JobTable,
-    /// All in-system jobs in arrival order (lazily pruned tombstones).
-    order: VecDeque<JobId>,
-    /// Per-class FIFO of waiting jobs.
-    class_fifo: Vec<VecDeque<JobId>>,
+    /// Per-class intrusive FIFO of waiting jobs.
+    fifos: ClassFifos,
     queued: Vec<u32>,
     running: Vec<u32>,
     n_by_class: Vec<u32>,
@@ -104,8 +113,7 @@ impl Engine {
             wl: wl.clone(),
             now: 0.0,
             jobs: JobTable::new(),
-            order: VecDeque::with_capacity(1024),
-            class_fifo: vec![VecDeque::new(); nc],
+            fifos: ClassFifos::new(nc),
             queued: vec![0; nc],
             running: vec![0; nc],
             n_by_class: vec![0; nc],
@@ -121,6 +129,49 @@ impl Engine {
         }
     }
 
+    /// Return to the initial state while retaining all allocations, so a
+    /// subsequent [`run`](Engine::run) behaves exactly like the first run
+    /// of a freshly constructed engine (bit-identical given the same
+    /// source/policy/rng).
+    pub fn reset(&mut self) {
+        self.now = 0.0;
+        self.jobs.clear();
+        self.fifos.clear();
+        for q in &mut self.queued {
+            *q = 0;
+        }
+        for r in &mut self.running {
+            *r = 0;
+        }
+        for n in &mut self.n_by_class {
+            *n = 0;
+        }
+        self.used = 0;
+        self.events.clear();
+        self.timer_seq = 0;
+        self.pending_arrival = None;
+        self.metrics.reset_full();
+        self.phases = PhaseStats::new();
+        if let Some(spec) = self.cfg.timeseries.as_ref() {
+            self.ts = Some(Timeseries::new(spec, self.needs.len()));
+        }
+        self.events_processed = 0;
+        self.completions_total = 0;
+        self.warmed = false;
+    }
+
+    /// The metrics accumulated by the last [`run`](Engine::run) (valid
+    /// until the next `reset`). Used by the replication runner to pool
+    /// batch means across independent runs.
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    /// Current virtual time.
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
     fn view(&self) -> SysView<'_> {
         SysView {
             now: self.now,
@@ -130,8 +181,7 @@ impl Engine {
             queued: &self.queued,
             running: &self.running,
             jobs: &self.jobs,
-            order: &self.order,
-            class_fifo: &self.class_fifo,
+            fifos: &self.fifos,
         }
     }
 
@@ -175,10 +225,8 @@ impl Engine {
                         self.pending_arrival = Some(next);
                     }
                 }
-                EventKind::Departure { job, epoch } => {
-                    if !self.apply_departure(job, epoch) {
-                        continue; // stale event
-                    }
+                EventKind::Departure { job } => {
+                    self.apply_departure(job);
                     if self.completions_total >= stop_at {
                         break;
                     }
@@ -228,26 +276,18 @@ impl Engine {
         let need = self.needs[a.class];
         debug_assert!(a.size >= 0.0);
         let id = self.jobs.insert(a.class, need, a.size, a.t);
-        self.order.push_back(id);
-        self.class_fifo[a.class].push_back(id);
+        self.fifos.push_back(a.class, JobTable::slot_of(id));
         self.queued[a.class] += 1;
         self.n_by_class[a.class] += 1;
         self.metrics
             .occupancy_changed(self.now, a.class, self.n_by_class[a.class]);
     }
 
-    /// Returns false for stale (superseded) departure events.
-    fn apply_departure(&mut self, id: JobId, epoch: u32) -> bool {
-        {
-            let j = self.jobs.get(id);
-            if j.state != JobState::Running || j.epoch != epoch {
-                return false;
-            }
-        }
-        let (class, need, arrival) = {
-            let j = self.jobs.get(id);
-            (j.class, j.need, j.arrival)
-        };
+    fn apply_departure(&mut self, id: JobId) {
+        debug_assert!(self.jobs.is_running(id), "departure for non-running job");
+        let class = self.jobs.class(id);
+        let need = self.jobs.need(id);
+        let arrival = self.jobs.arrival(id);
         self.used -= need;
         self.running[class] -= 1;
         self.n_by_class[class] -= 1;
@@ -259,22 +299,6 @@ impl Engine {
         self.metrics
             .occupancy_changed(self.now, class, self.n_by_class[class]);
         self.metrics.busy_changed(self.now, self.used);
-        self.prune_order();
-        true
-    }
-
-    fn prune_order(&mut self) {
-        while let Some(&front) = self.order.front() {
-            if self.jobs.in_system(front) {
-                break;
-            }
-            self.order.pop_front();
-        }
-        // Compact if mostly tombstones.
-        if self.order.len() > 64 && self.jobs.len() * 2 < self.order.len() {
-            let jobs = &self.jobs;
-            self.order.retain(|&id| jobs.in_system(id));
-        }
     }
 
     fn consult_policy(&mut self, policy: &mut dyn Policy, decision: &mut Decision) {
@@ -296,7 +320,8 @@ impl Engine {
                 "non-preemptive policy {} attempted preemption",
                 policy.name()
             );
-            for &id in &decision.preempt {
+            for i in 0..decision.preempt.len() {
+                let id = decision.preempt[i];
                 self.do_preempt(id);
             }
             for i in 0..decision.admit.len() {
@@ -307,32 +332,29 @@ impl Engine {
     }
 
     fn do_preempt(&mut self, id: JobId) {
-        let j = self.jobs.get_mut(id);
-        assert_eq!(j.state, JobState::Running, "preempting non-running job");
-        j.remaining -= self.now - j.started;
-        debug_assert!(j.remaining >= -1e-9);
-        j.remaining = j.remaining.max(0.0);
-        j.state = JobState::Queued;
-        j.epoch += 1;
-        let (class, need) = (j.class, j.need);
+        // Cancel the in-flight departure in place: no tombstones.
+        let canceled = self.events.cancel_departure(id);
+        debug_assert!(canceled, "preempted job had no scheduled departure");
+        self.jobs.preempt(id, self.now);
+        let class = self.jobs.class(id);
+        let need = self.jobs.need(id);
         self.used -= need;
         self.running[class] -= 1;
         self.queued[class] += 1;
-        // Preempted jobs rejoin the front of their class FIFO; `order`
-        // still holds them at their original arrival position.
-        self.class_fifo[class].push_front(id);
+        // Preempted jobs rejoin the front of their class FIFO; the
+        // arrival-order list still holds them at their original position.
+        self.fifos.push_front(class, JobTable::slot_of(id));
         self.metrics.busy_changed(self.now, self.used);
     }
 
     fn do_admit(&mut self, id: JobId, policy: &dyn Policy) {
-        let j = self.jobs.get(id);
-        assert_eq!(
-            j.state,
-            JobState::Queued,
+        assert!(
+            self.jobs.is_queued(id),
             "policy {} admitted a non-queued job",
             policy.name()
         );
-        let (class, need) = (j.class, j.need);
+        let class = self.jobs.class(id);
+        let need = self.jobs.need(id);
         assert!(
             self.used + need <= self.k,
             "policy {} violated capacity: used={} need={} k={}",
@@ -341,37 +363,15 @@ impl Engine {
             need,
             self.k
         );
-        // Remove from the class FIFO (front in the common case).
-        let jobs = &self.jobs;
-        let fifo = &mut self.class_fifo[class];
-        loop {
-            match fifo.front() {
-                Some(&f) if !jobs.is_queued(f) || f == id => {
-                    fifo.pop_front();
-                    if f == id {
-                        break;
-                    }
-                }
-                _ => {
-                    // Out-of-FIFO admission: linear removal (rare).
-                    if let Some(pos) = fifo.iter().position(|&x| x == id) {
-                        fifo.remove(pos);
-                    }
-                    break;
-                }
-            }
-        }
-        let j = self.jobs.get_mut(id);
-        j.state = JobState::Running;
-        j.started = self.now;
-        j.epoch += 1;
-        let depart_at = self.now + j.remaining;
-        let epoch = j.epoch;
+        // O(1) removal from any FIFO position (intrusive links).
+        self.fifos.remove(class, JobTable::slot_of(id));
+        self.jobs.start_service(id, self.now);
+        let depart_at = self.now + self.jobs.remaining(id);
         self.used += need;
         self.running[class] += 1;
         self.queued[class] -= 1;
         self.events
-            .push(depart_at, EventKind::Departure { job: id, epoch });
+            .push(depart_at, EventKind::Departure { job: id });
         self.metrics.busy_changed(self.now, self.used);
     }
 
@@ -424,5 +424,45 @@ mod tests {
             "E[T]={} expect {expect}",
             r.mean_t_all
         );
+    }
+
+    /// Preemptive policies exercise cancel/reschedule on the indexed
+    /// heap; the run must stay self-consistent end to end.
+    #[test]
+    fn preemptive_run_is_consistent() {
+        let wl = Workload::one_or_all(8, 3.0, 0.9, 1.0, 1.0);
+        let cfg = SimConfig {
+            target_completions: 20_000,
+            warmup_completions: 4_000,
+            ..Default::default()
+        };
+        let r = crate::sim::run_named(&wl, "server-filling", &cfg, 3).unwrap();
+        assert_eq!(r.completed, 20_000);
+        assert!(r.mean_t_all.is_finite() && r.mean_t_all > 0.0);
+        assert!(r.utilization <= 1.0 + 1e-9);
+    }
+
+    /// reset() must reproduce the first run exactly.
+    #[test]
+    fn reset_reproduces_run() {
+        let wl = Workload::one_or_all(4, 1.5, 0.9, 1.0, 1.0);
+        let cfg = SimConfig {
+            target_completions: 10_000,
+            warmup_completions: 2_000,
+            ..Default::default()
+        };
+        let mut engine = Engine::new(&wl, cfg);
+        let run = |e: &mut Engine| {
+            let mut src = SyntheticSource::new(wl.clone());
+            let mut rng = Rng::new(42);
+            let mut p = crate::policy::by_name("msfq:3", &wl).unwrap();
+            e.run(&mut src, p.as_mut(), &mut rng)
+        };
+        let a = run(&mut engine);
+        engine.reset();
+        let b = run(&mut engine);
+        assert_eq!(a.events, b.events);
+        assert_eq!(a.completed, b.completed);
+        assert_eq!(a.mean_t_all.to_bits(), b.mean_t_all.to_bits());
     }
 }

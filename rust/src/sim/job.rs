@@ -1,11 +1,26 @@
-//! Job storage: a generational slab keyed by `JobId`.
+//! Job storage: a **structure-of-arrays** generational slab keyed by
+//! `JobId`, plus the intrusive lists the engine's hot path walks.
 //!
-//! The engine keeps every job in the system (queued or running) in this
-//! table; slots are recycled after departure so memory is O(jobs in
-//! system), not O(jobs simulated). Ids are *generational* — a `JobId`
-//! packs (generation, slot) so an id that lingers in an index (e.g. the
-//! arrival-order deque) after its job departed can never alias a new job
-//! occupying the same slot.
+//! The engine keeps every job in the system (queued or running) here;
+//! slots are recycled after departure so memory is O(jobs in system),
+//! not O(jobs simulated). Ids are *generational* — a `JobId` packs
+//! (generation, slot) so an id that lingers in an index after its job
+//! departed can never alias a new job occupying the same slot.
+//!
+//! Layout: the fields every policy consult touches (state/class/need/
+//! remaining) live in their own dense arrays so a scheduling scan pulls
+//! only the cache lines it needs; cold bookkeeping (arrival/started/
+//! starts/generation/free-list) sits in separate arrays.
+//!
+//! Two intrusive doubly-linked lists replace the old tombstone deques:
+//!
+//! * the **arrival-order list** (links owned by `JobTable`, maintained by
+//!   insert/remove) contains exactly the live jobs, oldest first — no
+//!   tombstone pruning, no compaction heuristics;
+//! * the per-class **waiting FIFOs** (`ClassFifos`) give O(1) push
+//!   front/back *and O(1) removal at any position*, fixing the former
+//!   O(n) `iter().position` scan for out-of-FIFO admissions (MSF-order
+//!   and backfilling policies admit from the middle constantly).
 
 use crate::policy::{ClassId, JobId};
 
@@ -13,27 +28,8 @@ use crate::policy::{ClassId, JobId};
 pub enum JobState {
     Queued,
     Running,
-    /// Slot is free (job departed); `next_free` threads the free list.
+    /// Slot is free (job departed).
     Free,
-}
-
-#[derive(Clone, Debug)]
-pub struct Job {
-    pub class: ClassId,
-    pub need: u32,
-    /// Remaining service requirement (= full size until first run).
-    pub remaining: f64,
-    /// Absolute arrival time.
-    pub arrival: f64,
-    /// Time service (re)started; valid while Running.
-    pub started: f64,
-    pub state: JobState,
-    /// Incremented on every (re)start/preemption; stale departure events
-    /// carry an old epoch and are discarded.
-    pub epoch: u32,
-    /// Slot generation; must match the id's generation half.
-    gen: u32,
-    next_free: u32,
 }
 
 const NIL: u32 = u32::MAX;
@@ -48,82 +44,242 @@ fn unpack(id: JobId) -> (u32, u32) {
     ((id >> 32) as u32, id as u32)
 }
 
-/// Generational slab of jobs with O(1) insert/remove and safe id reuse.
-#[derive(Default)]
+/// By-value copy of one job's fields (for cold paths: tests, the
+/// real-time coordinator). Hot paths use the per-field accessors.
+#[derive(Clone, Copy, Debug)]
+pub struct JobSnapshot {
+    pub class: ClassId,
+    pub need: u32,
+    /// Remaining service requirement (= full size until first run).
+    pub remaining: f64,
+    /// Absolute arrival time.
+    pub arrival: f64,
+    /// Time service (re)started; valid while Running.
+    pub started: f64,
+    pub state: JobState,
+    /// Times this job has entered service. The real-time coordinator
+    /// uses it to discard stale completion timers after a preemption;
+    /// the DES engine needs no such token — it cancels departure events
+    /// in place.
+    pub starts: u32,
+}
+
+/// Generational SoA slab of jobs with O(1) insert/remove, safe id reuse,
+/// and an intrusive arrival-order list.
 pub struct JobTable {
-    slots: Vec<Job>,
+    state: Vec<JobState>,
+    class: Vec<u32>,
+    need: Vec<u32>,
+    remaining: Vec<f64>,
+    arrival: Vec<f64>,
+    started: Vec<f64>,
+    starts: Vec<u32>,
+    gen: Vec<u32>,
+    next_free: Vec<u32>,
+    ord_prev: Vec<u32>,
+    ord_next: Vec<u32>,
+    ord_head: u32,
+    ord_tail: u32,
     free_head: u32,
     live: usize,
+}
+
+impl Default for JobTable {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 impl JobTable {
     pub fn new() -> Self {
         Self {
-            slots: Vec::new(),
+            state: Vec::new(),
+            class: Vec::new(),
+            need: Vec::new(),
+            remaining: Vec::new(),
+            arrival: Vec::new(),
+            started: Vec::new(),
+            starts: Vec::new(),
+            gen: Vec::new(),
+            next_free: Vec::new(),
+            ord_prev: Vec::new(),
+            ord_next: Vec::new(),
+            ord_head: NIL,
+            ord_tail: NIL,
             free_head: NIL,
             live: 0,
         }
     }
 
-    pub fn insert(&mut self, class: ClassId, need: u32, size: f64, arrival: f64) -> JobId {
-        self.live += 1;
-        let job = Job {
-            class,
-            need,
-            remaining: size,
-            arrival,
-            started: f64::NAN,
-            state: JobState::Queued,
-            epoch: 0,
-            gen: 0,
-            next_free: NIL,
-        };
-        if self.free_head != NIL {
-            let slot = self.free_head;
-            let s = &mut self.slots[slot as usize];
-            self.free_head = s.next_free;
-            let gen = s.gen.wrapping_add(1);
-            *s = job;
-            s.gen = gen;
-            pack(gen, slot)
-        } else {
-            self.slots.push(job);
-            pack(0, (self.slots.len() - 1) as u32)
-        }
-    }
-
-    pub fn remove(&mut self, id: JobId) {
-        let (gen, slot) = unpack(id);
-        let s = &mut self.slots[slot as usize];
-        debug_assert!(s.gen == gen && s.state != JobState::Free);
-        s.state = JobState::Free;
-        s.next_free = self.free_head;
-        self.free_head = slot;
-        self.live -= 1;
+    /// The slab slot an id refers to (valid whether or not the id is
+    /// still live). Pure function of the id.
+    #[inline]
+    pub fn slot_of(id: JobId) -> u32 {
+        id as u32
     }
 
     /// Panics if the id is stale (generation mismatch).
     #[inline]
-    pub fn get(&self, id: JobId) -> &Job {
+    fn slot_checked(&self, id: JobId) -> usize {
         let (gen, slot) = unpack(id);
-        let j = &self.slots[slot as usize];
-        assert!(j.gen == gen, "stale JobId");
-        j
+        let i = slot as usize;
+        assert!(self.gen[i] == gen, "stale JobId");
+        i
+    }
+
+    pub fn insert(&mut self, class: ClassId, need: u32, size: f64, arrival: f64) -> JobId {
+        self.live += 1;
+        let slot = if self.free_head != NIL {
+            let slot = self.free_head;
+            let i = slot as usize;
+            self.free_head = self.next_free[i];
+            self.state[i] = JobState::Queued;
+            self.class[i] = class as u32;
+            self.need[i] = need;
+            self.remaining[i] = size;
+            self.arrival[i] = arrival;
+            self.started[i] = f64::NAN;
+            self.starts[i] = 0;
+            self.gen[i] = self.gen[i].wrapping_add(1);
+            self.next_free[i] = NIL;
+            slot
+        } else {
+            self.state.push(JobState::Queued);
+            self.class.push(class as u32);
+            self.need.push(need);
+            self.remaining.push(size);
+            self.arrival.push(arrival);
+            self.started.push(f64::NAN);
+            self.starts.push(0);
+            self.gen.push(0);
+            self.next_free.push(NIL);
+            self.ord_prev.push(NIL);
+            self.ord_next.push(NIL);
+            (self.state.len() - 1) as u32
+        };
+        // Link at the arrival-order tail.
+        let i = slot as usize;
+        self.ord_prev[i] = self.ord_tail;
+        self.ord_next[i] = NIL;
+        if self.ord_tail != NIL {
+            self.ord_next[self.ord_tail as usize] = slot;
+        } else {
+            self.ord_head = slot;
+        }
+        self.ord_tail = slot;
+        pack(self.gen[i], slot)
+    }
+
+    pub fn remove(&mut self, id: JobId) {
+        let i = self.slot_checked(id);
+        debug_assert!(self.state[i] != JobState::Free, "double remove");
+        // Unlink from the arrival-order list.
+        let (p, n) = (self.ord_prev[i], self.ord_next[i]);
+        if p != NIL {
+            self.ord_next[p as usize] = n;
+        } else {
+            self.ord_head = n;
+        }
+        if n != NIL {
+            self.ord_prev[n as usize] = p;
+        } else {
+            self.ord_tail = p;
+        }
+        self.ord_prev[i] = NIL;
+        self.ord_next[i] = NIL;
+        self.state[i] = JobState::Free;
+        self.next_free[i] = self.free_head;
+        self.free_head = i as u32;
+        self.live -= 1;
+    }
+
+    // ---- accessors (panic on stale ids, like the former `get`) ----
+
+    #[inline]
+    pub fn class(&self, id: JobId) -> ClassId {
+        self.class[self.slot_checked(id)] as ClassId
     }
 
     #[inline]
-    pub fn get_mut(&mut self, id: JobId) -> &mut Job {
-        let (gen, slot) = unpack(id);
-        let j = &mut self.slots[slot as usize];
-        assert!(j.gen == gen, "stale JobId");
-        j
+    pub fn need(&self, id: JobId) -> u32 {
+        self.need[self.slot_checked(id)]
     }
+
+    #[inline]
+    pub fn remaining(&self, id: JobId) -> f64 {
+        self.remaining[self.slot_checked(id)]
+    }
+
+    #[inline]
+    pub fn arrival(&self, id: JobId) -> f64 {
+        self.arrival[self.slot_checked(id)]
+    }
+
+    #[inline]
+    pub fn started(&self, id: JobId) -> f64 {
+        self.started[self.slot_checked(id)]
+    }
+
+    #[inline]
+    pub fn starts(&self, id: JobId) -> u32 {
+        self.starts[self.slot_checked(id)]
+    }
+
+    #[inline]
+    pub fn state(&self, id: JobId) -> JobState {
+        self.state[self.slot_checked(id)]
+    }
+
+    /// By-value copy of every field (panics on stale ids).
+    pub fn get(&self, id: JobId) -> JobSnapshot {
+        let i = self.slot_checked(id);
+        JobSnapshot {
+            class: self.class[i] as ClassId,
+            need: self.need[i],
+            remaining: self.remaining[i],
+            arrival: self.arrival[i],
+            started: self.started[i],
+            state: self.state[i],
+            starts: self.starts[i],
+        }
+    }
+
+    /// The live id occupying `slot` (debug-asserts liveness).
+    #[inline]
+    pub fn id_at(&self, slot: u32) -> JobId {
+        debug_assert!(self.state[slot as usize] != JobState::Free);
+        pack(self.gen[slot as usize], slot)
+    }
+
+    // ---- state transitions ----
+
+    /// Queued → Running at time `now`; returns the new `starts` count.
+    pub fn start_service(&mut self, id: JobId, now: f64) -> u32 {
+        let i = self.slot_checked(id);
+        assert_eq!(self.state[i], JobState::Queued, "starting a non-queued job");
+        self.state[i] = JobState::Running;
+        self.started[i] = now;
+        self.starts[i] += 1;
+        self.starts[i]
+    }
+
+    /// Running → Queued at time `now`, charging the elapsed service.
+    pub fn preempt(&mut self, id: JobId, now: f64) {
+        let i = self.slot_checked(id);
+        assert_eq!(self.state[i], JobState::Running, "preempting non-running job");
+        let rem = self.remaining[i] - (now - self.started[i]);
+        debug_assert!(rem >= -1e-9);
+        self.remaining[i] = rem.max(0.0);
+        self.state[i] = JobState::Queued;
+    }
+
+    // ---- liveness queries (stale-safe, no panic) ----
 
     #[inline]
     fn state_of(&self, id: JobId) -> Option<JobState> {
         let (gen, slot) = unpack(id);
-        match self.slots.get(slot as usize) {
-            Some(j) if j.gen == gen => Some(j.state),
+        match self.gen.get(slot as usize) {
+            Some(&g) if g == gen => Some(self.state[slot as usize]),
             _ => None,
         }
     }
@@ -147,6 +303,21 @@ impl JobTable {
         )
     }
 
+    /// Visit live jobs oldest-arrival-first; `f` returns false to stop.
+    /// The `bool` argument flags jobs currently in service.
+    pub fn for_each_in_order(&self, f: &mut dyn FnMut(JobId, ClassId, bool) -> bool) {
+        let mut s = self.ord_head;
+        while s != NIL {
+            let i = s as usize;
+            let next = self.ord_next[i];
+            let running = self.state[i] == JobState::Running;
+            if !f(pack(self.gen[i], s), self.class[i] as ClassId, running) {
+                break;
+            }
+            s = next;
+        }
+    }
+
     pub fn len(&self) -> usize {
         self.live
     }
@@ -156,7 +327,160 @@ impl JobTable {
     }
 
     pub fn capacity(&self) -> usize {
-        self.slots.len()
+        self.state.len()
+    }
+
+    /// Drop every job but retain all allocations (engine reuse). Old ids
+    /// become invalid; generation counters restart, so a reset table is
+    /// bit-for-bit equivalent to a freshly constructed one.
+    pub fn clear(&mut self) {
+        self.state.clear();
+        self.class.clear();
+        self.need.clear();
+        self.remaining.clear();
+        self.arrival.clear();
+        self.started.clear();
+        self.starts.clear();
+        self.gen.clear();
+        self.next_free.clear();
+        self.ord_prev.clear();
+        self.ord_next.clear();
+        self.ord_head = NIL;
+        self.ord_tail = NIL;
+        self.free_head = NIL;
+        self.live = 0;
+    }
+}
+
+/// Per-class waiting-job FIFOs as intrusive doubly-linked lists over job
+/// slots. All of push_front / push_back / remove-anywhere are O(1); the
+/// lists contain exactly the queued jobs (no tombstones), so iteration
+/// needs no liveness filtering.
+pub struct ClassFifos {
+    head: Vec<u32>,
+    tail: Vec<u32>,
+    prev: Vec<u32>,
+    next: Vec<u32>,
+}
+
+impl ClassFifos {
+    pub fn new(num_classes: usize) -> Self {
+        Self {
+            head: vec![NIL; num_classes],
+            tail: vec![NIL; num_classes],
+            prev: Vec::new(),
+            next: Vec::new(),
+        }
+    }
+
+    #[inline]
+    fn ensure(&mut self, slot: u32) {
+        let n = slot as usize + 1;
+        if self.prev.len() < n {
+            self.prev.resize(n, NIL);
+            self.next.resize(n, NIL);
+        }
+    }
+
+    pub fn push_back(&mut self, class: ClassId, slot: u32) {
+        self.ensure(slot);
+        let i = slot as usize;
+        debug_assert!(self.prev[i] == NIL && self.next[i] == NIL);
+        self.prev[i] = self.tail[class];
+        self.next[i] = NIL;
+        if self.tail[class] != NIL {
+            self.next[self.tail[class] as usize] = slot;
+        } else {
+            self.head[class] = slot;
+        }
+        self.tail[class] = slot;
+    }
+
+    pub fn push_front(&mut self, class: ClassId, slot: u32) {
+        self.ensure(slot);
+        let i = slot as usize;
+        debug_assert!(self.prev[i] == NIL && self.next[i] == NIL);
+        self.next[i] = self.head[class];
+        self.prev[i] = NIL;
+        if self.head[class] != NIL {
+            self.prev[self.head[class] as usize] = slot;
+        } else {
+            self.tail[class] = slot;
+        }
+        self.head[class] = slot;
+    }
+
+    /// Unlink `slot` from its class list — O(1) at any position.
+    pub fn remove(&mut self, class: ClassId, slot: u32) {
+        let i = slot as usize;
+        let (p, n) = (self.prev[i], self.next[i]);
+        if p != NIL {
+            self.next[p as usize] = n;
+        } else {
+            debug_assert_eq!(self.head[class], slot, "removing unlinked slot");
+            self.head[class] = n;
+        }
+        if n != NIL {
+            self.prev[n as usize] = p;
+        } else {
+            self.tail[class] = p;
+        }
+        self.prev[i] = NIL;
+        self.next[i] = NIL;
+    }
+
+    /// Oldest waiting slot of `class`, if any.
+    #[inline]
+    pub fn head_slot(&self, class: ClassId) -> Option<u32> {
+        let h = self.head[class];
+        if h == NIL {
+            None
+        } else {
+            Some(h)
+        }
+    }
+
+    /// Front-to-back slot iterator for `class`.
+    pub fn iter(&self, class: ClassId) -> FifoIter<'_> {
+        FifoIter {
+            next: &self.next,
+            cur: self.head[class],
+        }
+    }
+
+    /// Empty all lists, retaining allocations.
+    pub fn clear(&mut self) {
+        for h in &mut self.head {
+            *h = NIL;
+        }
+        for t in &mut self.tail {
+            *t = NIL;
+        }
+        for p in &mut self.prev {
+            *p = NIL;
+        }
+        for n in &mut self.next {
+            *n = NIL;
+        }
+    }
+}
+
+pub struct FifoIter<'a> {
+    next: &'a [u32],
+    cur: u32,
+}
+
+impl Iterator for FifoIter<'_> {
+    type Item = u32;
+
+    #[inline]
+    fn next(&mut self) -> Option<u32> {
+        if self.cur == NIL {
+            return None;
+        }
+        let s = self.cur;
+        self.cur = self.next[s as usize];
+        Some(s)
     }
 }
 
@@ -192,5 +516,71 @@ mod tests {
         // now holds a live job.
         assert!(!t.in_system(a));
         assert!(!t.is_queued(a));
+    }
+
+    #[test]
+    fn arrival_order_list_tracks_liveness() {
+        let mut t = JobTable::new();
+        let a = t.insert(0, 1, 1.0, 0.0);
+        let b = t.insert(1, 1, 1.0, 0.1);
+        let c = t.insert(0, 1, 1.0, 0.2);
+        t.remove(b);
+        let mut seen = Vec::new();
+        t.for_each_in_order(&mut |id, _, _| {
+            seen.push(id);
+            true
+        });
+        assert_eq!(seen, vec![a, c]);
+        // Slot reuse appends at the tail (new arrival = youngest).
+        let d = t.insert(2, 1, 1.0, 0.3);
+        seen.clear();
+        t.for_each_in_order(&mut |id, _, _| {
+            seen.push(id);
+            true
+        });
+        assert_eq!(seen, vec![a, c, d]);
+    }
+
+    #[test]
+    fn service_transitions_track_remaining() {
+        let mut t = JobTable::new();
+        let a = t.insert(0, 2, 5.0, 0.0);
+        assert_eq!(t.start_service(a, 1.0), 1);
+        assert_eq!(t.state(a), JobState::Running);
+        t.preempt(a, 3.0);
+        assert_eq!(t.state(a), JobState::Queued);
+        assert!((t.remaining(a) - 3.0).abs() < 1e-12);
+        assert_eq!(t.start_service(a, 4.0), 2);
+    }
+
+    #[test]
+    fn clear_is_like_fresh() {
+        let mut t = JobTable::new();
+        let a = t.insert(0, 1, 1.0, 0.0);
+        t.remove(a);
+        t.insert(1, 1, 1.0, 0.1);
+        t.clear();
+        assert!(t.is_empty());
+        let b = t.insert(3, 2, 9.0, 0.0);
+        let fresh = JobTable::new().insert(3, 2, 9.0, 0.0);
+        assert_eq!(b, fresh, "reset table must mint the same ids as a fresh one");
+    }
+
+    #[test]
+    fn fifo_removal_any_position() {
+        let mut f = ClassFifos::new(2);
+        for s in 0..5u32 {
+            f.push_back(0, s);
+        }
+        f.remove(0, 2); // middle
+        f.remove(0, 0); // head
+        f.remove(0, 4); // tail
+        let left: Vec<u32> = f.iter(0).collect();
+        assert_eq!(left, vec![1, 3]);
+        f.push_front(0, 7);
+        assert_eq!(f.head_slot(0), Some(7));
+        let left: Vec<u32> = f.iter(0).collect();
+        assert_eq!(left, vec![7, 1, 3]);
+        assert!(f.iter(1).next().is_none());
     }
 }

@@ -1,11 +1,15 @@
 //! Simulation output metrics: per-class response times, time-averaged
-//! occupancy and utilization, Jain fairness, weighted mean response time.
+//! occupancy and utilization, Jain fairness, weighted mean response time,
+//! and pooling of independent replications into one result with a
+//! batch-means CI over all replications' batches.
 
 use crate::util::stats::{jain_index, BatchMeans, TimeAverage, Welford};
 use crate::workload::Workload;
 
-/// Collects per-class and aggregate statistics; `reset` is called at the
-/// end of warmup so reported numbers cover only the measurement window.
+/// Collects per-class and aggregate statistics; `reset_at` is called at
+/// the end of warmup so reported numbers cover only the measurement
+/// window.
+#[derive(Clone)]
 pub struct Metrics {
     /// Response-time accumulators per class.
     pub resp: Vec<Welford>,
@@ -55,7 +59,7 @@ impl Metrics {
         for w in &mut self.resp {
             *w = Welford::new();
         }
-        self.resp_all = BatchMeans::new(self.batch);
+        self.resp_all.reset();
         for (c, ta) in self.n_avg.iter_mut().enumerate() {
             *ta = TimeAverage::new();
             ta.update(now, n_by_class[c] as f64);
@@ -65,9 +69,47 @@ impl Metrics {
         self.completed = 0;
         self.window_start = now;
     }
+
+    /// Zero everything back to construction state, retaining buffer
+    /// allocations (engine reuse across replications).
+    pub fn reset_full(&mut self) {
+        for w in &mut self.resp {
+            *w = Welford::new();
+        }
+        self.resp_all.reset();
+        for ta in &mut self.n_avg {
+            *ta = TimeAverage::new();
+        }
+        self.busy_avg = TimeAverage::new();
+        self.completed = 0;
+        self.window_start = 0.0;
+    }
 }
 
-/// Final, immutable result of one simulation run.
+/// Load-weighted mean response time E[T^w] (§6.1): weights are the
+/// per-class offered loads ρ_j = need_j · λ_j / μ_j from the workload
+/// spec; classes with no completions contribute zero.
+fn weighted_mean_t(wl: &Workload, mean_t: &[f64], count: &[u64]) -> f64 {
+    let nc = mean_t.len();
+    let rho: Vec<f64> = (0..nc).map(|c| wl.rho_class(c)).collect();
+    let rho_tot: f64 = rho.iter().sum();
+    if rho_tot > 0.0 {
+        (0..nc)
+            .map(|c| {
+                if count[c] > 0 {
+                    rho[c] / rho_tot * mean_t[c]
+                } else {
+                    0.0
+                }
+            })
+            .sum()
+    } else {
+        f64::NAN
+    }
+}
+
+/// Final, immutable result of one simulation run (or a pool of
+/// replications).
 #[derive(Clone, Debug)]
 pub struct SimResult {
     pub policy: String,
@@ -87,13 +129,13 @@ pub struct SimResult {
     pub jain: f64,
     /// Time-average busy servers / k.
     pub utilization: f64,
-    /// Simulated (virtual) measurement time.
+    /// Simulated (virtual) measurement time (summed over replications).
     pub sim_time: f64,
     /// Total events processed (incl. warmup).
     pub events: u64,
     /// Completions in the measurement window.
     pub completed: u64,
-    /// Wall-clock seconds.
+    /// Wall-clock seconds (summed over replications).
     pub wall_s: f64,
     /// Phase-duration statistics (when tracked).
     pub phases: Option<crate::sim::phase::PhaseStats>,
@@ -110,35 +152,18 @@ impl SimResult {
         events: u64,
         wall_s: f64,
     ) -> SimResult {
-        let nc = m.resp.len();
         let mean_t: Vec<f64> = m.resp.iter().map(|w| w.mean()).collect();
         let count: Vec<u64> = m.resp.iter().map(|w| w.count()).collect();
         let mean_n: Vec<f64> = m.n_avg.iter().map(|ta| ta.average(now)).collect();
-        let mean_t_all = m.resp_all.mean();
-        // Load weights ρ_j = need_j · λ_j / μ_j from the workload spec.
-        let rho: Vec<f64> = (0..nc).map(|c| wl.rho_class(c)).collect();
-        let rho_tot: f64 = rho.iter().sum();
-        let weighted_t = if rho_tot > 0.0 {
-            (0..nc)
-                .map(|c| {
-                    if count[c] > 0 {
-                        rho[c] / rho_tot * mean_t[c]
-                    } else {
-                        0.0
-                    }
-                })
-                .sum()
-        } else {
-            f64::NAN
-        };
+        let weighted_t = weighted_mean_t(wl, &mean_t, &count);
         SimResult {
             policy: policy.to_string(),
             jain: jain_index(&mean_t),
+            mean_t_all: m.resp_all.mean(),
+            ci95: m.resp_all.ci95_half_width(),
             mean_t,
             count,
             mean_n,
-            mean_t_all,
-            ci95: m.resp_all.ci95_half_width(),
             weighted_t,
             utilization: m.busy_avg.average(now) / wl.k as f64,
             sim_time: now - m.window_start,
@@ -157,6 +182,107 @@ impl SimResult {
             self.policy, self.mean_t_all, self.ci95, self.weighted_t, self.utilization, self.jain,
             self.completed
         )
+    }
+}
+
+/// Pools R independent replications of one simulation point into a
+/// single [`SimResult`]:
+///
+/// * per-class response accumulators merge exactly (Welford merge);
+/// * time averages pool as Σ area / Σ window (each replication weighted
+///   by its own measurement duration);
+/// * every replication's completed batch means enter one CI, so the
+///   half-width shrinks like 1/√(total batches) at equal total work,
+///   with the replications' independence de-correlating the batches.
+pub struct ReplicationPool {
+    resp: Vec<Welford>,
+    /// Pooled batch-means accumulator ([`BatchMeans::merge`]); None until
+    /// the first replication is absorbed.
+    resp_all: Option<BatchMeans>,
+    n_area: Vec<f64>,
+    busy_area: f64,
+    window: f64,
+    completed: u64,
+    events: u64,
+    wall_s: f64,
+    reps: u32,
+}
+
+impl ReplicationPool {
+    pub fn new(num_classes: usize) -> ReplicationPool {
+        ReplicationPool {
+            resp: vec![Welford::new(); num_classes],
+            resp_all: None,
+            n_area: vec![0.0; num_classes],
+            busy_area: 0.0,
+            window: 0.0,
+            completed: 0,
+            events: 0,
+            wall_s: 0.0,
+            reps: 0,
+        }
+    }
+
+    /// Fold one finished replication in. `now` is the replication's final
+    /// virtual time; `events`/`wall_s` its event count and wall clock.
+    pub fn absorb(&mut self, m: &Metrics, now: f64, events: u64, wall_s: f64) {
+        for (c, w) in m.resp.iter().enumerate() {
+            self.resp[c].merge(w);
+        }
+        match &mut self.resp_all {
+            None => self.resp_all = Some(m.resp_all.clone()),
+            Some(b) => b.merge(&m.resp_all),
+        }
+        for (c, ta) in m.n_avg.iter().enumerate() {
+            self.n_area[c] += ta.area(now);
+        }
+        self.busy_area += m.busy_avg.area(now);
+        self.window += now - m.window_start;
+        self.completed += m.completed;
+        self.events += events;
+        self.wall_s += wall_s;
+        self.reps += 1;
+    }
+
+    pub fn replications(&self) -> u32 {
+        self.reps
+    }
+
+    /// Build the pooled result. `policy` is the display name.
+    pub fn result(&self, policy: &str, wl: &Workload) -> SimResult {
+        let mean_t: Vec<f64> = self.resp.iter().map(|w| w.mean()).collect();
+        let count: Vec<u64> = self.resp.iter().map(|w| w.count()).collect();
+        let mean_n: Vec<f64> = self
+            .n_area
+            .iter()
+            .map(|&a| if self.window > 0.0 { a / self.window } else { f64::NAN })
+            .collect();
+        let (mean_t_all, ci95) = match &self.resp_all {
+            Some(b) => (b.mean(), b.ci95_half_width()),
+            None => (f64::NAN, f64::NAN),
+        };
+        let weighted_t = weighted_mean_t(wl, &mean_t, &count);
+        SimResult {
+            policy: policy.to_string(),
+            jain: jain_index(&mean_t),
+            mean_t_all,
+            ci95,
+            mean_t,
+            count,
+            mean_n,
+            weighted_t,
+            utilization: if self.window > 0.0 {
+                self.busy_area / self.window / wl.k as f64
+            } else {
+                f64::NAN
+            },
+            sim_time: self.window,
+            events: self.events,
+            completed: self.completed,
+            wall_s: self.wall_s,
+            phases: None,
+            timeseries: None,
+        }
     }
 }
 
@@ -192,5 +318,39 @@ mod tests {
         assert!((r.weighted_t - 2.0).abs() < 1e-12);
         assert!((r.mean_t_all - 2.0).abs() < 1e-12);
         assert!((r.utilization - 0.5).abs() < 1e-12);
+    }
+
+    /// Pooling two identical half-replications must reproduce the means
+    /// of the equivalent single run and pool both CIs' batches.
+    #[test]
+    fn replication_pool_merges_batches_and_means() {
+        let wl = wl2();
+        let make = |responses: &[f64], t_end: f64| {
+            let mut m = Metrics::new(2, 2);
+            for &x in responses {
+                m.record_response(0, x);
+            }
+            m.n_avg[0].update(0.0, 1.0);
+            m.n_avg[1].update(0.0, 0.0);
+            m.busy_avg.update(0.0, 2.0);
+            (m, t_end)
+        };
+        let (a, ta) = make(&[1.0, 2.0, 3.0, 4.0], 10.0);
+        let (b, tb) = make(&[5.0, 6.0, 7.0, 8.0], 10.0);
+        let mut pool = ReplicationPool::new(2);
+        pool.absorb(&a, ta, 100, 0.1);
+        pool.absorb(&b, tb, 100, 0.1);
+        assert_eq!(pool.replications(), 2);
+        let r = pool.result("t", &wl);
+        assert_eq!(r.completed, 8);
+        assert_eq!(r.events, 200);
+        assert!((r.mean_t[0] - 4.5).abs() < 1e-12);
+        assert!((r.mean_t_all - 4.5).abs() < 1e-12);
+        // 4 pooled batches of size 2: means 1.5, 3.5, 5.5, 7.5.
+        assert!(r.ci95.is_finite() && r.ci95 > 0.0);
+        // Time averages pool over the summed 20-unit window.
+        assert!((r.mean_n[0] - 1.0).abs() < 1e-12);
+        assert!((r.utilization - 0.5).abs() < 1e-12);
+        assert!((r.sim_time - 20.0).abs() < 1e-12);
     }
 }

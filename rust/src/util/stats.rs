@@ -140,6 +140,31 @@ impl BatchMeans {
         self.batch_means.len()
     }
 
+    /// The completed batch means.
+    pub fn batch_means(&self) -> &[f64] {
+        &self.batch_means
+    }
+
+    /// Zero all accumulators, retaining the batch-means allocation
+    /// (engine reuse across replications).
+    pub fn reset(&mut self) {
+        self.current = Welford::new();
+        self.batch_means.clear();
+        self.overall = Welford::new();
+    }
+
+    /// Pool another run's batch means into this one (independent
+    /// replications ⇒ batch means stay ~i.i.d., so the pooled CI simply
+    /// has more batches). The other run's partial batch contributes to
+    /// the overall mean but not to the CI. With aligned batch boundaries
+    /// (sample counts that are multiples of the batch size) merging
+    /// splits of one stream reproduces the single-stream result exactly.
+    pub fn merge(&mut self, o: &BatchMeans) {
+        debug_assert_eq!(self.batch_size, o.batch_size, "batch sizes differ");
+        self.overall.merge(&o.overall);
+        self.batch_means.extend_from_slice(&o.batch_means);
+    }
+
     /// 95% CI half-width from the batch means (normal approximation,
     /// z=1.96; requires ≥2 completed batches).
     pub fn ci95_half_width(&self) -> f64 {
@@ -263,6 +288,16 @@ impl TimeAverage {
         let area = self.area + self.last_v * (t_end - self.last_t);
         area / (t_end - self.start_t)
     }
+
+    /// Accumulated ∫v dt up to `t_end` (0 if never updated). Used to pool
+    /// time averages across replications with different time axes:
+    /// pooled average = Σ area / Σ window length.
+    pub fn area(&self, t_end: f64) -> f64 {
+        if !self.started {
+            return 0.0;
+        }
+        self.area + self.last_v * (t_end - self.last_t)
+    }
 }
 
 #[cfg(test)]
@@ -314,6 +349,40 @@ mod tests {
         let hw = bm.ci95_half_width();
         assert!(hw > 0.0 && hw < 0.02, "hw={hw}");
         assert!((bm.mean() - 0.5).abs() < 0.02);
+    }
+
+    #[test]
+    fn batch_means_merge_matches_single_stream() {
+        let mut r = crate::util::rng::Rng::new(21);
+        let xs: Vec<f64> = (0..3000).map(|_| r.f64()).collect();
+        let mut single = BatchMeans::new(100);
+        for &x in &xs {
+            single.push(x);
+        }
+        // Split at a batch boundary: merged result must be identical.
+        let mut a = BatchMeans::new(100);
+        let mut b = BatchMeans::new(100);
+        for &x in &xs[..1200] {
+            a.push(x);
+        }
+        for &x in &xs[1200..] {
+            b.push(x);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), single.count());
+        assert_eq!(a.num_batches(), single.num_batches());
+        assert!((a.mean() - single.mean()).abs() < 1e-12);
+        assert!((a.ci95_half_width() - single.ci95_half_width()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn time_average_area() {
+        let mut ta = TimeAverage::new();
+        ta.update(1.0, 2.0); // value 2 on [1,3)
+        ta.update(3.0, 4.0); // value 4 on [3,5)
+        assert!((ta.area(5.0) - 12.0).abs() < 1e-12);
+        let empty = TimeAverage::new();
+        assert_eq!(empty.area(10.0), 0.0);
     }
 
     #[test]

@@ -1,7 +1,9 @@
 //! Integration: PJRT runtime × AOT artifacts × native oracles.
 //!
-//! Requires `make artifacts` (the Makefile's `test` target guarantees
-//! this ordering).
+//! Requires the `pjrt` cargo feature (the stub runtime reports
+//! "unavailable" by design) and `make artifacts` (the Makefile's `test`
+//! target guarantees this ordering).
+#![cfg(feature = "pjrt")]
 
 use quickswap::analysis::{MsfqCtmc, MsfqParams};
 use quickswap::runtime::solver::SweepArtifact;

@@ -1,0 +1,205 @@
+//! Property tests for the indexed 4-ary event heap: random interleavings
+//! of push / pop / cancel checked against a naive sorted reference model.
+
+use quickswap::sim::events::{EventKind, EventQueue};
+use quickswap::util::proptest::check;
+use quickswap::util::rng::Rng;
+
+/// A reference entry mirroring one queued event.
+#[derive(Clone, Debug, PartialEq)]
+struct RefEv {
+    t: f64,
+    seq: u64,
+    job: Option<u64>,
+}
+
+#[derive(Clone, Debug)]
+struct Script {
+    /// (opcode selector, payload selector) pairs.
+    ops: Vec<(u64, u64)>,
+}
+
+fn gen_script(r: &mut Rng) -> Script {
+    Script {
+        ops: (0..300).map(|_| (r.below(100), r.below(1 << 20))).collect(),
+    }
+}
+
+fn min_index(model: &[RefEv]) -> usize {
+    let mut best = 0;
+    for i in 1..model.len() {
+        let a = &model[i];
+        let b = &model[best];
+        if (a.t, a.seq) < (b.t, b.seq) {
+            best = i;
+        }
+    }
+    best
+}
+
+fn run_script(sc: &Script) -> Result<(), String> {
+    let mut q = EventQueue::new();
+    let mut model: Vec<RefEv> = Vec::new();
+    let mut next_seq = 0u64;
+    let mut next_job = 0u64;
+
+    for &(op, payload) in &sc.ops {
+        // Quantize times to a coarse grid so ties are frequent.
+        let t = (payload % 64) as f64 * 0.25;
+        match op % 10 {
+            // 0..=2: push a non-departure event.
+            0..=2 => {
+                q.push(t, EventKind::Arrival);
+                model.push(RefEv {
+                    t,
+                    seq: next_seq,
+                    job: None,
+                });
+                next_seq += 1;
+            }
+            // 3..=5: push a departure for a fresh job id.
+            3..=5 => {
+                let job = next_job;
+                next_job += 1;
+                q.push(t, EventKind::Departure { job });
+                model.push(RefEv {
+                    t,
+                    seq: next_seq,
+                    job: Some(job),
+                });
+                next_seq += 1;
+            }
+            // 6..=7: pop and compare against the model minimum.
+            6..=7 => {
+                let got = q.pop();
+                if model.is_empty() {
+                    if got.is_some() {
+                        return Err("pop from empty returned an event".into());
+                    }
+                } else {
+                    let i = min_index(&model);
+                    let want = model.remove(i);
+                    let Some(e) = got else {
+                        return Err("pop returned None with events queued".into());
+                    };
+                    let job = match e.kind {
+                        EventKind::Departure { job } => Some(job),
+                        _ => None,
+                    };
+                    if e.t != want.t || e.seq != want.seq || job != want.job {
+                        return Err(format!("pop mismatch: got {e:?}, want {want:?}"));
+                    }
+                    if let Some(j) = job {
+                        if q.has_departure(j) {
+                            return Err(format!("popped departure {j} still mapped"));
+                        }
+                    }
+                }
+            }
+            // 8: cancel a scheduled departure chosen from the model.
+            8 => {
+                let scheduled: Vec<usize> = model
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, e)| e.job.is_some())
+                    .map(|(i, _)| i)
+                    .collect();
+                if scheduled.is_empty() {
+                    continue;
+                }
+                let i = scheduled[(payload as usize) % scheduled.len()];
+                let job = model[i].job.expect("filtered to departures");
+                if !q.cancel_departure(job) {
+                    return Err(format!("cancel of scheduled job {job} failed"));
+                }
+                if q.has_departure(job) {
+                    return Err(format!("cancelled job {job} still mapped"));
+                }
+                model.remove(i);
+            }
+            // 9: cancel of a never-scheduled job must fail cleanly.
+            _ => {
+                if q.cancel_departure(next_job + 1_000_000) {
+                    return Err("cancel of unknown job succeeded".into());
+                }
+            }
+        }
+        if q.len() != model.len() {
+            return Err(format!("len drift: queue {} vs model {}", q.len(), model.len()));
+        }
+    }
+
+    // Drain: strict (t, seq) order, exact multiset match with the model.
+    let mut last: Option<(f64, u64)> = None;
+    while let Some(e) = q.pop() {
+        if let Some(prev) = last {
+            if (e.t, e.seq) <= prev {
+                return Err(format!("drain out of order: {prev:?} then ({}, {})", e.t, e.seq));
+            }
+        }
+        last = Some((e.t, e.seq));
+        let i = min_index(&model);
+        let want = model.remove(i);
+        if e.t != want.t || e.seq != want.seq {
+            return Err(format!("drain mismatch: got {e:?}, want {want:?}"));
+        }
+    }
+    if !model.is_empty() {
+        return Err(format!("queue drained but model has {} left", model.len()));
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_indexed_heap_matches_reference() {
+    check("indexed_heap_vs_reference", gen_script, run_script);
+}
+
+/// Cancel/reschedule churn: repeatedly cancel and re-push the same job's
+/// departure (the preemptive-policy pattern) and verify the final pop.
+#[test]
+fn prop_cancel_reschedule_churn() {
+    check(
+        "cancel_reschedule_churn",
+        |r| {
+            let n = 1 + r.index(40);
+            (0..n).map(|_| r.below(1000)).collect::<Vec<u64>>()
+        },
+        |times| {
+            let mut q = EventQueue::new();
+            // Background noise events.
+            for (i, &t) in times.iter().enumerate() {
+                q.push(t as f64, EventKind::PolicyTimer { seq: i as u64 });
+            }
+            let job = 3u64;
+            let mut final_t = None;
+            for &t in times {
+                q.push(t as f64 + 0.5, EventKind::Departure { job });
+                final_t = Some(t as f64 + 0.5);
+                if times.len() % 2 == 0 {
+                    // cancel and push once more at a shifted time
+                    if !q.cancel_departure(job) {
+                        return Err("cancel failed".into());
+                    }
+                    q.push(t as f64 + 0.25, EventKind::Departure { job });
+                    final_t = Some(t as f64 + 0.25);
+                }
+                // Exactly one departure must be live now.
+                if !q.has_departure(job) {
+                    return Err("departure lost".into());
+                }
+                if !q.cancel_departure(job) {
+                    return Err("cancel failed".into());
+                }
+            }
+            let _ = final_t;
+            // All departures cancelled: drain must see timers only.
+            while let Some(e) = q.pop() {
+                if matches!(e.kind, EventKind::Departure { .. }) {
+                    return Err("cancelled departure survived".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}

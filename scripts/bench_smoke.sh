@@ -1,0 +1,19 @@
+#!/usr/bin/env bash
+# Perf smoke: run the engine-throughput bench at QS_SCALE=smoke and emit
+# BENCH_perf_engine.json (events/s per policy) at the repo root, so every
+# PR has a perf trajectory to compare against.
+#
+# Usage: scripts/bench_smoke.sh            # smoke scale, fast budgets
+#        QS_SCALE=bench scripts/bench_smoke.sh   # heavier, steadier numbers
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export QS_SCALE="${QS_SCALE:-smoke}"
+export QS_BENCH_FAST="${QS_BENCH_FAST:-1}"
+export QS_BENCH_OUT="${QS_BENCH_OUT:-$PWD/BENCH_perf_engine.json}"
+
+cargo bench --bench perf_engine
+
+echo
+echo "== $QS_BENCH_OUT =="
+cat "$QS_BENCH_OUT"
