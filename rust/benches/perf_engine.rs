@@ -57,7 +57,7 @@ fn main() {
         warmup_completions: 0,
         ..Default::default()
     };
-    let mut engine = Engine::new(&one_or_all, cfg);
+    let mut engine = Engine::new(&one_or_all, cfg.clone());
     for policy in ["fcfs", "msf", "msfq:31", "first-fit"] {
         let mut rate = 0.0;
         b.bench(&format!("sim_{policy}"), || {
@@ -68,13 +68,28 @@ fn main() {
         measured.push((format!("sim_{policy}"), rate));
     }
 
+    // Uncached-consult baseline for the headline policy: the consult
+    // cache must keep `sim_msfq:31` at or above this number.
+    let nocache_cfg = SimConfig {
+        consult_cache: Some(false),
+        ..cfg
+    };
+    let mut engine_nc = Engine::new(&one_or_all, nocache_cfg);
+    let mut rate = 0.0;
+    b.bench("sim_msfq:31_nocache", || {
+        rate = events_per_sec(&mut engine_nc, &one_or_all, "msfq:31", 7);
+        black_box(rate);
+    });
+    println!("  -> msfq:31 (no consult cache): {:.2} M events/s", rate / 1e6);
+    measured.push(("sim_msfq:31_nocache".to_string(), rate));
+
     let borg = borg_workload(4.0);
     let borg_cfg = SimConfig {
         target_completions: completions / 2,
         warmup_completions: 0,
         ..Default::default()
     };
-    let mut borg_engine = Engine::new(&borg, borg_cfg);
+    let mut borg_engine = Engine::new(&borg, borg_cfg.clone());
     let mut rate = 0.0;
     b.bench("sim_borg_adaptive_qs", || {
         rate = events_per_sec(&mut borg_engine, &borg, "adaptive-qs", 7);
@@ -82,6 +97,22 @@ fn main() {
     });
     println!("  -> borg/adaptive-qs: {:.2} M events/s", rate / 1e6);
     measured.push(("sim_borg_adaptive_qs".to_string(), rate));
+
+    let borg_nc_cfg = SimConfig {
+        consult_cache: Some(false),
+        ..borg_cfg
+    };
+    let mut borg_engine_nc = Engine::new(&borg, borg_nc_cfg);
+    let mut rate = 0.0;
+    b.bench("sim_borg_adaptive_qs_nocache", || {
+        rate = events_per_sec(&mut borg_engine_nc, &borg, "adaptive-qs", 7);
+        black_box(rate);
+    });
+    println!(
+        "  -> borg/adaptive-qs (no consult cache): {:.2} M events/s",
+        rate / 1e6
+    );
+    measured.push(("sim_borg_adaptive_qs_nocache".to_string(), rate));
 
     // Preemptive policy: stresses departure cancel/reschedule.
     let sf_wl = Workload::one_or_all(16, 4.0, 0.9, 1.0, 1.0);

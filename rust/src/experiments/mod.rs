@@ -188,7 +188,7 @@ pub fn sweep_with(
     // length, and every replication starts from an empty system — each
     // stream discards the full configured warmup.
     let rep_cfg = SimConfig {
-        target_completions: (cfg.target_completions + reps as u64 - 1) / reps as u64,
+        target_completions: cfg.target_completions.div_ceil(reps as u64),
         warmup_completions: cfg.warmup_completions,
         ..cfg.clone()
     };

@@ -4,14 +4,22 @@
 //! continuing to backfill would only starve the waiting class). During
 //! the drain, only the largest-need queued job may enter; once it does,
 //! return to the working phase.
+//!
+//! Consult cache: the working phase reuses MSF's [`ConsultWatermark`],
+//! with the extra condition that the §4.4 trigger must not fire (a
+//! trigger flip is an observable state change); the drain phase is
+//! already O(classes) with no allocation and consults in full.
 
 use crate::policy::msf::msf_admit;
-use crate::policy::{Decision, PhaseLabel, Policy, SysView};
+use crate::policy::{ClassId, ConsultWatermark, Decision, PhaseLabel, Policy, SysView};
 
 #[derive(Debug, Default)]
 pub struct AdaptiveQuickswap {
     draining: bool,
     by_need: Vec<usize>,
+    /// Consult cache: skip while free capacity is below the watermark
+    /// (and the drain trigger cannot fire).
+    watermark: ConsultWatermark,
 }
 
 impl AdaptiveQuickswap {
@@ -72,11 +80,30 @@ impl Policy for AdaptiveQuickswap {
             }
             return;
         }
-        // Working phase: MSF-order admission.
-        msf_admit(sys, &self.by_need, out);
-        if out.admit.is_empty() && self.trigger(sys) {
+        // Working phase. Fast path: if no queued job can fit (watermark)
+        // and the drain trigger cannot fire, the full consult would
+        // admit nothing and change nothing — skip it.
+        if self.watermark.blocks(sys.free()) && !self.trigger(sys) {
+            return;
+        }
+        // MSF-order admission.
+        let (admitted, min_need) = msf_admit(sys, &self.by_need, out);
+        self.watermark.set(if admitted == 0 { min_need } else { 0 });
+        if admitted == 0 && self.trigger(sys) {
             self.draining = true;
         }
+    }
+
+    fn on_arrival(&mut self, _class: ClassId, need: u32) {
+        self.watermark.observe_arrival(need);
+    }
+
+    fn on_swap_epoch(&mut self) {
+        self.watermark.reset();
+    }
+
+    fn set_consult_cache(&mut self, enabled: bool) {
+        self.watermark.set_enabled(enabled);
     }
 
     fn phase_label(&self, _sys: &SysView<'_>) -> PhaseLabel {

@@ -1,14 +1,26 @@
 //! First-Come First-Served: admit jobs strictly in arrival order; stop at
 //! the first job that does not fit (Head-of-the-Line blocking).
+//!
+//! Consult cache: FCFS can admit only while the head-of-line job fits,
+//! so after any full scan the blocker's need is an *exact*
+//! [`ConsultWatermark`] — the HoL job never changes except through our
+//! own admissions (which end in a scan that refreshes the watermark) or
+//! an arrival into an empty queue (handled in [`Policy::on_arrival`]).
+//! Because the watermark is written by the scan itself, even the
+//! fixed-point re-consult after an admission batch is skipped.
 
-use crate::policy::{Decision, Policy, SysView};
+use crate::policy::{ClassId, ConsultWatermark, Decision, Policy, SysView};
 
 #[derive(Default, Debug)]
-pub struct Fcfs;
+pub struct Fcfs {
+    /// Consult cache: skip while free capacity is below the watermark
+    /// (= the HoL blocker's need after a full scan).
+    watermark: ConsultWatermark,
+}
 
 impl Fcfs {
     pub fn new() -> Fcfs {
-        Fcfs
+        Fcfs::default()
     }
 }
 
@@ -18,20 +30,46 @@ impl Policy for Fcfs {
     }
 
     fn schedule(&mut self, sys: &SysView<'_>, out: &mut Decision) {
+        if self.watermark.blocks(sys.free()) {
+            return; // HoL job still blocked: provably empty consult
+        }
         let mut free = sys.free();
+        let mut blocked_need = u32::MAX;
+        let admit = &mut out.admit;
         sys.for_each_in_arrival_order(&mut |id, class, running| {
             if running {
                 return true; // skip jobs already in service
             }
             let need = sys.needs[class];
             if need <= free {
-                out.admit.push(id);
+                admit.push(id);
                 free -= need;
                 true
             } else {
+                blocked_need = need;
                 false // head-of-line blocking: stop at first misfit
             }
         });
+        // Exact watermark for the post-decision state: the scan either
+        // stopped at the blocker (which stays HoL after our admissions
+        // are applied, with `free` exactly as computed above) or
+        // admitted the whole queue.
+        self.watermark.set(blocked_need);
+    }
+
+    fn on_arrival(&mut self, _class: ClassId, need: u32) {
+        // A new tail job can only become HoL if the queue was empty
+        // (watermark MAX); taking the min is conservative otherwise.
+        self.watermark.observe_arrival(need);
+    }
+
+    // on_swap_epoch: intentionally the default no-op — unlike the
+    // min-queued-need policies, FCFS's scan computes the watermark that
+    // is already exact for the post-admission state (see above), so its
+    // own decisions never invalidate it.
+
+    fn set_consult_cache(&mut self, enabled: bool) {
+        self.watermark.set_enabled(enabled);
     }
 }
 
@@ -62,6 +100,25 @@ mod tests {
         }
         let admitted = h.consult(&mut Fcfs::new());
         assert_eq!(admitted.len(), 4);
+        assert_eq!(h.used(), 4);
+    }
+
+    /// Cached FCFS skips blocked consults but must admit identically to
+    /// the uncached policy once the blocker fits.
+    #[test]
+    fn cache_skips_blocked_then_admits() {
+        let mut h = Harness::new(4, &[1, 4]);
+        let mut p = Fcfs::new();
+        p.set_consult_cache(true);
+        let a = h.arrive_notified(&mut p, 0, 0.0);
+        h.arrive_notified(&mut p, 1, 0.1); // heavy blocks
+        h.arrive_notified(&mut p, 0, 0.2);
+        assert_eq!(h.consult(&mut p), vec![a]);
+        // Blocked consults are skipped (watermark = 4 > free = 3).
+        assert!(h.consult(&mut p).is_empty());
+        h.complete_notified(&mut p, a, 1.0);
+        // Heavy fits now; the trailing light stays HoL-blocked behind it.
+        assert_eq!(h.consult(&mut p).len(), 1);
         assert_eq!(h.used(), 4);
     }
 }

@@ -2,15 +2,23 @@
 //! past jobs that do not fit, admitting any later job that does
 //! (eliminates head-of-the-line blocking at the cost of potentially
 //! starving large jobs).
+//!
+//! Consult cache: First-Fit admits something iff some queued job fits,
+//! so `free < min need over queued classes` is the exact empty-consult
+//! condition (the same [`ConsultWatermark`] as MSF, maintained the same
+//! way).
 
-use crate::policy::{Decision, Policy, SysView};
+use crate::policy::{ClassId, ConsultWatermark, Decision, Policy, SysView};
 
 #[derive(Default, Debug)]
-pub struct FirstFit;
+pub struct FirstFit {
+    /// Consult cache: skip while free capacity is below the watermark.
+    watermark: ConsultWatermark,
+}
 
 impl FirstFit {
     pub fn new() -> FirstFit {
-        FirstFit
+        FirstFit::default()
     }
 }
 
@@ -20,9 +28,9 @@ impl Policy for FirstFit {
     }
 
     fn schedule(&mut self, sys: &SysView<'_>, out: &mut Decision) {
-        let mut free = sys.free();
-        if free == 0 {
-            return;
+        let free0 = sys.free();
+        if self.watermark.blocks(free0) {
+            return; // no queued job can fit: provably empty consult
         }
         // The smallest need among queued classes lets us stop the scan
         // early once nothing can possibly fit.
@@ -34,20 +42,39 @@ impl Policy for FirstFit {
             .map(|(c, _)| sys.needs[c])
             .min()
             .unwrap_or(u32::MAX);
-        if min_need > free {
+        if min_need > free0 {
+            // Exact: nothing fits right now (MAX when the queue is empty).
+            self.watermark.set(min_need);
             return;
         }
+        // Something fits, so this scan always admits; our admissions
+        // invalidate the watermark (on_swap_epoch resets it and the
+        // fixed-point re-consult records the fresh exact value).
+        let mut free = free0;
+        let admit = &mut out.admit;
         sys.for_each_in_arrival_order(&mut |id, class, running| {
             if running {
                 return true;
             }
             let need = sys.needs[class];
             if need <= free {
-                out.admit.push(id);
+                admit.push(id);
                 free -= need;
             }
             free >= min_need // keep scanning while anything could fit
         });
+    }
+
+    fn on_arrival(&mut self, _class: ClassId, need: u32) {
+        self.watermark.observe_arrival(need);
+    }
+
+    fn on_swap_epoch(&mut self) {
+        self.watermark.reset();
+    }
+
+    fn set_consult_cache(&mut self, enabled: bool) {
+        self.watermark.set_enabled(enabled);
     }
 }
 

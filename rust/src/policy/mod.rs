@@ -5,6 +5,34 @@
 //! which queued jobs to admit (and, for preemptive policies, which running
 //! jobs to preempt). The engine enforces feasibility (`Σ need ≤ k`) and
 //! non-preemption for policies that declare themselves non-preemptive.
+//!
+//! ## Incremental consults (the consult cache)
+//!
+//! At ρ → 1 most consults admit nothing: the system is full and the
+//! event merely shuffles the queue. Policies therefore support an
+//! *incremental consult protocol*: the driver (engine, harness) notifies
+//! them of state deltas between consults ([`Policy::on_arrival`],
+//! [`Policy::on_departure`], [`Policy::on_swap_epoch`]), and a policy
+//! with its consult cache enabled ([`Policy::set_consult_cache`]) may
+//! short-circuit `schedule` calls it can *prove* are no-ops — typically
+//! via a free-capacity watermark ("no queued job fits until at least W
+//! servers are free") or an O(1) phase predicate ("draining: admissions
+//! closed until the in-service class empties").
+//!
+//! The contract is strict: a cached policy must produce **bit-identical
+//! decisions and internal state transitions** to its uncached self on
+//! every event sequence. Skips are only legal when the full consult
+//! would have admitted nothing, preempted nothing, set no timer, and
+//! mutated no observable policy state (mode flags included, since they
+//! feed `phase_label`). This is enforced by differential property tests
+//! (`tests/prop_consult_cache.rs`) and engine-level goldens
+//! (`tests/integration_replication.rs`).
+//!
+//! The cache is off by default on bare-constructed policies (unit tests
+//! drive policies without delta notifications); the engine enables it
+//! per run from [`SimConfig`](crate::sim::SimConfig) / the
+//! `QS_NO_CONSULT_CACHE` environment escape hatch, because the engine is
+//! the layer that guarantees the notification hooks fire.
 
 pub mod adaptive_qs;
 pub mod fcfs;
@@ -35,7 +63,7 @@ pub type JobId = u64;
 pub type PhaseLabel = u8;
 
 /// What a policy can see. Borrow-backed by the engine; all accessors are
-/// O(1) except the arrival-order iterator and `queued_front`, which are
+/// O(1) except the arrival-order iterator and `queued_iter`, which are
 /// O(items visited) — both walk intrusive lists of live jobs only (no
 /// tombstone filtering).
 pub struct SysView<'a> {
@@ -56,7 +84,7 @@ pub struct SysView<'a> {
     pub(crate) fifos: &'a crate::sim::job::ClassFifos,
 }
 
-impl<'a> SysView<'a> {
+impl SysView<'_> {
     #[inline]
     pub fn free(&self) -> u32 {
         self.k - self.used
@@ -79,13 +107,13 @@ impl<'a> SysView<'a> {
         self.fifos.head_slot(c).map(|s| self.jobs.id_at(s))
     }
 
-    /// First `n` oldest waiting jobs of class `c`.
-    pub fn queued_front(&self, c: ClassId, n: usize) -> Vec<JobId> {
-        self.fifos
-            .iter(c)
-            .take(n)
-            .map(|s| self.jobs.id_at(s))
-            .collect()
+    /// Front-to-back (oldest-first) iterator over the waiting jobs of
+    /// class `c`. Allocation-free: walks the intrusive class FIFO.
+    /// (Replaces the former `Vec`-allocating `queued_front`.)
+    #[inline]
+    pub fn queued_iter(&self, c: ClassId) -> impl Iterator<Item = JobId> + '_ {
+        let jobs = self.jobs;
+        self.fifos.iter(c).map(move |s| jobs.id_at(s))
     }
 
     /// Visit jobs in arrival order; `f` returns false to stop early.
@@ -122,6 +150,14 @@ impl Decision {
 }
 
 /// A scheduling policy.
+///
+/// Beyond `schedule`, policies participate in the incremental consult
+/// protocol (see the module docs): the driver reports queue/service
+/// deltas through `on_arrival` / `on_departure` / `on_swap_epoch`, and a
+/// policy whose consult cache is enabled may use that information to
+/// short-circuit provably no-op consults. All protocol methods default
+/// to no-ops, so a policy that ignores them is simply always consulted
+/// in full.
 pub trait Policy {
     fn name(&self) -> String;
 
@@ -132,6 +168,30 @@ pub trait Policy {
     /// (immediately before `schedule`).
     fn on_timer(&mut self, _now: f64) {}
 
+    /// A job of `class` (needing `need` servers) joined the waiting
+    /// queue. Called after the system state reflects the arrival and
+    /// before the post-event consult.
+    fn on_arrival(&mut self, _class: ClassId, _need: u32) {}
+
+    /// A job of `class` completed, releasing `need` servers. Called
+    /// after the system state reflects the departure and before the
+    /// post-event consult.
+    fn on_departure(&mut self, _class: ClassId, _need: u32) {}
+
+    /// The driver applied this policy's own (non-empty) decision: the
+    /// service set swapped via admissions and/or preemptions. Policies
+    /// whose cached watermarks are invalidated by their own admissions
+    /// reset them here; policies that can prove their decisions reach a
+    /// fixed point (ServerFilling) deliberately keep their cache warm.
+    fn on_swap_epoch(&mut self) {}
+
+    /// Enable/disable the incremental consult cache. Off by default;
+    /// the engine switches it on per run (the driver must guarantee the
+    /// `on_*` delta notifications fire, which bare `Harness` usage does
+    /// not). Toggling must leave the policy in a consistent
+    /// always-consult state.
+    fn set_consult_cache(&mut self, _enabled: bool) {}
+
     /// Preemptive policies may return running jobs in `Decision::preempt`.
     fn is_preemptive(&self) -> bool {
         false
@@ -140,6 +200,67 @@ pub trait Policy {
     /// Current paper-phase label for the phase-duration tracker.
     fn phase_label(&self, _sys: &SysView<'_>) -> PhaseLabel {
         0
+    }
+}
+
+/// Process-wide default for the consult cache: enabled unless the
+/// `QS_NO_CONSULT_CACHE` escape hatch is set (to anything but `0`/empty),
+/// which forces the full per-event recompute everywhere — the
+/// differential-testing baseline.
+pub fn consult_cache_enabled() -> bool {
+    !matches!(std::env::var("QS_NO_CONSULT_CACHE"), Ok(v) if !v.is_empty() && v != "0")
+}
+
+/// Free-capacity watermark shared by the fit-based policies (FCFS,
+/// First-Fit, MSF, AdaptiveQS): tracks a *conservative* (never above the
+/// true value) bound `min_free` such that a consult cannot admit
+/// anything while `free < min_free`.
+///
+/// Invariant: whenever any job is queued, `min_free` ≤ the smallest free
+/// capacity at which the next full consult could admit a job. It is kept
+/// by three rules — a full consult records an exact value (policies call
+/// [`set`](ConsultWatermark::set)), an arrival can only lower it by the
+/// arriving class's need ([`observe_arrival`](ConsultWatermark::observe_arrival)),
+/// and anything else that might invalidate it (the policy's own
+/// admissions, cache toggling) resets it to 0 = always-consult
+/// ([`reset`](ConsultWatermark::reset)). Staleness is therefore always
+/// on the consult-more side, never the skip side.
+#[derive(Debug, Default)]
+pub(crate) struct ConsultWatermark {
+    enabled: bool,
+    min_free: u32,
+}
+
+impl ConsultWatermark {
+    /// True iff the cache is on and `free` provably cannot admit.
+    #[inline]
+    pub(crate) fn blocks(&self, free: u32) -> bool {
+        self.enabled && free < self.min_free
+    }
+
+    /// Record the exact watermark computed by a full consult
+    /// (`u32::MAX` when nothing is queued).
+    #[inline]
+    pub(crate) fn set(&mut self, min_free: u32) {
+        self.min_free = min_free;
+    }
+
+    /// An arrival of a job needing `need` servers joined the queue.
+    #[inline]
+    pub(crate) fn observe_arrival(&mut self, need: u32) {
+        self.min_free = self.min_free.min(need);
+    }
+
+    /// Conservative invalidation: consult in full next time.
+    #[inline]
+    pub(crate) fn reset(&mut self) {
+        self.min_free = 0;
+    }
+
+    #[inline]
+    pub(crate) fn set_enabled(&mut self, enabled: bool) {
+        self.enabled = enabled;
+        self.min_free = 0;
     }
 }
 
@@ -184,4 +305,12 @@ pub fn by_name(name: &str, wl: &Workload) -> anyhow::Result<Box<dyn Policy + Sen
 }
 
 /// All nonpreemptive policy names used across the paper's figures.
-pub const NONPREEMPTIVE: &[&str] = &["fcfs", "first-fit", "msf", "msfq", "static-qs", "adaptive-qs", "nmsr"];
+pub const NONPREEMPTIVE: &[&str] = &[
+    "fcfs",
+    "first-fit",
+    "msf",
+    "msfq",
+    "static-qs",
+    "adaptive-qs",
+    "nmsr",
+];

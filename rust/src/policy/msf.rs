@@ -1,13 +1,21 @@
 //! Most Servers First (§4.1): whenever servers free up, admit queued jobs
 //! in descending order of server need (FIFO within a class) until no
 //! further job fits.
+//!
+//! Consult cache: MSF admits something iff some queued job fits, so the
+//! exact skip condition is `free < min need over queued classes` — the
+//! shared [`ConsultWatermark`]: an empty full consult records it
+//! exactly, arrivals lower it by the arriving class's need, and our own
+//! admissions reset it via [`Policy::on_swap_epoch`].
 
-use crate::policy::{Decision, PhaseLabel, Policy, SysView};
+use crate::policy::{ClassId, ConsultWatermark, Decision, PhaseLabel, Policy, SysView};
 
 #[derive(Default, Debug)]
 pub struct Msf {
-    /// Class indices sorted by descending need (lazily computed).
+    /// Class indices sorted by descending need (lazily computed once).
     by_need: Vec<usize>,
+    /// Consult cache: skip while free capacity is below the watermark.
+    watermark: ConsultWatermark,
 }
 
 impl Msf {
@@ -25,26 +33,31 @@ impl Msf {
 }
 
 /// Shared MSF admission pass: admit greedily in descending-need order.
-/// Returns the number of admissions pushed.
-pub(crate) fn msf_admit(sys: &SysView<'_>, by_need: &[usize], out: &mut Decision) -> usize {
+/// Returns the number of admissions pushed and the minimum need among
+/// classes with a non-empty queue (`u32::MAX` if none) — the exact
+/// free-capacity watermark whenever nothing was admitted.
+pub(crate) fn msf_admit(sys: &SysView<'_>, by_need: &[usize], out: &mut Decision) -> (usize, u32) {
     let mut free = sys.free();
     let mut count = 0;
+    let mut min_need = u32::MAX;
     for &c in by_need {
+        let queued = sys.queued[c] as usize;
+        if queued == 0 {
+            continue;
+        }
         let need = sys.needs[c];
+        min_need = min_need.min(need);
         if need > free {
             continue;
         }
         let can_take = (free / need) as usize;
-        if can_take == 0 {
-            continue;
-        }
-        for id in sys.queued_front(c, can_take.min(sys.queued[c] as usize)) {
+        for id in sys.queued_iter(c).take(can_take.min(queued)) {
             out.admit.push(id);
             free -= need;
             count += 1;
         }
     }
-    count
+    (count, min_need)
 }
 
 impl Policy for Msf {
@@ -53,8 +66,24 @@ impl Policy for Msf {
     }
 
     fn schedule(&mut self, sys: &SysView<'_>, out: &mut Decision) {
+        if self.watermark.blocks(sys.free()) {
+            return; // no queued job can fit: provably empty consult
+        }
         self.ensure_order(sys.needs);
-        msf_admit(sys, &self.by_need, out);
+        let (admitted, min_need) = msf_admit(sys, &self.by_need, out);
+        self.watermark.set(if admitted == 0 { min_need } else { 0 });
+    }
+
+    fn on_arrival(&mut self, _class: ClassId, need: u32) {
+        self.watermark.observe_arrival(need);
+    }
+
+    fn on_swap_epoch(&mut self) {
+        self.watermark.reset();
+    }
+
+    fn set_consult_cache(&mut self, enabled: bool) {
+        self.watermark.set_enabled(enabled);
     }
 
     /// In the one-or-all case MSF behaves like MSFQ with ℓ=0: label

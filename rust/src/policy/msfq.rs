@@ -32,6 +32,8 @@ pub struct Msfq {
     light: ClassId,
     heavy: ClassId,
     mode: Mode,
+    /// Incremental consult cache enabled (engine-driven).
+    cache: bool,
 }
 
 impl Msfq {
@@ -65,6 +67,7 @@ impl Msfq {
             light: light.ok_or_else(|| anyhow::anyhow!("no light (need-1) class"))?,
             heavy: heavy.ok_or_else(|| anyhow::anyhow!("no heavy (need-k) class"))?,
             mode: Mode::Heavy,
+            cache: false,
         })
     }
 
@@ -89,7 +92,7 @@ impl Msfq {
         } else {
             // All n₁ ≤ ℓ lights enter service, then the door closes.
             self.mode = Mode::Drain;
-            for id in sys.queued_front(self.light, sys.queued[self.light] as usize) {
+            for id in sys.queued_iter(self.light) {
                 out.admit.push(id);
             }
         }
@@ -98,7 +101,7 @@ impl Msfq {
     fn admit_lights(&self, sys: &SysView<'_>, out: &mut Decision) {
         let free = sys.free() as usize;
         let take = free.min(sys.queued[self.light] as usize);
-        for id in sys.queued_front(self.light, take) {
+        for id in sys.queued_iter(self.light).take(take) {
             out.admit.push(id);
         }
     }
@@ -111,6 +114,23 @@ impl Policy for Msfq {
 
     fn schedule(&mut self, sys: &SysView<'_>, out: &mut Decision) {
         let (l, h) = (self.light, self.heavy);
+        // Consult-cache fast path. Away from a switch point, `schedule`
+        // is a no-op in Heavy mode (a heavy holds all k servers) and in
+        // Drain mode (admissions closed); in Light mode it is a no-op
+        // exactly when the quickswap trigger cannot fire (n₁ > ℓ) and no
+        // light can start (no free server or none waiting). Every other
+        // case admits or transitions, so it falls through to the full
+        // consult — making skips bit-identical to the uncached policy.
+        if self.cache && (sys.running[l] > 0 || sys.running[h] > 0) {
+            match self.mode {
+                Mode::Heavy | Mode::Drain => return,
+                Mode::Light => {
+                    if sys.in_system(l) > self.ell && (sys.free() == 0 || sys.queued[l] == 0) {
+                        return;
+                    }
+                }
+            }
+        }
         if sys.running[l] == 0 && sys.running[h] == 0 {
             // Switch point: previous phase fully drained (or idle).
             self.dispatch(sys, out);
@@ -132,6 +152,10 @@ impl Policy for Msfq {
                 // No admissions while draining.
             }
         }
+    }
+
+    fn set_consult_cache(&mut self, enabled: bool) {
+        self.cache = enabled;
     }
 
     fn phase_label(&self, sys: &SysView<'_>) -> PhaseLabel {

@@ -25,6 +25,8 @@ pub struct Nmsr {
     switching: bool,
     timer_armed: bool,
     rng: Rng,
+    /// Incremental consult cache enabled (engine-driven).
+    cache: bool,
 }
 
 impl Nmsr {
@@ -55,6 +57,7 @@ impl Nmsr {
             switching: false,
             timer_armed: false,
             rng: Rng::new(0x6d73725f), // deterministic: policy-internal chain
+            cache: false,
         })
     }
 
@@ -65,7 +68,7 @@ impl Nmsr {
         let can = (slots.saturating_sub(sys.running[c])).min(sys.queued[c]) as usize;
         // Capacity check: other classes may still be draining.
         let mut free = sys.free();
-        for id in sys.queued_front(c, can) {
+        for id in sys.queued_iter(c).take(can) {
             if need > free {
                 break;
             }
@@ -81,6 +84,29 @@ impl Policy for Nmsr {
     }
 
     fn schedule(&mut self, sys: &SysView<'_>, out: &mut Decision) {
+        // Consult-cache fast path. Once the modulating chain is armed,
+        // a consult is a no-op (no admissions, no RNG draws, no state
+        // change) exactly when: mid-switch with the previous schedule
+        // still draining, or the active schedule cannot start a job
+        // (slots full, nothing queued, or draining classes hold the
+        // capacity). Unarmed and advance-the-chain consults fall
+        // through — they draw from the policy RNG, so skipping them
+        // would desynchronize cached and uncached trajectories.
+        if self.cache && self.timer_armed {
+            if self.switching {
+                if sys.used > 0 {
+                    return;
+                }
+            } else {
+                let c = self.order[self.cur];
+                let need = sys.needs[c];
+                let slots = sys.k / need;
+                let can = slots.saturating_sub(sys.running[c]).min(sys.queued[c]);
+                if can == 0 || need > sys.free() {
+                    return;
+                }
+            }
+        }
         if !self.timer_armed {
             // First consult: arm the modulating chain.
             self.timer_armed = true;
@@ -102,6 +128,10 @@ impl Policy for Nmsr {
 
     fn on_timer(&mut self, _now: f64) {
         self.switching = true;
+    }
+
+    fn set_consult_cache(&mut self, enabled: bool) {
+        self.cache = enabled;
     }
 
     fn phase_label(&self, _sys: &SysView<'_>) -> PhaseLabel {

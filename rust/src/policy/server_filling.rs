@@ -6,15 +6,38 @@
 //! With power-of-two needs dividing k this fills all k servers whenever
 //! ≥ k servers' worth of work is present. Preemption is assumed free
 //! (preempt-resume; remaining service is tracked exactly).
+//!
+//! Consult cache: the target service set is a pure function of the
+//! arrival order, which admissions and preemptions do not touch — so
+//! applying this policy's own decision always reaches a fixed point,
+//! and the post-decision re-consult is skippable. A dirty flag set by
+//! `on_arrival`/`on_departure` (the only transitions that change the
+//! prefix) gates the full recompute; `on_swap_epoch` deliberately keeps
+//! the cache warm.
 
-use crate::policy::{Decision, JobId, PhaseLabel, Policy, SysView};
+use crate::policy::{ClassId, Decision, JobId, PhaseLabel, Policy, SysView};
 
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct ServerFilling {
     /// Scratch: candidate prefix (id, need, running).
     prefix: Vec<(JobId, u32, bool)>,
     /// Scratch: selected job ids.
     selected: Vec<JobId>,
+    /// Incremental consult cache enabled (engine-driven).
+    cache: bool,
+    /// The arrival order changed since the last full consult.
+    dirty: bool,
+}
+
+impl Default for ServerFilling {
+    fn default() -> Self {
+        ServerFilling {
+            prefix: Vec::new(),
+            selected: Vec::new(),
+            cache: false,
+            dirty: true,
+        }
+    }
 }
 
 impl ServerFilling {
@@ -33,6 +56,10 @@ impl Policy for ServerFilling {
     }
 
     fn schedule(&mut self, sys: &SysView<'_>, out: &mut Decision) {
+        if self.cache && !self.dirty {
+            return; // arrival order unchanged: the service set is settled
+        }
+        self.dirty = false;
         // 1. Minimal prefix with total need ≥ k (or everything).
         self.prefix.clear();
         let mut total = 0u32;
@@ -81,6 +108,24 @@ impl Policy for ServerFilling {
             }
             true
         });
+    }
+
+    fn on_arrival(&mut self, _class: ClassId, _need: u32) {
+        self.dirty = true;
+    }
+
+    fn on_departure(&mut self, _class: ClassId, _need: u32) {
+        self.dirty = true;
+    }
+
+    // on_swap_epoch: intentionally the default no-op — applying our own
+    // decision makes the running set equal `selected` exactly, and the
+    // prefix only depends on the (unchanged) arrival order, so the
+    // fixed-point re-consult would be empty.
+
+    fn set_consult_cache(&mut self, enabled: bool) {
+        self.cache = enabled;
+        self.dirty = true;
     }
 
     fn phase_label(&self, _sys: &SysView<'_>) -> PhaseLabel {

@@ -21,6 +21,8 @@ pub struct StaticQuickswap {
     cycle: Vec<ClassId>,
     cur: usize,
     draining: bool,
+    /// Incremental consult cache enabled (engine-driven).
+    cache: bool,
 }
 
 impl StaticQuickswap {
@@ -33,6 +35,7 @@ impl StaticQuickswap {
             cycle,
             cur: 0,
             draining: false,
+            cache: false,
         }
     }
 
@@ -48,6 +51,27 @@ impl Policy for StaticQuickswap {
     }
 
     fn schedule(&mut self, sys: &SysView<'_>, out: &mut Decision) {
+        // Consult-cache fast path: replicate the loop's first-iteration
+        // exit conditions that provably neither admit nor mutate state —
+        // mid-drain with jobs still in service, or working fully loaded.
+        // Every other case (top-up possible, drain finished, quickswap
+        // condition met) falls through to the full consult.
+        if self.cache {
+            let c = self.cycle[self.cur];
+            let need = sys.needs[c];
+            let slots = sys.k / need;
+            if self.draining {
+                if sys.running[c] > 0 {
+                    return;
+                }
+            } else if (slots - sys.running[c]).min(sys.queued[c]) == 0 {
+                let busy = sys.running[c] * need;
+                let cap = (need * slots).min(self.ell + 1);
+                if busy >= cap {
+                    return;
+                }
+            }
+        }
         // At most one full tour of the cycle per consult.
         for _ in 0..=self.cycle.len() {
             let c = self.cycle[self.cur];
@@ -66,7 +90,7 @@ impl Policy for StaticQuickswap {
             // Working phase: top up class-c slots.
             let can = (slots - sys.running[c]).min(sys.queued[c]) as usize;
             if can > 0 {
-                for id in sys.queued_front(c, can) {
+                for id in sys.queued_iter(c).take(can) {
                     out.admit.push(id);
                 }
                 // Admissions will retrigger schedule(); evaluate the
@@ -95,6 +119,10 @@ impl Policy for StaticQuickswap {
             }
             return; // working, fully loaded
         }
+    }
+
+    fn set_consult_cache(&mut self, enabled: bool) {
+        self.cache = enabled;
     }
 
     fn phase_label(&self, sys: &SysView<'_>) -> PhaseLabel {

@@ -56,6 +56,15 @@ impl Harness {
         id
     }
 
+    /// [`arrive`](Harness::arrive) plus the engine's incremental-consult
+    /// notification ([`Policy::on_arrival`]) — required when driving a
+    /// policy with its consult cache enabled.
+    pub fn arrive_notified(&mut self, policy: &mut dyn Policy, class: usize, t: f64) -> JobId {
+        let id = self.arrive(class, t);
+        policy.on_arrival(class, self.needs[class]);
+        id
+    }
+
     /// Complete a running job.
     pub fn complete(&mut self, id: JobId, t: f64) {
         self.now = self.now.max(t);
@@ -65,6 +74,15 @@ impl Harness {
         self.used -= need;
         self.running[class] -= 1;
         self.jobs.remove(id);
+    }
+
+    /// [`complete`](Harness::complete) plus the engine's
+    /// incremental-consult notification ([`Policy::on_departure`]).
+    pub fn complete_notified(&mut self, policy: &mut dyn Policy, id: JobId, t: f64) {
+        let class = self.jobs.class(id);
+        let need = self.jobs.need(id);
+        self.complete(id, t);
+        policy.on_departure(class, need);
     }
 
     /// Repeatedly consult the policy (as the engine does) and apply its
@@ -82,14 +100,15 @@ impl Harness {
                 policy.is_preemptive() || out.preempt.is_empty(),
                 "non-preemptive policy attempted preemption"
             );
-            for i in 0..out.preempt.len() {
-                self.apply_preempt(out.preempt[i]);
+            for &id in &out.preempt {
+                self.apply_preempt(id);
             }
-            for i in 0..out.admit.len() {
-                let id = out.admit[i];
+            for &id in &out.admit {
                 self.apply_admit(id);
                 all.push(id);
             }
+            // Mirror the engine: the policy's decision was applied.
+            policy.on_swap_epoch();
         }
         all
     }

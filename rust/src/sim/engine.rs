@@ -8,6 +8,13 @@
 //!
 //! Hot-path design (see sim/events.rs and sim/job.rs):
 //!
+//! * arrivals never enter the event heap: a pending-arrival cursor is
+//!   merged against the heap head each iteration, and batched sources
+//!   ([`SyntheticSource`](crate::workload::SyntheticSource)) pre-generate
+//!   interarrivals per class in chunks;
+//! * policies are notified of per-event state deltas (`on_arrival` /
+//!   `on_departure` / `on_swap_epoch`) and consult incrementally — see
+//!   the consult-cache protocol in [`crate::policy`];
 //! * departures are **cancelled in place** on preemption — there are no
 //!   epoch tombstones and no stale pops;
 //! * waiting-queue membership is intrusive, so out-of-FIFO admissions
@@ -41,6 +48,11 @@ pub struct SimConfig {
     pub track_phases: bool,
     /// Batch size for the batch-means CI.
     pub batch: u64,
+    /// Incremental consult cache: `None` follows the process default
+    /// ([`crate::policy::consult_cache_enabled`], i.e. on unless
+    /// `QS_NO_CONSULT_CACHE` is set); `Some(b)` forces it — the
+    /// differential goldens run both sides in one process this way.
+    pub consult_cache: Option<bool>,
 }
 
 impl Default for SimConfig {
@@ -52,6 +64,7 @@ impl Default for SimConfig {
             timeseries: None,
             track_phases: false,
             batch: 1000,
+            consult_cache: None,
         }
     }
 }
@@ -186,6 +199,12 @@ impl Engine {
     }
 
     /// Run to completion; returns the aggregated result.
+    ///
+    /// Arrivals bypass the event heap entirely: the next pending arrival
+    /// lives in a cursor merged against [`EventQueue::peek_t`] each
+    /// iteration (arrivals win exact-time ties — deterministic, and
+    /// measure-zero under continuous interarrivals), so the heap holds
+    /// only departures and policy timers.
     pub fn run(
         &mut self,
         src: &mut dyn ArrivalSource,
@@ -197,45 +216,68 @@ impl Engine {
         if self.cfg.warmup_completions == 0 {
             self.warmed = true;
         }
+        policy.set_consult_cache(
+            self.cfg
+                .consult_cache
+                .unwrap_or_else(crate::policy::consult_cache_enabled),
+        );
 
-        // Prime the arrival stream.
-        if let Some(a) = src.next_arrival(rng) {
-            self.events.push(a.t, EventKind::Arrival);
-            self.pending_arrival = Some(a);
-        }
+        // Prime the arrival cursor.
+        self.pending_arrival = src.next_arrival(rng);
 
         let mut decision = Decision::default();
-        while let Some(ev) = self.events.pop() {
-            debug_assert!(ev.t >= self.now - 1e-9);
-            if let Some(ts) = self.ts.as_mut() {
-                ts.advance(ev.t, &self.n_by_class);
-            }
-            self.now = ev.t;
-            if self.now > self.cfg.max_time {
-                break;
-            }
-            self.events_processed += 1;
+        loop {
+            let take_arrival = match (&self.pending_arrival, self.events.peek_t()) {
+                (Some(a), Some(ht)) => a.t <= ht,
+                (Some(_), None) => true,
+                (None, _) => false,
+            };
+            if take_arrival {
+                let a = self.pending_arrival.take().expect("checked above");
+                debug_assert!(a.t >= self.now - 1e-9);
+                if let Some(ts) = self.ts.as_mut() {
+                    ts.advance(a.t, &self.n_by_class);
+                }
+                self.now = a.t;
+                if self.now > self.cfg.max_time {
+                    break;
+                }
+                self.events_processed += 1;
+                let class = a.class;
+                self.apply_arrival(a);
+                policy.on_arrival(class, self.needs[class]);
+                self.pending_arrival = src.next_arrival(rng);
+            } else {
+                let Some(ev) = self.events.pop() else {
+                    break; // arrival stream exhausted and heap empty
+                };
+                debug_assert!(ev.t >= self.now - 1e-9);
+                if let Some(ts) = self.ts.as_mut() {
+                    ts.advance(ev.t, &self.n_by_class);
+                }
+                self.now = ev.t;
+                if self.now > self.cfg.max_time {
+                    break;
+                }
+                self.events_processed += 1;
 
-            match ev.kind {
-                EventKind::Arrival => {
-                    let a = self.pending_arrival.take().expect("arrival without payload");
-                    self.apply_arrival(a);
-                    if let Some(next) = src.next_arrival(rng) {
-                        self.events.push(next.t, EventKind::Arrival);
-                        self.pending_arrival = Some(next);
+                match ev.kind {
+                    EventKind::Arrival => unreachable!("arrivals bypass the event heap"),
+                    EventKind::Departure { job } => {
+                        let class = self.jobs.class(job);
+                        let need = self.jobs.need(job);
+                        self.apply_departure(job);
+                        policy.on_departure(class, need);
+                        if self.completions_total >= stop_at {
+                            break;
+                        }
                     }
-                }
-                EventKind::Departure { job } => {
-                    self.apply_departure(job);
-                    if self.completions_total >= stop_at {
-                        break;
+                    EventKind::PolicyTimer { seq } => {
+                        if seq != self.timer_seq {
+                            continue; // superseded timer
+                        }
+                        policy.on_timer(self.now);
                     }
-                }
-                EventKind::PolicyTimer { seq } => {
-                    if seq != self.timer_seq {
-                        continue; // superseded timer
-                    }
-                    policy.on_timer(self.now);
                 }
             }
 
@@ -320,14 +362,15 @@ impl Engine {
                 "non-preemptive policy {} attempted preemption",
                 policy.name()
             );
-            for i in 0..decision.preempt.len() {
-                let id = decision.preempt[i];
+            for &id in &decision.preempt {
                 self.do_preempt(id);
             }
-            for i in 0..decision.admit.len() {
-                let id = decision.admit[i];
+            for &id in &decision.admit {
                 self.do_admit(id, policy);
             }
+            // The service set swapped: let the policy refresh whatever
+            // consult-cache state its own decision invalidated.
+            policy.on_swap_epoch();
         }
     }
 

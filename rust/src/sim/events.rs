@@ -158,6 +158,15 @@ impl EventQueue {
         self.sift_up(self.heap.len() - 1);
     }
 
+    /// Time of the earliest event without popping it. The engine merges
+    /// the (heap-external) arrival cursor against this: arrivals never
+    /// enter the heap, so saturation sweeps skip one push/pop round-trip
+    /// per arrival.
+    #[inline]
+    pub fn peek_t(&self) -> Option<f64> {
+        self.heap.first().map(|e| e.t)
+    }
+
     #[inline]
     pub fn pop(&mut self) -> Option<Event> {
         let n = self.heap.len();

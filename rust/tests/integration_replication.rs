@@ -39,6 +39,83 @@ fn golden_same_seed_bit_identical() {
     }
 }
 
+/// The incremental consult layer is a pure optimization: full runs with
+/// the consult cache forced ON must be bit-identical (events,
+/// completions, every statistic) to runs with it forced OFF — the
+/// `QS_NO_CONSULT_CACHE` differential contract, engine edition, for
+/// every policy on both a one-or-all and a multiclass workload.
+#[test]
+fn golden_consult_cache_on_off_bit_identical() {
+    let one_or_all = Workload::one_or_all(16, 3.8, 0.9, 1.0, 1.0);
+    let four = Workload::four_class(4.0);
+    let cases: &[(&Workload, &[&str])] = &[
+        (
+            &one_or_all,
+            &[
+                "fcfs",
+                "first-fit",
+                "msf",
+                "msfq:15",
+                "msfq:0",
+                "static-qs",
+                "adaptive-qs",
+                "nmsr",
+                "server-filling",
+            ],
+        ),
+        (
+            &four,
+            &[
+                "fcfs",
+                "first-fit",
+                "msf",
+                "static-qs",
+                "adaptive-qs",
+                "nmsr",
+                "server-filling",
+            ],
+        ),
+    ];
+    for &(wl, policies) in cases {
+        for &policy in policies {
+            let run = |cache: bool| {
+                let cfg = SimConfig {
+                    consult_cache: Some(cache),
+                    ..quick(30_000)
+                };
+                run_named(wl, policy, &cfg, 4242).unwrap()
+            };
+            let on = run(true);
+            let off = run(false);
+            assert_eq!(on.completed, off.completed, "{policy}");
+            assert_eq!(on.events, off.events, "{policy}");
+            assert_eq!(
+                on.mean_t_all.to_bits(),
+                off.mean_t_all.to_bits(),
+                "{policy}"
+            );
+            assert_eq!(on.ci95.to_bits(), off.ci95.to_bits(), "{policy}");
+            assert_eq!(
+                on.utilization.to_bits(),
+                off.utilization.to_bits(),
+                "{policy}"
+            );
+            for c in 0..on.mean_t.len() {
+                assert_eq!(
+                    on.mean_t[c].to_bits(),
+                    off.mean_t[c].to_bits(),
+                    "{policy} class {c}"
+                );
+                assert_eq!(
+                    on.mean_n[c].to_bits(),
+                    off.mean_n[c].to_bits(),
+                    "{policy} class {c}"
+                );
+            }
+        }
+    }
+}
+
 /// Engine reuse: reset() after an unrelated run must reproduce a fresh
 /// engine's trajectory bit for bit (the replication runner depends on
 /// this to recycle allocations safely).

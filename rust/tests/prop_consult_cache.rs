@@ -1,0 +1,195 @@
+//! Differential property tests for the incremental consult layer: a
+//! policy with its consult cache enabled (fed the engine's `on_arrival`
+//! / `on_departure` / `on_swap_epoch` delta notifications) must make
+//! **bit-identical decisions** — and leave bit-identical system state —
+//! to an uncached twin recomputing every consult from scratch, on
+//! arbitrary event sequences. This is the correctness contract that
+//! makes the cached fast paths legal (see `policy/mod.rs` module docs).
+
+use quickswap::dist::Dist;
+use quickswap::policy::test_support::Harness;
+use quickswap::policy::{by_name, JobId, Policy};
+use quickswap::util::proptest::check;
+use quickswap::util::rng::Rng;
+use quickswap::workload::{ClassSpec, Workload};
+
+/// One step of a replayed schedule.
+#[derive(Debug, Clone, Copy)]
+enum Step {
+    /// Arrival of the given class (index modulo the class count).
+    Arrive(usize),
+    /// Complete a random running job (no-op if none).
+    Complete,
+    /// Fire the policy timer (models the engine's `PolicyTimer`).
+    Timer,
+}
+
+#[derive(Debug, Clone)]
+struct Scenario {
+    k: u32,
+    needs: Vec<u32>,
+    script: Vec<Step>,
+    seed: u64,
+}
+
+fn gen_steps(r: &mut Rng, n: usize) -> Vec<Step> {
+    (0..n)
+        .map(|_| {
+            let x = r.f64();
+            if x < 0.55 {
+                Step::Arrive(r.index(8))
+            } else if x < 0.95 {
+                Step::Complete
+            } else {
+                Step::Timer
+            }
+        })
+        .collect()
+}
+
+fn gen_scenario(r: &mut Rng) -> Scenario {
+    let k = 2 + r.below(15) as u32; // 2..=16
+    let nclasses = 1 + r.index(4);
+    let mut needs: Vec<u32> = (0..nclasses)
+        .map(|_| 1 + r.below(k as u64) as u32)
+        .collect();
+    needs.sort_unstable();
+    needs.dedup();
+    Scenario {
+        k,
+        needs,
+        script: gen_steps(r, 160),
+        seed: r.next_u64(),
+    }
+}
+
+/// One-or-all scenarios (the paper's core setting) so MSFQ — which
+/// rejects other shapes — gets differential coverage too.
+fn gen_one_or_all(r: &mut Rng) -> Scenario {
+    let k = 2 + r.below(15) as u32;
+    Scenario {
+        k,
+        needs: vec![1, k],
+        script: gen_steps(r, 160),
+        seed: r.next_u64(),
+    }
+}
+
+/// Drive cached and uncached twins of `policy` through the scenario in
+/// lockstep; error out on the first divergence in decisions or state.
+fn run_differential(sc: &Scenario, policy: &str) -> Result<(), String> {
+    let wl = Workload::new(
+        sc.k,
+        sc.needs
+            .iter()
+            .map(|&n| ClassSpec::new(n, 1.0, Dist::exp_mean(1.0)))
+            .collect(),
+    );
+    // Every policy in the test lists accepts these workload shapes, so a
+    // construction failure is a real regression, not a shape mismatch —
+    // never silently skip (that would make the property vacuous).
+    let mut cached = by_name(policy, &wl)
+        .map_err(|e| format!("by_name({policy}) failed: {e}"))?;
+    let mut fresh = by_name(policy, &wl).expect("second construction must match the first");
+    cached.set_consult_cache(true);
+    fresh.set_consult_cache(false);
+    let mut ha = Harness::new(sc.k, &sc.needs);
+    let mut hb = Harness::new(sc.k, &sc.needs);
+    let mut rng = Rng::new(sc.seed);
+    let mut running: Vec<JobId> = Vec::new();
+    let mut t = 0.0;
+    for (i, &step) in sc.script.iter().enumerate() {
+        t += 0.1;
+        match step {
+            Step::Arrive(c) => {
+                let c = c % sc.needs.len();
+                ha.arrive_notified(cached.as_mut(), c, t);
+                hb.arrive_notified(fresh.as_mut(), c, t);
+            }
+            Step::Complete => {
+                if running.is_empty() {
+                    continue;
+                }
+                let id = running.swap_remove(rng.index(running.len()));
+                if !ha.jobs.is_running(id) {
+                    continue; // preempted since admission (ServerFilling)
+                }
+                ha.complete_notified(cached.as_mut(), id, t);
+                hb.complete_notified(fresh.as_mut(), id, t);
+            }
+            Step::Timer => {
+                cached.on_timer(t);
+                fresh.on_timer(t);
+            }
+        }
+        // The incremental admissible set must equal the from-scratch
+        // recompute after every event.
+        let adm_a = ha.consult(cached.as_mut());
+        let adm_b = hb.consult(fresh.as_mut());
+        if adm_a != adm_b {
+            return Err(format!(
+                "step {i}: cached admitted {adm_a:?}, uncached {adm_b:?}"
+            ));
+        }
+        if ha.queued != hb.queued || ha.running != hb.running || ha.used() != hb.used() {
+            return Err(format!(
+                "step {i}: state diverged (queued {:?} vs {:?}, running {:?} vs {:?}, used {} vs {})",
+                ha.queued,
+                hb.queued,
+                ha.running,
+                hb.running,
+                ha.used(),
+                hb.used()
+            ));
+        }
+        let la = cached.phase_label(&ha.view());
+        let lb = fresh.phase_label(&hb.view());
+        if la != lb {
+            return Err(format!("step {i}: phase label diverged ({la} vs {lb})"));
+        }
+        running.extend(adm_a);
+        running.retain(|&id| ha.jobs.is_running(id));
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_cached_equals_uncached_all_policies() {
+    for policy in [
+        "fcfs",
+        "first-fit",
+        "msf",
+        "static-qs",
+        "static-qs:3",
+        "adaptive-qs",
+        "nmsr",
+        "nmsr:5",
+        "server-filling",
+    ] {
+        check(&format!("consult_cache/{policy}"), gen_scenario, |sc| {
+            run_differential(sc, policy)
+        });
+    }
+}
+
+#[test]
+fn prop_cached_equals_uncached_one_or_all() {
+    for policy in [
+        "msfq:0",
+        "msfq:1",
+        "msfq",
+        "fcfs",
+        "msf",
+        "first-fit",
+        "adaptive-qs",
+        "static-qs",
+        "nmsr",
+        "server-filling",
+    ] {
+        check(
+            &format!("consult_cache_one_or_all/{policy}"),
+            gen_one_or_all,
+            |sc| run_differential(sc, policy),
+        );
+    }
+}

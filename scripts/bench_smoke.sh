@@ -1,19 +1,79 @@
 #!/usr/bin/env bash
 # Perf smoke: run the engine-throughput bench at QS_SCALE=smoke and emit
 # BENCH_perf_engine.json (events/s per policy) at the repo root, so every
-# PR has a perf trajectory to compare against.
+# PR has a perf trajectory to compare against. CI runs this as the
+# `bench-smoke` job and uploads the JSON as an artifact.
 #
 # Usage: scripts/bench_smoke.sh            # smoke scale, fast budgets
 #        QS_SCALE=bench scripts/bench_smoke.sh   # heavier, steadier numbers
+#
+# Fails loudly (no silent stub output) when:
+#   * cargo is missing,
+#   * the bench binary fails or writes no JSON,
+#   * any bench target reports 0 events/s.
 set -euo pipefail
 cd "$(dirname "$0")/.."
+
+if ! command -v cargo >/dev/null 2>&1; then
+    echo "error: cargo not found in PATH — install a Rust toolchain" \
+         "(see rust-toolchain.toml) before running the perf smoke" >&2
+    exit 1
+fi
 
 export QS_SCALE="${QS_SCALE:-smoke}"
 export QS_BENCH_FAST="${QS_BENCH_FAST:-1}"
 export QS_BENCH_OUT="${QS_BENCH_OUT:-$PWD/BENCH_perf_engine.json}"
 
+# Clear any previous output first: the bench binary exits 0 even when it
+# cannot write the JSON, so a stale file must not be able to pass the
+# checks below as if freshly measured.
+rm -f "$QS_BENCH_OUT"
+
 cargo bench --bench perf_engine
+
+if [ ! -s "$QS_BENCH_OUT" ]; then
+    echo "error: bench completed but wrote no output at $QS_BENCH_OUT" >&2
+    exit 1
+fi
 
 echo
 echo "== $QS_BENCH_OUT =="
 cat "$QS_BENCH_OUT"
+
+# Validate the artifact: a populated result set with strictly positive
+# events/s everywhere, and the consult-cache targets at or above their
+# uncached baselines (with a noise margin: < 0.9x fails the run, the
+# [0.9, 1.0) band only warns — smoke-scale numbers jitter).
+if command -v python3 >/dev/null 2>&1; then
+    python3 - "$QS_BENCH_OUT" <<'PYEOF'
+import json, sys
+
+doc = json.load(open(sys.argv[1]))
+results = doc.get("results") or {}
+if not results:
+    sys.exit("error: bench JSON has an empty 'results' object")
+zeros = [name for name, rate in results.items() if not rate > 0.0]
+if zeros:
+    sys.exit(f"error: bench targets report 0 events/s: {zeros}")
+failures = []
+for cached, baseline in [
+    ("sim_msfq:31", "sim_msfq:31_nocache"),
+    ("sim_borg_adaptive_qs", "sim_borg_adaptive_qs_nocache"),
+]:
+    if cached in results and baseline in results:
+        ratio = results[cached] / results[baseline]
+        marker = "" if ratio >= 1.0 else "  <-- WARNING: below uncached baseline"
+        print(f"consult-cache speedup {cached}: {ratio:.3f}x{marker}")
+        if ratio < 0.9:
+            failures.append(f"{cached} at {ratio:.3f}x of its uncached baseline")
+if failures:
+    sys.exit("error: consult cache is a net slowdown: " + "; ".join(failures))
+PYEOF
+else
+    # Fallback without python3: reject the empty-results stub.
+    if grep -q '"results":{}' "$QS_BENCH_OUT"; then
+        echo "error: bench JSON has an empty 'results' object" >&2
+        exit 1
+    fi
+    echo "note: python3 unavailable — skipped per-target zero-rate check" >&2
+fi
