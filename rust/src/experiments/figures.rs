@@ -1,12 +1,50 @@
 //! One harness per paper figure. See DESIGN.md §3 for the experiment
 //! index and EXPERIMENTS.md for recorded paper-vs-measured outcomes.
+//!
+//! The sweep-shaped figures (2, 3, 5, 6/8) are **shardable
+//! descriptions**: each has a `figN_spec` returning the
+//! [`SweepSpec`] that fully determines its grid and statistics, and the
+//! harness itself is "run the spec locally, then format". The same spec
+//! fed to a [`crate::sweep::Driver`] fleet produces bit-identical
+//! points. Figures 1 and 4 are single-run trajectory/phase harnesses
+//! and stay closures. Per-figure replication overrides: `QS_REPS_FIG6=8`
+//! beats `QS_REPS` for fig6 (see [`Scale::sweep_opts_for`]).
 
 use crate::analysis::{analyze, MsfqParams};
-use crate::experiments::{print_sweep, sweep_with, write_sweep_csv, Point, Scale};
+use crate::experiments::{print_sweep, write_sweep_csv, Point, Scale};
 use crate::sim::{Engine, SimConfig, TimeseriesSpec};
+use crate::sweep::{run_spec_local, SweepSpec, WorkloadSpec};
 use crate::util::csv::CsvWriter;
 use crate::util::rng::Rng;
-use crate::workload::{borg::borg_workload, SyntheticSource, Workload};
+use crate::workload::{SyntheticSource, Workload};
+
+/// Build a figure's spec: grid + scale config + per-figure replications.
+fn spec_for(
+    workload: WorkloadSpec,
+    lambdas: &[f64],
+    policies: &[&str],
+    scale: Scale,
+    figure: &str,
+) -> SweepSpec {
+    SweepSpec::from_config(
+        workload,
+        lambdas,
+        policies,
+        &scale.config(),
+        scale.seed,
+        scale.sweep_opts_for(figure).replications,
+    )
+}
+
+/// The one-or-all family at the paper's Figs 1–4 shape (k=32, p1=0.9).
+fn one_or_all_spec() -> WorkloadSpec {
+    WorkloadSpec::OneOrAll {
+        k: 32,
+        p1: 0.9,
+        mu1: 1.0,
+        muk: 1.0,
+    }
+}
 
 /// The paper's one-or-all configuration (Figs 1–4): k=32, 90% lights,
 /// unit mean sizes.
@@ -76,19 +114,17 @@ pub fn fig1(scale: Scale) -> Vec<Fig1Out> {
 // ---------------------------------------------------------------------
 // Fig 2: E[T] vs threshold ℓ (simulation + Theorem-2 analysis).
 // ---------------------------------------------------------------------
+/// Shardable description of fig2's grid (msfq:ℓ for each ℓ at one λ).
+pub fn fig2_spec(scale: Scale, lambda: f64, ells: &[u32]) -> SweepSpec {
+    let policies: Vec<String> = ells.iter().map(|e| format!("msfq:{e}")).collect();
+    let policy_refs: Vec<&str> = policies.iter().map(|s| s.as_str()).collect();
+    spec_for(one_or_all_spec(), &[lambda], &policy_refs, scale, "fig2")
+}
+
 pub fn fig2(scale: Scale, lambda: f64, ells: &[u32]) -> Vec<(u32, f64, f64)> {
     let wl = one_or_all_at(lambda);
     let policies: Vec<String> = ells.iter().map(|e| format!("msfq:{e}")).collect();
-    let policy_refs: Vec<&str> = policies.iter().map(|s| s.as_str()).collect();
-    let cfg = scale.config();
-    let pts = sweep_with(
-        &one_or_all_at,
-        &[lambda],
-        &policy_refs,
-        &cfg,
-        scale.seed,
-        &scale.sweep_opts(),
-    );
+    let pts = run_spec_local(&fig2_spec(scale, lambda, ells), scale.threads);
     let mut rows = Vec::new();
     let mut w = CsvWriter::create(
         results_path("fig2_threshold.csv"),
@@ -117,20 +153,21 @@ pub fn fig2(scale: Scale, lambda: f64, ells: &[u32]) -> Vec<(u32, f64, f64)> {
 // Fig 3: E[T]/E[T^w]/per-class vs λ for all one-or-all policies, with
 // the analysis overlay for MSF and MSFQ.
 // ---------------------------------------------------------------------
-pub fn fig3(scale: Scale, lambdas: &[f64]) -> Vec<Point> {
+/// Shardable description of fig3's grid.
+pub fn fig3_spec(scale: Scale, lambdas: &[f64]) -> SweepSpec {
     let policies = ["msf", "msfq:31", "fcfs", "first-fit", "nmsr"];
-    let cfg = scale.config();
-    let pts = sweep_with(
-        &one_or_all_at,
-        lambdas,
-        &policies,
-        &cfg,
-        scale.seed,
-        &scale.sweep_opts(),
-    );
-    let wl = one_or_all_at(1.0);
-    let names: Vec<String> = wl.classes.iter().map(|c| c.name.clone()).collect();
-    write_sweep_csv(&results_path("fig3_one_or_all.csv"), &pts, &names).ok();
+    spec_for(one_or_all_spec(), lambdas, &policies, scale, "fig3")
+}
+
+pub fn fig3(scale: Scale, lambdas: &[f64]) -> Vec<Point> {
+    let spec = fig3_spec(scale, lambdas);
+    let pts = run_spec_local(&spec, scale.threads);
+    write_sweep_csv(
+        &results_path("fig3_one_or_all.csv"),
+        &pts,
+        &spec.class_names(),
+    )
+    .ok();
     // Analysis overlay (Theorem 2): MSFQ(31) and MSF(= ℓ0).
     let mut w = CsvWriter::create(
         results_path("fig3_analysis.csv"),
@@ -218,23 +255,21 @@ pub fn fig4(scale: Scale, lambdas: &[f64]) -> Vec<Fig4Row> {
 // ---------------------------------------------------------------------
 // Fig 5: weighted E[T] vs λ in the 4-class system (k=15).
 // ---------------------------------------------------------------------
-pub fn fig5(scale: Scale, lambdas: &[f64]) -> Vec<Point> {
+/// Shardable description of fig5's grid.
+pub fn fig5_spec(scale: Scale, lambdas: &[f64]) -> SweepSpec {
     let policies = ["static-qs", "adaptive-qs", "msf", "first-fit", "fcfs"];
-    let cfg = scale.config();
-    let pts = sweep_with(
-        &Workload::four_class,
-        lambdas,
-        &policies,
-        &cfg,
-        scale.seed,
-        &scale.sweep_opts(),
-    );
-    let names: Vec<String> = Workload::four_class(1.0)
-        .classes
-        .iter()
-        .map(|c| c.name.clone())
-        .collect();
-    write_sweep_csv(&results_path("fig5_multiclass.csv"), &pts, &names).ok();
+    spec_for(WorkloadSpec::FourClass, lambdas, &policies, scale, "fig5")
+}
+
+pub fn fig5(scale: Scale, lambdas: &[f64]) -> Vec<Point> {
+    let spec = fig5_spec(scale, lambdas);
+    let pts = run_spec_local(&spec, scale.threads);
+    write_sweep_csv(
+        &results_path("fig5_multiclass.csv"),
+        &pts,
+        &spec.class_names(),
+    )
+    .ok();
     print_sweep("fig5: 4 classes, k=15 (weighted)", &pts, true);
     pts
 }
@@ -242,31 +277,26 @@ pub fn fig5(scale: Scale, lambdas: &[f64]) -> Vec<Point> {
 // ---------------------------------------------------------------------
 // Fig 6 / C.7 / D.8: Borg-derived workload (k=2048, 26 classes).
 // ---------------------------------------------------------------------
-pub fn fig6(scale: Scale, lambdas: &[f64], include_preemptive: bool) -> Vec<Point> {
+/// Shardable description of the Borg grid (fig8 adds ServerFilling and
+/// reads its own `QS_REPS_FIG8` override).
+pub fn fig6_spec(scale: Scale, lambdas: &[f64], include_preemptive: bool) -> SweepSpec {
     let mut policies = vec!["adaptive-qs", "static-qs", "msf", "first-fit"];
     if include_preemptive {
         policies.push("server-filling");
     }
-    let cfg = scale.config();
-    let pts = sweep_with(
-        &borg_workload,
-        lambdas,
-        &policies,
-        &cfg,
-        scale.seed,
-        &scale.sweep_opts(),
-    );
-    let names: Vec<String> = borg_workload(1.0)
-        .classes
-        .iter()
-        .map(|c| c.name.clone())
-        .collect();
+    let figure = if include_preemptive { "fig8" } else { "fig6" };
+    spec_for(WorkloadSpec::Borg, lambdas, &policies, scale, figure)
+}
+
+pub fn fig6(scale: Scale, lambdas: &[f64], include_preemptive: bool) -> Vec<Point> {
+    let spec = fig6_spec(scale, lambdas, include_preemptive);
+    let pts = run_spec_local(&spec, scale.threads);
     let file = if include_preemptive {
         "fig8_preemptive.csv"
     } else {
         "fig6_borg.csv"
     };
-    write_sweep_csv(&results_path(file), &pts, &names).ok();
+    write_sweep_csv(&results_path(file), &pts, &spec.class_names()).ok();
     print_sweep(
         if include_preemptive {
             "fig D.8: Borg workload incl. preemptive ServerFilling"

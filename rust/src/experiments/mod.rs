@@ -8,16 +8,23 @@
 //! bench` targets run; `Scale::smoke()` is for tests.
 //!
 //! Parallelism model: every (λ, policy) point fans out into R
-//! independent, seed-streamed replications, and worker threads pull
-//! *(point, replication)* units off a shared counter. Short points no
-//! longer serialize behind long ones (the old sweep scheduled whole
-//! points), workers reuse one resettable [`Engine`] per point (no
-//! per-replication allocation), and the per-point replications pool
-//! their batch means into a single CI ([`ReplicationPool`]).
+//! independent, seed-streamed replications, scheduled as fine-grained
+//! *(point, replication)* units. Short points no longer serialize behind
+//! long ones (the old sweep scheduled whole points), workers reuse one
+//! resettable [`Engine`] per point (no per-replication allocation), and
+//! the per-point replications pool their batch means into a single CI
+//! ([`ReplicationPool`]).
+//!
+//! Where units *execute* is abstracted behind [`UnitSource`]:
+//! [`LocalThreads`] pulls units off a shared counter with in-process
+//! worker threads, and [`crate::sweep::Driver`] serves the same units to
+//! remote worker processes over TCP JSONL. Both deliver bit-identical
+//! [`UnitRun`]s for a given (grid, seed), so sharded and in-process
+//! sweeps produce byte-identical CSVs.
 
 pub mod figures;
 
-use crate::sim::{Engine, Metrics, ReplicationPool, SimConfig, SimResult};
+use crate::sim::{Engine, ReplicationPool, SimConfig, SimResult, UnitStats};
 use crate::util::rng::{Rng, SplitMix64};
 use crate::workload::{SyntheticSource, Workload};
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -86,6 +93,15 @@ impl Scale {
             ..SweepOpts::from_env()
         }
     }
+
+    /// Like [`Scale::sweep_opts`], honoring a per-figure replication
+    /// override (`QS_REPS_FIG6=8` beats `QS_REPS` for `figure = "fig6"`).
+    pub fn sweep_opts_for(&self, figure: &str) -> SweepOpts {
+        SweepOpts {
+            threads: self.threads,
+            ..SweepOpts::from_env_for(Some(figure))
+        }
+    }
 }
 
 fn default_threads() -> usize {
@@ -106,15 +122,27 @@ pub struct SweepOpts {
 impl SweepOpts {
     /// QS_REPS overrides the replication count (default 4).
     pub fn from_env() -> SweepOpts {
-        let replications = std::env::var("QS_REPS")
-            .ok()
-            .and_then(|v| v.parse().ok())
-            .unwrap_or(4);
+        Self::from_env_for(None)
+    }
+
+    /// Replication count with an optional per-figure override: for
+    /// `figure = Some("fig6")`, `QS_REPS_FIG6` beats `QS_REPS` (the
+    /// warmup-dominated figures need a different R than the default).
+    pub fn from_env_for(figure: Option<&str>) -> SweepOpts {
         SweepOpts {
-            replications: replications.max(1),
+            replications: reps_from(figure, |key| std::env::var(key).ok()),
             threads: default_threads(),
         }
     }
+}
+
+/// Resolve the replication count from an env-like lookup (factored out
+/// of [`SweepOpts::from_env_for`] so the precedence is testable without
+/// mutating process environment).
+fn reps_from(figure: Option<&str>, get: impl Fn(&str) -> Option<String>) -> u32 {
+    let parse = |v: Option<String>| v.and_then(|s| s.trim().parse::<u32>().ok());
+    let per_fig = figure.and_then(|f| parse(get(&format!("QS_REPS_{}", f.to_uppercase()))));
+    per_fig.or_else(|| parse(get("QS_REPS"))).unwrap_or(4).max(1)
 }
 
 impl Default for SweepOpts {
@@ -132,23 +160,233 @@ pub struct Point {
     pub result: SimResult,
 }
 
-/// Everything a finished replication contributes to its point's pool.
-struct RepRun {
-    metrics: Metrics,
-    now: f64,
-    events: u64,
-    wall_s: f64,
-    /// Policy display name (e.g. "MSFQ(ell=31)"), captured from the run.
-    display: String,
+/// Everything a finished replication contributes to its point's pool:
+/// the serializable stats plus the policy display name (e.g.
+/// "MSFQ(ell=31)") captured from the run.
+#[derive(Clone, Debug)]
+pub struct UnitRun {
+    pub stats: UnitStats,
+    pub display: String,
 }
 
-/// Deterministic per-(point, replication) seed stream: thread scheduling
-/// can never change which random numbers a replication consumes.
+/// Deterministic per-(point, replication) seed stream: neither thread
+/// scheduling nor unit-to-worker assignment can change which random
+/// numbers a replication consumes.
 fn rep_seed(seed: u64, point: u64, rep: u64) -> u64 {
     let mixed = seed
         ^ point.wrapping_mul(0x9E3779B97F4A7C15)
         ^ rep.wrapping_mul(0xD1B54A32D192ED03);
     SplitMix64::new(mixed).next_u64()
+}
+
+/// The complete (point, replication) unit grid of one sweep. Unit `u`
+/// maps to point `u / reps`, replication `u % reps` (point-major), and
+/// points enumerate λ-major then policy — the partition is a pure
+/// function of the inputs, identical on every process that builds it.
+#[derive(Clone, Debug)]
+pub struct SweepGrid {
+    /// (λ, policy-name) per point, λ-major.
+    pub pts: Vec<(f64, String)>,
+    /// Replications per point (≥ 1).
+    pub reps: usize,
+    /// Per-replication config (measured budget split across reps;
+    /// warmup NOT split — see [`sweep_with`]).
+    pub rep_cfg: SimConfig,
+    /// Base seed feeding the per-unit seed stream.
+    pub seed: u64,
+}
+
+impl SweepGrid {
+    pub fn new(
+        lambdas: &[f64],
+        policies: &[&str],
+        cfg: &SimConfig,
+        seed: u64,
+        replications: u32,
+    ) -> SweepGrid {
+        let mut pts: Vec<(f64, String)> = Vec::new();
+        for &l in lambdas {
+            for &p in policies {
+                pts.push((l, p.to_string()));
+            }
+        }
+        let reps = replications.max(1) as usize;
+        // Split the measured-completion budget so total measured work
+        // matches the single-replication configuration. Warmup is NOT
+        // split: the transient length is a property of the system, not of
+        // the run length, and every replication starts from an empty
+        // system — each stream discards the full configured warmup.
+        let rep_cfg = SimConfig {
+            target_completions: cfg.target_completions.div_ceil(reps as u64),
+            warmup_completions: cfg.warmup_completions,
+            ..cfg.clone()
+        };
+        SweepGrid {
+            pts,
+            reps,
+            rep_cfg,
+            seed,
+        }
+    }
+
+    pub fn n_units(&self) -> usize {
+        self.pts.len() * self.reps
+    }
+
+    /// (point index, replication index) of unit `u`.
+    pub fn point_rep(&self, u: usize) -> (usize, usize) {
+        (u / self.reps, u % self.reps)
+    }
+}
+
+/// Execute one (point, replication) unit. `wl` must be the workload for
+/// the unit's point; `cache` carries a reusable engine across units of
+/// the same point (reset is bit-identical to fresh construction).
+/// Returns `None` when the policy cannot be constructed.
+pub fn run_unit(
+    grid: &SweepGrid,
+    wl: &Workload,
+    u: usize,
+    cache: &mut Option<(usize, Engine)>,
+) -> Option<UnitRun> {
+    let (p, r) = grid.point_rep(u);
+    let (lambda, policy) = &grid.pts[p];
+    let reuse = matches!(cache, Some((idx, _)) if *idx == p);
+    if !reuse {
+        *cache = Some((p, Engine::new(wl, grid.rep_cfg.clone())));
+    }
+    let engine = &mut cache.as_mut().expect("cached engine").1;
+    if reuse {
+        engine.reset();
+    }
+    match crate::policy::by_name(policy, wl) {
+        Ok(mut pol) => {
+            let mut src = SyntheticSource::new(wl.clone());
+            let mut rng = Rng::new(rep_seed(grid.seed, p as u64, r as u64));
+            let result = engine.run(&mut src, pol.as_mut(), &mut rng);
+            Some(UnitRun {
+                stats: UnitStats::from_metrics(
+                    engine.metrics(),
+                    engine.now(),
+                    result.events,
+                    result.wall_s,
+                ),
+                display: result.policy,
+            })
+        }
+        Err(e) => {
+            eprintln!("point ({lambda}, {policy}) failed: {e}");
+            None
+        }
+    }
+}
+
+/// Where (point, replication) units execute. Implementations must call
+/// `deliver(u, run)` exactly once per *successfully finished* unit (any
+/// order; duplicate deliveries for a unit are ignored, first wins) and
+/// return once every unit has either delivered or conclusively failed.
+pub trait UnitSource {
+    fn run_units(
+        &mut self,
+        grid: &SweepGrid,
+        wl_at: &(dyn Fn(f64) -> Workload + Sync),
+        deliver: &(dyn Fn(usize, UnitRun) + Sync),
+    ) -> anyhow::Result<()>;
+}
+
+/// In-process execution: `threads` workers pull units off a shared
+/// counter (the original fine-grained replication runner).
+pub struct LocalThreads {
+    pub threads: usize,
+}
+
+impl UnitSource for LocalThreads {
+    fn run_units(
+        &mut self,
+        grid: &SweepGrid,
+        wl_at: &(dyn Fn(f64) -> Workload + Sync),
+        deliver: &(dyn Fn(usize, UnitRun) + Sync),
+    ) -> anyhow::Result<()> {
+        let n_units = grid.n_units();
+        let next = AtomicUsize::new(0);
+        let threads = self.threads.max(1).min(n_units.max(1));
+        std::thread::scope(|s| {
+            for _ in 0..threads {
+                s.spawn(|| {
+                    // Engine cache: consecutive units of the same point
+                    // reuse one engine's allocations via reset().
+                    let mut cache: Option<(usize, Engine)> = None;
+                    loop {
+                        let u = next.fetch_add(1, Ordering::Relaxed);
+                        if u >= n_units {
+                            break;
+                        }
+                        let (p, _) = grid.point_rep(u);
+                        let wl = wl_at(grid.pts[p].0);
+                        if let Some(run) = run_unit(grid, &wl, u, &mut cache) {
+                            deliver(u, run);
+                        }
+                    }
+                });
+            }
+        });
+        Ok(())
+    }
+}
+
+/// Drive `source` over the grid and pool the delivered units into
+/// [`Point`]s. Pooling is per point in replication order (deterministic
+/// floating-point merge order), and the output is sorted by (policy, λ)
+/// — the result is a pure function of (grid, wl_at), independent of the
+/// source's scheduling, worker count, or result arrival order.
+pub fn sweep_units(
+    grid: &SweepGrid,
+    wl_at: &(dyn Fn(f64) -> Workload + Sync),
+    source: &mut dyn UnitSource,
+) -> anyhow::Result<Vec<Point>> {
+    let slots: Vec<Mutex<Vec<Option<UnitRun>>>> = grid
+        .pts
+        .iter()
+        .map(|_| Mutex::new((0..grid.reps).map(|_| None).collect()))
+        .collect();
+    let deliver = |u: usize, run: UnitRun| {
+        let (p, r) = grid.point_rep(u);
+        let mut slot = slots[p].lock().unwrap();
+        // First result wins: a reissued-then-raced unit is dropped here
+        // (identical bits anyway under the determinism contract).
+        if slot[r].is_none() {
+            slot[r] = Some(run);
+        }
+    };
+    source.run_units(grid, wl_at, &deliver)?;
+    let mut out = Vec::with_capacity(grid.pts.len());
+    for (slot, (lambda, policy)) in slots.into_iter().zip(grid.pts.iter()) {
+        let wl = wl_at(*lambda);
+        let mut pool = ReplicationPool::new(wl.num_classes());
+        let runs = slot.into_inner().unwrap();
+        let mut display = None;
+        for run in runs.iter().flatten() {
+            pool.absorb_stats(&run.stats);
+            if display.is_none() {
+                display = Some(run.display.clone());
+            }
+        }
+        if pool.replications() == 0 {
+            continue; // every replication failed (bad policy name)
+        }
+        let display = display.unwrap_or_else(|| policy.clone());
+        out.push(Point {
+            lambda: *lambda,
+            policy: policy.clone(),
+            result: pool.result(&display, &wl),
+        });
+    }
+    out.sort_by(|a, b| {
+        a.policy
+            .cmp(&b.policy)
+            .then(a.lambda.partial_cmp(&b.lambda).unwrap())
+    });
+    Ok(out)
 }
 
 /// Run `policies × lambdas` with environment-default replication and
@@ -175,102 +413,11 @@ pub fn sweep_with(
     seed: u64,
     opts: &SweepOpts,
 ) -> Vec<Point> {
-    let mut pts: Vec<(f64, String)> = Vec::new();
-    for &l in lambdas {
-        for &p in policies {
-            pts.push((l, p.to_string()));
-        }
-    }
-    let reps = opts.replications.max(1) as usize;
-    // Split the measured-completion budget so total measured work matches
-    // the single-replication configuration. Warmup is NOT split: the
-    // transient length is a property of the system, not of the run
-    // length, and every replication starts from an empty system — each
-    // stream discards the full configured warmup.
-    let rep_cfg = SimConfig {
-        target_completions: cfg.target_completions.div_ceil(reps as u64),
-        warmup_completions: cfg.warmup_completions,
-        ..cfg.clone()
+    let grid = SweepGrid::new(lambdas, policies, cfg, seed, opts.replications);
+    let mut source = LocalThreads {
+        threads: opts.threads,
     };
-    let n_units = pts.len() * reps;
-    let slots: Vec<Mutex<Vec<Option<RepRun>>>> = pts
-        .iter()
-        .map(|_| Mutex::new((0..reps).map(|_| None).collect()))
-        .collect();
-    let next = AtomicUsize::new(0);
-    let threads = opts.threads.max(1).min(n_units.max(1));
-    std::thread::scope(|s| {
-        for _ in 0..threads {
-            s.spawn(|| {
-                // Engine cache: consecutive units of the same point reuse
-                // one engine's allocations via reset().
-                let mut cached: Option<(usize, Engine)> = None;
-                loop {
-                    let u = next.fetch_add(1, Ordering::Relaxed);
-                    if u >= n_units {
-                        break;
-                    }
-                    let (p, r) = (u / reps, u % reps);
-                    let (lambda, policy) = &pts[p];
-                    let wl = wl_at(*lambda);
-                    let reuse = matches!(&cached, Some((idx, _)) if *idx == p);
-                    if !reuse {
-                        cached = Some((p, Engine::new(&wl, rep_cfg.clone())));
-                    }
-                    let engine = &mut cached.as_mut().expect("cached engine").1;
-                    if reuse {
-                        engine.reset();
-                    }
-                    match crate::policy::by_name(policy, &wl) {
-                        Ok(mut pol) => {
-                            let mut src = SyntheticSource::new(wl.clone());
-                            let mut rng = Rng::new(rep_seed(seed, p as u64, r as u64));
-                            let result = engine.run(&mut src, pol.as_mut(), &mut rng);
-                            let run = RepRun {
-                                metrics: engine.metrics().clone(),
-                                now: engine.now(),
-                                events: result.events,
-                                wall_s: result.wall_s,
-                                display: result.policy,
-                            };
-                            slots[p].lock().unwrap()[r] = Some(run);
-                        }
-                        Err(e) => eprintln!("point ({lambda}, {policy}) failed: {e}"),
-                    }
-                }
-            });
-        }
-    });
-    // Pool each point's replications in replication order (deterministic
-    // floating-point merge order).
-    let mut out = Vec::with_capacity(pts.len());
-    for (slot, (lambda, policy)) in slots.into_iter().zip(pts.into_iter()) {
-        let wl = wl_at(lambda);
-        let mut pool = ReplicationPool::new(wl.num_classes());
-        let runs = slot.into_inner().unwrap();
-        let mut display = None;
-        for run in runs.iter().flatten() {
-            pool.absorb(&run.metrics, run.now, run.events, run.wall_s);
-            if display.is_none() {
-                display = Some(run.display.clone());
-            }
-        }
-        if pool.replications() == 0 {
-            continue; // every replication failed (bad policy name)
-        }
-        let display = display.unwrap_or_else(|| policy.clone());
-        out.push(Point {
-            lambda,
-            policy,
-            result: pool.result(&display, &wl),
-        });
-    }
-    out.sort_by(|a, b| {
-        a.policy
-            .cmp(&b.policy)
-            .then(a.lambda.partial_cmp(&b.lambda).unwrap())
-    });
-    out
+    sweep_units(&grid, wl_at, &mut source).expect("local unit execution is infallible")
 }
 
 /// Write a sweep as CSV: lambda, policy, et, etw, ci95, jain, util, and
@@ -334,5 +481,58 @@ pub fn print_sweep(title: &str, points: &[Point], weighted: bool) {
                 p.result.jain
             );
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// QS_REPS_FIG<N> beats QS_REPS beats the default of 4; garbage and
+    /// zero fall through / clamp.
+    #[test]
+    fn per_figure_reps_precedence() {
+        let env = |pairs: &'static [(&'static str, &'static str)]| {
+            move |key: &str| {
+                let hit = pairs.iter().find(|(k, _)| *k == key);
+                hit.map(|(_, v)| v.to_string())
+            }
+        };
+        let empty = env(&[]);
+        let global = env(&[("QS_REPS", "7")]);
+        let both = env(&[("QS_REPS", "7"), ("QS_REPS_FIG6", "8")]);
+        let garbage = env(&[("QS_REPS", "7"), ("QS_REPS_FIG6", "lots")]);
+        let zero = env(&[("QS_REPS", "0")]);
+        assert_eq!(reps_from(None, &empty), 4);
+        assert_eq!(reps_from(Some("fig6"), &empty), 4);
+        assert_eq!(reps_from(None, &global), 7);
+        assert_eq!(reps_from(Some("fig6"), &global), 7);
+        assert_eq!(reps_from(Some("fig6"), &both), 8);
+        // Another figure does not see fig6's override.
+        assert_eq!(reps_from(Some("fig3"), &both), 7);
+        // Unparseable per-figure value falls back to QS_REPS.
+        assert_eq!(reps_from(Some("fig6"), &garbage), 7);
+        // Zero clamps to 1.
+        assert_eq!(reps_from(None, &zero), 1);
+    }
+
+    /// The unit grid partition is point-major and deterministic.
+    #[test]
+    fn grid_partition_is_point_major() {
+        let cfg = SimConfig::default().with_completions(9_000);
+        let grid = SweepGrid::new(&[2.0, 3.0], &["msf", "fcfs"], &cfg, 1, 3);
+        assert_eq!(grid.pts.len(), 4);
+        assert_eq!(grid.n_units(), 12);
+        assert_eq!(grid.point_rep(0), (0, 0));
+        assert_eq!(grid.point_rep(2), (0, 2));
+        assert_eq!(grid.point_rep(3), (1, 0));
+        assert_eq!(grid.point_rep(11), (3, 2));
+        // Budget split, warmup untouched.
+        assert_eq!(grid.rep_cfg.target_completions, 3_000);
+        assert_eq!(grid.rep_cfg.warmup_completions, 9_000 / 5);
+        // λ-major point order.
+        assert_eq!(grid.pts[0], (2.0, "msf".to_string()));
+        assert_eq!(grid.pts[1], (2.0, "fcfs".to_string()));
+        assert_eq!(grid.pts[2], (3.0, "msf".to_string()));
     }
 }

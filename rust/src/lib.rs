@@ -16,6 +16,9 @@
 //! * [`runtime`] — loads the AOT-compiled JAX/Pallas CTMC solver
 //!   (`artifacts/*.hlo.txt`) through PJRT and exposes typed wrappers.
 //! * [`experiments`] — one harness per paper figure/table.
+//! * [`sweep`] — sharded sweep orchestration: a driver serves the
+//!   (point, replication) unit grid to worker processes over TCP JSONL,
+//!   bit-identical to the in-process runner at equal (seed, R).
 //!
 //! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for
 //! paper-vs-measured results.
@@ -28,6 +31,7 @@ pub mod experiments;
 pub mod policy;
 pub mod runtime;
 pub mod sim;
+pub mod sweep;
 pub mod util;
 pub mod workload;
 

@@ -13,8 +13,9 @@
 use quickswap::analysis::{self, MsfqCtmc, MsfqParams};
 use quickswap::config::parse_workload;
 use quickswap::coordinator::{serve_tcp, Coordinator, CoordinatorConfig};
-use quickswap::experiments::{figures, Scale};
+use quickswap::experiments::{figures, Scale, SweepOpts};
 use quickswap::sim::SimConfig;
+use quickswap::sweep::{SweepSpec, WorkloadSpec};
 use quickswap::util::cli::{render_help, Args, OptSpec};
 use quickswap::util::json::Value;
 use quickswap::workload::{borg::borg_workload, trace::Trace, Workload};
@@ -59,7 +60,7 @@ fn help() -> String {
         "nonpreemptive multiserver-job scheduling with Quickswap",
         &[
             ("simulate", "run one policy on a workload"),
-            ("sweep", "lambda × policy sweep to CSV"),
+            ("sweep", "lambda × policy sweep to CSV (in-process, or sharded via --driver/--worker)"),
             ("analyze", "Theorem-2 MSFQ calculator"),
             ("solve", "stationary CTMC solve (native or PJRT artifact)"),
             ("autotune", "best quickswap threshold for given rates"),
@@ -75,6 +76,10 @@ fn help() -> String {
             OptSpec { name: "policy", help: "fcfs|first-fit|msf|msfq[:ell]|static-qs|adaptive-qs|nmsr|server-filling", default: Some("msfq".into()) },
             OptSpec { name: "completions", help: "measured completions", default: Some("1000000".into()) },
             OptSpec { name: "seed", help: "RNG seed", default: Some("1".into()) },
+            OptSpec { name: "reps", help: "replications per sweep point", default: Some("QS_REPS or 4".into()) },
+            OptSpec { name: "driver", help: "sweep: serve the unit grid to TCP workers on ADDR (\":0\" picks a port)", default: None },
+            OptSpec { name: "worker", help: "sweep: pull units from the driver at ADDR", default: None },
+            OptSpec { name: "fig", help: "sweep: use a figure's predefined grid (2|3|5|6|8)", default: None },
         ],
     )
 }
@@ -137,27 +142,99 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
+/// Build the sweep description from CLI args: either a figure's
+/// predefined grid (`--fig 2|3|5|6|8`) or an ad-hoc
+/// workload × λ × policy grid. The spec fully determines the results;
+/// thread/worker counts never enter it.
+fn sweep_spec_from(args: &Args) -> anyhow::Result<SweepSpec> {
+    let reps = args.u32_or("reps", SweepOpts::from_env().replications)?;
+    if let Some(fig) = args.get("fig") {
+        let scale = Scale::from_env();
+        let mut spec = match fig {
+            "2" => {
+                let lambda = args.f64_or("lambda", 7.5)?;
+                figures::fig2_spec(scale, lambda, &[0, 1, 2, 4, 8, 16, 24, 31])
+            }
+            "3" => {
+                let ls = args.f64_list("lambdas", &[4.0, 5.0, 6.0, 6.75, 7.25, 7.5])?;
+                figures::fig3_spec(scale, &ls)
+            }
+            "5" => {
+                let ls = args.f64_list("lambdas", &[2.0, 3.0, 4.0, 4.5, 4.75])?;
+                figures::fig5_spec(scale, &ls)
+            }
+            "6" => {
+                let ls = args.f64_list("lambdas", &[2.0, 3.0, 4.0, 4.5])?;
+                figures::fig6_spec(scale, &ls, false)
+            }
+            "8" => {
+                let ls = args.f64_list("lambdas", &[2.0, 3.0, 4.0, 4.5])?;
+                figures::fig6_spec(scale, &ls, true)
+            }
+            other => anyhow::bail!("--fig {other} is not a sweep-shaped figure (2|3|5|6|8)"),
+        };
+        // Explicit --reps/--seed/--completions beat the figure's
+        // QS_SCALE/QS_REPS-resolved defaults (other grid args are the
+        // figure's own and stay fixed).
+        if args.get("reps").is_some() {
+            spec.replications = reps;
+        }
+        if args.get("seed").is_some() {
+            spec.seed = args.u64_or("seed", spec.seed)?;
+        }
+        if args.get("completions").is_some() {
+            let c = args.u64_or("completions", spec.target_completions)?;
+            spec.target_completions = c;
+            spec.warmup_completions = c / 5;
+        }
+        return Ok(spec);
+    }
     let lambdas = args.f64_list("lambdas", &[4.0, 5.0, 6.0, 7.0, 7.5])?;
     let policies_s = args.str_or("policies", "msf,msfq:31,fcfs,first-fit");
     let policies: Vec<&str> = policies_s.split(',').map(|s| s.trim()).collect();
     let cfg = sim_config_from(args)?;
     let seed = args.u64_or("seed", 1)?;
-    let kind = args.str_or("workload", "one_or_all");
-    let k = args.u64_or("k", 32)? as u32;
-    let p1 = args.f64_or("p1", 0.9)?;
-    let builder = move |l: f64| -> Workload {
-        match kind.as_str() {
-            "four_class" => Workload::four_class(l),
-            "borg" => borg_workload(l),
-            _ => Workload::one_or_all(k, l, p1, 1.0, 1.0),
-        }
+    let workload = match args.str_or("workload", "one_or_all").as_str() {
+        "four_class" => WorkloadSpec::FourClass,
+        "borg" => WorkloadSpec::Borg,
+        "one_or_all" => WorkloadSpec::OneOrAll {
+            k: args.u64_or("k", 32)? as u32,
+            p1: args.f64_or("p1", 0.9)?,
+            mu1: args.f64_or("mu1", 1.0)?,
+            muk: args.f64_or("muk", 1.0)?,
+        },
+        other => anyhow::bail!("sweep workload must be one_or_all|four_class|borg, got {other}"),
     };
-    let pts = quickswap::experiments::sweep(&builder, &lambdas, &policies, &cfg, seed);
+    Ok(SweepSpec::from_config(workload, &lambdas, &policies, &cfg, seed, reps))
+}
+
+fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
+    // Worker mode: everything (grid, seeds, run lengths) comes from the
+    // driver; local grid args are ignored.
+    if let Some(addr) = args.get("worker") {
+        let units = quickswap::sweep::run_worker(addr)?;
+        eprintln!("qs-sweep worker: completed {units} units");
+        return Ok(());
+    }
+    let spec = sweep_spec_from(args)?;
+    let pts = if let Some(addr) = args.get("driver") {
+        let driver = quickswap::sweep::Driver::bind(&spec, addr)?;
+        // Stderr, machine-parseable: scripts read the bound port from
+        // this line (ports chosen with ":0").
+        eprintln!("qs-sweep driver listening on {}", driver.local_addr());
+        eprintln!(
+            "  grid: {} points x {} replications = {} units",
+            spec.lambdas.len() * spec.policies.len(),
+            spec.replications,
+            spec.grid().n_units()
+        );
+        driver.run()?
+    } else {
+        quickswap::sweep::run_spec_local(&spec, SweepOpts::from_env().threads)
+    };
     quickswap::experiments::print_sweep("sweep", &pts, args.flag("weighted"));
     if let Some(out) = args.get("out") {
-        let names: Vec<String> = builder(1.0).classes.iter().map(|c| c.name.clone()).collect();
-        quickswap::experiments::write_sweep_csv(out, &pts, &names)?;
+        quickswap::experiments::write_sweep_csv(out, &pts, &spec.class_names())?;
         println!("wrote {out}");
     }
     Ok(())

@@ -3,6 +3,7 @@
 //! and pooling of independent replications into one result with a
 //! batch-means CI over all replications' batches.
 
+use crate::util::json::{f64_bits, f64_from_bits, Value};
 use crate::util::stats::{jain_index, BatchMeans, TimeAverage, Welford};
 use crate::workload::Workload;
 
@@ -185,6 +186,106 @@ impl SimResult {
     }
 }
 
+/// Everything one finished replication contributes to its point's
+/// [`ReplicationPool`], reduced to a wire-friendly form: response
+/// accumulators plus the *evaluated* time-average areas and window
+/// length (a `TimeAverage` itself never needs to travel). Serializes
+/// with bit-exact f64 state, so pooling stats shipped from a remote
+/// sweep worker is bit-identical to pooling the local [`Metrics`] they
+/// were derived from.
+#[derive(Clone, Debug)]
+pub struct UnitStats {
+    /// Per-class response-time accumulators.
+    pub resp: Vec<Welford>,
+    /// Overall response-time batch means.
+    pub resp_all: BatchMeans,
+    /// Per-class ∫N dt over the measurement window.
+    pub n_area: Vec<f64>,
+    /// ∫busy dt over the measurement window.
+    pub busy_area: f64,
+    /// Measurement-window length (final time − window start).
+    pub window: f64,
+    /// Completions in the measurement window.
+    pub completed: u64,
+    /// Total events processed (incl. warmup).
+    pub events: u64,
+    /// Wall-clock seconds for the replication.
+    pub wall_s: f64,
+}
+
+impl UnitStats {
+    /// Reduce a finished run's metrics. `now` is the final virtual time;
+    /// `events`/`wall_s` the run's event count and wall clock.
+    pub fn from_metrics(m: &Metrics, now: f64, events: u64, wall_s: f64) -> UnitStats {
+        UnitStats {
+            resp: m.resp.clone(),
+            resp_all: m.resp_all.clone(),
+            n_area: m.n_avg.iter().map(|ta| ta.area(now)).collect(),
+            busy_area: m.busy_avg.area(now),
+            window: now - m.window_start,
+            completed: m.completed,
+            events,
+            wall_s,
+        }
+    }
+
+    /// Bit-exact JSON form (the sweep wire format).
+    pub fn to_json(&self) -> Value {
+        let resp: Vec<Value> = self.resp.iter().map(|w| w.to_json()).collect();
+        let n_area: Vec<Value> = self.n_area.iter().map(|&a| f64_bits(a)).collect();
+        Value::obj()
+            .set("resp", Value::Arr(resp))
+            .set("resp_all", self.resp_all.to_json())
+            .set("n_area", Value::Arr(n_area))
+            .set("busy_area", f64_bits(self.busy_area))
+            .set("window", f64_bits(self.window))
+            .set("completed", self.completed)
+            .set("events", self.events)
+            .set("wall_s", f64_bits(self.wall_s))
+    }
+
+    /// Inverse of [`UnitStats::to_json`].
+    pub fn from_json(v: &Value) -> anyhow::Result<UnitStats> {
+        let arr = |key: &str| {
+            v.get(key)
+                .and_then(|x| x.as_arr())
+                .ok_or_else(|| anyhow::anyhow!("missing '{key}' array"))
+        };
+        let bits = |key: &str| {
+            v.get(key)
+                .and_then(f64_from_bits)
+                .ok_or_else(|| anyhow::anyhow!("missing/invalid f64-bits field '{key}'"))
+        };
+        let count = |key: &str| {
+            v.get(key)
+                .and_then(|x| x.as_u64())
+                .ok_or_else(|| anyhow::anyhow!("missing/invalid u64 field '{key}'"))
+        };
+        let resp = arr("resp")?
+            .iter()
+            .map(Welford::from_json)
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let n_area = arr("n_area")?
+            .iter()
+            .map(|x| f64_from_bits(x).ok_or_else(|| anyhow::anyhow!("bad n_area bits")))
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let resp_all = v
+            .get("resp_all")
+            .ok_or_else(|| anyhow::anyhow!("missing 'resp_all'"))
+            .and_then(BatchMeans::from_json)?;
+        Ok(UnitStats {
+            resp,
+            resp_all,
+            n_area,
+            busy_area: bits("busy_area")?,
+            window: bits("window")?,
+            completed: count("completed")?,
+            events: count("events")?,
+            wall_s: bits("wall_s")?,
+        })
+    }
+}
+
 /// Pools R independent replications of one simulation point into a
 /// single [`SimResult`]:
 ///
@@ -226,21 +327,28 @@ impl ReplicationPool {
     /// Fold one finished replication in. `now` is the replication's final
     /// virtual time; `events`/`wall_s` its event count and wall clock.
     pub fn absorb(&mut self, m: &Metrics, now: f64, events: u64, wall_s: f64) {
-        for (c, w) in m.resp.iter().enumerate() {
+        self.absorb_stats(&UnitStats::from_metrics(m, now, events, wall_s));
+    }
+
+    /// Fold one finished replication's reduced [`UnitStats`] in — the
+    /// single merge path for both local metrics and stats deserialized
+    /// from a remote sweep worker (bit-identical either way).
+    pub fn absorb_stats(&mut self, u: &UnitStats) {
+        for (c, w) in u.resp.iter().enumerate() {
             self.resp[c].merge(w);
         }
         match &mut self.resp_all {
-            None => self.resp_all = Some(m.resp_all.clone()),
-            Some(b) => b.merge(&m.resp_all),
+            None => self.resp_all = Some(u.resp_all.clone()),
+            Some(b) => b.merge(&u.resp_all),
         }
-        for (c, ta) in m.n_avg.iter().enumerate() {
-            self.n_area[c] += ta.area(now);
+        for (c, &a) in u.n_area.iter().enumerate() {
+            self.n_area[c] += a;
         }
-        self.busy_area += m.busy_avg.area(now);
-        self.window += now - m.window_start;
-        self.completed += m.completed;
-        self.events += events;
-        self.wall_s += wall_s;
+        self.busy_area += u.busy_area;
+        self.window += u.window;
+        self.completed += u.completed;
+        self.events += u.events;
+        self.wall_s += u.wall_s;
         self.reps += 1;
     }
 
@@ -318,6 +426,42 @@ mod tests {
         assert!((r.weighted_t - 2.0).abs() < 1e-12);
         assert!((r.mean_t_all - 2.0).abs() < 1e-12);
         assert!((r.utilization - 0.5).abs() < 1e-12);
+    }
+
+    /// Absorbing a UnitStats that went through the JSON wire format must
+    /// be bit-identical to absorbing the local Metrics directly.
+    #[test]
+    fn unit_stats_wire_roundtrip_pools_bit_identical() {
+        let wl = wl2();
+        let mut m = Metrics::new(2, 3);
+        let mut r = crate::util::rng::Rng::new(17);
+        for i in 0..40 {
+            m.record_response(i % 2, r.f64() * 7.0);
+        }
+        m.n_avg[0].update(0.0, 1.0);
+        m.n_avg[1].update(2.0, 2.0);
+        m.busy_avg.update(0.0, 3.0);
+        let now = 11.5;
+
+        let mut local = ReplicationPool::new(2);
+        local.absorb(&m, now, 123, 0.25);
+        let stats = UnitStats::from_metrics(&m, now, 123, 0.25);
+        let wire = Value::parse(&stats.to_json().to_string()).unwrap();
+        let mut remote = ReplicationPool::new(2);
+        remote.absorb_stats(&UnitStats::from_json(&wire).unwrap());
+
+        let a = local.result("t", &wl);
+        let b = remote.result("t", &wl);
+        assert_eq!(a.completed, b.completed);
+        assert_eq!(a.events, b.events);
+        assert_eq!(a.mean_t_all.to_bits(), b.mean_t_all.to_bits());
+        assert_eq!(a.ci95.to_bits(), b.ci95.to_bits());
+        assert_eq!(a.weighted_t.to_bits(), b.weighted_t.to_bits());
+        assert_eq!(a.utilization.to_bits(), b.utilization.to_bits());
+        for c in 0..2 {
+            assert_eq!(a.mean_t[c].to_bits(), b.mean_t[c].to_bits());
+            assert_eq!(a.mean_n[c].to_bits(), b.mean_n[c].to_bits());
+        }
     }
 
     /// Pooling two identical half-replications must reproduce the means

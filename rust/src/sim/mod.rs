@@ -8,7 +8,7 @@ pub mod phase;
 pub mod timeseries;
 
 pub use engine::{Engine, SimConfig};
-pub use metrics::{Metrics, ReplicationPool, SimResult};
+pub use metrics::{Metrics, ReplicationPool, SimResult, UnitStats};
 pub use phase::PhaseStats;
 pub use timeseries::{Timeseries, TimeseriesSpec};
 

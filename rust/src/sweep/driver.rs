@@ -1,0 +1,246 @@
+//! The sweep driver: partitions a [`SweepSpec`]'s unit grid, serves
+//! units to TCP workers, and pools their results.
+//!
+//! The driver is "just another [`UnitSource`]": [`Driver::run`] hands a
+//! serving source to the same [`sweep_units`] pooling path the local
+//! thread runner uses, so sharded results are merged by exactly the
+//! same code, in the same (replication-order) sequence, as in-process
+//! results.
+//!
+//! Fault model: a worker that disconnects with a claimed-but-unreported
+//! unit has that unit requeued; duplicate results for a unit id are
+//! ignored (first wins). The driver returns once every unit has been
+//! delivered or conclusively failed on a worker. There is no timeout on
+//! an assigned unit while its connection stays open — a hung-but-alive
+//! worker stalls the sweep (kill it to trigger reissue); multi-machine
+//! auth and pacing are follow-ups tracked in ROADMAP.md.
+
+use crate::experiments::{sweep_units, Point, SweepGrid, UnitRun, UnitSource};
+use crate::sweep::{proto, SweepSpec};
+use crate::workload::Workload;
+use std::collections::VecDeque;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+/// A bound (but not yet serving) sweep driver. `bind` then `run`; the
+/// split lets callers learn the OS-assigned port (`addr = "host:0"`)
+/// before workers are pointed at it.
+pub struct Driver {
+    listener: TcpListener,
+    addr: SocketAddr,
+    spec: SweepSpec,
+}
+
+impl Driver {
+    pub fn bind(spec: &SweepSpec, addr: &str) -> anyhow::Result<Driver> {
+        let listener = TcpListener::bind(addr)?;
+        let addr = listener.local_addr()?;
+        Ok(Driver {
+            listener,
+            addr,
+            spec: spec.clone(),
+        })
+    }
+
+    /// The bound address workers should connect to.
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Serve until every unit has a result, then pool. Blocks; returns
+    /// the same `Vec<Point>` (bit for bit) as
+    /// [`run_spec_local`](crate::sweep::run_spec_local) on this spec.
+    pub fn run(self) -> anyhow::Result<Vec<Point>> {
+        let grid = self.spec.grid();
+        let wl_at = |l: f64| self.spec.workload.build(l);
+        let mut source = Serve {
+            listener: &self.listener,
+            addr: self.addr,
+            spec: &self.spec,
+        };
+        sweep_units(&grid, &wl_at, &mut source)
+    }
+}
+
+/// Shared serving state, guarded by one mutex.
+struct State {
+    /// Unit ids not currently assigned to any live connection.
+    pending: VecDeque<usize>,
+    /// Per-unit "a result (success or failure) has been recorded".
+    delivered: Vec<bool>,
+    /// Units still without a recorded result.
+    remaining: usize,
+    /// Clones of every accepted connection, for shutdown at completion.
+    conns: Vec<TcpStream>,
+}
+
+struct Serve<'a> {
+    listener: &'a TcpListener,
+    addr: SocketAddr,
+    spec: &'a SweepSpec,
+}
+
+impl UnitSource for Serve<'_> {
+    fn run_units(
+        &mut self,
+        grid: &SweepGrid,
+        _wl_at: &(dyn Fn(f64) -> Workload + Sync),
+        deliver: &(dyn Fn(usize, UnitRun) + Sync),
+    ) -> anyhow::Result<()> {
+        let n = grid.n_units();
+        if n == 0 {
+            return Ok(());
+        }
+        let state = Mutex::new(State {
+            pending: (0..n).collect(),
+            delivered: vec![false; n],
+            remaining: n,
+            conns: Vec::new(),
+        });
+        let cv = Condvar::new();
+        let done = AtomicBool::new(false);
+        let spec_line = proto::msg_spec(self.spec).to_string();
+        let listener = self.listener;
+        let addr = self.addr;
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                for conn in listener.incoming() {
+                    if done.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    let Ok(stream) = conn else { break };
+                    if let Ok(clone) = stream.try_clone() {
+                        state.lock().unwrap().conns.push(clone);
+                    }
+                    s.spawn(|| handle_conn(stream, &spec_line, &state, &cv, deliver));
+                }
+            });
+            let guard = state.lock().unwrap();
+            let guard = cv.wait_while(guard, |st| st.remaining > 0).unwrap();
+            drop(guard);
+            done.store(true, Ordering::SeqCst);
+            // Wake the acceptor, then unblock every connection thread
+            // still parked in a read (workers see EOF and exit). Connect
+            // via loopback: the bound address may be the wildcard
+            // 0.0.0.0, which is not connectable on every platform.
+            let wake = SocketAddr::from(([127, 0, 0, 1], addr.port()));
+            if TcpStream::connect_timeout(&wake, Duration::from_millis(200)).is_err() {
+                let _ = TcpStream::connect(addr);
+            }
+            for c in &state.lock().unwrap().conns {
+                let _ = c.shutdown(Shutdown::Both);
+            }
+        });
+        Ok(())
+    }
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    spec_line: &str,
+    state: &Mutex<State>,
+    cv: &Condvar,
+    deliver: &(dyn Fn(usize, UnitRun) + Sync),
+) {
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    if writeln!(writer, "{spec_line}").is_err() {
+        return;
+    }
+    let mut reader = BufReader::new(stream);
+    // Units this connection has claimed but not yet reported. The
+    // lockstep protocol implies at most one, but a pipelining (or buggy)
+    // client may claim several — every one of them must be reissued on
+    // disconnect or the sweep hangs with units leaked.
+    let mut claimed: Vec<usize> = Vec::new();
+    let mut line = String::new();
+    loop {
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) | Err(_) => break,
+            Ok(_) => {}
+        }
+        if line.trim().is_empty() {
+            continue;
+        }
+        let Ok(msg) = proto::parse_line(&line) else {
+            break;
+        };
+        match proto::op_of(&msg) {
+            Some("next") => {
+                let reply = {
+                    let mut st = state.lock().unwrap();
+                    if let Some(u) = st.pending.pop_front() {
+                        claimed.push(u);
+                        proto::msg_unit(u)
+                    } else if st.remaining == 0 {
+                        proto::msg_done()
+                    } else {
+                        // Everything is assigned elsewhere; poll again —
+                        // a disconnect may requeue a unit.
+                        proto::msg_wait(25)
+                    }
+                };
+                let closing = proto::op_of(&reply) == Some("done");
+                if writeln!(writer, "{reply}").is_err() || closing {
+                    break;
+                }
+            }
+            Some("result") => {
+                let Ok((id, outcome)) = proto::parse_result(&msg) else {
+                    break; // malformed: drop the conn, claimed unit reissues
+                };
+                // Claim the id first (dedupes a reissued-unit race), but
+                // only decrement `remaining` AFTER delivering: the main
+                // thread pools the instant it observes remaining == 0,
+                // and must never see it before the last run is slotted.
+                let fresh = {
+                    let mut st = state.lock().unwrap();
+                    if id >= st.delivered.len() || st.delivered[id] {
+                        false // duplicate or garbage id
+                    } else {
+                        st.delivered[id] = true;
+                        true
+                    }
+                };
+                claimed.retain(|&u| u != id);
+                let mut finished = false;
+                if fresh {
+                    match outcome {
+                        Ok(run) => deliver(id, run),
+                        Err(e) => eprintln!("sweep unit {id} failed on worker: {e}"),
+                    }
+                    let mut st = state.lock().unwrap();
+                    st.remaining -= 1;
+                    finished = st.remaining == 0;
+                }
+                // Ack BEFORE announcing completion: the worker must see
+                // its last ack before the driver starts tearing down
+                // connections.
+                let acked = writeln!(writer, "{}", proto::msg_ok()).is_ok();
+                if finished {
+                    cv.notify_all();
+                }
+                if !acked {
+                    break;
+                }
+            }
+            _ => break,
+        }
+    }
+    // Disconnect cleanup: requeue every claimed-but-unreported unit so
+    // other workers pick them up.
+    if !claimed.is_empty() {
+        let mut st = state.lock().unwrap();
+        for u in claimed {
+            if !st.delivered[u] {
+                st.pending.push_back(u);
+            }
+        }
+    }
+}

@@ -1,0 +1,303 @@
+//! Sharded sweep orchestration: distribute a figure's (λ, policy,
+//! replication) unit grid across worker processes.
+//!
+//! A [`SweepSpec`] is a self-contained, JSON-serializable description of
+//! a sweep (workload family, λ grid, policies, run lengths, seed,
+//! replication count) — the shardable form of an experiment harness. A
+//! [`Driver`] partitions the spec's unit grid (point-major unit ids, a
+//! pure function of the spec), serves units to [`run_worker`] processes
+//! over the coordinator's TCP JSONL idiom (`util::json`, one object per
+//! line; see [`proto`]), and pools returned
+//! [`UnitStats`](crate::sim::UnitStats) into the same
+//! [`ReplicationPool`](crate::sim::ReplicationPool) CIs the in-process
+//! runner produces.
+//!
+//! **Determinism contract:** at equal (spec), a sharded run is
+//! bit-identical to [`run_spec_local`] — regardless of worker count,
+//! unit-to-worker assignment, or result arrival order. The pieces that
+//! make this hold:
+//!
+//! * per-unit seeds are a pure function of (seed, point, rep);
+//! * workers ship accumulators with bit-exact f64 encoding
+//!   ([`crate::util::json::f64_bits`]), so nothing is lost in transit;
+//! * the driver pools each point's replications in replication order
+//!   (results are slotted by unit id, not arrival order);
+//! * engine reuse across units is bit-identical to fresh construction.
+//!
+//! Fault handling: a worker disconnect requeues its outstanding unit;
+//! duplicate results for a unit are deduped by unit id (first wins —
+//! identical bits anyway). `scripts/sweep_smoke.sh` runs 1 driver + 2
+//! workers on localhost and diffs against the in-process CSV; CI runs it
+//! as the `sweep-smoke` job.
+
+pub mod driver;
+pub mod proto;
+pub mod worker;
+
+pub use driver::Driver;
+pub use worker::run_worker;
+
+use crate::experiments::{sweep_units, LocalThreads, Point, SweepGrid};
+use crate::sim::SimConfig;
+use crate::util::json::Value;
+use crate::workload::{borg::borg_workload, Workload};
+
+/// A named workload family a worker can rebuild from parameters alone.
+#[derive(Clone, Debug, PartialEq)]
+pub enum WorkloadSpec {
+    OneOrAll { k: u32, p1: f64, mu1: f64, muk: f64 },
+    FourClass,
+    Borg,
+}
+
+impl WorkloadSpec {
+    /// Instantiate the workload at total arrival rate `lambda`.
+    pub fn build(&self, lambda: f64) -> Workload {
+        match *self {
+            WorkloadSpec::OneOrAll { k, p1, mu1, muk } => {
+                Workload::one_or_all(k, lambda, p1, mu1, muk)
+            }
+            WorkloadSpec::FourClass => Workload::four_class(lambda),
+            WorkloadSpec::Borg => borg_workload(lambda),
+        }
+    }
+
+    pub fn to_json(&self) -> Value {
+        match *self {
+            WorkloadSpec::OneOrAll { k, p1, mu1, muk } => {
+                Value::obj()
+                    .set("kind", "one_or_all")
+                    .set("k", k)
+                    .set("p1", p1)
+                    .set("mu1", mu1)
+                    .set("muk", muk)
+            }
+            WorkloadSpec::FourClass => Value::obj().set("kind", "four_class"),
+            WorkloadSpec::Borg => Value::obj().set("kind", "borg"),
+        }
+    }
+
+    pub fn from_json(v: &Value) -> anyhow::Result<WorkloadSpec> {
+        let f64_of = |key: &str| {
+            v.get(key)
+                .and_then(|x| x.as_f64())
+                .ok_or_else(|| anyhow::anyhow!("workload spec missing '{key}'"))
+        };
+        match v.get("kind").and_then(|k| k.as_str()) {
+            Some("one_or_all") => {
+                let k = v
+                    .get("k")
+                    .and_then(|x| x.as_u64())
+                    .ok_or_else(|| anyhow::anyhow!("workload spec missing 'k'"))?;
+                Ok(WorkloadSpec::OneOrAll {
+                    k: k as u32,
+                    p1: f64_of("p1")?,
+                    mu1: f64_of("mu1")?,
+                    muk: f64_of("muk")?,
+                })
+            }
+            Some("four_class") => Ok(WorkloadSpec::FourClass),
+            Some("borg") => Ok(WorkloadSpec::Borg),
+            other => anyhow::bail!("unknown workload kind {other:?}"),
+        }
+    }
+}
+
+/// A complete, serializable sweep description: everything a worker needs
+/// to run any unit of the grid, and everything the driver needs to pool
+/// and emit results. Execution knobs (thread/worker counts) are
+/// deliberately *not* part of the spec — they cannot affect results.
+#[derive(Clone, Debug)]
+pub struct SweepSpec {
+    pub workload: WorkloadSpec,
+    pub lambdas: Vec<f64>,
+    pub policies: Vec<String>,
+    pub target_completions: u64,
+    pub warmup_completions: u64,
+    /// Batch size for the batch-means CI.
+    pub batch: u64,
+    pub seed: u64,
+    pub replications: u32,
+}
+
+impl SweepSpec {
+    /// Build a spec from a workload family, grid, and sim config (only
+    /// the config fields that affect sweep statistics are carried).
+    pub fn from_config(
+        workload: WorkloadSpec,
+        lambdas: &[f64],
+        policies: &[&str],
+        cfg: &SimConfig,
+        seed: u64,
+        replications: u32,
+    ) -> SweepSpec {
+        SweepSpec {
+            workload,
+            lambdas: lambdas.to_vec(),
+            policies: policies.iter().map(|p| p.to_string()).collect(),
+            target_completions: cfg.target_completions,
+            warmup_completions: cfg.warmup_completions,
+            batch: cfg.batch,
+            seed,
+            replications: replications.max(1),
+        }
+    }
+
+    /// The sim config this spec describes (defaults elsewhere).
+    pub fn config(&self) -> SimConfig {
+        SimConfig {
+            target_completions: self.target_completions,
+            warmup_completions: self.warmup_completions,
+            batch: self.batch,
+            ..SimConfig::default()
+        }
+    }
+
+    /// The spec's (point, replication) unit grid.
+    pub fn grid(&self) -> SweepGrid {
+        let policies: Vec<&str> = self.policies.iter().map(|s| s.as_str()).collect();
+        SweepGrid::new(
+            &self.lambdas,
+            &policies,
+            &self.config(),
+            self.seed,
+            self.replications,
+        )
+    }
+
+    /// Per-class display names (CSV headers), from the λ=1 instance.
+    pub fn class_names(&self) -> Vec<String> {
+        let wl = self.workload.build(1.0);
+        wl.classes.iter().map(|c| c.name.clone()).collect()
+    }
+
+    pub fn to_json(&self) -> Value {
+        let lambdas: Vec<Value> = self.lambdas.iter().map(|&l| Value::Num(l)).collect();
+        let policies: Vec<Value> = self.policies.iter().map(|p| p.clone().into()).collect();
+        // The seed is arbitrary user-provided bits: it travels as a
+        // decimal string because Value::Num is f64-backed and would
+        // silently round seeds above 2^53, breaking the sharded ==
+        // in-process bit-identity contract.
+        Value::obj()
+            .set("workload", self.workload.to_json())
+            .set("lambdas", Value::Arr(lambdas))
+            .set("policies", Value::Arr(policies))
+            .set("target_completions", self.target_completions)
+            .set("warmup_completions", self.warmup_completions)
+            .set("batch", self.batch)
+            .set("seed", format!("{}", self.seed))
+            .set("replications", self.replications)
+    }
+
+    pub fn from_json(v: &Value) -> anyhow::Result<SweepSpec> {
+        let u64_of = |key: &str| {
+            v.get(key)
+                .and_then(|x| x.as_u64())
+                .ok_or_else(|| anyhow::anyhow!("sweep spec missing '{key}'"))
+        };
+        let lambdas = v
+            .get("lambdas")
+            .and_then(|x| x.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("sweep spec missing 'lambdas'"))?
+            .iter()
+            .map(|l| {
+                l.as_f64()
+                    .ok_or_else(|| anyhow::anyhow!("non-numeric lambda"))
+            })
+            .collect::<anyhow::Result<Vec<f64>>>()?;
+        let policies = v
+            .get("policies")
+            .and_then(|x| x.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("sweep spec missing 'policies'"))?
+            .iter()
+            .map(|p| {
+                p.as_str()
+                    .map(|s| s.to_string())
+                    .ok_or_else(|| anyhow::anyhow!("non-string policy"))
+            })
+            .collect::<anyhow::Result<Vec<String>>>()?;
+        let workload = v
+            .get("workload")
+            .ok_or_else(|| anyhow::anyhow!("sweep spec missing 'workload'"))
+            .and_then(WorkloadSpec::from_json)?;
+        let seed = v
+            .get("seed")
+            .and_then(|x| x.as_str())
+            .and_then(|s| s.parse::<u64>().ok())
+            .ok_or_else(|| anyhow::anyhow!("sweep spec missing 'seed'"))?;
+        Ok(SweepSpec {
+            workload,
+            lambdas,
+            policies,
+            target_completions: u64_of("target_completions")?,
+            warmup_completions: u64_of("warmup_completions")?,
+            batch: u64_of("batch")?,
+            seed,
+            replications: u64_of("replications")? as u32,
+        })
+    }
+}
+
+/// Run a spec with in-process threads — the single-process reference
+/// path the sharded run must match bit for bit.
+pub fn run_spec_local(spec: &SweepSpec, threads: usize) -> Vec<Point> {
+    let grid = spec.grid();
+    let wl_at = |l: f64| spec.workload.build(l);
+    let mut source = LocalThreads { threads };
+    sweep_units(&grid, &wl_at, &mut source).expect("local unit execution is infallible")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_json_roundtrip() {
+        let spec = SweepSpec {
+            workload: WorkloadSpec::OneOrAll {
+                k: 8,
+                p1: 0.9,
+                mu1: 1.0,
+                muk: 1.0,
+            },
+            lambdas: vec![2.0, 3.25, 0.1],
+            policies: vec!["msf".into(), "msfq:7".into()],
+            target_completions: 6_000,
+            warmup_completions: 1_200,
+            batch: 1000,
+            // Above 2^53: must survive the wire without f64 rounding.
+            seed: 0xDEAD_BEEF_DEAD_BEEF,
+            replications: 3,
+        };
+        let wire = spec.to_json().to_string();
+        let back = SweepSpec::from_json(&Value::parse(&wire).unwrap()).unwrap();
+        assert_eq!(back.workload, spec.workload);
+        assert_eq!(back.policies, spec.policies);
+        assert_eq!(back.target_completions, spec.target_completions);
+        assert_eq!(back.warmup_completions, spec.warmup_completions);
+        assert_eq!(back.batch, spec.batch);
+        assert_eq!(back.seed, spec.seed);
+        assert_eq!(back.replications, spec.replications);
+        // λ values round-trip bit-exactly (shortest-round-trip Display).
+        for (a, b) in spec.lambdas.iter().zip(&back.lambdas) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // Grids built on both sides agree.
+        assert_eq!(spec.grid().n_units(), back.grid().n_units());
+        assert_eq!(spec.grid().pts, back.grid().pts);
+    }
+
+    #[test]
+    fn workload_spec_builds_expected_families() {
+        let one = WorkloadSpec::OneOrAll {
+            k: 16,
+            p1: 0.9,
+            mu1: 1.0,
+            muk: 1.0,
+        };
+        assert_eq!(one.build(3.0).k, 16);
+        assert_eq!(WorkloadSpec::FourClass.build(2.0).k, 15);
+        assert_eq!(WorkloadSpec::Borg.build(2.0).num_classes(), 26);
+        assert!(WorkloadSpec::from_json(&Value::obj().set("kind", "nope")).is_err());
+    }
+}

@@ -1,0 +1,149 @@
+//! Sweep wire protocol: one JSON object per line over TCP (the same
+//! JSONL idiom as the coordinator's control API).
+//!
+//! Handshake: on connect the driver sends a `spec` line. From then on
+//! the worker drives a lockstep request/response loop:
+//!
+//! ```text
+//! worker → driver   {"op":"next"}
+//! driver → worker   {"op":"unit","id":N} | {"op":"wait","ms":M} | {"op":"done"}
+//! worker → driver   {"op":"result","id":N,"display":...,"stats":{...}}
+//!                   | {"op":"result","id":N,"err":"..."}
+//! driver → worker   {"op":"ok"}
+//! ```
+//!
+//! Every statistic inside `stats` uses bit-exact f64 encoding
+//! ([`crate::util::json::f64_bits`]) — the determinism contract depends
+//! on nothing being lost in transit.
+
+use crate::experiments::UnitRun;
+use crate::sim::UnitStats;
+use crate::sweep::SweepSpec;
+use crate::util::json::Value;
+
+/// Bumped on incompatible wire changes; driver and worker must agree.
+pub const PROTO_VERSION: u64 = 1;
+
+pub fn msg_spec(spec: &SweepSpec) -> Value {
+    Value::obj()
+        .set("op", "spec")
+        .set("proto", PROTO_VERSION)
+        .set("spec", spec.to_json())
+}
+
+pub fn msg_next() -> Value {
+    Value::obj().set("op", "next")
+}
+
+pub fn msg_unit(id: usize) -> Value {
+    Value::obj().set("op", "unit").set("id", id)
+}
+
+pub fn msg_wait(ms: u64) -> Value {
+    Value::obj().set("op", "wait").set("ms", ms)
+}
+
+pub fn msg_done() -> Value {
+    Value::obj().set("op", "done")
+}
+
+pub fn msg_ok() -> Value {
+    Value::obj().set("op", "ok")
+}
+
+pub fn msg_result(id: usize, run: &UnitRun) -> Value {
+    Value::obj()
+        .set("op", "result")
+        .set("id", id)
+        .set("display", run.display.as_str())
+        .set("stats", run.stats.to_json())
+}
+
+pub fn msg_result_err(id: usize, err: &str) -> Value {
+    Value::obj().set("op", "result").set("id", id).set("err", err)
+}
+
+/// Parse one wire line into a JSON value.
+pub fn parse_line(line: &str) -> anyhow::Result<Value> {
+    Value::parse(line.trim()).map_err(|e| anyhow::anyhow!("bad wire json: {e}"))
+}
+
+/// The message's `op` field.
+pub fn op_of(v: &Value) -> Option<&str> {
+    v.get("op").and_then(|o| o.as_str())
+}
+
+/// The message's `id` field as a unit index.
+pub fn id_of(v: &Value) -> anyhow::Result<usize> {
+    v.get("id")
+        .and_then(|x| x.as_u64())
+        .map(|x| x as usize)
+        .ok_or_else(|| anyhow::anyhow!("message missing 'id'"))
+}
+
+/// Decode a `spec` message.
+pub fn parse_spec(v: &Value) -> anyhow::Result<SweepSpec> {
+    if op_of(v) != Some("spec") {
+        anyhow::bail!("expected a 'spec' message, got {:?}", op_of(v));
+    }
+    let proto = v.get("proto").and_then(|p| p.as_u64()).unwrap_or(0);
+    if proto != PROTO_VERSION {
+        anyhow::bail!("protocol mismatch: driver speaks v{proto}, worker v{PROTO_VERSION}");
+    }
+    v.get("spec")
+        .ok_or_else(|| anyhow::anyhow!("spec message missing 'spec'"))
+        .and_then(SweepSpec::from_json)
+}
+
+/// Decode a `result` message into (unit id, run-or-error).
+pub fn parse_result(v: &Value) -> anyhow::Result<(usize, Result<UnitRun, String>)> {
+    let id = id_of(v)?;
+    if let Some(err) = v.get("err").and_then(|e| e.as_str()) {
+        return Ok((id, Err(err.to_string())));
+    }
+    let display = v
+        .get("display")
+        .and_then(|d| d.as_str())
+        .ok_or_else(|| anyhow::anyhow!("result missing 'display'"))?
+        .to_string();
+    let stats = v
+        .get("stats")
+        .ok_or_else(|| anyhow::anyhow!("result missing 'stats'"))
+        .and_then(UnitStats::from_json)?;
+    Ok((id, Ok(UnitRun { stats, display })))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sweep::WorkloadSpec;
+
+    #[test]
+    fn spec_message_roundtrip() {
+        let spec = SweepSpec {
+            workload: WorkloadSpec::FourClass,
+            lambdas: vec![2.0],
+            policies: vec!["msf".into()],
+            target_completions: 1000,
+            warmup_completions: 200,
+            batch: 100,
+            seed: 9,
+            replications: 2,
+        };
+        let wire = msg_spec(&spec).to_string();
+        let back = parse_spec(&parse_line(&wire).unwrap()).unwrap();
+        assert_eq!(back.policies, spec.policies);
+        assert_eq!(back.seed, 9);
+        // Version mismatch is rejected.
+        let bad = msg_spec(&spec).set("proto", 999u64);
+        assert!(parse_spec(&bad).is_err());
+    }
+
+    #[test]
+    fn result_error_roundtrip() {
+        let wire = msg_result_err(7, "no such policy").to_string();
+        let (id, run) = parse_result(&parse_line(&wire).unwrap()).unwrap();
+        assert_eq!(id, 7);
+        assert_eq!(run.unwrap_err(), "no such policy");
+    }
+}

@@ -1,0 +1,72 @@
+//! The sweep worker: connects to a driver, rebuilds the sweep from the
+//! served [`SweepSpec`](crate::sweep::SweepSpec), and runs assigned
+//! units with the same [`run_unit`] path (same per-unit seeds, same
+//! engine reuse) as the in-process runner — the worker adds nothing but
+//! transport.
+
+use crate::experiments::run_unit;
+use crate::sim::Engine;
+use crate::sweep::proto;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+/// Serve one driver until it reports `done` (or disappears — once the
+/// handshake succeeded, a lost connection means the driver finished or
+/// will reissue our unit elsewhere, so the worker exits cleanly either
+/// way). Returns the number of units completed and acknowledged.
+pub fn run_worker(addr: &str) -> anyhow::Result<usize> {
+    let stream = TcpStream::connect(addr)?;
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let spec = proto::parse_spec(&proto::parse_line(&line)?)?;
+    let grid = spec.grid();
+    // Engine cache: consecutive units of the same point reuse one
+    // engine's allocations (reset is bit-identical to fresh).
+    let mut cache: Option<(usize, Engine)> = None;
+    let mut completed = 0usize;
+    loop {
+        if writeln!(writer, "{}", proto::msg_next()).is_err() {
+            break;
+        }
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) | Err(_) => break,
+            Ok(_) => {}
+        }
+        let Ok(msg) = proto::parse_line(&line) else {
+            break; // torn line mid-teardown: treat as driver gone
+        };
+        match proto::op_of(&msg) {
+            Some("unit") => {
+                let u = proto::id_of(&msg)?;
+                if u >= grid.n_units() {
+                    anyhow::bail!("driver assigned out-of-range unit {u}");
+                }
+                let (p, _) = grid.point_rep(u);
+                let wl = spec.workload.build(grid.pts[p].0);
+                let reply = match run_unit(&grid, &wl, u, &mut cache) {
+                    Some(run) => proto::msg_result(u, &run),
+                    None => proto::msg_result_err(u, "policy construction failed"),
+                };
+                if writeln!(writer, "{reply}").is_err() {
+                    break;
+                }
+                line.clear();
+                match reader.read_line(&mut line) {
+                    Ok(0) | Err(_) => break, // ack lost: driver gone
+                    Ok(_) => completed += 1,
+                }
+            }
+            Some("wait") => {
+                let ms = msg.get("ms").and_then(|m| m.as_u64()).unwrap_or(25);
+                std::thread::sleep(Duration::from_millis(ms));
+            }
+            Some("done") => break,
+            other => anyhow::bail!("unexpected driver message {other:?}"),
+        }
+    }
+    Ok(completed)
+}

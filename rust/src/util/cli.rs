@@ -95,6 +95,15 @@ impl Args {
         Ok(self.u64_or(name, default as u64)? as usize)
     }
 
+    pub fn u32_or(&self, name: &'static str, default: u32) -> Result<u32, CliError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError::Invalid(name, v.to_string())),
+        }
+    }
+
     pub fn required(&self, name: &'static str) -> Result<&str, CliError> {
         self.get(name).ok_or(CliError::Missing(name))
     }

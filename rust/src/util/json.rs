@@ -131,6 +131,25 @@ impl<T: Into<Value>> From<Vec<T>> for Value {
     }
 }
 
+/// Bit-exact f64 encoding for wire payloads where precision loss is
+/// unacceptable (NaN and ±inf included): 16 lowercase hex digits of the
+/// IEEE-754 bit pattern, carried as a JSON string. Plain `Value::Num`
+/// round-trips finite values exactly too (Rust's shortest-round-trip
+/// `Display`), but cannot represent non-finite values at all — the sweep
+/// protocol uses this form for every statistic it ships.
+pub fn f64_bits(x: f64) -> Value {
+    Value::Str(format!("{:016x}", x.to_bits()))
+}
+
+/// Inverse of [`f64_bits`]; `None` on anything but a hex-bits string.
+pub fn f64_from_bits(v: &Value) -> Option<f64> {
+    let s = v.as_str()?;
+    if s.len() != 16 {
+        return None;
+    }
+    u64::from_str_radix(s, 16).ok().map(f64::from_bits)
+}
+
 #[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
 #[error("json parse error at byte {at}: {msg}")]
 pub struct ParseError {
@@ -415,5 +434,29 @@ mod tests {
         let v = Value::obj().set("x", 3u64).set("y", "hi");
         assert_eq!(v.get("x").unwrap().as_u64(), Some(3));
         assert_eq!(v.to_string(), r#"{"x":3,"y":"hi"}"#);
+    }
+
+    #[test]
+    fn f64_bits_roundtrip_exact() {
+        for x in [
+            0.0,
+            -0.0,
+            1.0,
+            0.1 + 0.2,
+            f64::MIN_POSITIVE,
+            f64::MAX,
+            f64::INFINITY,
+            f64::NEG_INFINITY,
+            std::f64::consts::PI,
+        ] {
+            let v = f64_bits(x);
+            // Through the serializer and parser, still bit-exact.
+            let v2 = Value::parse(&v.to_string()).unwrap();
+            assert_eq!(f64_from_bits(&v2).unwrap().to_bits(), x.to_bits());
+        }
+        let nan = f64_from_bits(&f64_bits(f64::NAN)).unwrap();
+        assert!(nan.is_nan());
+        assert!(f64_from_bits(&Value::Str("xyz".into())).is_none());
+        assert!(f64_from_bits(&Value::Num(1.0)).is_none());
     }
 }

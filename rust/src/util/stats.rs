@@ -1,5 +1,24 @@
 //! Streaming statistics: Welford accumulators, batch-means confidence
 //! intervals, and a fixed-memory streaming histogram for tail metrics.
+//!
+//! `Welford` and `BatchMeans` serialize to JSON with **bit-exact** f64
+//! state ([`crate::util::json::f64_bits`]): remote sweep workers ship
+//! their accumulators over the wire, and the driver's merge must be
+//! indistinguishable from an in-process merge of the same runs.
+
+use crate::util::json::{f64_bits, f64_from_bits, Value};
+
+fn bits_field(v: &Value, key: &str) -> anyhow::Result<f64> {
+    v.get(key)
+        .and_then(f64_from_bits)
+        .ok_or_else(|| anyhow::anyhow!("missing/invalid f64-bits field '{key}'"))
+}
+
+fn u64_field(v: &Value, key: &str) -> anyhow::Result<u64> {
+    v.get(key)
+        .and_then(|x| x.as_u64())
+        .ok_or_else(|| anyhow::anyhow!("missing/invalid u64 field '{key}'"))
+}
 
 /// Welford online mean/variance accumulator.
 #[derive(Clone, Debug, Default)]
@@ -76,6 +95,27 @@ impl Welford {
 
     pub fn max(&self) -> f64 {
         self.max
+    }
+
+    /// Bit-exact JSON form (counts as numbers, f64 state as hex bits).
+    pub fn to_json(&self) -> Value {
+        Value::obj()
+            .set("n", self.n)
+            .set("mean", f64_bits(self.mean))
+            .set("m2", f64_bits(self.m2))
+            .set("min", f64_bits(self.min))
+            .set("max", f64_bits(self.max))
+    }
+
+    /// Inverse of [`Welford::to_json`] — reconstructs the exact state.
+    pub fn from_json(v: &Value) -> anyhow::Result<Welford> {
+        Ok(Welford {
+            n: u64_field(v, "n")?,
+            mean: bits_field(v, "mean")?,
+            m2: bits_field(v, "m2")?,
+            min: bits_field(v, "min")?,
+            max: bits_field(v, "max")?,
+        })
     }
 
     /// Merge another accumulator (parallel replication combine).
@@ -163,6 +203,50 @@ impl BatchMeans {
         debug_assert_eq!(self.batch_size, o.batch_size, "batch sizes differ");
         self.overall.merge(&o.overall);
         self.batch_means.extend_from_slice(&o.batch_means);
+    }
+
+    /// Bit-exact JSON form: batch size, the partial current batch, every
+    /// completed batch mean, and the overall accumulator. Round-trips
+    /// through [`BatchMeans::from_json`] without precision loss, so a
+    /// merge of deserialized accumulators is bit-identical to a merge of
+    /// the originals.
+    pub fn to_json(&self) -> Value {
+        let means: Vec<Value> = self.batch_means.iter().map(|&b| f64_bits(b)).collect();
+        Value::obj()
+            .set("batch_size", self.batch_size)
+            .set("current", self.current.to_json())
+            .set("means", Value::Arr(means))
+            .set("overall", self.overall.to_json())
+    }
+
+    /// Inverse of [`BatchMeans::to_json`].
+    pub fn from_json(v: &Value) -> anyhow::Result<BatchMeans> {
+        let batch_size = u64_field(v, "batch_size")?;
+        if batch_size == 0 {
+            anyhow::bail!("batch_size must be positive");
+        }
+        let means = v
+            .get("means")
+            .and_then(|m| m.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("missing 'means' array"))?;
+        let batch_means = means
+            .iter()
+            .map(|m| f64_from_bits(m).ok_or_else(|| anyhow::anyhow!("bad batch mean bits")))
+            .collect::<anyhow::Result<Vec<f64>>>()?;
+        let current = v
+            .get("current")
+            .ok_or_else(|| anyhow::anyhow!("missing 'current'"))
+            .and_then(Welford::from_json)?;
+        let overall = v
+            .get("overall")
+            .ok_or_else(|| anyhow::anyhow!("missing 'overall'"))
+            .and_then(Welford::from_json)?;
+        Ok(BatchMeans {
+            batch_size,
+            current,
+            batch_means,
+            overall,
+        })
     }
 
     /// 95% CI half-width from the batch means (normal approximation,
@@ -373,6 +457,52 @@ mod tests {
         assert_eq!(a.num_batches(), single.num_batches());
         assert!((a.mean() - single.mean()).abs() < 1e-12);
         assert!((a.ci95_half_width() - single.ci95_half_width()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn welford_json_roundtrip_bit_exact() {
+        let mut w = Welford::new();
+        for i in 0..57 {
+            w.push((i as f64).sin() * 1e-7 + 3.0);
+        }
+        let wire = w.to_json().to_string();
+        let back = Welford::from_json(&Value::parse(&wire).unwrap()).unwrap();
+        assert_eq!(back.n, w.n);
+        assert_eq!(back.mean.to_bits(), w.mean.to_bits());
+        assert_eq!(back.m2.to_bits(), w.m2.to_bits());
+        assert_eq!(back.min.to_bits(), w.min.to_bits());
+        assert_eq!(back.max.to_bits(), w.max.to_bits());
+        // Empty accumulator carries ±inf min/max — must survive too.
+        let wire = Value::parse(&Welford::new().to_json().to_string()).unwrap();
+        let empty = Welford::from_json(&wire).unwrap();
+        assert_eq!(empty.min, f64::INFINITY);
+        assert_eq!(empty.max, f64::NEG_INFINITY);
+    }
+
+    #[test]
+    fn batch_means_json_roundtrip_merges_identically() {
+        let mut r = crate::util::rng::Rng::new(5);
+        let mut a = BatchMeans::new(50);
+        let mut b = BatchMeans::new(50);
+        for _ in 0..730 {
+            a.push(r.f64());
+        }
+        for _ in 0..540 {
+            b.push(r.f64());
+        }
+        let b_wire =
+            BatchMeans::from_json(&Value::parse(&b.to_json().to_string()).unwrap()).unwrap();
+        let mut direct = a.clone();
+        direct.merge(&b);
+        let mut via_wire = a.clone();
+        via_wire.merge(&b_wire);
+        assert_eq!(direct.count(), via_wire.count());
+        assert_eq!(direct.num_batches(), via_wire.num_batches());
+        assert_eq!(direct.mean().to_bits(), via_wire.mean().to_bits());
+        assert_eq!(
+            direct.ci95_half_width().to_bits(),
+            via_wire.ci95_half_width().to_bits()
+        );
     }
 
     #[test]

@@ -1,0 +1,214 @@
+//! Shard-count invariance for the sweep sharding subsystem: a sharded
+//! run must be bit-identical to the in-process run at equal (seed, R),
+//! regardless of worker count, transport, unit reissue after a worker
+//! death, or duplicate results.
+
+use quickswap::experiments::{run_unit, sweep_with, Point, SweepOpts};
+use quickswap::sweep::{proto, run_spec_local, run_worker, Driver, SweepSpec, WorkloadSpec};
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+fn smoke_spec() -> SweepSpec {
+    SweepSpec {
+        workload: WorkloadSpec::OneOrAll {
+            k: 8,
+            p1: 0.9,
+            mu1: 1.0,
+            muk: 1.0,
+        },
+        lambdas: vec![2.0, 3.0],
+        policies: vec!["msf".into(), "msfq:7".into()],
+        target_completions: 6_000,
+        warmup_completions: 1_200,
+        batch: 1000,
+        seed: 42,
+        replications: 3,
+    }
+}
+
+/// Every statistic the CSV writer and reports read must match to the bit.
+fn assert_points_bit_identical(a: &[Point], b: &[Point]) {
+    assert_eq!(a.len(), b.len(), "point count differs");
+    for (x, y) in a.iter().zip(b) {
+        let tag = format!("({}, {})", x.lambda, x.policy);
+        assert_eq!(x.policy, y.policy, "{tag}");
+        assert_eq!(x.lambda.to_bits(), y.lambda.to_bits(), "{tag}");
+        assert_eq!(x.result.policy, y.result.policy, "{tag}");
+        assert_eq!(x.result.completed, y.result.completed, "{tag}");
+        assert_eq!(x.result.events, y.result.events, "{tag}");
+        assert_eq!(
+            x.result.mean_t_all.to_bits(),
+            y.result.mean_t_all.to_bits(),
+            "{tag}"
+        );
+        assert_eq!(x.result.ci95.to_bits(), y.result.ci95.to_bits(), "{tag}");
+        assert_eq!(
+            x.result.weighted_t.to_bits(),
+            y.result.weighted_t.to_bits(),
+            "{tag}"
+        );
+        assert_eq!(x.result.jain.to_bits(), y.result.jain.to_bits(), "{tag}");
+        assert_eq!(
+            x.result.utilization.to_bits(),
+            y.result.utilization.to_bits(),
+            "{tag}"
+        );
+        assert_eq!(
+            x.result.sim_time.to_bits(),
+            y.result.sim_time.to_bits(),
+            "{tag}"
+        );
+        for c in 0..x.result.mean_t.len() {
+            assert_eq!(
+                x.result.mean_t[c].to_bits(),
+                y.result.mean_t[c].to_bits(),
+                "{tag} class {c}"
+            );
+            assert_eq!(
+                x.result.mean_n[c].to_bits(),
+                y.result.mean_n[c].to_bits(),
+                "{tag} class {c}"
+            );
+            assert_eq!(x.result.count[c], y.result.count[c], "{tag} class {c}");
+        }
+    }
+}
+
+/// The spec path and the original closure-based local path agree: the
+/// figure refactor (closures → shardable descriptions) changed nothing.
+#[test]
+fn spec_local_matches_closure_sweep() {
+    let spec = smoke_spec();
+    let via_spec = run_spec_local(&spec, 4);
+    let wl_at = |l: f64| quickswap::workload::Workload::one_or_all(8, l, 0.9, 1.0, 1.0);
+    let via_closure = sweep_with(
+        &wl_at,
+        &spec.lambdas,
+        &["msf", "msfq:7"],
+        &spec.config(),
+        spec.seed,
+        &SweepOpts {
+            replications: 3,
+            threads: 2,
+        },
+    );
+    assert_points_bit_identical(&via_spec, &via_closure);
+}
+
+/// In-process vs 1 remote worker vs 3 remote workers (threads in this
+/// process speaking real TCP): bit-identical pooled means/CIs.
+#[test]
+fn sharded_matches_inprocess_across_worker_counts() {
+    let spec = smoke_spec();
+    let base = run_spec_local(&spec, 4);
+    assert_eq!(base.len(), 4);
+    for n_workers in [1usize, 3] {
+        let driver = Driver::bind(&spec, "127.0.0.1:0").unwrap();
+        let addr = driver.local_addr().to_string();
+        let dh = std::thread::spawn(move || driver.run().unwrap());
+        let workers: Vec<_> = (0..n_workers)
+            .map(|_| {
+                let a = addr.clone();
+                std::thread::spawn(move || run_worker(&a).unwrap())
+            })
+            .collect();
+        let pts = dh.join().unwrap();
+        let served: usize = workers.into_iter().map(|w| w.join().unwrap()).sum();
+        assert!(served >= 1, "workers served nothing");
+        assert_points_bit_identical(&base, &pts);
+    }
+}
+
+/// One spawned-subprocess worker (the real `quickswap sweep --worker`
+/// binary) against an in-process driver.
+#[test]
+fn subprocess_worker_matches_inprocess() {
+    let spec = smoke_spec();
+    let base = run_spec_local(&spec, 4);
+    let driver = Driver::bind(&spec, "127.0.0.1:0").unwrap();
+    let addr = driver.local_addr().to_string();
+    let dh = std::thread::spawn(move || driver.run().unwrap());
+    let child = std::process::Command::new(env!("CARGO_BIN_EXE_quickswap"))
+        .args(["sweep", "--worker", &addr])
+        .stdout(std::process::Stdio::null())
+        .stderr(std::process::Stdio::null())
+        .spawn()
+        .expect("spawn worker subprocess");
+    let pts = dh.join().unwrap();
+    let status = child.wait_with_output().expect("worker subprocess exit");
+    assert!(status.status.success(), "worker subprocess failed");
+    assert_points_bit_identical(&base, &pts);
+}
+
+/// A worker that claims a unit and dies mid-assignment: the unit is
+/// reissued and the sweep still converges to the identical result.
+#[test]
+fn killed_worker_units_are_reissued() {
+    let spec = smoke_spec();
+    let base = run_spec_local(&spec, 4);
+    let driver = Driver::bind(&spec, "127.0.0.1:0").unwrap();
+    let addr = driver.local_addr().to_string();
+    let dh = std::thread::spawn(move || driver.run().unwrap());
+
+    // Fake worker: handshake, claim one unit, vanish without a result.
+    {
+        let stream = TcpStream::connect(&addr).unwrap();
+        let mut w = stream.try_clone().unwrap();
+        let mut r = BufReader::new(stream);
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+        proto::parse_spec(&proto::parse_line(&line).unwrap()).unwrap();
+        writeln!(w, "{}", proto::msg_next()).unwrap();
+        line.clear();
+        r.read_line(&mut line).unwrap();
+        let msg = proto::parse_line(&line).unwrap();
+        assert_eq!(proto::op_of(&msg), Some("unit"));
+        // Dropping both halves closes the connection with the unit
+        // claimed and unreported.
+    }
+
+    let served = run_worker(&addr).unwrap();
+    let pts = dh.join().unwrap();
+    // The real worker ran the whole grid, including the reissued unit.
+    assert_eq!(served, spec.grid().n_units());
+    assert_points_bit_identical(&base, &pts);
+}
+
+/// Duplicate results for a unit id are deduped: sending the same unit's
+/// result twice must neither corrupt the pool nor terminate the sweep
+/// early with units missing.
+#[test]
+fn duplicate_results_are_deduped() {
+    let spec = smoke_spec();
+    let base = run_spec_local(&spec, 4);
+    let grid = spec.grid();
+    let driver = Driver::bind(&spec, "127.0.0.1:0").unwrap();
+    let addr = driver.local_addr().to_string();
+    let dh = std::thread::spawn(move || driver.run().unwrap());
+
+    // Rogue client: computes unit 0 honestly but reports it twice,
+    // without ever claiming it via `next`.
+    {
+        let wl = spec.workload.build(grid.pts[0].0);
+        let mut cache = None;
+        let run = run_unit(&grid, &wl, 0, &mut cache).unwrap();
+        let stream = TcpStream::connect(&addr).unwrap();
+        let mut w = stream.try_clone().unwrap();
+        let mut r = BufReader::new(stream);
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap(); // spec
+        for _ in 0..2 {
+            writeln!(w, "{}", proto::msg_result(0, &run)).unwrap();
+            line.clear();
+            r.read_line(&mut line).unwrap();
+            let ack = proto::parse_line(&line).unwrap();
+            assert_eq!(proto::op_of(&ack), Some("ok"));
+        }
+    }
+
+    // A real worker finishes the rest; its own unit-0 result (unit 0 is
+    // still in the pending queue) is the duplicate on the other side.
+    run_worker(&addr).unwrap();
+    let pts = dh.join().unwrap();
+    assert_points_bit_identical(&base, &pts);
+}

@@ -1,0 +1,64 @@
+#!/usr/bin/env bash
+# Compare a fresh perf-smoke artifact against the committed events/s
+# trajectory (BENCH_perf_engine.json at the repo root).
+#
+#   scripts/bench_compare.sh <committed.json> <fresh.json>
+#
+# Gate: the headline targets (`sim_msfq:31`, `sim_borg_adaptive_qs`)
+# fail the run when they regress >30% below the committed baseline;
+# everything else — and the [0.7, 1.0) band on the gated targets — is
+# warn-only, because smoke-scale numbers on shared CI runners jitter.
+# A committed stub (empty results) or a scale mismatch skips the gate
+# with a note rather than failing.
+set -euo pipefail
+
+if [ $# -ne 2 ]; then
+    echo "usage: $0 <committed.json> <fresh.json>" >&2
+    exit 2
+fi
+if ! command -v python3 >/dev/null 2>&1; then
+    echo "note: python3 unavailable — skipping bench trajectory compare" >&2
+    exit 0
+fi
+
+python3 - "$1" "$2" <<'PYEOF'
+import json, sys
+
+committed = json.load(open(sys.argv[1]))
+fresh = json.load(open(sys.argv[2]))
+base = committed.get("results") or {}
+new = fresh.get("results") or {}
+if not new:
+    sys.exit("error: fresh bench artifact has an empty 'results' object")
+if not base:
+    print("note: committed baseline is an empty stub - nothing to compare")
+    sys.exit(0)
+if committed.get("scale") != fresh.get("scale"):
+    print(f"note: scale mismatch (committed {committed.get('scale')!r} vs "
+          f"fresh {fresh.get('scale')!r}) - comparison skipped")
+    sys.exit(0)
+
+GATED = ("sim_msfq:31", "sim_borg_adaptive_qs")
+failures = []
+print(f"events/s trajectory vs committed baseline ({committed.get('scale')} scale):")
+for name in sorted(set(base) | set(new)):
+    if name not in base:
+        print(f"  {name:<32} NEW: {new[name]:.3e}")
+        continue
+    if name not in new:
+        print(f"  {name:<32} missing from fresh run")
+        if name in GATED:
+            failures.append(f"{name} missing from fresh artifact")
+        continue
+    ratio = new[name] / base[name]
+    flag = ""
+    if name in GATED and ratio < 0.7:
+        flag = "  <-- FAIL: >30% regression"
+        failures.append(f"{name} at {ratio:.2f}x of baseline")
+    elif ratio < 1.0:
+        flag = "  (below baseline - warn only)"
+    print(f"  {name:<32} {new[name]:.3e} vs {base[name]:.3e}  ({ratio:.2f}x){flag}")
+if failures:
+    sys.exit("error: perf trajectory regression: " + "; ".join(failures))
+print("bench trajectory OK")
+PYEOF

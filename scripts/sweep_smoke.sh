@@ -1,0 +1,73 @@
+#!/usr/bin/env bash
+# Sweep-sharding smoke: run the same smoke grid twice — once in-process,
+# once as 1 driver + 2 localhost worker processes — and require the two
+# result CSVs to be byte-identical (the sharding determinism contract;
+# see EXPERIMENTS.md §Sharded sweeps). CI runs this as the `sweep-smoke`
+# job.
+#
+# Usage: scripts/sweep_smoke.sh
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+if ! command -v cargo >/dev/null 2>&1; then
+    echo "error: cargo not found in PATH — install a Rust toolchain" \
+         "(see rust-toolchain.toml) before running the sweep smoke" >&2
+    exit 1
+fi
+
+cargo build --release --bin quickswap
+BIN=target/release/quickswap
+OUT=results
+mkdir -p "$OUT"
+
+# The smoke grid: small enough to finish in seconds, big enough to give
+# every worker several units (2 λ × 3 policies × 3 reps = 18 units).
+GRID=(--workload one_or_all --k 8 --p1 0.9 --lambdas 2.0,3.0
+      --policies msf,msfq:7,fcfs --completions 6000 --seed 42 --reps 3)
+
+echo "== in-process reference run =="
+"$BIN" sweep "${GRID[@]}" --out "$OUT/sweep_inproc.csv"
+
+echo "== sharded run: driver + 2 workers =="
+rm -f "$OUT/sweep_driver.log"
+"$BIN" sweep "${GRID[@]}" --driver 127.0.0.1:0 \
+    --out "$OUT/sweep_sharded.csv" 2> "$OUT/sweep_driver.log" &
+DRIVER_PID=$!
+cleanup() { kill "$DRIVER_PID" 2>/dev/null || true; }
+trap cleanup EXIT
+
+# The driver prints its bound address to stderr; wait for it.
+ADDR=""
+for _ in $(seq 1 100); do
+    ADDR=$(sed -n 's/.*listening on //p' "$OUT/sweep_driver.log" | head -n 1)
+    [ -n "$ADDR" ] && break
+    if ! kill -0 "$DRIVER_PID" 2>/dev/null; then
+        echo "error: driver exited before binding" >&2
+        cat "$OUT/sweep_driver.log" >&2
+        exit 1
+    fi
+    sleep 0.1
+done
+if [ -z "$ADDR" ]; then
+    echo "error: driver never reported a bound address" >&2
+    cat "$OUT/sweep_driver.log" >&2
+    exit 1
+fi
+echo "driver at $ADDR"
+
+"$BIN" sweep --worker "$ADDR" &
+W1=$!
+"$BIN" sweep --worker "$ADDR" &
+W2=$!
+wait "$W1"
+wait "$W2"
+wait "$DRIVER_PID"
+trap - EXIT
+
+echo "== diff =="
+if cmp "$OUT/sweep_inproc.csv" "$OUT/sweep_sharded.csv"; then
+    echo "sweep smoke OK: sharded (2 workers) == in-process, byte-identical"
+else
+    echo "error: sharded and in-process sweep CSVs differ" >&2
+    exit 1
+fi
