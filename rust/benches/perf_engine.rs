@@ -98,6 +98,17 @@ fn main() {
     println!("  -> borg/adaptive-qs: {:.2} M events/s", rate / 1e6);
     measured.push(("sim_borg_adaptive_qs".to_string(), rate));
 
+    // 26-class MSF: stresses the queue index's Fenwick-backed
+    // descending-need admission walk (O(log C) per admitted class
+    // instead of an O(C) scan per consult).
+    let mut rate = 0.0;
+    b.bench("sim_borg_msf", || {
+        rate = events_per_sec(&mut borg_engine, &borg, "msf", 7);
+        black_box(rate);
+    });
+    println!("  -> borg/msf: {:.2} M events/s", rate / 1e6);
+    measured.push(("sim_borg_msf".to_string(), rate));
+
     let borg_nc_cfg = SimConfig {
         consult_cache: Some(false),
         ..borg_cfg

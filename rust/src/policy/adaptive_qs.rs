@@ -5,21 +5,23 @@
 //! the drain, only the largest-need queued job may enter; once it does,
 //! return to the working phase.
 //!
-//! Consult cache: the working phase reuses MSF's [`ConsultWatermark`],
-//! with the extra condition that the §4.4 trigger must not fire (a
-//! trigger flip is an observable state change); the drain phase is
-//! already O(classes) with no allocation and consults in full.
+//! Consult cache: both halves of the working-phase skip predicate come
+//! **exactly** from the driver-maintained [`crate::sim::QueueIndex`] —
+//! "no queued job fits" is the O(log C) `min_queued_need` query and the
+//! §4.4 trigger is an O(1) read of the starving/backlogged class
+//! counters. Unlike the former conservative watermark, the predicate
+//! needs no reset on swap epochs and stays exact across admission
+//! batches; the drain-phase target lookup (largest-need queued class)
+//! is an O(log C) Fenwick descent instead of an O(C) scan.
 
 use crate::policy::msf::msf_admit;
-use crate::policy::{ClassId, ConsultWatermark, Decision, PhaseLabel, Policy, SysView};
+use crate::policy::{Decision, PhaseLabel, Policy, SysView};
 
 #[derive(Debug, Default)]
 pub struct AdaptiveQuickswap {
     draining: bool,
-    by_need: Vec<usize>,
-    /// Consult cache: skip while free capacity is below the watermark
-    /// (and the drain trigger cannot fire).
-    watermark: ConsultWatermark,
+    /// Incremental consult cache enabled (engine-driven).
+    cache: bool,
 }
 
 impl AdaptiveQuickswap {
@@ -27,27 +29,22 @@ impl AdaptiveQuickswap {
         AdaptiveQuickswap::default()
     }
 
-    fn ensure_order(&mut self, needs: &[u32]) {
-        if self.by_need.len() != needs.len() {
-            let mut idx: Vec<usize> = (0..needs.len()).collect();
-            idx.sort_by_key(|&c| std::cmp::Reverse(needs[c]));
-            self.by_need = idx;
-        }
-    }
-
     /// §4.4 trigger: ∃ class queued with nothing in service, and every
-    /// class in service has an empty queue.
+    /// class in service has an empty queue. O(1) from the index counters
+    /// (debug builds cross-check the full scan).
     fn trigger(&self, sys: &SysView<'_>) -> bool {
-        let mut starving = false;
-        for c in 0..sys.needs.len() {
-            if sys.queued[c] > 0 && sys.running[c] == 0 {
-                starving = true;
+        let fast = sys.swap_trigger();
+        #[cfg(debug_assertions)]
+        {
+            let mut starving = false;
+            let mut backlogged = false;
+            for c in 0..sys.needs.len() {
+                starving |= sys.queued[c] > 0 && sys.running[c] == 0;
+                backlogged |= sys.running[c] > 0 && sys.queued[c] > 0;
             }
-            if sys.running[c] > 0 && sys.queued[c] > 0 {
-                return false; // an in-service class still has backlog
-            }
+            debug_assert_eq!(fast, starving && !backlogged, "trigger counters diverged");
         }
-        starving
+        fast
     }
 }
 
@@ -57,15 +54,9 @@ impl Policy for AdaptiveQuickswap {
     }
 
     fn schedule(&mut self, sys: &SysView<'_>, out: &mut Decision) {
-        self.ensure_order(sys.needs);
         if self.draining {
             // Only the largest-need queued job may enter service.
-            let target = self
-                .by_need
-                .iter()
-                .copied()
-                .find(|&c| sys.queued[c] > 0);
-            match target {
+            match sys.queue_index().max_queued_class() {
                 None => {
                     self.draining = false; // queue empty: resume working
                 }
@@ -80,30 +71,21 @@ impl Policy for AdaptiveQuickswap {
             }
             return;
         }
-        // Working phase. Fast path: if no queued job can fit (watermark)
-        // and the drain trigger cannot fire, the full consult would
-        // admit nothing and change nothing — skip it.
-        if self.watermark.blocks(sys.free()) && !self.trigger(sys) {
+        // Working phase. Fast path: if no queued job can fit (exact, via
+        // the index) and the drain trigger cannot fire, the full consult
+        // would admit nothing and change nothing — skip it.
+        if self.cache && sys.free() < sys.min_queued_need() && !self.trigger(sys) {
             return;
         }
         // MSF-order admission.
-        let (admitted, min_need) = msf_admit(sys, &self.by_need, out);
-        self.watermark.set(if admitted == 0 { min_need } else { 0 });
+        let admitted = msf_admit(sys, out);
         if admitted == 0 && self.trigger(sys) {
             self.draining = true;
         }
     }
 
-    fn on_arrival(&mut self, _class: ClassId, need: u32) {
-        self.watermark.observe_arrival(need);
-    }
-
-    fn on_swap_epoch(&mut self) {
-        self.watermark.reset();
-    }
-
     fn set_consult_cache(&mut self, enabled: bool) {
-        self.watermark.set_enabled(enabled);
+        self.cache = enabled;
     }
 
     fn phase_label(&self, _sys: &SysView<'_>) -> PhaseLabel {

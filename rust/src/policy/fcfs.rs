@@ -33,6 +33,16 @@ impl Policy for Fcfs {
         if self.watermark.blocks(sys.free()) {
             return; // HoL job still blocked: provably empty consult
         }
+        // Index fit check: when even the smallest queued need exceeds the
+        // free capacity (or nothing is queued at all), the scan below
+        // would walk every running job only to admit nothing. The min
+        // queued need is ≤ the HoL blocker's need, so it is a valid
+        // conservative watermark for the skip.
+        let minq = sys.min_queued_need();
+        if minq > sys.free() {
+            self.watermark.set(minq);
+            return;
+        }
         let mut free = sys.free();
         let mut blocked_need = u32::MAX;
         let admit = &mut out.admit;

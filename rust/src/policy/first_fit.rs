@@ -5,20 +5,20 @@
 //!
 //! Consult cache: First-Fit admits something iff some queued job fits,
 //! so `free < min need over queued classes` is the exact empty-consult
-//! condition (the same [`ConsultWatermark`] as MSF, maintained the same
-//! way).
+//! condition — read in O(log C) from the driver-maintained
+//! [`crate::sim::QueueIndex`]. The predicate is exact and cheap enough
+//! to evaluate on every consult, so First-Fit carries no cache state at
+//! all (`set_consult_cache` is the default no-op): cached and uncached
+//! consults are the same code path by construction.
 
-use crate::policy::{ClassId, ConsultWatermark, Decision, Policy, SysView};
+use crate::policy::{Decision, Policy, SysView};
 
 #[derive(Default, Debug)]
-pub struct FirstFit {
-    /// Consult cache: skip while free capacity is below the watermark.
-    watermark: ConsultWatermark,
-}
+pub struct FirstFit;
 
 impl FirstFit {
     pub fn new() -> FirstFit {
-        FirstFit::default()
+        FirstFit
     }
 }
 
@@ -29,27 +29,13 @@ impl Policy for FirstFit {
 
     fn schedule(&mut self, sys: &SysView<'_>, out: &mut Decision) {
         let free0 = sys.free();
-        if self.watermark.blocks(free0) {
-            return; // no queued job can fit: provably empty consult
-        }
-        // The smallest need among queued classes lets us stop the scan
-        // early once nothing can possibly fit.
-        let min_need = sys
-            .queued
-            .iter()
-            .enumerate()
-            .filter(|(_, &q)| q > 0)
-            .map(|(c, _)| sys.needs[c])
-            .min()
-            .unwrap_or(u32::MAX);
+        // Exact index fit check: the smallest need among queued classes
+        // (formerly an O(C) scan per consult).
+        let min_need = sys.min_queued_need();
         if min_need > free0 {
-            // Exact: nothing fits right now (MAX when the queue is empty).
-            self.watermark.set(min_need);
-            return;
+            return; // exact: nothing fits (MAX when the queue is empty)
         }
-        // Something fits, so this scan always admits; our admissions
-        // invalidate the watermark (on_swap_epoch resets it and the
-        // fixed-point re-consult records the fresh exact value).
+        // Something fits, so this scan always admits.
         let mut free = free0;
         let admit = &mut out.admit;
         sys.for_each_in_arrival_order(&mut |id, class, running| {
@@ -63,18 +49,6 @@ impl Policy for FirstFit {
             }
             free >= min_need // keep scanning while anything could fit
         });
-    }
-
-    fn on_arrival(&mut self, _class: ClassId, need: u32) {
-        self.watermark.observe_arrival(need);
-    }
-
-    fn on_swap_epoch(&mut self) {
-        self.watermark.reset();
-    }
-
-    fn set_consult_cache(&mut self, enabled: bool) {
-        self.watermark.set_enabled(enabled);
     }
 }
 

@@ -14,10 +14,14 @@
 //! them of state deltas between consults ([`Policy::on_arrival`],
 //! [`Policy::on_departure`], [`Policy::on_swap_epoch`]), and a policy
 //! with its consult cache enabled ([`Policy::set_consult_cache`]) may
-//! short-circuit `schedule` calls it can *prove* are no-ops — typically
-//! via a free-capacity watermark ("no queued job fits until at least W
-//! servers are free") or an O(1) phase predicate ("draining: admissions
-//! closed until the in-service class empties").
+//! short-circuit `schedule` calls it can *prove* are no-ops — via the
+//! driver-maintained [`crate::sim::QueueIndex`] (exact O(log C)
+//! "smallest queued need" and O(1) trigger counters), an O(1) phase
+//! predicate ("draining: admissions closed until the in-service class
+//! empties"), or the arrival-order prefix version for ServerFilling.
+//! Because the driver applies every delta to the index before the
+//! post-event consult, the index-backed skip predicates are **exact**,
+//! not conservative — they survive admission batches without resets.
 //!
 //! The contract is strict: a cached policy must produce **bit-identical
 //! decisions and internal state transitions** to its uncached self on
@@ -82,6 +86,10 @@ pub struct SysView<'a> {
     pub jobs: &'a crate::sim::job::JobTable,
     /// Per-class intrusive FIFO of waiting jobs (front = oldest).
     pub(crate) fifos: &'a crate::sim::job::ClassFifos,
+    /// Indexed queue summary (see [`crate::sim::QueueIndex`]): Fenwick
+    /// tree over need-ranked classes plus O(1) trigger counters, kept
+    /// exact by the driver on every arrival/admission/departure.
+    pub(crate) index: &'a crate::sim::job::QueueIndex,
 }
 
 impl SysView<'_> {
@@ -90,15 +98,35 @@ impl SysView<'_> {
         self.k - self.used
     }
 
+    /// The indexed queue summary — O(log C) fit queries and O(1)
+    /// aggregate counters maintained by the driver.
+    #[inline]
+    pub fn queue_index(&self) -> &crate::sim::job::QueueIndex {
+        self.index
+    }
+
+    /// Smallest need among queued jobs (`u32::MAX` when none): the exact
+    /// "no consult can admit below this free capacity" watermark.
+    #[inline]
+    pub fn min_queued_need(&self) -> u32 {
+        self.index.min_queued_need()
+    }
+
+    /// AdaptiveQS's §4.4 quickswap trigger, O(1) from the index.
+    #[inline]
+    pub fn swap_trigger(&self) -> bool {
+        self.index.swap_trigger()
+    }
+
     /// Total jobs in system for class `c`.
     #[inline]
     pub fn in_system(&self, c: ClassId) -> u32 {
         self.queued[c] + self.running[c]
     }
 
-    /// Total jobs in system across classes.
+    /// Total jobs in system across classes — O(1) from the index.
     pub fn total_in_system(&self) -> u32 {
-        (0..self.needs.len()).map(|c| self.in_system(c)).sum()
+        self.index.total_live()
     }
 
     /// Oldest waiting job of class `c` (front of the class FIFO).
@@ -211,10 +239,14 @@ pub fn consult_cache_enabled() -> bool {
     !matches!(std::env::var("QS_NO_CONSULT_CACHE"), Ok(v) if !v.is_empty() && v != "0")
 }
 
-/// Free-capacity watermark shared by the fit-based policies (FCFS,
-/// First-Fit, MSF, AdaptiveQS): tracks a *conservative* (never above the
-/// true value) bound `min_free` such that a consult cannot admit
-/// anything while `free < min_free`.
+/// Free-capacity watermark used by FCFS (whose skip condition — the
+/// head-of-line blocker's need — depends on arrival order, which the
+/// class-ranked [`crate::sim::QueueIndex`] does not capture): tracks a
+/// *conservative* (never above the true value) bound `min_free` such
+/// that a consult cannot admit anything while `free < min_free`. The
+/// other fit-based policies (First-Fit, MSF, AdaptiveQS) consult the
+/// index's exact [`min_queued_need`](crate::sim::QueueIndex::min_queued_need)
+/// instead and carry no watermark state at all.
 ///
 /// Invariant: whenever any job is queued, `min_free` ≤ the smallest free
 /// capacity at which the next full consult could admit a job. It is kept

@@ -3,61 +3,49 @@
 //! further job fits.
 //!
 //! Consult cache: MSF admits something iff some queued job fits, so the
-//! exact skip condition is `free < min need over queued classes` — the
-//! shared [`ConsultWatermark`]: an empty full consult records it
-//! exactly, arrivals lower it by the arriving class's need, and our own
-//! admissions reset it via [`Policy::on_swap_epoch`].
+//! exact skip condition is `free < min need over queued classes` — read
+//! straight off the driver-maintained [`crate::sim::QueueIndex`] in
+//! O(log C). No policy-side watermark state remains: the index is exact
+//! at every consult, including across admission batches.
 
-use crate::policy::{ClassId, ConsultWatermark, Decision, PhaseLabel, Policy, SysView};
+use crate::policy::{Decision, PhaseLabel, Policy, SysView};
 
 #[derive(Default, Debug)]
 pub struct Msf {
-    /// Class indices sorted by descending need (lazily computed once).
-    by_need: Vec<usize>,
-    /// Consult cache: skip while free capacity is below the watermark.
-    watermark: ConsultWatermark,
+    /// Incremental consult cache enabled (engine-driven).
+    cache: bool,
 }
 
 impl Msf {
     pub fn new() -> Msf {
         Msf::default()
     }
-
-    fn ensure_order(&mut self, needs: &[u32]) {
-        if self.by_need.len() != needs.len() {
-            let mut idx: Vec<usize> = (0..needs.len()).collect();
-            idx.sort_by_key(|&c| std::cmp::Reverse(needs[c]));
-            self.by_need = idx;
-        }
-    }
 }
 
-/// Shared MSF admission pass: admit greedily in descending-need order.
-/// Returns the number of admissions pushed and the minimum need among
-/// classes with a non-empty queue (`u32::MAX` if none) — the exact
-/// free-capacity watermark whenever nothing was admitted.
-pub(crate) fn msf_admit(sys: &SysView<'_>, by_need: &[usize], out: &mut Decision) -> (usize, u32) {
+/// Shared MSF admission pass: admit greedily in descending-need order
+/// (ties by ascending class id, FIFO within a class), walking the queue
+/// index's need-ranked Fenwick tree — each step finds the next-largest
+/// fitting class with a queued job in O(log C), skipping empty classes
+/// entirely. Returns the number of admissions pushed.
+pub(crate) fn msf_admit(sys: &SysView<'_>, out: &mut Decision) -> usize {
+    let idx = sys.queue_index();
     let mut free = sys.free();
     let mut count = 0;
-    let mut min_need = u32::MAX;
-    for &c in by_need {
-        let queued = sys.queued[c] as usize;
-        if queued == 0 {
-            continue;
-        }
-        let need = sys.needs[c];
-        min_need = min_need.min(need);
-        if need > free {
-            continue;
-        }
-        let can_take = (free / need) as usize;
-        for id in sys.queued_iter(c).take(can_take.min(queued)) {
+    let mut bound = idx.num_ranks();
+    // Ranks decrease strictly, so each class is visited at most once and
+    // the engine-maintained queued counts stay valid mid-consult.
+    while let Some(rank) = idx.max_fitting_rank_below(bound, free) {
+        let c = idx.class_at_rank(rank);
+        let need = idx.need_at_rank(rank);
+        let can_take = ((free / need) as usize).min(sys.queued[c] as usize);
+        for id in sys.queued_iter(c).take(can_take) {
             out.admit.push(id);
             free -= need;
             count += 1;
         }
+        bound = rank;
     }
-    (count, min_need)
+    count
 }
 
 impl Policy for Msf {
@@ -66,24 +54,14 @@ impl Policy for Msf {
     }
 
     fn schedule(&mut self, sys: &SysView<'_>, out: &mut Decision) {
-        if self.watermark.blocks(sys.free()) {
-            return; // no queued job can fit: provably empty consult
+        if self.cache && sys.free() < sys.min_queued_need() {
+            return; // exact: no queued job fits, the consult is empty
         }
-        self.ensure_order(sys.needs);
-        let (admitted, min_need) = msf_admit(sys, &self.by_need, out);
-        self.watermark.set(if admitted == 0 { min_need } else { 0 });
-    }
-
-    fn on_arrival(&mut self, _class: ClassId, need: u32) {
-        self.watermark.observe_arrival(need);
-    }
-
-    fn on_swap_epoch(&mut self) {
-        self.watermark.reset();
+        msf_admit(sys, out);
     }
 
     fn set_consult_cache(&mut self, enabled: bool) {
-        self.watermark.set_enabled(enabled);
+        self.cache = enabled;
     }
 
     /// In the one-or-all case MSF behaves like MSFQ with ℓ=0: label

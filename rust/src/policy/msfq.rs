@@ -118,14 +118,15 @@ impl Policy for Msfq {
         // is a no-op in Heavy mode (a heavy holds all k servers) and in
         // Drain mode (admissions closed); in Light mode it is a no-op
         // exactly when the quickswap trigger cannot fire (n₁ > ℓ) and no
-        // light can start (no free server or none waiting). Every other
-        // case admits or transitions, so it falls through to the full
-        // consult — making skips bit-identical to the uncached policy.
+        // light can start (the queue index's fit check: nothing queued
+        // or no free server). Every other case admits or transitions, so
+        // it falls through to the full consult — making skips
+        // bit-identical to the uncached policy.
         if self.cache && (sys.running[l] > 0 || sys.running[h] > 0) {
             match self.mode {
                 Mode::Heavy | Mode::Drain => return,
                 Mode::Light => {
-                    if sys.in_system(l) > self.ell && (sys.free() == 0 || sys.queued[l] == 0) {
+                    if sys.in_system(l) > self.ell && !sys.queue_index().can_admit(l, sys.free()) {
                         return;
                     }
                 }

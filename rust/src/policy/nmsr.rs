@@ -98,11 +98,13 @@ impl Policy for Nmsr {
                     return;
                 }
             } else {
+                // Fit check via the queue index's per-class counts.
+                let idx = sys.queue_index();
                 let c = self.order[self.cur];
                 let need = sys.needs[c];
                 let slots = sys.k / need;
-                let can = slots.saturating_sub(sys.running[c]).min(sys.queued[c]);
-                if can == 0 || need > sys.free() {
+                let can = slots.saturating_sub(idx.running_of(c)).min(idx.queued_of(c));
+                if can == 0 || !idx.can_admit(c, sys.free()) {
                     return;
                 }
             }

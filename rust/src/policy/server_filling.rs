@@ -7,35 +7,39 @@
 //! ≥ k servers' worth of work is present. Preemption is assumed free
 //! (preempt-resume; remaining service is tracked exactly).
 //!
-//! Consult cache: the target service set is a pure function of the
-//! arrival order, which admissions and preemptions do not touch — so
-//! applying this policy's own decision always reaches a fixed point,
-//! and the post-decision re-consult is skippable. A dirty flag set by
-//! `on_arrival`/`on_departure` (the only transitions that change the
-//! prefix) gates the full recompute; `on_swap_epoch` deliberately keeps
-//! the cache warm.
+//! Consult cache: the target service set is a pure function of prefix
+//! *membership* (plus needs), which the [`crate::sim::job::JobTable`]
+//! now maintains incrementally — the minimal arrival-order prefix with
+//! total need ≥ k, updated O(1) amortized per insert/remove, with a
+//! version counter bumped exactly when membership changes. A consult
+//! whose prefix version matches the last full recompute is provably a
+//! no-op (the running set already equals the greedy fill of an
+//! unchanged prefix): arrivals landing *beyond* the prefix — the common
+//! case in a long queue — no longer trigger a recompute at all, the
+//! former O(prefix) cumulative-sum walk is bounded by the precomputed
+//! prefix length, and the former O(n) suffix sweep for stray running
+//! jobs is skipped whenever the prefix accounts for every running job
+//! (always, in driver operation: the prefix end is monotone in arrival
+//! order, so running jobs never fall out of it).
 
-use crate::policy::{ClassId, Decision, JobId, PhaseLabel, Policy, SysView};
+use crate::policy::{Decision, JobId, PhaseLabel, Policy, SysView};
 
 #[derive(Debug)]
 pub struct ServerFilling {
-    /// Scratch: candidate prefix (id, need, running).
-    prefix: Vec<(JobId, u32, bool)>,
-    /// Scratch: selected job ids.
-    selected: Vec<JobId>,
+    /// Scratch: candidate prefix (id, need, running, selected).
+    prefix: Vec<(JobId, u32, bool, bool)>,
     /// Incremental consult cache enabled (engine-driven).
     cache: bool,
-    /// The arrival order changed since the last full consult.
-    dirty: bool,
+    /// Prefix version at the last full recompute (`u64::MAX` = none).
+    last_version: u64,
 }
 
 impl Default for ServerFilling {
     fn default() -> Self {
         ServerFilling {
             prefix: Vec::new(),
-            selected: Vec::new(),
             cache: false,
-            dirty: true,
+            last_version: u64::MAX,
         }
     }
 }
@@ -56,76 +60,78 @@ impl Policy for ServerFilling {
     }
 
     fn schedule(&mut self, sys: &SysView<'_>, out: &mut Decision) {
-        if self.cache && !self.dirty {
-            return; // arrival order unchanged: the service set is settled
+        let version = sys.jobs.prefix_version();
+        if self.cache && version == self.last_version {
+            return; // prefix membership unchanged: the set is settled
         }
-        self.dirty = false;
-        // 1. Minimal prefix with total need ≥ k (or everything).
+        self.last_version = version;
+        // 1. Collect the incrementally-maintained minimal prefix with
+        //    total need ≥ k (or everything, when the total is smaller).
         self.prefix.clear();
-        let mut total = 0u32;
-        let k = sys.k;
+        let mut left = sys.jobs.prefix_len() as usize;
+        let mut running_in_prefix = 0u32;
         let prefix = &mut self.prefix;
         sys.for_each_in_arrival_order(&mut |id, class, running| {
-            prefix.push((id, sys.needs[class], running));
-            total += sys.needs[class];
-            total < k
+            if left == 0 {
+                return false;
+            }
+            left -= 1;
+            prefix.push((id, sys.needs[class], running, false));
+            running_in_prefix += u32::from(running);
+            left > 0
         });
+        debug_assert_eq!(self.prefix.len() as u32, sys.jobs.prefix_len());
 
         // 2. Largest-need-first greedy fill within the prefix
         //    (stable: arrival order breaks ties).
-        self.prefix.sort_by_key(|&(_, need, _)| std::cmp::Reverse(need));
-        self.selected.clear();
-        let mut free = k;
-        for &(id, need, _) in self.prefix.iter() {
-            if need <= free {
-                self.selected.push(id);
-                free -= need;
+        self.prefix.sort_by_key(|&(_, need, _, _)| std::cmp::Reverse(need));
+        let mut free = sys.k;
+        for e in self.prefix.iter_mut() {
+            if e.1 <= free {
+                e.3 = true;
+                free -= e.1;
             }
         }
 
         // 3. Diff against the current service set.
-        for &(id, _, running) in self.prefix.iter() {
-            let want = self.selected.contains(&id);
-            if running && !want {
+        for &(id, _, running, sel) in self.prefix.iter() {
+            if running && !sel {
                 out.preempt.push(id);
-            } else if !running && want {
+            } else if !running && sel {
                 out.admit.push(id);
             }
         }
-        // Jobs beyond the prefix that are running must be preempted too
-        // (they can only be running due to an earlier, different prefix).
-        let in_prefix_len = self.prefix.len();
-        let prefix_ref = &self.prefix;
-        let preempt = &mut out.preempt;
-        let mut idx = 0usize;
-        sys.for_each_in_arrival_order(&mut |id, _class, running| {
-            idx += 1;
-            if idx <= in_prefix_len {
-                return true;
-            }
-            if running && !prefix_ref.iter().any(|&(p, _, _)| p == id) {
-                preempt.push(id);
-            }
-            true
-        });
+        // Jobs beyond the prefix that are running must be preempted too.
+        // The prefix end only moves forward in arrival order, so under
+        // driver operation every running job sits inside it and this
+        // sweep never runs; the index's O(1) running total proves it.
+        if running_in_prefix != sys.queue_index().running_total() {
+            let in_prefix_len = self.prefix.len();
+            let preempt = &mut out.preempt;
+            let mut idx = 0usize;
+            sys.for_each_in_arrival_order(&mut |id, _class, running| {
+                idx += 1;
+                if idx > in_prefix_len && running {
+                    preempt.push(id);
+                }
+                true
+            });
+        }
     }
 
-    fn on_arrival(&mut self, _class: ClassId, _need: u32) {
-        self.dirty = true;
-    }
-
-    fn on_departure(&mut self, _class: ClassId, _need: u32) {
-        self.dirty = true;
-    }
+    // on_arrival / on_departure: intentionally the default no-ops — the
+    // JobTable's prefix version carries exactly the invalidation signal
+    // (arrivals beyond the prefix and departures of non-members change
+    // nothing and bump nothing).
 
     // on_swap_epoch: intentionally the default no-op — applying our own
-    // decision makes the running set equal `selected` exactly, and the
-    // prefix only depends on the (unchanged) arrival order, so the
-    // fixed-point re-consult would be empty.
+    // decision makes the running set equal the greedy fill exactly, and
+    // admissions/preemptions never change prefix membership, so the
+    // fixed-point re-consult sees an unchanged version and skips.
 
     fn set_consult_cache(&mut self, enabled: bool) {
         self.cache = enabled;
-        self.dirty = true;
+        self.last_version = u64::MAX;
     }
 
     fn phase_label(&self, _sys: &SysView<'_>) -> PhaseLabel {

@@ -54,18 +54,20 @@ impl Policy for StaticQuickswap {
         // Consult-cache fast path: replicate the loop's first-iteration
         // exit conditions that provably neither admit nor mutate state —
         // mid-drain with jobs still in service, or working fully loaded.
-        // Every other case (top-up possible, drain finished, quickswap
+        // Fit checks read the queue index's per-class counts. Every
+        // other case (top-up possible, drain finished, quickswap
         // condition met) falls through to the full consult.
         if self.cache {
+            let idx = sys.queue_index();
             let c = self.cycle[self.cur];
             let need = sys.needs[c];
             let slots = sys.k / need;
             if self.draining {
-                if sys.running[c] > 0 {
+                if idx.running_of(c) > 0 {
                     return;
                 }
-            } else if (slots - sys.running[c]).min(sys.queued[c]) == 0 {
-                let busy = sys.running[c] * need;
+            } else if (slots - idx.running_of(c)).min(idx.queued_of(c)) == 0 {
+                let busy = idx.running_of(c) * need;
                 let cap = (need * slots).min(self.ell + 1);
                 if busy >= cap {
                     return;

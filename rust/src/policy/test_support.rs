@@ -4,13 +4,14 @@
 //! drives it from real-time events instead of simulated ones).
 
 use crate::policy::{Decision, JobId, Policy, SysView};
-use crate::sim::job::{ClassFifos, JobState, JobTable};
+use crate::sim::job::{ClassFifos, JobState, JobTable, QueueIndex};
 
 pub struct Harness {
     pub k: u32,
     pub needs: Vec<u32>,
     pub jobs: JobTable,
     fifos: ClassFifos,
+    index: QueueIndex,
     pub queued: Vec<u32>,
     pub running: Vec<u32>,
     used: u32,
@@ -19,11 +20,14 @@ pub struct Harness {
 
 impl Harness {
     pub fn new(k: u32, needs: &[u32]) -> Harness {
+        let mut jobs = JobTable::new();
+        jobs.set_prefix_threshold(k as u64);
         Harness {
             k,
             needs: needs.to_vec(),
-            jobs: JobTable::new(),
+            jobs,
             fifos: ClassFifos::new(needs.len()),
+            index: QueueIndex::new(needs),
             queued: vec![0; needs.len()],
             running: vec![0; needs.len()],
             used: 0,
@@ -32,6 +36,8 @@ impl Harness {
     }
 
     pub fn view(&self) -> SysView<'_> {
+        #[cfg(debug_assertions)]
+        self.index.assert_consistent(&self.queued, &self.running);
         SysView {
             now: self.now,
             k: self.k,
@@ -41,6 +47,7 @@ impl Harness {
             running: &self.running,
             jobs: &self.jobs,
             fifos: &self.fifos,
+            index: &self.index,
         }
     }
 
@@ -52,6 +59,7 @@ impl Harness {
         self.now = self.now.max(t);
         let id = self.jobs.insert(class, self.needs[class], size, t);
         self.fifos.push_back(class, JobTable::slot_of(id));
+        self.index.on_enqueue(class);
         self.queued[class] += 1;
         id
     }
@@ -72,6 +80,7 @@ impl Harness {
         let class = self.jobs.class(id);
         let need = self.jobs.need(id);
         self.used -= need;
+        self.index.on_depart(class);
         self.running[class] -= 1;
         self.jobs.remove(id);
     }
@@ -118,6 +127,7 @@ impl Harness {
         let class = self.jobs.class(id);
         let need = self.jobs.need(id);
         self.used -= need;
+        self.index.on_preempt(class);
         self.running[class] -= 1;
         self.queued[class] += 1;
         self.fifos.push_front(class, JobTable::slot_of(id));
@@ -131,6 +141,7 @@ impl Harness {
         self.fifos.remove(class, JobTable::slot_of(id));
         self.jobs.start_service(id, self.now);
         self.used += need;
+        self.index.on_admit(class);
         self.running[class] += 1;
         self.queued[class] -= 1;
     }

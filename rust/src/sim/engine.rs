@@ -27,7 +27,7 @@
 
 use crate::policy::{Decision, JobId, Policy, SysView};
 use crate::sim::events::{EventKind, EventQueue};
-use crate::sim::job::{ClassFifos, JobTable};
+use crate::sim::job::{ClassFifos, JobTable, QueueIndex};
 use crate::sim::metrics::{Metrics, SimResult};
 use crate::sim::phase::PhaseStats;
 use crate::sim::timeseries::{Timeseries, TimeseriesSpec};
@@ -96,6 +96,9 @@ pub struct Engine {
     jobs: JobTable,
     /// Per-class intrusive FIFO of waiting jobs.
     fifos: ClassFifos,
+    /// Indexed queue summary (Fenwick over need-ranked classes, trigger
+    /// counters) the policies consult in O(log C) instead of scanning.
+    index: QueueIndex,
     queued: Vec<u32>,
     running: Vec<u32>,
     n_by_class: Vec<u32>,
@@ -118,6 +121,8 @@ impl Engine {
     pub fn new(wl: &Workload, cfg: SimConfig) -> Engine {
         let nc = wl.num_classes();
         let ts = cfg.timeseries.as_ref().map(|s| Timeseries::new(s, nc));
+        let mut jobs = JobTable::new();
+        jobs.set_prefix_threshold(wl.k as u64);
         Engine {
             k: wl.k,
             needs: wl.needs(),
@@ -125,8 +130,9 @@ impl Engine {
             cfg,
             wl: wl.clone(),
             now: 0.0,
-            jobs: JobTable::new(),
+            jobs,
             fifos: ClassFifos::new(nc),
+            index: QueueIndex::new(&wl.needs()),
             queued: vec![0; nc],
             running: vec![0; nc],
             n_by_class: vec![0; nc],
@@ -150,6 +156,7 @@ impl Engine {
         self.now = 0.0;
         self.jobs.clear();
         self.fifos.clear();
+        self.index.clear();
         for q in &mut self.queued {
             *q = 0;
         }
@@ -186,6 +193,8 @@ impl Engine {
     }
 
     fn view(&self) -> SysView<'_> {
+        #[cfg(debug_assertions)]
+        self.index.assert_consistent(&self.queued, &self.running);
         SysView {
             now: self.now,
             k: self.k,
@@ -195,6 +204,7 @@ impl Engine {
             running: &self.running,
             jobs: &self.jobs,
             fifos: &self.fifos,
+            index: &self.index,
         }
     }
 
@@ -297,6 +307,9 @@ impl Engine {
         }
 
         self.phases.finish(self.now);
+        // Fold any responses still sitting in the deferred-accumulation
+        // buffer before anything reads the accumulators.
+        self.metrics.flush_responses();
         let mut result = SimResult::from_metrics(
             &policy.name(),
             &self.metrics,
@@ -319,6 +332,7 @@ impl Engine {
         debug_assert!(a.size >= 0.0);
         let id = self.jobs.insert(a.class, need, a.size, a.t);
         self.fifos.push_back(a.class, JobTable::slot_of(id));
+        self.index.on_enqueue(a.class);
         self.queued[a.class] += 1;
         self.n_by_class[a.class] += 1;
         self.metrics
@@ -331,6 +345,7 @@ impl Engine {
         let need = self.jobs.need(id);
         let arrival = self.jobs.arrival(id);
         self.used -= need;
+        self.index.on_depart(class);
         self.running[class] -= 1;
         self.n_by_class[class] -= 1;
         self.jobs.remove(id);
@@ -382,6 +397,7 @@ impl Engine {
         let class = self.jobs.class(id);
         let need = self.jobs.need(id);
         self.used -= need;
+        self.index.on_preempt(class);
         self.running[class] -= 1;
         self.queued[class] += 1;
         // Preempted jobs rejoin the front of their class FIFO; the
@@ -411,6 +427,7 @@ impl Engine {
         self.jobs.start_service(id, self.now);
         let depart_at = self.now + self.jobs.remaining(id);
         self.used += need;
+        self.index.on_admit(class);
         self.running[class] += 1;
         self.queued[class] -= 1;
         self.events

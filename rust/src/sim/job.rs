@@ -32,6 +32,312 @@ pub enum JobState {
     Free,
 }
 
+/// Fenwick (binary indexed) tree of u32 counts over class ranks — the
+/// O(log C) substrate of [`QueueIndex`]. Internally 1-indexed; the
+/// public API is 0-indexed.
+#[derive(Debug, Default)]
+pub struct Fenwick {
+    tree: Vec<u32>,
+}
+
+impl Fenwick {
+    pub fn new(n: usize) -> Fenwick {
+        Fenwick {
+            tree: vec![0; n + 1],
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.tree.len() - 1
+    }
+
+    pub fn clear(&mut self) {
+        self.tree.fill(0);
+    }
+
+    #[inline]
+    pub fn inc(&mut self, i: usize) {
+        let mut i = i + 1;
+        while i < self.tree.len() {
+            self.tree[i] += 1;
+            i += i & i.wrapping_neg();
+        }
+    }
+
+    #[inline]
+    pub fn dec(&mut self, i: usize) {
+        let mut i = i + 1;
+        while i < self.tree.len() {
+            self.tree[i] -= 1;
+            i += i & i.wrapping_neg();
+        }
+    }
+
+    /// Sum of the first `n` entries (indices 0..n).
+    #[inline]
+    pub fn prefix(&self, n: usize) -> u32 {
+        let mut i = n.min(self.len());
+        let mut s = 0;
+        while i > 0 {
+            s += self.tree[i];
+            i -= i & i.wrapping_neg();
+        }
+        s
+    }
+
+    /// Smallest 0-based index `r` with `prefix(r + 1) >= k`; requires
+    /// `1 <= k <= prefix(len)`.
+    #[inline]
+    pub fn select(&self, mut k: u32) -> usize {
+        debug_assert!(k >= 1);
+        let mut pos = 0usize;
+        let mut pw = self.len().next_power_of_two();
+        while pw > 0 {
+            let npos = pos + pw;
+            if npos < self.tree.len() && self.tree[npos] < k {
+                k -= self.tree[npos];
+                pos = npos;
+            }
+            pw >>= 1;
+        }
+        pos
+    }
+}
+
+/// Indexed summary of the queue state, maintained by the event driver
+/// (engine / harness) in O(log C) per transition and consulted by every
+/// policy instead of O(C) scans:
+///
+/// * classes are ranked by **(need ascending, class id descending)**, so
+///   a descending-rank walk visits classes in exactly the MSF admission
+///   order (need descending, ties by ascending class id — the stable
+///   `sort_by_key(Reverse(need))` order the policies used before);
+/// * a [`Fenwick`] tree over ranks holds per-class queued counts, giving
+///   "smallest queued need" (the exact fit watermark shared by
+///   FCFS / First-Fit / MSF / AdaptiveQS) and "largest queued class
+///   fitting in `free` servers" in O(log C);
+/// * O(1) counters track totals and the class-status sets behind
+///   AdaptiveQS's §4.4 quickswap trigger: `starving` (queued > 0,
+///   running = 0) and `backlogged` (queued > 0, running > 0).
+///
+/// Because the driver applies every state delta to the index *before*
+/// the post-event consult, these queries are **exact** at consult time —
+/// unlike the former conservative watermarks, they stay exact across
+/// admission batches and need no reset on swap epochs.
+#[derive(Debug, Default)]
+pub struct QueueIndex {
+    /// Class need per class id.
+    needs: Vec<u32>,
+    /// class id -> rank in (need asc, class id desc) order.
+    rank_of: Vec<u32>,
+    /// rank -> class id.
+    class_of_rank: Vec<u32>,
+    /// rank -> need (ascending in rank).
+    need_of_rank: Vec<u32>,
+    /// Queued counts per rank.
+    tree: Fenwick,
+    /// Per-class queued / running mirrors (authoritative for the index).
+    queued: Vec<u32>,
+    running: Vec<u32>,
+    total_queued: u32,
+    total_running: u32,
+    /// Classes with queued > 0 && running == 0.
+    starving: u32,
+    /// Classes with queued > 0 && running > 0.
+    backlogged: u32,
+}
+
+impl QueueIndex {
+    pub fn new(needs: &[u32]) -> QueueIndex {
+        let mut ranks: Vec<usize> = (0..needs.len()).collect();
+        ranks.sort_by_key(|&c| (needs[c], std::cmp::Reverse(c)));
+        let mut rank_of = vec![0u32; needs.len()];
+        for (r, &c) in ranks.iter().enumerate() {
+            rank_of[c] = r as u32;
+        }
+        QueueIndex {
+            needs: needs.to_vec(),
+            rank_of,
+            need_of_rank: ranks.iter().map(|&c| needs[c]).collect(),
+            class_of_rank: ranks.iter().map(|&c| c as u32).collect(),
+            tree: Fenwick::new(needs.len()),
+            queued: vec![0; needs.len()],
+            running: vec![0; needs.len()],
+            total_queued: 0,
+            total_running: 0,
+            starving: 0,
+            backlogged: 0,
+        }
+    }
+
+    /// Empty the index (all counts zero), retaining the rank tables.
+    pub fn clear(&mut self) {
+        self.tree.clear();
+        self.queued.fill(0);
+        self.running.fill(0);
+        self.total_queued = 0;
+        self.total_running = 0;
+        self.starving = 0;
+        self.backlogged = 0;
+    }
+
+    #[inline]
+    fn status_delta(starving: &mut u32, backlogged: &mut u32, q: u32, r: u32, on: bool) {
+        let d: i32 = if on { 1 } else { -1 };
+        if q > 0 && r == 0 {
+            *starving = starving.wrapping_add_signed(d);
+        } else if q > 0 {
+            *backlogged = backlogged.wrapping_add_signed(d);
+        }
+    }
+
+    /// Apply a (queued, running) delta to class `c`, keeping every
+    /// derived structure in sync.
+    #[inline]
+    fn apply(&mut self, c: ClassId, dq: i32, dr: i32) {
+        let (q, r) = (self.queued[c], self.running[c]);
+        Self::status_delta(&mut self.starving, &mut self.backlogged, q, r, false);
+        let (nq, nr) = (q.wrapping_add_signed(dq), r.wrapping_add_signed(dr));
+        self.queued[c] = nq;
+        self.running[c] = nr;
+        Self::status_delta(&mut self.starving, &mut self.backlogged, nq, nr, true);
+        match dq {
+            1 => {
+                self.tree.inc(self.rank_of[c] as usize);
+                self.total_queued += 1;
+            }
+            -1 => {
+                self.tree.dec(self.rank_of[c] as usize);
+                self.total_queued -= 1;
+            }
+            _ => {}
+        }
+        self.total_running = self.total_running.wrapping_add_signed(dr);
+    }
+
+    /// A job of class `c` joined the waiting queue (arrival).
+    pub fn on_enqueue(&mut self, c: ClassId) {
+        self.apply(c, 1, 0);
+    }
+
+    /// A queued job of class `c` entered service.
+    pub fn on_admit(&mut self, c: ClassId) {
+        self.apply(c, -1, 1);
+    }
+
+    /// A running job of class `c` completed and left the system.
+    pub fn on_depart(&mut self, c: ClassId) {
+        self.apply(c, 0, -1);
+    }
+
+    /// A running job of class `c` was preempted back into the queue.
+    pub fn on_preempt(&mut self, c: ClassId) {
+        self.apply(c, 1, -1);
+    }
+
+    // ---- O(1) / O(log C) queries ----
+
+    pub fn num_ranks(&self) -> usize {
+        self.need_of_rank.len()
+    }
+
+    #[inline]
+    pub fn class_at_rank(&self, r: usize) -> ClassId {
+        self.class_of_rank[r] as ClassId
+    }
+
+    #[inline]
+    pub fn need_at_rank(&self, r: usize) -> u32 {
+        self.need_of_rank[r]
+    }
+
+    #[inline]
+    pub fn queued_of(&self, c: ClassId) -> u32 {
+        self.queued[c]
+    }
+
+    #[inline]
+    pub fn running_of(&self, c: ClassId) -> u32 {
+        self.running[c]
+    }
+
+    #[inline]
+    pub fn queued_total(&self) -> u32 {
+        self.total_queued
+    }
+
+    #[inline]
+    pub fn running_total(&self) -> u32 {
+        self.total_running
+    }
+
+    /// Jobs in system (queued + running) across classes.
+    #[inline]
+    pub fn total_live(&self) -> u32 {
+        self.total_queued + self.total_running
+    }
+
+    /// Smallest need among classes with a queued job (`u32::MAX` when
+    /// nothing is queued) — the **exact** admit-possible watermark for
+    /// fit-based policies: no consult can admit while `free` is below it.
+    #[inline]
+    pub fn min_queued_need(&self) -> u32 {
+        if self.total_queued == 0 {
+            u32::MAX
+        } else {
+            self.need_of_rank[self.tree.select(1)]
+        }
+    }
+
+    /// Largest rank `< bound` with a queued job and need ≤ `free`.
+    /// Walking `bound` downward through successive answers visits
+    /// classes in MSF admission order, skipping empty ones in O(log C).
+    #[inline]
+    pub fn max_fitting_rank_below(&self, bound: usize, free: u32) -> Option<usize> {
+        let hi = self.need_of_rank.partition_point(|&n| n <= free).min(bound);
+        let cnt = self.tree.prefix(hi);
+        if cnt == 0 {
+            None
+        } else {
+            Some(self.tree.select(cnt))
+        }
+    }
+
+    /// Largest-need class with a queued job (ties: smallest class id),
+    /// irrespective of fit — AdaptiveQS's drain target.
+    #[inline]
+    pub fn max_queued_class(&self) -> Option<ClassId> {
+        self.max_fitting_rank_below(self.num_ranks(), u32::MAX)
+            .map(|r| self.class_at_rank(r))
+    }
+
+    /// True iff class `c` could start a job right now: something queued
+    /// and its need fits in `free` servers.
+    #[inline]
+    pub fn can_admit(&self, c: ClassId, free: u32) -> bool {
+        self.queued[c] > 0 && self.needs[c] <= free
+    }
+
+    /// AdaptiveQS's §4.4 quickswap trigger, O(1): some class is starving
+    /// (queued with nothing in service) while no in-service class has
+    /// backlog.
+    #[inline]
+    pub fn swap_trigger(&self) -> bool {
+        self.starving > 0 && self.backlogged == 0
+    }
+
+    /// Debug-build consistency check against the driver's own counts.
+    pub fn assert_consistent(&self, queued: &[u32], running: &[u32]) {
+        debug_assert_eq!(self.queued, queued, "index queued counts diverged");
+        debug_assert_eq!(self.running, running, "index running counts diverged");
+        debug_assert_eq!(
+            self.tree.prefix(self.num_ranks()),
+            self.total_queued,
+            "Fenwick total diverged"
+        );
+    }
+}
+
 const NIL: u32 = u32::MAX;
 
 #[inline]
@@ -82,6 +388,23 @@ pub struct JobTable {
     ord_tail: u32,
     free_head: u32,
     live: usize,
+
+    // ---- incremental arrival-order prefix (ServerFilling) ----
+    // The minimal prefix of the arrival-order list whose total need
+    // reaches `pfx_threshold` (or the whole list while the total is
+    // smaller), maintained O(1) amortized across insert/remove: arrivals
+    // append to the prefix only while its total is short, and a removal
+    // inside the prefix extends the end forward. The prefix end is
+    // monotone in arrival order, so a membership flag per slot suffices.
+    // `pfx_version` bumps exactly when membership changes — the basis of
+    // ServerFilling's exact consult skip (the target service set is a
+    // pure function of prefix membership).
+    pfx_threshold: u64,
+    pfx_total: u64,
+    pfx_len: u32,
+    pfx_end: u32,
+    pfx_version: u64,
+    in_pfx: Vec<bool>,
 }
 
 impl Default for JobTable {
@@ -108,7 +431,40 @@ impl JobTable {
             ord_tail: NIL,
             free_head: NIL,
             live: 0,
+            pfx_threshold: u64::MAX,
+            pfx_total: 0,
+            pfx_len: 0,
+            pfx_end: NIL,
+            pfx_version: 0,
+            in_pfx: Vec::new(),
         }
+    }
+
+    /// Configure the arrival-order prefix threshold (the system's server
+    /// count `k` for ServerFilling's "minimal prefix with total need
+    /// ≥ k"). Must be set before any job is inserted; the default
+    /// `u64::MAX` keeps the whole list in the prefix.
+    pub fn set_prefix_threshold(&mut self, k: u64) {
+        assert!(self.is_empty(), "prefix threshold must be set on an empty table");
+        self.pfx_threshold = k;
+    }
+
+    /// Monotone counter bumped whenever prefix *membership* changes.
+    #[inline]
+    pub fn prefix_version(&self) -> u64 {
+        self.pfx_version
+    }
+
+    /// Number of jobs in the arrival-order prefix.
+    #[inline]
+    pub fn prefix_len(&self) -> u32 {
+        self.pfx_len
+    }
+
+    /// Total need of the prefix members.
+    #[inline]
+    pub fn prefix_total(&self) -> u64 {
+        self.pfx_total
     }
 
     /// The slab slot an id refers to (valid whether or not the id is
@@ -155,6 +511,7 @@ impl JobTable {
             self.next_free.push(NIL);
             self.ord_prev.push(NIL);
             self.ord_next.push(NIL);
+            self.in_pfx.push(false);
             (self.state.len() - 1) as u32
         };
         // Link at the arrival-order tail.
@@ -167,12 +524,33 @@ impl JobTable {
             self.ord_head = slot;
         }
         self.ord_tail = slot;
+        // A new tail job joins the prefix only while the prefix is short
+        // of the threshold (it then is the minimal crossing element).
+        if self.pfx_total < self.pfx_threshold {
+            self.in_pfx[i] = true;
+            self.pfx_total += need as u64;
+            self.pfx_len += 1;
+            self.pfx_end = slot;
+            self.pfx_version += 1;
+        }
         pack(self.gen[i], slot)
     }
 
     pub fn remove(&mut self, id: JobId) {
         let i = self.slot_checked(id);
         debug_assert!(self.state[i] != JobState::Free, "double remove");
+        // Prefix bookkeeping, phase 1 (needs the links still intact):
+        // drop the job from the prefix and back the end pointer off it.
+        let was_pfx = self.in_pfx[i];
+        if was_pfx {
+            self.in_pfx[i] = false;
+            self.pfx_total -= self.need[i] as u64;
+            self.pfx_len -= 1;
+            self.pfx_version += 1;
+            if self.pfx_end == i as u32 {
+                self.pfx_end = self.ord_prev[i];
+            }
+        }
         // Unlink from the arrival-order list.
         let (p, n) = (self.ord_prev[i], self.ord_next[i]);
         if p != NIL {
@@ -191,6 +569,26 @@ impl JobTable {
         self.next_free[i] = self.free_head;
         self.free_head = i as u32;
         self.live -= 1;
+        // Phase 2: extend the prefix end forward until the total crosses
+        // the threshold again (amortized O(1): every job enters the
+        // prefix at most once per stay in the system).
+        if was_pfx {
+            while self.pfx_total < self.pfx_threshold {
+                let next = if self.pfx_end == NIL {
+                    self.ord_head
+                } else {
+                    self.ord_next[self.pfx_end as usize]
+                };
+                if next == NIL {
+                    break;
+                }
+                let j = next as usize;
+                self.in_pfx[j] = true;
+                self.pfx_total += self.need[j] as u64;
+                self.pfx_len += 1;
+                self.pfx_end = next;
+            }
+        }
     }
 
     // ---- accessors (panic on stale ids, like the former `get`) ----
@@ -349,6 +747,13 @@ impl JobTable {
         self.ord_tail = NIL;
         self.free_head = NIL;
         self.live = 0;
+        // Prefix state resets to fresh-construction values; the
+        // configured threshold survives (an engine reset keeps its k).
+        self.pfx_total = 0;
+        self.pfx_len = 0;
+        self.pfx_end = NIL;
+        self.pfx_version = 0;
+        self.in_pfx.clear();
     }
 }
 
@@ -564,6 +969,153 @@ mod tests {
         let b = t.insert(3, 2, 9.0, 0.0);
         let fresh = JobTable::new().insert(3, 2, 9.0, 0.0);
         assert_eq!(b, fresh, "reset table must mint the same ids as a fresh one");
+    }
+
+    /// Brute-force twin of every QueueIndex query.
+    struct Brute {
+        needs: Vec<u32>,
+        queued: Vec<u32>,
+        running: Vec<u32>,
+    }
+
+    impl Brute {
+        fn min_queued_need(&self) -> u32 {
+            (0..self.needs.len())
+                .filter(|&c| self.queued[c] > 0)
+                .map(|c| self.needs[c])
+                .min()
+                .unwrap_or(u32::MAX)
+        }
+
+        fn max_fitting(&self, free: u32) -> Option<usize> {
+            (0..self.needs.len())
+                .filter(|&c| self.queued[c] > 0 && self.needs[c] <= free)
+                .max_by_key(|&c| (self.needs[c], std::cmp::Reverse(c)))
+        }
+
+        fn trigger(&self) -> bool {
+            let starving =
+                (0..self.needs.len()).any(|c| self.queued[c] > 0 && self.running[c] == 0);
+            let backlogged =
+                (0..self.needs.len()).any(|c| self.queued[c] > 0 && self.running[c] > 0);
+            starving && !backlogged
+        }
+    }
+
+    /// Random transition sequences: every index query must match the
+    /// brute-force recompute after every step.
+    #[test]
+    fn queue_index_matches_brute_force() {
+        let mut rng = crate::util::rng::Rng::new(0x51eed);
+        for _ in 0..200 {
+            let k = 2 + rng.below(30) as u32;
+            let nc = 1 + rng.index(6);
+            let needs: Vec<u32> = (0..nc).map(|_| 1 + rng.below(k as u64) as u32).collect();
+            let mut idx = QueueIndex::new(&needs);
+            let mut brute = Brute {
+                needs: needs.clone(),
+                queued: vec![0; nc],
+                running: vec![0; nc],
+            };
+            for _ in 0..120 {
+                let c = rng.index(nc);
+                match rng.index(4) {
+                    0 => {
+                        idx.on_enqueue(c);
+                        brute.queued[c] += 1;
+                    }
+                    1 if brute.queued[c] > 0 => {
+                        idx.on_admit(c);
+                        brute.queued[c] -= 1;
+                        brute.running[c] += 1;
+                    }
+                    2 if brute.running[c] > 0 => {
+                        idx.on_depart(c);
+                        brute.running[c] -= 1;
+                    }
+                    3 if brute.running[c] > 0 => {
+                        idx.on_preempt(c);
+                        brute.running[c] -= 1;
+                        brute.queued[c] += 1;
+                    }
+                    _ => continue,
+                }
+                idx.assert_consistent(&brute.queued, &brute.running);
+                assert_eq!(idx.min_queued_need(), brute.min_queued_need());
+                assert_eq!(idx.swap_trigger(), brute.trigger());
+                assert_eq!(
+                    idx.total_live(),
+                    brute.queued.iter().sum::<u32>() + brute.running.iter().sum::<u32>()
+                );
+                let free = rng.below(k as u64 + 1) as u32;
+                assert_eq!(
+                    idx.max_fitting_rank_below(idx.num_ranks(), free)
+                        .map(|r| idx.class_at_rank(r)),
+                    brute.max_fitting(free),
+                    "free={free} needs={needs:?} queued={:?}",
+                    brute.queued
+                );
+            }
+        }
+    }
+
+    /// The descending-rank walk visits classes in MSF order: need
+    /// descending, ties by ascending class id.
+    #[test]
+    fn queue_index_rank_walk_is_msf_order() {
+        // Classes: needs 4, 2, 4, 1 — two classes tie at need 4.
+        let needs = [4u32, 2, 4, 1];
+        let mut idx = QueueIndex::new(&needs);
+        for c in 0..needs.len() {
+            idx.on_enqueue(c);
+        }
+        let mut seen = Vec::new();
+        let mut bound = idx.num_ranks();
+        while let Some(r) = idx.max_fitting_rank_below(bound, u32::MAX) {
+            seen.push(idx.class_at_rank(r));
+            bound = r;
+        }
+        assert_eq!(seen, vec![0, 2, 1, 3]);
+    }
+
+    /// The arrival-order prefix tracks the minimal crossing prefix
+    /// through inserts and removals at every position.
+    #[test]
+    fn prefix_cursor_is_minimal_crossing() {
+        let mut t = JobTable::new();
+        t.set_prefix_threshold(10);
+        let v0 = t.prefix_version();
+        let a = t.insert(0, 5, 1.0, 0.0); // cum 5  -> in prefix
+        let b = t.insert(0, 2, 1.0, 0.1); // cum 7  -> in prefix
+        let c = t.insert(0, 4, 1.0, 0.2); // cum 11 -> crossing member
+        assert_eq!(t.prefix_len(), 3);
+        assert_eq!(t.prefix_total(), 11);
+        // A tail arrival beyond the crossing point changes nothing.
+        let d = t.insert(0, 3, 1.0, 0.3);
+        let v1 = t.prefix_version();
+        let e = t.insert(0, 8, 1.0, 0.4);
+        assert_eq!(t.prefix_version(), v1, "beyond-prefix arrival must not bump");
+        assert_eq!(t.prefix_len(), 3);
+        assert!(t.prefix_version() > v0);
+        // Removing a mid-prefix member extends the end forward.
+        t.remove(b); // cum: 5, 9 -> extends over d: 12
+        assert_eq!(t.prefix_len(), 3);
+        assert_eq!(t.prefix_total(), 12);
+        // Removing a non-member leaves the prefix alone.
+        let v2 = t.prefix_version();
+        t.remove(e);
+        assert_eq!(t.prefix_version(), v2);
+        // Draining below the threshold keeps the whole list in.
+        t.remove(a);
+        t.remove(c);
+        assert_eq!(t.prefix_len(), 1);
+        assert_eq!(t.prefix_total(), 3);
+        t.remove(d);
+        assert_eq!(t.prefix_len(), 0);
+        assert_eq!(t.prefix_total(), 0);
+        // New arrivals re-enter the (short) prefix.
+        t.insert(0, 1, 1.0, 1.0);
+        assert_eq!(t.prefix_len(), 1);
     }
 
     #[test]

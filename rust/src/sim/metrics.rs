@@ -7,9 +7,19 @@ use crate::util::json::{f64_bits, f64_from_bits, Value};
 use crate::util::stats::{jain_index, BatchMeans, TimeAverage, Welford};
 use crate::workload::Workload;
 
+/// Departure responses are buffered in a flat `(class, response)` array
+/// and folded into the Welford / batch-means accumulators in chunks of
+/// this size, keeping the per-event hot path to one `Vec` push and the
+/// accumulator state out of the event loop's cache footprint. The fold
+/// replays samples **in append order**, so the resulting accumulator
+/// state is bit-identical to per-event scalar updates.
+const RESPONSE_CHUNK: usize = 256;
+
 /// Collects per-class and aggregate statistics; `reset_at` is called at
 /// the end of warmup so reported numbers cover only the measurement
-/// window.
+/// window. Response samples accumulate deferred (see [`RESPONSE_CHUNK`]);
+/// call [`Metrics::flush_responses`] before reading the accumulators —
+/// [`crate::sim::Engine::run`] does this before building its result.
 #[derive(Clone)]
 pub struct Metrics {
     /// Response-time accumulators per class.
@@ -24,6 +34,9 @@ pub struct Metrics {
     pub completed: u64,
     /// Measurement window start.
     pub window_start: f64,
+    /// Deferred (class, response) samples not yet folded into
+    /// `resp` / `resp_all`.
+    pending: Vec<(u32, f64)>,
     batch: u64,
 }
 
@@ -36,14 +49,29 @@ impl Metrics {
             busy_avg: TimeAverage::new(),
             completed: 0,
             window_start: 0.0,
+            pending: Vec::with_capacity(RESPONSE_CHUNK),
             batch,
         }
     }
 
     pub fn record_response(&mut self, class: usize, t: f64) {
-        self.resp[class].push(t);
-        self.resp_all.push(t);
         self.completed += 1;
+        self.pending.push((class as u32, t));
+        if self.pending.len() >= RESPONSE_CHUNK {
+            self.flush_responses();
+        }
+    }
+
+    /// Fold the deferred response buffer into the accumulators, in
+    /// append order (bit-identical to immediate per-event updates).
+    pub fn flush_responses(&mut self) {
+        let mut pending = std::mem::take(&mut self.pending);
+        for &(c, t) in &pending {
+            self.resp[c as usize].push(t);
+            self.resp_all.push(t);
+        }
+        pending.clear();
+        self.pending = pending;
     }
 
     pub fn occupancy_changed(&mut self, now: f64, class: usize, n: u32) {
@@ -57,6 +85,7 @@ impl Metrics {
     /// Drop warmup samples: zero all accumulators but re-seed the
     /// time-averages at the current occupancy.
     pub fn reset_at(&mut self, now: f64, n_by_class: &[u32], busy: u32) {
+        self.pending.clear();
         for w in &mut self.resp {
             *w = Welford::new();
         }
@@ -74,6 +103,7 @@ impl Metrics {
     /// Zero everything back to construction state, retaining buffer
     /// allocations (engine reuse across replications).
     pub fn reset_full(&mut self) {
+        self.pending.clear();
         for w in &mut self.resp {
             *w = Welford::new();
         }
@@ -153,6 +183,7 @@ impl SimResult {
         events: u64,
         wall_s: f64,
     ) -> SimResult {
+        debug_assert!(m.pending.is_empty(), "flush_responses before reducing Metrics");
         let mean_t: Vec<f64> = m.resp.iter().map(|w| w.mean()).collect();
         let count: Vec<u64> = m.resp.iter().map(|w| w.count()).collect();
         let mean_n: Vec<f64> = m.n_avg.iter().map(|ta| ta.average(now)).collect();
@@ -217,6 +248,7 @@ impl UnitStats {
     /// Reduce a finished run's metrics. `now` is the final virtual time;
     /// `events`/`wall_s` the run's event count and wall clock.
     pub fn from_metrics(m: &Metrics, now: f64, events: u64, wall_s: f64) -> UnitStats {
+        debug_assert!(m.pending.is_empty(), "flush_responses before reducing Metrics");
         UnitStats {
             resp: m.resp.clone(),
             resp_all: m.resp_all.clone(),
@@ -418,6 +450,7 @@ mod tests {
             m.record_response(0, 1.0);
             m.record_response(1, 3.0);
         }
+        m.flush_responses();
         m.n_avg[0].update(0.0, 1.0);
         m.n_avg[1].update(0.0, 1.0);
         m.busy_avg.update(0.0, 2.0);
@@ -426,6 +459,38 @@ mod tests {
         assert!((r.weighted_t - 2.0).abs() < 1e-12);
         assert!((r.mean_t_all - 2.0).abs() < 1e-12);
         assert!((r.utilization - 0.5).abs() < 1e-12);
+    }
+
+    /// The deferred (class, response) buffer folds in append order, so
+    /// the accumulator state — across several full chunks plus a partial
+    /// tail — must be bit-identical to immediate per-event updates.
+    #[test]
+    fn deferred_fold_bit_identical_to_immediate() {
+        let mut r = crate::util::rng::Rng::new(9);
+        let samples: Vec<(usize, f64)> = (0..1000).map(|_| (r.index(2), r.f64() * 5.0)).collect();
+        let mut deferred = Metrics::new(2, 7);
+        for &(c, t) in &samples {
+            deferred.record_response(c, t);
+        }
+        deferred.flush_responses();
+        let mut direct = Metrics::new(2, 7);
+        for &(c, t) in &samples {
+            direct.resp[c].push(t);
+            direct.resp_all.push(t);
+            direct.completed += 1;
+        }
+        for c in 0..2 {
+            assert_eq!(
+                deferred.resp[c].to_json().to_string(),
+                direct.resp[c].to_json().to_string(),
+                "class {c} accumulator diverged"
+            );
+        }
+        assert_eq!(
+            deferred.resp_all.to_json().to_string(),
+            direct.resp_all.to_json().to_string()
+        );
+        assert_eq!(deferred.completed, direct.completed);
     }
 
     /// Absorbing a UnitStats that went through the JSON wire format must
@@ -438,6 +503,7 @@ mod tests {
         for i in 0..40 {
             m.record_response(i % 2, r.f64() * 7.0);
         }
+        m.flush_responses();
         m.n_avg[0].update(0.0, 1.0);
         m.n_avg[1].update(2.0, 2.0);
         m.busy_avg.update(0.0, 3.0);
@@ -474,6 +540,7 @@ mod tests {
             for &x in responses {
                 m.record_response(0, x);
             }
+            m.flush_responses();
             m.n_avg[0].update(0.0, 1.0);
             m.n_avg[1].update(0.0, 0.0);
             m.busy_avg.update(0.0, 2.0);

@@ -8,6 +8,7 @@ pub mod phase;
 pub mod timeseries;
 
 pub use engine::{Engine, SimConfig};
+pub use job::QueueIndex;
 pub use metrics::{Metrics, ReplicationPool, SimResult, UnitStats};
 pub use phase::PhaseStats;
 pub use timeseries::{Timeseries, TimeseriesSpec};

@@ -10,10 +10,13 @@
 //! Fault model: a worker that disconnects with a claimed-but-unreported
 //! unit has that unit requeued; duplicate results for a unit id are
 //! ignored (first wins). The driver returns once every unit has been
-//! delivered or conclusively failed on a worker. There is no timeout on
-//! an assigned unit while its connection stays open — a hung-but-alive
-//! worker stalls the sweep (kill it to trigger reissue); multi-machine
-//! auth and pacing are follow-ups tracked in ROADMAP.md.
+//! delivered or conclusively failed on a worker. A hung-but-connected
+//! worker stalls its unit indefinitely by default; setting
+//! `QS_UNIT_TIMEOUT_SECS` (or [`Driver::with_unit_timeout`]) arms an
+//! assignment deadline — a unit held past it is requeued to the next
+//! `next` request (heterogeneous worker pacing), with the usual
+//! dedupe-by-unit-id if the slow worker eventually reports anyway.
+//! Multi-machine auth remains a follow-up tracked in ROADMAP.md.
 
 use crate::experiments::{sweep_units, Point, SweepGrid, UnitRun, UnitSource};
 use crate::sweep::{proto, SweepSpec};
@@ -21,9 +24,19 @@ use crate::workload::Workload;
 use std::collections::VecDeque;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Condvar, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
+
+/// Optional assignment deadline from the environment: fractional seconds
+/// in `QS_UNIT_TIMEOUT_SECS` (unset, empty, or non-positive = off).
+fn unit_timeout_from_env() -> Option<Duration> {
+    std::env::var("QS_UNIT_TIMEOUT_SECS")
+        .ok()
+        .and_then(|v| v.trim().parse::<f64>().ok())
+        .filter(|&s| s > 0.0 && s.is_finite())
+        .map(Duration::from_secs_f64)
+}
 
 /// A bound (but not yet serving) sweep driver. `bind` then `run`; the
 /// split lets callers learn the OS-assigned port (`addr = "host:0"`)
@@ -32,6 +45,7 @@ pub struct Driver {
     listener: TcpListener,
     addr: SocketAddr,
     spec: SweepSpec,
+    unit_timeout: Option<Duration>,
 }
 
 impl Driver {
@@ -42,7 +56,15 @@ impl Driver {
             listener,
             addr,
             spec: spec.clone(),
+            unit_timeout: unit_timeout_from_env(),
         })
+    }
+
+    /// Override the assignment deadline (`None` = never time out).
+    /// `bind` seeds it from `QS_UNIT_TIMEOUT_SECS`.
+    pub fn with_unit_timeout(mut self, timeout: Option<Duration>) -> Driver {
+        self.unit_timeout = timeout;
+        self
     }
 
     /// The bound address workers should connect to.
@@ -60,6 +82,7 @@ impl Driver {
             listener: &self.listener,
             addr: self.addr,
             spec: &self.spec,
+            unit_timeout: self.unit_timeout,
         };
         sweep_units(&grid, &wl_at, &mut source)
     }
@@ -71,16 +94,41 @@ struct State {
     pending: VecDeque<usize>,
     /// Per-unit "a result (success or failure) has been recorded".
     delivered: Vec<bool>,
+    /// Per-unit current assignment: (connection id, claim instant).
+    /// `None` while pending, delivered, or reissued elsewhere.
+    assigned: Vec<Option<(u64, Instant)>>,
     /// Units still without a recorded result.
     remaining: usize,
     /// Clones of every accepted connection, for shutdown at completion.
     conns: Vec<TcpStream>,
 }
 
+impl State {
+    /// Requeue every unit whose assignment deadline has passed. Runs at
+    /// `next`-request cadence, so a stalled worker's unit becomes
+    /// available exactly when some live worker asks for more work.
+    fn requeue_expired(&mut self, timeout: Duration, now: Instant) {
+        for u in 0..self.assigned.len() {
+            if let Some((_, t0)) = self.assigned[u] {
+                if !self.delivered[u] && now.duration_since(t0) > timeout {
+                    self.assigned[u] = None;
+                    self.pending.push_back(u);
+                    eprintln!(
+                        "qs-sweep driver: unit {u} held past the \
+                         {}s assignment deadline; requeued",
+                        timeout.as_secs_f64()
+                    );
+                }
+            }
+        }
+    }
+}
+
 struct Serve<'a> {
     listener: &'a TcpListener,
     addr: SocketAddr,
     spec: &'a SweepSpec,
+    unit_timeout: Option<Duration>,
 }
 
 impl UnitSource for Serve<'_> {
@@ -97,16 +145,20 @@ impl UnitSource for Serve<'_> {
         let state = Mutex::new(State {
             pending: (0..n).collect(),
             delivered: vec![false; n],
+            assigned: vec![None; n],
             remaining: n,
             conns: Vec::new(),
         });
         let cv = Condvar::new();
         let done = AtomicBool::new(false);
+        let conn_ids = AtomicU64::new(0);
+        let timeout = self.unit_timeout;
         let spec_line = proto::msg_spec(self.spec).to_string();
         let listener = self.listener;
         let addr = self.addr;
         std::thread::scope(|s| {
             s.spawn(|| {
+                let (state, cv, spec_line) = (&state, &cv, spec_line.as_str());
                 for conn in listener.incoming() {
                     if done.load(Ordering::SeqCst) {
                         break;
@@ -115,7 +167,10 @@ impl UnitSource for Serve<'_> {
                     if let Ok(clone) = stream.try_clone() {
                         state.lock().unwrap().conns.push(clone);
                     }
-                    s.spawn(|| handle_conn(stream, &spec_line, &state, &cv, deliver));
+                    let conn_id = conn_ids.fetch_add(1, Ordering::Relaxed);
+                    s.spawn(move || {
+                        handle_conn(stream, conn_id, timeout, spec_line, state, cv, deliver)
+                    });
                 }
             });
             let guard = state.lock().unwrap();
@@ -140,6 +195,8 @@ impl UnitSource for Serve<'_> {
 
 fn handle_conn(
     stream: TcpStream,
+    conn_id: u64,
+    unit_timeout: Option<Duration>,
     spec_line: &str,
     state: &Mutex<State>,
     cv: &Condvar,
@@ -175,14 +232,19 @@ fn handle_conn(
             Some("next") => {
                 let reply = {
                     let mut st = state.lock().unwrap();
+                    if let Some(timeout) = unit_timeout {
+                        st.requeue_expired(timeout, Instant::now());
+                    }
                     if let Some(u) = st.pending.pop_front() {
+                        st.assigned[u] = Some((conn_id, Instant::now()));
                         claimed.push(u);
                         proto::msg_unit(u)
                     } else if st.remaining == 0 {
                         proto::msg_done()
                     } else {
                         // Everything is assigned elsewhere; poll again —
-                        // a disconnect may requeue a unit.
+                        // a disconnect (or an assignment timeout) may
+                        // requeue a unit.
                         proto::msg_wait(25)
                     }
                 };
@@ -205,6 +267,12 @@ fn handle_conn(
                         false // duplicate or garbage id
                     } else {
                         st.delivered[id] = true;
+                        // Release the assignment slot only if this
+                        // connection still owns it — after a timeout
+                        // reissue it may belong to another worker.
+                        if st.assigned[id].is_some_and(|(c, _)| c == conn_id) {
+                            st.assigned[id] = None;
+                        }
                         true
                     }
                 };
@@ -234,12 +302,18 @@ fn handle_conn(
         }
     }
     // Disconnect cleanup: requeue every claimed-but-unreported unit so
-    // other workers pick them up.
+    // other workers pick them up — unless an assignment timeout already
+    // reissued it (the unit is then pending or owned by another
+    // connection, and requeueing again would double-enqueue it).
     if !claimed.is_empty() {
         let mut st = state.lock().unwrap();
         for u in claimed {
-            if !st.delivered[u] {
-                st.pending.push_back(u);
+            let owned = st.assigned[u].is_some_and(|(c, _)| c == conn_id);
+            if owned {
+                st.assigned[u] = None;
+                if !st.delivered[u] {
+                    st.pending.push_back(u);
+                }
             }
         }
     }

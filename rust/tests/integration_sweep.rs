@@ -174,6 +174,47 @@ fn killed_worker_units_are_reissued() {
     assert_points_bit_identical(&base, &pts);
 }
 
+/// A hung-but-connected worker holding a claimed unit past the
+/// assignment deadline (`QS_UNIT_TIMEOUT_SECS` /
+/// `Driver::with_unit_timeout`): the unit is requeued to the next
+/// `next` request and the sweep converges bit-identically — the
+/// heterogeneous-pacing fault model.
+#[test]
+fn timed_out_units_are_reissued() {
+    let spec = smoke_spec();
+    let base = run_spec_local(&spec, 4);
+    let driver = Driver::bind(&spec, "127.0.0.1:0")
+        .unwrap()
+        .with_unit_timeout(Some(std::time::Duration::from_millis(50)));
+    let addr = driver.local_addr().to_string();
+    let dh = std::thread::spawn(move || driver.run().unwrap());
+
+    // Stalling worker: handshake, claim one unit, then hold the
+    // connection open forever without reporting.
+    let stall = TcpStream::connect(&addr).unwrap();
+    let mut w = stall.try_clone().unwrap();
+    let mut r = BufReader::new(stall.try_clone().unwrap());
+    let mut line = String::new();
+    r.read_line(&mut line).unwrap();
+    proto::parse_spec(&proto::parse_line(&line).unwrap()).unwrap();
+    writeln!(w, "{}", proto::msg_next()).unwrap();
+    line.clear();
+    r.read_line(&mut line).unwrap();
+    assert_eq!(
+        proto::op_of(&proto::parse_line(&line).unwrap()),
+        Some("unit")
+    );
+
+    // A healthy worker drains the rest; once the deadline passes, its
+    // polling (`next` → `wait` → `next`) picks up the reissued unit, so
+    // it ends up serving the whole grid.
+    let served = run_worker(&addr).unwrap();
+    assert_eq!(served, spec.grid().n_units());
+    let pts = dh.join().unwrap();
+    assert_points_bit_identical(&base, &pts);
+    drop((w, r, stall));
+}
+
 /// Duplicate results for a unit id are deduped: sending the same unit's
 /// result twice must neither corrupt the pool nor terminate the sweep
 /// early with units missing.

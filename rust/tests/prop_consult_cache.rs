@@ -32,12 +32,12 @@ struct Scenario {
     seed: u64,
 }
 
-fn gen_steps(r: &mut Rng, n: usize) -> Vec<Step> {
+fn gen_steps(r: &mut Rng, n: usize, nclasses: usize) -> Vec<Step> {
     (0..n)
         .map(|_| {
             let x = r.f64();
             if x < 0.55 {
-                Step::Arrive(r.index(8))
+                Step::Arrive(r.index(nclasses.max(8)))
             } else if x < 0.95 {
                 Step::Complete
             } else {
@@ -55,10 +55,11 @@ fn gen_scenario(r: &mut Rng) -> Scenario {
         .collect();
     needs.sort_unstable();
     needs.dedup();
+    let script = gen_steps(r, 160, needs.len());
     Scenario {
         k,
         needs,
-        script: gen_steps(r, 160),
+        script,
         seed: r.next_u64(),
     }
 }
@@ -70,9 +71,82 @@ fn gen_one_or_all(r: &mut Rng) -> Scenario {
     Scenario {
         k,
         needs: vec![1, k],
-        script: gen_steps(r, 160),
+        script: gen_steps(r, 160, 2),
         seed: r.next_u64(),
     }
+}
+
+/// The Fig-5 multiclass workload shape: k=15, needs {1, 3, 5, 15}.
+fn gen_fig5(r: &mut Rng) -> Scenario {
+    Scenario {
+        k: 15,
+        needs: vec![1, 3, 5, 15],
+        script: gen_steps(r, 200, 4),
+        seed: r.next_u64(),
+    }
+}
+
+/// The Fig-6 Borg-derived shape: k=2048 with all 26 trace classes —
+/// the widest need spread the paper runs, exercising the Fenwick walk
+/// over the full rank range.
+fn gen_fig6(r: &mut Rng) -> Scenario {
+    let needs = quickswap::workload::borg::BORG_NEEDS.to_vec();
+    let script = gen_steps(r, 220, needs.len());
+    Scenario {
+        k: 2048,
+        needs,
+        script,
+        seed: r.next_u64(),
+    }
+}
+
+/// Fig-6-scale one-or-all (k=2048) so MSFQ gets coverage at the Borg
+/// server count too (it rejects multiclass shapes by construction).
+fn gen_fig6_one_or_all(r: &mut Rng) -> Scenario {
+    Scenario {
+        k: 2048,
+        needs: vec![1, 2048],
+        script: gen_steps(r, 200, 2),
+        seed: r.next_u64(),
+    }
+}
+
+/// The queue-index queries behind the new exact skip predicates must
+/// agree with a from-scratch recompute of the same quantities — this is
+/// what makes the Fenwick-backed consults and exact watermarks legal.
+fn assert_index_exact(h: &Harness, step: usize) -> Result<(), String> {
+    let sys = h.view();
+    let idx = sys.queue_index();
+    let brute_min = (0..h.needs.len())
+        .filter(|&c| h.queued[c] > 0)
+        .map(|c| h.needs[c])
+        .min()
+        .unwrap_or(u32::MAX);
+    if idx.min_queued_need() != brute_min {
+        return Err(format!(
+            "step {step}: index min_queued_need {} != brute {brute_min}",
+            idx.min_queued_need()
+        ));
+    }
+    let starving = (0..h.needs.len()).any(|c| h.queued[c] > 0 && h.running[c] == 0);
+    let backlogged = (0..h.needs.len()).any(|c| h.queued[c] > 0 && h.running[c] > 0);
+    if idx.swap_trigger() != (starving && !backlogged) {
+        return Err(format!("step {step}: index swap_trigger diverged"));
+    }
+    for free in [0, h.k / 2, h.k] {
+        let brute = (0..h.needs.len())
+            .filter(|&c| h.queued[c] > 0 && h.needs[c] <= free)
+            .max_by_key(|&c| (h.needs[c], std::cmp::Reverse(c)));
+        let fast = idx
+            .max_fitting_rank_below(idx.num_ranks(), free)
+            .map(|r| idx.class_at_rank(r));
+        if fast != brute {
+            return Err(format!(
+                "step {step}: max_fitting({free}) index {fast:?} != brute {brute:?}"
+            ));
+        }
+    }
+    Ok(())
 }
 
 /// Drive cached and uncached twins of `policy` through the scenario in
@@ -147,6 +221,7 @@ fn run_differential(sc: &Scenario, policy: &str) -> Result<(), String> {
         if la != lb {
             return Err(format!("step {i}: phase label diverged ({la} vs {lb})"));
         }
+        assert_index_exact(&ha, i)?;
         running.extend(adm_a);
         running.retain(|&id| ha.jobs.is_running(id));
     }
@@ -189,6 +264,56 @@ fn prop_cached_equals_uncached_one_or_all() {
         check(
             &format!("consult_cache_one_or_all/{policy}"),
             gen_one_or_all,
+            |sc| run_differential(sc, policy),
+        );
+    }
+}
+
+/// All policies that accept multiclass workloads on the Fig-5 shape
+/// (k=15, needs {1,3,5,15}): the index-backed consults and exact
+/// watermarks must be bit-identical to the uncached recompute, and the
+/// index queries themselves must match brute force after every event.
+#[test]
+fn prop_cached_equals_uncached_fig5_multiclass() {
+    for policy in [
+        "fcfs",
+        "first-fit",
+        "msf",
+        "static-qs",
+        "static-qs:7",
+        "adaptive-qs",
+        "nmsr",
+        "server-filling",
+    ] {
+        check(&format!("consult_cache_fig5/{policy}"), gen_fig5, |sc| {
+            run_differential(sc, policy)
+        });
+    }
+}
+
+/// Same contract on the Fig-6 Borg shape (k=2048, 26 classes) — the
+/// widest rank range the Fenwick walk sees in the paper's experiments.
+/// MSFQ rejects multiclass shapes, so it runs the k=2048 one-or-all
+/// variant instead.
+#[test]
+fn prop_cached_equals_uncached_fig6_borg() {
+    for policy in [
+        "fcfs",
+        "first-fit",
+        "msf",
+        "static-qs",
+        "adaptive-qs",
+        "nmsr",
+        "server-filling",
+    ] {
+        check(&format!("consult_cache_fig6/{policy}"), gen_fig6, |sc| {
+            run_differential(sc, policy)
+        });
+    }
+    for policy in ["msfq", "msfq:1024", "msfq:0"] {
+        check(
+            &format!("consult_cache_fig6_one_or_all/{policy}"),
+            gen_fig6_one_or_all,
             |sc| run_differential(sc, policy),
         );
     }

@@ -4,12 +4,14 @@
 #
 #   scripts/bench_compare.sh <committed.json> <fresh.json>
 #
-# Gate: the headline targets (`sim_msfq:31`, `sim_borg_adaptive_qs`)
-# fail the run when they regress >30% below the committed baseline;
-# everything else — and the [0.7, 1.0) band on the gated targets — is
-# warn-only, because smoke-scale numbers on shared CI runners jitter.
-# A committed stub (empty results) or a scale mismatch skips the gate
-# with a note rather than failing.
+# Gate: the headline targets (`sim_msfq:31`, `sim_borg_adaptive_qs`,
+# `sim_server_filling`) fail the run when they regress >30% below the
+# committed baseline, or when they are missing from the fresh artifact
+# entirely (a dropped scenario must not pass silently); everything else
+# — and the [0.7, 1.0) band on the gated targets — is warn-only,
+# because smoke-scale numbers on shared CI runners jitter. A committed
+# stub (empty results) or a scale mismatch skips the gate with a note
+# rather than failing.
 set -euo pipefail
 
 if [ $# -ne 2 ]; then
@@ -38,7 +40,13 @@ if committed.get("scale") != fresh.get("scale"):
           f"fresh {fresh.get('scale')!r}) - comparison skipped")
     sys.exit(0)
 
-GATED = ("sim_msfq:31", "sim_borg_adaptive_qs")
+GATED = ("sim_msfq:31", "sim_borg_adaptive_qs", "sim_server_filling")
+missing = [g for g in GATED if g not in new]
+if missing:
+    sys.exit("error: gated bench target(s) missing from the fresh artifact: "
+             + ", ".join(missing)
+             + " - the bench binary dropped a scenario (or wrote a truncated"
+             " JSON); refusing to compare without them")
 failures = []
 print(f"events/s trajectory vs committed baseline ({committed.get('scale')} scale):")
 for name in sorted(set(base) | set(new)):
@@ -46,9 +54,7 @@ for name in sorted(set(base) | set(new)):
         print(f"  {name:<32} NEW: {new[name]:.3e}")
         continue
     if name not in new:
-        print(f"  {name:<32} missing from fresh run")
-        if name in GATED:
-            failures.append(f"{name} missing from fresh artifact")
+        print(f"  {name:<32} missing from fresh run (warn only)")
         continue
     ratio = new[name] / base[name]
     flag = ""
