@@ -5,10 +5,17 @@
 //! scripts/bench_smoke.sh.
 //!
 //! Engines are constructed once per workload and reset between runs, so
-//! the numbers measure the steady-state hot path (indexed event heap +
-//! SoA job table), not allocator traffic.
+//! the numbers measure the steady-state hot path, not allocator
+//! traffic. The `sim_*` targets pin the 4-ary heap event schedule so
+//! the committed trajectory keeps comparing like with like; the
+//! `sim_*:ladder` twins pin the ladder queue (the engine default), and
+//! the `sched_churn_*` microbenchmark races the two structures on a raw
+//! push/pop/cancel stream with no engine around them.
 use quickswap::experiments::Scale;
-use quickswap::sim::{Engine, SimConfig};
+use quickswap::sim::events::{EventKind, EventQueue};
+use quickswap::sim::ladder::LadderQueue;
+use quickswap::sim::schedule::EventSchedule;
+use quickswap::sim::{Engine, EventScheduleKind, SimConfig};
 use quickswap::util::bench::{black_box, Bench};
 use quickswap::util::json::Value;
 use quickswap::util::rng::Rng;
@@ -43,6 +50,41 @@ fn write_json(measured: &[(String, f64)], completions: u64) {
     }
 }
 
+/// Raw schedule microbenchmark: a steady-state churn of `JOBS` live
+/// departures — pop the earliest, re-push it one service ahead, and
+/// every 8th iteration cancel + reschedule a random other job (the
+/// preemption pattern). Identical op/RNG stream for every structure;
+/// returns pops per wall second.
+fn schedule_churn<Q: EventSchedule>(q: &mut Q) -> f64 {
+    const JOBS: u64 = 1024;
+    const OPS: u64 = 200_000;
+    let mut rng = Rng::new(4242);
+    for j in 0..JOBS {
+        q.push(rng.exp(1.0), EventKind::Departure { job: j });
+    }
+    let t0 = std::time::Instant::now();
+    let mut ops = 0u64;
+    while ops < OPS {
+        let e = q.pop().expect("churn queue never empties");
+        let EventKind::Departure { job } = e.kind else {
+            unreachable!("only departures are pushed")
+        };
+        let now = e.t;
+        if ops % 8 == 0 {
+            let other = rng.below(JOBS);
+            // `other == job` would double-schedule the popped job.
+            if other != job && q.cancel_departure(other) {
+                q.push(now + rng.exp(0.5), EventKind::Departure { job: other });
+            }
+        }
+        q.push(now + rng.exp(1.0), EventKind::Departure { job });
+        ops += 1;
+    }
+    let rate = ops as f64 / t0.elapsed().as_secs_f64().max(1e-12);
+    q.clear();
+    rate
+}
+
 fn main() {
     let scale = Scale::from_env();
     // Cap the per-run length: throughput saturates well before this and
@@ -55,6 +97,7 @@ fn main() {
     let cfg = SimConfig {
         target_completions: completions,
         warmup_completions: 0,
+        event_schedule: Some(EventScheduleKind::Heap),
         ..Default::default()
     };
     let mut engine = Engine::new(&one_or_all, cfg.clone());
@@ -67,6 +110,22 @@ fn main() {
         println!("  -> {policy}: {:.2} M events/s", rate / 1e6);
         measured.push((format!("sim_{policy}"), rate));
     }
+
+    // Ladder-schedule twin of the FCFS target: same workload, same
+    // seeds, only the timing structure differs (results are
+    // bit-identical; only events/s may move).
+    let ladder_cfg = SimConfig {
+        event_schedule: Some(EventScheduleKind::Ladder),
+        ..cfg.clone()
+    };
+    let mut engine_ladder = Engine::new(&one_or_all, ladder_cfg);
+    let mut rate = 0.0;
+    b.bench("sim_fcfs:ladder", || {
+        rate = events_per_sec(&mut engine_ladder, &one_or_all, "fcfs", 7);
+        black_box(rate);
+    });
+    println!("  -> fcfs (ladder schedule): {:.2} M events/s", rate / 1e6);
+    measured.push(("sim_fcfs:ladder".to_string(), rate));
 
     // Uncached-consult baseline for the headline policy: the consult
     // cache must keep `sim_msfq:31` at or above this number.
@@ -87,6 +146,7 @@ fn main() {
     let borg_cfg = SimConfig {
         target_completions: completions / 2,
         warmup_completions: 0,
+        event_schedule: Some(EventScheduleKind::Heap),
         ..Default::default()
     };
     let mut borg_engine = Engine::new(&borg, borg_cfg.clone());
@@ -97,6 +157,21 @@ fn main() {
     });
     println!("  -> borg/adaptive-qs: {:.2} M events/s", rate / 1e6);
     measured.push(("sim_borg_adaptive_qs".to_string(), rate));
+
+    // Ladder twin of the headline Borg target (heavy-tailed service
+    // spans: the bucket auto-tuning + rung-spill stress case).
+    let borg_ladder_cfg = SimConfig {
+        event_schedule: Some(EventScheduleKind::Ladder),
+        ..borg_cfg.clone()
+    };
+    let mut borg_engine_ladder = Engine::new(&borg, borg_ladder_cfg);
+    let mut rate = 0.0;
+    b.bench("sim_borg_adaptive_qs:ladder", || {
+        rate = events_per_sec(&mut borg_engine_ladder, &borg, "adaptive-qs", 7);
+        black_box(rate);
+    });
+    println!("  -> borg/adaptive-qs (ladder): {:.2} M events/s", rate / 1e6);
+    measured.push(("sim_borg_adaptive_qs:ladder".to_string(), rate));
 
     // 26-class MSF: stresses the queue index's Fenwick-backed
     // descending-need admission walk (O(log C) per admitted class
@@ -125,11 +200,38 @@ fn main() {
     );
     measured.push(("sim_borg_adaptive_qs_nocache".to_string(), rate));
 
+    // Raw timing-structure microbenchmark: heap vs ladder on the same
+    // synthetic departure churn (no engine, no policy).
+    for (name, rate) in [
+        ("sched_churn_heap", {
+            let mut q = EventQueue::new();
+            let mut r = 0.0;
+            b.bench("sched_churn_heap", || {
+                r = schedule_churn(&mut q);
+                black_box(r);
+            });
+            r
+        }),
+        ("sched_churn_ladder", {
+            let mut q = LadderQueue::new();
+            let mut r = 0.0;
+            b.bench("sched_churn_ladder", || {
+                r = schedule_churn(&mut q);
+                black_box(r);
+            });
+            r
+        }),
+    ] {
+        println!("  -> {name}: {:.2} M pops/s", rate / 1e6);
+        measured.push((name.to_string(), rate));
+    }
+
     // Preemptive policy: stresses departure cancel/reschedule.
     let sf_wl = Workload::one_or_all(16, 4.0, 0.9, 1.0, 1.0);
     let sf_cfg = SimConfig {
         target_completions: completions / 2,
         warmup_completions: 0,
+        event_schedule: Some(EventScheduleKind::Heap),
         ..Default::default()
     };
     let mut sf_engine = Engine::new(&sf_wl, sf_cfg);

@@ -53,6 +53,13 @@ impl ExperimentConfig {
             if s.get("track_phases").and_then(|x| x.as_bool()) == Some(true) {
                 sim.track_phases = true;
             }
+            if let Some(es) = s.get("event_schedule").and_then(|x| x.as_str()) {
+                sim.event_schedule = Some(match es {
+                    "heap" => crate::sim::EventScheduleKind::Heap,
+                    "ladder" => crate::sim::EventScheduleKind::Ladder,
+                    other => anyhow::bail!("sim.event_schedule must be heap|ladder, got '{other}'"),
+                });
+            }
         }
         let seed = v.get("seed").and_then(|x| x.as_u64()).unwrap_or(1);
         let replications = v
@@ -159,6 +166,31 @@ mod tests {
         assert_eq!(cfg.policies.len(), 3);
         assert_eq!(cfg.sim.target_completions, 1000);
         assert_eq!(cfg.replications, 3);
+    }
+
+    #[test]
+    fn parses_event_schedule() {
+        let mk = |es: &str| {
+            ExperimentConfig::from_json(&format!(
+                r#"{{"workload": {{"kind": "four_class", "lambda": 1.0}},
+                     "sim": {{"event_schedule": "{es}"}}}}"#
+            ))
+        };
+        assert_eq!(
+            mk("heap").unwrap().sim.event_schedule,
+            Some(crate::sim::EventScheduleKind::Heap)
+        );
+        assert_eq!(
+            mk("ladder").unwrap().sim.event_schedule,
+            Some(crate::sim::EventScheduleKind::Ladder)
+        );
+        assert!(mk("nope").is_err());
+        // Unset: follow the process default.
+        let cfg = ExperimentConfig::from_json(
+            r#"{"workload": {"kind": "four_class", "lambda": 1.0}}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.sim.event_schedule, None);
     }
 
     #[test]

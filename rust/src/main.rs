@@ -77,8 +77,8 @@ fn help() -> String {
             OptSpec { name: "completions", help: "measured completions", default: Some("1000000".into()) },
             OptSpec { name: "seed", help: "RNG seed", default: Some("1".into()) },
             OptSpec { name: "reps", help: "replications per sweep point", default: Some("QS_REPS or 4".into()) },
-            OptSpec { name: "driver", help: "sweep: serve the unit grid to TCP workers on ADDR (\":0\" picks a port)", default: None },
-            OptSpec { name: "worker", help: "sweep: pull units from the driver at ADDR", default: None },
+            OptSpec { name: "driver", help: "sweep: serve the unit grid to TCP workers on ADDR (\":0\" picks a port); set QS_SWEEP_TOKEN to require a shared secret", default: None },
+            OptSpec { name: "worker", help: "sweep: pull units from the driver at ADDR (QS_SWEEP_TOKEN authenticates when the driver requires it)", default: None },
             OptSpec { name: "fig", help: "sweep: use a figure's predefined grid (2|3|5|6|8)", default: None },
         ],
     )

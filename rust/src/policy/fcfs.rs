@@ -1,26 +1,26 @@
 //! First-Come First-Served: admit jobs strictly in arrival order; stop at
 //! the first job that does not fit (Head-of-the-Line blocking).
 //!
-//! Consult cache: FCFS can admit only while the head-of-line job fits,
-//! so after any full scan the blocker's need is an *exact*
-//! [`ConsultWatermark`] — the HoL job never changes except through our
-//! own admissions (which end in a scan that refreshes the watermark) or
-//! an arrival into an empty queue (handled in [`Policy::on_arrival`]).
-//! Because the watermark is written by the scan itself, even the
-//! fixed-point re-consult after an admission batch is skipped.
+//! Consult cache: FCFS admits something **iff its head-of-line job
+//! fits**, and the JobTable maintains the HoL (oldest queued) job as an
+//! O(1) cursor — so `hol_queued_need() > free` is the *exact*
+//! empty-consult predicate, evaluated fresh on every consult with no
+//! policy-side state at all (the former conservative
+//! `ConsultWatermark`, which an arrival into a non-empty queue could
+//! lower below the true HoL need, is gone). Like First-Fit, cached and
+//! uncached consults are the same code path by construction. The
+//! admission scan starts *at* the HoL cursor: every earlier job in
+//! arrival order is in service by definition, so the scan is O(admitted
+//! + 1) instead of O(jobs in system).
 
-use crate::policy::{ClassId, ConsultWatermark, Decision, Policy, SysView};
+use crate::policy::{Decision, Policy, SysView};
 
 #[derive(Default, Debug)]
-pub struct Fcfs {
-    /// Consult cache: skip while free capacity is below the watermark
-    /// (= the HoL blocker's need after a full scan).
-    watermark: ConsultWatermark,
-}
+pub struct Fcfs;
 
 impl Fcfs {
     pub fn new() -> Fcfs {
-        Fcfs::default()
+        Fcfs
     }
 }
 
@@ -30,56 +30,23 @@ impl Policy for Fcfs {
     }
 
     fn schedule(&mut self, sys: &SysView<'_>, out: &mut Decision) {
-        if self.watermark.blocks(sys.free()) {
-            return; // HoL job still blocked: provably empty consult
-        }
-        // Index fit check: when even the smallest queued need exceeds the
-        // free capacity (or nothing is queued at all), the scan below
-        // would walk every running job only to admit nothing. The min
-        // queued need is ≤ the HoL blocker's need, so it is a valid
-        // conservative watermark for the skip.
-        let minq = sys.min_queued_need();
-        if minq > sys.free() {
-            self.watermark.set(minq);
+        // Exact skip: the head of line blocks (or nothing is queued).
+        if sys.hol_queued_need() > sys.free() {
             return;
         }
         let mut free = sys.free();
-        let mut blocked_need = u32::MAX;
         let admit = &mut out.admit;
-        sys.for_each_in_arrival_order(&mut |id, class, running| {
-            if running {
-                return true; // skip jobs already in service
-            }
+        sys.for_each_queued_in_arrival_order(&mut |id, class| {
             let need = sys.needs[class];
             if need <= free {
                 admit.push(id);
                 free -= need;
                 true
             } else {
-                blocked_need = need;
                 false // head-of-line blocking: stop at first misfit
             }
         });
-        // Exact watermark for the post-decision state: the scan either
-        // stopped at the blocker (which stays HoL after our admissions
-        // are applied, with `free` exactly as computed above) or
-        // admitted the whole queue.
-        self.watermark.set(blocked_need);
-    }
-
-    fn on_arrival(&mut self, _class: ClassId, need: u32) {
-        // A new tail job can only become HoL if the queue was empty
-        // (watermark MAX); taking the min is conservative otherwise.
-        self.watermark.observe_arrival(need);
-    }
-
-    // on_swap_epoch: intentionally the default no-op — unlike the
-    // min-queued-need policies, FCFS's scan computes the watermark that
-    // is already exact for the post-admission state (see above), so its
-    // own decisions never invalidate it.
-
-    fn set_consult_cache(&mut self, enabled: bool) {
-        self.watermark.set_enabled(enabled);
+        debug_assert!(!admit.is_empty(), "HoL predicate admitted nothing");
     }
 }
 
@@ -113,22 +80,28 @@ mod tests {
         assert_eq!(h.used(), 4);
     }
 
-    /// Cached FCFS skips blocked consults but must admit identically to
-    /// the uncached policy once the blocker fits.
+    /// The exact HoL predicate: blocked consults admit nothing, and the
+    /// moment the blocker fits it is admitted — with a trailing light
+    /// job admissible only once it becomes HoL itself. A light arrival
+    /// behind a heavy blocker must NOT unblock anything (the case the
+    /// old conservative watermark had to re-consult for).
     #[test]
-    fn cache_skips_blocked_then_admits() {
+    fn hol_predicate_is_exact() {
         let mut h = Harness::new(4, &[1, 4]);
         let mut p = Fcfs::new();
-        p.set_consult_cache(true);
-        let a = h.arrive_notified(&mut p, 0, 0.0);
-        h.arrive_notified(&mut p, 1, 0.1); // heavy blocks
-        h.arrive_notified(&mut p, 0, 0.2);
+        let a = h.arrive(0, 0.0);
+        h.arrive(1, 0.1); // heavy blocks
         assert_eq!(h.consult(&mut p), vec![a]);
-        // Blocked consults are skipped (watermark = 4 > free = 3).
+        assert_eq!(h.view().hol_queued_need(), 4);
+        // Light arrival behind the blocker: HoL need stays 4, consult
+        // stays provably empty.
+        h.arrive(0, 0.2);
+        assert_eq!(h.view().hol_queued_need(), 4);
         assert!(h.consult(&mut p).is_empty());
-        h.complete_notified(&mut p, a, 1.0);
+        h.complete(a, 1.0);
         // Heavy fits now; the trailing light stays HoL-blocked behind it.
         assert_eq!(h.consult(&mut p).len(), 1);
         assert_eq!(h.used(), 4);
+        assert_eq!(h.view().hol_queued_need(), 1);
     }
 }

@@ -10,6 +10,17 @@
 //! to evaluate on every consult, so First-Fit carries no cache state at
 //! all (`set_consult_cache` is the default no-op): cached and uncached
 //! consults are the same code path by construction.
+//!
+//! Scan bounds: the walk starts at the HoL cursor (every earlier job is
+//! in service) and visits only queued jobs, and the index's
+//! **need-weighted Fenwick prefix**
+//! ([`queued_need_fitting`](crate::sim::QueueIndex::queued_need_fitting))
+//! caps it — once the scan has seen that much fitting mass, every
+//! unvisited queued job needs more than the initial free capacity and
+//! can never be admitted this consult, so the scan stops instead of
+//! walking the (possibly enormous, at ρ → 1) tail of too-large jobs.
+//! Neither bound changes any admission decision: they cut exactly the
+//! suffix of provable non-admissions.
 
 use crate::policy::{Decision, Policy, SysView};
 
@@ -29,26 +40,32 @@ impl Policy for FirstFit {
 
     fn schedule(&mut self, sys: &SysView<'_>, out: &mut Decision) {
         let free0 = sys.free();
-        // Exact index fit check: the smallest need among queued classes
-        // (formerly an O(C) scan per consult).
-        let min_need = sys.min_queued_need();
-        if min_need > free0 {
-            return; // exact: nothing fits (MAX when the queue is empty)
+        let idx = sys.queue_index();
+        // Need-weighted fitting mass: zero iff no queued job fits (the
+        // exact skip), and otherwise the scan's work bound.
+        let mut unseen_fit = idx.queued_need_fitting(free0);
+        if unseen_fit == 0 {
+            return;
         }
-        // Something fits, so this scan always admits.
+        let min_need = idx.min_queued_need();
         let mut free = free0;
         let admit = &mut out.admit;
-        sys.for_each_in_arrival_order(&mut |id, class, running| {
-            if running {
-                return true;
-            }
+        sys.for_each_queued_in_arrival_order(&mut |id, class| {
             let need = sys.needs[class];
-            if need <= free {
-                admit.push(id);
-                free -= need;
+            if need <= free0 {
+                // Part of the fitting mass whether or not it still fits
+                // after earlier admissions shrank `free`.
+                if need <= free {
+                    admit.push(id);
+                    free -= need;
+                }
+                unseen_fit -= need as u64;
             }
-            free >= min_need // keep scanning while anything could fit
+            // Stop when all fitting mass is seen or nothing else could
+            // possibly fit in what's left.
+            unseen_fit > 0 && free >= min_need
         });
+        debug_assert!(!admit.is_empty(), "fitting-mass predicate admitted nothing");
     }
 }
 
@@ -77,5 +94,30 @@ mod tests {
         let admitted = h.consult(&mut FirstFit::new());
         assert_eq!(admitted, vec![a, c]);
         assert!(h.jobs.is_queued(b));
+    }
+
+    /// The weighted-mass bound stops the scan without changing any
+    /// decision: with a long tail of too-large jobs behind the fitting
+    /// ones, admissions match the unbounded arrival-order semantics.
+    #[test]
+    fn fitting_mass_bound_preserves_decisions() {
+        let mut h = Harness::new(8, &[1, 2, 8]);
+        // Fitting heads...
+        let a = h.arrive(0, 0.0); // need 1
+        let b = h.arrive(1, 0.1); // need 2
+        // ...then a deep tail of need-8 jobs that can never fit at
+        // free0 = 8 - 0 ... they fit individually when the system is
+        // empty, so block some capacity first:
+        let big = h.arrive(2, 0.2);
+        let admitted = h.consult(&mut FirstFit::new());
+        assert_eq!(admitted, vec![a, b, /* big does not fit */]);
+        for i in 0..50 {
+            h.arrive(2, 1.0 + i as f64 * 0.01); // tail of need-8 jobs
+        }
+        let c = h.arrive(0, 2.0); // a late fitting job behind the tail
+        let admitted = h.consult(&mut FirstFit::new());
+        assert_eq!(admitted, vec![c], "must backfill past the need-8 tail");
+        assert!(h.jobs.is_queued(big));
+        assert_eq!(h.used(), 4);
     }
 }

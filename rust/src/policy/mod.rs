@@ -112,6 +112,27 @@ impl SysView<'_> {
         self.index.min_queued_need()
     }
 
+    /// Need of the head-of-line job — the *oldest queued* job in
+    /// arrival order — or `u32::MAX` when nothing waits. O(1) from the
+    /// JobTable's incrementally-maintained HoL cursor: the
+    /// arrival-order-aware query the class-ranked queue index cannot
+    /// answer, and the exact FCFS skip predicate (FCFS admits something
+    /// iff its head of line fits).
+    #[inline]
+    pub fn hol_queued_need(&self) -> u32 {
+        match self.jobs.hol_queued_slot() {
+            Some(slot) => self.jobs.need(self.jobs.id_at(slot)),
+            None => u32::MAX,
+        }
+    }
+
+    /// Visit **queued** jobs in arrival order starting at the head of
+    /// line; `f` returns false to stop. Skips the in-service prefix
+    /// entirely — O(queued visited), not O(jobs in system).
+    pub fn for_each_queued_in_arrival_order(&self, f: &mut dyn FnMut(JobId, ClassId) -> bool) {
+        self.jobs.for_each_queued_from_hol(f);
+    }
+
     /// AdaptiveQS's §4.4 quickswap trigger, O(1) from the index.
     #[inline]
     pub fn swap_trigger(&self) -> bool {
@@ -237,63 +258,6 @@ pub trait Policy {
 /// differential-testing baseline.
 pub fn consult_cache_enabled() -> bool {
     !matches!(std::env::var("QS_NO_CONSULT_CACHE"), Ok(v) if !v.is_empty() && v != "0")
-}
-
-/// Free-capacity watermark used by FCFS (whose skip condition — the
-/// head-of-line blocker's need — depends on arrival order, which the
-/// class-ranked [`crate::sim::QueueIndex`] does not capture): tracks a
-/// *conservative* (never above the true value) bound `min_free` such
-/// that a consult cannot admit anything while `free < min_free`. The
-/// other fit-based policies (First-Fit, MSF, AdaptiveQS) consult the
-/// index's exact [`min_queued_need`](crate::sim::QueueIndex::min_queued_need)
-/// instead and carry no watermark state at all.
-///
-/// Invariant: whenever any job is queued, `min_free` ≤ the smallest free
-/// capacity at which the next full consult could admit a job. It is kept
-/// by three rules — a full consult records an exact value (policies call
-/// [`set`](ConsultWatermark::set)), an arrival can only lower it by the
-/// arriving class's need ([`observe_arrival`](ConsultWatermark::observe_arrival)),
-/// and anything else that might invalidate it (the policy's own
-/// admissions, cache toggling) resets it to 0 = always-consult
-/// ([`reset`](ConsultWatermark::reset)). Staleness is therefore always
-/// on the consult-more side, never the skip side.
-#[derive(Debug, Default)]
-pub(crate) struct ConsultWatermark {
-    enabled: bool,
-    min_free: u32,
-}
-
-impl ConsultWatermark {
-    /// True iff the cache is on and `free` provably cannot admit.
-    #[inline]
-    pub(crate) fn blocks(&self, free: u32) -> bool {
-        self.enabled && free < self.min_free
-    }
-
-    /// Record the exact watermark computed by a full consult
-    /// (`u32::MAX` when nothing is queued).
-    #[inline]
-    pub(crate) fn set(&mut self, min_free: u32) {
-        self.min_free = min_free;
-    }
-
-    /// An arrival of a job needing `need` servers joined the queue.
-    #[inline]
-    pub(crate) fn observe_arrival(&mut self, need: u32) {
-        self.min_free = self.min_free.min(need);
-    }
-
-    /// Conservative invalidation: consult in full next time.
-    #[inline]
-    pub(crate) fn reset(&mut self) {
-        self.min_free = 0;
-    }
-
-    #[inline]
-    pub(crate) fn set_enabled(&mut self, enabled: bool) {
-        self.enabled = enabled;
-        self.min_free = 0;
-    }
 }
 
 /// Construct a policy by name (CLI / config entry point).

@@ -6,7 +6,8 @@
 //! (`Σ need ≤ k`) and non-preemption are enforced here, not trusted to
 //! the policy.
 //!
-//! Hot-path design (see sim/events.rs and sim/job.rs):
+//! Hot-path design (see sim/schedule.rs, sim/events.rs, sim/ladder.rs
+//! and sim/job.rs):
 //!
 //! * arrivals never enter the event heap: a pending-arrival cursor is
 //!   merged against the heap head each iteration, and batched sources
@@ -26,10 +27,11 @@
 //!   fresh one.
 
 use crate::policy::{Decision, JobId, Policy, SysView};
-use crate::sim::events::{EventKind, EventQueue};
+use crate::sim::events::EventKind;
 use crate::sim::job::{ClassFifos, JobTable, QueueIndex};
 use crate::sim::metrics::{Metrics, SimResult};
 use crate::sim::phase::PhaseStats;
+use crate::sim::schedule::{EventScheduleKind, Schedule};
 use crate::sim::timeseries::{Timeseries, TimeseriesSpec};
 use crate::util::rng::Rng;
 use crate::workload::{Arrival, ArrivalSource, Workload};
@@ -53,6 +55,14 @@ pub struct SimConfig {
     /// `QS_NO_CONSULT_CACHE` is set); `Some(b)` forces it — the
     /// differential goldens run both sides in one process this way.
     pub consult_cache: Option<bool>,
+    /// Event timing structure: `None` follows the process default
+    /// ([`EventScheduleKind::from_env`], i.e. the ladder queue unless
+    /// `QS_EVENT_SCHEDULE=heap`); `Some(kind)` pins it — the
+    /// heap-vs-ladder differential tests and the `sim_*:ladder` bench
+    /// targets run both structures in one process this way. Pop order
+    /// is bit-identical between the two, so this knob can never change
+    /// results — only throughput.
+    pub event_schedule: Option<EventScheduleKind>,
 }
 
 impl Default for SimConfig {
@@ -65,6 +75,7 @@ impl Default for SimConfig {
             track_phases: false,
             batch: 1000,
             consult_cache: None,
+            event_schedule: None,
         }
     }
 }
@@ -104,7 +115,7 @@ pub struct Engine {
     n_by_class: Vec<u32>,
     used: u32,
 
-    events: EventQueue,
+    events: Schedule,
     timer_seq: u64,
     pending_arrival: Option<Arrival>,
 
@@ -121,6 +132,9 @@ impl Engine {
     pub fn new(wl: &Workload, cfg: SimConfig) -> Engine {
         let nc = wl.num_classes();
         let ts = cfg.timeseries.as_ref().map(|s| Timeseries::new(s, nc));
+        let schedule = cfg
+            .event_schedule
+            .unwrap_or_else(EventScheduleKind::from_env);
         let mut jobs = JobTable::new();
         jobs.set_prefix_threshold(wl.k as u64);
         Engine {
@@ -137,7 +151,7 @@ impl Engine {
             running: vec![0; nc],
             n_by_class: vec![0; nc],
             used: 0,
-            events: EventQueue::new(),
+            events: Schedule::new(schedule),
             timer_seq: 0,
             pending_arrival: None,
             phases: PhaseStats::new(),
@@ -237,7 +251,10 @@ impl Engine {
 
         let mut decision = Decision::default();
         loop {
-            let take_arrival = match (&self.pending_arrival, self.events.peek_t()) {
+            // `peek_t` is `&mut`: the ladder schedule refills its sorted
+            // bottom tier lazily (a no-op for the heap).
+            let heap_t = self.events.peek_t();
+            let take_arrival = match (&self.pending_arrival, heap_t) {
                 (Some(a), Some(ht)) => a.t <= ht,
                 (Some(_), None) => true,
                 (None, _) => false,

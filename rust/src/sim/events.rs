@@ -39,7 +39,7 @@ pub enum EventKind {
     PolicyTimer { seq: u64 },
 }
 
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Event {
     pub t: f64,
     /// Monotone push sequence number: the deterministic tie-break.

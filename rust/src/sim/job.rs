@@ -104,6 +104,59 @@ impl Fenwick {
     }
 }
 
+/// Fenwick tree of u64 **sums** over class ranks — the need-weighted
+/// twin of [`Fenwick`]: where that one counts queued jobs per rank,
+/// this one accumulates their total server need, so prefix queries
+/// answer "how many servers' worth of queued work fits below this
+/// rank" in O(log C). Internally 1-indexed; the public API is
+/// 0-indexed.
+#[derive(Debug, Default)]
+pub struct FenwickSum {
+    tree: Vec<u64>,
+}
+
+impl FenwickSum {
+    pub fn new(n: usize) -> FenwickSum {
+        FenwickSum {
+            tree: vec![0; n + 1],
+        }
+    }
+
+    pub fn clear(&mut self) {
+        self.tree.fill(0);
+    }
+
+    #[inline]
+    pub fn add(&mut self, i: usize, w: u64) {
+        let mut i = i + 1;
+        while i < self.tree.len() {
+            self.tree[i] += w;
+            i += i & i.wrapping_neg();
+        }
+    }
+
+    #[inline]
+    pub fn sub(&mut self, i: usize, w: u64) {
+        let mut i = i + 1;
+        while i < self.tree.len() {
+            self.tree[i] -= w;
+            i += i & i.wrapping_neg();
+        }
+    }
+
+    /// Sum of the first `n` entries (indices 0..n).
+    #[inline]
+    pub fn prefix(&self, n: usize) -> u64 {
+        let mut i = n.min(self.tree.len() - 1);
+        let mut s = 0;
+        while i > 0 {
+            s += self.tree[i];
+            i -= i & i.wrapping_neg();
+        }
+        s
+    }
+}
+
 /// Indexed summary of the queue state, maintained by the event driver
 /// (engine / harness) in O(log C) per transition and consulted by every
 /// policy instead of O(C) scans:
@@ -136,6 +189,9 @@ pub struct QueueIndex {
     need_of_rank: Vec<u32>,
     /// Queued counts per rank.
     tree: Fenwick,
+    /// Queued **need sums** per rank (the need-weighted Fenwick): bounds
+    /// First-Fit's arrival-order scan by the total fitting mass.
+    wtree: FenwickSum,
     /// Per-class queued / running mirrors (authoritative for the index).
     queued: Vec<u32>,
     running: Vec<u32>,
@@ -161,6 +217,7 @@ impl QueueIndex {
             need_of_rank: ranks.iter().map(|&c| needs[c]).collect(),
             class_of_rank: ranks.iter().map(|&c| c as u32).collect(),
             tree: Fenwick::new(needs.len()),
+            wtree: FenwickSum::new(needs.len()),
             queued: vec![0; needs.len()],
             running: vec![0; needs.len()],
             total_queued: 0,
@@ -173,6 +230,7 @@ impl QueueIndex {
     /// Empty the index (all counts zero), retaining the rank tables.
     pub fn clear(&mut self) {
         self.tree.clear();
+        self.wtree.clear();
         self.queued.fill(0);
         self.running.fill(0);
         self.total_queued = 0;
@@ -204,10 +262,12 @@ impl QueueIndex {
         match dq {
             1 => {
                 self.tree.inc(self.rank_of[c] as usize);
+                self.wtree.add(self.rank_of[c] as usize, self.needs[c] as u64);
                 self.total_queued += 1;
             }
             -1 => {
                 self.tree.dec(self.rank_of[c] as usize);
+                self.wtree.sub(self.rank_of[c] as usize, self.needs[c] as u64);
                 self.total_queued -= 1;
             }
             _ => {}
@@ -289,6 +349,24 @@ impl QueueIndex {
         }
     }
 
+    /// Total server need of queued jobs whose class need fits in `free`
+    /// servers — the need-weighted Fenwick prefix, O(log C). Zero iff
+    /// nothing queued fits, so it doubles as the exact fit predicate;
+    /// its main use is bounding First-Fit's arrival-order scan (the
+    /// scan can stop once it has seen this much fitting mass — any job
+    /// it has not visited then needs more than `free` servers).
+    #[inline]
+    pub fn queued_need_fitting(&self, free: u32) -> u64 {
+        let hi = self.need_of_rank.partition_point(|&n| n <= free);
+        self.wtree.prefix(hi)
+    }
+
+    /// Total server need across all queued jobs, O(log C).
+    #[inline]
+    pub fn queued_need_total(&self) -> u64 {
+        self.wtree.prefix(self.num_ranks())
+    }
+
     /// Largest rank `< bound` with a queued job and need ≤ `free`.
     /// Walking `bound` downward through successive answers visits
     /// classes in MSF admission order, skipping empty ones in O(log C).
@@ -334,6 +412,15 @@ impl QueueIndex {
             self.tree.prefix(self.num_ranks()),
             self.total_queued,
             "Fenwick total diverged"
+        );
+        debug_assert_eq!(
+            self.queued_need_total(),
+            queued
+                .iter()
+                .zip(&self.needs)
+                .map(|(&q, &n)| q as u64 * n as u64)
+                .sum::<u64>(),
+            "weighted Fenwick total diverged"
         );
     }
 }
@@ -384,8 +471,21 @@ pub struct JobTable {
     next_free: Vec<u32>,
     ord_prev: Vec<u32>,
     ord_next: Vec<u32>,
+    /// Monotone arrival sequence per slot: compares arrival order in
+    /// O(1) (slots are recycled, so slot order says nothing).
+    ord_seq: Vec<u64>,
+    next_ord_seq: u64,
     ord_head: u32,
     ord_tail: u32,
+    /// Oldest **queued** job in arrival order — FCFS's head of line —
+    /// or NIL when nothing waits. Maintained incrementally: an arrival
+    /// into an empty queue sets it, admitting the HoL job advances it
+    /// forward past in-service jobs (each slot is walked at most once
+    /// per stay absent preemption, so amortized O(1)), and a
+    /// preemption rewinds it by arrival-sequence comparison. This is
+    /// the arrival-order-aware query the class-ranked [`QueueIndex`]
+    /// cannot answer.
+    hol: u32,
     free_head: u32,
     live: usize,
 
@@ -427,8 +527,11 @@ impl JobTable {
             next_free: Vec::new(),
             ord_prev: Vec::new(),
             ord_next: Vec::new(),
+            ord_seq: Vec::new(),
+            next_ord_seq: 0,
             ord_head: NIL,
             ord_tail: NIL,
+            hol: NIL,
             free_head: NIL,
             live: 0,
             pfx_threshold: u64::MAX,
@@ -511,11 +614,14 @@ impl JobTable {
             self.next_free.push(NIL);
             self.ord_prev.push(NIL);
             self.ord_next.push(NIL);
+            self.ord_seq.push(0);
             self.in_pfx.push(false);
             (self.state.len() - 1) as u32
         };
         // Link at the arrival-order tail.
         let i = slot as usize;
+        self.ord_seq[i] = self.next_ord_seq;
+        self.next_ord_seq += 1;
         self.ord_prev[i] = self.ord_tail;
         self.ord_next[i] = NIL;
         if self.ord_tail != NIL {
@@ -524,6 +630,10 @@ impl JobTable {
             self.ord_head = slot;
         }
         self.ord_tail = slot;
+        // A new (queued) tail is HoL only when nothing else waits.
+        if self.hol == NIL {
+            self.hol = slot;
+        }
         // A new tail job joins the prefix only while the prefix is short
         // of the threshold (it then is the minimal crossing element).
         if self.pfx_total < self.pfx_threshold {
@@ -539,6 +649,11 @@ impl JobTable {
     pub fn remove(&mut self, id: JobId) {
         let i = self.slot_checked(id);
         debug_assert!(self.state[i] != JobState::Free, "double remove");
+        // HoL maintenance (engine removals target running jobs, which
+        // are never HoL; be correct for direct queued removals anyway).
+        if self.hol == i as u32 {
+            self.advance_hol(self.ord_next[i]);
+        }
         // Prefix bookkeeping, phase 1 (needs the links still intact):
         // drop the job from the prefix and back the end pointer off it.
         let was_pfx = self.in_pfx[i];
@@ -658,6 +773,9 @@ impl JobTable {
         self.state[i] = JobState::Running;
         self.started[i] = now;
         self.starts[i] += 1;
+        if self.hol == i as u32 {
+            self.advance_hol(self.ord_next[i]);
+        }
         self.starts[i]
     }
 
@@ -669,6 +787,49 @@ impl JobTable {
         debug_assert!(rem >= -1e-9);
         self.remaining[i] = rem.max(0.0);
         self.state[i] = JobState::Queued;
+        // A preempted job re-queues at its original arrival position,
+        // which may precede the current HoL.
+        if self.hol == NIL || self.ord_seq[i] < self.ord_seq[self.hol as usize] {
+            self.hol = i as u32;
+        }
+    }
+
+    /// Advance the HoL cursor forward from `s` to the next queued slot.
+    fn advance_hol(&mut self, mut s: u32) {
+        while s != NIL && self.state[s as usize] != JobState::Queued {
+            s = self.ord_next[s as usize];
+        }
+        self.hol = s;
+    }
+
+    /// Oldest queued job in arrival order (FCFS's head of line), O(1).
+    #[inline]
+    pub fn hol_queued_slot(&self) -> Option<u32> {
+        if self.hol == NIL {
+            None
+        } else {
+            debug_assert_eq!(self.state[self.hol as usize], JobState::Queued);
+            Some(self.hol)
+        }
+    }
+
+    /// Visit **queued** jobs in arrival order, starting at the head of
+    /// line; `f` returns false to stop. Skips the in-service prefix
+    /// entirely (every job before the HoL is running by definition),
+    /// which is what makes the FCFS / First-Fit admission scans
+    /// O(queued visited) instead of O(jobs in system).
+    pub fn for_each_queued_from_hol(&self, f: &mut dyn FnMut(JobId, ClassId) -> bool) {
+        let mut s = self.hol;
+        while s != NIL {
+            let i = s as usize;
+            let next = self.ord_next[i];
+            if self.state[i] == JobState::Queued
+                && !f(pack(self.gen[i], s), self.class[i] as ClassId)
+            {
+                break;
+            }
+            s = next;
+        }
     }
 
     // ---- liveness queries (stale-safe, no panic) ----
@@ -743,8 +904,11 @@ impl JobTable {
         self.next_free.clear();
         self.ord_prev.clear();
         self.ord_next.clear();
+        self.ord_seq.clear();
+        self.next_ord_seq = 0;
         self.ord_head = NIL;
         self.ord_tail = NIL;
+        self.hol = NIL;
         self.free_head = NIL;
         self.live = 0;
         // Prefix state resets to fresh-construction values; the
@@ -1043,6 +1207,21 @@ mod tests {
                 idx.assert_consistent(&brute.queued, &brute.running);
                 assert_eq!(idx.min_queued_need(), brute.min_queued_need());
                 assert_eq!(idx.swap_trigger(), brute.trigger());
+                let brute_w: u64 = (0..nc)
+                    .map(|c| brute.queued[c] as u64 * needs[c] as u64)
+                    .sum();
+                assert_eq!(idx.queued_need_total(), brute_w);
+                let wfree = rng.below(k as u64 + 1) as u32;
+                let brute_wfit: u64 = (0..nc)
+                    .filter(|&c| needs[c] <= wfree)
+                    .map(|c| brute.queued[c] as u64 * needs[c] as u64)
+                    .sum();
+                assert_eq!(
+                    idx.queued_need_fitting(wfree),
+                    brute_wfit,
+                    "free={wfree} needs={needs:?} queued={:?}",
+                    brute.queued
+                );
                 assert_eq!(
                     idx.total_live(),
                     brute.queued.iter().sum::<u32>() + brute.running.iter().sum::<u32>()
@@ -1116,6 +1295,70 @@ mod tests {
         // New arrivals re-enter the (short) prefix.
         t.insert(0, 1, 1.0, 1.0);
         assert_eq!(t.prefix_len(), 1);
+    }
+
+    /// The HoL cursor always points at the oldest queued job, through
+    /// admissions (advance), departures, and preemptions (rewind) —
+    /// random transition sequences checked against a brute-force walk.
+    #[test]
+    fn hol_cursor_matches_brute_force() {
+        let mut rng = crate::util::rng::Rng::new(0x601_4ead);
+        for _ in 0..150 {
+            let mut t = JobTable::new();
+            let mut live: Vec<JobId> = Vec::new();
+            for step in 0..200 {
+                match rng.index(4) {
+                    0 => live.push(t.insert(rng.index(3), 1 + rng.below(4) as u32, 1.0, 0.0)),
+                    1 if !live.is_empty() => {
+                        let id = live[rng.index(live.len())];
+                        if t.is_queued(id) {
+                            t.start_service(id, 1.0);
+                        }
+                    }
+                    2 if !live.is_empty() => {
+                        let id = live[rng.index(live.len())];
+                        if t.is_running(id) {
+                            t.preempt(id, 1.0);
+                        }
+                    }
+                    3 if !live.is_empty() => {
+                        let i = rng.index(live.len());
+                        let id = live.swap_remove(i);
+                        if t.is_running(id) {
+                            t.remove(id);
+                        } else {
+                            live.push(id); // only complete running jobs
+                        }
+                    }
+                    _ => continue,
+                }
+                // Brute force: first queued job in arrival order.
+                let mut brute = None;
+                t.for_each_in_order(&mut |id, _, running| {
+                    if !running {
+                        brute = Some(JobTable::slot_of(id));
+                        return false;
+                    }
+                    true
+                });
+                assert_eq!(t.hol_queued_slot(), brute, "step {step}");
+                // The queued-from-HoL walk sees exactly the queued jobs
+                // of the full arrival-order walk, in the same order.
+                let mut fast = Vec::new();
+                t.for_each_queued_from_hol(&mut |id, _| {
+                    fast.push(id);
+                    true
+                });
+                let mut slow = Vec::new();
+                t.for_each_in_order(&mut |id, _, running| {
+                    if !running {
+                        slow.push(id);
+                    }
+                    true
+                });
+                assert_eq!(fast, slow, "step {step}");
+            }
+        }
     }
 
     #[test]

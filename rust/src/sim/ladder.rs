@@ -1,0 +1,762 @@
+//! A two-level hierarchical calendar ("ladder") event queue with O(1)
+//! amortized push/pop/cancel — the default timing structure behind
+//! [`EventSchedule`](crate::sim::schedule::EventSchedule).
+//!
+//! ## Layout
+//!
+//! Events flow through three tiers, earliest-first:
+//!
+//! * **bottom** — a small vector sorted ascending by `(t, seq)`, popped
+//!   through a head cursor (no memmove per pop). Everything with
+//!   `t < bot_hi` lives here.
+//! * **rungs** — a stack of bucket arrays. The base rung spans the
+//!   events observed at the last re-seed; each bucket covers a `width`
+//!   slice of time and holds its events unsorted. When the next
+//!   non-empty bucket comes due, its events are sorted once into the
+//!   bottom (and `bot_hi` advances past the bucket). A bucket holding
+//!   more than [`SPILL_THRESHOLD`] events is **spilled** instead: its
+//!   span is re-bucketed at finer width onto a child rung (the
+//!   "ladder" step), so heavy-tailed clusters never degenerate into one
+//!   giant sort — rung depth is capped at [`MAX_RUNGS`], beyond which a
+//!   dense bucket is simply sorted.
+//! * **overflow** — an unsorted catch-all for events beyond the last
+//!   rung's limit. When every rung is exhausted, the overflow is
+//!   re-seeded into a fresh base rung whose bucket count derives from
+//!   the **observed event span** (an EWMA of span/count across
+//!   re-seeds estimates the typical gap, targeting ~1 event per
+//!   bucket — the auto-tuning knob for workloads whose departure spans
+//!   drift, e.g. the Borg trace's heavy-tailed service times).
+//!
+//! Each event is touched O(1) times on its way down (overflow → rung
+//! bucket → bottom, plus at most [`MAX_RUNGS`] re-bucketings), giving
+//! O(1) amortized push/pop against the heap's O(log n) sifts.
+//!
+//! ## Bit-identical pop order
+//!
+//! Pops leave exclusively through the bottom, which is sorted by the
+//! same `(t, seq)` total order (`f64::total_cmp`, FIFO tie-break on the
+//! monotone push sequence) the indexed 4-ary heap uses. Region
+//! boundaries partition the time axis exactly: bottom `< bot_hi` ≤
+//! rung buckets (in bucket order) ≤ overflow, and bucket membership is
+//! decided against the *same* canonical boundary expression
+//! (`start + i·width`) used when draining, with an explicit fix-up
+//! after the float division so rounding can never place an event on
+//! the wrong side of a boundary. Pop order is therefore the global
+//! `(t, seq)` ascending order — bit-identical to the heap by
+//! construction, and enforced by the differential replay in
+//! `tests/prop_events.rs`.
+//!
+//! ## O(1) cancel
+//!
+//! A job-slot → location map (`Loc`) tracks which tier/bucket/index a
+//! departure occupies, maintained across every internal move, so
+//! `cancel_departure` / `has_departure` stay O(1) amortized exactly
+//! like the heap's position map (bucket/overflow removal is a
+//! swap-remove; a bottom removal shifts the sorted tail — short in the
+//! common case, but an all-ties cluster larger than a bucket drains
+//! into the bottom whole, making cancels within it O(cluster); see the
+//! ROADMAP note on tie-heavy deterministic workloads — the heap
+//! escape hatch has no such mode).
+
+use crate::policy::JobId;
+use crate::sim::events::{Event, EventKind};
+use crate::sim::job::JobTable;
+
+/// Buckets denser than this are re-bucketed onto a child rung.
+const SPILL_THRESHOLD: usize = 64;
+/// Maximum rung-stack depth; denser buckets are sorted directly.
+const MAX_RUNGS: usize = 8;
+/// Re-seeds at or below this size skip the rung and sort directly.
+const DIRECT_TO_BOTTOM: usize = 8;
+/// Bucket-count bounds for rung construction.
+const MIN_BUCKETS: usize = 8;
+const MAX_BUCKETS: usize = 4096;
+
+/// Where a scheduled departure currently lives.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Loc {
+    None,
+    Bottom(u32),
+    Rung { rung: u32, bucket: u32, idx: u32 },
+    Overflow(u32),
+}
+
+/// One bucket array of the ladder.
+struct Rung {
+    /// Time of bucket 0's lower boundary.
+    start: f64,
+    /// Bucket width; boundary `i` is canonically `start + i·width`.
+    width: f64,
+    /// Upper bound of the rung's span (exclusive): push eligibility is
+    /// `t < limit`, and the last bucket's end is `limit` exactly.
+    limit: f64,
+    /// Next bucket to drain; buckets below hold nothing (their span has
+    /// been handed to the bottom or to a child rung).
+    cur: usize,
+    buckets: Vec<Vec<Event>>,
+}
+
+impl Rung {
+    #[inline]
+    fn bucket_end(&self, b: usize) -> f64 {
+        if b + 1 == self.buckets.len() {
+            self.limit
+        } else {
+            self.start + (b as f64 + 1.0) * self.width
+        }
+    }
+
+    /// Bucket index for `t`, agreeing *exactly* with the canonical
+    /// boundaries: float division only seeds the guess, then the
+    /// fix-up walks (at most a step or two) so that
+    /// `start + i·width ≤ t < bucket_end(i)` holds by the same
+    /// arithmetic the drain path uses.
+    #[inline]
+    fn bucket_index(&self, t: f64) -> usize {
+        let nb = self.buckets.len();
+        // Negative offsets (events clamped in from below) saturate to 0.
+        let mut i = (((t - self.start) / self.width) as usize).min(nb - 1);
+        while i > 0 && t < self.start + i as f64 * self.width {
+            i -= 1;
+        }
+        while i + 1 < nb && t >= self.start + (i as f64 + 1.0) * self.width {
+            i += 1;
+        }
+        i
+    }
+
+    fn reset(&mut self) {
+        self.cur = 0;
+        for b in &mut self.buckets {
+            debug_assert!(b.is_empty(), "recycling a rung with live events");
+            b.clear();
+        }
+    }
+}
+
+/// Smallest f64 strictly greater than finite `x` (rung limits must sit
+/// strictly above the largest event they admit). Hand-rolled rather
+/// than `f64::next_up` (stable only since 1.86) to hold the crate's
+/// documented MSRV of 1.73 — see rust-toolchain.toml.
+#[inline]
+fn next_up(x: f64) -> f64 {
+    debug_assert!(x.is_finite());
+    if x == 0.0 {
+        f64::from_bits(1)
+    } else if x > 0.0 {
+        f64::from_bits(x.to_bits() + 1)
+    } else {
+        f64::from_bits(x.to_bits() - 1)
+    }
+}
+
+#[inline]
+fn by_t_seq(a: &Event, b: &Event) -> std::cmp::Ordering {
+    a.t.total_cmp(&b.t).then(a.seq.cmp(&b.seq))
+}
+
+/// Record `e`'s location if it is a departure. Free function over the
+/// map so callers can update locations while other fields of the queue
+/// are borrowed (disjoint-field borrows).
+#[inline]
+fn note_loc(map: &mut [Loc], e: &Event, loc: Loc) {
+    if let EventKind::Departure { job } = e.kind {
+        map[JobTable::slot_of(job) as usize] = loc;
+    }
+}
+
+/// The ladder queue. See the module docs for layout and invariants.
+pub struct LadderQueue {
+    /// Sorted ascending by `(t, seq)`; `[head..]` is the live region.
+    bottom: Vec<Event>,
+    head: usize,
+    /// Bottom region boundary: every event with `t < bot_hi` is in the
+    /// bottom, and everything outside the bottom has `t ≥ bot_hi`.
+    bot_hi: f64,
+    /// Base rung first; deeper rungs cover earlier sub-spans.
+    rungs: Vec<Rung>,
+    /// Recycled rung allocations.
+    spare: Vec<Rung>,
+    overflow: Vec<Event>,
+    /// Scratch buffer for spill redistribution.
+    scratch: Vec<Event>,
+    /// loc[job_slot] — O(1) cancel/has-departure, like the heap's map.
+    loc: Vec<Loc>,
+    next_seq: u64,
+    len: usize,
+    /// EWMA of (span / count) across re-seeds: the observed mean event
+    /// gap driving bucket-count auto-tuning.
+    gap_ewma: f64,
+    spills: u64,
+    reseeds: u64,
+}
+
+impl Default for LadderQueue {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LadderQueue {
+    pub fn new() -> LadderQueue {
+        LadderQueue {
+            bottom: Vec::new(),
+            head: 0,
+            bot_hi: f64::NEG_INFINITY,
+            rungs: Vec::new(),
+            spare: Vec::new(),
+            overflow: Vec::new(),
+            scratch: Vec::new(),
+            loc: Vec::new(),
+            next_seq: 0,
+            len: 0,
+            gap_ewma: 0.0,
+            spills: 0,
+            reseeds: 0,
+        }
+    }
+
+    #[inline]
+    fn job_slot(job: JobId) -> usize {
+        JobTable::slot_of(job) as usize
+    }
+
+    /// Record `e`'s location if it is a departure.
+    #[inline]
+    fn note(&mut self, e: &Event, loc: Loc) {
+        note_loc(&mut self.loc, e, loc);
+    }
+
+    pub fn push(&mut self, t: f64, kind: EventKind) {
+        debug_assert!(t.is_finite(), "event time must be finite, got {t}");
+        if let EventKind::Departure { job } = kind {
+            let slot = Self::job_slot(job);
+            if slot >= self.loc.len() {
+                self.loc.resize(slot + 1, Loc::None);
+            }
+            debug_assert!(
+                self.loc[slot] == Loc::None,
+                "job already has a scheduled departure"
+            );
+        }
+        let e = Event {
+            t,
+            seq: self.next_seq,
+            kind,
+        };
+        self.next_seq += 1;
+        self.len += 1;
+        if t < self.bot_hi {
+            self.bottom_insert(e);
+            return;
+        }
+        // Deepest rung covers the earliest region beyond the bottom.
+        // Exhausted rungs (cur == buckets, i.e. empty and awaiting pop)
+        // are skipped: an event falling in their span clamps into the
+        // next live rung's current bucket, which drains first and is
+        // sorted — order is preserved (see module docs).
+        for r in (0..self.rungs.len()).rev() {
+            let nb = self.rungs[r].buckets.len();
+            if self.rungs[r].cur == nb || t >= self.rungs[r].limit {
+                continue;
+            }
+            let b = self.rungs[r].bucket_index(t).max(self.rungs[r].cur);
+            let idx = self.rungs[r].buckets[b].len();
+            self.rungs[r].buckets[b].push(e);
+            self.note(
+                &e,
+                Loc::Rung {
+                    rung: r as u32,
+                    bucket: b as u32,
+                    idx: idx as u32,
+                },
+            );
+            return;
+        }
+        let idx = self.overflow.len();
+        self.overflow.push(e);
+        self.note(&e, Loc::Overflow(idx as u32));
+    }
+
+    /// Sorted insert into the live bottom region, keeping locations of
+    /// the shifted tail correct. The tail is short in the common case —
+    /// the bottom holds one drained bucket (or an undivisible tie run).
+    fn bottom_insert(&mut self, e: Event) {
+        let live = &self.bottom[self.head..];
+        let pos = self.head + live.partition_point(|x| by_t_seq(x, &e).is_lt());
+        self.bottom.insert(pos, e);
+        for (i, ev) in self.bottom.iter().enumerate().skip(pos) {
+            note_loc(&mut self.loc, ev, Loc::Bottom(i as u32));
+        }
+    }
+
+    /// Time of the earliest event. `&mut`: refills the bottom lazily.
+    #[inline]
+    pub fn peek_t(&mut self) -> Option<f64> {
+        if self.head == self.bottom.len() && !self.refill_bottom() {
+            return None;
+        }
+        Some(self.bottom[self.head].t)
+    }
+
+    #[inline]
+    pub fn pop(&mut self) -> Option<Event> {
+        if self.head == self.bottom.len() && !self.refill_bottom() {
+            return None;
+        }
+        let e = self.bottom[self.head];
+        self.head += 1;
+        self.note(&e, Loc::None);
+        self.len -= 1;
+        Some(e)
+    }
+
+    /// Refill the (fully consumed) bottom from the rungs/overflow.
+    /// Returns false iff the queue is empty.
+    fn refill_bottom(&mut self) -> bool {
+        debug_assert_eq!(self.head, self.bottom.len(), "bottom not consumed");
+        self.bottom.clear();
+        self.head = 0;
+        loop {
+            let Some(r) = self.rungs.len().checked_sub(1) else {
+                if self.overflow.is_empty() {
+                    return false;
+                }
+                self.reseed();
+                if self.head < self.bottom.len() {
+                    return true; // tiny/degenerate overflow went straight in
+                }
+                continue;
+            };
+            let nb = self.rungs[r].buckets.len();
+            while self.rungs[r].cur < nb && self.rungs[r].buckets[self.rungs[r].cur].is_empty() {
+                self.rungs[r].cur += 1;
+            }
+            if self.rungs[r].cur == nb {
+                let mut dead = self.rungs.pop().expect("rung exists");
+                dead.reset();
+                self.spare.push(dead);
+                continue;
+            }
+            let b = self.rungs[r].cur;
+            self.rungs[r].cur += 1;
+            let be = self.rungs[r].bucket_end(b);
+            if self.rungs[r].buckets[b].len() > SPILL_THRESHOLD
+                && self.rungs.len() < MAX_RUNGS
+                && self.try_spill(r, b)
+            {
+                continue;
+            }
+            // Drain the bucket into the bottom: swap allocations, sort
+            // once, advance the boundary past the bucket.
+            std::mem::swap(&mut self.bottom, &mut self.rungs[r].buckets[b]);
+            self.bottom.sort_unstable_by(by_t_seq);
+            for (i, ev) in self.bottom.iter().enumerate() {
+                note_loc(&mut self.loc, ev, Loc::Bottom(i as u32));
+            }
+            self.bot_hi = be;
+            return true;
+        }
+    }
+
+    /// Re-bucket rung `r`'s bucket `b` onto a finer child rung. Returns
+    /// false (leaving the bucket untouched) when the events carry no
+    /// usable time spread — the caller sorts them directly instead.
+    fn try_spill(&mut self, r: usize, b: usize) -> bool {
+        let (mut mn, mut mx) = (f64::INFINITY, f64::NEG_INFINITY);
+        for e in &self.rungs[r].buckets[b] {
+            mn = mn.min(e.t);
+            mx = mx.max(e.t);
+        }
+        if mx <= mn {
+            return false; // all ties (or a single time): width would be 0
+        }
+        let start = mn;
+        let limit = next_up(mx);
+        let n = self.rungs[r].buckets[b].len();
+        let nb = n.clamp(MIN_BUCKETS, MAX_BUCKETS);
+        let width = (limit - start) / nb as f64;
+        if width <= 0.0 || !width.is_finite() {
+            return false;
+        }
+        debug_assert!(self.scratch.is_empty());
+        std::mem::swap(&mut self.scratch, &mut self.rungs[r].buckets[b]);
+        let child = self.make_rung(start, width, limit, nb);
+        let c = self.rungs.len();
+        self.rungs.push(child);
+        let events = std::mem::take(&mut self.scratch);
+        for e in &events {
+            let cb = self.rungs[c].bucket_index(e.t);
+            let idx = self.rungs[c].buckets[cb].len();
+            self.rungs[c].buckets[cb].push(*e);
+            self.note(
+                e,
+                Loc::Rung {
+                    rung: c as u32,
+                    bucket: cb as u32,
+                    idx: idx as u32,
+                },
+            );
+        }
+        self.scratch = events;
+        self.scratch.clear();
+        self.spills += 1;
+        true
+    }
+
+    /// Build the base rung from the accumulated overflow (or sort a
+    /// tiny / zero-spread overflow straight into the bottom).
+    fn reseed(&mut self) {
+        self.reseeds += 1;
+        let (mut mn, mut mx) = (f64::INFINITY, f64::NEG_INFINITY);
+        for e in &self.overflow {
+            mn = mn.min(e.t);
+            mx = mx.max(e.t);
+        }
+        let n = self.overflow.len();
+        let span = next_up(mx) - mn;
+        let direct = n <= DIRECT_TO_BOTTOM || mx <= mn || span <= 0.0 || !span.is_finite();
+        if !direct {
+            // Auto-tune the bucket count toward ~1 event per bucket at
+            // the observed mean gap (EWMA across re-seeds).
+            let gap_obs = span / n as f64;
+            self.gap_ewma = if self.gap_ewma > 0.0 {
+                0.75 * self.gap_ewma + 0.25 * gap_obs
+            } else {
+                gap_obs
+            };
+            let nb = ((span / self.gap_ewma).ceil() as usize).clamp(MIN_BUCKETS, MAX_BUCKETS);
+            let width = span / nb as f64;
+            if width > 0.0 && width.is_finite() {
+                let rung = self.make_rung(mn, width, next_up(mx), nb);
+                let rr = self.rungs.len();
+                self.rungs.push(rung);
+                let events = std::mem::take(&mut self.overflow);
+                for e in &events {
+                    let b = self.rungs[rr].bucket_index(e.t);
+                    let idx = self.rungs[rr].buckets[b].len();
+                    self.rungs[rr].buckets[b].push(*e);
+                    self.note(
+                        e,
+                        Loc::Rung {
+                            rung: rr as u32,
+                            bucket: b as u32,
+                            idx: idx as u32,
+                        },
+                    );
+                }
+                self.overflow = events;
+                self.overflow.clear();
+                // Close the [old bot_hi, rung.start) gap: later pushes in
+                // it belong to the (empty) bottom, which pops first.
+                self.bot_hi = mn;
+                return;
+            }
+        }
+        // Degenerate or tiny: straight into the bottom.
+        std::mem::swap(&mut self.bottom, &mut self.overflow);
+        self.overflow.clear();
+        self.head = 0;
+        self.bottom.sort_unstable_by(by_t_seq);
+        for (i, ev) in self.bottom.iter().enumerate() {
+            note_loc(&mut self.loc, ev, Loc::Bottom(i as u32));
+        }
+        self.bot_hi = next_up(mx);
+    }
+
+    fn make_rung(&mut self, start: f64, width: f64, limit: f64, nb: usize) -> Rung {
+        let mut rung = self.spare.pop().unwrap_or_else(|| Rung {
+            start: 0.0,
+            width: 0.0,
+            limit: 0.0,
+            cur: 0,
+            buckets: Vec::new(),
+        });
+        rung.start = start;
+        rung.width = width;
+        rung.limit = limit;
+        rung.cur = 0;
+        if rung.buckets.len() < nb {
+            rung.buckets.resize_with(nb, Vec::new);
+        } else {
+            rung.buckets.truncate(nb);
+        }
+        rung
+    }
+
+    /// Remove `job`'s departure event in place. Returns false if no
+    /// departure is scheduled for this job.
+    pub fn cancel_departure(&mut self, job: JobId) -> bool {
+        let slot = Self::job_slot(job);
+        let Some(&loc) = self.loc.get(slot) else {
+            return false;
+        };
+        match loc {
+            Loc::None => return false,
+            Loc::Bottom(i) => {
+                let i = i as usize;
+                debug_assert!(i >= self.head, "cancelling an already-popped event");
+                debug_assert!(
+                    matches!(self.bottom[i].kind, EventKind::Departure { job: j } if j == job),
+                    "ladder bottom location out of sync"
+                );
+                self.bottom.remove(i);
+                for (j, ev) in self.bottom.iter().enumerate().skip(i) {
+                    note_loc(&mut self.loc, ev, Loc::Bottom(j as u32));
+                }
+            }
+            Loc::Rung { rung, bucket, idx } => {
+                let (r, b, i) = (rung as usize, bucket as usize, idx as usize);
+                debug_assert!(
+                    matches!(self.rungs[r].buckets[b][i].kind,
+                             EventKind::Departure { job: j } if j == job),
+                    "ladder rung location out of sync"
+                );
+                self.rungs[r].buckets[b].swap_remove(i);
+                if i < self.rungs[r].buckets[b].len() {
+                    let moved = self.rungs[r].buckets[b][i];
+                    self.note(&moved, Loc::Rung { rung, bucket, idx });
+                }
+            }
+            Loc::Overflow(i) => {
+                let i = i as usize;
+                debug_assert!(
+                    matches!(self.overflow[i].kind, EventKind::Departure { job: j } if j == job),
+                    "ladder overflow location out of sync"
+                );
+                self.overflow.swap_remove(i);
+                if i < self.overflow.len() {
+                    let moved = self.overflow[i];
+                    self.note(&moved, Loc::Overflow(i as u32));
+                }
+            }
+        }
+        self.loc[slot] = Loc::None;
+        self.len -= 1;
+        true
+    }
+
+    /// True iff `job` currently has a scheduled departure.
+    #[inline]
+    pub fn has_departure(&self, job: JobId) -> bool {
+        self.loc
+            .get(Self::job_slot(job))
+            .map(|&l| l != Loc::None)
+            .unwrap_or(false)
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Drop all events and reset the sequence counter (engine reuse).
+    /// Bucket/rung allocations are retained; tuning state resets so a
+    /// cleared queue behaves exactly like a fresh one.
+    pub fn clear(&mut self) {
+        self.bottom.clear();
+        self.head = 0;
+        self.bot_hi = f64::NEG_INFINITY;
+        while let Some(mut r) = self.rungs.pop() {
+            for b in &mut r.buckets {
+                b.clear();
+            }
+            r.cur = 0;
+            self.spare.push(r);
+        }
+        self.overflow.clear();
+        for l in &mut self.loc {
+            *l = Loc::None;
+        }
+        self.next_seq = 0;
+        self.len = 0;
+        self.gap_ewma = 0.0;
+        self.spills = 0;
+        self.reseeds = 0;
+    }
+
+    /// Rung spills performed so far (observability; tests use it to
+    /// prove heavy-tailed inputs actually exercised the spill path).
+    pub fn spills(&self) -> u64 {
+        self.spills
+    }
+
+    /// Overflow re-seeds performed so far.
+    pub fn reseeds(&self) -> u64 {
+        self.reseeds
+    }
+
+    /// Current rung-stack depth.
+    pub fn rung_depth(&self) -> usize {
+        self.rungs.len()
+    }
+}
+
+impl crate::sim::schedule::EventSchedule for LadderQueue {
+    #[inline]
+    fn push(&mut self, t: f64, kind: EventKind) {
+        LadderQueue::push(self, t, kind)
+    }
+
+    #[inline]
+    fn peek_t(&mut self) -> Option<f64> {
+        LadderQueue::peek_t(self)
+    }
+
+    #[inline]
+    fn pop(&mut self) -> Option<Event> {
+        LadderQueue::pop(self)
+    }
+
+    fn cancel_departure(&mut self, job: JobId) -> bool {
+        LadderQueue::cancel_departure(self, job)
+    }
+
+    #[inline]
+    fn has_departure(&self, job: JobId) -> bool {
+        LadderQueue::has_departure(self, job)
+    }
+
+    fn len(&self) -> usize {
+        LadderQueue::len(self)
+    }
+
+    fn clear(&mut self) {
+        LadderQueue::clear(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = LadderQueue::new();
+        q.push(3.0, EventKind::Arrival);
+        q.push(1.0, EventKind::Arrival);
+        q.push(2.0, EventKind::PolicyTimer { seq: 0 });
+        let times: Vec<f64> = std::iter::from_fn(|| q.pop()).map(|e| e.t).collect();
+        assert_eq!(times, vec![1.0, 2.0, 3.0]);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn ties_pop_fifo() {
+        let mut q = LadderQueue::new();
+        for i in 0..10u64 {
+            q.push(1.0, EventKind::Departure { job: i });
+        }
+        let mut expect = 0u64;
+        while let Some(e) = q.pop() {
+            assert_eq!(e.t, 1.0);
+            match e.kind {
+                EventKind::Departure { job } => {
+                    assert_eq!(job, expect, "equal-time events must pop in push order");
+                    expect += 1;
+                }
+                _ => panic!("wrong kind"),
+            }
+        }
+        assert_eq!(expect, 10);
+    }
+
+    #[test]
+    fn cancel_works_in_every_tier() {
+        let mut q = LadderQueue::new();
+        for i in 0..40u64 {
+            q.push(i as f64 * 0.5, EventKind::Departure { job: i });
+        }
+        // Force a partial drain so events sit in bottom AND rungs.
+        assert_eq!(q.pop().unwrap().t, 0.0);
+        assert!(q.rung_depth() > 0 || q.head < q.bottom.len());
+        // Overflow tier: push beyond the current base rung's limit.
+        q.push(1.0e6, EventKind::Departure { job: 99 });
+        for job in [1u64, 20, 39, 99] {
+            assert!(q.has_departure(job), "job {job}");
+            assert!(q.cancel_departure(job), "job {job}");
+            assert!(!q.cancel_departure(job), "double cancel must fail");
+        }
+        assert!(!q.cancel_departure(7_000), "unknown job must fail");
+        let mut last = (f64::NEG_INFINITY, 0u64);
+        let mut n = 0;
+        while let Some(e) = q.pop() {
+            assert!((e.t, e.seq) > last, "order violated");
+            last = (e.t, e.seq);
+            if let EventKind::Departure { job } = e.kind {
+                assert!(![1u64, 20, 39, 99].contains(&job), "cancelled {job} popped");
+            }
+            n += 1;
+        }
+        assert_eq!(n, 40 - 1 - 4);
+    }
+
+    #[test]
+    fn cancel_then_reschedule() {
+        let mut q = LadderQueue::new();
+        q.push(5.0, EventKind::Departure { job: 3 });
+        q.push(1.0, EventKind::Arrival);
+        assert!(q.cancel_departure(3));
+        q.push(2.0, EventKind::Departure { job: 3 });
+        assert_eq!(q.pop().unwrap().t, 1.0);
+        let e = q.pop().unwrap();
+        assert_eq!(e.t, 2.0);
+        assert!(matches!(e.kind, EventKind::Departure { job: 3 }));
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn clear_resets_sequence_for_reuse() {
+        let mut q = LadderQueue::new();
+        for i in 0..100u64 {
+            q.push((i % 13) as f64, EventKind::Departure { job: i });
+        }
+        q.pop();
+        q.clear();
+        assert!(q.is_empty());
+        assert!(!q.has_departure(0));
+        q.push(4.0, EventKind::Arrival);
+        assert_eq!(q.pop().unwrap().seq, 0, "sequence restarts after clear");
+    }
+
+    #[test]
+    fn dense_bucket_spills_to_child_rung() {
+        let mut q = LadderQueue::new();
+        // A tight cluster plus a far tail: the re-seeded base rung puts
+        // the cluster into few buckets, which must spill.
+        for i in 0..600u64 {
+            q.push(10.0 + (i as f64) * 1e-6, EventKind::Departure { job: i });
+        }
+        q.push(1.0e9, EventKind::Arrival);
+        let first = q.pop().unwrap();
+        assert_eq!(first.t, 10.0);
+        assert!(q.spills() > 0, "cluster+tail input must exercise the spill path");
+        let mut last = (first.t, first.seq);
+        while let Some(e) = q.pop() {
+            assert!((e.t, e.seq) > last);
+            last = (e.t, e.seq);
+        }
+    }
+
+    #[test]
+    fn all_equal_times_do_not_spill_forever() {
+        let mut q = LadderQueue::new();
+        for i in 0..500u64 {
+            q.push(7.0, EventKind::Departure { job: i });
+        }
+        let mut expect = 0u64;
+        while let Some(e) = q.pop() {
+            match e.kind {
+                EventKind::Departure { job } => {
+                    assert_eq!(job, expect);
+                    expect += 1;
+                }
+                _ => unreachable!(),
+            }
+        }
+        assert_eq!(expect, 500);
+    }
+}

@@ -3,14 +3,18 @@
 pub mod engine;
 pub mod events;
 pub mod job;
+pub mod ladder;
 pub mod metrics;
 pub mod phase;
+pub mod schedule;
 pub mod timeseries;
 
 pub use engine::{Engine, SimConfig};
 pub use job::QueueIndex;
+pub use ladder::LadderQueue;
 pub use metrics::{Metrics, ReplicationPool, SimResult, UnitStats};
 pub use phase::PhaseStats;
+pub use schedule::{EventSchedule, EventScheduleKind, Schedule};
 pub use timeseries::{Timeseries, TimeseriesSpec};
 
 use crate::policy::Policy;

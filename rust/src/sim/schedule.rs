@@ -1,0 +1,205 @@
+//! Pluggable event-timing structures.
+//!
+//! The engine's event loop is written against [`EventSchedule`] — the
+//! minimal contract a future-event set must honor — with two
+//! implementations behind the [`Schedule`] dispatcher:
+//!
+//! * [`EventQueue`] — the indexed 4-ary min-heap (O(log n) push/pop,
+//!   O(log n) cancel-in-place), the reference implementation;
+//! * [`LadderQueue`](crate::sim::ladder::LadderQueue) — a two-level
+//!   hierarchical calendar ("ladder") queue with O(1) amortized
+//!   push/pop/cancel, the default since this structure landed.
+//!
+//! **Contract.** Both implementations pop in the identical total order
+//! on `(t, seq)` — time ascending, equal times in push (FIFO) order via
+//! the monotone per-queue sequence number — and both keep an O(1)
+//! job-slot → location map so `cancel_departure` / `has_departure` are
+//! exact. Because the engine's trajectory is a pure function of pop
+//! order, heap and ladder runs are **bit-identical** end to end; the
+//! differential replay in `tests/prop_events.rs` enforces this on
+//! random interleavings and on full fig5/fig6-shaped engine runs.
+//!
+//! Selection: [`SimConfig::event_schedule`](crate::sim::SimConfig)
+//! (`None` follows the process default) with the `QS_EVENT_SCHEDULE`
+//! environment escape hatch (`heap` | `ladder`; unset = ladder).
+
+use crate::policy::JobId;
+use crate::sim::events::{Event, EventKind, EventQueue};
+use crate::sim::ladder::LadderQueue;
+
+/// The future-event-set contract shared by the heap and the ladder.
+///
+/// `peek_t` takes `&mut self` because the ladder refills its sorted
+/// bottom rung lazily; the heap ignores the mutability.
+pub trait EventSchedule {
+    fn push(&mut self, t: f64, kind: EventKind);
+    /// Time of the earliest event without popping it.
+    fn peek_t(&mut self) -> Option<f64>;
+    fn pop(&mut self) -> Option<Event>;
+    /// Remove `job`'s departure event in place; false if none scheduled.
+    fn cancel_departure(&mut self, job: JobId) -> bool;
+    /// True iff `job` currently has a scheduled departure.
+    fn has_departure(&self, job: JobId) -> bool;
+    fn len(&self) -> usize;
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+    /// Drop all events and reset the sequence counter (engine reuse).
+    fn clear(&mut self);
+}
+
+impl EventSchedule for EventQueue {
+    #[inline]
+    fn push(&mut self, t: f64, kind: EventKind) {
+        EventQueue::push(self, t, kind)
+    }
+
+    #[inline]
+    fn peek_t(&mut self) -> Option<f64> {
+        EventQueue::peek_t(self)
+    }
+
+    #[inline]
+    fn pop(&mut self) -> Option<Event> {
+        EventQueue::pop(self)
+    }
+
+    fn cancel_departure(&mut self, job: JobId) -> bool {
+        EventQueue::cancel_departure(self, job)
+    }
+
+    #[inline]
+    fn has_departure(&self, job: JobId) -> bool {
+        EventQueue::has_departure(self, job)
+    }
+
+    fn len(&self) -> usize {
+        EventQueue::len(self)
+    }
+
+    fn clear(&mut self) {
+        EventQueue::clear(self)
+    }
+}
+
+/// Which timing structure the engine runs on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EventScheduleKind {
+    /// Indexed 4-ary min-heap (the reference structure).
+    Heap,
+    /// Two-level hierarchical calendar queue (the default).
+    Ladder,
+}
+
+impl EventScheduleKind {
+    /// Process-wide default: `QS_EVENT_SCHEDULE=heap|ladder` (unset or
+    /// empty = ladder). Any other value panics — a typo must not
+    /// silently select a structure.
+    pub fn from_env() -> EventScheduleKind {
+        match std::env::var("QS_EVENT_SCHEDULE").as_deref() {
+            Ok("heap") => EventScheduleKind::Heap,
+            Ok("ladder") | Ok("") | Err(_) => EventScheduleKind::Ladder,
+            Ok(other) => panic!("QS_EVENT_SCHEDULE must be 'heap' or 'ladder', got '{other}'"),
+        }
+    }
+}
+
+/// Enum dispatcher over the two implementations: one predictable branch
+/// per operation instead of a vtable load, and the engine stays a single
+/// (non-generic) type.
+pub enum Schedule {
+    Heap(EventQueue),
+    Ladder(LadderQueue),
+}
+
+impl Schedule {
+    pub fn new(kind: EventScheduleKind) -> Schedule {
+        match kind {
+            EventScheduleKind::Heap => Schedule::Heap(EventQueue::new()),
+            EventScheduleKind::Ladder => Schedule::Ladder(LadderQueue::new()),
+        }
+    }
+
+    #[inline]
+    pub fn push(&mut self, t: f64, kind: EventKind) {
+        match self {
+            Schedule::Heap(q) => q.push(t, kind),
+            Schedule::Ladder(q) => q.push(t, kind),
+        }
+    }
+
+    #[inline]
+    pub fn peek_t(&mut self) -> Option<f64> {
+        match self {
+            Schedule::Heap(q) => q.peek_t(),
+            Schedule::Ladder(q) => q.peek_t(),
+        }
+    }
+
+    #[inline]
+    pub fn pop(&mut self) -> Option<Event> {
+        match self {
+            Schedule::Heap(q) => q.pop(),
+            Schedule::Ladder(q) => q.pop(),
+        }
+    }
+
+    #[inline]
+    pub fn cancel_departure(&mut self, job: JobId) -> bool {
+        match self {
+            Schedule::Heap(q) => q.cancel_departure(job),
+            Schedule::Ladder(q) => q.cancel_departure(job),
+        }
+    }
+
+    #[inline]
+    pub fn has_departure(&self, job: JobId) -> bool {
+        match self {
+            Schedule::Heap(q) => q.has_departure(job),
+            Schedule::Ladder(q) => q.has_departure(job),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Schedule::Heap(q) => q.len(),
+            Schedule::Ladder(q) => q.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn clear(&mut self) {
+        match self {
+            Schedule::Heap(q) => q.clear(),
+            Schedule::Ladder(q) => q.clear(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dispatcher_round_trips_both_kinds() {
+        for kind in [EventScheduleKind::Heap, EventScheduleKind::Ladder] {
+            let mut s = Schedule::new(kind);
+            assert!(s.is_empty());
+            s.push(2.0, EventKind::Arrival);
+            s.push(1.0, EventKind::Departure { job: 9 });
+            assert_eq!(s.len(), 2);
+            assert!(s.has_departure(9));
+            assert_eq!(s.peek_t(), Some(1.0));
+            assert!(s.cancel_departure(9));
+            assert!(!s.has_departure(9));
+            assert_eq!(s.pop().unwrap().t, 2.0);
+            assert!(s.pop().is_none());
+            s.push(5.0, EventKind::Arrival);
+            s.clear();
+            assert!(s.is_empty());
+        }
+    }
+}

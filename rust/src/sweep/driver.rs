@@ -16,7 +16,12 @@
 //! assignment deadline — a unit held past it is requeued to the next
 //! `next` request (heterogeneous worker pacing), with the usual
 //! dedupe-by-unit-id if the slow worker eventually reports anyway.
-//! Multi-machine auth remains a follow-up tracked in ROADMAP.md.
+//!
+//! Auth: with `QS_SWEEP_TOKEN` set (or [`Driver::with_auth_token`]),
+//! the driver requires every worker's opening `hello` to carry the
+//! matching shared secret before the spec is revealed; mismatches get
+//! an `err` line and a closed connection. Unset = open driver (the
+//! loopback/test default).
 
 use crate::experiments::{sweep_units, Point, SweepGrid, UnitRun, UnitSource};
 use crate::sweep::{proto, SweepSpec};
@@ -38,6 +43,14 @@ fn unit_timeout_from_env() -> Option<Duration> {
         .map(Duration::from_secs_f64)
 }
 
+/// Optional shared-secret token from the environment (`QS_SWEEP_TOKEN`;
+/// unset or empty = open driver, the loopback/test default).
+pub(crate) fn auth_token_from_env() -> Option<String> {
+    std::env::var("QS_SWEEP_TOKEN")
+        .ok()
+        .filter(|t| !t.is_empty())
+}
+
 /// A bound (but not yet serving) sweep driver. `bind` then `run`; the
 /// split lets callers learn the OS-assigned port (`addr = "host:0"`)
 /// before workers are pointed at it.
@@ -46,6 +59,7 @@ pub struct Driver {
     addr: SocketAddr,
     spec: SweepSpec,
     unit_timeout: Option<Duration>,
+    auth_token: Option<String>,
 }
 
 impl Driver {
@@ -57,6 +71,7 @@ impl Driver {
             addr,
             spec: spec.clone(),
             unit_timeout: unit_timeout_from_env(),
+            auth_token: auth_token_from_env(),
         })
     }
 
@@ -64,6 +79,14 @@ impl Driver {
     /// `bind` seeds it from `QS_UNIT_TIMEOUT_SECS`.
     pub fn with_unit_timeout(mut self, timeout: Option<Duration>) -> Driver {
         self.unit_timeout = timeout;
+        self
+    }
+
+    /// Override the shared-secret auth token (`None` = accept any
+    /// peer). `bind` seeds it from `QS_SWEEP_TOKEN`; tests pin it here
+    /// so parallel tests never race on process-global env state.
+    pub fn with_auth_token(mut self, token: Option<String>) -> Driver {
+        self.auth_token = token.filter(|t| !t.is_empty());
         self
     }
 
@@ -83,6 +106,7 @@ impl Driver {
             addr: self.addr,
             spec: &self.spec,
             unit_timeout: self.unit_timeout,
+            auth_token: self.auth_token.as_deref(),
         };
         sweep_units(&grid, &wl_at, &mut source)
     }
@@ -129,6 +153,7 @@ struct Serve<'a> {
     addr: SocketAddr,
     spec: &'a SweepSpec,
     unit_timeout: Option<Duration>,
+    auth_token: Option<&'a str>,
 }
 
 impl UnitSource for Serve<'_> {
@@ -153,6 +178,7 @@ impl UnitSource for Serve<'_> {
         let done = AtomicBool::new(false);
         let conn_ids = AtomicU64::new(0);
         let timeout = self.unit_timeout;
+        let auth_token = self.auth_token;
         let spec_line = proto::msg_spec(self.spec).to_string();
         let listener = self.listener;
         let addr = self.addr;
@@ -169,7 +195,9 @@ impl UnitSource for Serve<'_> {
                     }
                     let conn_id = conn_ids.fetch_add(1, Ordering::Relaxed);
                     s.spawn(move || {
-                        handle_conn(stream, conn_id, timeout, spec_line, state, cv, deliver)
+                        handle_conn(
+                            stream, conn_id, timeout, auth_token, spec_line, state, cv, deliver,
+                        )
                     });
                 }
             });
@@ -193,10 +221,48 @@ impl UnitSource for Serve<'_> {
     }
 }
 
+/// Read one `\n`-terminated line from an **unauthenticated** peer under
+/// an absolute wall-clock deadline and a 4 KiB size cap. Returns None
+/// on timeout, disconnect, or an oversized line. The per-recv socket
+/// timeout is re-armed with the *remaining* time before every read, so
+/// a peer trickling one byte per poll cannot stretch the handshake
+/// beyond the deadline.
+fn read_handshake_line(reader: &mut BufReader<TcpStream>, budget: Duration) -> Option<String> {
+    const MAX_LINE: usize = 4096;
+    let deadline = Instant::now() + budget;
+    let mut line: Vec<u8> = Vec::new();
+    loop {
+        let now = Instant::now();
+        if now >= deadline || line.len() >= MAX_LINE {
+            return None;
+        }
+        if reader.get_ref().set_read_timeout(Some(deadline - now)).is_err() {
+            return None;
+        }
+        let buf = match reader.fill_buf() {
+            Ok([]) | Err(_) => return None, // EOF, timeout, or error
+            Ok(b) => b,
+        };
+        if let Some(pos) = buf.iter().position(|&c| c == b'\n') {
+            if line.len() + pos + 1 > MAX_LINE {
+                return None;
+            }
+            line.extend_from_slice(&buf[..=pos]);
+            reader.consume(pos + 1);
+            return String::from_utf8(line).ok();
+        }
+        let take = buf.len().min(MAX_LINE - line.len());
+        line.extend_from_slice(&buf[..take]);
+        reader.consume(take);
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
 fn handle_conn(
     stream: TcpStream,
     conn_id: u64,
     unit_timeout: Option<Duration>,
+    auth_token: Option<&str>,
     spec_line: &str,
     state: &Mutex<State>,
     cv: &Condvar,
@@ -206,10 +272,40 @@ fn handle_conn(
         Ok(w) => w,
         Err(_) => return,
     };
+    let mut reader = BufReader::new(stream);
+    // Handshake: the worker speaks first. The spec (workloads, seeds,
+    // grid shape) is only revealed after the hello validates — with a
+    // token configured, that includes the shared secret. The peer is
+    // untrusted until then, so the read is bounded by an *absolute*
+    // deadline (re-armed per recv so trickled bytes cannot extend it)
+    // and a byte cap: a silent, dribbling, or newline-less connection
+    // cannot hold the handler thread or grow the buffer.
+    let Some(line) = read_handshake_line(&mut reader, Duration::from_secs(10)) else {
+        let _ = writeln!(writer, "{}", proto::msg_err("handshake timed out or too large"));
+        return;
+    };
+    let hello = proto::parse_line(&line).and_then(|m| proto::parse_hello(&m));
+    let token = match hello {
+        Ok(token) => token,
+        Err(e) => {
+            let _ = writeln!(writer, "{}", proto::msg_err(&format!("bad hello: {e}")));
+            return;
+        }
+    };
+    if let Some(expected) = auth_token {
+        if !proto::token_matches(expected, token.as_deref()) {
+            eprintln!("qs-sweep driver: rejected worker (QS_SWEEP_TOKEN mismatch)");
+            let _ = writeln!(writer, "{}", proto::msg_err("auth failed"));
+            return;
+        }
+    }
+    // Authenticated: back to blocking reads for the lockstep loop (a
+    // slow-but-live worker is legitimate; the unit timeout handles
+    // stalled assignments).
+    let _ = reader.get_ref().set_read_timeout(None);
     if writeln!(writer, "{spec_line}").is_err() {
         return;
     }
-    let mut reader = BufReader::new(stream);
     // Units this connection has claimed but not yet reported. The
     // lockstep protocol implies at most one, but a pipelining (or buggy)
     // client may claim several — every one of them must be reissued on

@@ -35,7 +35,7 @@ pub mod proto;
 pub mod worker;
 
 pub use driver::Driver;
-pub use worker::run_worker;
+pub use worker::{run_worker, run_worker_with_token};
 
 use crate::experiments::{sweep_units, LocalThreads, Point, SweepGrid};
 use crate::sim::SimConfig;

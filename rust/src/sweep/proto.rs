@@ -1,10 +1,19 @@
 //! Sweep wire protocol: one JSON object per line over TCP (the same
 //! JSONL idiom as the coordinator's control API).
 //!
-//! Handshake: on connect the driver sends a `spec` line. From then on
-//! the worker drives a lockstep request/response loop:
+//! Handshake (proto v2): on connect the **worker speaks first** with a
+//! `hello` line carrying the protocol version and, when configured, the
+//! shared secret (`QS_SWEEP_TOKEN`). The driver validates both before
+//! revealing anything: a mismatched token or version gets an `err` line
+//! and a closed connection — the spec (which names workloads, seeds and
+//! grid shape) is never sent to an unauthenticated peer. With the token
+//! unset on both sides the handshake is a bare `hello` (loopback tests
+//! and single-machine runs need no configuration). From then on the
+//! worker drives a lockstep request/response loop:
 //!
 //! ```text
+//! worker → driver   {"op":"hello","proto":2[,"token":"..."]}
+//! driver → worker   {"op":"spec",...} | {"op":"err","msg":"..."}
 //! worker → driver   {"op":"next"}
 //! driver → worker   {"op":"unit","id":N} | {"op":"wait","ms":M} | {"op":"done"}
 //! worker → driver   {"op":"result","id":N,"display":...,"stats":{...}}
@@ -22,13 +31,64 @@ use crate::sweep::SweepSpec;
 use crate::util::json::Value;
 
 /// Bumped on incompatible wire changes; driver and worker must agree.
-pub const PROTO_VERSION: u64 = 1;
+/// v2: worker-first `hello` handshake with the optional shared secret.
+pub const PROTO_VERSION: u64 = 2;
 
 pub fn msg_spec(spec: &SweepSpec) -> Value {
     Value::obj()
         .set("op", "spec")
         .set("proto", PROTO_VERSION)
         .set("spec", spec.to_json())
+}
+
+/// The worker's opening line: protocol version plus the optional
+/// shared-secret token.
+pub fn msg_hello(token: Option<&str>) -> Value {
+    let v = Value::obj().set("op", "hello").set("proto", PROTO_VERSION);
+    match token {
+        Some(t) => v.set("token", t),
+        None => v,
+    }
+}
+
+/// Driver-side rejection (auth failure, version mismatch).
+pub fn msg_err(msg: &str) -> Value {
+    Value::obj().set("op", "err").set("msg", msg)
+}
+
+/// The `err` message's payload, if this is one.
+pub fn err_of(v: &Value) -> Option<&str> {
+    if op_of(v) == Some("err") {
+        v.get("msg").and_then(|m| m.as_str()).or(Some("unspecified"))
+    } else {
+        None
+    }
+}
+
+/// Decode a `hello`: checks op and protocol version, returns the token.
+pub fn parse_hello(v: &Value) -> anyhow::Result<Option<String>> {
+    if op_of(v) != Some("hello") {
+        anyhow::bail!("expected a 'hello' message, got {:?}", op_of(v));
+    }
+    let proto = v.get("proto").and_then(|p| p.as_u64()).unwrap_or(0);
+    if proto != PROTO_VERSION {
+        anyhow::bail!("protocol mismatch: worker speaks v{proto}, driver v{PROTO_VERSION}");
+    }
+    Ok(v.get("token")
+        .and_then(|t| t.as_str())
+        .map(|t| t.to_string()))
+}
+
+/// Constant-time-ish token comparison (no early exit on the first
+/// differing byte; the length term must not be truncated, or lengths
+/// differing by a multiple of 256 would compare prefixes only).
+pub fn token_matches(expected: &str, got: Option<&str>) -> bool {
+    let got = got.unwrap_or("");
+    let mut diff = u8::from(expected.len() != got.len());
+    for (a, b) in expected.bytes().zip(got.bytes()) {
+        diff |= a ^ b;
+    }
+    diff == 0
 }
 
 pub fn msg_next() -> Value {
@@ -145,5 +205,33 @@ mod tests {
         let (id, run) = parse_result(&parse_line(&wire).unwrap()).unwrap();
         assert_eq!(id, 7);
         assert_eq!(run.unwrap_err(), "no such policy");
+    }
+
+    #[test]
+    fn hello_roundtrip_and_version_check() {
+        let bare = parse_hello(&parse_line(&msg_hello(None).to_string()).unwrap()).unwrap();
+        assert_eq!(bare, None);
+        let tok =
+            parse_hello(&parse_line(&msg_hello(Some("sesame")).to_string()).unwrap()).unwrap();
+        assert_eq!(tok.as_deref(), Some("sesame"));
+        let stale = msg_hello(None).set("proto", 1u64);
+        assert!(parse_hello(&stale).is_err());
+        assert!(parse_hello(&msg_next()).is_err());
+    }
+
+    #[test]
+    fn token_comparison() {
+        assert!(token_matches("abc", Some("abc")));
+        assert!(!token_matches("abc", Some("abd")));
+        assert!(!token_matches("abc", Some("ab")));
+        assert!(!token_matches("abc", None));
+        assert!(token_matches("", None), "unset on both sides matches");
+    }
+
+    #[test]
+    fn err_message_payload() {
+        let e = parse_line(&msg_err("auth failed").to_string()).unwrap();
+        assert_eq!(err_of(&e), Some("auth failed"));
+        assert_eq!(err_of(&msg_next()), None);
     }
 }

@@ -14,14 +14,29 @@ use std::time::Duration;
 /// Serve one driver until it reports `done` (or disappears — once the
 /// handshake succeeded, a lost connection means the driver finished or
 /// will reissue our unit elsewhere, so the worker exits cleanly either
-/// way). Returns the number of units completed and acknowledged.
+/// way), authenticating with the `QS_SWEEP_TOKEN` shared secret when
+/// set. Returns the number of units completed and acknowledged.
 pub fn run_worker(addr: &str) -> anyhow::Result<usize> {
+    let token = crate::sweep::driver::auth_token_from_env();
+    run_worker_with_token(addr, token.as_deref())
+}
+
+/// [`run_worker`] with the auth token pinned explicitly (tests use this
+/// so parallel tests never race on process-global env state).
+pub fn run_worker_with_token(addr: &str, token: Option<&str>) -> anyhow::Result<usize> {
     let stream = TcpStream::connect(addr)?;
     let mut writer = stream.try_clone()?;
     let mut reader = BufReader::new(stream);
+    // Handshake: hello (version + optional shared secret) before the
+    // driver reveals the spec; an `err` reply means we were rejected.
+    writeln!(writer, "{}", proto::msg_hello(token))?;
     let mut line = String::new();
     reader.read_line(&mut line)?;
-    let spec = proto::parse_spec(&proto::parse_line(&line)?)?;
+    let first = proto::parse_line(&line)?;
+    if let Some(msg) = proto::err_of(&first) {
+        anyhow::bail!("driver rejected this worker: {msg}");
+    }
+    let spec = proto::parse_spec(&first)?;
     let grid = spec.grid();
     // Engine cache: consecutive units of the same point reuse one
     // engine's allocations (reset is bit-identical to fresh).

@@ -179,21 +179,29 @@ const ARRIVAL_CHUNK: usize = 64;
 /// Batched: instead of thinning one merged exponential stream (one
 /// `exp` + one weighted class draw per arrival), each class owns an
 /// independent Poisson stream — statistically identical by superposition
-/// — whose (interarrival, size) pairs are pre-generated in chunks of
-/// [`ARRIVAL_CHUNK`] in a tight loop. `next_arrival` merges the
-/// per-class next-arrival cursors by linear argmin (classes are few;
-/// the scan replaces the old per-arrival weight scan) and is consumed
-/// lazily by the engine's heap-external arrival cursor, so saturation
-/// sweeps pay neither a heap round-trip nor per-arrival RNG dispatch.
+/// — pre-generated in chunks of [`ARRIVAL_CHUNK`] into **flat per-class
+/// buffers**: one [`Rng::fill_exp`] pass fills the chunk's 64
+/// interarrival gaps, one [`crate::dist::Dist::fill`] pass fills its 64
+/// service sizes (pre-sampling the departure size consumed when the job
+/// is admitted). The RNG stream layout is deterministic per
+/// (class, chunk) — 64 gap draws then 64 size draws — so replications
+/// are reproducible regardless of how the merge interleaves classes.
+/// `next_arrival` merges the per-class next-arrival cursors by linear
+/// argmin (classes are few; the scan replaces the old per-arrival
+/// weight scan) and is consumed lazily by the engine's heap-external
+/// arrival cursor, so saturation sweeps pay neither a heap round-trip
+/// nor per-arrival RNG dispatch.
 pub struct SyntheticSource {
     wl: Workload,
     /// Absolute time of each class's next arrival (∞: zero-rate class).
     next_t: Vec<f64>,
     /// Size of each class's next arrival.
     next_size: Vec<f64>,
-    /// Per-class pregenerated (interarrival, size) pairs.
-    buf: Vec<Vec<(f64, f64)>>,
-    /// Per-class read position into `buf`.
+    /// Per-class pregenerated interarrival gaps (flat chunk buffer).
+    gaps: Vec<Vec<f64>>,
+    /// Per-class pregenerated service sizes (flat chunk buffer).
+    sizes: Vec<Vec<f64>>,
+    /// Per-class read position into the chunk buffers.
     pos: Vec<usize>,
     primed: bool,
 }
@@ -205,7 +213,8 @@ impl SyntheticSource {
         SyntheticSource {
             next_t: vec![f64::INFINITY; nc],
             next_size: vec![0.0; nc],
-            buf: (0..nc).map(|_| Vec::new()).collect(),
+            gaps: (0..nc).map(|_| Vec::new()).collect(),
+            sizes: (0..nc).map(|_| Vec::new()).collect(),
             pos: vec![0; nc],
             primed: false,
             wl,
@@ -213,23 +222,21 @@ impl SyntheticSource {
     }
 
     /// Pop class `c`'s next pregenerated (interarrival, size), refilling
-    /// its chunk from `rng` when exhausted.
+    /// its chunk from `rng` when exhausted — two chunk-fill passes, one
+    /// per flat buffer.
     #[inline]
     fn take(&mut self, c: usize, rng: &mut Rng) -> (f64, f64) {
-        if self.pos[c] == self.buf[c].len() {
+        if self.pos[c] == self.gaps[c].len() {
             let cl = &self.wl.classes[c];
-            let buf = &mut self.buf[c];
-            buf.clear();
+            self.gaps[c].resize(ARRIVAL_CHUNK, 0.0);
+            rng.fill_exp(cl.rate, &mut self.gaps[c]);
+            self.sizes[c].resize(ARRIVAL_CHUNK, 0.0);
+            cl.size.fill(rng, &mut self.sizes[c]);
             self.pos[c] = 0;
-            for _ in 0..ARRIVAL_CHUNK {
-                let gap = rng.exp(cl.rate);
-                let size = cl.size.sample(rng);
-                buf.push((gap, size));
-            }
         }
-        let v = self.buf[c][self.pos[c]];
+        let i = self.pos[c];
         self.pos[c] += 1;
-        v
+        (self.gaps[c][i], self.sizes[c][i])
     }
 
     fn prime(&mut self, rng: &mut Rng) {

@@ -4,7 +4,9 @@
 //! death, or duplicate results.
 
 use quickswap::experiments::{run_unit, sweep_with, Point, SweepOpts};
-use quickswap::sweep::{proto, run_spec_local, run_worker, Driver, SweepSpec, WorkloadSpec};
+use quickswap::sweep::{
+    proto, run_spec_local, run_worker, run_worker_with_token, Driver, SweepSpec, WorkloadSpec,
+};
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 
@@ -155,6 +157,7 @@ fn killed_worker_units_are_reissued() {
         let stream = TcpStream::connect(&addr).unwrap();
         let mut w = stream.try_clone().unwrap();
         let mut r = BufReader::new(stream);
+        writeln!(w, "{}", proto::msg_hello(None)).unwrap();
         let mut line = String::new();
         r.read_line(&mut line).unwrap();
         proto::parse_spec(&proto::parse_line(&line).unwrap()).unwrap();
@@ -194,6 +197,7 @@ fn timed_out_units_are_reissued() {
     let stall = TcpStream::connect(&addr).unwrap();
     let mut w = stall.try_clone().unwrap();
     let mut r = BufReader::new(stall.try_clone().unwrap());
+    writeln!(w, "{}", proto::msg_hello(None)).unwrap();
     let mut line = String::new();
     r.read_line(&mut line).unwrap();
     proto::parse_spec(&proto::parse_line(&line).unwrap()).unwrap();
@@ -236,6 +240,7 @@ fn duplicate_results_are_deduped() {
         let stream = TcpStream::connect(&addr).unwrap();
         let mut w = stream.try_clone().unwrap();
         let mut r = BufReader::new(stream);
+        writeln!(w, "{}", proto::msg_hello(None)).unwrap();
         let mut line = String::new();
         r.read_line(&mut line).unwrap(); // spec
         for _ in 0..2 {
@@ -250,6 +255,67 @@ fn duplicate_results_are_deduped() {
     // A real worker finishes the rest; its own unit-0 result (unit 0 is
     // still in the pending queue) is the duplicate on the other side.
     run_worker(&addr).unwrap();
+    let pts = dh.join().unwrap();
+    assert_points_bit_identical(&base, &pts);
+}
+
+/// With a shared secret armed (`QS_SWEEP_TOKEN` /
+/// `Driver::with_auth_token`), workers presenting the wrong token — or
+/// none — are rejected before the spec is revealed, while a
+/// matching-token worker completes the sweep bit-identically.
+#[test]
+fn auth_token_gates_workers() {
+    let spec = smoke_spec();
+    let base = run_spec_local(&spec, 4);
+    let driver = Driver::bind(&spec, "127.0.0.1:0")
+        .unwrap()
+        .with_auth_token(Some("sesame".into()));
+    let addr = driver.local_addr().to_string();
+    let dh = std::thread::spawn(move || driver.run().unwrap());
+
+    // Wrong token: rejected with an err line, no spec leaked.
+    let err = run_worker_with_token(&addr, Some("wrong")).unwrap_err();
+    assert!(
+        err.to_string().contains("rejected"),
+        "unexpected error: {err}"
+    );
+    // No token at all: also rejected.
+    let err = run_worker_with_token(&addr, None).unwrap_err();
+    assert!(err.to_string().contains("rejected"), "{err}");
+    // Raw peek: the rejection line is an `err`, not the spec.
+    {
+        let stream = TcpStream::connect(&addr).unwrap();
+        let mut w = stream.try_clone().unwrap();
+        let mut r = BufReader::new(stream);
+        writeln!(w, "{}", proto::msg_hello(Some("still-wrong"))).unwrap();
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+        let reply = proto::parse_line(&line).unwrap();
+        assert_eq!(proto::err_of(&reply), Some("auth failed"));
+        assert!(proto::parse_spec(&reply).is_err(), "spec must not leak");
+    }
+
+    // The right token serves the whole grid, bit-identical as ever.
+    let served = run_worker_with_token(&addr, Some("sesame")).unwrap();
+    assert_eq!(served, spec.grid().n_units());
+    let pts = dh.join().unwrap();
+    assert_points_bit_identical(&base, &pts);
+}
+
+/// An open (tokenless) driver still accepts token-bearing workers: the
+/// hello's token is simply ignored, so a fleet can roll the secret out
+/// worker-first.
+#[test]
+fn open_driver_accepts_token_bearing_worker() {
+    let spec = smoke_spec();
+    let base = run_spec_local(&spec, 4);
+    let driver = Driver::bind(&spec, "127.0.0.1:0")
+        .unwrap()
+        .with_auth_token(None);
+    let addr = driver.local_addr().to_string();
+    let dh = std::thread::spawn(move || driver.run().unwrap());
+    let served = run_worker_with_token(&addr, Some("surplus-secret")).unwrap();
+    assert_eq!(served, spec.grid().n_units());
     let pts = dh.join().unwrap();
     assert_points_bit_identical(&base, &pts);
 }

@@ -5,9 +5,11 @@
 #   scripts/bench_compare.sh <committed.json> <fresh.json>
 #
 # Gate: the headline targets (`sim_msfq:31`, `sim_borg_adaptive_qs`,
-# `sim_server_filling`) fail the run when they regress >30% below the
-# committed baseline, or when they are missing from the fresh artifact
-# entirely (a dropped scenario must not pass silently); everything else
+# `sim_server_filling`, and the ladder-schedule twins `sim_fcfs:ladder`
+# / `sim_borg_adaptive_qs:ladder`) fail the run when they regress >30%
+# below the committed baseline, or when they are missing from the fresh
+# artifact entirely (a dropped scenario must not pass silently);
+# everything else
 # — and the [0.7, 1.0) band on the gated targets — is warn-only,
 # because smoke-scale numbers on shared CI runners jitter. A committed
 # stub (empty results) or a scale mismatch skips the gate with a note
@@ -40,7 +42,8 @@ if committed.get("scale") != fresh.get("scale"):
           f"fresh {fresh.get('scale')!r}) - comparison skipped")
     sys.exit(0)
 
-GATED = ("sim_msfq:31", "sim_borg_adaptive_qs", "sim_server_filling")
+GATED = ("sim_msfq:31", "sim_borg_adaptive_qs", "sim_server_filling",
+         "sim_fcfs:ladder", "sim_borg_adaptive_qs:ladder")
 missing = [g for g in GATED if g not in new]
 if missing:
     sys.exit("error: gated bench target(s) missing from the fresh artifact: "
