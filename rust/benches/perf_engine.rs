@@ -10,16 +10,21 @@
 //! the committed trajectory keeps comparing like with like; the
 //! `sim_*:ladder` twins pin the ladder queue (the engine default), and
 //! the `sched_churn_*` microbenchmark races the two structures on a raw
-//! push/pop/cancel stream with no engine around them.
+//! push/pop/cancel stream with no engine around them. The
+//! `sim_paired_shared_stream` / `sim_independent_4policy` pair measures
+//! the CRN replay path against independent live-source runs, and
+//! `paired_ci_width_ratio` (unitless, not a rate) records the paired
+//! vs unpaired Δ-CI variance-reduction factor on the fig2 frontier.
 use quickswap::experiments::Scale;
 use quickswap::sim::events::{EventKind, EventQueue};
 use quickswap::sim::ladder::LadderQueue;
 use quickswap::sim::schedule::EventSchedule;
 use quickswap::sim::{Engine, EventScheduleKind, SimConfig};
+use quickswap::sweep::{run_spec_paired_local, SweepSpec, WorkloadSpec};
 use quickswap::util::bench::{black_box, Bench};
 use quickswap::util::json::Value;
 use quickswap::util::rng::Rng;
-use quickswap::workload::{borg::borg_workload, SyntheticSource, Workload};
+use quickswap::workload::{borg::borg_workload, MaterializedStream, SyntheticSource, Workload};
 
 /// One replication on a reused engine; returns events per wall second.
 fn events_per_sec(engine: &mut Engine, wl: &Workload, policy: &str, seed: u64) -> f64 {
@@ -29,6 +34,30 @@ fn events_per_sec(engine: &mut Engine, wl: &Workload, policy: &str, seed: u64) -
     let mut rng = Rng::new(seed);
     let r = engine.run(&mut src, pol.as_mut(), &mut rng);
     r.events as f64 / r.wall_s.max(1e-12)
+}
+
+/// One CRN pass: every policy replays the same materialized arrival
+/// stream on a reused engine (the paired-unit hot path). Returns
+/// (total events, total wall seconds) across the policy set.
+fn paired_pass(
+    engine: &mut Engine,
+    wl: &Workload,
+    stream: &mut MaterializedStream,
+    policies: &[&str],
+    seed: u64,
+) -> (u64, f64) {
+    let (mut events, mut wall) = (0u64, 0.0f64);
+    for policy in policies {
+        engine.reset();
+        let mut pol = quickswap::policy::by_name(policy, wl).unwrap();
+        // Replay never consumes the engine-side RNG; seeded for parity.
+        let mut rng = Rng::new(seed);
+        let mut cursor = stream.cursor();
+        let r = engine.run(&mut cursor, pol.as_mut(), &mut rng);
+        events += r.events;
+        wall += r.wall_s;
+    }
+    (events, wall)
 }
 
 fn write_json(measured: &[(String, f64)], completions: u64) {
@@ -110,6 +139,50 @@ fn main() {
         println!("  -> {policy}: {:.2} M events/s", rate / 1e6);
         measured.push((format!("sim_{policy}"), rate));
     }
+
+    // CRN paired-replication throughput: the same four policies over ONE
+    // materialized arrival stream (the paired-unit hot path) vs four
+    // independent live-source runs. Replay samples arrivals once instead
+    // of once per policy, so the shared-stream rate must stay ahead of
+    // the independent rate.
+    const CRN_POLICIES: [&str; 4] = ["fcfs", "msf", "msfq:31", "first-fit"];
+    let mut stream = MaterializedStream::new(one_or_all.clone(), 7);
+    let mut shared_rate = 0.0;
+    b.bench("sim_paired_shared_stream", || {
+        let (ev, wall) = paired_pass(&mut engine, &one_or_all, &mut stream, &CRN_POLICIES, 7);
+        shared_rate = ev as f64 / wall.max(1e-12);
+        black_box(shared_rate);
+    });
+    println!(
+        "  -> paired shared-stream (4 policies): {:.2} M events/s",
+        shared_rate / 1e6
+    );
+    measured.push(("sim_paired_shared_stream".to_string(), shared_rate));
+
+    let mut indep_rate = 0.0;
+    b.bench("sim_independent_4policy", || {
+        let (mut ev, mut wall) = (0u64, 0.0f64);
+        for policy in CRN_POLICIES {
+            engine.reset();
+            let mut pol = quickswap::policy::by_name(policy, &one_or_all).unwrap();
+            let mut src = SyntheticSource::new(one_or_all.clone());
+            let mut rng = Rng::new(7);
+            let r = engine.run(&mut src, pol.as_mut(), &mut rng);
+            ev += r.events;
+            wall += r.wall_s;
+        }
+        indep_rate = ev as f64 / wall.max(1e-12);
+        black_box(indep_rate);
+    });
+    println!(
+        "  -> independent (4 policies): {:.2} M events/s",
+        indep_rate / 1e6
+    );
+    measured.push(("sim_independent_4policy".to_string(), indep_rate));
+    println!(
+        "  -> shared-stream speedup: {:.2}x",
+        shared_rate / indep_rate.max(1e-12)
+    );
 
     // Ladder-schedule twin of the FCFS target: same workload, same
     // seeds, only the timing structure differs (results are
@@ -252,6 +325,38 @@ fn main() {
         black_box(a.et);
     });
     b.finish();
+
+    // CRN variance-reduction factor on the fig2 frontier point: the
+    // paired Δ(MSFQ:31 − MSF) CI half-width vs the unpaired quadrature
+    // of the marginal CIs, at the same event budget (R = 4). Not a
+    // timing — recorded in the trajectory so bench_compare gates the
+    // variance reduction alongside throughput.
+    let crn_spec = SweepSpec {
+        workload: WorkloadSpec::OneOrAll {
+            k: 32,
+            p1: 0.9,
+            mu1: 1.0,
+            muk: 1.0,
+        },
+        lambdas: vec![7.5],
+        policies: vec!["msf".into(), "msfq:31".into()],
+        target_completions: completions,
+        warmup_completions: completions / 5,
+        batch: 1000,
+        seed: 20250710,
+        replications: 4,
+        paired: true,
+        baseline: Some("msf".into()),
+    };
+    let sweep = run_spec_paired_local(&crn_spec, 1).expect("paired sweep");
+    let d = &sweep.diffs[0];
+    let paired_hw = d.diff.ci95_half_width();
+    let ratio = d.unpaired_ci95 / paired_hw.max(1e-12);
+    println!(
+        "  -> paired_ci_width_ratio: {ratio:.2}x (paired ±{paired_hw:.4}, unpaired ±{:.4})",
+        d.unpaired_ci95
+    );
+    measured.push(("paired_ci_width_ratio".to_string(), ratio));
 
     write_json(&measured, completions);
 }

@@ -25,8 +25,10 @@
 pub mod figures;
 
 use crate::sim::{Engine, ReplicationPool, SimConfig, SimResult, UnitStats};
+use crate::util::json::Value;
 use crate::util::rng::{Rng, SplitMix64};
-use crate::workload::{SyntheticSource, Workload};
+use crate::util::stats::PairedDiff;
+use crate::workload::{MaterializedStream, SyntheticSource, Workload};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
@@ -389,6 +391,414 @@ pub fn sweep_units(
     Ok(out)
 }
 
+// ---- common-random-number (CRN) paired replications ----
+
+/// All requested policies' runs for one (λ, replication), every engine
+/// replaying the *same* materialized arrival stream — the paired (CRN)
+/// analogue of [`UnitRun`]. `runs[i]` corresponds to policy `i` of the
+/// [`PairedGrid`]'s policy list; `None` marks a policy that failed to
+/// construct.
+#[derive(Clone, Debug)]
+pub struct PairedRun {
+    pub runs: Vec<Option<UnitRun>>,
+}
+
+impl PairedRun {
+    /// Bit-exact JSON form (the paired-sweep wire format): one entry per
+    /// grid policy — `null` or `{display, stats}`.
+    pub fn to_json(&self) -> Value {
+        let runs: Vec<Value> = self
+            .runs
+            .iter()
+            .map(|r| match r {
+                Some(run) => Value::obj()
+                    .set("display", run.display.clone())
+                    .set("stats", run.stats.to_json()),
+                None => Value::Null,
+            })
+            .collect();
+        Value::Arr(runs)
+    }
+
+    /// Inverse of [`PairedRun::to_json`].
+    pub fn from_json(v: &Value) -> anyhow::Result<PairedRun> {
+        let arr = v
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("paired run is not an array"))?;
+        let runs = arr
+            .iter()
+            .map(|r| match r {
+                Value::Null => Ok(None),
+                _ => {
+                    let display = r
+                        .get("display")
+                        .and_then(|d| d.as_str())
+                        .ok_or_else(|| anyhow::anyhow!("paired run missing 'display'"))?
+                        .to_string();
+                    let stats = r
+                        .get("stats")
+                        .ok_or_else(|| anyhow::anyhow!("paired run missing 'stats'"))
+                        .and_then(UnitStats::from_json)?;
+                    Ok(Some(UnitRun { stats, display }))
+                }
+            })
+            .collect::<anyhow::Result<Vec<Option<UnitRun>>>>()?;
+        Ok(PairedRun { runs })
+    }
+}
+
+/// The (λ, replication) unit grid of a paired sweep: unit `u` maps to
+/// λ index `u / reps`, replication `u % reps`, and one unit runs *all*
+/// policies over one shared stream seeded `rep_seed(seed, λ index, rep)`.
+/// Each policy's replay of that stream is bit-identical to a solo run
+/// with a live [`SyntheticSource`] at the same stream seed (the CRN
+/// determinism contract), so pairing changes which comparisons are
+/// cheap, never what any single policy's statistics are.
+#[derive(Clone, Debug)]
+pub struct PairedGrid {
+    pub lambdas: Vec<f64>,
+    pub policies: Vec<String>,
+    /// Index into `policies` of the baseline every Δ subtracts.
+    pub baseline: usize,
+    /// Replications per λ (≥ 1).
+    pub reps: usize,
+    /// Per-replication config (measured budget split across reps;
+    /// warmup NOT split — same rule as [`SweepGrid::new`]).
+    pub rep_cfg: SimConfig,
+    pub seed: u64,
+}
+
+impl PairedGrid {
+    pub fn new(
+        lambdas: &[f64],
+        policies: &[&str],
+        baseline: usize,
+        cfg: &SimConfig,
+        seed: u64,
+        replications: u32,
+    ) -> PairedGrid {
+        assert!(baseline < policies.len(), "baseline index out of range");
+        let reps = replications.max(1) as usize;
+        let rep_cfg = SimConfig {
+            target_completions: cfg.target_completions.div_ceil(reps as u64),
+            warmup_completions: cfg.warmup_completions,
+            ..cfg.clone()
+        };
+        PairedGrid {
+            lambdas: lambdas.to_vec(),
+            policies: policies.iter().map(|p| p.to_string()).collect(),
+            baseline,
+            reps,
+            rep_cfg,
+            seed,
+        }
+    }
+
+    pub fn n_units(&self) -> usize {
+        self.lambdas.len() * self.reps
+    }
+
+    /// (λ index, replication index) of unit `u`.
+    pub fn point_rep(&self, u: usize) -> (usize, usize) {
+        (u / self.reps, u % self.reps)
+    }
+}
+
+/// Execute one paired (λ, replication) unit: materialize the shared
+/// arrival stream once (lazily, during the first policy's run) and
+/// replay it through every policy sequentially on one reusable engine.
+/// `wl` must be the workload at the unit's λ; `cache` carries an engine
+/// across units of the same λ, exactly like [`run_unit`].
+pub fn run_paired_unit(
+    grid: &PairedGrid,
+    wl: &Workload,
+    u: usize,
+    cache: &mut Option<(usize, Engine)>,
+) -> PairedRun {
+    let (li, r) = grid.point_rep(u);
+    let reuse = matches!(cache, Some((idx, _)) if *idx == li);
+    if !reuse {
+        *cache = Some((li, Engine::new(wl, grid.rep_cfg.clone())));
+    }
+    let engine = &mut cache.as_mut().expect("cached engine").1;
+    let mut stream =
+        MaterializedStream::new(wl.clone(), rep_seed(grid.seed, li as u64, r as u64));
+    let mut used = reuse;
+    let mut runs = Vec::with_capacity(grid.policies.len());
+    for policy in &grid.policies {
+        if used {
+            engine.reset();
+        }
+        used = true;
+        match crate::policy::by_name(policy, wl) {
+            Ok(mut pol) => {
+                // Replay never consumes the engine-side RNG; a fixed
+                // dummy keeps the run signature uniform.
+                let mut rng = Rng::new(0);
+                let mut cursor = stream.cursor();
+                let result = engine.run(&mut cursor, pol.as_mut(), &mut rng);
+                runs.push(Some(UnitRun {
+                    stats: UnitStats::from_metrics(
+                        engine.metrics(),
+                        engine.now(),
+                        result.events,
+                        result.wall_s,
+                    ),
+                    display: result.policy,
+                }));
+            }
+            Err(e) => {
+                eprintln!("paired point ({}, {policy}) failed: {e}", grid.lambdas[li]);
+                runs.push(None);
+            }
+        }
+    }
+    PairedRun { runs }
+}
+
+/// Where paired units execute — the CRN counterpart of [`UnitSource`],
+/// with the same delivery contract (exactly once per finished unit, any
+/// order, duplicates deduped first-wins by the pooling layer).
+pub trait PairedUnitSource {
+    fn run_paired_units(
+        &mut self,
+        grid: &PairedGrid,
+        wl_at: &(dyn Fn(f64) -> Workload + Sync),
+        deliver: &(dyn Fn(usize, PairedRun) + Sync),
+    ) -> anyhow::Result<()>;
+}
+
+impl PairedUnitSource for LocalThreads {
+    fn run_paired_units(
+        &mut self,
+        grid: &PairedGrid,
+        wl_at: &(dyn Fn(f64) -> Workload + Sync),
+        deliver: &(dyn Fn(usize, PairedRun) + Sync),
+    ) -> anyhow::Result<()> {
+        let n_units = grid.n_units();
+        let next = AtomicUsize::new(0);
+        let threads = self.threads.max(1).min(n_units.max(1));
+        std::thread::scope(|s| {
+            for _ in 0..threads {
+                s.spawn(|| {
+                    let mut cache: Option<(usize, Engine)> = None;
+                    loop {
+                        let u = next.fetch_add(1, Ordering::Relaxed);
+                        if u >= n_units {
+                            break;
+                        }
+                        let (li, _) = grid.point_rep(u);
+                        let wl = wl_at(grid.lambdas[li]);
+                        deliver(u, run_paired_unit(grid, &wl, u, &mut cache));
+                    }
+                });
+            }
+        });
+        Ok(())
+    }
+}
+
+/// One paired-comparison row: Δ = policy − baseline statistics at one λ
+/// (negative Δ ⇒ the policy responds faster).
+#[derive(Clone, Debug)]
+pub struct DiffPoint {
+    pub lambda: f64,
+    pub policy: String,
+    pub baseline: String,
+    pub diff: PairedDiff,
+    /// What the unpaired estimator would report from the same runs'
+    /// marginal CIs: the quadrature √(ci_p² + ci_b²). The ratio
+    /// `unpaired_ci95 / diff.ci95_half_width()` is the CRN
+    /// variance-reduction factor the bench smoke prints.
+    pub unpaired_ci95: f64,
+}
+
+/// A paired sweep's complete output: pooled marginal points — one per
+/// (λ, policy), the same shape an unpaired sweep emits — plus the
+/// paired Δ rows against the baseline policy.
+#[derive(Clone, Debug)]
+pub struct PairedSweep {
+    pub points: Vec<Point>,
+    pub diffs: Vec<DiffPoint>,
+}
+
+/// Drive `source` over a paired grid and pool results. Marginal pooling
+/// per (λ, policy) follows [`sweep_units`] exactly (replication order,
+/// sorted output); paired deltas pair each replication's policy run
+/// with the baseline run *of the same shared stream*. Deterministic for
+/// a given (grid, wl_at) regardless of scheduling or arrival order.
+pub fn sweep_paired_units(
+    grid: &PairedGrid,
+    wl_at: &(dyn Fn(f64) -> Workload + Sync),
+    source: &mut dyn PairedUnitSource,
+) -> anyhow::Result<PairedSweep> {
+    let slots: Vec<Mutex<Vec<Option<PairedRun>>>> = grid
+        .lambdas
+        .iter()
+        .map(|_| Mutex::new((0..grid.reps).map(|_| None).collect()))
+        .collect();
+    let deliver = |u: usize, run: PairedRun| {
+        let (li, r) = grid.point_rep(u);
+        let mut slot = slots[li].lock().unwrap();
+        if slot[r].is_none() {
+            slot[r] = Some(run);
+        }
+    };
+    source.run_paired_units(grid, wl_at, &deliver)?;
+    let np = grid.policies.len();
+    let mut points = Vec::new();
+    let mut diffs = Vec::new();
+    for (slot, &lambda) in slots.into_iter().zip(grid.lambdas.iter()) {
+        let wl = wl_at(lambda);
+        let nc = wl.num_classes();
+        let runs = slot.into_inner().unwrap();
+        let mut pools: Vec<ReplicationPool> =
+            (0..np).map(|_| ReplicationPool::new(nc)).collect();
+        let mut displays: Vec<Option<String>> = vec![None; np];
+        let mut pds: Vec<PairedDiff> = (0..np).map(|_| PairedDiff::new(nc)).collect();
+        for rep in runs.iter().flatten() {
+            for (pi, run) in rep.runs.iter().enumerate() {
+                if let Some(run) = run {
+                    pools[pi].absorb_stats(&run.stats);
+                    if displays[pi].is_none() {
+                        displays[pi] = Some(run.display.clone());
+                    }
+                }
+            }
+            // Paired deltas need both sides of the same shared stream.
+            if let Some(base) = rep.runs[grid.baseline].as_ref() {
+                let b_means: Vec<f64> = base.stats.resp.iter().map(|w| w.mean()).collect();
+                for (pi, run) in rep.runs.iter().enumerate() {
+                    if pi == grid.baseline {
+                        continue;
+                    }
+                    if let Some(run) = run {
+                        let p_means: Vec<f64> =
+                            run.stats.resp.iter().map(|w| w.mean()).collect();
+                        pds[pi].push_rep(
+                            &p_means,
+                            &b_means,
+                            run.stats.resp_all.batch_means(),
+                            base.stats.resp_all.batch_means(),
+                        );
+                    }
+                }
+            }
+        }
+        let results: Vec<Option<SimResult>> = pools
+            .iter()
+            .enumerate()
+            .map(|(pi, pool)| {
+                if pool.replications() == 0 {
+                    return None; // every replication failed (bad policy)
+                }
+                let display = displays[pi]
+                    .clone()
+                    .unwrap_or_else(|| grid.policies[pi].clone());
+                Some(pool.result(&display, &wl))
+            })
+            .collect();
+        let base_ci = results[grid.baseline].as_ref().map(|r| r.ci95);
+        for (pi, policy) in grid.policies.iter().enumerate() {
+            let Some(result) = &results[pi] else {
+                continue;
+            };
+            if pi != grid.baseline {
+                let unpaired_ci95 = match base_ci {
+                    Some(b) => (result.ci95 * result.ci95 + b * b).sqrt(),
+                    None => f64::NAN,
+                };
+                diffs.push(DiffPoint {
+                    lambda,
+                    policy: policy.clone(),
+                    baseline: grid.policies[grid.baseline].clone(),
+                    diff: pds[pi].clone(),
+                    unpaired_ci95,
+                });
+            }
+            points.push(Point {
+                lambda,
+                policy: policy.clone(),
+                result: result.clone(),
+            });
+        }
+    }
+    points.sort_by(|a, b| {
+        a.policy
+            .cmp(&b.policy)
+            .then(a.lambda.partial_cmp(&b.lambda).unwrap())
+    });
+    diffs.sort_by(|a, b| {
+        a.policy
+            .cmp(&b.policy)
+            .then(a.lambda.partial_cmp(&b.lambda).unwrap())
+    });
+    Ok(PairedSweep { points, diffs })
+}
+
+/// Write paired Δ rows as CSV: lambda, policy, baseline, pooled Δ of
+/// batch means with the paired CI, the unpaired quadrature CI for
+/// comparison, the replication count, and per-class replication-level
+/// Δs of the class means.
+pub fn write_diff_csv(
+    path: &str,
+    diffs: &[DiffPoint],
+    class_names: &[String],
+) -> std::io::Result<()> {
+    let mut header: Vec<String> = vec![
+        "lambda".into(),
+        "policy".into(),
+        "baseline".into(),
+        "d_et".into(),
+        "ci95_paired".into(),
+        "ci95_unpaired".into(),
+        "reps".into(),
+    ];
+    header.extend(class_names.iter().map(|n| format!("d_et_{n}")));
+    let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut w = crate::util::csv::CsvWriter::create(path, &header_refs)?;
+    for d in diffs {
+        let mut row = vec![
+            crate::util::csv::format_g(d.lambda),
+            d.policy.clone(),
+            d.baseline.clone(),
+            crate::util::csv::format_g(d.diff.delta_mean()),
+            crate::util::csv::format_g(d.diff.ci95_half_width()),
+            crate::util::csv::format_g(d.unpaired_ci95),
+            format!("{}", d.diff.replications()),
+        ];
+        for c in 0..class_names.len() {
+            row.push(crate::util::csv::format_g(d.diff.class_delta_mean(c)));
+        }
+        w.row(&row)?;
+    }
+    w.flush()
+}
+
+/// Pretty-print paired Δ rows grouped by λ.
+pub fn print_paired(title: &str, diffs: &[DiffPoint]) {
+    println!("\n=== {title} ===");
+    let mut lambdas: Vec<f64> = diffs.iter().map(|d| d.lambda).collect();
+    lambdas.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    lambdas.dedup();
+    for l in lambdas {
+        println!("λ = {l}:");
+        for d in diffs.iter().filter(|d| d.lambda == l) {
+            let ratio = d.unpaired_ci95 / d.diff.ci95_half_width();
+            println!(
+                "  Δ({} − {}) = {:>10.4} ±{:<9.4} (unpaired ±{:.4}, {:.1}× narrower, R={})",
+                d.policy,
+                d.baseline,
+                d.diff.delta_mean(),
+                d.diff.ci95_half_width(),
+                d.unpaired_ci95,
+                ratio,
+                d.diff.replications()
+            );
+        }
+    }
+}
+
 /// Run `policies × lambdas` with environment-default replication and
 /// threading (see [`SweepOpts::from_env`]).
 pub fn sweep(
@@ -534,5 +944,50 @@ mod tests {
         assert_eq!(grid.pts[0], (2.0, "msf".to_string()));
         assert_eq!(grid.pts[1], (2.0, "fcfs".to_string()));
         assert_eq!(grid.pts[2], (3.0, "msf".to_string()));
+    }
+
+    /// The paired grid partitions by (λ, replication) — one unit runs
+    /// every policy — and splits the budget like the marginal grid.
+    #[test]
+    fn paired_grid_partition_is_lambda_major() {
+        let cfg = SimConfig::default().with_completions(9_000);
+        let grid = PairedGrid::new(&[2.0, 3.0], &["msf", "msfq:7", "fcfs"], 0, &cfg, 1, 3);
+        assert_eq!(grid.n_units(), 6);
+        assert_eq!(grid.point_rep(0), (0, 0));
+        assert_eq!(grid.point_rep(2), (0, 2));
+        assert_eq!(grid.point_rep(3), (1, 0));
+        assert_eq!(grid.point_rep(5), (1, 2));
+        assert_eq!(grid.rep_cfg.target_completions, 3_000);
+        assert_eq!(grid.rep_cfg.warmup_completions, 9_000 / 5);
+        assert_eq!(grid.policies.len(), 3);
+        assert_eq!(grid.baseline, 0);
+    }
+
+    /// PairedRun wire format: None slots survive as null, stats are
+    /// bit-exact.
+    #[test]
+    fn paired_run_json_roundtrip() {
+        use crate::sim::Metrics;
+        let mut m = Metrics::new(2, 3);
+        for i in 0..20 {
+            m.record_response(i % 2, 0.5 + i as f64);
+        }
+        m.flush_responses();
+        let run = PairedRun {
+            runs: vec![
+                Some(UnitRun {
+                    stats: UnitStats::from_metrics(&m, 10.0, 40, 0.01),
+                    display: "MSF".into(),
+                }),
+                None,
+            ],
+        };
+        let wire = run.to_json().to_string();
+        let back = PairedRun::from_json(&Value::parse(&wire).unwrap()).unwrap();
+        assert_eq!(back.runs.len(), 2);
+        assert!(back.runs[1].is_none());
+        let (a, b) = (run.runs[0].as_ref().unwrap(), back.runs[0].as_ref().unwrap());
+        assert_eq!(a.display, b.display);
+        assert_eq!(a.stats.to_json().to_string(), b.stats.to_json().to_string());
     }
 }

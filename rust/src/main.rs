@@ -80,6 +80,8 @@ fn help() -> String {
             OptSpec { name: "driver", help: "sweep: serve the unit grid to TCP workers on ADDR (\":0\" picks a port); set QS_SWEEP_TOKEN to require a shared secret", default: None },
             OptSpec { name: "worker", help: "sweep: pull units from the driver at ADDR (QS_SWEEP_TOKEN authenticates when the driver requires it)", default: None },
             OptSpec { name: "fig", help: "sweep: use a figure's predefined grid (2|3|5|6|8)", default: None },
+            OptSpec { name: "paired", help: "sweep: common-random-number mode — all policies replay one shared arrival stream per (lambda, replication); prints paired-difference CIs", default: None },
+            OptSpec { name: "baseline", help: "sweep --paired: policy the differences are taken against (implies --paired)", default: Some("first policy in the list".into()) },
         ],
     )
 }
@@ -148,6 +150,19 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
 /// thread/worker counts never enter it.
 fn sweep_spec_from(args: &Args) -> anyhow::Result<SweepSpec> {
     let reps = args.u32_or("reps", SweepOpts::from_env().replications)?;
+    let mut spec = sweep_grid_from(args, reps)?;
+    // Paired (CRN) mode is orthogonal to where the grid came from:
+    // --baseline implies --paired; the baseline must name a grid policy
+    // (paired_grid resolves it and rejects strangers up front).
+    spec.paired = args.flag("paired") || args.get("baseline").is_some();
+    spec.baseline = args.get("baseline").map(|b| b.to_string());
+    if spec.paired {
+        spec.paired_grid()?;
+    }
+    Ok(spec)
+}
+
+fn sweep_grid_from(args: &Args, reps: u32) -> anyhow::Result<SweepSpec> {
     if let Some(fig) = args.get("fig") {
         let scale = Scale::from_env();
         let mut spec = match fig {
@@ -217,6 +232,34 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
         return Ok(());
     }
     let spec = sweep_spec_from(args)?;
+    if spec.paired {
+        let sweep = if let Some(addr) = args.get("driver") {
+            let driver = quickswap::sweep::Driver::bind(&spec, addr)?;
+            // Stderr, machine-parseable: scripts read the bound port
+            // from this line (ports chosen with ":0").
+            eprintln!("qs-sweep driver listening on {}", driver.local_addr());
+            eprintln!(
+                "  paired grid: {} lambdas x {} replications = {} units ({} policies each)",
+                spec.lambdas.len(),
+                spec.replications,
+                spec.lambdas.len() * spec.replications.max(1) as usize,
+                spec.policies.len()
+            );
+            driver.run_paired()?
+        } else {
+            quickswap::sweep::run_spec_paired_local(&spec, SweepOpts::from_env().threads)?
+        };
+        let weighted = args.flag("weighted");
+        quickswap::experiments::print_sweep("sweep (marginals)", &sweep.points, weighted);
+        quickswap::experiments::print_paired("paired differences", &sweep.diffs);
+        if let Some(out) = args.get("out") {
+            quickswap::experiments::write_sweep_csv(out, &sweep.points, &spec.class_names())?;
+            let diff_out = diff_csv_path(out);
+            quickswap::experiments::write_diff_csv(&diff_out, &sweep.diffs, &spec.class_names())?;
+            println!("wrote {out} and {diff_out}");
+        }
+        return Ok(());
+    }
     let pts = if let Some(addr) = args.get("driver") {
         let driver = quickswap::sweep::Driver::bind(&spec, addr)?;
         // Stderr, machine-parseable: scripts read the bound port from
@@ -238,6 +281,15 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
         println!("wrote {out}");
     }
     Ok(())
+}
+
+/// Companion path for the paired-difference CSV: `x.csv` → `x.diff.csv`
+/// (no recognizable extension: append `.diff.csv`).
+fn diff_csv_path(out: &str) -> String {
+    match out.rfind('.') {
+        Some(i) if !out[i..].contains('/') => format!("{}.diff{}", &out[..i], &out[i..]),
+        _ => format!("{out}.diff.csv"),
+    }
 }
 
 fn cmd_analyze(args: &Args) -> anyhow::Result<()> {

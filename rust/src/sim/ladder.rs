@@ -52,11 +52,14 @@
 //! departure occupies, maintained across every internal move, so
 //! `cancel_departure` / `has_departure` stay O(1) amortized exactly
 //! like the heap's position map (bucket/overflow removal is a
-//! swap-remove; a bottom removal shifts the sorted tail — short in the
-//! common case, but an all-ties cluster larger than a bucket drains
-//! into the bottom whole, making cancels within it O(cluster); see the
-//! ROADMAP note on tie-heavy deterministic workloads — the heap
-//! escape hatch has no such mode).
+//! swap-remove; a bottom removal shifts the sorted tail, which is short
+//! because the bottom holds at most one drained bucket). All-ties
+//! clusters — which no time width can subdivide — get **seq-keyed
+//! sub-buckets**: a tie rung partitions the cluster by push sequence
+//! into [`TIE_BUCKET`]-sized slices (see [`Rung::seq_key`]), so the
+//! cluster reaches the bottom one bounded slice at a time and a cancel
+//! inside it is a bucket swap-remove (or a short bottom shift) instead
+//! of O(cluster). The `QS_EVENT_SCHEDULE=heap` escape hatch remains.
 
 use crate::policy::JobId;
 use crate::sim::events::{Event, EventKind};
@@ -71,6 +74,10 @@ const DIRECT_TO_BOTTOM: usize = 8;
 /// Bucket-count bounds for rung construction.
 const MIN_BUCKETS: usize = 8;
 const MAX_BUCKETS: usize = 4096;
+/// Target events per seq-keyed sub-bucket when an all-ties cluster is
+/// split (see [`Rung::seq_key`]): each drained slice costs one bounded
+/// sort, and a cancel shifts at most one slice.
+const TIE_BUCKET: u64 = SPILL_THRESHOLD as u64;
 
 /// Where a scheduled departure currently lives.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -94,6 +101,15 @@ struct Rung {
     /// been handed to the bottom or to a child rung).
     cur: usize,
     buckets: Vec<Vec<Event>>,
+    /// `Some((s0, w))` marks a **tie rung**: every event shares one
+    /// time (`start`), so buckets slice the cluster by push sequence
+    /// instead — bucket `i` holds seqs `[s0 + i·w, s0 + (i+1)·w)`, the
+    /// last bucket open-ended. `width` is 0, which makes the canonical
+    /// boundary `start + (b+1)·width` degenerate to `start`: exactly
+    /// right, because `bot_hi` must park at the tie time until the last
+    /// slice drains so that later pushes at that time route back into
+    /// the rung (by seq, hence after every older tie).
+    seq_key: Option<(u64, u64)>,
 }
 
 impl Rung {
@@ -125,8 +141,27 @@ impl Rung {
         i
     }
 
+    /// Destination bucket for `e`: by time on a normal rung, by push
+    /// sequence on a tie rung (one shared time — only the FIFO order
+    /// can subdivide the cluster). Events clamped in from before the
+    /// tie time go to the front bucket, which drains (and sorts) first.
+    #[inline]
+    fn bucket_of(&self, e: &Event) -> usize {
+        match self.seq_key {
+            Some((s0, w)) => {
+                if e.t < self.start {
+                    0
+                } else {
+                    ((e.seq.saturating_sub(s0) / w) as usize).min(self.buckets.len() - 1)
+                }
+            }
+            None => self.bucket_index(e.t),
+        }
+    }
+
     fn reset(&mut self) {
         self.cur = 0;
+        self.seq_key = None;
         for b in &mut self.buckets {
             debug_assert!(b.is_empty(), "recycling a rung with live events");
             b.clear();
@@ -153,6 +188,22 @@ fn next_up(x: f64) -> f64 {
 #[inline]
 fn by_t_seq(a: &Event, b: &Event) -> std::cmp::Ordering {
     a.t.total_cmp(&b.t).then(a.seq.cmp(&b.seq))
+}
+
+/// Min seq and seq span (max − min + 1) of an all-ties event set, or
+/// `None` when the span fits a single [`TIE_BUCKET`] slice (including
+/// the empty case) and seq-keyed splitting would buy nothing.
+fn seq_span(events: &[Event]) -> Option<(u64, u64)> {
+    let (mut s0, mut s1) = (u64::MAX, 0u64);
+    for e in events {
+        s0 = s0.min(e.seq);
+        s1 = s1.max(e.seq);
+    }
+    let span = s1.checked_sub(s0)? + 1;
+    if span <= TIE_BUCKET {
+        return None;
+    }
+    Some((s0, span))
 }
 
 /// Record `e`'s location if it is a departure. Free function over the
@@ -188,6 +239,7 @@ pub struct LadderQueue {
     /// gap driving bucket-count auto-tuning.
     gap_ewma: f64,
     spills: u64,
+    tie_spills: u64,
     reseeds: u64,
 }
 
@@ -212,6 +264,7 @@ impl LadderQueue {
             len: 0,
             gap_ewma: 0.0,
             spills: 0,
+            tie_spills: 0,
             reseeds: 0,
         }
     }
@@ -260,7 +313,7 @@ impl LadderQueue {
             if self.rungs[r].cur == nb || t >= self.rungs[r].limit {
                 continue;
             }
-            let b = self.rungs[r].bucket_index(t).max(self.rungs[r].cur);
+            let b = self.rungs[r].bucket_of(&e).max(self.rungs[r].cur);
             let idx = self.rungs[r].buckets[b].len();
             self.rungs[r].buckets[b].push(e);
             self.note(
@@ -369,7 +422,9 @@ impl LadderQueue {
             mx = mx.max(e.t);
         }
         if mx <= mn {
-            return false; // all ties (or a single time): width would be 0
+            // All ties (or one time): no width subdivides them, but the
+            // push sequence does.
+            return self.try_spill_ties(r, b, mn);
         }
         let start = mn;
         let limit = next_up(mx);
@@ -404,6 +459,77 @@ impl LadderQueue {
         true
     }
 
+    /// Re-bucket an all-ties bucket onto a seq-keyed child rung (see
+    /// [`Rung::seq_key`]). Returns false when the cluster's seq span
+    /// fits one [`TIE_BUCKET`] slice — the caller sorts it directly.
+    fn try_spill_ties(&mut self, r: usize, b: usize, t0: f64) -> bool {
+        let Some((s0, span)) = seq_span(&self.rungs[r].buckets[b]) else {
+            return false;
+        };
+        let nb = (span.div_ceil(TIE_BUCKET) as usize).min(MAX_BUCKETS);
+        let w = span.div_ceil(nb as u64);
+        debug_assert!(self.scratch.is_empty());
+        std::mem::swap(&mut self.scratch, &mut self.rungs[r].buckets[b]);
+        let mut child = self.make_rung(t0, 0.0, next_up(t0), nb);
+        child.seq_key = Some((s0, w));
+        let c = self.rungs.len();
+        self.rungs.push(child);
+        let events = std::mem::take(&mut self.scratch);
+        for e in &events {
+            let cb = self.rungs[c].bucket_of(e);
+            let idx = self.rungs[c].buckets[cb].len();
+            self.rungs[c].buckets[cb].push(*e);
+            self.note(
+                e,
+                Loc::Rung {
+                    rung: c as u32,
+                    bucket: cb as u32,
+                    idx: idx as u32,
+                },
+            );
+        }
+        self.scratch = events;
+        self.scratch.clear();
+        self.tie_spills += 1;
+        true
+    }
+
+    /// Build a seq-keyed base rung from an all-ties overflow. Returns
+    /// false when the seq span fits one slice (direct sort is cheap).
+    fn reseed_ties(&mut self, t0: f64) -> bool {
+        let Some((s0, span)) = seq_span(&self.overflow) else {
+            return false;
+        };
+        let nb = (span.div_ceil(TIE_BUCKET) as usize).min(MAX_BUCKETS);
+        let w = span.div_ceil(nb as u64);
+        let mut rung = self.make_rung(t0, 0.0, next_up(t0), nb);
+        rung.seq_key = Some((s0, w));
+        let rr = self.rungs.len();
+        self.rungs.push(rung);
+        let events = std::mem::take(&mut self.overflow);
+        for e in &events {
+            let b = self.rungs[rr].bucket_of(e);
+            let idx = self.rungs[rr].buckets[b].len();
+            self.rungs[rr].buckets[b].push(*e);
+            self.note(
+                e,
+                Loc::Rung {
+                    rung: rr as u32,
+                    bucket: b as u32,
+                    idx: idx as u32,
+                },
+            );
+        }
+        self.overflow = events;
+        self.overflow.clear();
+        // Same gap-closing rule as a normal re-seed: later pushes in
+        // [old bot_hi, t0) belong to the (empty) bottom, which pops
+        // first.
+        self.bot_hi = t0;
+        self.tie_spills += 1;
+        true
+    }
+
     /// Build the base rung from the accumulated overflow (or sort a
     /// tiny / zero-spread overflow straight into the bottom).
     fn reseed(&mut self) {
@@ -414,6 +540,11 @@ impl LadderQueue {
             mx = mx.max(e.t);
         }
         let n = self.overflow.len();
+        // A large all-ties overflow takes the seq-keyed path instead of
+        // being sorted (and later cancel-shifted) as one block.
+        if n > DIRECT_TO_BOTTOM && mx <= mn && self.reseed_ties(mn) {
+            return;
+        }
         let span = next_up(mx) - mn;
         let direct = n <= DIRECT_TO_BOTTOM || mx <= mn || span <= 0.0 || !span.is_finite();
         if !direct {
@@ -471,11 +602,13 @@ impl LadderQueue {
             limit: 0.0,
             cur: 0,
             buckets: Vec::new(),
+            seq_key: None,
         });
         rung.start = start;
         rung.width = width;
         rung.limit = limit;
         rung.cur = 0;
+        rung.seq_key = None;
         if rung.buckets.len() < nb {
             rung.buckets.resize_with(nb, Vec::new);
         } else {
@@ -575,6 +708,7 @@ impl LadderQueue {
         self.len = 0;
         self.gap_ewma = 0.0;
         self.spills = 0;
+        self.tie_spills = 0;
         self.reseeds = 0;
     }
 
@@ -582,6 +716,12 @@ impl LadderQueue {
     /// prove heavy-tailed inputs actually exercised the spill path).
     pub fn spills(&self) -> u64 {
         self.spills
+    }
+
+    /// Seq-keyed tie-rung constructions so far (all-ties clusters that
+    /// would otherwise drain — and cancel — as one O(cluster) block).
+    pub fn tie_spills(&self) -> u64 {
+        self.tie_spills
     }
 
     /// Overflow re-seeds performed so far.
@@ -758,5 +898,80 @@ mod tests {
             }
         }
         assert_eq!(expect, 500);
+    }
+
+    #[test]
+    fn giant_tie_cluster_splits_by_seq_and_cancels_cheaply() {
+        let mut q = LadderQueue::new();
+        for i in 0..1000u64 {
+            q.push(7.0, EventKind::Departure { job: i });
+        }
+        assert_eq!(q.pop().unwrap().seq, 0);
+        assert!(q.tie_spills() > 0, "tie cluster must take the seq-keyed path");
+        // Cancels landing in undrained sub-buckets are swap-removes;
+        // FIFO pop order must survive them.
+        let cancelled: Vec<u64> = (100..900).step_by(50).collect();
+        for &job in &cancelled {
+            assert!(q.cancel_departure(job), "job {job}");
+        }
+        let mut expect = 1u64;
+        while let Some(e) = q.pop() {
+            assert_eq!(e.t, 7.0);
+            let EventKind::Departure { job } = e.kind else {
+                panic!("wrong kind")
+            };
+            while cancelled.contains(&expect) {
+                expect += 1;
+            }
+            assert_eq!(job, expect);
+            expect += 1;
+        }
+        assert_eq!(expect, 1000);
+    }
+
+    #[test]
+    fn tie_rung_accepts_pushes_at_and_before_the_tie_time() {
+        let mut q = LadderQueue::new();
+        for i in 0..300u64 {
+            q.push(5.0, EventKind::Departure { job: i });
+        }
+        assert_eq!(q.pop().unwrap().seq, 0); // tie rung is live
+        assert!(q.tie_spills() > 0);
+        // A new same-time departure must pop after every older tie; an
+        // earlier-time push must pop before all remaining ties.
+        q.push(5.0, EventKind::Departure { job: 300 });
+        q.push(4.5, EventKind::Departure { job: 301 });
+        let e = q.pop().unwrap();
+        assert!(matches!(e.kind, EventKind::Departure { job: 301 }));
+        let (mut last_seq, mut saw) = (0u64, 0u32);
+        while let Some(e) = q.pop() {
+            assert_eq!(e.t, 5.0);
+            assert!(e.seq > last_seq, "FIFO order violated at seq {}", e.seq);
+            last_seq = e.seq;
+            saw += 1;
+        }
+        assert_eq!(saw, 300, "ties 1..=299 plus the late same-time push");
+    }
+
+    #[test]
+    fn tie_cluster_inside_a_spread_rung_spills_by_seq() {
+        let mut q = LadderQueue::new();
+        // Spread events force a normal time-keyed base rung; the tie
+        // cluster then lands in one of its buckets and must spill via
+        // the seq-keyed arm of try_spill (not reseed_ties).
+        for i in 0..200u64 {
+            q.push(1.0 + i as f64, EventKind::Departure { job: i });
+        }
+        for i in 200..600u64 {
+            q.push(50.0, EventKind::Departure { job: i });
+        }
+        let first = q.pop().unwrap();
+        assert_eq!(first.t, 1.0);
+        let mut last = (first.t, first.seq);
+        while let Some(e) = q.pop() {
+            assert!((e.t, e.seq) > last, "order violated");
+            last = (e.t, e.seq);
+        }
+        assert!(q.tie_spills() > 0, "embedded tie cluster must split by seq");
     }
 }

@@ -23,8 +23,12 @@
 //! an `err` line and a closed connection. Unset = open driver (the
 //! loopback/test default).
 
-use crate::experiments::{sweep_units, Point, SweepGrid, UnitRun, UnitSource};
+use crate::experiments::{
+    sweep_paired_units, sweep_units, PairedGrid, PairedRun, PairedSweep, PairedUnitSource, Point,
+    SweepGrid, UnitRun, UnitSource,
+};
 use crate::sweep::{proto, SweepSpec};
+use crate::util::json::Value;
 use crate::workload::Workload;
 use std::collections::VecDeque;
 use std::io::{BufRead, BufReader, Write};
@@ -110,6 +114,26 @@ impl Driver {
         };
         sweep_units(&grid, &wl_at, &mut source)
     }
+
+    /// Serve a paired (CRN) spec until every (λ, replication) unit has
+    /// a result, then pool. Blocks; returns the same [`PairedSweep`]
+    /// (bit for bit) as
+    /// [`run_spec_paired_local`](crate::sweep::run_spec_paired_local).
+    pub fn run_paired(self) -> anyhow::Result<PairedSweep> {
+        let grid = self
+            .spec
+            .paired_grid()?
+            .ok_or_else(|| anyhow::anyhow!("spec is not in paired mode"))?;
+        let wl_at = |l: f64| self.spec.workload.build(l);
+        let mut source = Serve {
+            listener: &self.listener,
+            addr: self.addr,
+            spec: &self.spec,
+            unit_timeout: self.unit_timeout,
+            auth_token: self.auth_token.as_deref(),
+        };
+        sweep_paired_units(&grid, &wl_at, &mut source)
+    }
 }
 
 /// Shared serving state, guarded by one mutex.
@@ -156,6 +180,14 @@ struct Serve<'a> {
     auth_token: Option<&'a str>,
 }
 
+/// How one connection's `result` lines decode, per payload type: the
+/// marginal protocol parses `{display, stats}` ([`proto::parse_result`]),
+/// the paired protocol a `runs` array ([`proto::parse_paired_result`]).
+/// Both carry (unit id, run-or-worker-error); a line that fails to parse
+/// breaks the connection so the claimed unit reissues.
+type ParseResult<'p, P> =
+    &'p (dyn Fn(&Value) -> anyhow::Result<(usize, Result<P, String>)> + Sync);
+
 impl UnitSource for Serve<'_> {
     fn run_units(
         &mut self,
@@ -163,7 +195,31 @@ impl UnitSource for Serve<'_> {
         _wl_at: &(dyn Fn(f64) -> Workload + Sync),
         deliver: &(dyn Fn(usize, UnitRun) + Sync),
     ) -> anyhow::Result<()> {
-        let n = grid.n_units();
+        self.serve(grid.n_units(), &proto::parse_result, deliver)
+    }
+}
+
+impl PairedUnitSource for Serve<'_> {
+    fn run_paired_units(
+        &mut self,
+        grid: &PairedGrid,
+        _wl_at: &(dyn Fn(f64) -> Workload + Sync),
+        deliver: &(dyn Fn(usize, PairedRun) + Sync),
+    ) -> anyhow::Result<()> {
+        self.serve(grid.n_units(), &proto::parse_paired_result, deliver)
+    }
+}
+
+impl Serve<'_> {
+    /// The serving core, generic over the unit payload `P`: accept
+    /// connections, hand out unit ids in lockstep, slot parsed results
+    /// through `deliver`, and return once all `n` units are resolved.
+    fn serve<P>(
+        &mut self,
+        n: usize,
+        parse: ParseResult<'_, P>,
+        deliver: &(dyn Fn(usize, P) + Sync),
+    ) -> anyhow::Result<()> {
         if n == 0 {
             return Ok(());
         }
@@ -196,7 +252,8 @@ impl UnitSource for Serve<'_> {
                     let conn_id = conn_ids.fetch_add(1, Ordering::Relaxed);
                     s.spawn(move || {
                         handle_conn(
-                            stream, conn_id, timeout, auth_token, spec_line, state, cv, deliver,
+                            stream, conn_id, timeout, auth_token, spec_line, state, cv, parse,
+                            deliver,
                         )
                     });
                 }
@@ -258,7 +315,7 @@ fn read_handshake_line(reader: &mut BufReader<TcpStream>, budget: Duration) -> O
 }
 
 #[allow(clippy::too_many_arguments)]
-fn handle_conn(
+fn handle_conn<P>(
     stream: TcpStream,
     conn_id: u64,
     unit_timeout: Option<Duration>,
@@ -266,7 +323,8 @@ fn handle_conn(
     spec_line: &str,
     state: &Mutex<State>,
     cv: &Condvar,
-    deliver: &(dyn Fn(usize, UnitRun) + Sync),
+    parse: ParseResult<'_, P>,
+    deliver: &(dyn Fn(usize, P) + Sync),
 ) {
     let mut writer = match stream.try_clone() {
         Ok(w) => w,
@@ -350,7 +408,7 @@ fn handle_conn(
                 }
             }
             Some("result") => {
-                let Ok((id, outcome)) = proto::parse_result(&msg) else {
+                let Ok((id, outcome)) = parse(&msg) else {
                     break; // malformed: drop the conn, claimed unit reissues
                 };
                 // Claim the id first (dedupes a reissued-unit race), but

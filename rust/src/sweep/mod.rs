@@ -37,7 +37,9 @@ pub mod worker;
 pub use driver::Driver;
 pub use worker::{run_worker, run_worker_with_token};
 
-use crate::experiments::{sweep_units, LocalThreads, Point, SweepGrid};
+use crate::experiments::{
+    sweep_paired_units, sweep_units, LocalThreads, PairedGrid, PairedSweep, Point, SweepGrid,
+};
 use crate::sim::SimConfig;
 use crate::util::json::Value;
 use crate::workload::{borg::borg_workload, Workload};
@@ -118,6 +120,13 @@ pub struct SweepSpec {
     pub batch: u64,
     pub seed: u64,
     pub replications: u32,
+    /// Common-random-number mode: run all policies over one shared
+    /// arrival stream per (λ, replication) and report paired Δ CIs
+    /// against `baseline` alongside the marginal points.
+    pub paired: bool,
+    /// Baseline policy name for paired Δs (must be one of `policies`;
+    /// None defaults to the first policy). Ignored unless `paired`.
+    pub baseline: Option<String>,
 }
 
 impl SweepSpec {
@@ -140,6 +149,8 @@ impl SweepSpec {
             batch: cfg.batch,
             seed,
             replications: replications.max(1),
+            paired: false,
+            baseline: None,
         }
     }
 
@@ -165,6 +176,34 @@ impl SweepSpec {
         )
     }
 
+    /// The spec's paired (λ, replication) unit grid, or None when the
+    /// spec is not in paired mode. Errors when `baseline` names a policy
+    /// that is not in the policy list.
+    pub fn paired_grid(&self) -> anyhow::Result<Option<PairedGrid>> {
+        if !self.paired {
+            return Ok(None);
+        }
+        let baseline = match &self.baseline {
+            None => 0,
+            Some(name) => self
+                .policies
+                .iter()
+                .position(|p| p == name)
+                .ok_or_else(|| {
+                    anyhow::anyhow!("baseline policy '{name}' is not in the policy list")
+                })?,
+        };
+        let policies: Vec<&str> = self.policies.iter().map(|s| s.as_str()).collect();
+        Ok(Some(PairedGrid::new(
+            &self.lambdas,
+            &policies,
+            baseline,
+            &self.config(),
+            self.seed,
+            self.replications,
+        )))
+    }
+
     /// Per-class display names (CSV headers), from the λ=1 instance.
     pub fn class_names(&self) -> Vec<String> {
         let wl = self.workload.build(1.0);
@@ -178,7 +217,7 @@ impl SweepSpec {
         // decimal string because Value::Num is f64-backed and would
         // silently round seeds above 2^53, breaking the sharded ==
         // in-process bit-identity contract.
-        Value::obj()
+        let mut v = Value::obj()
             .set("workload", self.workload.to_json())
             .set("lambdas", Value::Arr(lambdas))
             .set("policies", Value::Arr(policies))
@@ -186,7 +225,16 @@ impl SweepSpec {
             .set("warmup_completions", self.warmup_completions)
             .set("batch", self.batch)
             .set("seed", format!("{}", self.seed))
-            .set("replications", self.replications)
+            .set("replications", self.replications);
+        // Paired fields travel only when set: an unpaired spec's wire
+        // form is byte-identical to what pre-paired builds emitted.
+        if self.paired {
+            v = v.set("paired", true);
+            if let Some(b) = &self.baseline {
+                v = v.set("baseline", b.clone());
+            }
+        }
+        v
     }
 
     pub fn from_json(v: &Value) -> anyhow::Result<SweepSpec> {
@@ -234,6 +282,11 @@ impl SweepSpec {
             batch: u64_of("batch")?,
             seed,
             replications: u64_of("replications")? as u32,
+            paired: v.get("paired").and_then(|p| p.as_bool()).unwrap_or(false),
+            baseline: v
+                .get("baseline")
+                .and_then(|b| b.as_str())
+                .map(|s| s.to_string()),
         })
     }
 }
@@ -245,6 +298,18 @@ pub fn run_spec_local(spec: &SweepSpec, threads: usize) -> Vec<Point> {
     let wl_at = |l: f64| spec.workload.build(l);
     let mut source = LocalThreads { threads };
     sweep_units(&grid, &wl_at, &mut source).expect("local unit execution is infallible")
+}
+
+/// Run a paired spec with in-process threads — the reference path a
+/// sharded paired run ([`Driver::run_paired`]) must match bit for bit.
+/// Errors when the spec is not in paired mode or names a bad baseline.
+pub fn run_spec_paired_local(spec: &SweepSpec, threads: usize) -> anyhow::Result<PairedSweep> {
+    let grid = spec
+        .paired_grid()?
+        .ok_or_else(|| anyhow::anyhow!("spec is not in paired mode"))?;
+    let wl_at = |l: f64| spec.workload.build(l);
+    let mut source = LocalThreads { threads };
+    sweep_paired_units(&grid, &wl_at, &mut source)
 }
 
 #[cfg(test)]
@@ -268,6 +333,8 @@ mod tests {
             // Above 2^53: must survive the wire without f64 rounding.
             seed: 0xDEAD_BEEF_DEAD_BEEF,
             replications: 3,
+            paired: false,
+            baseline: None,
         };
         let wire = spec.to_json().to_string();
         let back = SweepSpec::from_json(&Value::parse(&wire).unwrap()).unwrap();
@@ -278,6 +345,11 @@ mod tests {
         assert_eq!(back.batch, spec.batch);
         assert_eq!(back.seed, spec.seed);
         assert_eq!(back.replications, spec.replications);
+        assert!(!back.paired);
+        assert!(back.baseline.is_none());
+        // An unpaired spec's wire form carries no paired fields at all
+        // (wire compatibility with pre-paired builds).
+        assert!(!wire.contains("paired") && !wire.contains("baseline"));
         // λ values round-trip bit-exactly (shortest-round-trip Display).
         for (a, b) in spec.lambdas.iter().zip(&back.lambdas) {
             assert_eq!(a.to_bits(), b.to_bits());
@@ -285,6 +357,44 @@ mod tests {
         // Grids built on both sides agree.
         assert_eq!(spec.grid().n_units(), back.grid().n_units());
         assert_eq!(spec.grid().pts, back.grid().pts);
+    }
+
+    #[test]
+    fn paired_spec_roundtrip_and_grid() {
+        let mut spec = SweepSpec {
+            workload: WorkloadSpec::OneOrAll {
+                k: 8,
+                p1: 0.9,
+                mu1: 1.0,
+                muk: 1.0,
+            },
+            lambdas: vec![2.0, 3.0],
+            policies: vec!["msf".into(), "msfq:7".into(), "fcfs".into()],
+            target_completions: 6_000,
+            warmup_completions: 1_200,
+            batch: 1000,
+            seed: 42,
+            replications: 3,
+            paired: true,
+            baseline: Some("msfq:7".into()),
+        };
+        let wire = spec.to_json().to_string();
+        let back = SweepSpec::from_json(&Value::parse(&wire).unwrap()).unwrap();
+        assert!(back.paired);
+        assert_eq!(back.baseline.as_deref(), Some("msfq:7"));
+        let grid = back.paired_grid().unwrap().unwrap();
+        assert_eq!(grid.baseline, 1);
+        assert_eq!(grid.n_units(), 6);
+        assert_eq!(grid.rep_cfg.target_completions, 2_000);
+        // Default baseline: first policy.
+        spec.baseline = None;
+        assert_eq!(spec.paired_grid().unwrap().unwrap().baseline, 0);
+        // Unknown baseline is an error, not a silent default.
+        spec.baseline = Some("nope".into());
+        assert!(spec.paired_grid().is_err());
+        // Not paired: no grid.
+        spec.paired = false;
+        assert!(spec.paired_grid().unwrap().is_none());
     }
 
     #[test]

@@ -25,7 +25,7 @@
 //! ([`crate::util::json::f64_bits`]) — the determinism contract depends
 //! on nothing being lost in transit.
 
-use crate::experiments::UnitRun;
+use crate::experiments::{PairedRun, UnitRun};
 use crate::sim::UnitStats;
 use crate::sweep::SweepSpec;
 use crate::util::json::Value;
@@ -123,6 +123,19 @@ pub fn msg_result_err(id: usize, err: &str) -> Value {
     Value::obj().set("op", "result").set("id", id).set("err", err)
 }
 
+/// Result line for one *paired* unit: all policies' runs over the
+/// unit's shared stream, as a `runs` array (null = failed policy).
+/// Paired specs are flagged in the spec message itself (additive
+/// `paired`/`baseline` fields), so the protocol version is unchanged —
+/// driver and worker agree on which result shape a sweep uses before
+/// any unit is served.
+pub fn msg_paired_result(id: usize, run: &PairedRun) -> Value {
+    Value::obj()
+        .set("op", "result")
+        .set("id", id)
+        .set("runs", run.to_json())
+}
+
 /// Parse one wire line into a JSON value.
 pub fn parse_line(line: &str) -> anyhow::Result<Value> {
     Value::parse(line.trim()).map_err(|e| anyhow::anyhow!("bad wire json: {e}"))
@@ -173,6 +186,19 @@ pub fn parse_result(v: &Value) -> anyhow::Result<(usize, Result<UnitRun, String>
     Ok((id, Ok(UnitRun { stats, display })))
 }
 
+/// Decode a paired `result` message into (unit id, runs-or-error).
+pub fn parse_paired_result(v: &Value) -> anyhow::Result<(usize, Result<PairedRun, String>)> {
+    let id = id_of(v)?;
+    if let Some(err) = v.get("err").and_then(|e| e.as_str()) {
+        return Ok((id, Err(err.to_string())));
+    }
+    let runs = v
+        .get("runs")
+        .ok_or_else(|| anyhow::anyhow!("paired result missing 'runs'"))
+        .and_then(PairedRun::from_json)?;
+    Ok((id, Ok(runs)))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -189,6 +215,8 @@ mod tests {
             batch: 100,
             seed: 9,
             replications: 2,
+            paired: false,
+            baseline: None,
         };
         let wire = msg_spec(&spec).to_string();
         let back = parse_spec(&parse_line(&wire).unwrap()).unwrap();
@@ -205,6 +233,39 @@ mod tests {
         let (id, run) = parse_result(&parse_line(&wire).unwrap()).unwrap();
         assert_eq!(id, 7);
         assert_eq!(run.unwrap_err(), "no such policy");
+        // The same error line decodes on the paired path too.
+        let (id, run) = parse_paired_result(&parse_line(&wire).unwrap()).unwrap();
+        assert_eq!(id, 7);
+        assert_eq!(run.unwrap_err(), "no such policy");
+    }
+
+    #[test]
+    fn paired_result_roundtrip() {
+        use crate::sim::Metrics;
+        let mut m = Metrics::new(1, 5);
+        for i in 0..12 {
+            m.record_response(0, 1.0 + i as f64 * 0.125);
+        }
+        m.flush_responses();
+        let run = PairedRun {
+            runs: vec![
+                None,
+                Some(UnitRun {
+                    stats: crate::sim::UnitStats::from_metrics(&m, 4.0, 30, 0.002),
+                    display: "FCFS".into(),
+                }),
+            ],
+        };
+        let wire = msg_paired_result(3, &run).to_string();
+        let (id, back) = parse_paired_result(&parse_line(&wire).unwrap()).unwrap();
+        assert_eq!(id, 3);
+        let back = back.unwrap();
+        assert!(back.runs[0].is_none());
+        let (a, b) = (run.runs[1].as_ref().unwrap(), back.runs[1].as_ref().unwrap());
+        assert_eq!(a.display, b.display);
+        assert_eq!(a.stats.to_json().to_string(), b.stats.to_json().to_string());
+        // A paired line is not a valid marginal result (missing stats).
+        assert!(parse_result(&parse_line(&wire).unwrap()).is_err());
     }
 
     #[test]

@@ -4,7 +4,7 @@
 //! engine reuse) as the in-process runner — the worker adds nothing but
 //! transport.
 
-use crate::experiments::run_unit;
+use crate::experiments::{run_paired_unit, run_unit};
 use crate::sim::Engine;
 use crate::sweep::proto;
 use std::io::{BufRead, BufReader, Write};
@@ -38,6 +38,13 @@ pub fn run_worker_with_token(addr: &str, token: Option<&str>) -> anyhow::Result<
     }
     let spec = proto::parse_spec(&first)?;
     let grid = spec.grid();
+    // Paired (CRN) sweeps flip to the (λ, replication) grid: one unit
+    // runs every policy over one shared stream and ships a runs array.
+    let paired = spec.paired_grid()?;
+    let n_units = match &paired {
+        Some(pg) => pg.n_units(),
+        None => grid.n_units(),
+    };
     // Engine cache: consecutive units of the same point reuse one
     // engine's allocations (reset is bit-identical to fresh).
     let mut cache: Option<(usize, Engine)> = None;
@@ -57,14 +64,28 @@ pub fn run_worker_with_token(addr: &str, token: Option<&str>) -> anyhow::Result<
         match proto::op_of(&msg) {
             Some("unit") => {
                 let u = proto::id_of(&msg)?;
-                if u >= grid.n_units() {
+                if u >= n_units {
                     anyhow::bail!("driver assigned out-of-range unit {u}");
                 }
-                let (p, _) = grid.point_rep(u);
-                let wl = spec.workload.build(grid.pts[p].0);
-                let reply = match run_unit(&grid, &wl, u, &mut cache) {
-                    Some(run) => proto::msg_result(u, &run),
-                    None => proto::msg_result_err(u, "policy construction failed"),
+                let reply = match &paired {
+                    Some(pg) => {
+                        let (li, _) = pg.point_rep(u);
+                        let wl = spec.workload.build(pg.lambdas[li]);
+                        let run = run_paired_unit(pg, &wl, u, &mut cache);
+                        if run.runs.iter().all(|r| r.is_none()) {
+                            proto::msg_result_err(u, "policy construction failed")
+                        } else {
+                            proto::msg_paired_result(u, &run)
+                        }
+                    }
+                    None => {
+                        let (p, _) = grid.point_rep(u);
+                        let wl = spec.workload.build(grid.pts[p].0);
+                        match run_unit(&grid, &wl, u, &mut cache) {
+                            Some(run) => proto::msg_result(u, &run),
+                            None => proto::msg_result_err(u, "policy construction failed"),
+                        }
+                    }
                 };
                 if writeln!(writer, "{reply}").is_err() {
                     break;

@@ -264,6 +264,143 @@ impl BatchMeans {
     }
 }
 
+/// Paired-difference accumulator for common-random-number (CRN) policy
+/// comparisons: each replication runs policy and baseline over the
+/// *same* arrival stream, and only the differences enter the estimator.
+///
+/// Sign convention: every Δ is `policy − baseline`, so **negative means
+/// the policy responds faster than the baseline** (response times: lower
+/// is better).
+///
+/// Two levels of pairing feed in per replication via
+/// [`PairedDiff::push_rep`]:
+///  * per-class replication deltas — Δ of the class mean response times
+///    — into one Welford per class (replication-level CI per class);
+///  * batch-mean deltas — the two runs' completed batch means zipped to
+///    the shorter run and differenced — pooled into one accumulator
+///    across replications. Under CRN the batch deltas are strongly
+///    positively-correlated pairs, so `Var(Δ)` collapses relative to
+///    the unpaired quadrature `Var(A) + Var(B)` and the Δ CI narrows
+///    accordingly.
+///
+/// Serializes bit-exact over the `f64_bits` wire like [`Welford`] /
+/// [`BatchMeans`], so a driver-side merge of shipped accumulators is
+/// indistinguishable from an in-process merge.
+#[derive(Clone, Debug)]
+pub struct PairedDiff {
+    /// Per-class Welford over replication-level Δ of class means.
+    per_class: Vec<Welford>,
+    /// Pooled Welford over per-batch Δ of batch means.
+    batches: Welford,
+    /// Number of replications pushed.
+    reps: u64,
+}
+
+impl PairedDiff {
+    pub fn new(num_classes: usize) -> PairedDiff {
+        PairedDiff {
+            per_class: (0..num_classes).map(|_| Welford::new()).collect(),
+            batches: Welford::new(),
+            reps: 0,
+        }
+    }
+
+    pub fn num_classes(&self) -> usize {
+        self.per_class.len()
+    }
+
+    pub fn replications(&self) -> u64 {
+        self.reps
+    }
+
+    /// Absorb one paired replication: per-class mean response times of
+    /// the two runs, plus their completed batch-mean sequences (zipped
+    /// to the shorter; a trailing unmatched batch has no pair and is
+    /// dropped from the Δ estimator).
+    pub fn push_rep(
+        &mut self,
+        policy_class_means: &[f64],
+        baseline_class_means: &[f64],
+        policy_batches: &[f64],
+        baseline_batches: &[f64],
+    ) {
+        debug_assert_eq!(policy_class_means.len(), self.per_class.len());
+        debug_assert_eq!(baseline_class_means.len(), self.per_class.len());
+        for (c, w) in self.per_class.iter_mut().enumerate() {
+            w.push(policy_class_means[c] - baseline_class_means[c]);
+        }
+        for (p, b) in policy_batches.iter().zip(baseline_batches.iter()) {
+            self.batches.push(p - b);
+        }
+        self.reps += 1;
+    }
+
+    /// Pooled Δ of batch means (policy − baseline).
+    pub fn delta_mean(&self) -> f64 {
+        self.batches.mean()
+    }
+
+    /// 95% CI half-width of the pooled Δ (normal approximation over the
+    /// paired batch deltas; NaN until ≥2 paired batches).
+    pub fn ci95_half_width(&self) -> f64 {
+        let n = self.batches.count();
+        if n < 2 {
+            return f64::NAN;
+        }
+        1.96 * (self.batches.variance() / n as f64).sqrt()
+    }
+
+    /// Replication-level Δ of class `c`'s mean response time.
+    pub fn class_delta_mean(&self, c: usize) -> f64 {
+        self.per_class[c].mean()
+    }
+
+    /// Number of paired batch deltas pooled so far.
+    pub fn paired_batches(&self) -> u64 {
+        self.batches.count()
+    }
+
+    /// Merge another accumulator (sharded replication combine).
+    pub fn merge(&mut self, o: &PairedDiff) {
+        debug_assert_eq!(self.per_class.len(), o.per_class.len());
+        for (w, ow) in self.per_class.iter_mut().zip(o.per_class.iter()) {
+            w.merge(ow);
+        }
+        self.batches.merge(&o.batches);
+        self.reps += o.reps;
+    }
+
+    /// Bit-exact JSON form, following the [`Welford`] wire idiom.
+    pub fn to_json(&self) -> Value {
+        let classes: Vec<Value> = self.per_class.iter().map(|w| w.to_json()).collect();
+        Value::obj()
+            .set("classes", Value::Arr(classes))
+            .set("batches", self.batches.to_json())
+            .set("reps", self.reps)
+    }
+
+    /// Inverse of [`PairedDiff::to_json`].
+    pub fn from_json(v: &Value) -> anyhow::Result<PairedDiff> {
+        let classes = v
+            .get("classes")
+            .and_then(|c| c.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("missing 'classes' array"))?;
+        let per_class = classes
+            .iter()
+            .map(Welford::from_json)
+            .collect::<anyhow::Result<Vec<Welford>>>()?;
+        let batches = v
+            .get("batches")
+            .ok_or_else(|| anyhow::anyhow!("missing 'batches'"))
+            .and_then(Welford::from_json)?;
+        Ok(PairedDiff {
+            per_class,
+            batches,
+            reps: u64_field(v, "reps")?,
+        })
+    }
+}
+
 /// Fixed-memory log-scale histogram (bins per decade) for response-time
 /// tails. Range: [1e-9, 1e9); out-of-range values clamp to edge bins.
 #[derive(Clone, Debug)]
@@ -529,6 +666,100 @@ mod tests {
         ta.update(0.0, 1.0); // value 1 on [0,2)
         ta.update(2.0, 3.0); // value 3 on [2,4)
         assert!((ta.average(4.0) - 2.0).abs() < 1e-12);
+    }
+
+    /// Build a PairedDiff from synthetic replications where the policy
+    /// run is the baseline run shifted by `shift` plus small noise — the
+    /// CRN-correlated shape the estimator exists for.
+    fn synthetic_paired(reps: std::ops::Range<u64>, shift: f64) -> PairedDiff {
+        let mut pd = PairedDiff::new(2);
+        for rep in reps {
+            let mut r = crate::util::rng::Rng::new(1000 + rep);
+            let base: Vec<f64> = (0..20).map(|_| 5.0 + r.f64()).collect();
+            let pol: Vec<f64> = base.iter().map(|b| b + shift + 0.01 * r.f64()).collect();
+            let bm = [base[0], base[1]];
+            let pm = [pol[0], pol[1]];
+            pd.push_rep(&pm, &bm, &pol, &base);
+        }
+        pd
+    }
+
+    #[test]
+    fn paired_diff_sign_convention() {
+        // Policy strictly faster (smaller response times): Δ < 0.
+        let faster = synthetic_paired(0..8, -1.0);
+        assert!(faster.delta_mean() < 0.0);
+        assert!(faster.class_delta_mean(0) < 0.0);
+        // Policy slower: Δ > 0, and the CI excludes zero.
+        let slower = synthetic_paired(0..8, 1.0);
+        assert!(slower.delta_mean() > 0.0);
+        assert!(slower.delta_mean() - slower.ci95_half_width() > 0.0);
+        assert_eq!(slower.replications(), 8);
+        // CRN correlation: the paired CI is far narrower than the
+        // unpaired quadrature of the two marginals would be (~0.4 here,
+        // the spread of the uniform noise on each side).
+        assert!(slower.ci95_half_width() < 0.05);
+    }
+
+    #[test]
+    fn paired_diff_merge_associative_and_matches_sequential() {
+        let all = synthetic_paired(0..12, 0.5);
+        let (a, b, c) = (
+            synthetic_paired(0..4, 0.5),
+            synthetic_paired(4..9, 0.5),
+            synthetic_paired(9..12, 0.5),
+        );
+        // (a ⊕ b) ⊕ c vs a ⊕ (b ⊕ c) vs the sequential accumulator.
+        let mut left = a.clone();
+        left.merge(&b);
+        left.merge(&c);
+        let mut bc = b.clone();
+        bc.merge(&c);
+        let mut right = a.clone();
+        right.merge(&bc);
+        for m in [&left, &right] {
+            assert_eq!(m.replications(), all.replications());
+            assert_eq!(m.paired_batches(), all.paired_batches());
+            assert!((m.delta_mean() - all.delta_mean()).abs() < 1e-12);
+            assert!((m.ci95_half_width() - all.ci95_half_width()).abs() < 1e-12);
+            for cidx in 0..2 {
+                assert!((m.class_delta_mean(cidx) - all.class_delta_mean(cidx)).abs() < 1e-12);
+            }
+        }
+        assert!((left.delta_mean() - right.delta_mean()).abs() < 1e-14);
+    }
+
+    #[test]
+    fn paired_diff_json_roundtrip_merges_identically() {
+        let a = synthetic_paired(0..5, 0.3);
+        let b = synthetic_paired(5..9, 0.3);
+        let b_wire =
+            PairedDiff::from_json(&Value::parse(&b.to_json().to_string()).unwrap()).unwrap();
+        let mut direct = a.clone();
+        direct.merge(&b);
+        let mut via_wire = a.clone();
+        via_wire.merge(&b_wire);
+        assert_eq!(direct.replications(), via_wire.replications());
+        assert_eq!(direct.delta_mean().to_bits(), via_wire.delta_mean().to_bits());
+        assert_eq!(
+            direct.ci95_half_width().to_bits(),
+            via_wire.ci95_half_width().to_bits()
+        );
+        for c in 0..2 {
+            assert_eq!(
+                direct.class_delta_mean(c).to_bits(),
+                via_wire.class_delta_mean(c).to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn paired_diff_unequal_batch_counts_zip_to_shorter() {
+        let mut pd = PairedDiff::new(1);
+        pd.push_rep(&[1.0], &[2.0], &[1.0, 1.0, 1.0], &[2.0, 2.0]);
+        assert_eq!(pd.paired_batches(), 2);
+        assert!((pd.delta_mean() + 1.0).abs() < 1e-12);
+        assert!((pd.class_delta_mean(0) + 1.0).abs() < 1e-12);
     }
 
     #[test]

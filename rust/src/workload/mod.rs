@@ -283,6 +283,93 @@ impl ArrivalSource for SyntheticSource {
     }
 }
 
+/// A common-random-number (CRN) arrival stream: the `SyntheticSource`
+/// output for one (workload, seed), materialized **once** and replayed
+/// read-only by any number of engines.
+///
+/// The stream is extended lazily — the first consumer to reach index
+/// `i` pays the sampling cost; every later [`ReplayCursor`] reads the
+/// recorded `Arrival` verbatim. Because the engine threads its RNG only
+/// through `ArrivalSource::next_arrival` (policies never draw from it;
+/// NMSR carries its own fixed-seed chain), replaying the recorded
+/// arrivals while ignoring the engine-supplied RNG is bit-identical to
+/// a solo run with a live `SyntheticSource` at the same seed — the CRN
+/// determinism contract, differential-tested in
+/// `tests/integration_paired.rs`.
+pub struct MaterializedStream {
+    wl: Workload,
+    src: SyntheticSource,
+    rng: Rng,
+    arrivals: Vec<Arrival>,
+}
+
+impl MaterializedStream {
+    pub fn new(wl: Workload, seed: u64) -> MaterializedStream {
+        MaterializedStream {
+            src: SyntheticSource::new(wl.clone()),
+            rng: Rng::new(seed),
+            arrivals: Vec::new(),
+            wl,
+        }
+    }
+
+    /// Number of arrivals materialized so far.
+    pub fn len(&self) -> usize {
+        self.arrivals.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.arrivals.is_empty()
+    }
+
+    /// The arrival at index `i`, sampling forward as needed.
+    #[inline]
+    fn ensure(&mut self, i: usize) -> Option<Arrival> {
+        while self.arrivals.len() <= i {
+            let a = self.src.next_arrival(&mut self.rng)?;
+            self.arrivals.push(a);
+        }
+        Some(self.arrivals[i])
+    }
+
+    /// A fresh read cursor at the start of the stream. Cursors borrow
+    /// the stream mutably (lazy extension), so the engines sharing one
+    /// stream run sequentially — the win is sampling the stream once,
+    /// not running policies concurrently.
+    pub fn cursor(&mut self) -> ReplayCursor<'_> {
+        ReplayCursor {
+            stream: self,
+            pos: 0,
+        }
+    }
+}
+
+/// Read cursor over a [`MaterializedStream`]; implements
+/// [`ArrivalSource`] so the engine is agnostic between live sampling
+/// and replay. The engine-supplied RNG is deliberately unused: the
+/// stream's own RNG already produced (or lazily produces) every
+/// arrival, and consuming the caller's RNG would break the
+/// bit-identity contract with solo runs.
+pub struct ReplayCursor<'a> {
+    stream: &'a mut MaterializedStream,
+    pos: usize,
+}
+
+impl ArrivalSource for ReplayCursor<'_> {
+    #[inline]
+    fn next_arrival(&mut self, _rng: &mut Rng) -> Option<Arrival> {
+        let a = self.stream.ensure(self.pos);
+        if a.is_some() {
+            self.pos += 1;
+        }
+        a
+    }
+
+    fn workload(&self) -> &Workload {
+        &self.stream.wl
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -324,5 +411,40 @@ mod tests {
         let rate = n as f64 / last;
         assert!((rate - 4.0).abs() < 0.05, "rate={rate}");
         assert!((counts[0] as f64 / n as f64 - 0.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn materialized_replay_matches_live_source_bitwise() {
+        let wl = Workload::one_or_all(8, 4.0, 0.5, 1.0, 2.0);
+        let seed = 99;
+        let mut live = SyntheticSource::new(wl.clone());
+        let mut live_rng = Rng::new(seed);
+        let mut stream = MaterializedStream::new(wl, seed);
+        // Two interleaved cursors at different depths plus a third full
+        // pass: every read must match the live stream bit for bit, and
+        // the engine-side RNG handed to the cursor must stay untouched.
+        let mut dummy = Rng::new(0);
+        let reference: Vec<Arrival> = (0..1000)
+            .map(|_| live.next_arrival(&mut live_rng).unwrap())
+            .collect();
+        {
+            let mut c1 = stream.cursor();
+            for want in reference.iter().take(700) {
+                let got = c1.next_arrival(&mut dummy).unwrap();
+                assert_eq!(got.t.to_bits(), want.t.to_bits());
+                assert_eq!(got.class, want.class);
+                assert_eq!(got.size.to_bits(), want.size.to_bits());
+            }
+        }
+        assert_eq!(stream.len(), 700);
+        let mut c2 = stream.cursor();
+        for want in &reference {
+            let got = c2.next_arrival(&mut dummy).unwrap();
+            assert_eq!(got.t.to_bits(), want.t.to_bits());
+            assert_eq!(got.class, want.class);
+            assert_eq!(got.size.to_bits(), want.size.to_bits());
+        }
+        // The dummy RNG was never consumed by replay.
+        assert_eq!(dummy.next_u64(), Rng::new(0).next_u64());
     }
 }

@@ -1,0 +1,260 @@
+//! CRN paired-replication integration: the shared-stream contract.
+//!
+//! Three layers of the determinism argument, bottom to top:
+//!
+//! 1. Replaying a [`MaterializedStream`] through the engine is
+//!    bit-identical to a live [`SyntheticSource`] run at the same seed,
+//!    for every policy, on the fig5/fig6 shapes — even when the
+//!    engine-side RNG is seeded with garbage, because arrivals are the
+//!    only consumer of that RNG.
+//! 2. A policy's marginal statistics inside a paired unit cannot depend
+//!    on which other policies share its stream (solo paired grid vs the
+//!    full grid, compared per-field to the bit).
+//! 3. A sharded paired sweep (driver + workers over the wire) is
+//!    bit-identical to the in-process paired runner at the same
+//!    (seed, R) — marginal points and Δ rows both.
+//!
+//! Plus the acceptance gate: on a fig2 frontier point, the paired
+//! Δ(MSFQ − MSF) CI is at least 3× narrower than the unpaired
+//! quadrature CI at the same event budget.
+
+use quickswap::experiments::{run_paired_unit, DiffPoint, PairedGrid, Point};
+use quickswap::sim::{Engine, SimConfig, SimResult, UnitStats};
+use quickswap::sweep::{run_spec_paired_local, run_worker, Driver, SweepSpec, WorkloadSpec};
+use quickswap::util::rng::Rng;
+use quickswap::workload::{borg::borg_workload, MaterializedStream, Workload};
+
+/// Standard config shape used across the differentials (warmup = 1/5 of
+/// the measured budget, everything else at defaults).
+fn cfg(target: u64) -> SimConfig {
+    SimConfig {
+        target_completions: target,
+        warmup_completions: target / 5,
+        ..Default::default()
+    }
+}
+
+/// Run `policy` over a replayed [`MaterializedStream`] at `seed` — the
+/// paired runner's engine path — with a deliberately different
+/// engine-side RNG seed to prove replay never consumes it.
+fn replay_result(wl: &Workload, policy: &str, cfg: &SimConfig, seed: u64) -> SimResult {
+    let mut engine = Engine::new(wl, cfg.clone());
+    let mut stream = MaterializedStream::new(wl.clone(), seed);
+    let mut pol = quickswap::policy::by_name(policy, wl).unwrap();
+    let mut rng = Rng::new(seed ^ 0xDEAD_BEEF_F00D); // junk on purpose
+    let mut cursor = stream.cursor();
+    engine.run(&mut cursor, pol.as_mut(), &mut rng)
+}
+
+/// Every statistic reports read from a [`SimResult`] must match to the
+/// bit (wall-clock excluded — it is the one legitimately nondeterministic
+/// field).
+fn assert_result_bit_identical(policy: &str, tag: &str, a: &SimResult, b: &SimResult) {
+    assert_eq!(a.policy, b.policy, "{tag}/{policy}");
+    assert_eq!(a.completed, b.completed, "{tag}/{policy}");
+    assert_eq!(a.events, b.events, "{tag}/{policy}");
+    assert_eq!(a.mean_t_all.to_bits(), b.mean_t_all.to_bits(), "{tag}/{policy}");
+    assert_eq!(a.ci95.to_bits(), b.ci95.to_bits(), "{tag}/{policy}");
+    assert_eq!(a.weighted_t.to_bits(), b.weighted_t.to_bits(), "{tag}/{policy}");
+    assert_eq!(a.jain.to_bits(), b.jain.to_bits(), "{tag}/{policy}");
+    assert_eq!(a.utilization.to_bits(), b.utilization.to_bits(), "{tag}/{policy}");
+    assert_eq!(a.sim_time.to_bits(), b.sim_time.to_bits(), "{tag}/{policy}");
+    for c in 0..a.mean_t.len() {
+        assert_eq!(a.mean_t[c].to_bits(), b.mean_t[c].to_bits(), "{tag}/{policy} class {c}");
+        assert_eq!(a.mean_n[c].to_bits(), b.mean_n[c].to_bits(), "{tag}/{policy} class {c}");
+        assert_eq!(a.count[c], b.count[c], "{tag}/{policy} class {c}");
+    }
+}
+
+/// Replay vs live source, every policy, fig5/fig6 multiclass shapes plus
+/// the one-or-all shape MSFQ accepts. This is the foundation the paired
+/// runner's "marginals are bit-identical to solo runs" claim rests on.
+#[test]
+fn replay_is_bit_identical_to_live_source_for_every_policy() {
+    let multiclass = [
+        "fcfs",
+        "first-fit",
+        "msf",
+        "static-qs",
+        "adaptive-qs",
+        "nmsr",
+        "server-filling",
+    ];
+    let fig5 = Workload::four_class(4.0);
+    let c5 = cfg(15_000);
+    for policy in multiclass {
+        let live = quickswap::sim::run_named(&fig5, policy, &c5, 1234).unwrap();
+        let replay = replay_result(&fig5, policy, &c5, 1234);
+        assert_result_bit_identical(policy, "fig5", &live, &replay);
+    }
+    let fig6 = borg_workload(4.0);
+    let c6 = cfg(5_000);
+    for policy in multiclass {
+        let live = quickswap::sim::run_named(&fig6, policy, &c6, 77).unwrap();
+        let replay = replay_result(&fig6, policy, &c6, 77);
+        assert_result_bit_identical(policy, "fig6", &live, &replay);
+    }
+    let ooa = Workload::one_or_all(32, 7.5, 0.9, 1.0, 1.0);
+    let c2 = cfg(12_000);
+    for policy in ["fcfs", "first-fit", "msf", "msfq:31", "msfq:0", "server-filling"] {
+        let live = quickswap::sim::run_named(&ooa, policy, &c2, 7).unwrap();
+        let replay = replay_result(&ooa, policy, &c2, 7);
+        assert_result_bit_identical(policy, "fig2-one-or-all", &live, &replay);
+    }
+}
+
+/// Everything a paired unit ships over the wire except wall clock.
+fn assert_stats_bit_identical(tag: &str, a: &UnitStats, b: &UnitStats) {
+    assert_eq!(a.completed, b.completed, "{tag}");
+    assert_eq!(a.events, b.events, "{tag}");
+    assert_eq!(a.window.to_bits(), b.window.to_bits(), "{tag}");
+    assert_eq!(a.busy_area.to_bits(), b.busy_area.to_bits(), "{tag}");
+    assert_eq!(a.n_area.len(), b.n_area.len(), "{tag}");
+    for c in 0..a.n_area.len() {
+        assert_eq!(a.n_area[c].to_bits(), b.n_area[c].to_bits(), "{tag} class {c}");
+    }
+    assert_eq!(a.resp.len(), b.resp.len(), "{tag}");
+    for c in 0..a.resp.len() {
+        let (x, y) = (a.resp[c].to_json().to_string(), b.resp[c].to_json().to_string());
+        assert_eq!(x, y, "{tag} resp class {c}");
+    }
+    let (x, y) = (a.resp_all.to_json().to_string(), b.resp_all.to_json().to_string());
+    assert_eq!(x, y, "{tag} resp_all");
+}
+
+/// A policy's marginal stats cannot depend on which other policies share
+/// its stream: a one-policy paired grid and the full four-policy grid
+/// produce bit-identical per-policy stats for every (λ, replication)
+/// unit. This is what makes CRN a pure variance optimisation — it can
+/// never change what any single policy reports.
+#[test]
+fn paired_marginals_are_independent_of_the_policy_set() {
+    let base = cfg(8_000);
+    let lambdas = [3.0, 4.0];
+    let all: [&str; 4] = ["msf", "fcfs", "msfq:7", "first-fit"];
+    let grid_all = PairedGrid::new(&lambdas, &all, 0, &base, 99, 2);
+    for u in 0..grid_all.n_units() {
+        let (li, r) = grid_all.point_rep(u);
+        let wl = Workload::one_or_all(8, grid_all.lambdas[li], 0.9, 1.0, 1.0);
+        let mut cache = None;
+        let full = run_paired_unit(&grid_all, &wl, u, &mut cache);
+        for (pi, &name) in all.iter().enumerate() {
+            let solo_grid = PairedGrid::new(&lambdas, &[name], 0, &base, 99, 2);
+            let mut solo_cache = None;
+            let solo = run_paired_unit(&solo_grid, &wl, u, &mut solo_cache);
+            let tag = format!("λ={} rep={r} policy={name}", grid_all.lambdas[li]);
+            let a = full.runs[pi].as_ref().unwrap_or_else(|| panic!("{tag}: full run missing"));
+            let b = solo.runs[0].as_ref().unwrap_or_else(|| panic!("{tag}: solo run missing"));
+            assert_eq!(a.display, b.display, "{tag}");
+            assert_stats_bit_identical(&tag, &a.stats, &b.stats);
+        }
+    }
+}
+
+/// The sweep-smoke grid, paired against an MSF baseline.
+fn paired_spec() -> SweepSpec {
+    SweepSpec {
+        workload: WorkloadSpec::OneOrAll {
+            k: 8,
+            p1: 0.9,
+            mu1: 1.0,
+            muk: 1.0,
+        },
+        lambdas: vec![2.0, 3.0],
+        policies: vec!["msf".into(), "msfq:7".into(), "fcfs".into()],
+        target_completions: 6_000,
+        warmup_completions: 1_200,
+        batch: 1000,
+        seed: 42,
+        replications: 3,
+        paired: true,
+        baseline: Some("msf".into()),
+    }
+}
+
+fn assert_points_bit_identical(a: &[Point], b: &[Point]) {
+    assert_eq!(a.len(), b.len(), "point count differs");
+    for (x, y) in a.iter().zip(b) {
+        let tag = format!("({}, {})", x.lambda, x.policy);
+        assert_eq!(x.lambda.to_bits(), y.lambda.to_bits(), "{tag}");
+        assert_eq!(x.policy, y.policy, "{tag}");
+        assert_result_bit_identical(&x.policy, "sharded-vs-local", &x.result, &y.result);
+    }
+}
+
+fn assert_diffs_bit_identical(a: &[DiffPoint], b: &[DiffPoint]) {
+    assert_eq!(a.len(), b.len(), "diff count differs");
+    for (x, y) in a.iter().zip(b) {
+        let tag = format!("({}, {} − {})", x.lambda, x.policy, x.baseline);
+        assert_eq!(x.lambda.to_bits(), y.lambda.to_bits(), "{tag}");
+        assert_eq!(x.policy, y.policy, "{tag}");
+        assert_eq!(x.baseline, y.baseline, "{tag}");
+        assert_eq!(x.unpaired_ci95.to_bits(), y.unpaired_ci95.to_bits(), "{tag}");
+        assert_eq!(x.diff.to_json().to_string(), y.diff.to_json().to_string(), "{tag}");
+    }
+}
+
+/// Sharding a paired sweep adds nothing but transport: driver + N
+/// in-process workers reproduce the local runner's marginal points and
+/// Δ rows to the bit, for 1 and 2 workers (arrival order and unit
+/// interleaving vary; the pooled output must not).
+#[test]
+fn sharded_paired_sweep_is_bit_identical_to_local() {
+    let spec = paired_spec();
+    let local = run_spec_paired_local(&spec, 4).unwrap();
+    assert_eq!(local.points.len(), 6, "2 λ × 3 policies");
+    assert_eq!(local.diffs.len(), 4, "2 λ × 2 non-baseline policies");
+    for n_workers in [1usize, 2] {
+        let driver = Driver::bind(&spec, "127.0.0.1:0").unwrap();
+        let addr = driver.local_addr().to_string();
+        let dh = std::thread::spawn(move || driver.run_paired().unwrap());
+        let workers: Vec<_> = (0..n_workers)
+            .map(|_| {
+                let a = addr.clone();
+                std::thread::spawn(move || run_worker(&a).unwrap())
+            })
+            .collect();
+        let sharded = dh.join().unwrap();
+        let served: usize = workers.into_iter().map(|w| w.join().unwrap()).sum();
+        assert_eq!(served, 6, "every (λ, replication) unit acknowledged once");
+        assert_points_bit_identical(&local.points, &sharded.points);
+        assert_diffs_bit_identical(&local.diffs, &sharded.diffs);
+    }
+}
+
+/// The acceptance gate on a fig2 frontier point (k=32, λ=7.5, p1=0.9):
+/// at a fixed event budget, the paired Δ(MSFQ − MSF) CI must be at
+/// least 3× narrower than the unpaired quadrature of the marginal CIs.
+/// Fully deterministic at the pinned seed, so this either always passes
+/// or always fails — it cannot flake.
+#[test]
+fn paired_ci_is_at_least_3x_narrower_on_fig2_frontier() {
+    let spec = SweepSpec {
+        workload: WorkloadSpec::OneOrAll {
+            k: 32,
+            p1: 0.9,
+            mu1: 1.0,
+            muk: 1.0,
+        },
+        lambdas: vec![7.5],
+        policies: vec!["msf".into(), "msfq:31".into()],
+        target_completions: 40_000,
+        warmup_completions: 8_000,
+        batch: 1000,
+        seed: 20250710,
+        replications: 4,
+        paired: true,
+        baseline: Some("msf".into()),
+    };
+    let sweep = run_spec_paired_local(&spec, 4).unwrap();
+    assert_eq!(sweep.diffs.len(), 1);
+    let d = &sweep.diffs[0];
+    let paired = d.diff.ci95_half_width();
+    assert!(paired.is_finite() && paired > 0.0, "degenerate paired CI: {paired}");
+    let ratio = d.unpaired_ci95 / paired;
+    assert!(
+        ratio >= 3.0,
+        "CRN variance reduction only {ratio:.2}× (paired ±{paired:.4}, unpaired ±{:.4})",
+        d.unpaired_ci95
+    );
+}

@@ -25,6 +25,8 @@ fn smoke_spec() -> SweepSpec {
         batch: 1000,
         seed: 42,
         replications: 3,
+        paired: false,
+        baseline: None,
     }
 }
 

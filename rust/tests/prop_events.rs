@@ -3,8 +3,10 @@
 //! reference model — for **both** the indexed 4-ary heap and the ladder
 //! queue — plus a lockstep heap-vs-ladder differential (the two must
 //! agree operation by operation), a heavy-tail script that provably
-//! exercises the ladder's rung-spill path, and full fig5/fig6-shaped
-//! engine runs byte-compared across schedules.
+//! exercises the ladder's rung-spill path, an all-ties script that
+//! provably exercises the seq-keyed tie sub-buckets (giant equal-time
+//! clusters with interleaved cancels), and full fig5/fig6-shaped engine
+//! runs byte-compared across schedules.
 
 use quickswap::sim::events::{EventKind, EventQueue};
 use quickswap::sim::ladder::LadderQueue;
@@ -22,43 +24,83 @@ struct RefEv {
     job: Option<u64>,
 }
 
+/// Time shape of a script's pushes.
+#[derive(Clone, Copy, Debug)]
+enum Shape {
+    /// Coarse grid: ties are frequent but clusters stay small.
+    Coarse,
+    /// Heavy-tailed: wide dynamic range, rare far-future outliers — the
+    /// shape that forces ladder re-seeds and rung spills.
+    Heavy,
+    /// All-ties: almost every push lands on one of two times, building
+    /// equal-time clusters far larger than one ladder bucket — the
+    /// shape that forces the seq-keyed tie sub-buckets.
+    Ties,
+}
+
 #[derive(Clone, Debug)]
 struct Script {
     /// (opcode selector, payload selector) pairs.
     ops: Vec<(u64, u64)>,
-    /// Time shape: false = coarse tie-heavy grid, true = heavy-tailed
-    /// (wide dynamic range, rare far-future outliers — the shape that
-    /// forces ladder re-seeds and rung spills).
-    heavy: bool,
+    shape: Shape,
 }
 
 fn gen_script(r: &mut Rng) -> Script {
     Script {
         ops: (0..300).map(|_| (r.below(100), r.below(1 << 20))).collect(),
-        heavy: false,
+        shape: Shape::Coarse,
     }
 }
 
 fn gen_script_heavy(r: &mut Rng) -> Script {
     Script {
         ops: (0..400).map(|_| (r.below(100), r.below(1 << 20))).collect(),
-        heavy: true,
+        shape: Shape::Heavy,
+    }
+}
+
+/// Phase-structured: a long push-dominated build phase (with cancels
+/// sprinkled in) grows giant equal-time clusters before the full op mix
+/// churns them down — a uniform op mix would drain clusters as fast as
+/// they form and never reach tie-rung size.
+fn gen_script_ties(r: &mut Rng) -> Script {
+    let build = (0..400).map(|_| {
+        let op = if r.below(10) == 0 { 8 } else { r.below(6) };
+        (op, r.below(1 << 20))
+    });
+    let churn = (0..250).map(|_| (r.below(100), r.below(1 << 20)));
+    Script {
+        ops: build.chain(churn).collect(),
+        shape: Shape::Ties,
     }
 }
 
 fn time_of(sc: &Script, payload: u64) -> f64 {
-    if sc.heavy {
-        // Dense cluster with rare outliers several orders of magnitude
-        // out — Borg-like service-time spread.
-        let base = (payload % 512) as f64 * 1e-4;
-        match payload % 23 {
-            0 => base * 1.0e6,
-            1 => base * 1.0e3 + 50.0,
-            _ => base,
+    match sc.shape {
+        Shape::Heavy => {
+            // Dense cluster with rare outliers several orders of
+            // magnitude out — Borg-like service-time spread.
+            let base = (payload % 512) as f64 * 1e-4;
+            match payload % 23 {
+                0 => base * 1.0e6,
+                1 => base * 1.0e3 + 50.0,
+                _ => base,
+            }
         }
-    } else {
-        // Coarse grid so ties are frequent.
-        (payload % 64) as f64 * 0.25
+        Shape::Coarse => {
+            // Coarse grid so ties are frequent.
+            (payload % 64) as f64 * 0.25
+        }
+        Shape::Ties => {
+            // Two tie times plus rare strays (the strays keep the
+            // re-seed span nonzero, routing clusters through the
+            // bucket-spill arm as well as the overflow arm).
+            match payload % 16 {
+                0 => (payload % 8) as f64 + 100.0,
+                1..=3 => 9.0,
+                _ => 3.0,
+            }
+        }
     }
 }
 
@@ -217,6 +259,13 @@ fn prop_ladder_matches_reference_heavy_tail() {
     });
 }
 
+#[test]
+fn prop_ladder_matches_reference_all_ties() {
+    check("ladder_vs_reference_ties", gen_script_ties, |sc| {
+        run_script(sc, &mut LadderQueue::new())
+    });
+}
+
 /// Lockstep differential: heap and ladder fed the identical op stream
 /// must agree on every observable after every operation — pop results
 /// (full events: time, sequence, kind), peek, length, and departure
@@ -305,6 +354,61 @@ fn run_lockstep(sc: &Script) -> Result<(), String> {
 fn prop_heap_ladder_lockstep_differential() {
     check("heap_vs_ladder_lockstep", gen_script, run_lockstep);
     check("heap_vs_ladder_lockstep_heavy", gen_script_heavy, run_lockstep);
+    check("heap_vs_ladder_lockstep_ties", gen_script_ties, run_lockstep);
+}
+
+/// Deterministic giant all-ties cluster, churned against the heap in
+/// lockstep: builds a cluster far larger than one bottom-tier bucket,
+/// asserts the ladder actually took the seq-keyed tie path (so this
+/// test cannot silently stop covering it), then interleaves cancels,
+/// pops and peeks — the pattern whose cancels used to cost O(cluster).
+#[test]
+fn ladder_giant_tie_cluster_lockstep_with_cancels() {
+    let mut heap = EventQueue::new();
+    let mut ladder = LadderQueue::new();
+    for job in 0..1200u64 {
+        heap.push(42.0, EventKind::Departure { job });
+        ladder.push(42.0, EventKind::Departure { job });
+    }
+    assert_eq!(heap.pop(), ladder.pop());
+    assert!(ladder.tie_spills() > 0, "cluster must take the seq-keyed tie path");
+    let mut rng = Rng::new(11);
+    let mut live: Vec<u64> = (1..1200).collect();
+    for step in 0..900 {
+        if live.is_empty() {
+            break;
+        }
+        match rng.below(3) {
+            0 => {
+                let job = live.remove(rng.index(live.len()));
+                assert_eq!(
+                    heap.cancel_departure(job),
+                    ladder.cancel_departure(job),
+                    "step {step}: cancel({job}) diverged"
+                );
+            }
+            1 => {
+                let (a, b) = (heap.pop(), ladder.pop());
+                assert_eq!(a, b, "step {step}: pop diverged");
+                if let Some(e) = a {
+                    if let EventKind::Departure { job } = e.kind {
+                        live.retain(|&j| j != job);
+                    }
+                }
+            }
+            _ => {
+                assert_eq!(heap.peek_t(), ladder.peek_t(), "step {step}: peek diverged");
+            }
+        }
+        assert_eq!(heap.len(), ladder.len(), "step {step}: len diverged");
+    }
+    loop {
+        let (a, b) = (heap.pop(), ladder.pop());
+        assert_eq!(a, b, "drain diverged");
+        if a.is_none() {
+            break;
+        }
+    }
 }
 
 /// Rung-spill / bucket-resize property: a dense cluster with far

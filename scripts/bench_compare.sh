@@ -5,14 +5,15 @@
 #   scripts/bench_compare.sh <committed.json> <fresh.json>
 #
 # Gate: the headline targets (`sim_msfq:31`, `sim_borg_adaptive_qs`,
-# `sim_server_filling`, and the ladder-schedule twins `sim_fcfs:ladder`
-# / `sim_borg_adaptive_qs:ladder`) fail the run when they regress >30%
-# below the committed baseline, or when they are missing from the fresh
-# artifact entirely (a dropped scenario must not pass silently);
-# everything else
-# — and the [0.7, 1.0) band on the gated targets — is warn-only,
-# because smoke-scale numbers on shared CI runners jitter. A committed
-# stub (empty results) or a scale mismatch skips the gate with a note
+# `sim_server_filling`, the ladder-schedule twins `sim_fcfs:ladder` /
+# `sim_borg_adaptive_qs:ladder`, the CRN shared-stream target
+# `sim_paired_shared_stream`, and the unitless `paired_ci_width_ratio`)
+# fail the run when they regress >25% below the committed baseline, or
+# when they are missing from the fresh artifact entirely (a dropped
+# scenario must not pass silently); everything else — and the
+# [0.75, 1.0) band on the gated targets — is warn-only, because
+# smoke-scale numbers on shared CI runners jitter. A committed stub
+# (empty results) or a scale mismatch skips the gate with a note
 # rather than failing.
 set -euo pipefail
 
@@ -43,7 +44,8 @@ if committed.get("scale") != fresh.get("scale"):
     sys.exit(0)
 
 GATED = ("sim_msfq:31", "sim_borg_adaptive_qs", "sim_server_filling",
-         "sim_fcfs:ladder", "sim_borg_adaptive_qs:ladder")
+         "sim_fcfs:ladder", "sim_borg_adaptive_qs:ladder",
+         "sim_paired_shared_stream", "paired_ci_width_ratio")
 missing = [g for g in GATED if g not in new]
 if missing:
     sys.exit("error: gated bench target(s) missing from the fresh artifact: "
@@ -61,8 +63,8 @@ for name in sorted(set(base) | set(new)):
         continue
     ratio = new[name] / base[name]
     flag = ""
-    if name in GATED and ratio < 0.7:
-        flag = "  <-- FAIL: >30% regression"
+    if name in GATED and ratio < 0.75:
+        flag = "  <-- FAIL: >25% regression"
         failures.append(f"{name} at {ratio:.2f}x of baseline")
     elif ratio < 1.0:
         flag = "  (below baseline - warn only)"

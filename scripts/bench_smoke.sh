@@ -10,7 +10,11 @@
 # Fails loudly (no silent stub output) when:
 #   * cargo is missing,
 #   * the bench binary fails or writes no JSON,
-#   * any bench target reports 0 events/s.
+#   * any bench target reports 0 events/s,
+#   * the consult cache or the CRN shared-stream replay is a net
+#     slowdown, or CRN pairing widens the Δ CI (paired_ci_width_ratio
+#     below 1.0 — the acceptance value is asserted at 3.0 by
+#     rust/tests/integration_paired.rs).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -66,8 +70,22 @@ for cached, baseline in [
         print(f"consult-cache speedup {cached}: {ratio:.3f}x{marker}")
         if ratio < 0.9:
             failures.append(f"{cached} at {ratio:.3f}x of its uncached baseline")
+# CRN paired replications: replaying one shared stream across the 4-policy
+# set must beat 4 independent live-source runs (same noise margin as the
+# consult-cache gate), and pairing must narrow — never widen — the Δ CI.
+if "sim_paired_shared_stream" in results and "sim_independent_4policy" in results:
+    ratio = results["sim_paired_shared_stream"] / results["sim_independent_4policy"]
+    marker = "" if ratio >= 1.0 else "  <-- WARNING: replay slower than live sampling"
+    print(f"shared-stream speedup (CRN replay, 4 policies): {ratio:.3f}x{marker}")
+    if ratio < 0.9:
+        failures.append(f"sim_paired_shared_stream at {ratio:.3f}x of the independent runs")
+crn = results.get("paired_ci_width_ratio")
+if crn is not None:
+    print(f"paired_ci_width_ratio (unpaired / paired Δ CI, fig2 frontier): {crn:.2f}x")
+    if crn < 1.0:
+        failures.append(f"paired_ci_width_ratio {crn:.2f}x - CRN pairing widened the Δ CI")
 if failures:
-    sys.exit("error: consult cache is a net slowdown: " + "; ".join(failures))
+    sys.exit("error: perf smoke gate: " + "; ".join(failures))
 PYEOF
 else
     # Fallback without python3: reject the empty-results stub.

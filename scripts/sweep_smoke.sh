@@ -2,8 +2,11 @@
 # Sweep-sharding smoke: run the same smoke grid twice — once in-process,
 # once as 1 driver + 2 localhost worker processes — and require the two
 # result CSVs to be byte-identical (the sharding determinism contract;
-# see EXPERIMENTS.md §Sharded sweeps). CI runs this as the `sweep-smoke`
-# job.
+# see EXPERIMENTS.md §Sharded sweeps). A second leg repeats the exercise
+# in paired (CRN) mode with `--paired --baseline msf`: the marginal CSV
+# and the derived Δ CSV (`*.diff.csv`) must both be byte-identical
+# between the in-process and sharded runs. CI runs this as the
+# `sweep-smoke` job.
 #
 # Usage: scripts/sweep_smoke.sh
 set -euo pipefail
@@ -21,53 +24,88 @@ OUT=results
 mkdir -p "$OUT"
 
 # The smoke grid: small enough to finish in seconds, big enough to give
-# every worker several units (2 λ × 3 policies × 3 reps = 18 units).
+# every worker several units (unpaired: 2 λ × 3 policies × 3 reps = 18
+# units; paired: 2 λ × 3 reps = 6 units of 3 policies each).
 GRID=(--workload one_or_all --k 8 --p1 0.9 --lambdas 2.0,3.0
       --policies msf,msfq:7,fcfs --completions 6000 --seed 42 --reps 3)
+
+DRIVER_PID=""
+cleanup() { [ -n "$DRIVER_PID" ] && kill "$DRIVER_PID" 2>/dev/null || true; }
+trap cleanup EXIT
+
+# Wait for a backgrounded driver to print its bound address to its log.
+wait_for_addr() {
+    local log=$1 pid=$2 addr=""
+    for _ in $(seq 1 100); do
+        addr=$(sed -n 's/.*listening on //p' "$log" | head -n 1)
+        [ -n "$addr" ] && break
+        if ! kill -0 "$pid" 2>/dev/null; then
+            echo "error: driver exited before binding" >&2
+            cat "$log" >&2
+            return 1
+        fi
+        sleep 0.1
+    done
+    if [ -z "$addr" ]; then
+        echo "error: driver never reported a bound address" >&2
+        cat "$log" >&2
+        return 1
+    fi
+    echo "$addr"
+}
+
+# Run the sharded twin of an in-process run: driver + 2 workers.
+# $1 = log file, remaining args = the full sweep command line.
+run_sharded() {
+    local log=$1
+    shift
+    rm -f "$log"
+    "$@" 2> "$log" &
+    DRIVER_PID=$!
+    local addr
+    addr=$(wait_for_addr "$log" "$DRIVER_PID")
+    echo "driver at $addr"
+    "$BIN" sweep --worker "$addr" &
+    local w1=$!
+    "$BIN" sweep --worker "$addr" &
+    local w2=$!
+    wait "$w1"
+    wait "$w2"
+    wait "$DRIVER_PID"
+    DRIVER_PID=""
+}
+
+require_identical() {
+    if cmp "$1" "$2"; then
+        echo "ok: $2 == $1, byte-identical"
+    else
+        echo "error: $1 and $2 differ" >&2
+        exit 1
+    fi
+}
 
 echo "== in-process reference run =="
 "$BIN" sweep "${GRID[@]}" --out "$OUT/sweep_inproc.csv"
 
 echo "== sharded run: driver + 2 workers =="
-rm -f "$OUT/sweep_driver.log"
-"$BIN" sweep "${GRID[@]}" --driver 127.0.0.1:0 \
-    --out "$OUT/sweep_sharded.csv" 2> "$OUT/sweep_driver.log" &
-DRIVER_PID=$!
-cleanup() { kill "$DRIVER_PID" 2>/dev/null || true; }
-trap cleanup EXIT
-
-# The driver prints its bound address to stderr; wait for it.
-ADDR=""
-for _ in $(seq 1 100); do
-    ADDR=$(sed -n 's/.*listening on //p' "$OUT/sweep_driver.log" | head -n 1)
-    [ -n "$ADDR" ] && break
-    if ! kill -0 "$DRIVER_PID" 2>/dev/null; then
-        echo "error: driver exited before binding" >&2
-        cat "$OUT/sweep_driver.log" >&2
-        exit 1
-    fi
-    sleep 0.1
-done
-if [ -z "$ADDR" ]; then
-    echo "error: driver never reported a bound address" >&2
-    cat "$OUT/sweep_driver.log" >&2
-    exit 1
-fi
-echo "driver at $ADDR"
-
-"$BIN" sweep --worker "$ADDR" &
-W1=$!
-"$BIN" sweep --worker "$ADDR" &
-W2=$!
-wait "$W1"
-wait "$W2"
-wait "$DRIVER_PID"
-trap - EXIT
+run_sharded "$OUT/sweep_driver.log" \
+    "$BIN" sweep "${GRID[@]}" --driver 127.0.0.1:0 --out "$OUT/sweep_sharded.csv"
 
 echo "== diff =="
-if cmp "$OUT/sweep_inproc.csv" "$OUT/sweep_sharded.csv"; then
-    echo "sweep smoke OK: sharded (2 workers) == in-process, byte-identical"
-else
-    echo "error: sharded and in-process sweep CSVs differ" >&2
-    exit 1
-fi
+require_identical "$OUT/sweep_inproc.csv" "$OUT/sweep_sharded.csv"
+
+echo "== paired (CRN) in-process reference run =="
+"$BIN" sweep "${GRID[@]}" --paired --baseline msf --out "$OUT/sweep_paired_inproc.csv"
+
+echo "== paired (CRN) sharded run: driver + 2 workers =="
+run_sharded "$OUT/sweep_paired_driver.log" \
+    "$BIN" sweep "${GRID[@]}" --paired --baseline msf --driver 127.0.0.1:0 \
+    --out "$OUT/sweep_paired_sharded.csv"
+
+echo "== paired diff =="
+require_identical "$OUT/sweep_paired_inproc.csv" "$OUT/sweep_paired_sharded.csv"
+require_identical "$OUT/sweep_paired_inproc.diff.csv" "$OUT/sweep_paired_sharded.diff.csv"
+
+trap - EXIT
+echo "sweep smoke OK: sharded (2 workers) == in-process for the plain grid" \
+     "and the paired (CRN) grid, marginal + Δ CSVs byte-identical"
