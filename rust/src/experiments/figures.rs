@@ -11,7 +11,7 @@
 //! beats `QS_REPS` for fig6 (see [`Scale::sweep_opts_for`]).
 
 use crate::analysis::{analyze, MsfqParams};
-use crate::experiments::{print_sweep, write_sweep_csv, Point, Scale};
+use crate::experiments::{print_sweep, write_sweep_csv, FigureId, Point, Scale};
 use crate::sim::{Engine, SimConfig, TimeseriesSpec};
 use crate::sweep::{run_spec_local, SweepSpec, WorkloadSpec};
 use crate::util::csv::CsvWriter;
@@ -24,7 +24,7 @@ fn spec_for(
     lambdas: &[f64],
     policies: &[&str],
     scale: Scale,
-    figure: &str,
+    figure: FigureId,
 ) -> SweepSpec {
     SweepSpec::from_config(
         workload,
@@ -34,6 +34,21 @@ fn spec_for(
         scale.seed,
         scale.sweep_opts_for(figure).replications,
     )
+}
+
+/// A sweep-shaped figure's default grid (the λ lists and ℓ set the
+/// paper uses) as a spec — what `sweep drive --figs 2,6` queues.
+/// Errors for the non-sweep-shaped figures (1, 4, 7 are trajectory /
+/// phase / derived harnesses).
+pub fn default_spec(fig: FigureId, scale: Scale) -> anyhow::Result<SweepSpec> {
+    match fig {
+        FigureId::Fig2 => Ok(fig2_spec(scale, 7.5, &[0, 1, 2, 4, 8, 16, 24, 31])),
+        FigureId::Fig3 => Ok(fig3_spec(scale, &[4.0, 5.0, 6.0, 6.75, 7.25, 7.5])),
+        FigureId::Fig5 => Ok(fig5_spec(scale, &[2.0, 3.0, 4.0, 4.5, 4.75])),
+        FigureId::Fig6 => Ok(fig6_spec(scale, &[2.0, 3.0, 4.0, 4.5], false)),
+        FigureId::Fig8 => Ok(fig6_spec(scale, &[2.0, 3.0, 4.0, 4.5], true)),
+        other => anyhow::bail!("{other} is not a sweep-shaped figure (use 2|3|5|6|8)"),
+    }
 }
 
 /// The one-or-all family at the paper's Figs 1–4 shape (k=32, p1=0.9).
@@ -118,7 +133,7 @@ pub fn fig1(scale: Scale) -> Vec<Fig1Out> {
 pub fn fig2_spec(scale: Scale, lambda: f64, ells: &[u32]) -> SweepSpec {
     let policies: Vec<String> = ells.iter().map(|e| format!("msfq:{e}")).collect();
     let policy_refs: Vec<&str> = policies.iter().map(|s| s.as_str()).collect();
-    spec_for(one_or_all_spec(), &[lambda], &policy_refs, scale, "fig2")
+    spec_for(one_or_all_spec(), &[lambda], &policy_refs, scale, FigureId::Fig2)
 }
 
 pub fn fig2(scale: Scale, lambda: f64, ells: &[u32]) -> Vec<(u32, f64, f64)> {
@@ -156,7 +171,7 @@ pub fn fig2(scale: Scale, lambda: f64, ells: &[u32]) -> Vec<(u32, f64, f64)> {
 /// Shardable description of fig3's grid.
 pub fn fig3_spec(scale: Scale, lambdas: &[f64]) -> SweepSpec {
     let policies = ["msf", "msfq:31", "fcfs", "first-fit", "nmsr"];
-    spec_for(one_or_all_spec(), lambdas, &policies, scale, "fig3")
+    spec_for(one_or_all_spec(), lambdas, &policies, scale, FigureId::Fig3)
 }
 
 pub fn fig3(scale: Scale, lambdas: &[f64]) -> Vec<Point> {
@@ -258,7 +273,7 @@ pub fn fig4(scale: Scale, lambdas: &[f64]) -> Vec<Fig4Row> {
 /// Shardable description of fig5's grid.
 pub fn fig5_spec(scale: Scale, lambdas: &[f64]) -> SweepSpec {
     let policies = ["static-qs", "adaptive-qs", "msf", "first-fit", "fcfs"];
-    spec_for(WorkloadSpec::FourClass, lambdas, &policies, scale, "fig5")
+    spec_for(WorkloadSpec::FourClass, lambdas, &policies, scale, FigureId::Fig5)
 }
 
 pub fn fig5(scale: Scale, lambdas: &[f64]) -> Vec<Point> {
@@ -284,7 +299,11 @@ pub fn fig6_spec(scale: Scale, lambdas: &[f64], include_preemptive: bool) -> Swe
     if include_preemptive {
         policies.push("server-filling");
     }
-    let figure = if include_preemptive { "fig8" } else { "fig6" };
+    let figure = if include_preemptive {
+        FigureId::Fig8
+    } else {
+        FigureId::Fig6
+    };
     spec_for(WorkloadSpec::Borg, lambdas, &policies, scale, figure)
 }
 

@@ -32,6 +32,84 @@ use crate::workload::{MaterializedStream, SyntheticSource, Workload};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
+/// Typed paper-figure identifier — replaces the stringly integer
+/// figures that used to thread through spec dispatch, the CLI, and the
+/// `QS_REPS_FIG<N>` lookup. Parses both bare numbers ("6") and
+/// "fig6"-style names, case-insensitively.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum FigureId {
+    Fig1,
+    Fig2,
+    Fig3,
+    Fig4,
+    Fig5,
+    Fig6,
+    Fig7,
+    Fig8,
+}
+
+impl FigureId {
+    pub const ALL: [FigureId; 8] = [
+        FigureId::Fig1,
+        FigureId::Fig2,
+        FigureId::Fig3,
+        FigureId::Fig4,
+        FigureId::Fig5,
+        FigureId::Fig6,
+        FigureId::Fig7,
+        FigureId::Fig8,
+    ];
+
+    pub fn parse(s: &str) -> anyhow::Result<FigureId> {
+        let t = s.trim().to_ascii_lowercase();
+        let digit = t.strip_prefix("fig").unwrap_or(&t);
+        match digit {
+            "1" => Ok(FigureId::Fig1),
+            "2" => Ok(FigureId::Fig2),
+            "3" => Ok(FigureId::Fig3),
+            "4" => Ok(FigureId::Fig4),
+            "5" => Ok(FigureId::Fig5),
+            "6" => Ok(FigureId::Fig6),
+            "7" => Ok(FigureId::Fig7),
+            "8" => Ok(FigureId::Fig8),
+            _ => anyhow::bail!("unknown figure '{s}' (expected 1..8 or fig1..fig8)"),
+        }
+    }
+
+    pub fn number(self) -> u32 {
+        match self {
+            FigureId::Fig1 => 1,
+            FigureId::Fig2 => 2,
+            FigureId::Fig3 => 3,
+            FigureId::Fig4 => 4,
+            FigureId::Fig5 => 5,
+            FigureId::Fig6 => 6,
+            FigureId::Fig7 => 7,
+            FigureId::Fig8 => 8,
+        }
+    }
+
+    /// The `QS_REPS_<suffix>` env-var suffix, e.g. `FIG6`.
+    pub fn env_suffix(self) -> String {
+        format!("FIG{}", self.number())
+    }
+
+    /// Figures whose harness is a shardable λ × policy sweep grid (the
+    /// ones `sweep --fig` / `sweep drive --figs` accept).
+    pub fn is_sweep_shaped(self) -> bool {
+        matches!(
+            self,
+            FigureId::Fig2 | FigureId::Fig3 | FigureId::Fig5 | FigureId::Fig6 | FigureId::Fig8
+        )
+    }
+}
+
+impl std::fmt::Display for FigureId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "fig{}", self.number())
+    }
+}
+
 /// Run-length control shared by all harnesses.
 #[derive(Clone, Copy, Debug)]
 pub struct Scale {
@@ -97,8 +175,8 @@ impl Scale {
     }
 
     /// Like [`Scale::sweep_opts`], honoring a per-figure replication
-    /// override (`QS_REPS_FIG6=8` beats `QS_REPS` for `figure = "fig6"`).
-    pub fn sweep_opts_for(&self, figure: &str) -> SweepOpts {
+    /// override (`QS_REPS_FIG6=8` beats `QS_REPS` for [`FigureId::Fig6`]).
+    pub fn sweep_opts_for(&self, figure: FigureId) -> SweepOpts {
         SweepOpts {
             threads: self.threads,
             ..SweepOpts::from_env_for(Some(figure))
@@ -128,9 +206,10 @@ impl SweepOpts {
     }
 
     /// Replication count with an optional per-figure override: for
-    /// `figure = Some("fig6")`, `QS_REPS_FIG6` beats `QS_REPS` (the
-    /// warmup-dominated figures need a different R than the default).
-    pub fn from_env_for(figure: Option<&str>) -> SweepOpts {
+    /// `figure = Some(FigureId::Fig6)`, `QS_REPS_FIG6` beats `QS_REPS`
+    /// (the warmup-dominated figures need a different R than the
+    /// default).
+    pub fn from_env_for(figure: Option<FigureId>) -> SweepOpts {
         SweepOpts {
             replications: reps_from(figure, |key| std::env::var(key).ok()),
             threads: default_threads(),
@@ -141,9 +220,9 @@ impl SweepOpts {
 /// Resolve the replication count from an env-like lookup (factored out
 /// of [`SweepOpts::from_env_for`] so the precedence is testable without
 /// mutating process environment).
-fn reps_from(figure: Option<&str>, get: impl Fn(&str) -> Option<String>) -> u32 {
+fn reps_from(figure: Option<FigureId>, get: impl Fn(&str) -> Option<String>) -> u32 {
     let parse = |v: Option<String>| v.and_then(|s| s.trim().parse::<u32>().ok());
-    let per_fig = figure.and_then(|f| parse(get(&format!("QS_REPS_{}", f.to_uppercase()))));
+    let per_fig = figure.and_then(|f| parse(get(&format!("QS_REPS_{}", f.env_suffix()))));
     per_fig.or_else(|| parse(get("QS_REPS"))).unwrap_or(4).max(1)
 }
 
@@ -914,16 +993,37 @@ mod tests {
         let garbage = env(&[("QS_REPS", "7"), ("QS_REPS_FIG6", "lots")]);
         let zero = env(&[("QS_REPS", "0")]);
         assert_eq!(reps_from(None, &empty), 4);
-        assert_eq!(reps_from(Some("fig6"), &empty), 4);
+        assert_eq!(reps_from(Some(FigureId::Fig6), &empty), 4);
         assert_eq!(reps_from(None, &global), 7);
-        assert_eq!(reps_from(Some("fig6"), &global), 7);
-        assert_eq!(reps_from(Some("fig6"), &both), 8);
+        assert_eq!(reps_from(Some(FigureId::Fig6), &global), 7);
+        assert_eq!(reps_from(Some(FigureId::Fig6), &both), 8);
         // Another figure does not see fig6's override.
-        assert_eq!(reps_from(Some("fig3"), &both), 7);
+        assert_eq!(reps_from(Some(FigureId::Fig3), &both), 7);
         // Unparseable per-figure value falls back to QS_REPS.
-        assert_eq!(reps_from(Some("fig6"), &garbage), 7);
+        assert_eq!(reps_from(Some(FigureId::Fig6), &garbage), 7);
         // Zero clamps to 1.
         assert_eq!(reps_from(None, &zero), 1);
+    }
+
+    #[test]
+    fn figure_id_parsing_and_names() {
+        assert_eq!(FigureId::parse("6").unwrap(), FigureId::Fig6);
+        assert_eq!(FigureId::parse("fig6").unwrap(), FigureId::Fig6);
+        assert_eq!(FigureId::parse(" FIG2 ").unwrap(), FigureId::Fig2);
+        assert!(FigureId::parse("9").is_err());
+        assert!(FigureId::parse("figure6").is_err());
+        assert!(FigureId::parse("").is_err());
+        assert_eq!(FigureId::Fig6.env_suffix(), "FIG6");
+        assert_eq!(FigureId::Fig3.to_string(), "fig3");
+        // Round-trip every figure through its display name; only the
+        // sweep-shaped subset is accepted by the sweep CLI.
+        for f in FigureId::ALL {
+            assert_eq!(FigureId::parse(&f.to_string()).unwrap(), f);
+            assert_eq!(
+                f.is_sweep_shaped(),
+                matches!(f.number(), 2 | 3 | 5 | 6 | 8),
+            );
+        }
     }
 
     /// The unit grid partition is point-major and deterministic.

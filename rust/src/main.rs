@@ -2,7 +2,7 @@
 //!
 //! Subcommands:
 //!   simulate   run one policy on a workload, print metrics
-//!   sweep      λ × policy sweep, CSV output
+//!   sweep      λ × policy sweep: run | drive | work | status
 //!   analyze    Theorem-2 calculator for MSFQ (one-or-all)
 //!   solve      stationary CTMC solve (native sparse or PJRT artifact)
 //!   autotune   pick the best quickswap threshold ℓ for given rates
@@ -13,9 +13,9 @@
 use quickswap::analysis::{self, MsfqCtmc, MsfqParams};
 use quickswap::config::parse_workload;
 use quickswap::coordinator::{serve_tcp, Coordinator, CoordinatorConfig};
-use quickswap::experiments::{figures, Scale, SweepOpts};
+use quickswap::experiments::{figures, FigureId, Scale, SweepOpts};
 use quickswap::sim::SimConfig;
-use quickswap::sweep::{SweepSpec, WorkloadSpec};
+use quickswap::sweep::{proto, DriverBuilder, SpecOutcome, SweepSpec, WorkloadSpec};
 use quickswap::util::cli::{render_help, Args, OptSpec};
 use quickswap::util::json::Value;
 use quickswap::workload::{borg::borg_workload, trace::Trace, Workload};
@@ -60,7 +60,7 @@ fn help() -> String {
         "nonpreemptive multiserver-job scheduling with Quickswap",
         &[
             ("simulate", "run one policy on a workload"),
-            ("sweep", "lambda × policy sweep to CSV (in-process, or sharded via --driver/--worker)"),
+            ("sweep", "lambda × policy sweep: run (in-process) | drive (serve units to workers) | work (pull units) | status (probe a driver)"),
             ("analyze", "Theorem-2 MSFQ calculator"),
             ("solve", "stationary CTMC solve (native or PJRT artifact)"),
             ("autotune", "best quickswap threshold for given rates"),
@@ -77,8 +77,9 @@ fn help() -> String {
             OptSpec { name: "completions", help: "measured completions", default: Some("1000000".into()) },
             OptSpec { name: "seed", help: "RNG seed", default: Some("1".into()) },
             OptSpec { name: "reps", help: "replications per sweep point", default: Some("QS_REPS or 4".into()) },
-            OptSpec { name: "driver", help: "sweep: serve the unit grid to TCP workers on ADDR (\":0\" picks a port); set QS_SWEEP_TOKEN to require a shared secret", default: None },
-            OptSpec { name: "worker", help: "sweep: pull units from the driver at ADDR (QS_SWEEP_TOKEN authenticates when the driver requires it)", default: None },
+            OptSpec { name: "addr", help: "sweep drive|work|status: TCP address (\":0\" picks a port for drive); set QS_SWEEP_TOKEN to require/offer a shared secret", default: Some("127.0.0.1:0 for drive".into()) },
+            OptSpec { name: "journal", help: "sweep drive: append-only JSONL checkpoint; a restarted driver pointed at the same journal resumes without rerunning finished units", default: None },
+            OptSpec { name: "figs", help: "sweep drive: queue several figures' predefined grids in one sweep, e.g. --figs 2,6,8", default: None },
             OptSpec { name: "fig", help: "sweep: use a figure's predefined grid (2|3|5|6|8)", default: None },
             OptSpec { name: "paired", help: "sweep: common-random-number mode — all policies replay one shared arrival stream per (lambda, replication); prints paired-difference CIs", default: None },
             OptSpec { name: "baseline", help: "sweep --paired: policy the differences are taken against (implies --paired)", default: Some("first policy in the list".into()) },
@@ -163,26 +164,27 @@ fn sweep_spec_from(args: &Args) -> anyhow::Result<SweepSpec> {
 }
 
 fn sweep_grid_from(args: &Args, reps: u32) -> anyhow::Result<SweepSpec> {
-    if let Some(fig) = args.get("fig") {
+    if let Some(figstr) = args.get("fig") {
+        let fig = FigureId::parse(figstr)?;
         let scale = Scale::from_env();
         let mut spec = match fig {
-            "2" => {
+            FigureId::Fig2 => {
                 let lambda = args.f64_or("lambda", 7.5)?;
                 figures::fig2_spec(scale, lambda, &[0, 1, 2, 4, 8, 16, 24, 31])
             }
-            "3" => {
+            FigureId::Fig3 => {
                 let ls = args.f64_list("lambdas", &[4.0, 5.0, 6.0, 6.75, 7.25, 7.5])?;
                 figures::fig3_spec(scale, &ls)
             }
-            "5" => {
+            FigureId::Fig5 => {
                 let ls = args.f64_list("lambdas", &[2.0, 3.0, 4.0, 4.5, 4.75])?;
                 figures::fig5_spec(scale, &ls)
             }
-            "6" => {
+            FigureId::Fig6 => {
                 let ls = args.f64_list("lambdas", &[2.0, 3.0, 4.0, 4.5])?;
                 figures::fig6_spec(scale, &ls, false)
             }
-            "8" => {
+            FigureId::Fig8 => {
                 let ls = args.f64_list("lambdas", &[2.0, 3.0, 4.0, 4.5])?;
                 figures::fig6_spec(scale, &ls, true)
             }
@@ -224,63 +226,196 @@ fn sweep_grid_from(args: &Args, reps: u32) -> anyhow::Result<SweepSpec> {
 }
 
 fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
-    // Worker mode: everything (grid, seeds, run lengths) comes from the
-    // driver; local grid args are ignored.
-    if let Some(addr) = args.get("worker") {
-        let units = quickswap::sweep::run_worker(addr)?;
-        eprintln!("qs-sweep worker: completed {units} units");
-        return Ok(());
+    match args.positional().first().map(|s| s.as_str()) {
+        Some("run") => cmd_sweep_run(args),
+        Some("drive") => cmd_sweep_drive(args, None),
+        Some("work") => cmd_sweep_work(args, None),
+        Some("status") => cmd_sweep_status(args),
+        Some(other) => anyhow::bail!("unknown sweep subcommand '{other}' (run|drive|work|status)"),
+        None => {
+            // Legacy flag spellings, kept as hidden aliases for one
+            // release: `--worker ADDR` ≡ `work --addr ADDR`,
+            // `--driver ADDR` ≡ `drive --addr ADDR`, bare ≡ `run`.
+            if let Some(addr) = args.get("worker") {
+                let addr = addr.to_string();
+                return cmd_sweep_work(args, Some(addr));
+            }
+            if let Some(addr) = args.get("driver") {
+                let addr = addr.to_string();
+                return cmd_sweep_drive(args, Some(addr));
+            }
+            cmd_sweep_run(args)
+        }
     }
+}
+
+/// `sweep run`: resolve the spec and execute it in-process.
+fn cmd_sweep_run(args: &Args) -> anyhow::Result<()> {
     let spec = sweep_spec_from(args)?;
-    if spec.paired {
-        let sweep = if let Some(addr) = args.get("driver") {
-            let driver = quickswap::sweep::Driver::bind(&spec, addr)?;
-            // Stderr, machine-parseable: scripts read the bound port
-            // from this line (ports chosen with ":0").
-            eprintln!("qs-sweep driver listening on {}", driver.local_addr());
+    let threads = SweepOpts::from_env().threads;
+    let outcome = if spec.paired {
+        SpecOutcome::Paired(quickswap::sweep::run_spec_paired_local(&spec, threads)?)
+    } else {
+        SpecOutcome::Marginal(quickswap::sweep::run_spec_local(&spec, threads))
+    };
+    emit_outcome(&spec, &outcome, args.flag("weighted"), args.get("out"), "sweep")
+}
+
+/// `sweep drive`: serve a spec queue to TCP workers, optionally
+/// journaled for kill/resume durability.
+fn cmd_sweep_drive(args: &Args, legacy_addr: Option<String>) -> anyhow::Result<()> {
+    let addr = legacy_addr.unwrap_or_else(|| args.str_or("addr", "127.0.0.1:0"));
+    // Spec queue: `--figs 2,6,8` queues each figure's predefined grid
+    // (paired flags apply to every queued spec); otherwise the single
+    // ad-hoc/--fig spec, exactly as `sweep run` would build it.
+    let (specs, labels): (Vec<SweepSpec>, Vec<String>) = match args.str_list("figs") {
+        Some(figs) => {
+            let scale = Scale::from_env();
+            let mut specs = Vec::new();
+            let mut labels = Vec::new();
+            for f in &figs {
+                let fig = FigureId::parse(f)?;
+                let mut spec = figures::default_spec(fig, scale)?;
+                spec.paired = args.flag("paired") || args.get("baseline").is_some();
+                spec.baseline = args.get("baseline").map(|b| b.to_string());
+                if spec.paired {
+                    spec.paired_grid()?;
+                }
+                specs.push(spec);
+                labels.push(fig.to_string());
+            }
+            (specs, labels)
+        }
+        None => (vec![sweep_spec_from(args)?], vec!["sweep".to_string()]),
+    };
+    let mut builder = DriverBuilder::new()
+        .specs(specs.iter().cloned())
+        .bind_addr(&addr);
+    if let Some(j) = args.get("journal") {
+        builder = builder.journal(j);
+    }
+    let driver = builder.bind()?;
+    // Stderr, machine-parseable: scripts read the bound port from this
+    // line (ports chosen with ":0").
+    eprintln!("qs-sweep driver listening on {}", driver.local_addr());
+    for (spec, label) in specs.iter().zip(&labels) {
+        if spec.paired {
             eprintln!(
-                "  paired grid: {} lambdas x {} replications = {} units ({} policies each)",
+                "  {label}: paired grid {} lambdas x {} replications = {} units ({} policies each)",
                 spec.lambdas.len(),
                 spec.replications,
                 spec.lambdas.len() * spec.replications.max(1) as usize,
                 spec.policies.len()
             );
-            driver.run_paired()?
         } else {
-            quickswap::sweep::run_spec_paired_local(&spec, SweepOpts::from_env().threads)?
-        };
-        let weighted = args.flag("weighted");
-        quickswap::experiments::print_sweep("sweep (marginals)", &sweep.points, weighted);
-        quickswap::experiments::print_paired("paired differences", &sweep.diffs);
-        if let Some(out) = args.get("out") {
-            quickswap::experiments::write_sweep_csv(out, &sweep.points, &spec.class_names())?;
-            let diff_out = diff_csv_path(out);
-            quickswap::experiments::write_diff_csv(&diff_out, &sweep.diffs, &spec.class_names())?;
-            println!("wrote {out} and {diff_out}");
+            eprintln!(
+                "  {label}: grid {} points x {} replications = {} units",
+                spec.lambdas.len() * spec.policies.len(),
+                spec.replications,
+                spec.grid().n_units()
+            );
         }
-        return Ok(());
     }
-    let pts = if let Some(addr) = args.get("driver") {
-        let driver = quickswap::sweep::Driver::bind(&spec, addr)?;
-        // Stderr, machine-parseable: scripts read the bound port from
-        // this line (ports chosen with ":0").
-        eprintln!("qs-sweep driver listening on {}", driver.local_addr());
-        eprintln!(
-            "  grid: {} points x {} replications = {} units",
-            spec.lambdas.len() * spec.policies.len(),
-            spec.replications,
-            spec.grid().n_units()
-        );
-        driver.run()?
-    } else {
-        quickswap::sweep::run_spec_local(&spec, SweepOpts::from_env().threads)
-    };
-    quickswap::experiments::print_sweep("sweep", &pts, args.flag("weighted"));
-    if let Some(out) = args.get("out") {
-        quickswap::experiments::write_sweep_csv(out, &pts, &spec.class_names())?;
-        println!("wrote {out}");
+    let report = driver.serve()?;
+    eprintln!(
+        "qs-sweep driver: {} units total, {} from journal, {} executed",
+        report.units_total, report.units_from_journal, report.units_executed
+    );
+    let weighted = args.flag("weighted");
+    for ((spec, label), outcome) in specs.iter().zip(&labels).zip(&report.outcomes) {
+        let out = args.get("out").map(|o| {
+            if specs.len() > 1 {
+                spec_csv_path(o, label)
+            } else {
+                o.to_string()
+            }
+        });
+        emit_outcome(spec, outcome, weighted, out.as_deref(), label)?;
     }
     Ok(())
+}
+
+/// `sweep work`: everything (grids, seeds, run lengths) comes from the
+/// driver; local grid args are ignored.
+fn cmd_sweep_work(args: &Args, legacy_addr: Option<String>) -> anyhow::Result<()> {
+    let addr = match legacy_addr {
+        Some(a) => a,
+        None => args.required("addr")?.to_string(),
+    };
+    let units = quickswap::sweep::run_worker(&addr)?;
+    eprintln!("qs-sweep worker: completed {units} units");
+    Ok(())
+}
+
+/// `sweep status`: handshake with a running driver and print its
+/// one-line JSON progress report (per-spec done counts plus pooled rows
+/// for every point whose replications have all arrived).
+fn cmd_sweep_status(args: &Args) -> anyhow::Result<()> {
+    use std::io::{BufRead, BufReader, Write};
+    let addr = args.required("addr")?;
+    let stream = std::net::TcpStream::connect(addr)?;
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    let token = std::env::var("QS_SWEEP_TOKEN").ok().filter(|t| !t.is_empty());
+    writeln!(writer, "{}", proto::msg_hello(token.as_deref()))?;
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let first = proto::parse_line(&line)?;
+    if let Some(msg) = proto::err_of(&first) {
+        anyhow::bail!("driver rejected this status probe: {msg}");
+    }
+    writeln!(writer, "{}", proto::msg_status_req())?;
+    line.clear();
+    if reader.read_line(&mut line)? == 0 {
+        anyhow::bail!("driver closed the connection before replying to status");
+    }
+    // Raw JSON to stdout: the status line is already one JSON object,
+    // ready for jq/python consumers.
+    print!("{line}");
+    Ok(())
+}
+
+/// Print a completed spec's tables and write its CSVs: marginal points
+/// always, plus the paired-difference table/CSV when the outcome is
+/// paired. `title` labels the printed tables (the figure name under
+/// `drive --figs`).
+fn emit_outcome(
+    spec: &SweepSpec,
+    outcome: &SpecOutcome,
+    weighted: bool,
+    out: Option<&str>,
+    title: &str,
+) -> anyhow::Result<()> {
+    match outcome {
+        SpecOutcome::Marginal(pts) => {
+            quickswap::experiments::print_sweep(title, pts, weighted);
+            if let Some(out) = out {
+                quickswap::experiments::write_sweep_csv(out, pts, &spec.class_names())?;
+                println!("wrote {out}");
+            }
+        }
+        SpecOutcome::Paired(sweep) => {
+            let marginal_title = format!("{title} (marginals)");
+            quickswap::experiments::print_sweep(&marginal_title, &sweep.points, weighted);
+            quickswap::experiments::print_paired("paired differences", &sweep.diffs);
+            if let Some(out) = out {
+                quickswap::experiments::write_sweep_csv(out, &sweep.points, &spec.class_names())?;
+                let diff_out = diff_csv_path(out);
+                quickswap::experiments::write_diff_csv(&diff_out, &sweep.diffs, &spec.class_names())?;
+                println!("wrote {out} and {diff_out}");
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Per-spec CSV path for a multi-spec queue: `x.csv` + label `fig6` →
+/// `x.fig6.csv` (no recognizable extension: append `.<label>.csv`).
+fn spec_csv_path(out: &str, label: &str) -> String {
+    match out.rfind('.') {
+        Some(i) if !out[i..].contains('/') => format!("{}.{label}{}", &out[..i], &out[i..]),
+        _ => format!("{out}.{label}.csv"),
+    }
 }
 
 /// Companion path for the paired-difference CSV: `x.csv` → `x.diff.csv`
@@ -362,43 +497,39 @@ fn cmd_autotune(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_fig(args: &Args) -> anyhow::Result<()> {
-    let id = args.required("id")?.to_string();
+    let fig = FigureId::parse(args.required("id")?)?;
     let scale = Scale::from_env();
-    match id.as_str() {
-        "1" => {
+    match fig {
+        FigureId::Fig1 => {
             figures::fig1(scale);
         }
-        "2" => {
+        FigureId::Fig2 => {
             let lambda = args.f64_or("lambda", 7.5)?;
             figures::fig2(scale, lambda, &[0, 1, 2, 4, 8, 16, 24, 31]);
         }
-        "3" => {
+        FigureId::Fig3 => {
             let ls = args.f64_list("lambdas", &[4.0, 5.0, 6.0, 6.75, 7.25, 7.5])?;
             figures::fig3(scale, &ls);
         }
-        "4" => {
+        FigureId::Fig4 => {
             let ls = args.f64_list("lambdas", &[6.0, 6.75, 7.25, 7.5])?;
             figures::fig4(scale, &ls);
         }
-        "5" => {
+        FigureId::Fig5 => {
             let ls = args.f64_list("lambdas", &[2.0, 3.0, 4.0, 4.5, 4.75])?;
             figures::fig5(scale, &ls);
         }
-        "6" => {
+        // Figure 7 is the Jain's-index companion computed from fig6's
+        // sweep, so both ids run the pair.
+        FigureId::Fig6 | FigureId::Fig7 => {
             let ls = args.f64_list("lambdas", &[2.0, 3.0, 4.0, 4.5])?;
             let pts = figures::fig6(scale, &ls, false);
             figures::fig7(&pts);
         }
-        "7" => {
-            let ls = args.f64_list("lambdas", &[2.0, 3.0, 4.0, 4.5])?;
-            let pts = figures::fig6(scale, &ls, false);
-            figures::fig7(&pts);
-        }
-        "8" => {
+        FigureId::Fig8 => {
             let ls = args.f64_list("lambdas", &[2.0, 3.0, 4.0, 4.5])?;
             figures::fig6(scale, &ls, true);
         }
-        other => anyhow::bail!("unknown figure '{other}' (1..8)"),
     }
     Ok(())
 }

@@ -1,38 +1,53 @@
-//! The sweep driver: partitions a [`SweepSpec`]'s unit grid, serves
-//! units to TCP workers, and pools their results.
+//! The elastic sweep driver: serves a [`SpecQueue`]'s pooled unit grid
+//! to TCP workers, checkpoints completed units to an append-only
+//! [`Journal`], and pools the results per spec.
 //!
-//! The driver is "just another [`UnitSource`]": [`Driver::run`] hands a
-//! serving source to the same [`sweep_units`] pooling path the local
-//! thread runner uses, so sharded results are merged by exactly the
-//! same code, in the same (replication-order) sequence, as in-process
-//! results.
+//! Build with [`DriverBuilder`] (spec queue, bind address, auth token,
+//! unit timeout, journal path), then [`Driver::serve`]. The driver is
+//! "just another [`UnitSource`]": once every unit is resolved, the
+//! recorded runs are replayed per spec through the same
+//! [`sweep_units`] / [`sweep_paired_units`] pooling paths the local
+//! thread runner uses, so sharded, resumed, and multi-spec results are
+//! merged by exactly the same code, in the same (replication-order)
+//! sequence, as in-process results.
 //!
-//! Fault model: a worker that disconnects with a claimed-but-unreported
-//! unit has that unit requeued; duplicate results for a unit id are
-//! ignored (first wins). The driver returns once every unit has been
-//! delivered or conclusively failed on a worker. A hung-but-connected
-//! worker stalls its unit indefinitely by default; setting
-//! `QS_UNIT_TIMEOUT_SECS` (or [`Driver::with_unit_timeout`]) arms an
+//! Fault model: a worker that disconnects with claimed-but-unreported
+//! units has them requeued; duplicate results for a unit id are ignored
+//! (first wins). The driver returns once every unit has been delivered
+//! or conclusively failed on a worker. A hung-but-connected worker
+//! stalls its unit indefinitely by default; setting
+//! `QS_UNIT_TIMEOUT_SECS` (or [`DriverBuilder::unit_timeout`]) arms an
 //! assignment deadline — a unit held past it is requeued to the next
 //! `next` request (heterogeneous worker pacing), with the usual
 //! dedupe-by-unit-id if the slow worker eventually reports anyway.
+//! Workers may join and leave at any point in the sweep's life.
 //!
-//! Auth: with `QS_SWEEP_TOKEN` set (or [`Driver::with_auth_token`]),
-//! the driver requires every worker's opening `hello` to carry the
-//! matching shared secret before the spec is revealed; mismatches get
-//! an `err` line and a closed connection. Unset = open driver (the
-//! loopback/test default).
+//! Durability: with a journal configured, every result is appended and
+//! flushed *before* the worker's ack, so a driver SIGKILLed mid-sweep
+//! and restarted on the same journal re-delivers finished units from
+//! disk (never rerunning them) and emits byte-identical CSVs to an
+//! uninterrupted run — see [`crate::sweep::journal`].
+//!
+//! Auth: with `QS_SWEEP_TOKEN` set (or [`DriverBuilder::auth_token`]),
+//! the driver requires every peer's opening `hello` to carry the
+//! matching shared secret before the spec queue is revealed; mismatches
+//! get an `err` line and a closed connection. Unset = open driver (the
+//! loopback/test default). The read-only `status` op is available to
+//! any authenticated peer.
 
 use crate::experiments::{
     sweep_paired_units, sweep_units, PairedGrid, PairedRun, PairedSweep, PairedUnitSource, Point,
     SweepGrid, UnitRun, UnitSource,
 };
-use crate::sweep::{proto, SweepSpec};
+use crate::sim::{ReplicationPool, SimResult};
+use crate::sweep::journal::Journal;
+use crate::sweep::{proto, AnyRun, SpecQueue, SpecTask, SweepSpec};
 use crate::util::json::Value;
 use crate::workload::Workload;
 use std::collections::VecDeque;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
@@ -55,90 +70,323 @@ pub(crate) fn auth_token_from_env() -> Option<String> {
         .filter(|t| !t.is_empty())
 }
 
-/// A bound (but not yet serving) sweep driver. `bind` then `run`; the
-/// split lets callers learn the OS-assigned port (`addr = "host:0"`)
-/// before workers are pointed at it.
-pub struct Driver {
-    listener: TcpListener,
-    addr: SocketAddr,
-    spec: SweepSpec,
+/// Configures and binds a sweep [`Driver`]: the spec queue, bind
+/// address, shared-secret auth, assignment deadline, and checkpoint
+/// journal all live here, replacing the accreted
+/// `with_auth_token`/`with_unit_timeout` chain. `new` seeds the
+/// environment defaults (`QS_UNIT_TIMEOUT_SECS`, `QS_SWEEP_TOKEN`);
+/// explicit setters override them — tests pin values here so parallel
+/// tests never race on process-global env state.
+pub struct DriverBuilder {
+    specs: Vec<SweepSpec>,
+    addr: String,
     unit_timeout: Option<Duration>,
     auth_token: Option<String>,
+    journal: Option<PathBuf>,
 }
 
-impl Driver {
-    pub fn bind(spec: &SweepSpec, addr: &str) -> anyhow::Result<Driver> {
-        let listener = TcpListener::bind(addr)?;
-        let addr = listener.local_addr()?;
-        Ok(Driver {
-            listener,
-            addr,
-            spec: spec.clone(),
+impl DriverBuilder {
+    pub fn new() -> DriverBuilder {
+        DriverBuilder {
+            specs: Vec::new(),
+            addr: "127.0.0.1:0".to_string(),
             unit_timeout: unit_timeout_from_env(),
             auth_token: auth_token_from_env(),
-        })
+            journal: None,
+        }
+    }
+
+    /// Queue one spec (may be called repeatedly; queue order defines
+    /// global unit ids).
+    pub fn spec(mut self, spec: &SweepSpec) -> DriverBuilder {
+        self.specs.push(spec.clone());
+        self
+    }
+
+    /// Queue several specs at once.
+    pub fn specs<I: IntoIterator<Item = SweepSpec>>(mut self, specs: I) -> DriverBuilder {
+        self.specs.extend(specs);
+        self
+    }
+
+    /// The address to bind (default `127.0.0.1:0`; port 0 lets the OS
+    /// pick — read it back with [`Driver::local_addr`]).
+    pub fn bind_addr(mut self, addr: &str) -> DriverBuilder {
+        self.addr = addr.to_string();
+        self
     }
 
     /// Override the assignment deadline (`None` = never time out).
-    /// `bind` seeds it from `QS_UNIT_TIMEOUT_SECS`.
-    pub fn with_unit_timeout(mut self, timeout: Option<Duration>) -> Driver {
+    pub fn unit_timeout(mut self, timeout: Option<Duration>) -> DriverBuilder {
         self.unit_timeout = timeout;
         self
     }
 
-    /// Override the shared-secret auth token (`None` = accept any
-    /// peer). `bind` seeds it from `QS_SWEEP_TOKEN`; tests pin it here
-    /// so parallel tests never race on process-global env state.
-    pub fn with_auth_token(mut self, token: Option<String>) -> Driver {
+    /// Override the shared-secret auth token (`None` or empty = accept
+    /// any peer).
+    pub fn auth_token(mut self, token: Option<String>) -> DriverBuilder {
         self.auth_token = token.filter(|t| !t.is_empty());
         self
     }
 
+    /// Checkpoint completed units to the append-only journal at `path`
+    /// (created if missing). A driver restarted on the same journal
+    /// resumes instead of rerunning finished units.
+    pub fn journal<P: Into<PathBuf>>(mut self, path: P) -> DriverBuilder {
+        self.journal = Some(path.into());
+        self
+    }
+
+    /// Validate the queue and bind the listener. The bind/serve split
+    /// lets callers learn the OS-assigned port before workers are
+    /// pointed at it.
+    pub fn bind(self) -> anyhow::Result<Driver> {
+        if self.specs.is_empty() {
+            anyhow::bail!("no sweep specs queued");
+        }
+        let queue = SpecQueue::new(self.specs)?;
+        let listener = TcpListener::bind(&self.addr)?;
+        let addr = listener.local_addr()?;
+        Ok(Driver {
+            listener,
+            addr,
+            queue,
+            unit_timeout: self.unit_timeout,
+            auth_token: self.auth_token,
+            journal_path: self.journal,
+        })
+    }
+}
+
+impl Default for DriverBuilder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// One spec's pooled result.
+pub enum SpecOutcome {
+    Marginal(Vec<Point>),
+    Paired(PairedSweep),
+}
+
+impl SpecOutcome {
+    /// The marginal points (both variants carry them).
+    pub fn points(&self) -> &[Point] {
+        match self {
+            SpecOutcome::Marginal(pts) => pts,
+            SpecOutcome::Paired(sweep) => &sweep.points,
+        }
+    }
+
+    pub fn as_paired(&self) -> Option<&PairedSweep> {
+        match self {
+            SpecOutcome::Marginal(_) => None,
+            SpecOutcome::Paired(sweep) => Some(sweep),
+        }
+    }
+}
+
+/// What a [`Driver::serve`] call did: per-spec outcomes in queue order,
+/// plus unit accounting (`units_from_journal` + `units_executed` =
+/// `units_total` on a clean exit — the resume tests assert finished
+/// units were served from disk, not rerun).
+pub struct ServeReport {
+    pub outcomes: Vec<SpecOutcome>,
+    pub units_total: usize,
+    pub units_from_journal: usize,
+    pub units_executed: usize,
+}
+
+/// A bound (but not yet serving) sweep driver — build one with
+/// [`DriverBuilder`].
+pub struct Driver {
+    listener: TcpListener,
+    addr: SocketAddr,
+    queue: SpecQueue,
+    unit_timeout: Option<Duration>,
+    auth_token: Option<String>,
+    journal_path: Option<PathBuf>,
+}
+
+impl Driver {
     /// The bound address workers should connect to.
     pub fn local_addr(&self) -> SocketAddr {
         self.addr
     }
 
-    /// Serve until every unit has a result, then pool. Blocks; returns
-    /// the same `Vec<Point>` (bit for bit) as
-    /// [`run_spec_local`](crate::sweep::run_spec_local) on this spec.
-    pub fn run(self) -> anyhow::Result<Vec<Point>> {
-        let grid = self.spec.grid();
-        let wl_at = |l: f64| self.spec.workload.build(l);
-        let mut source = Serve {
-            listener: &self.listener,
-            addr: self.addr,
-            spec: &self.spec,
+    /// Serve until every unit in the queue has a result (from the
+    /// journal or a worker), then pool per spec. Blocks; each outcome
+    /// matches the corresponding
+    /// [`run_spec_local`](crate::sweep::run_spec_local) /
+    /// [`run_spec_paired_local`](crate::sweep::run_spec_paired_local)
+    /// output bit for bit, regardless of worker count, assignment,
+    /// arrival order, or intervening driver kills.
+    pub fn serve(self) -> anyhow::Result<ServeReport> {
+        let total = self.queue.total_units();
+        let mut journal = None;
+        let mut entries = Vec::new();
+        if let Some(path) = &self.journal_path {
+            let (j, e) = Journal::open(path, &self.queue)?;
+            journal = Some(j);
+            entries = e;
+        }
+        let mut runs: Vec<Option<AnyRun>> = (0..total).map(|_| None).collect();
+        let mut delivered = vec![false; total];
+        let from_journal = entries.len();
+        for e in entries {
+            let g = self
+                .queue
+                .global_id(e.spec, e.id)
+                .expect("journal entries are validated against the queue");
+            delivered[g] = true;
+            runs[g] = e.run;
+        }
+        let pending: VecDeque<usize> = (0..total).filter(|&g| !delivered[g]).collect();
+        let remaining = pending.len();
+        let specs_line = proto::msg_specs(self.queue.tasks().iter().map(|t| &t.spec)).to_string();
+        let svc = Service {
+            queue: &self.queue,
             unit_timeout: self.unit_timeout,
             auth_token: self.auth_token.as_deref(),
+            specs_line,
+            state: Mutex::new(State {
+                pending,
+                delivered,
+                assigned: vec![None; total],
+                remaining,
+                conns: Vec::new(),
+                runs,
+                journal,
+                executed: 0,
+                from_journal,
+            }),
+            cv: Condvar::new(),
+            done: AtomicBool::new(false),
         };
-        sweep_units(&grid, &wl_at, &mut source)
+        // A fully-journaled queue needs no workers at all: skip the
+        // accept loop and go straight to pooling.
+        if remaining > 0 {
+            svc.serve_loop(&self.listener, self.addr);
+        }
+        let st = svc.state.into_inner().unwrap();
+        let executed = st.executed;
+        let mut all = st.runs;
+        let mut outcomes = Vec::with_capacity(self.queue.tasks().len());
+        for task in self.queue.tasks() {
+            let tail = all.split_off(task.n_units());
+            let mut source = Replay {
+                runs: std::mem::replace(&mut all, tail),
+            };
+            let wl_at = |l: f64| task.spec.workload.build(l);
+            let outcome = match &task.paired {
+                Some(pg) => SpecOutcome::Paired(sweep_paired_units(pg, &wl_at, &mut source)?),
+                None => SpecOutcome::Marginal(sweep_units(&task.grid, &wl_at, &mut source)?),
+            };
+            outcomes.push(outcome);
+        }
+        Ok(ServeReport {
+            outcomes,
+            units_total: total,
+            units_from_journal: from_journal,
+            units_executed: executed,
+        })
     }
 
-    /// Serve a paired (CRN) spec until every (λ, replication) unit has
-    /// a result, then pool. Blocks; returns the same [`PairedSweep`]
-    /// (bit for bit) as
-    /// [`run_spec_paired_local`](crate::sweep::run_spec_paired_local).
+    /// Shim for the pre-builder API.
+    #[deprecated(note = "use DriverBuilder::new().spec(spec).bind_addr(addr).bind()")]
+    pub fn bind(spec: &SweepSpec, addr: &str) -> anyhow::Result<Driver> {
+        DriverBuilder::new().spec(spec).bind_addr(addr).bind()
+    }
+
+    /// Shim for the pre-builder API.
+    #[deprecated(note = "use DriverBuilder::unit_timeout")]
+    pub fn with_unit_timeout(mut self, timeout: Option<Duration>) -> Driver {
+        self.unit_timeout = timeout;
+        self
+    }
+
+    /// Shim for the pre-builder API.
+    #[deprecated(note = "use DriverBuilder::auth_token")]
+    pub fn with_auth_token(mut self, token: Option<String>) -> Driver {
+        self.auth_token = token.filter(|t| !t.is_empty());
+        self
+    }
+
+    /// Shim for the pre-builder API: serve a single marginal spec.
+    #[deprecated(note = "use Driver::serve and read ServeReport::outcomes")]
+    pub fn run(self) -> anyhow::Result<Vec<Point>> {
+        match self.serve()?.outcomes.into_iter().next() {
+            Some(SpecOutcome::Marginal(pts)) => Ok(pts),
+            Some(SpecOutcome::Paired(_)) => {
+                anyhow::bail!("spec is in paired mode; use Driver::serve")
+            }
+            None => anyhow::bail!("empty spec queue"),
+        }
+    }
+
+    /// Shim for the pre-builder API: serve a single paired spec.
+    #[deprecated(note = "use Driver::serve and read ServeReport::outcomes")]
     pub fn run_paired(self) -> anyhow::Result<PairedSweep> {
-        let grid = self
-            .spec
-            .paired_grid()?
-            .ok_or_else(|| anyhow::anyhow!("spec is not in paired mode"))?;
-        let wl_at = |l: f64| self.spec.workload.build(l);
-        let mut source = Serve {
-            listener: &self.listener,
-            addr: self.addr,
-            spec: &self.spec,
-            unit_timeout: self.unit_timeout,
-            auth_token: self.auth_token.as_deref(),
-        };
-        sweep_paired_units(&grid, &wl_at, &mut source)
+        // Match the old API's pre-serve validation: refuse before
+        // binding workers to a spec that cannot produce paired output.
+        if !self
+            .queue
+            .tasks()
+            .first()
+            .is_some_and(|t| t.paired.is_some())
+        {
+            anyhow::bail!("spec is not in paired mode");
+        }
+        match self.serve()?.outcomes.into_iter().next() {
+            Some(SpecOutcome::Paired(sweep)) => Ok(sweep),
+            _ => anyhow::bail!("spec is not in paired mode"),
+        }
+    }
+}
+
+/// Re-delivers recorded runs (journaled or freshly served) through the
+/// standard pooling paths, so resumed and multi-spec drives produce
+/// byte-identical output to single-shot runs by construction.
+struct Replay {
+    runs: Vec<Option<AnyRun>>,
+}
+
+impl UnitSource for Replay {
+    fn run_units(
+        &mut self,
+        _grid: &SweepGrid,
+        _wl_at: &(dyn Fn(f64) -> Workload + Sync),
+        deliver: &(dyn Fn(usize, UnitRun) + Sync),
+    ) -> anyhow::Result<()> {
+        for (u, run) in std::mem::take(&mut self.runs).into_iter().enumerate() {
+            if let Some(AnyRun::Marginal(r)) = run {
+                deliver(u, r);
+            }
+        }
+        Ok(())
+    }
+}
+
+impl PairedUnitSource for Replay {
+    fn run_paired_units(
+        &mut self,
+        _grid: &PairedGrid,
+        _wl_at: &(dyn Fn(f64) -> Workload + Sync),
+        deliver: &(dyn Fn(usize, PairedRun) + Sync),
+    ) -> anyhow::Result<()> {
+        for (u, run) in std::mem::take(&mut self.runs).into_iter().enumerate() {
+            if let Some(AnyRun::Paired(r)) = run {
+                deliver(u, r);
+            }
+        }
+        Ok(())
     }
 }
 
 /// Shared serving state, guarded by one mutex.
 struct State {
-    /// Unit ids not currently assigned to any live connection.
+    /// Global unit ids not currently assigned to any live connection.
     pending: VecDeque<usize>,
     /// Per-unit "a result (success or failure) has been recorded".
     delivered: Vec<bool>,
@@ -149,6 +397,16 @@ struct State {
     remaining: usize,
     /// Clones of every accepted connection, for shutdown at completion.
     conns: Vec<TcpStream>,
+    /// Recorded runs, slotted by global unit id (None = pending or
+    /// conclusively failed).
+    runs: Vec<Option<AnyRun>>,
+    /// The checkpoint journal; written under this lock, *before* the
+    /// worker's ack, so record order is total-ordered with delivery.
+    journal: Option<Journal>,
+    /// Units executed by workers during this serve (excludes journal).
+    executed: usize,
+    /// Units pre-delivered from the journal at startup.
+    from_journal: usize,
 }
 
 impl State {
@@ -172,96 +430,59 @@ impl State {
     }
 }
 
-struct Serve<'a> {
-    listener: &'a TcpListener,
-    addr: SocketAddr,
-    spec: &'a SweepSpec,
+/// The serving core: connection handling, unit scheduling, journaling,
+/// and the status endpoint, shared by every connection thread.
+struct Service<'a> {
+    queue: &'a SpecQueue,
     unit_timeout: Option<Duration>,
     auth_token: Option<&'a str>,
+    specs_line: String,
+    state: Mutex<State>,
+    cv: Condvar,
+    done: AtomicBool,
 }
 
-/// How one connection's `result` lines decode, per payload type: the
-/// marginal protocol parses `{display, stats}` ([`proto::parse_result`]),
-/// the paired protocol a `runs` array ([`proto::parse_paired_result`]).
-/// Both carry (unit id, run-or-worker-error); a line that fails to parse
-/// breaks the connection so the claimed unit reissues.
-type ParseResult<'p, P> =
-    &'p (dyn Fn(&Value) -> anyhow::Result<(usize, Result<P, String>)> + Sync);
-
-impl UnitSource for Serve<'_> {
-    fn run_units(
-        &mut self,
-        grid: &SweepGrid,
-        _wl_at: &(dyn Fn(f64) -> Workload + Sync),
-        deliver: &(dyn Fn(usize, UnitRun) + Sync),
-    ) -> anyhow::Result<()> {
-        self.serve(grid.n_units(), &proto::parse_result, deliver)
+/// Decode a `result` line via the owning spec's mode (the global unit
+/// id picks the spec, the spec picks marginal vs paired payload). An
+/// out-of-queue id or mismatched payload is an error — the connection
+/// is dropped and its claimed units reissue.
+fn parse_any(queue: &SpecQueue, v: &Value) -> anyhow::Result<(usize, Result<AnyRun, String>)> {
+    let id = proto::id_of(v)?;
+    let (si, _) = queue
+        .locate(id)
+        .ok_or_else(|| anyhow::anyhow!("result unit id {id} is outside the queue"))?;
+    if queue.tasks()[si].paired.is_some() {
+        let (id, r) = proto::parse_paired_result(v)?;
+        Ok((id, r.map(AnyRun::Paired)))
+    } else {
+        let (id, r) = proto::parse_result(v)?;
+        Ok((id, r.map(AnyRun::Marginal)))
     }
 }
 
-impl PairedUnitSource for Serve<'_> {
-    fn run_paired_units(
-        &mut self,
-        grid: &PairedGrid,
-        _wl_at: &(dyn Fn(f64) -> Workload + Sync),
-        deliver: &(dyn Fn(usize, PairedRun) + Sync),
-    ) -> anyhow::Result<()> {
-        self.serve(grid.n_units(), &proto::parse_paired_result, deliver)
-    }
-}
-
-impl Serve<'_> {
-    /// The serving core, generic over the unit payload `P`: accept
-    /// connections, hand out unit ids in lockstep, slot parsed results
-    /// through `deliver`, and return once all `n` units are resolved.
-    fn serve<P>(
-        &mut self,
-        n: usize,
-        parse: ParseResult<'_, P>,
-        deliver: &(dyn Fn(usize, P) + Sync),
-    ) -> anyhow::Result<()> {
-        if n == 0 {
-            return Ok(());
-        }
-        let state = Mutex::new(State {
-            pending: (0..n).collect(),
-            delivered: vec![false; n],
-            assigned: vec![None; n],
-            remaining: n,
-            conns: Vec::new(),
-        });
-        let cv = Condvar::new();
-        let done = AtomicBool::new(false);
+impl Service<'_> {
+    /// Accept connections and serve until every pending unit is
+    /// resolved, then shut every connection down.
+    fn serve_loop(&self, listener: &TcpListener, addr: SocketAddr) {
         let conn_ids = AtomicU64::new(0);
-        let timeout = self.unit_timeout;
-        let auth_token = self.auth_token;
-        let spec_line = proto::msg_spec(self.spec).to_string();
-        let listener = self.listener;
-        let addr = self.addr;
         std::thread::scope(|s| {
             s.spawn(|| {
-                let (state, cv, spec_line) = (&state, &cv, spec_line.as_str());
                 for conn in listener.incoming() {
-                    if done.load(Ordering::SeqCst) {
+                    if self.done.load(Ordering::SeqCst) {
                         break;
                     }
                     let Ok(stream) = conn else { break };
                     if let Ok(clone) = stream.try_clone() {
-                        state.lock().unwrap().conns.push(clone);
+                        self.state.lock().unwrap().conns.push(clone);
                     }
                     let conn_id = conn_ids.fetch_add(1, Ordering::Relaxed);
-                    s.spawn(move || {
-                        handle_conn(
-                            stream, conn_id, timeout, auth_token, spec_line, state, cv, parse,
-                            deliver,
-                        )
-                    });
+                    s.spawn(move || self.handle_conn(stream, conn_id));
                 }
             });
-            let guard = state.lock().unwrap();
-            let guard = cv.wait_while(guard, |st| st.remaining > 0).unwrap();
+            let guard = self.state.lock().unwrap();
+            let guard = self.cv.wait_while(guard, |st| st.remaining > 0).unwrap();
             drop(guard);
-            done.store(true, Ordering::SeqCst);
+            self.done.store(true, Ordering::SeqCst);
             // Wake the acceptor, then unblock every connection thread
             // still parked in a read (workers see EOF and exit). Connect
             // via loopback: the bound address may be the wildcard
@@ -270,12 +491,309 @@ impl Serve<'_> {
             if TcpStream::connect_timeout(&wake, Duration::from_millis(200)).is_err() {
                 let _ = TcpStream::connect(addr);
             }
-            for c in &state.lock().unwrap().conns {
+            for c in &self.state.lock().unwrap().conns {
                 let _ = c.shutdown(Shutdown::Both);
             }
         });
-        Ok(())
     }
+
+    fn handle_conn(&self, stream: TcpStream, conn_id: u64) {
+        let mut writer = match stream.try_clone() {
+            Ok(w) => w,
+            Err(_) => return,
+        };
+        let mut reader = BufReader::new(stream);
+        // Handshake: the peer speaks first. The spec queue (workloads,
+        // seeds, grid shapes) is only revealed after the hello validates
+        // — with a token configured, that includes the shared secret.
+        // The peer is untrusted until then, so the read is bounded by an
+        // *absolute* deadline (re-armed per recv so trickled bytes
+        // cannot extend it) and a byte cap: a silent, dribbling, or
+        // newline-less connection cannot hold the handler thread or grow
+        // the buffer.
+        let Some(line) = read_handshake_line(&mut reader, Duration::from_secs(10)) else {
+            let _ = writeln!(
+                writer,
+                "{}",
+                proto::msg_err("handshake timed out or too large")
+            );
+            return;
+        };
+        let hello = proto::parse_line(&line).and_then(|m| proto::parse_hello(&m));
+        let token = match hello {
+            Ok(token) => token,
+            Err(e) => {
+                let _ = writeln!(writer, "{}", proto::msg_err(&format!("bad hello: {e}")));
+                return;
+            }
+        };
+        if let Some(expected) = self.auth_token {
+            if !proto::token_matches(expected, token.as_deref()) {
+                eprintln!("qs-sweep driver: rejected worker (QS_SWEEP_TOKEN mismatch)");
+                let _ = writeln!(writer, "{}", proto::msg_err("auth failed"));
+                return;
+            }
+        }
+        // Authenticated: back to blocking reads for the lockstep loop (a
+        // slow-but-live worker is legitimate; the unit timeout handles
+        // stalled assignments).
+        let _ = reader.get_ref().set_read_timeout(None);
+        if writeln!(writer, "{}", self.specs_line).is_err() {
+            return;
+        }
+        // Units this connection has claimed but not yet reported. The
+        // lockstep protocol implies at most one, but a pipelining (or
+        // buggy) client may claim several — every one of them must be
+        // reissued on disconnect or the sweep hangs with units leaked.
+        let mut claimed: Vec<usize> = Vec::new();
+        let mut line = String::new();
+        loop {
+            line.clear();
+            match reader.read_line(&mut line) {
+                Ok(0) | Err(_) => break,
+                Ok(_) => {}
+            }
+            if line.trim().is_empty() {
+                continue;
+            }
+            let Ok(msg) = proto::parse_line(&line) else {
+                break;
+            };
+            match proto::op_of(&msg) {
+                Some("next") => {
+                    let reply = {
+                        let mut st = self.state.lock().unwrap();
+                        if let Some(timeout) = self.unit_timeout {
+                            st.requeue_expired(timeout, Instant::now());
+                        }
+                        if let Some(u) = st.pending.pop_front() {
+                            st.assigned[u] = Some((conn_id, Instant::now()));
+                            claimed.push(u);
+                            proto::msg_unit(u)
+                        } else if st.remaining == 0 {
+                            proto::msg_done()
+                        } else {
+                            // Everything is assigned elsewhere; poll
+                            // again — a disconnect (or an assignment
+                            // timeout) may requeue a unit.
+                            proto::msg_wait(25)
+                        }
+                    };
+                    let closing = proto::op_of(&reply) == Some("done");
+                    if writeln!(writer, "{reply}").is_err() || closing {
+                        break;
+                    }
+                }
+                Some("status") => {
+                    // Read-only: answer and keep the connection open so
+                    // a monitor can poll over one socket.
+                    let reply = self.status_line();
+                    if writeln!(writer, "{reply}").is_err() {
+                        break;
+                    }
+                }
+                Some("result") => {
+                    let Ok((id, outcome)) = parse_any(self.queue, &msg) else {
+                        break; // malformed: drop the conn, claimed unit reissues
+                    };
+                    // One lock covers dedupe, journal append, slotting,
+                    // and the `remaining` decrement: the main thread
+                    // pools the instant it observes remaining == 0 and
+                    // must never see it before the run is slotted, and
+                    // the journal append must precede the ack below so
+                    // an acked unit is guaranteed on disk.
+                    let finished = {
+                        let mut st = self.state.lock().unwrap();
+                        if id >= st.delivered.len() || st.delivered[id] {
+                            false // duplicate (first result won)
+                        } else {
+                            st.delivered[id] = true;
+                            // Release the assignment slot only if this
+                            // connection still owns it — after a timeout
+                            // reissue it may belong to another worker.
+                            if st.assigned[id].is_some_and(|(c, _)| c == conn_id) {
+                                st.assigned[id] = None;
+                            }
+                            let (si, lu) =
+                                self.queue.locate(id).expect("parse_any validated the id");
+                            match &outcome {
+                                Ok(run) => {
+                                    if let Some(j) = st.journal.as_mut() {
+                                        if let Err(e) = j.append_ok(si, lu, run) {
+                                            eprintln!(
+                                                "qs-sweep driver: journal write failed: {e}"
+                                            );
+                                        }
+                                    }
+                                }
+                                Err(e) => {
+                                    eprintln!("sweep unit {id} failed on worker: {e}");
+                                    if let Some(j) = st.journal.as_mut() {
+                                        if let Err(we) = j.append_err(si, lu, e) {
+                                            eprintln!(
+                                                "qs-sweep driver: journal write failed: {we}"
+                                            );
+                                        }
+                                    }
+                                }
+                            }
+                            if let Ok(run) = outcome {
+                                st.runs[id] = Some(run);
+                            }
+                            st.executed += 1;
+                            st.remaining -= 1;
+                            st.remaining == 0
+                        }
+                    };
+                    claimed.retain(|&u| u != id);
+                    // Ack BEFORE announcing completion: the worker must
+                    // see its last ack before the driver starts tearing
+                    // down connections.
+                    let acked = writeln!(writer, "{}", proto::msg_ok()).is_ok();
+                    if finished {
+                        self.cv.notify_all();
+                    }
+                    if !acked {
+                        break;
+                    }
+                }
+                _ => break,
+            }
+        }
+        // Disconnect cleanup: requeue every claimed-but-unreported unit
+        // so other workers pick them up — unless an assignment timeout
+        // already reissued it (the unit is then pending or owned by
+        // another connection, and requeueing again would double-enqueue
+        // it).
+        if !claimed.is_empty() {
+            let mut st = self.state.lock().unwrap();
+            for u in claimed {
+                let owned = st.assigned[u].is_some_and(|(c, _)| c == conn_id);
+                if owned {
+                    st.assigned[u] = None;
+                    if !st.delivered[u] {
+                        st.pending.push_back(u);
+                    }
+                }
+            }
+        }
+    }
+
+    /// One JSON line of progress: top-level unit accounting plus a
+    /// per-spec `{index, paired, total, done, rows}` array, where
+    /// `rows` holds the pooled results of every point whose
+    /// replications are all delivered — the same replication-order
+    /// pooling the final CSVs use, computed on demand. Informational:
+    /// the determinism contract applies to the final CSVs, not to
+    /// mid-sweep snapshots.
+    fn status_line(&self) -> Value {
+        let st = self.state.lock().unwrap();
+        let mut specs = Vec::with_capacity(self.queue.tasks().len());
+        for (si, task) in self.queue.tasks().iter().enumerate() {
+            let done = (task.offset..task.offset + task.n_units())
+                .filter(|&g| st.delivered[g])
+                .count();
+            specs.push(
+                Value::obj()
+                    .set("index", si)
+                    .set("paired", task.paired.is_some())
+                    .set("total", task.n_units())
+                    .set("done", done)
+                    .set("rows", Value::Arr(spec_rows(task, &st))),
+            );
+        }
+        let units_done = st.delivered.iter().filter(|&&d| d).count();
+        Value::obj()
+            .set("op", "status")
+            .set("proto", proto::PROTO_VERSION)
+            .set("specs", Value::Arr(specs))
+            .set("units_total", st.delivered.len())
+            .set("units_done", units_done)
+            .set("units_executed", st.executed)
+            .set("units_from_journal", st.from_journal)
+    }
+}
+
+/// JSON-safe float for status rows: NaN/∞ (possible in degenerate
+/// pools' CIs) become null rather than invalid JSON.
+fn num_or_null(x: f64) -> Value {
+    if x.is_finite() {
+        Value::Num(x)
+    } else {
+        Value::Null
+    }
+}
+
+fn point_row(lambda: f64, policy: &str, res: &SimResult, reps: u32) -> Value {
+    Value::obj()
+        .set("lambda", num_or_null(lambda))
+        .set("policy", policy)
+        .set("et", num_or_null(res.mean_t_all))
+        .set("etw", num_or_null(res.weighted_t))
+        .set("ci95", num_or_null(res.ci95))
+        .set("jain", num_or_null(res.jain))
+        .set("util", num_or_null(res.utilization))
+        .set("reps", reps)
+}
+
+/// Pooled rows for every point of `task` whose replications are all
+/// delivered (marginal: per (λ, policy) point; paired: per (λ, policy)
+/// from the shared-stream units).
+fn spec_rows(task: &SpecTask, st: &State) -> Vec<Value> {
+    let mut rows = Vec::new();
+    match &task.paired {
+        None => {
+            let grid = &task.grid;
+            for (p, pt) in grid.pts.iter().enumerate() {
+                let (lambda, policy) = (pt.0, pt.1.as_str());
+                let base = task.offset + p * grid.reps;
+                if !(0..grid.reps).all(|r| st.delivered[base + r]) {
+                    continue;
+                }
+                let wl = task.spec.workload.build(lambda);
+                let mut pool = ReplicationPool::new(wl.num_classes());
+                let mut display: Option<String> = None;
+                for r in 0..grid.reps {
+                    if let Some(AnyRun::Marginal(run)) = &st.runs[base + r] {
+                        pool.absorb_stats(&run.stats);
+                        display.get_or_insert_with(|| run.display.clone());
+                    }
+                }
+                if pool.replications() == 0 {
+                    continue; // every replication failed on workers
+                }
+                let res = pool.result(display.as_deref().unwrap_or(policy), &wl);
+                rows.push(point_row(lambda, policy, &res, pool.replications()));
+            }
+        }
+        Some(pg) => {
+            for (li, &lambda) in pg.lambdas.iter().enumerate() {
+                let base = task.offset + li * pg.reps;
+                if !(0..pg.reps).all(|r| st.delivered[base + r]) {
+                    continue;
+                }
+                let wl = task.spec.workload.build(lambda);
+                for (pi, policy) in pg.policies.iter().enumerate() {
+                    let mut pool = ReplicationPool::new(wl.num_classes());
+                    let mut display: Option<String> = None;
+                    for r in 0..pg.reps {
+                        if let Some(AnyRun::Paired(rep)) = &st.runs[base + r] {
+                            if let Some(run) = rep.runs.get(pi).and_then(|x| x.as_ref()) {
+                                pool.absorb_stats(&run.stats);
+                                display.get_or_insert_with(|| run.display.clone());
+                            }
+                        }
+                    }
+                    if pool.replications() == 0 {
+                        continue;
+                    }
+                    let res = pool.result(display.as_deref().unwrap_or(policy), &wl);
+                    rows.push(point_row(lambda, policy.as_str(), &res, pool.replications()));
+                }
+            }
+        }
+    }
+    rows
 }
 
 /// Read one `\n`-terminated line from an **unauthenticated** peer under
@@ -293,7 +811,11 @@ fn read_handshake_line(reader: &mut BufReader<TcpStream>, budget: Duration) -> O
         if now >= deadline || line.len() >= MAX_LINE {
             return None;
         }
-        if reader.get_ref().set_read_timeout(Some(deadline - now)).is_err() {
+        if reader
+            .get_ref()
+            .set_read_timeout(Some(deadline - now))
+            .is_err()
+        {
             return None;
         }
         let buf = match reader.fill_buf() {
@@ -311,164 +833,5 @@ fn read_handshake_line(reader: &mut BufReader<TcpStream>, budget: Duration) -> O
         let take = buf.len().min(MAX_LINE - line.len());
         line.extend_from_slice(&buf[..take]);
         reader.consume(take);
-    }
-}
-
-#[allow(clippy::too_many_arguments)]
-fn handle_conn<P>(
-    stream: TcpStream,
-    conn_id: u64,
-    unit_timeout: Option<Duration>,
-    auth_token: Option<&str>,
-    spec_line: &str,
-    state: &Mutex<State>,
-    cv: &Condvar,
-    parse: ParseResult<'_, P>,
-    deliver: &(dyn Fn(usize, P) + Sync),
-) {
-    let mut writer = match stream.try_clone() {
-        Ok(w) => w,
-        Err(_) => return,
-    };
-    let mut reader = BufReader::new(stream);
-    // Handshake: the worker speaks first. The spec (workloads, seeds,
-    // grid shape) is only revealed after the hello validates — with a
-    // token configured, that includes the shared secret. The peer is
-    // untrusted until then, so the read is bounded by an *absolute*
-    // deadline (re-armed per recv so trickled bytes cannot extend it)
-    // and a byte cap: a silent, dribbling, or newline-less connection
-    // cannot hold the handler thread or grow the buffer.
-    let Some(line) = read_handshake_line(&mut reader, Duration::from_secs(10)) else {
-        let _ = writeln!(writer, "{}", proto::msg_err("handshake timed out or too large"));
-        return;
-    };
-    let hello = proto::parse_line(&line).and_then(|m| proto::parse_hello(&m));
-    let token = match hello {
-        Ok(token) => token,
-        Err(e) => {
-            let _ = writeln!(writer, "{}", proto::msg_err(&format!("bad hello: {e}")));
-            return;
-        }
-    };
-    if let Some(expected) = auth_token {
-        if !proto::token_matches(expected, token.as_deref()) {
-            eprintln!("qs-sweep driver: rejected worker (QS_SWEEP_TOKEN mismatch)");
-            let _ = writeln!(writer, "{}", proto::msg_err("auth failed"));
-            return;
-        }
-    }
-    // Authenticated: back to blocking reads for the lockstep loop (a
-    // slow-but-live worker is legitimate; the unit timeout handles
-    // stalled assignments).
-    let _ = reader.get_ref().set_read_timeout(None);
-    if writeln!(writer, "{spec_line}").is_err() {
-        return;
-    }
-    // Units this connection has claimed but not yet reported. The
-    // lockstep protocol implies at most one, but a pipelining (or buggy)
-    // client may claim several — every one of them must be reissued on
-    // disconnect or the sweep hangs with units leaked.
-    let mut claimed: Vec<usize> = Vec::new();
-    let mut line = String::new();
-    loop {
-        line.clear();
-        match reader.read_line(&mut line) {
-            Ok(0) | Err(_) => break,
-            Ok(_) => {}
-        }
-        if line.trim().is_empty() {
-            continue;
-        }
-        let Ok(msg) = proto::parse_line(&line) else {
-            break;
-        };
-        match proto::op_of(&msg) {
-            Some("next") => {
-                let reply = {
-                    let mut st = state.lock().unwrap();
-                    if let Some(timeout) = unit_timeout {
-                        st.requeue_expired(timeout, Instant::now());
-                    }
-                    if let Some(u) = st.pending.pop_front() {
-                        st.assigned[u] = Some((conn_id, Instant::now()));
-                        claimed.push(u);
-                        proto::msg_unit(u)
-                    } else if st.remaining == 0 {
-                        proto::msg_done()
-                    } else {
-                        // Everything is assigned elsewhere; poll again —
-                        // a disconnect (or an assignment timeout) may
-                        // requeue a unit.
-                        proto::msg_wait(25)
-                    }
-                };
-                let closing = proto::op_of(&reply) == Some("done");
-                if writeln!(writer, "{reply}").is_err() || closing {
-                    break;
-                }
-            }
-            Some("result") => {
-                let Ok((id, outcome)) = parse(&msg) else {
-                    break; // malformed: drop the conn, claimed unit reissues
-                };
-                // Claim the id first (dedupes a reissued-unit race), but
-                // only decrement `remaining` AFTER delivering: the main
-                // thread pools the instant it observes remaining == 0,
-                // and must never see it before the last run is slotted.
-                let fresh = {
-                    let mut st = state.lock().unwrap();
-                    if id >= st.delivered.len() || st.delivered[id] {
-                        false // duplicate or garbage id
-                    } else {
-                        st.delivered[id] = true;
-                        // Release the assignment slot only if this
-                        // connection still owns it — after a timeout
-                        // reissue it may belong to another worker.
-                        if st.assigned[id].is_some_and(|(c, _)| c == conn_id) {
-                            st.assigned[id] = None;
-                        }
-                        true
-                    }
-                };
-                claimed.retain(|&u| u != id);
-                let mut finished = false;
-                if fresh {
-                    match outcome {
-                        Ok(run) => deliver(id, run),
-                        Err(e) => eprintln!("sweep unit {id} failed on worker: {e}"),
-                    }
-                    let mut st = state.lock().unwrap();
-                    st.remaining -= 1;
-                    finished = st.remaining == 0;
-                }
-                // Ack BEFORE announcing completion: the worker must see
-                // its last ack before the driver starts tearing down
-                // connections.
-                let acked = writeln!(writer, "{}", proto::msg_ok()).is_ok();
-                if finished {
-                    cv.notify_all();
-                }
-                if !acked {
-                    break;
-                }
-            }
-            _ => break,
-        }
-    }
-    // Disconnect cleanup: requeue every claimed-but-unreported unit so
-    // other workers pick them up — unless an assignment timeout already
-    // reissued it (the unit is then pending or owned by another
-    // connection, and requeueing again would double-enqueue it).
-    if !claimed.is_empty() {
-        let mut st = state.lock().unwrap();
-        for u in claimed {
-            let owned = st.assigned[u].is_some_and(|(c, _)| c == conn_id);
-            if owned {
-                st.assigned[u] = None;
-                if !st.delivered[u] {
-                    st.pending.push_back(u);
-                }
-            }
-        }
     }
 }

@@ -1,0 +1,240 @@
+//! Append-only JSONL checkpoint journal for the elastic sweep driver.
+//!
+//! Layout: line 1 is a header binding the file to the exact spec queue
+//! it checkpoints —
+//!
+//! ```text
+//! {"journal":"qs-sweep","version":1,"specs":[...]}
+//! ```
+//!
+//! — compared against the current queue by canonical serialization
+//! (byte-equal spec JSON, in order, or the resume refuses). Every
+//! subsequent line is one completed unit, `{"n":SEQ,"spec":S,"id":U,
+//! ...payload}`, where the payload reuses the wire result encoding
+//! ([`proto::msg_result`] / [`proto::msg_paired_result`] /
+//! [`proto::msg_result_err`]): `display`+`stats` for marginal units,
+//! `runs` for paired units, `err` for units that conclusively failed on
+//! a worker (journaled as delivered, exactly as a live sweep treats
+//! them). The statistics keep the bit-exact `f64_bits` encoding, so a
+//! driver resumed from the journal pools exactly the bits a worker
+//! shipped and its CSVs are byte-identical to an uninterrupted run.
+//!
+//! WAL semantics: records are flushed line-by-line as results arrive,
+//! *before* the worker's ack — once a worker has seen `ok`, the unit is
+//! on disk. A SIGKILL can therefore tear at most the final line (a
+//! partial write with no trailing newline). A torn tail is a crash
+//! artifact: it is warned about, truncated away, and its unit reruns —
+//! same bits either way. Anything else — mid-file garbage, an
+//! out-of-sequence or duplicate record, a unit outside the queue, a
+//! header mismatch — is a hard error: silently rerunning "finished"
+//! units over a corrupted journal would mask data loss.
+
+use crate::sweep::{proto, AnyRun, SpecQueue};
+use crate::util::json::Value;
+use std::fs::OpenOptions;
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::Path;
+
+const MAGIC: &str = "qs-sweep";
+const VERSION: u64 = 1;
+
+fn jerr(path: &Path, msg: String) -> anyhow::Error {
+    anyhow::anyhow!("journal {}: {msg}", path.display())
+}
+
+/// One recorded unit result: spec index, local unit id, and the run
+/// (`None` = the unit conclusively failed on a worker; it is delivered,
+/// not rerun).
+pub struct JournalEntry {
+    pub spec: usize,
+    pub id: usize,
+    pub run: Option<AnyRun>,
+}
+
+/// An open journal, positioned for appending.
+pub struct Journal {
+    file: std::fs::File,
+    seq: u64,
+}
+
+impl Journal {
+    /// Open (or create) the journal at `path` for `queue`, returning
+    /// the journal plus every previously recorded entry in sequence
+    /// order. A fresh (or empty) file gets the header written; an
+    /// existing file must carry a byte-identical spec queue.
+    pub fn open(path: &Path, queue: &SpecQueue) -> anyhow::Result<(Journal, Vec<JournalEntry>)> {
+        let mut file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(false)
+            .open(path)
+            .map_err(|e| jerr(path, e.to_string()))?;
+        let mut text = String::new();
+        file.read_to_string(&mut text)
+            .map_err(|e| jerr(path, e.to_string()))?;
+
+        if text.is_empty() {
+            let specs: Vec<Value> = queue.tasks().iter().map(|t| t.spec.to_json()).collect();
+            let header = Value::obj()
+                .set("journal", MAGIC)
+                .set("version", VERSION)
+                .set("specs", Value::Arr(specs));
+            let mut line = header.to_string();
+            line.push('\n');
+            file.write_all(line.as_bytes())
+                .map_err(|e| jerr(path, e.to_string()))?;
+            return Ok((Journal { file, seq: 0 }, Vec::new()));
+        }
+
+        // Split complete lines from a possibly-torn tail. A final
+        // segment without a newline is treated as torn even if it
+        // happens to parse — uniform rule, and the unit reruns to the
+        // same bits anyway.
+        let mut lines: Vec<&str> = text.split('\n').collect();
+        let torn = if text.ends_with('\n') {
+            lines.pop(); // the empty segment after the final newline
+            None
+        } else {
+            lines.pop()
+        };
+
+        let header = Value::parse(lines.first().copied().unwrap_or(""))
+            .map_err(|e| jerr(path, format!("corrupt header line ({e})")))?;
+        if header.get("journal").and_then(|m| m.as_str()) != Some(MAGIC) {
+            return Err(jerr(path, "not a qs-sweep journal (bad header magic)".into()));
+        }
+        if header.get("version").and_then(|v| v.as_u64()) != Some(VERSION) {
+            return Err(jerr(path, "unsupported journal version".into()));
+        }
+        let header_specs = header
+            .get("specs")
+            .and_then(|s| s.as_arr())
+            .ok_or_else(|| jerr(path, "header missing 'specs'".into()))?;
+        if header_specs.len() != queue.tasks().len() {
+            return Err(jerr(
+                path,
+                format!(
+                    "spec queue mismatch: journal has {} specs, current queue {} — \
+                     this journal belongs to a different sweep",
+                    header_specs.len(),
+                    queue.tasks().len()
+                ),
+            ));
+        }
+        for (i, (js, task)) in header_specs.iter().zip(queue.tasks()).enumerate() {
+            if js.to_string() != task.spec.to_json().to_string() {
+                return Err(jerr(
+                    path,
+                    format!(
+                        "spec {i} does not match the current queue — \
+                         this journal belongs to a different sweep"
+                    ),
+                ));
+            }
+        }
+
+        let mut entries: Vec<JournalEntry> = Vec::new();
+        let mut seen = std::collections::HashSet::new();
+        for (li, line) in lines.iter().enumerate().skip(1) {
+            let lineno = li + 1;
+            let v = Value::parse(line)
+                .map_err(|e| jerr(path, format!("corrupt record on line {lineno} ({e})")))?;
+            let n = v
+                .get("n")
+                .and_then(|x| x.as_u64())
+                .ok_or_else(|| jerr(path, format!("record on line {lineno} missing 'n'")))?;
+            if n != entries.len() as u64 {
+                return Err(jerr(
+                    path,
+                    format!(
+                        "record out of sequence on line {lineno} (expected n={}, found n={n})",
+                        entries.len()
+                    ),
+                ));
+            }
+            let spec = v
+                .get("spec")
+                .and_then(|x| x.as_usize())
+                .ok_or_else(|| jerr(path, format!("record on line {lineno} missing 'spec'")))?;
+            let task = queue.tasks().get(spec).ok_or_else(|| {
+                jerr(
+                    path,
+                    format!("record on line {lineno} names spec {spec}, outside the queue"),
+                )
+            })?;
+            let id = proto::id_of(&v)
+                .map_err(|e| jerr(path, format!("record on line {lineno}: {e}")))?;
+            if id >= task.n_units() {
+                return Err(jerr(
+                    path,
+                    format!("record on line {lineno} names unit {id}, outside spec {spec}'s grid"),
+                ));
+            }
+            if !seen.insert((spec, id)) {
+                return Err(jerr(
+                    path,
+                    format!("duplicate record for spec {spec} unit {id} on line {lineno}"),
+                ));
+            }
+            // Decode via the owning spec's mode; a shape mismatch (a
+            // paired payload on a marginal spec, or vice versa) surfaces
+            // here as corruption.
+            let run = if task.paired.is_some() {
+                let (_, r) = proto::parse_paired_result(&v).map_err(|e| {
+                    jerr(path, format!("corrupt paired record on line {lineno} ({e})"))
+                })?;
+                r.ok().map(AnyRun::Paired)
+            } else {
+                let (_, r) = proto::parse_result(&v)
+                    .map_err(|e| jerr(path, format!("corrupt record on line {lineno} ({e})")))?;
+                r.ok().map(AnyRun::Marginal)
+            };
+            entries.push(JournalEntry { spec, id, run });
+        }
+
+        if let Some(t) = torn {
+            eprintln!(
+                "qs-sweep journal {}: dropping torn final record ({} bytes, crash artifact); \
+                 the unit will rerun",
+                path.display(),
+                t.len()
+            );
+            // Truncate the tail away so appended records start on a
+            // clean line boundary.
+            file.set_len((text.len() - t.len()) as u64)
+                .map_err(|e| jerr(path, e.to_string()))?;
+        }
+        file.seek(SeekFrom::End(0))
+            .map_err(|e| jerr(path, e.to_string()))?;
+        let seq = entries.len() as u64;
+        Ok((Journal { file, seq }, entries))
+    }
+
+    fn append(&mut self, payload: Value) -> std::io::Result<()> {
+        let mut line = payload.to_string();
+        line.push('\n');
+        // One write_all per record (then a flush for symmetry with
+        // buffered writers): a crash tears at most the final line.
+        self.file.write_all(line.as_bytes())?;
+        self.file.flush()?;
+        self.seq += 1;
+        Ok(())
+    }
+
+    /// Record a completed unit (flushed before the caller acks it).
+    pub fn append_ok(&mut self, spec: usize, id: usize, run: &AnyRun) -> std::io::Result<()> {
+        let payload = match run {
+            AnyRun::Marginal(r) => proto::msg_result(id, r),
+            AnyRun::Paired(r) => proto::msg_paired_result(id, r),
+        };
+        let n = self.seq;
+        self.append(payload.set("n", n).set("spec", spec))
+    }
+
+    /// Record a unit that conclusively failed on a worker.
+    pub fn append_err(&mut self, spec: usize, id: usize, err: &str) -> std::io::Result<()> {
+        let n = self.seq;
+        self.append(proto::msg_result_err(id, err).set("n", n).set("spec", spec))
+    }
+}

@@ -1,20 +1,26 @@
-//! Sharded sweep orchestration: distribute a figure's (λ, policy,
-//! replication) unit grid across worker processes.
+//! Elastic sweep service: distribute a *queue* of sweeps' (λ, policy,
+//! replication) unit grids across worker processes, with durable
+//! checkpoint/resume.
 //!
 //! A [`SweepSpec`] is a self-contained, JSON-serializable description of
 //! a sweep (workload family, λ grid, policies, run lengths, seed,
 //! replication count) — the shardable form of an experiment harness. A
-//! [`Driver`] partitions the spec's unit grid (point-major unit ids, a
-//! pure function of the spec), serves units to [`run_worker`] processes
-//! over the coordinator's TCP JSONL idiom (`util::json`, one object per
-//! line; see [`proto`]), and pools returned
+//! [`SpecQueue`] lines up several specs (multi-figure, mixed
+//! paired/unpaired) behind *global* unit ids: spec offsets are the
+//! cumulative unit counts in queue order, a pure function of the queue
+//! that driver and workers compute identically. A [`Driver`] — built
+//! with [`DriverBuilder`] and run with [`Driver::serve`] — serves units
+//! from one pooled scheduler to [`run_worker`] processes over the
+//! coordinator's TCP JSONL idiom (`util::json`, one object per line;
+//! see [`proto`]), and pools returned
 //! [`UnitStats`](crate::sim::UnitStats) into the same
 //! [`ReplicationPool`](crate::sim::ReplicationPool) CIs the in-process
 //! runner produces.
 //!
 //! **Determinism contract:** at equal (spec), a sharded run is
 //! bit-identical to [`run_spec_local`] — regardless of worker count,
-//! unit-to-worker assignment, or result arrival order. The pieces that
+//! unit-to-worker assignment, result arrival order, or how many times
+//! the driver was killed and resumed along the way. The pieces that
 //! make this hold:
 //!
 //! * per-unit seeds are a pure function of (seed, point, rep);
@@ -22,23 +28,33 @@
 //!   ([`crate::util::json::f64_bits`]), so nothing is lost in transit;
 //! * the driver pools each point's replications in replication order
 //!   (results are slotted by unit id, not arrival order);
-//! * engine reuse across units is bit-identical to fresh construction.
+//! * engine reuse across units is bit-identical to fresh construction;
+//! * the checkpoint [`journal`] stores the same bit-exact encodings the
+//!   wire ships, so resumed units replay the exact bits a worker sent.
 //!
-//! Fault handling: a worker disconnect requeues its outstanding unit;
-//! duplicate results for a unit are deduped by unit id (first wins —
-//! identical bits anyway). `scripts/sweep_smoke.sh` runs 1 driver + 2
-//! workers on localhost and diffs against the in-process CSV; CI runs it
-//! as the `sweep-smoke` job.
+//! Elasticity and fault handling: authenticated workers join and leave
+//! at any time (a disconnect requeues its outstanding units; stragglers
+//! are requeued on a timeout); duplicate results for a unit are deduped
+//! by unit id (first wins — identical bits anyway); with a journal
+//! configured, a SIGKILLed driver restarted on the same journal serves
+//! finished units from disk instead of rerunning them. A read-only
+//! `status` op streams per-spec progress and completed pooled rows as
+//! JSON while the sweep runs. `scripts/sweep_smoke.sh` runs 1 driver +
+//! 2 workers on localhost, diffs against the in-process CSV, and
+//! SIGKILLs/resumes the driver mid-sweep; CI runs it as the
+//! `sweep-smoke` job.
 
 pub mod driver;
+pub mod journal;
 pub mod proto;
 pub mod worker;
 
-pub use driver::Driver;
+pub use driver::{Driver, DriverBuilder, ServeReport, SpecOutcome};
 pub use worker::{run_worker, run_worker_with_token};
 
 use crate::experiments::{
-    sweep_paired_units, sweep_units, LocalThreads, PairedGrid, PairedSweep, Point, SweepGrid,
+    sweep_paired_units, sweep_units, LocalThreads, PairedGrid, PairedRun, PairedSweep, Point,
+    SweepGrid, UnitRun,
 };
 use crate::sim::SimConfig;
 use crate::util::json::Value;
@@ -301,8 +317,8 @@ pub fn run_spec_local(spec: &SweepSpec, threads: usize) -> Vec<Point> {
 }
 
 /// Run a paired spec with in-process threads — the reference path a
-/// sharded paired run ([`Driver::run_paired`]) must match bit for bit.
-/// Errors when the spec is not in paired mode or names a bad baseline.
+/// sharded paired run must match bit for bit. Errors when the spec is
+/// not in paired mode or names a bad baseline.
 pub fn run_spec_paired_local(spec: &SweepSpec, threads: usize) -> anyhow::Result<PairedSweep> {
     let grid = spec
         .paired_grid()?
@@ -310,6 +326,93 @@ pub fn run_spec_paired_local(spec: &SweepSpec, threads: usize) -> anyhow::Result
     let wl_at = |l: f64| spec.workload.build(l);
     let mut source = LocalThreads { threads };
     sweep_paired_units(&grid, &wl_at, &mut source)
+}
+
+/// A completed unit's payload, type-erased across the spec queue: the
+/// driver and journal slot marginal and paired results into one global
+/// vector and split them back per spec when pooling.
+#[derive(Clone, Debug)]
+pub enum AnyRun {
+    Marginal(UnitRun),
+    Paired(PairedRun),
+}
+
+/// One queued spec with its precomputed grids and global unit offset.
+pub struct SpecTask {
+    pub spec: SweepSpec,
+    pub grid: SweepGrid,
+    /// Present iff the spec is in paired (CRN) mode; its unit grid then
+    /// replaces `grid`'s for scheduling purposes.
+    pub paired: Option<PairedGrid>,
+    /// Global unit id of this spec's local unit 0.
+    pub offset: usize,
+}
+
+impl SpecTask {
+    pub fn n_units(&self) -> usize {
+        match &self.paired {
+            Some(pg) => pg.n_units(),
+            None => self.grid.n_units(),
+        }
+    }
+}
+
+/// An ordered queue of sweep specs served from one pooled unit
+/// scheduler. Global unit ids are assigned by cumulative unit counts in
+/// queue order — a pure function of the queue, so driver and workers
+/// resolve them identically without any extra coordination.
+pub struct SpecQueue {
+    tasks: Vec<SpecTask>,
+    total: usize,
+}
+
+impl SpecQueue {
+    /// Build the queue, validating every spec's grids up front (a bad
+    /// paired baseline fails here, before anything binds or connects).
+    pub fn new(specs: Vec<SweepSpec>) -> anyhow::Result<SpecQueue> {
+        let mut tasks = Vec::with_capacity(specs.len());
+        let mut offset = 0usize;
+        for spec in specs {
+            let grid = spec.grid();
+            let paired = spec.paired_grid()?;
+            let task = SpecTask {
+                spec,
+                grid,
+                paired,
+                offset,
+            };
+            offset += task.n_units();
+            tasks.push(task);
+        }
+        Ok(SpecQueue {
+            tasks,
+            total: offset,
+        })
+    }
+
+    pub fn tasks(&self) -> &[SpecTask] {
+        &self.tasks
+    }
+
+    /// Total unit count across the queue (the global id space).
+    pub fn total_units(&self) -> usize {
+        self.total
+    }
+
+    /// Resolve a global unit id to (spec index, local unit id).
+    pub fn locate(&self, global: usize) -> Option<(usize, usize)> {
+        if global >= self.total {
+            return None;
+        }
+        let si = self.tasks.partition_point(|t| t.offset <= global) - 1;
+        Some((si, global - self.tasks[si].offset))
+    }
+
+    /// Resolve (spec index, local unit id) to a global unit id.
+    pub fn global_id(&self, spec: usize, local: usize) -> Option<usize> {
+        let t = self.tasks.get(spec)?;
+        (local < t.n_units()).then(|| t.offset + local)
+    }
 }
 
 #[cfg(test)]
@@ -395,6 +498,57 @@ mod tests {
         // Not paired: no grid.
         spec.paired = false;
         assert!(spec.paired_grid().unwrap().is_none());
+    }
+
+    #[test]
+    fn spec_queue_offsets_and_locate() {
+        let mk = |lambdas: &[f64], paired: bool| SweepSpec {
+            workload: WorkloadSpec::OneOrAll {
+                k: 8,
+                p1: 0.9,
+                mu1: 1.0,
+                muk: 1.0,
+            },
+            lambdas: lambdas.to_vec(),
+            policies: vec!["msf".into(), "fcfs".into()],
+            target_completions: 6_000,
+            warmup_completions: 1_200,
+            batch: 1000,
+            seed: 1,
+            replications: 3,
+            paired,
+            baseline: None,
+        };
+        // Spec 0 (marginal): 2λ × 2 policies × 3 reps = 12 units.
+        // Spec 1 (paired): 1λ × 3 reps = 3 units (all policies per unit).
+        let q = SpecQueue::new(vec![mk(&[2.0, 3.0], false), mk(&[2.0], true)]).unwrap();
+        assert_eq!(q.total_units(), 15);
+        assert_eq!(q.tasks().len(), 2);
+        assert_eq!(q.tasks()[0].offset, 0);
+        assert_eq!(q.tasks()[1].offset, 12);
+        assert!(q.tasks()[0].paired.is_none() && q.tasks()[1].paired.is_some());
+        assert_eq!(q.locate(0), Some((0, 0)));
+        assert_eq!(q.locate(11), Some((0, 11)));
+        assert_eq!(q.locate(12), Some((1, 0)));
+        assert_eq!(q.locate(14), Some((1, 2)));
+        assert_eq!(q.locate(15), None);
+        assert_eq!(q.global_id(0, 11), Some(11));
+        assert_eq!(q.global_id(1, 2), Some(14));
+        assert_eq!(q.global_id(1, 3), None);
+        assert_eq!(q.global_id(2, 0), None);
+        // Every global id round-trips through locate/global_id.
+        for g in 0..q.total_units() {
+            let (s, l) = q.locate(g).unwrap();
+            assert_eq!(q.global_id(s, l), Some(g));
+        }
+        // Queue validation surfaces bad paired baselines up front.
+        let mut bad = mk(&[2.0], true);
+        bad.baseline = Some("nope".into());
+        assert!(SpecQueue::new(vec![bad]).is_err());
+        // An empty queue is structurally valid (the builder rejects it).
+        let empty = SpecQueue::new(Vec::new()).unwrap();
+        assert_eq!(empty.total_units(), 0);
+        assert_eq!(empty.locate(0), None);
     }
 
     #[test]

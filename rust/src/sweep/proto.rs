@@ -1,29 +1,45 @@
 //! Sweep wire protocol: one JSON object per line over TCP (the same
 //! JSONL idiom as the coordinator's control API).
 //!
-//! Handshake (proto v2): on connect the **worker speaks first** with a
+//! Handshake (proto v3): on connect the **worker speaks first** with a
 //! `hello` line carrying the protocol version and, when configured, the
 //! shared secret (`QS_SWEEP_TOKEN`). The driver validates both before
 //! revealing anything: a mismatched token or version gets an `err` line
-//! and a closed connection — the spec (which names workloads, seeds and
-//! grid shape) is never sent to an unauthenticated peer. With the token
-//! unset on both sides the handshake is a bare `hello` (loopback tests
-//! and single-machine runs need no configuration). From then on the
-//! worker drives a lockstep request/response loop:
+//! and a closed connection — the spec queue (which names workloads,
+//! seeds and grid shapes) is never sent to an unauthenticated peer.
+//! With the token unset on both sides the handshake is a bare `hello`
+//! (loopback tests and single-machine runs need no configuration).
+//!
+//! The driver's reply is the full **spec queue** (v3: a `specs` array —
+//! an elastic driver serves several sweeps, mixed paired/unpaired, from
+//! one pooled unit scheduler, and every connection sees the same
+//! queue). Unit ids are *global* across the queue: spec offsets are
+//! the cumulative unit counts in queue order, a pure function of the
+//! queue that driver and workers compute identically
+//! ([`SpecQueue`](crate::sweep::SpecQueue)). From then on the peer
+//! drives a lockstep request/response loop:
 //!
 //! ```text
-//! worker → driver   {"op":"hello","proto":2[,"token":"..."]}
-//! driver → worker   {"op":"spec",...} | {"op":"err","msg":"..."}
+//! worker → driver   {"op":"hello","proto":3[,"token":"..."]}
+//! driver → worker   {"op":"specs","proto":3,"specs":[...]} | {"op":"err","msg":"..."}
 //! worker → driver   {"op":"next"}
 //! driver → worker   {"op":"unit","id":N} | {"op":"wait","ms":M} | {"op":"done"}
 //! worker → driver   {"op":"result","id":N,"display":...,"stats":{...}}
+//!                   | {"op":"result","id":N,"runs":[...]}        (paired spec)
 //!                   | {"op":"result","id":N,"err":"..."}
 //! driver → worker   {"op":"ok"}
 //! ```
 //!
+//! Any authenticated peer may instead send `{"op":"status"}` at any
+//! point in the loop and gets one JSON line of per-spec progress and
+//! completed pooled rows back — the read-only endpoint `quickswap sweep
+//! status` uses this without ever claiming a unit.
+//!
 //! Every statistic inside `stats` uses bit-exact f64 encoding
 //! ([`crate::util::json::f64_bits`]) — the determinism contract depends
-//! on nothing being lost in transit.
+//! on nothing being lost in transit. The driver's checkpoint journal
+//! ([`crate::sweep::journal`]) reuses the same result encodings, so a
+//! resumed sweep replays exactly the bits a live worker shipped.
 
 use crate::experiments::{PairedRun, UnitRun};
 use crate::sim::UnitStats;
@@ -32,13 +48,18 @@ use crate::util::json::Value;
 
 /// Bumped on incompatible wire changes; driver and worker must agree.
 /// v2: worker-first `hello` handshake with the optional shared secret.
-pub const PROTO_VERSION: u64 = 2;
+/// v3: multi-spec queue (`specs` array reply, global unit ids) and the
+/// read-only `status` op.
+pub const PROTO_VERSION: u64 = 3;
 
-pub fn msg_spec(spec: &SweepSpec) -> Value {
+/// The driver's handshake reply: the entire spec queue, in the order
+/// that defines global unit offsets.
+pub fn msg_specs<'a, I: IntoIterator<Item = &'a SweepSpec>>(specs: I) -> Value {
+    let arr: Vec<Value> = specs.into_iter().map(|s| s.to_json()).collect();
     Value::obj()
-        .set("op", "spec")
+        .set("op", "specs")
         .set("proto", PROTO_VERSION)
-        .set("spec", spec.to_json())
+        .set("specs", Value::Arr(arr))
 }
 
 /// The worker's opening line: protocol version plus the optional
@@ -95,6 +116,11 @@ pub fn msg_next() -> Value {
     Value::obj().set("op", "next")
 }
 
+/// Read-only progress query (any authenticated peer, any time).
+pub fn msg_status_req() -> Value {
+    Value::obj().set("op", "status")
+}
+
 pub fn msg_unit(id: usize) -> Value {
     Value::obj().set("op", "unit").set("id", id)
 }
@@ -125,10 +151,9 @@ pub fn msg_result_err(id: usize, err: &str) -> Value {
 
 /// Result line for one *paired* unit: all policies' runs over the
 /// unit's shared stream, as a `runs` array (null = failed policy).
-/// Paired specs are flagged in the spec message itself (additive
-/// `paired`/`baseline` fields), so the protocol version is unchanged —
-/// driver and worker agree on which result shape a sweep uses before
-/// any unit is served.
+/// Which shape a unit uses is determined by its owning spec's
+/// `paired` flag — both sides resolve the global unit id through the
+/// same [`SpecQueue`](crate::sweep::SpecQueue) before encoding.
 pub fn msg_paired_result(id: usize, run: &PairedRun) -> Value {
     Value::obj()
         .set("op", "result")
@@ -149,23 +174,28 @@ pub fn op_of(v: &Value) -> Option<&str> {
 /// The message's `id` field as a unit index.
 pub fn id_of(v: &Value) -> anyhow::Result<usize> {
     v.get("id")
-        .and_then(|x| x.as_u64())
-        .map(|x| x as usize)
+        .and_then(|x| x.as_usize())
         .ok_or_else(|| anyhow::anyhow!("message missing 'id'"))
 }
 
-/// Decode a `spec` message.
-pub fn parse_spec(v: &Value) -> anyhow::Result<SweepSpec> {
-    if op_of(v) != Some("spec") {
-        anyhow::bail!("expected a 'spec' message, got {:?}", op_of(v));
+/// Decode a `specs` message into the spec queue (order defines the
+/// global unit offsets).
+pub fn parse_specs(v: &Value) -> anyhow::Result<Vec<SweepSpec>> {
+    if op_of(v) != Some("specs") {
+        anyhow::bail!("expected a 'specs' message, got {:?}", op_of(v));
     }
     let proto = v.get("proto").and_then(|p| p.as_u64()).unwrap_or(0);
     if proto != PROTO_VERSION {
         anyhow::bail!("protocol mismatch: driver speaks v{proto}, worker v{PROTO_VERSION}");
     }
-    v.get("spec")
-        .ok_or_else(|| anyhow::anyhow!("spec message missing 'spec'"))
-        .and_then(SweepSpec::from_json)
+    let arr = v
+        .get("specs")
+        .and_then(|s| s.as_arr())
+        .ok_or_else(|| anyhow::anyhow!("specs message missing 'specs'"))?;
+    if arr.is_empty() {
+        anyhow::bail!("specs message carries an empty queue");
+    }
+    arr.iter().map(SweepSpec::from_json).collect()
 }
 
 /// Decode a `result` message into (unit id, run-or-error).
@@ -204,27 +234,49 @@ mod tests {
     use super::*;
     use crate::sweep::WorkloadSpec;
 
-    #[test]
-    fn spec_message_roundtrip() {
-        let spec = SweepSpec {
+    fn spec(seed: u64) -> SweepSpec {
+        SweepSpec {
             workload: WorkloadSpec::FourClass,
             lambdas: vec![2.0],
             policies: vec!["msf".into()],
             target_completions: 1000,
             warmup_completions: 200,
             batch: 100,
-            seed: 9,
+            seed,
             replications: 2,
             paired: false,
             baseline: None,
-        };
-        let wire = msg_spec(&spec).to_string();
-        let back = parse_spec(&parse_line(&wire).unwrap()).unwrap();
-        assert_eq!(back.policies, spec.policies);
-        assert_eq!(back.seed, 9);
-        // Version mismatch is rejected.
-        let bad = msg_spec(&spec).set("proto", 999u64);
-        assert!(parse_spec(&bad).is_err());
+        }
+    }
+
+    #[test]
+    fn specs_message_roundtrip() {
+        let a = spec(9);
+        let mut b = spec(10);
+        b.paired = true;
+        let wire = msg_specs([&a, &b]).to_string();
+        let back = parse_specs(&parse_line(&wire).unwrap()).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back[0].seed, 9);
+        assert_eq!(back[1].seed, 10);
+        assert!(!back[0].paired && back[1].paired);
+        // Version mismatch and empty queue are rejected.
+        let stale = msg_specs([&a]).set("proto", 999u64);
+        assert!(parse_specs(&stale).is_err());
+        let empty = msg_specs(std::iter::empty::<&SweepSpec>());
+        assert!(parse_specs(&empty).is_err());
+        // A v2-style single-spec message does not decode.
+        let v2ish = Value::obj()
+            .set("op", "spec")
+            .set("proto", PROTO_VERSION)
+            .set("spec", a.to_json());
+        assert!(parse_specs(&v2ish).is_err());
+    }
+
+    #[test]
+    fn status_request_shape() {
+        let v = parse_line(&msg_status_req().to_string()).unwrap();
+        assert_eq!(op_of(&v), Some("status"));
     }
 
     #[test]
@@ -275,7 +327,7 @@ mod tests {
         let tok =
             parse_hello(&parse_line(&msg_hello(Some("sesame")).to_string()).unwrap()).unwrap();
         assert_eq!(tok.as_deref(), Some("sesame"));
-        let stale = msg_hello(None).set("proto", 1u64);
+        let stale = msg_hello(None).set("proto", 2u64);
         assert!(parse_hello(&stale).is_err());
         assert!(parse_hello(&msg_next()).is_err());
     }

@@ -1,21 +1,24 @@
-//! The sweep worker: connects to a driver, rebuilds the sweep from the
-//! served [`SweepSpec`](crate::sweep::SweepSpec), and runs assigned
-//! units with the same [`run_unit`] path (same per-unit seeds, same
-//! engine reuse) as the in-process runner — the worker adds nothing but
-//! transport.
+//! The sweep worker: connects to a driver, rebuilds the served spec
+//! *queue* ([`SpecQueue`]), and runs assigned units with the same
+//! [`run_unit`] path (same per-unit seeds, same engine reuse) as the
+//! in-process runner — the worker adds nothing but transport. Global
+//! unit ids resolve through the queue exactly as on the driver, so a
+//! worker can join an elastic sweep at any point in its life and pick
+//! up whichever spec's units are pending.
 
 use crate::experiments::{run_paired_unit, run_unit};
 use crate::sim::Engine;
-use crate::sweep::proto;
+use crate::sweep::{proto, SpecQueue};
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 use std::time::Duration;
 
 /// Serve one driver until it reports `done` (or disappears — once the
-/// handshake succeeded, a lost connection means the driver finished or
-/// will reissue our unit elsewhere, so the worker exits cleanly either
-/// way), authenticating with the `QS_SWEEP_TOKEN` shared secret when
-/// set. Returns the number of units completed and acknowledged.
+/// handshake succeeded, a lost connection means the driver finished,
+/// died and will be resumed from its journal, or will reissue our unit
+/// elsewhere, so the worker exits cleanly either way), authenticating
+/// with the `QS_SWEEP_TOKEN` shared secret when set. Returns the number
+/// of units completed and acknowledged.
 pub fn run_worker(addr: &str) -> anyhow::Result<usize> {
     let token = crate::sweep::driver::auth_token_from_env();
     run_worker_with_token(addr, token.as_deref())
@@ -28,7 +31,7 @@ pub fn run_worker_with_token(addr: &str, token: Option<&str>) -> anyhow::Result<
     let mut writer = stream.try_clone()?;
     let mut reader = BufReader::new(stream);
     // Handshake: hello (version + optional shared secret) before the
-    // driver reveals the spec; an `err` reply means we were rejected.
+    // driver reveals the spec queue; an `err` reply means rejection.
     writeln!(writer, "{}", proto::msg_hello(token))?;
     let mut line = String::new();
     reader.read_line(&mut line)?;
@@ -36,18 +39,11 @@ pub fn run_worker_with_token(addr: &str, token: Option<&str>) -> anyhow::Result<
     if let Some(msg) = proto::err_of(&first) {
         anyhow::bail!("driver rejected this worker: {msg}");
     }
-    let spec = proto::parse_spec(&first)?;
-    let grid = spec.grid();
-    // Paired (CRN) sweeps flip to the (λ, replication) grid: one unit
-    // runs every policy over one shared stream and ships a runs array.
-    let paired = spec.paired_grid()?;
-    let n_units = match &paired {
-        Some(pg) => pg.n_units(),
-        None => grid.n_units(),
-    };
-    // Engine cache: consecutive units of the same point reuse one
-    // engine's allocations (reset is bit-identical to fresh).
-    let mut cache: Option<(usize, Engine)> = None;
+    let queue = SpecQueue::new(proto::parse_specs(&first)?)?;
+    // Engine caches, one per spec: consecutive units of the same point
+    // reuse one engine's allocations (reset is bit-identical to fresh).
+    // Specs differ in workload/config, so caches never cross specs.
+    let mut caches: Vec<Option<(usize, Engine)>> = (0..queue.tasks().len()).map(|_| None).collect();
     let mut completed = 0usize;
     loop {
         if writeln!(writer, "{}", proto::msg_next()).is_err() {
@@ -63,27 +59,32 @@ pub fn run_worker_with_token(addr: &str, token: Option<&str>) -> anyhow::Result<
         };
         match proto::op_of(&msg) {
             Some("unit") => {
-                let u = proto::id_of(&msg)?;
-                if u >= n_units {
-                    anyhow::bail!("driver assigned out-of-range unit {u}");
-                }
-                let reply = match &paired {
+                let g = proto::id_of(&msg)?;
+                let Some((si, u)) = queue.locate(g) else {
+                    anyhow::bail!("driver assigned out-of-range unit {g}");
+                };
+                let task = &queue.tasks()[si];
+                let cache = &mut caches[si];
+                // Paired (CRN) specs use the (λ, replication) grid: one
+                // unit runs every policy over one shared stream and
+                // ships a runs array. Results carry the *global* id.
+                let reply = match &task.paired {
                     Some(pg) => {
                         let (li, _) = pg.point_rep(u);
-                        let wl = spec.workload.build(pg.lambdas[li]);
-                        let run = run_paired_unit(pg, &wl, u, &mut cache);
+                        let wl = task.spec.workload.build(pg.lambdas[li]);
+                        let run = run_paired_unit(pg, &wl, u, cache);
                         if run.runs.iter().all(|r| r.is_none()) {
-                            proto::msg_result_err(u, "policy construction failed")
+                            proto::msg_result_err(g, "policy construction failed")
                         } else {
-                            proto::msg_paired_result(u, &run)
+                            proto::msg_paired_result(g, &run)
                         }
                     }
                     None => {
-                        let (p, _) = grid.point_rep(u);
-                        let wl = spec.workload.build(grid.pts[p].0);
-                        match run_unit(&grid, &wl, u, &mut cache) {
-                            Some(run) => proto::msg_result(u, &run),
-                            None => proto::msg_result_err(u, "policy construction failed"),
+                        let (p, _) = task.grid.point_rep(u);
+                        let wl = task.spec.workload.build(task.grid.pts[p].0);
+                        match run_unit(&task.grid, &wl, u, cache) {
+                            Some(run) => proto::msg_result(g, &run),
+                            None => proto::msg_result_err(g, "policy construction failed"),
                         }
                     }
                 };

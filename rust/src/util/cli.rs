@@ -112,6 +112,17 @@ impl Args {
         &self.positional
     }
 
+    /// Comma-separated string list, e.g. `--figs 2,6,8`. Entries are
+    /// trimmed and empty segments dropped; `None` when absent.
+    pub fn str_list(&self, name: &str) -> Option<Vec<String>> {
+        self.get(name).map(|v| {
+            v.split(',')
+                .map(|x| x.trim().to_string())
+                .filter(|x| !x.is_empty())
+                .collect()
+        })
+    }
+
     /// Comma-separated f64 list, e.g. `--rates 1.0,2.5,7.5`.
     pub fn f64_list(&self, name: &'static str, default: &[f64]) -> Result<Vec<f64>, CliError> {
         match self.get(name) {
@@ -188,6 +199,16 @@ mod tests {
         assert_eq!(a.f64_list("rates", &[]).unwrap(), vec![1.0, 2.0, 3.5]);
         assert_eq!(a.f64_list("other", &[9.0]).unwrap(), vec![9.0]);
         assert_eq!(a.str_or("mode", "sim"), "sim");
+    }
+
+    #[test]
+    fn string_lists() {
+        let a = parse(&["--figs", "2, 6,,8"]);
+        assert_eq!(
+            a.str_list("figs"),
+            Some(vec!["2".to_string(), "6".to_string(), "8".to_string()])
+        );
+        assert_eq!(a.str_list("absent"), None);
     }
 
     #[test]

@@ -53,6 +53,12 @@ impl Value {
         })
     }
 
+    /// Non-negative integral number as a usize (index fields in wire
+    /// messages and journal records).
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_u64().map(|x| x as usize)
+    }
+
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Value::Str(s) => Some(s),
@@ -433,6 +439,10 @@ mod tests {
     fn builder_api() {
         let v = Value::obj().set("x", 3u64).set("y", "hi");
         assert_eq!(v.get("x").unwrap().as_u64(), Some(3));
+        assert_eq!(v.get("x").unwrap().as_usize(), Some(3));
+        assert_eq!(v.get("y").unwrap().as_usize(), None);
+        assert_eq!(Value::Num(-1.0).as_usize(), None);
+        assert_eq!(Value::Num(2.5).as_usize(), None);
         assert_eq!(v.to_string(), r#"{"x":3,"y":"hi"}"#);
     }
 

@@ -4,7 +4,10 @@
 //! `Welford` and `BatchMeans` serialize to JSON with **bit-exact** f64
 //! state ([`crate::util::json::f64_bits`]): remote sweep workers ship
 //! their accumulators over the wire, and the driver's merge must be
-//! indistinguishable from an in-process merge of the same runs.
+//! indistinguishable from an in-process merge of the same runs. The
+//! sweep journal ([`crate::sweep`]) checkpoints the same wire encoding
+//! verbatim, so a resume replayed from disk pools the exact bits a live
+//! worker would have delivered.
 
 use crate::util::json::{f64_bits, f64_from_bits, Value};
 

@@ -1,0 +1,536 @@
+//! Elastic sweep service integration: multi-spec queueing,
+//! checkpoint/resume durability, worker churn, and the status endpoint.
+//!
+//! The determinism contract under test: a driver SIGKILLed mid-sweep
+//! and restarted on the same journal emits byte-identical CSVs to an
+//! uninterrupted run at equal (seed, R) — with finished units served
+//! from the journal, never rerun (asserted via the
+//! [`ServeReport`] unit accounting) — across 1- and 2-worker resume
+//! topologies, for marginal and paired (CRN) specs alike. Corrupted
+//! journals must fail loudly rather than silently rerunning; a torn
+//! (no-newline) tail is the one legitimate crash artifact and is
+//! dropped.
+
+use quickswap::experiments::{
+    run_paired_unit, run_unit, write_diff_csv, write_sweep_csv, PairedSweep, Point,
+};
+use quickswap::sweep::{
+    proto, run_spec_local, run_spec_paired_local, run_worker, DriverBuilder, SpecOutcome, SweepSpec,
+    WorkloadSpec,
+};
+use quickswap::util::json::Value;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::path::{Path, PathBuf};
+
+/// The sweep-smoke grid (12 units): must stay in sync with
+/// [`GRID_ARGS`] so the subprocess driver serves the same spec, byte
+/// for byte, as the in-process resume.
+fn marginal_spec() -> SweepSpec {
+    SweepSpec {
+        workload: WorkloadSpec::OneOrAll {
+            k: 8,
+            p1: 0.9,
+            mu1: 1.0,
+            muk: 1.0,
+        },
+        lambdas: vec![2.0, 3.0],
+        policies: vec!["msf".into(), "msfq:7".into()],
+        target_completions: 6_000,
+        warmup_completions: 1_200,
+        batch: 1000,
+        seed: 42,
+        replications: 3,
+        paired: false,
+        baseline: None,
+    }
+}
+
+/// CLI spelling of [`marginal_spec`] for `quickswap sweep drive`.
+const GRID_ARGS: [&str; 16] = [
+    "--workload",
+    "one_or_all",
+    "--k",
+    "8",
+    "--p1",
+    "0.9",
+    "--lambdas",
+    "2.0,3.0",
+    "--policies",
+    "msf,msfq:7",
+    "--completions",
+    "6000",
+    "--seed",
+    "42",
+    "--reps",
+    "3",
+];
+
+/// The paired (CRN) variant (6 shared-stream units, 3 policies each).
+fn paired_spec() -> SweepSpec {
+    SweepSpec {
+        policies: vec!["msf".into(), "msfq:7".into(), "fcfs".into()],
+        paired: true,
+        baseline: Some("msf".into()),
+        ..marginal_spec()
+    }
+}
+
+/// CLI spelling of [`paired_spec`] (`--baseline` implies `--paired`).
+const PAIRED_GRID_ARGS: [&str; 18] = [
+    "--workload",
+    "one_or_all",
+    "--k",
+    "8",
+    "--p1",
+    "0.9",
+    "--lambdas",
+    "2.0,3.0",
+    "--policies",
+    "msf,msfq:7,fcfs",
+    "--completions",
+    "6000",
+    "--seed",
+    "42",
+    "--reps",
+    "3",
+    "--baseline",
+    "msf",
+];
+
+fn tmp_path(name: &str) -> PathBuf {
+    let mut p = std::env::temp_dir();
+    p.push(format!("qs-elastic-{}-{name}", std::process::id()));
+    p
+}
+
+/// Render marginal points exactly as `--out` would and return the bytes
+/// (the acceptance criterion is CSV byte-identity, so the comparison
+/// goes through the real writer).
+fn csv_bytes_marginal(spec: &SweepSpec, pts: &[Point], name: &str) -> Vec<u8> {
+    let p = tmp_path(name);
+    write_sweep_csv(p.to_str().unwrap(), pts, &spec.class_names()).unwrap();
+    let bytes = std::fs::read(&p).unwrap();
+    let _ = std::fs::remove_file(&p);
+    bytes
+}
+
+/// Render a paired sweep's marginal and Δ CSVs and return both byte
+/// vectors.
+fn csv_bytes_paired(spec: &SweepSpec, sweep: &PairedSweep, name: &str) -> (Vec<u8>, Vec<u8>) {
+    let p = tmp_path(name);
+    let d = tmp_path(&format!("{name}.diff"));
+    write_sweep_csv(p.to_str().unwrap(), &sweep.points, &spec.class_names()).unwrap();
+    write_diff_csv(d.to_str().unwrap(), &sweep.diffs, &spec.class_names()).unwrap();
+    let bytes = (std::fs::read(&p).unwrap(), std::fs::read(&d).unwrap());
+    let _ = std::fs::remove_file(&p);
+    let _ = std::fs::remove_file(&d);
+    bytes
+}
+
+/// Spawn the real `quickswap sweep drive` binary with a journal and
+/// read the bound address off its stderr announcement line. The stderr
+/// reader is returned so the pipe stays open for the driver's lifetime
+/// (the 64 KiB pipe buffer absorbs its later messages unread).
+fn spawn_driver(
+    grid_args: &[&str],
+    journal: &Path,
+) -> (std::process::Child, String, BufReader<std::process::ChildStderr>) {
+    let mut cmd = std::process::Command::new(env!("CARGO_BIN_EXE_quickswap"));
+    cmd.args(["sweep", "drive", "--addr", "127.0.0.1:0", "--journal"])
+        .arg(journal)
+        .args(grid_args)
+        .stdout(std::process::Stdio::null())
+        .stderr(std::process::Stdio::piped());
+    let mut child = cmd.spawn().expect("spawn driver subprocess");
+    let mut stderr = BufReader::new(child.stderr.take().unwrap());
+    let mut line = String::new();
+    let addr = loop {
+        line.clear();
+        if stderr.read_line(&mut line).unwrap() == 0 {
+            panic!("driver exited before announcing its address");
+        }
+        if let Some(rest) = line.trim().strip_prefix("qs-sweep driver listening on ") {
+            break rest.to_string();
+        }
+    };
+    (child, addr, stderr)
+}
+
+/// Raw-proto worker: claim and honestly complete exactly `k` units of a
+/// single-spec queue, then disconnect. Each ack arrives only after the
+/// driver journaled the unit, so `k` acks ⟹ exactly `k` records on
+/// disk when the driver is killed right after.
+fn complete_k_units(addr: &str, spec: &SweepSpec, k: usize) {
+    let grid = spec.grid();
+    let paired = spec.paired_grid().unwrap();
+    let stream = TcpStream::connect(addr).unwrap();
+    let mut w = stream.try_clone().unwrap();
+    let mut r = BufReader::new(stream);
+    writeln!(w, "{}", proto::msg_hello(None)).unwrap();
+    let mut line = String::new();
+    r.read_line(&mut line).unwrap();
+    proto::parse_specs(&proto::parse_line(&line).unwrap()).unwrap();
+    let mut cache = None;
+    for _ in 0..k {
+        writeln!(w, "{}", proto::msg_next()).unwrap();
+        line.clear();
+        r.read_line(&mut line).unwrap();
+        let msg = proto::parse_line(&line).unwrap();
+        assert_eq!(proto::op_of(&msg), Some("unit"));
+        let u = proto::id_of(&msg).unwrap();
+        let reply = match &paired {
+            Some(pg) => {
+                let (li, _) = pg.point_rep(u);
+                let wl = spec.workload.build(pg.lambdas[li]);
+                let run = run_paired_unit(pg, &wl, u, &mut cache);
+                proto::msg_paired_result(u, &run)
+            }
+            None => {
+                let (p, _) = grid.point_rep(u);
+                let wl = spec.workload.build(grid.pts[p].0);
+                let run = run_unit(&grid, &wl, u, &mut cache).unwrap();
+                proto::msg_result(u, &run)
+            }
+        };
+        writeln!(w, "{reply}").unwrap();
+        line.clear();
+        r.read_line(&mut line).unwrap();
+        assert_eq!(proto::op_of(&proto::parse_line(&line).unwrap()), Some("ok"));
+    }
+}
+
+/// Resume a single-spec journal with `n_workers` in-thread workers and
+/// return the finished report.
+fn resume(spec: &SweepSpec, journal: &Path, n_workers: usize) -> quickswap::sweep::ServeReport {
+    let driver = DriverBuilder::new()
+        .spec(spec)
+        .journal(journal)
+        .bind()
+        .unwrap();
+    let addr = driver.local_addr().to_string();
+    let dh = std::thread::spawn(move || driver.serve().unwrap());
+    let workers: Vec<_> = (0..n_workers)
+        .map(|_| {
+            let a = addr.clone();
+            std::thread::spawn(move || run_worker(&a).unwrap())
+        })
+        .collect();
+    let report = dh.join().unwrap();
+    for wkr in workers {
+        wkr.join().unwrap();
+    }
+    report
+}
+
+/// SIGKILL a marginal driver after 5 of 12 units, restart on the same
+/// journal, and require byte-identical CSVs to an uninterrupted run —
+/// with the 5 finished units served from disk, not rerun — for 1- and
+/// 2-worker resume topologies.
+#[test]
+fn sigkilled_driver_resumes_marginal_sweep_bit_identically() {
+    let spec = marginal_spec();
+    let total = spec.grid().n_units();
+    let reference = run_spec_local(&spec, 4);
+    let ref_csv = csv_bytes_marginal(&spec, &reference, "ref-marginal.csv");
+
+    let journal = tmp_path("kill-marginal.journal");
+    let _ = std::fs::remove_file(&journal);
+    let (mut child, addr, _stderr) = spawn_driver(&GRID_ARGS, &journal);
+    let k = 5;
+    complete_k_units(&addr, &spec, k);
+    child.kill().unwrap();
+    child.wait().unwrap();
+
+    // Snapshot the k-record journal so both resume topologies start
+    // from the same checkpoint.
+    let snapshot = tmp_path("kill-marginal.journal.copy");
+    std::fs::copy(&journal, &snapshot).unwrap();
+
+    for (n_workers, path) in [(1usize, &journal), (2usize, &snapshot)] {
+        let report = resume(&spec, path, n_workers);
+        assert_eq!(report.units_total, total);
+        assert_eq!(report.units_from_journal, k, "finished units must come from disk");
+        assert_eq!(report.units_executed, total - k, "journaled units must not rerun");
+        let pts = match report.outcomes.into_iter().next() {
+            Some(SpecOutcome::Marginal(pts)) => pts,
+            _ => panic!("expected a marginal outcome"),
+        };
+        let resumed = csv_bytes_marginal(&spec, &pts, "resumed-marginal.csv");
+        assert_eq!(ref_csv, resumed, "resumed CSV differs from uninterrupted run");
+    }
+    let _ = std::fs::remove_file(&journal);
+    let _ = std::fs::remove_file(&snapshot);
+}
+
+/// The paired (CRN) variant of the kill/resume contract: both the
+/// marginal and the Δ CSVs must be byte-identical after a SIGKILL +
+/// journal resume, across both resume topologies.
+#[test]
+fn sigkilled_driver_resumes_paired_sweep_bit_identically() {
+    let spec = paired_spec();
+    let reference = run_spec_paired_local(&spec, 4).unwrap();
+    let (ref_csv, ref_diff) = csv_bytes_paired(&spec, &reference, "ref-paired.csv");
+    let total = 6; // 2 λ × 3 shared-stream replications
+
+    let journal = tmp_path("kill-paired.journal");
+    let _ = std::fs::remove_file(&journal);
+    let (mut child, addr, _stderr) = spawn_driver(&PAIRED_GRID_ARGS, &journal);
+    let k = 3;
+    complete_k_units(&addr, &spec, k);
+    child.kill().unwrap();
+    child.wait().unwrap();
+
+    let snapshot = tmp_path("kill-paired.journal.copy");
+    std::fs::copy(&journal, &snapshot).unwrap();
+
+    for (n_workers, path) in [(1usize, &journal), (2usize, &snapshot)] {
+        let report = resume(&spec, path, n_workers);
+        assert_eq!(report.units_total, total);
+        assert_eq!(report.units_from_journal, k, "finished units must come from disk");
+        assert_eq!(report.units_executed, total - k, "journaled units must not rerun");
+        let sweep = match report.outcomes.into_iter().next() {
+            Some(SpecOutcome::Paired(sweep)) => sweep,
+            _ => panic!("expected a paired outcome"),
+        };
+        let (csv, diff) = csv_bytes_paired(&spec, &sweep, "resumed-paired.csv");
+        assert_eq!(ref_csv, csv, "resumed marginal CSV differs");
+        assert_eq!(ref_diff, diff, "resumed diff CSV differs");
+    }
+    let _ = std::fs::remove_file(&journal);
+    let _ = std::fs::remove_file(&snapshot);
+}
+
+/// A queue of mixed specs (marginal + paired) served concurrently from
+/// one pooled unit scheduler by two elastic workers: each outcome is
+/// byte-identical to its single-spec local run. Then the finished
+/// journal — with a torn garbage tail appended, as a crash would leave
+/// — resumes with NO workers at all: every unit is served from disk,
+/// the torn tail is dropped, and the outputs are byte-identical again.
+#[test]
+fn multi_spec_queue_serves_and_resumes_fully_from_journal() {
+    let m = marginal_spec();
+    let p = paired_spec();
+    let ref_m = csv_bytes_marginal(&m, &run_spec_local(&m, 4), "ref-multi-m.csv");
+    let (ref_p, ref_pd) =
+        csv_bytes_paired(&p, &run_spec_paired_local(&p, 4).unwrap(), "ref-multi-p.csv");
+
+    let journal = tmp_path("multi.journal");
+    let _ = std::fs::remove_file(&journal);
+    let driver = DriverBuilder::new()
+        .spec(&m)
+        .spec(&p)
+        .journal(&journal)
+        .bind()
+        .unwrap();
+    let addr = driver.local_addr().to_string();
+    let dh = std::thread::spawn(move || driver.serve().unwrap());
+    let workers: Vec<_> = (0..2)
+        .map(|_| {
+            let a = addr.clone();
+            std::thread::spawn(move || run_worker(&a).unwrap())
+        })
+        .collect();
+    let report = dh.join().unwrap();
+    let served: usize = workers.into_iter().map(|w| w.join().unwrap()).sum();
+    assert_eq!(served, 18, "12 marginal + 6 paired units, each acked once");
+    assert_eq!(report.units_total, 18);
+    assert_eq!(report.units_executed, 18);
+
+    let check = |outcomes: Vec<SpecOutcome>| {
+        let mut it = outcomes.into_iter();
+        match it.next() {
+            Some(SpecOutcome::Marginal(pts)) => {
+                assert_eq!(ref_m, csv_bytes_marginal(&m, &pts, "multi-m.csv"));
+            }
+            _ => panic!("spec 0 must pool as marginal"),
+        }
+        match it.next() {
+            Some(SpecOutcome::Paired(sweep)) => {
+                let (csv, diff) = csv_bytes_paired(&p, &sweep, "multi-p.csv");
+                assert_eq!(ref_p, csv);
+                assert_eq!(ref_pd, diff);
+            }
+            _ => panic!("spec 1 must pool as paired"),
+        }
+    };
+    check(report.outcomes);
+
+    // Crash artifact: a torn, newline-less tail after the last record.
+    let clean = std::fs::read(&journal).unwrap();
+    let mut torn = clean.clone();
+    torn.extend_from_slice(b"{\"n\":18,\"torn");
+    std::fs::write(&journal, &torn).unwrap();
+
+    let driver = DriverBuilder::new()
+        .spec(&m)
+        .spec(&p)
+        .journal(&journal)
+        .bind()
+        .unwrap();
+    let report = driver.serve().unwrap();
+    assert_eq!(report.units_from_journal, 18, "everything replays from disk");
+    assert_eq!(report.units_executed, 0, "no unit may rerun");
+    check(report.outcomes);
+    // The torn tail was truncated away on open.
+    assert_eq!(std::fs::read(&journal).unwrap(), clean);
+    let _ = std::fs::remove_file(&journal);
+}
+
+/// A worker joining after >50% of the grid is done picks up the
+/// remainder; the pooled result is byte-identical.
+#[test]
+fn late_joining_worker_finishes_the_sweep() {
+    let spec = marginal_spec();
+    let total = spec.grid().n_units();
+    let ref_csv = csv_bytes_marginal(&spec, &run_spec_local(&spec, 4), "ref-late.csv");
+    let driver = DriverBuilder::new().spec(&spec).bind().unwrap();
+    let addr = driver.local_addr().to_string();
+    let dh = std::thread::spawn(move || driver.serve().unwrap());
+
+    // First worker: completes half the grid, then leaves.
+    let half = total.div_ceil(2);
+    complete_k_units(&addr, &spec, half);
+
+    // Fresh worker joins mid-life and drains the rest.
+    let served = run_worker(&addr).unwrap();
+    let report = dh.join().unwrap();
+    assert_eq!(served, total - half);
+    assert_eq!(report.units_executed, total);
+    let pts = match report.outcomes.into_iter().next() {
+        Some(SpecOutcome::Marginal(pts)) => pts,
+        _ => panic!("expected a marginal outcome"),
+    };
+    assert_eq!(ref_csv, csv_bytes_marginal(&spec, &pts, "late.csv"));
+}
+
+/// Corruption is loud: a mangled record or a journal from a different
+/// sweep must fail with a clear "journal" error, never silently rerun;
+/// only the torn no-newline tail is forgiven (and truncated).
+#[test]
+fn journal_corruption_is_detected() {
+    let spec = marginal_spec();
+    let journal = tmp_path("corrupt.journal");
+    let _ = std::fs::remove_file(&journal);
+    // Produce a complete journal with an in-process drive.
+    {
+        let report = resume(&spec, &journal, 1);
+        assert_eq!(report.units_executed, report.units_total);
+    }
+    let clean = std::fs::read_to_string(&journal).unwrap();
+    assert_eq!(clean.lines().count(), 13, "header + 12 records");
+
+    // (a) A mangled mid-file record.
+    let corrupted: String = clean
+        .lines()
+        .enumerate()
+        .map(|(i, l)| {
+            let line = if i == 5 { "{\"not\":\"a record\"}" } else { l };
+            format!("{line}\n")
+        })
+        .collect();
+    std::fs::write(&journal, corrupted).unwrap();
+    let driver = DriverBuilder::new()
+        .spec(&spec)
+        .journal(&journal)
+        .bind()
+        .unwrap();
+    let err = driver.serve().unwrap_err();
+    assert!(err.to_string().contains("journal"), "unexpected error: {err}");
+
+    // (b) A journal belonging to a different sweep (same shape,
+    // different seed): byte-compared header ⇒ refused.
+    std::fs::write(&journal, &clean).unwrap();
+    let mut other = marginal_spec();
+    other.seed = 43;
+    let driver = DriverBuilder::new()
+        .spec(&other)
+        .journal(&journal)
+        .bind()
+        .unwrap();
+    let err = driver.serve().unwrap_err();
+    assert!(err.to_string().contains("journal"), "unexpected error: {err}");
+    let _ = std::fs::remove_file(&journal);
+}
+
+fn poll_status(w: &mut TcpStream, r: &mut BufReader<TcpStream>) -> Value {
+    writeln!(w, "{}", proto::msg_status_req()).unwrap();
+    let mut line = String::new();
+    r.read_line(&mut line).unwrap();
+    proto::parse_line(&line).unwrap()
+}
+
+/// The read-only status endpoint: per-spec progress counters plus
+/// pooled rows for every fully-replicated point, streamed over a
+/// persistent connection while the sweep runs.
+#[test]
+fn status_endpoint_reports_progress_and_pooled_rows() {
+    let spec = marginal_spec();
+    let reference = run_spec_local(&spec, 4);
+    let driver = DriverBuilder::new().spec(&spec).bind().unwrap();
+    let addr = driver.local_addr().to_string();
+    let dh = std::thread::spawn(move || driver.serve().unwrap());
+
+    // Monitor: handshakes like a worker, then polls `status` — the
+    // reply leaves the connection open, so one socket polls repeatedly.
+    let stream = TcpStream::connect(&addr).unwrap();
+    let mut w = stream.try_clone().unwrap();
+    let mut r = BufReader::new(stream);
+    writeln!(w, "{}", proto::msg_hello(None)).unwrap();
+    let mut line = String::new();
+    r.read_line(&mut line).unwrap();
+    proto::parse_specs(&proto::parse_line(&line).unwrap()).unwrap();
+
+    let s0 = poll_status(&mut w, &mut r);
+    assert_eq!(s0.get("op").and_then(|x| x.as_str()), Some("status"));
+    assert_eq!(s0.get("units_total").and_then(|x| x.as_u64()), Some(12));
+    assert_eq!(s0.get("units_done").and_then(|x| x.as_u64()), Some(0));
+    let specs0 = s0.get("specs").and_then(|x| x.as_arr()).unwrap();
+    assert_eq!(specs0.len(), 1);
+    assert_eq!(specs0[0].get("done").and_then(|x| x.as_u64()), Some(0));
+    assert_eq!(specs0[0].get("paired"), Some(&Value::Bool(false)));
+    let rows0 = specs0[0].get("rows").and_then(|x| x.as_arr()).unwrap();
+    assert!(rows0.is_empty(), "no point is fully replicated yet");
+
+    // Complete point 0's three replications (global units 0..3).
+    {
+        let grid = spec.grid();
+        let wl = spec.workload.build(grid.pts[0].0);
+        let mut cache = None;
+        let stream = TcpStream::connect(&addr).unwrap();
+        let mut rw = stream.try_clone().unwrap();
+        let mut rr = BufReader::new(stream);
+        writeln!(rw, "{}", proto::msg_hello(None)).unwrap();
+        let mut l = String::new();
+        rr.read_line(&mut l).unwrap();
+        for u in 0..3 {
+            let run = run_unit(&grid, &wl, u, &mut cache).unwrap();
+            writeln!(rw, "{}", proto::msg_result(u, &run)).unwrap();
+            l.clear();
+            rr.read_line(&mut l).unwrap();
+            assert_eq!(proto::op_of(&proto::parse_line(&l).unwrap()), Some("ok"));
+        }
+    }
+
+    let s1 = poll_status(&mut w, &mut r);
+    assert_eq!(s1.get("units_done").and_then(|x| x.as_u64()), Some(3));
+    assert_eq!(s1.get("units_executed").and_then(|x| x.as_u64()), Some(3));
+    assert_eq!(s1.get("units_from_journal").and_then(|x| x.as_u64()), Some(0));
+    let specs1 = s1.get("specs").and_then(|x| x.as_arr()).unwrap();
+    assert_eq!(specs1[0].get("done").and_then(|x| x.as_u64()), Some(3));
+    let rows = specs1[0].get("rows").and_then(|x| x.as_arr()).unwrap();
+    assert_eq!(rows.len(), 1, "exactly point 0 is fully pooled");
+    assert_eq!(rows[0].get("policy").and_then(|x| x.as_str()), Some("msf"));
+    assert_eq!(rows[0].get("reps").and_then(|x| x.as_u64()), Some(3));
+    // The mid-sweep row uses the same replication-order pooling as the
+    // final CSV: E[T] round-trips to the reference bits (shortest-
+    // roundtrip f64 formatting).
+    let et = rows[0].get("et").and_then(|x| x.as_f64()).unwrap();
+    assert_eq!(et.to_bits(), reference[0].result.mean_t_all.to_bits());
+    drop((w, r));
+
+    // Drain the sweep so the driver exits cleanly.
+    run_worker(&addr).unwrap();
+    let report = dh.join().unwrap();
+    assert_eq!(report.units_total, 12);
+}

@@ -20,7 +20,7 @@
 
 use quickswap::experiments::{run_paired_unit, DiffPoint, PairedGrid, Point};
 use quickswap::sim::{Engine, SimConfig, SimResult, UnitStats};
-use quickswap::sweep::{run_spec_paired_local, run_worker, Driver, SweepSpec, WorkloadSpec};
+use quickswap::sweep::{run_spec_paired_local, run_worker, DriverBuilder, SweepSpec, WorkloadSpec};
 use quickswap::util::rng::Rng;
 use quickswap::workload::{borg::borg_workload, MaterializedStream, Workload};
 
@@ -205,9 +205,15 @@ fn sharded_paired_sweep_is_bit_identical_to_local() {
     assert_eq!(local.points.len(), 6, "2 λ × 3 policies");
     assert_eq!(local.diffs.len(), 4, "2 λ × 2 non-baseline policies");
     for n_workers in [1usize, 2] {
-        let driver = Driver::bind(&spec, "127.0.0.1:0").unwrap();
+        let driver = DriverBuilder::new().spec(&spec).bind().unwrap();
         let addr = driver.local_addr().to_string();
-        let dh = std::thread::spawn(move || driver.run_paired().unwrap());
+        let dh = std::thread::spawn(move || {
+            let report = driver.serve().unwrap();
+            match report.outcomes.into_iter().next() {
+                Some(quickswap::sweep::SpecOutcome::Paired(sweep)) => sweep,
+                _ => panic!("expected one paired outcome"),
+            }
+        });
         let workers: Vec<_> = (0..n_workers)
             .map(|_| {
                 let a = addr.clone();

@@ -5,10 +5,25 @@
 
 use quickswap::experiments::{run_unit, sweep_with, Point, SweepOpts};
 use quickswap::sweep::{
-    proto, run_spec_local, run_worker, run_worker_with_token, Driver, SweepSpec, WorkloadSpec,
+    proto, run_spec_local, run_worker, run_worker_with_token, Driver, DriverBuilder, SpecOutcome,
+    SweepSpec, WorkloadSpec,
 };
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
+
+/// Serve a single-marginal-spec driver to completion and unwrap its
+/// points (the common shape of these tests).
+fn serve_marginal(driver: Driver) -> Vec<Point> {
+    let report = driver.serve().unwrap();
+    assert_eq!(
+        report.units_total,
+        report.units_from_journal + report.units_executed
+    );
+    match report.outcomes.into_iter().next() {
+        Some(SpecOutcome::Marginal(pts)) => pts,
+        _ => panic!("expected one marginal outcome"),
+    }
+}
 
 fn smoke_spec() -> SweepSpec {
     SweepSpec {
@@ -107,9 +122,9 @@ fn sharded_matches_inprocess_across_worker_counts() {
     let base = run_spec_local(&spec, 4);
     assert_eq!(base.len(), 4);
     for n_workers in [1usize, 3] {
-        let driver = Driver::bind(&spec, "127.0.0.1:0").unwrap();
+        let driver = DriverBuilder::new().spec(&spec).bind().unwrap();
         let addr = driver.local_addr().to_string();
-        let dh = std::thread::spawn(move || driver.run().unwrap());
+        let dh = std::thread::spawn(move || serve_marginal(driver));
         let workers: Vec<_> = (0..n_workers)
             .map(|_| {
                 let a = addr.clone();
@@ -123,17 +138,17 @@ fn sharded_matches_inprocess_across_worker_counts() {
     }
 }
 
-/// One spawned-subprocess worker (the real `quickswap sweep --worker`
+/// One spawned-subprocess worker (the real `quickswap sweep work`
 /// binary) against an in-process driver.
 #[test]
 fn subprocess_worker_matches_inprocess() {
     let spec = smoke_spec();
     let base = run_spec_local(&spec, 4);
-    let driver = Driver::bind(&spec, "127.0.0.1:0").unwrap();
+    let driver = DriverBuilder::new().spec(&spec).bind().unwrap();
     let addr = driver.local_addr().to_string();
-    let dh = std::thread::spawn(move || driver.run().unwrap());
+    let dh = std::thread::spawn(move || serve_marginal(driver));
     let child = std::process::Command::new(env!("CARGO_BIN_EXE_quickswap"))
-        .args(["sweep", "--worker", &addr])
+        .args(["sweep", "work", "--addr", &addr])
         .stdout(std::process::Stdio::null())
         .stderr(std::process::Stdio::null())
         .spawn()
@@ -150,9 +165,9 @@ fn subprocess_worker_matches_inprocess() {
 fn killed_worker_units_are_reissued() {
     let spec = smoke_spec();
     let base = run_spec_local(&spec, 4);
-    let driver = Driver::bind(&spec, "127.0.0.1:0").unwrap();
+    let driver = DriverBuilder::new().spec(&spec).bind().unwrap();
     let addr = driver.local_addr().to_string();
-    let dh = std::thread::spawn(move || driver.run().unwrap());
+    let dh = std::thread::spawn(move || serve_marginal(driver));
 
     // Fake worker: handshake, claim one unit, vanish without a result.
     {
@@ -162,7 +177,7 @@ fn killed_worker_units_are_reissued() {
         writeln!(w, "{}", proto::msg_hello(None)).unwrap();
         let mut line = String::new();
         r.read_line(&mut line).unwrap();
-        proto::parse_spec(&proto::parse_line(&line).unwrap()).unwrap();
+        proto::parse_specs(&proto::parse_line(&line).unwrap()).unwrap();
         writeln!(w, "{}", proto::msg_next()).unwrap();
         line.clear();
         r.read_line(&mut line).unwrap();
@@ -181,18 +196,20 @@ fn killed_worker_units_are_reissued() {
 
 /// A hung-but-connected worker holding a claimed unit past the
 /// assignment deadline (`QS_UNIT_TIMEOUT_SECS` /
-/// `Driver::with_unit_timeout`): the unit is requeued to the next
+/// `DriverBuilder::unit_timeout`): the unit is requeued to the next
 /// `next` request and the sweep converges bit-identically — the
 /// heterogeneous-pacing fault model.
 #[test]
 fn timed_out_units_are_reissued() {
     let spec = smoke_spec();
     let base = run_spec_local(&spec, 4);
-    let driver = Driver::bind(&spec, "127.0.0.1:0")
-        .unwrap()
-        .with_unit_timeout(Some(std::time::Duration::from_millis(50)));
+    let driver = DriverBuilder::new()
+        .spec(&spec)
+        .unit_timeout(Some(std::time::Duration::from_millis(50)))
+        .bind()
+        .unwrap();
     let addr = driver.local_addr().to_string();
-    let dh = std::thread::spawn(move || driver.run().unwrap());
+    let dh = std::thread::spawn(move || serve_marginal(driver));
 
     // Stalling worker: handshake, claim one unit, then hold the
     // connection open forever without reporting.
@@ -202,7 +219,7 @@ fn timed_out_units_are_reissued() {
     writeln!(w, "{}", proto::msg_hello(None)).unwrap();
     let mut line = String::new();
     r.read_line(&mut line).unwrap();
-    proto::parse_spec(&proto::parse_line(&line).unwrap()).unwrap();
+    proto::parse_specs(&proto::parse_line(&line).unwrap()).unwrap();
     writeln!(w, "{}", proto::msg_next()).unwrap();
     line.clear();
     r.read_line(&mut line).unwrap();
@@ -229,9 +246,9 @@ fn duplicate_results_are_deduped() {
     let spec = smoke_spec();
     let base = run_spec_local(&spec, 4);
     let grid = spec.grid();
-    let driver = Driver::bind(&spec, "127.0.0.1:0").unwrap();
+    let driver = DriverBuilder::new().spec(&spec).bind().unwrap();
     let addr = driver.local_addr().to_string();
-    let dh = std::thread::spawn(move || driver.run().unwrap());
+    let dh = std::thread::spawn(move || serve_marginal(driver));
 
     // Rogue client: computes unit 0 honestly but reports it twice,
     // without ever claiming it via `next`.
@@ -262,18 +279,20 @@ fn duplicate_results_are_deduped() {
 }
 
 /// With a shared secret armed (`QS_SWEEP_TOKEN` /
-/// `Driver::with_auth_token`), workers presenting the wrong token — or
-/// none — are rejected before the spec is revealed, while a
+/// `DriverBuilder::auth_token`), workers presenting the wrong token —
+/// or none — are rejected before the spec queue is revealed, while a
 /// matching-token worker completes the sweep bit-identically.
 #[test]
 fn auth_token_gates_workers() {
     let spec = smoke_spec();
     let base = run_spec_local(&spec, 4);
-    let driver = Driver::bind(&spec, "127.0.0.1:0")
-        .unwrap()
-        .with_auth_token(Some("sesame".into()));
+    let driver = DriverBuilder::new()
+        .spec(&spec)
+        .auth_token(Some("sesame".into()))
+        .bind()
+        .unwrap();
     let addr = driver.local_addr().to_string();
-    let dh = std::thread::spawn(move || driver.run().unwrap());
+    let dh = std::thread::spawn(move || serve_marginal(driver));
 
     // Wrong token: rejected with an err line, no spec leaked.
     let err = run_worker_with_token(&addr, Some("wrong")).unwrap_err();
@@ -294,7 +313,7 @@ fn auth_token_gates_workers() {
         r.read_line(&mut line).unwrap();
         let reply = proto::parse_line(&line).unwrap();
         assert_eq!(proto::err_of(&reply), Some("auth failed"));
-        assert!(proto::parse_spec(&reply).is_err(), "spec must not leak");
+        assert!(proto::parse_specs(&reply).is_err(), "specs must not leak");
     }
 
     // The right token serves the whole grid, bit-identical as ever.
@@ -311,12 +330,35 @@ fn auth_token_gates_workers() {
 fn open_driver_accepts_token_bearing_worker() {
     let spec = smoke_spec();
     let base = run_spec_local(&spec, 4);
+    let driver = DriverBuilder::new()
+        .spec(&spec)
+        .auth_token(None)
+        .bind()
+        .unwrap();
+    let addr = driver.local_addr().to_string();
+    let dh = std::thread::spawn(move || serve_marginal(driver));
+    let served = run_worker_with_token(&addr, Some("surplus-secret")).unwrap();
+    assert_eq!(served, spec.grid().n_units());
+    let pts = dh.join().unwrap();
+    assert_points_bit_identical(&base, &pts);
+}
+
+/// The pre-builder `Driver::bind`/`with_*`/`run` surface still works as
+/// deprecated shims for one release, producing the same bits as the
+/// builder path — the mechanical-migration guarantee for downstream
+/// call sites.
+#[test]
+#[allow(deprecated)]
+fn deprecated_driver_shims_still_serve() {
+    let spec = smoke_spec();
+    let base = run_spec_local(&spec, 4);
     let driver = Driver::bind(&spec, "127.0.0.1:0")
         .unwrap()
-        .with_auth_token(None);
+        .with_unit_timeout(None)
+        .with_auth_token(Some("sesame".into()));
     let addr = driver.local_addr().to_string();
     let dh = std::thread::spawn(move || driver.run().unwrap());
-    let served = run_worker_with_token(&addr, Some("surplus-secret")).unwrap();
+    let served = run_worker_with_token(&addr, Some("sesame")).unwrap();
     assert_eq!(served, spec.grid().n_units());
     let pts = dh.join().unwrap();
     assert_points_bit_identical(&base, &pts);

@@ -8,13 +8,15 @@
 # `sim_server_filling`, the ladder-schedule twins `sim_fcfs:ladder` /
 # `sim_borg_adaptive_qs:ladder`, the CRN shared-stream target
 # `sim_paired_shared_stream`, and the unitless `paired_ci_width_ratio`)
-# fail the run when they regress >25% below the committed baseline, or
+# fail the run when they regress >30% below the committed baseline, or
 # when they are missing from the fresh artifact entirely (a dropped
 # scenario must not pass silently); everything else — and the
-# [0.75, 1.0) band on the gated targets — is warn-only, because
-# smoke-scale numbers on shared CI runners jitter. A committed stub
-# (empty results) or a scale mismatch skips the gate with a note
-# rather than failing.
+# [0.70, 1.0) band on the gated targets — is warn-only, because
+# smoke-scale numbers on shared CI runners jitter. The committed
+# baseline carries measured rates from a CI artifact, so the band is
+# real headroom, not padding on an estimate. A committed stub (empty
+# results) or a scale mismatch skips the gate with a note rather than
+# failing.
 set -euo pipefail
 
 if [ $# -ne 2 ]; then
@@ -63,8 +65,8 @@ for name in sorted(set(base) | set(new)):
         continue
     ratio = new[name] / base[name]
     flag = ""
-    if name in GATED and ratio < 0.75:
-        flag = "  <-- FAIL: >25% regression"
+    if name in GATED and ratio < 0.70:
+        flag = "  <-- FAIL: >30% regression"
         failures.append(f"{name} at {ratio:.2f}x of baseline")
     elif ratio < 1.0:
         flag = "  (below baseline - warn only)"

@@ -1,12 +1,22 @@
 #!/usr/bin/env bash
-# Sweep-sharding smoke: run the same smoke grid twice — once in-process,
-# once as 1 driver + 2 localhost worker processes — and require the two
-# result CSVs to be byte-identical (the sharding determinism contract;
-# see EXPERIMENTS.md §Sharded sweeps). A second leg repeats the exercise
-# in paired (CRN) mode with `--paired --baseline msf`: the marginal CSV
-# and the derived Δ CSV (`*.diff.csv`) must both be byte-identical
-# between the in-process and sharded runs. CI runs this as the
-# `sweep-smoke` job.
+# Sweep-service smoke: exercises the elastic sweep service end to end
+# (see EXPERIMENTS.md §Elastic sweep service).
+#
+#   1. Sharding determinism: the same smoke grid in-process (`sweep run`)
+#      and as 1 driver + 2 localhost workers (`sweep drive` / `sweep
+#      work`) must produce byte-identical CSVs.
+#   2. Paired (CRN) leg: the same exercise with `--paired --baseline
+#      msf`, marginal + Δ CSVs both byte-identical — driven through the
+#      legacy `--driver`/bare-`sweep` spellings to smoke the hidden
+#      aliases.
+#   3. Kill-and-resume leg: a journaled driver is SIGKILLed after ≥5 of
+#      72 units, then restarted on the same journal with 2 workers; the
+#      resumed CSV must be byte-identical to an uninterrupted run and
+#      the resume log must show units served from the journal. The
+#      `sweep status` endpoint is probed for totals and used to pace the
+#      kill.
+#
+# CI runs this as the `sweep-smoke` job.
 #
 # Usage: scripts/sweep_smoke.sh
 set -euo pipefail
@@ -29,8 +39,18 @@ mkdir -p "$OUT"
 GRID=(--workload one_or_all --k 8 --p1 0.9 --lambdas 2.0,3.0
       --policies msf,msfq:7,fcfs --completions 6000 --seed 42 --reps 3)
 
+# The kill-and-resume grid: same shape at 12 replications (72 units)
+# and a 10× unit budget, so a single worker reliably stays mid-sweep
+# long enough for the status-paced kill to land.
+KGRID=(--workload one_or_all --k 8 --p1 0.9 --lambdas 2.0,3.0
+       --policies msf,msfq:7,fcfs --completions 60000 --seed 42 --reps 12)
+
 DRIVER_PID=""
-cleanup() { [ -n "$DRIVER_PID" ] && kill "$DRIVER_PID" 2>/dev/null || true; }
+WORKER_PID=""
+cleanup() {
+    [ -n "$WORKER_PID" ] && kill "$WORKER_PID" 2>/dev/null || true
+    [ -n "$DRIVER_PID" ] && kill "$DRIVER_PID" 2>/dev/null || true
+}
 trap cleanup EXIT
 
 # Wait for a backgrounded driver to print its bound address to its log.
@@ -55,7 +75,9 @@ wait_for_addr() {
 }
 
 # Run the sharded twin of an in-process run: driver + 2 workers.
-# $1 = log file, remaining args = the full sweep command line.
+# $1 = log file, remaining args = the full driver command line. If the
+# driver's journal is already complete it exits before the workers can
+# connect, so worker failures are tolerated.
 run_sharded() {
     local log=$1
     shift
@@ -65,12 +87,12 @@ run_sharded() {
     local addr
     addr=$(wait_for_addr "$log" "$DRIVER_PID")
     echo "driver at $addr"
-    "$BIN" sweep --worker "$addr" &
+    "$BIN" sweep work --addr "$addr" &
     local w1=$!
-    "$BIN" sweep --worker "$addr" &
+    "$BIN" sweep work --addr "$addr" &
     local w2=$!
-    wait "$w1"
-    wait "$w2"
+    wait "$w1" || true
+    wait "$w2" || true
     wait "$DRIVER_PID"
     DRIVER_PID=""
 }
@@ -85,19 +107,19 @@ require_identical() {
 }
 
 echo "== in-process reference run =="
-"$BIN" sweep "${GRID[@]}" --out "$OUT/sweep_inproc.csv"
+"$BIN" sweep run "${GRID[@]}" --out "$OUT/sweep_inproc.csv"
 
 echo "== sharded run: driver + 2 workers =="
 run_sharded "$OUT/sweep_driver.log" \
-    "$BIN" sweep "${GRID[@]}" --driver 127.0.0.1:0 --out "$OUT/sweep_sharded.csv"
+    "$BIN" sweep drive "${GRID[@]}" --addr 127.0.0.1:0 --out "$OUT/sweep_sharded.csv"
 
 echo "== diff =="
 require_identical "$OUT/sweep_inproc.csv" "$OUT/sweep_sharded.csv"
 
-echo "== paired (CRN) in-process reference run =="
+echo "== paired (CRN) in-process reference run (legacy bare-sweep alias) =="
 "$BIN" sweep "${GRID[@]}" --paired --baseline msf --out "$OUT/sweep_paired_inproc.csv"
 
-echo "== paired (CRN) sharded run: driver + 2 workers =="
+echo "== paired (CRN) sharded run: driver + 2 workers (legacy --driver alias) =="
 run_sharded "$OUT/sweep_paired_driver.log" \
     "$BIN" sweep "${GRID[@]}" --paired --baseline msf --driver 127.0.0.1:0 \
     --out "$OUT/sweep_paired_sharded.csv"
@@ -106,6 +128,65 @@ echo "== paired diff =="
 require_identical "$OUT/sweep_paired_inproc.csv" "$OUT/sweep_paired_sharded.csv"
 require_identical "$OUT/sweep_paired_inproc.diff.csv" "$OUT/sweep_paired_sharded.diff.csv"
 
+echo "== kill-and-resume leg: uninterrupted reference =="
+"$BIN" sweep run "${KGRID[@]}" --out "$OUT/sweep_kill_ref.csv"
+
+echo "== kill-and-resume leg: journaled driver, SIGKILL mid-sweep =="
+JOURNAL=$OUT/sweep_resume.journal
+rm -f "$JOURNAL" "$OUT/sweep_kill_driver.log"
+"$BIN" sweep drive "${KGRID[@]}" --addr 127.0.0.1:0 --journal "$JOURNAL" \
+    --out "$OUT/sweep_resumed.csv" 2> "$OUT/sweep_kill_driver.log" &
+DRIVER_PID=$!
+ADDR=$(wait_for_addr "$OUT/sweep_kill_driver.log" "$DRIVER_PID")
+echo "driver at $ADDR"
+
+# Status probe: totals are visible before any unit completes.
+"$BIN" sweep status --addr "$ADDR" | tee "$OUT/sweep_status.json"
+grep -q '"units_total":72' "$OUT/sweep_status.json"
+echo "ok: status endpoint reports 72 total units"
+
+# One worker chews through the grid; poll status until ≥5 units are
+# done, then SIGKILL the driver mid-sweep. Every acked unit is already
+# journaled, so ≥5 records survive the kill.
+"$BIN" sweep work --addr "$ADDR" 2>/dev/null &
+WORKER_PID=$!
+DONE=""
+for _ in $(seq 1 400); do
+    kill -0 "$DRIVER_PID" 2>/dev/null || break
+    DONE=$("$BIN" sweep status --addr "$ADDR" 2>/dev/null \
+        | sed -n 's/.*"units_done":\([0-9]*\).*/\1/p') || DONE=""
+    [ -n "$DONE" ] && [ "$DONE" -ge 5 ] && break
+    sleep 0.05
+done
+if kill -9 "$DRIVER_PID" 2>/dev/null; then
+    echo "SIGKILLed driver at ${DONE:-?} completed units"
+else
+    # The worker outran the poll loop: the journal is complete, which
+    # still exercises resume (everything served from disk).
+    echo "driver finished before the kill; resuming from a complete journal"
+fi
+wait "$DRIVER_PID" 2>/dev/null || true
+DRIVER_PID=""
+kill "$WORKER_PID" 2>/dev/null || true
+wait "$WORKER_PID" 2>/dev/null || true
+WORKER_PID=""
+
+echo "== kill-and-resume leg: restart on the journal, driver + 2 workers =="
+run_sharded "$OUT/sweep_resume_driver.log" \
+    "$BIN" sweep drive "${KGRID[@]}" --addr 127.0.0.1:0 --journal "$JOURNAL" \
+    --out "$OUT/sweep_resumed.csv"
+
+echo "== kill-and-resume diff =="
+require_identical "$OUT/sweep_kill_ref.csv" "$OUT/sweep_resumed.csv"
+FROM_JOURNAL=$(sed -n 's/.*, \([0-9]*\) from journal.*/\1/p' "$OUT/sweep_resume_driver.log")
+if [ -z "$FROM_JOURNAL" ] || [ "$FROM_JOURNAL" -lt 5 ]; then
+    echo "error: resume served ${FROM_JOURNAL:-0} units from the journal (expected >=5)" >&2
+    cat "$OUT/sweep_resume_driver.log" >&2
+    exit 1
+fi
+echo "ok: resume served $FROM_JOURNAL units from the journal without rerunning them"
+
 trap - EXIT
 echo "sweep smoke OK: sharded (2 workers) == in-process for the plain grid" \
-     "and the paired (CRN) grid, marginal + Δ CSVs byte-identical"
+     "and the paired (CRN) grid, and a SIGKILLed journaled driver resumed" \
+     "to a byte-identical CSV"
