@@ -29,7 +29,7 @@ use quickswap::workload::{borg::borg_workload, MaterializedStream, SyntheticSour
 /// One replication on a reused engine; returns events per wall second.
 fn events_per_sec(engine: &mut Engine, wl: &Workload, policy: &str, seed: u64) -> f64 {
     engine.reset();
-    let mut pol = quickswap::policy::by_name(policy, wl).unwrap();
+    let mut pol = quickswap::policy::build(&policy.parse().unwrap(), wl).unwrap();
     let mut src = SyntheticSource::new(wl.clone());
     let mut rng = Rng::new(seed);
     let r = engine.run(&mut src, pol.as_mut(), &mut rng);
@@ -49,7 +49,7 @@ fn paired_pass(
     let (mut events, mut wall) = (0u64, 0.0f64);
     for policy in policies {
         engine.reset();
-        let mut pol = quickswap::policy::by_name(policy, wl).unwrap();
+        let mut pol = quickswap::policy::build(&policy.parse().unwrap(), wl).unwrap();
         // Replay never consumes the engine-side RNG; seeded for parity.
         let mut rng = Rng::new(seed);
         let mut cursor = stream.cursor();
@@ -164,7 +164,7 @@ fn main() {
         let (mut ev, mut wall) = (0u64, 0.0f64);
         for policy in CRN_POLICIES {
             engine.reset();
-            let mut pol = quickswap::policy::by_name(policy, &one_or_all).unwrap();
+            let mut pol = quickswap::policy::build(&policy.parse().unwrap(), &one_or_all).unwrap();
             let mut src = SyntheticSource::new(one_or_all.clone());
             let mut rng = Rng::new(7);
             let r = engine.run(&mut src, pol.as_mut(), &mut rng);
@@ -339,14 +339,17 @@ fn main() {
             muk: 1.0,
         },
         lambdas: vec![7.5],
-        policies: vec!["msf".into(), "msfq:31".into()],
+        policies: vec![
+            quickswap::policy::PolicyId::Msf,
+            quickswap::policy::PolicyId::Msfq(Some(31)),
+        ],
         target_completions: completions,
         warmup_completions: completions / 5,
         batch: 1000,
         seed: 20250710,
         replications: 4,
         paired: true,
-        baseline: Some("msf".into()),
+        baseline: Some(quickswap::policy::PolicyId::Msf),
     };
     let sweep = run_spec_paired_local(&crn_spec, 1).expect("paired sweep");
     let d = &sweep.diffs[0];

@@ -17,12 +17,12 @@ fn main() {
         wl.k,
         wl.lambda_critical_floored()
     );
-    let heavy_rate: f64 = wl.classes.iter().filter(|c| c.need >= 512).map(|c| c.rate).sum();
+    let heavy_rate: f64 = wl.classes.iter().filter(|c| c.need() >= 512).map(|c| c.rate).sum();
     println!(
         "heavy group: {:.3}% of jobs, {:.1}% of load\n",
         100.0 * heavy_rate / wl.total_rate(),
         100.0 * (0..26)
-            .filter(|&c| wl.classes[c].need >= 512)
+            .filter(|&c| wl.classes[c].need() >= 512)
             .map(|c| wl.rho_class(c))
             .sum::<f64>()
             / (0..26).map(|c| wl.rho_class(c)).sum::<f64>()

@@ -39,7 +39,7 @@ fn serve_trace(
     trace: &Trace,
     tune_at_end: bool,
 ) -> anyhow::Result<(f64, f64, Option<u32>)> {
-    let pol = quickswap::policy::by_name(policy, wl)?;
+    let pol = quickswap::policy::build(&policy.parse()?, wl)?;
     let coord = Coordinator::spawn(
         wl,
         pol,

@@ -5,7 +5,8 @@
 //! Run: `cargo run --release --example quickstart`
 
 use quickswap::analysis::{analyze, MsfqParams};
-use quickswap::sim::{run_named, SimConfig};
+use quickswap::policy::PolicyId;
+use quickswap::sim::{run_policy, SimConfig};
 use quickswap::workload::Workload;
 
 fn main() -> anyhow::Result<()> {
@@ -20,8 +21,13 @@ fn main() -> anyhow::Result<()> {
     );
 
     let cfg = SimConfig::default().with_completions(400_000);
-    for policy in ["fcfs", "first-fit", "msf", "msfq:31"] {
-        let r = run_named(&wl, policy, &cfg, 42)?;
+    for policy in [
+        PolicyId::Fcfs,
+        PolicyId::FirstFit,
+        PolicyId::Msf,
+        PolicyId::Msfq(Some(31)),
+    ] {
+        let r = run_policy(&wl, &policy, &cfg, 42)?;
         println!("{}", r.summary());
     }
 

@@ -341,7 +341,7 @@ mod tests {
         let sol = solve(k, 3, lambda, 96, 48);
         let wl = crate::workload::Workload::one_or_all(k, lambda, 0.9, 1.0, 1.0);
         let cfg = crate::sim::SimConfig::quick();
-        let r = crate::sim::run_named(&wl, "msfq:3", &cfg, 42).unwrap();
+        let r = crate::sim::run_policy(&wl, &"msfq:3".parse().unwrap(), &cfg, 42).unwrap();
         let rel = (r.mean_t_all - sol.et).abs() / sol.et;
         assert!(
             rel < 0.05,

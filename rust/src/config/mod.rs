@@ -3,16 +3,17 @@
 //! reproducible (`quickswap simulate --config exp.json`).
 
 use crate::dist::Dist;
+use crate::policy::PolicyId;
 use crate::sim::SimConfig;
 use crate::util::json::Value;
-use crate::workload::{ClassSpec, Workload};
+use crate::workload::{ClassSpec, ResourceVec, Workload};
 
 /// Declarative experiment: a workload, a set of policies, run controls.
 #[derive(Clone, Debug)]
 pub struct ExperimentConfig {
     pub name: String,
     pub workload: Workload,
-    pub policies: Vec<String>,
+    pub policies: Vec<PolicyId>,
     pub sim: SimConfig,
     pub seed: u64,
     pub replications: u32,
@@ -30,15 +31,17 @@ impl ExperimentConfig {
             v.get("workload")
                 .ok_or_else(|| anyhow::anyhow!("missing 'workload'"))?,
         )?;
-        let policies = v
-            .get("policies")
-            .and_then(|x| x.as_arr())
-            .map(|arr| {
-                arr.iter()
-                    .filter_map(|p| p.as_str().map(|s| s.to_string()))
-                    .collect()
-            })
-            .unwrap_or_else(|| vec!["msfq".to_string()]);
+        let policies = match v.get("policies").and_then(|x| x.as_arr()) {
+            Some(arr) => arr
+                .iter()
+                .map(|p| {
+                    p.as_str()
+                        .ok_or_else(|| anyhow::anyhow!("non-string policy"))
+                        .and_then(PolicyId::parse)
+                })
+                .collect::<anyhow::Result<Vec<PolicyId>>>()?,
+            None => vec![PolicyId::Msfq(None)],
+        };
         let mut sim = SimConfig::default();
         if let Some(s) = v.get("sim") {
             if let Some(t) = s.get("target_completions").and_then(|x| x.as_u64()) {
@@ -80,7 +83,11 @@ impl ExperimentConfig {
 /// Workload spec:
 /// `{"kind":"one_or_all","k":32,"lambda":7.5,"p1":0.9,"mu1":1,"muk":1}`,
 /// `{"kind":"four_class","lambda":4.0}`, `{"kind":"borg","lambda":4.0}`,
-/// or `{"kind":"custom","k":8,"classes":[{"need":1,"rate":1.0,"mean":1.0}]}`.
+/// `{"kind":"multires","k":16,"mem":64,"lambda":4.0}`, or
+/// `{"kind":"custom","k":8,"classes":[{"need":1,"rate":1.0,"mean":1.0}]}`.
+/// Custom classes may give a multiresource `"demand":[servers,mem,...]`
+/// array instead of a scalar `"need"`; a custom `"capacity":[...]` array
+/// then sizes the extra dimensions (defaults to `k` in dimension 0).
 pub fn parse_workload(v: &Value) -> anyhow::Result<Workload> {
     let kind = v
         .get("kind")
@@ -103,22 +110,66 @@ pub fn parse_workload(v: &Value) -> anyhow::Result<Workload> {
         }
         "four_class" => Ok(Workload::four_class(f("lambda", 1.0))),
         "borg" => Ok(crate::workload::borg::borg_workload(f("lambda", 1.0))),
+        "multires" => {
+            let k = v
+                .get("k")
+                .and_then(|x| x.as_u64())
+                .ok_or_else(|| anyhow::anyhow!("multires needs 'k'"))? as u32;
+            let mem = v
+                .get("mem")
+                .and_then(|x| x.as_u64())
+                .ok_or_else(|| anyhow::anyhow!("multires needs 'mem'"))? as u32;
+            Ok(Workload::multires(k, mem, f("lambda", 1.0)))
+        }
         "custom" => {
             let k = v
                 .get("k")
                 .and_then(|x| x.as_u64())
                 .ok_or_else(|| anyhow::anyhow!("custom needs 'k'"))? as u32;
+            let capacity = match v.get("capacity") {
+                Some(cap) => {
+                    let dims = resource_dims(cap)
+                        .ok_or_else(|| anyhow::anyhow!("'capacity' must be an array of numbers"))?;
+                    anyhow::ensure!(
+                        dims.first() == Some(&k),
+                        "capacity dimension 0 must equal 'k'"
+                    );
+                    ResourceVec::new(&dims)
+                }
+                None => ResourceVec::scalar(k),
+            };
             let classes = v
                 .get("classes")
                 .and_then(|x| x.as_arr())
                 .ok_or_else(|| anyhow::anyhow!("custom needs 'classes'"))?;
             let mut specs = Vec::new();
             for c in classes {
-                let need = c
-                    .get("need")
-                    .and_then(|x| x.as_u64())
-                    .ok_or_else(|| anyhow::anyhow!("class needs 'need'"))?
-                    as u32;
+                let demand = match c.get("demand") {
+                    Some(d) => {
+                        let dims = resource_dims(d).ok_or_else(|| {
+                            anyhow::anyhow!("class 'demand' must be an array of numbers")
+                        })?;
+                        ResourceVec::new(&dims)
+                    }
+                    None => {
+                        let need = c
+                            .get("need")
+                            .and_then(|x| x.as_u64())
+                            .ok_or_else(|| anyhow::anyhow!("class needs 'need' or 'demand'"))?
+                            as u32;
+                        ResourceVec::scalar(need)
+                    }
+                };
+                anyhow::ensure!(
+                    demand.dims() == capacity.dims(),
+                    "class demand has {} dimensions but the capacity has {}",
+                    demand.dims(),
+                    capacity.dims()
+                );
+                anyhow::ensure!(
+                    demand.fits_in(&capacity),
+                    "class demand {demand} exceeds the capacity {capacity}"
+                );
                 let rate = c
                     .get("rate")
                     .and_then(|x| x.as_f64())
@@ -137,12 +188,21 @@ pub fn parse_workload(v: &Value) -> anyhow::Result<Workload> {
                         rate: stages as f64 / mean,
                     }
                 };
-                specs.push(ClassSpec::new(need, rate, dist));
+                specs.push(ClassSpec::with_demand(demand, rate, dist));
             }
-            Ok(Workload::new(k, specs))
+            Ok(Workload::with_capacity(capacity, specs))
         }
         other => anyhow::bail!("unknown workload kind '{other}'"),
     }
+}
+
+/// An array-of-numbers JSON value as resource dimensions.
+fn resource_dims(v: &Value) -> Option<Vec<u32>> {
+    let arr = v.as_arr()?;
+    arr.iter()
+        .map(|x| x.as_u64().map(|n| n as u32))
+        .collect::<Option<Vec<u32>>>()
+        .filter(|dims| !dims.is_empty())
 }
 
 #[cfg(test)]
@@ -211,5 +271,45 @@ mod tests {
     fn rejects_unknown_kind() {
         let v = Value::parse(r#"{"kind":"nope"}"#).unwrap();
         assert!(parse_workload(&v).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_policy_name() {
+        let err = ExperimentConfig::from_json(
+            r#"{"workload": {"kind": "four_class", "lambda": 1.0},
+                "policies": ["bogus"]}"#,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("unknown policy"));
+    }
+
+    #[test]
+    fn parses_multires_and_custom_demand_arrays() {
+        let v = Value::parse(r#"{"kind":"multires","k":16,"mem":64,"lambda":3.0}"#).unwrap();
+        let wl = parse_workload(&v).unwrap();
+        assert_eq!(wl.dims(), 2);
+        assert_eq!(wl.k, 16);
+
+        let v = Value::parse(
+            r#"{"kind":"custom","k":8,"capacity":[8,32],"classes":[
+                {"demand":[1,2],"rate":1.0,"mean":1.0},
+                {"demand":[4,16],"rate":0.1,"mean":1.0}]}"#,
+        )
+        .unwrap();
+        let wl = parse_workload(&v).unwrap();
+        assert_eq!(wl.dims(), 2);
+        assert_eq!(wl.classes[1].need(), 4);
+        // Dimension mismatches and oversubscribed demands are errors.
+        let bad = Value::parse(
+            r#"{"kind":"custom","k":8,"classes":[{"demand":[1,2],"rate":1.0}]}"#,
+        )
+        .unwrap();
+        assert!(parse_workload(&bad).is_err());
+        let over = Value::parse(
+            r#"{"kind":"custom","k":8,"capacity":[8,4],"classes":[
+                {"demand":[1,5],"rate":1.0}]}"#,
+        )
+        .unwrap();
+        assert!(parse_workload(&over).is_err());
     }
 }

@@ -444,7 +444,7 @@ fn spawn_tune(
         }
         let (mut light, mut heavy) = (None, None);
         for (c, cl) in wl.classes.iter().enumerate() {
-            if cl.need == 1 {
+            if cl.need() == 1 {
                 light = Some(c);
             } else {
                 heavy = Some(c);
@@ -531,7 +531,7 @@ mod tests {
     #[test]
     fn submits_complete_and_report() {
         let w = wl();
-        let policy = crate::policy::by_name("msfq:3", &w).unwrap();
+        let policy = crate::policy::build(&"msfq:3".parse().unwrap(), &w).unwrap();
         let coord = Coordinator::spawn(
             &w,
             policy,

@@ -12,6 +12,7 @@
 
 use crate::analysis::{analyze, MsfqParams};
 use crate::experiments::{print_sweep, write_sweep_csv, FigureId, Point, Scale};
+use crate::policy::PolicyId;
 use crate::sim::{Engine, SimConfig, TimeseriesSpec};
 use crate::sweep::{run_spec_local, SweepSpec, WorkloadSpec};
 use crate::util::csv::CsvWriter;
@@ -22,7 +23,7 @@ use crate::workload::{SyntheticSource, Workload};
 fn spec_for(
     workload: WorkloadSpec,
     lambdas: &[f64],
-    policies: &[&str],
+    policies: &[PolicyId],
     scale: Scale,
     figure: FigureId,
 ) -> SweepSpec {
@@ -85,7 +86,7 @@ pub struct Fig1Out {
 pub fn fig1(scale: Scale) -> Vec<Fig1Out> {
     let wl = one_or_all_at(7.5);
     let mut out = Vec::new();
-    for policy in ["msf", "msfq:31"] {
+    for policy in [PolicyId::Msf, PolicyId::Msfq(Some(31))] {
         let cfg = SimConfig {
             target_completions: scale.completions.min(400_000),
             warmup_completions: scale.completions.min(400_000) / 5,
@@ -98,7 +99,7 @@ pub fn fig1(scale: Scale) -> Vec<Fig1Out> {
         let mut engine = Engine::new(&wl, cfg.clone());
         let mut src = SyntheticSource::new(wl.clone());
         let mut rng = Rng::new(scale.seed);
-        let mut pol = crate::policy::by_name(policy, &wl).unwrap();
+        let mut pol = crate::policy::build(&policy, &wl).unwrap();
         let r = engine.run(&mut src, pol.as_mut(), &mut rng);
         let ts = r.timeseries.as_ref().unwrap();
         let total: Vec<u32> = (0..ts.len())
@@ -106,7 +107,7 @@ pub fn fig1(scale: Scale) -> Vec<Fig1Out> {
             .collect();
         let mean_n = total.iter().map(|&x| x as f64).sum::<f64>() / total.len().max(1) as f64;
         let peak_n = total.iter().copied().max().unwrap_or(0);
-        let tag = if policy == "msf" { "msf" } else { "msfq" };
+        let tag = if policy == PolicyId::Msf { "msf" } else { "msfq" };
         ts.write_csv(
             results_path(&format!("fig1_{tag}.csv")),
             &wl.classes.iter().map(|c| c.name.clone()).collect::<Vec<_>>(),
@@ -131,14 +132,13 @@ pub fn fig1(scale: Scale) -> Vec<Fig1Out> {
 // ---------------------------------------------------------------------
 /// Shardable description of fig2's grid (msfq:ℓ for each ℓ at one λ).
 pub fn fig2_spec(scale: Scale, lambda: f64, ells: &[u32]) -> SweepSpec {
-    let policies: Vec<String> = ells.iter().map(|e| format!("msfq:{e}")).collect();
-    let policy_refs: Vec<&str> = policies.iter().map(|s| s.as_str()).collect();
-    spec_for(one_or_all_spec(), &[lambda], &policy_refs, scale, FigureId::Fig2)
+    let policies: Vec<PolicyId> = ells.iter().map(|&e| PolicyId::Msfq(Some(e))).collect();
+    spec_for(one_or_all_spec(), &[lambda], &policies, scale, FigureId::Fig2)
 }
 
 pub fn fig2(scale: Scale, lambda: f64, ells: &[u32]) -> Vec<(u32, f64, f64)> {
     let wl = one_or_all_at(lambda);
-    let policies: Vec<String> = ells.iter().map(|e| format!("msfq:{e}")).collect();
+    let policies: Vec<PolicyId> = ells.iter().map(|&e| PolicyId::Msfq(Some(e))).collect();
     let pts = run_spec_local(&fig2_spec(scale, lambda, ells), scale.threads);
     let mut rows = Vec::new();
     let mut w = CsvWriter::create(
@@ -170,7 +170,13 @@ pub fn fig2(scale: Scale, lambda: f64, ells: &[u32]) -> Vec<(u32, f64, f64)> {
 // ---------------------------------------------------------------------
 /// Shardable description of fig3's grid.
 pub fn fig3_spec(scale: Scale, lambdas: &[f64]) -> SweepSpec {
-    let policies = ["msf", "msfq:31", "fcfs", "first-fit", "nmsr"];
+    let policies = [
+        PolicyId::Msf,
+        PolicyId::Msfq(Some(31)),
+        PolicyId::Fcfs,
+        PolicyId::FirstFit,
+        PolicyId::Nmsr(None),
+    ];
     spec_for(one_or_all_spec(), lambdas, &policies, scale, FigureId::Fig3)
 }
 
@@ -228,13 +234,13 @@ pub fn fig4(scale: Scale, lambdas: &[f64]) -> Vec<Fig4Row> {
     )
     .unwrap();
     for &l in lambdas {
-        for policy in ["msf", "msfq:31"] {
+        for policy in [PolicyId::Msf, PolicyId::Msfq(Some(31))] {
             let wl = one_or_all_at(l);
             let cfg = SimConfig {
                 track_phases: true,
                 ..scale.config()
             };
-            let r = crate::sim::run_named(&wl, policy, &cfg, scale.seed).unwrap();
+            let r = crate::sim::run_policy(&wl, &policy, &cfg, scale.seed).unwrap();
             let ph = r.phases.as_ref().unwrap();
             let mean = [
                 f64::NAN,
@@ -272,7 +278,13 @@ pub fn fig4(scale: Scale, lambdas: &[f64]) -> Vec<Fig4Row> {
 // ---------------------------------------------------------------------
 /// Shardable description of fig5's grid.
 pub fn fig5_spec(scale: Scale, lambdas: &[f64]) -> SweepSpec {
-    let policies = ["static-qs", "adaptive-qs", "msf", "first-fit", "fcfs"];
+    let policies = [
+        PolicyId::StaticQs(None),
+        PolicyId::AdaptiveQs,
+        PolicyId::Msf,
+        PolicyId::FirstFit,
+        PolicyId::Fcfs,
+    ];
     spec_for(WorkloadSpec::FourClass, lambdas, &policies, scale, FigureId::Fig5)
 }
 
@@ -295,9 +307,14 @@ pub fn fig5(scale: Scale, lambdas: &[f64]) -> Vec<Point> {
 /// Shardable description of the Borg grid (fig8 adds ServerFilling and
 /// reads its own `QS_REPS_FIG8` override).
 pub fn fig6_spec(scale: Scale, lambdas: &[f64], include_preemptive: bool) -> SweepSpec {
-    let mut policies = vec!["adaptive-qs", "static-qs", "msf", "first-fit"];
+    let mut policies = vec![
+        PolicyId::AdaptiveQs,
+        PolicyId::StaticQs(None),
+        PolicyId::Msf,
+        PolicyId::FirstFit,
+    ];
     if include_preemptive {
-        policies.push("server-filling");
+        policies.push(PolicyId::ServerFilling);
     }
     let figure = if include_preemptive {
         FigureId::Fig8
@@ -350,7 +367,7 @@ pub fn fig7(points: &[Point]) -> Vec<FairnessRow> {
         let nc = p.result.mean_t.len();
         let row = FairnessRow {
             lambda: p.lambda,
-            policy: p.policy.clone(),
+            policy: p.policy.to_string(),
             et: p.result.mean_t_all,
             et_lightest: p.result.mean_t[0],
             et_heaviest: p.result.mean_t[nc - 1],

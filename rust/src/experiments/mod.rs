@@ -24,6 +24,7 @@
 
 pub mod figures;
 
+use crate::policy::PolicyId;
 use crate::sim::{Engine, ReplicationPool, SimConfig, SimResult, UnitStats};
 use crate::util::json::Value;
 use crate::util::rng::{Rng, SplitMix64};
@@ -236,8 +237,9 @@ impl Default for SweepOpts {
 #[derive(Clone, Debug)]
 pub struct Point {
     pub lambda: f64,
-    /// The requested policy name (e.g. "msfq:31"), as passed in.
-    pub policy: String,
+    /// The requested policy, as passed in (its `Display` form — e.g.
+    /// "msfq:31" — is what CSVs and printed rows show).
+    pub policy: PolicyId,
     pub result: SimResult,
 }
 
@@ -266,8 +268,8 @@ fn rep_seed(seed: u64, point: u64, rep: u64) -> u64 {
 /// function of the inputs, identical on every process that builds it.
 #[derive(Clone, Debug)]
 pub struct SweepGrid {
-    /// (λ, policy-name) per point, λ-major.
-    pub pts: Vec<(f64, String)>,
+    /// (λ, policy) per point, λ-major.
+    pub pts: Vec<(f64, PolicyId)>,
     /// Replications per point (≥ 1).
     pub reps: usize,
     /// Per-replication config (measured budget split across reps;
@@ -280,15 +282,15 @@ pub struct SweepGrid {
 impl SweepGrid {
     pub fn new(
         lambdas: &[f64],
-        policies: &[&str],
+        policies: &[PolicyId],
         cfg: &SimConfig,
         seed: u64,
         replications: u32,
     ) -> SweepGrid {
-        let mut pts: Vec<(f64, String)> = Vec::new();
+        let mut pts: Vec<(f64, PolicyId)> = Vec::new();
         for &l in lambdas {
             for &p in policies {
-                pts.push((l, p.to_string()));
+                pts.push((l, p));
             }
         }
         let reps = replications.max(1) as usize;
@@ -340,7 +342,7 @@ pub fn run_unit(
     if reuse {
         engine.reset();
     }
-    match crate::policy::by_name(policy, wl) {
+    match crate::policy::build(policy, wl) {
         Ok(mut pol) => {
             let mut src = SyntheticSource::new(wl.clone());
             let mut rng = Rng::new(rep_seed(grid.seed, p as u64, r as u64));
@@ -453,18 +455,21 @@ pub fn sweep_units(
             }
         }
         if pool.replications() == 0 {
-            continue; // every replication failed (bad policy name)
+            continue; // every replication failed (policy build error)
         }
-        let display = display.unwrap_or_else(|| policy.clone());
+        let display = display.unwrap_or_else(|| policy.to_string());
         out.push(Point {
             lambda: *lambda,
-            policy: policy.clone(),
+            policy: *policy,
             result: pool.result(&display, &wl),
         });
     }
+    // Sort on the canonical Display spelling: the same order the
+    // stringly grid produced for canonical policy names.
     out.sort_by(|a, b| {
         a.policy
-            .cmp(&b.policy)
+            .to_string()
+            .cmp(&b.policy.to_string())
             .then(a.lambda.partial_cmp(&b.lambda).unwrap())
     });
     Ok(out)
@@ -536,7 +541,7 @@ impl PairedRun {
 #[derive(Clone, Debug)]
 pub struct PairedGrid {
     pub lambdas: Vec<f64>,
-    pub policies: Vec<String>,
+    pub policies: Vec<PolicyId>,
     /// Index into `policies` of the baseline every Δ subtracts.
     pub baseline: usize,
     /// Replications per λ (≥ 1).
@@ -550,7 +555,7 @@ pub struct PairedGrid {
 impl PairedGrid {
     pub fn new(
         lambdas: &[f64],
-        policies: &[&str],
+        policies: &[PolicyId],
         baseline: usize,
         cfg: &SimConfig,
         seed: u64,
@@ -565,7 +570,7 @@ impl PairedGrid {
         };
         PairedGrid {
             lambdas: lambdas.to_vec(),
-            policies: policies.iter().map(|p| p.to_string()).collect(),
+            policies: policies.to_vec(),
             baseline,
             reps,
             rep_cfg,
@@ -609,7 +614,7 @@ pub fn run_paired_unit(
             engine.reset();
         }
         used = true;
-        match crate::policy::by_name(policy, wl) {
+        match crate::policy::build(policy, wl) {
             Ok(mut pol) => {
                 // Replay never consumes the engine-side RNG; a fixed
                 // dummy keeps the run signature uniform.
@@ -682,8 +687,8 @@ impl PairedUnitSource for LocalThreads {
 #[derive(Clone, Debug)]
 pub struct DiffPoint {
     pub lambda: f64,
-    pub policy: String,
-    pub baseline: String,
+    pub policy: PolicyId,
+    pub baseline: PolicyId,
     pub diff: PairedDiff,
     /// What the unpaired estimator would report from the same runs'
     /// marginal CIs: the quadrature √(ci_p² + ci_b²). The ratio
@@ -773,7 +778,7 @@ pub fn sweep_paired_units(
                 }
                 let display = displays[pi]
                     .clone()
-                    .unwrap_or_else(|| grid.policies[pi].clone());
+                    .unwrap_or_else(|| grid.policies[pi].to_string());
                 Some(pool.result(&display, &wl))
             })
             .collect();
@@ -789,27 +794,29 @@ pub fn sweep_paired_units(
                 };
                 diffs.push(DiffPoint {
                     lambda,
-                    policy: policy.clone(),
-                    baseline: grid.policies[grid.baseline].clone(),
+                    policy: *policy,
+                    baseline: grid.policies[grid.baseline],
                     diff: pds[pi].clone(),
                     unpaired_ci95,
                 });
             }
             points.push(Point {
                 lambda,
-                policy: policy.clone(),
+                policy: *policy,
                 result: result.clone(),
             });
         }
     }
     points.sort_by(|a, b| {
         a.policy
-            .cmp(&b.policy)
+            .to_string()
+            .cmp(&b.policy.to_string())
             .then(a.lambda.partial_cmp(&b.lambda).unwrap())
     });
     diffs.sort_by(|a, b| {
         a.policy
-            .cmp(&b.policy)
+            .to_string()
+            .cmp(&b.policy.to_string())
             .then(a.lambda.partial_cmp(&b.lambda).unwrap())
     });
     Ok(PairedSweep { points, diffs })
@@ -839,8 +846,8 @@ pub fn write_diff_csv(
     for d in diffs {
         let mut row = vec![
             crate::util::csv::format_g(d.lambda),
-            d.policy.clone(),
-            d.baseline.clone(),
+            d.policy.to_string(),
+            d.baseline.to_string(),
             crate::util::csv::format_g(d.diff.delta_mean()),
             crate::util::csv::format_g(d.diff.ci95_half_width()),
             crate::util::csv::format_g(d.unpaired_ci95),
@@ -883,7 +890,7 @@ pub fn print_paired(title: &str, diffs: &[DiffPoint]) {
 pub fn sweep(
     wl_at: &(dyn Fn(f64) -> Workload + Sync),
     lambdas: &[f64],
-    policies: &[&str],
+    policies: &[PolicyId],
     cfg: &SimConfig,
     seed: u64,
 ) -> Vec<Point> {
@@ -897,7 +904,7 @@ pub fn sweep(
 pub fn sweep_with(
     wl_at: &(dyn Fn(f64) -> Workload + Sync),
     lambdas: &[f64],
-    policies: &[&str],
+    policies: &[PolicyId],
     cfg: &SimConfig,
     seed: u64,
     opts: &SweepOpts,
@@ -931,7 +938,7 @@ pub fn write_sweep_csv(
     for p in points {
         let mut row = vec![
             crate::util::csv::format_g(p.lambda),
-            p.policy.clone(),
+            p.policy.to_string(),
             crate::util::csv::format_g(p.result.mean_t_all),
             crate::util::csv::format_g(p.result.weighted_t),
             crate::util::csv::format_g(p.result.ci95),
@@ -1030,7 +1037,13 @@ mod tests {
     #[test]
     fn grid_partition_is_point_major() {
         let cfg = SimConfig::default().with_completions(9_000);
-        let grid = SweepGrid::new(&[2.0, 3.0], &["msf", "fcfs"], &cfg, 1, 3);
+        let grid = SweepGrid::new(
+            &[2.0, 3.0],
+            &[PolicyId::Msf, PolicyId::Fcfs],
+            &cfg,
+            1,
+            3,
+        );
         assert_eq!(grid.pts.len(), 4);
         assert_eq!(grid.n_units(), 12);
         assert_eq!(grid.point_rep(0), (0, 0));
@@ -1041,9 +1054,9 @@ mod tests {
         assert_eq!(grid.rep_cfg.target_completions, 3_000);
         assert_eq!(grid.rep_cfg.warmup_completions, 9_000 / 5);
         // λ-major point order.
-        assert_eq!(grid.pts[0], (2.0, "msf".to_string()));
-        assert_eq!(grid.pts[1], (2.0, "fcfs".to_string()));
-        assert_eq!(grid.pts[2], (3.0, "msf".to_string()));
+        assert_eq!(grid.pts[0], (2.0, PolicyId::Msf));
+        assert_eq!(grid.pts[1], (2.0, PolicyId::Fcfs));
+        assert_eq!(grid.pts[2], (3.0, PolicyId::Msf));
     }
 
     /// The paired grid partitions by (λ, replication) — one unit runs
@@ -1051,7 +1064,14 @@ mod tests {
     #[test]
     fn paired_grid_partition_is_lambda_major() {
         let cfg = SimConfig::default().with_completions(9_000);
-        let grid = PairedGrid::new(&[2.0, 3.0], &["msf", "msfq:7", "fcfs"], 0, &cfg, 1, 3);
+        let grid = PairedGrid::new(
+            &[2.0, 3.0],
+            &[PolicyId::Msf, PolicyId::Msfq(Some(7)), PolicyId::Fcfs],
+            0,
+            &cfg,
+            1,
+            3,
+        );
         assert_eq!(grid.n_units(), 6);
         assert_eq!(grid.point_rep(0), (0, 0));
         assert_eq!(grid.point_rep(2), (0, 2));

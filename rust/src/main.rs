@@ -69,11 +69,12 @@ fn help() -> String {
             ("trace", "generate a workload trace CSV"),
         ],
         &[
-            OptSpec { name: "workload", help: "one_or_all|four_class|borg or JSON file", default: Some("one_or_all".into()) },
-            OptSpec { name: "k", help: "servers (one_or_all)", default: Some("32".into()) },
+            OptSpec { name: "workload", help: "one_or_all|four_class|borg|multires or JSON file", default: Some("one_or_all".into()) },
+            OptSpec { name: "k", help: "servers (one_or_all, multires)", default: Some("32".into()) },
+            OptSpec { name: "mem", help: "memory units (multires)", default: Some("128".into()) },
             OptSpec { name: "lambda", help: "total arrival rate", default: Some("7.5".into()) },
             OptSpec { name: "p1", help: "light-job fraction", default: Some("0.9".into()) },
-            OptSpec { name: "policy", help: "fcfs|first-fit|msf|msfq[:ell]|static-qs|adaptive-qs|nmsr|server-filling", default: Some("msfq".into()) },
+            OptSpec { name: "policy", help: "fcfs|first-fit|msf|msfq[:ell]|static-qs|adaptive-qs|nmsr[:cycle]|msr-seq[:cycle]|msr-rand[:cycle]|server-filling", default: Some("msfq".into()) },
             OptSpec { name: "completions", help: "measured completions", default: Some("1000000".into()) },
             OptSpec { name: "seed", help: "RNG seed", default: Some("1".into()) },
             OptSpec { name: "reps", help: "replications per sweep point", default: Some("QS_REPS or 4".into()) },
@@ -103,6 +104,11 @@ fn workload_from(args: &Args) -> anyhow::Result<Workload> {
         }
         "four_class" => Ok(Workload::four_class(lambda)),
         "borg" => Ok(borg_workload(lambda)),
+        "multires" => {
+            let k = args.u64_or("k", 32)? as u32;
+            let mem = args.u64_or("mem", 128)? as u32;
+            Ok(Workload::multires(k, mem, lambda))
+        }
         path => {
             let text = std::fs::read_to_string(path)?;
             let v = Value::parse(&text)?;
@@ -123,13 +129,17 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     let wl = workload_from(args)?;
     let cfg = sim_config_from(args)?;
     let seed = args.u64_or("seed", 1)?;
-    let policy = args.str_or("policy", "msfq");
-    let r = quickswap::sim::run_named(&wl, &policy, &cfg, seed)?;
+    let policy: quickswap::policy::PolicyId = args.str_or("policy", "msfq").parse()?;
+    let r = quickswap::sim::run_policy(&wl, &policy, &cfg, seed)?;
     println!("{}", r.summary());
     for (c, cl) in wl.classes.iter().enumerate() {
         println!(
-            "  class {:<8} (need {:>4}): E[T] = {:>10.3}  n = {:>9}  E[N] = {:>9.2}",
-            cl.name, cl.need, r.mean_t[c], r.count[c], r.mean_n[c]
+            "  class {:<8} (demand {:>7}): E[T] = {:>10.3}  n = {:>9}  E[N] = {:>9.2}",
+            cl.name,
+            cl.demand.to_string(),
+            r.mean_t[c],
+            r.count[c],
+            r.mean_n[c]
         );
     }
     if let Some(ph) = &r.phases {
@@ -156,7 +166,10 @@ fn sweep_spec_from(args: &Args) -> anyhow::Result<SweepSpec> {
     // --baseline implies --paired; the baseline must name a grid policy
     // (paired_grid resolves it and rejects strangers up front).
     spec.paired = args.flag("paired") || args.get("baseline").is_some();
-    spec.baseline = args.get("baseline").map(|b| b.to_string());
+    spec.baseline = args
+        .get("baseline")
+        .map(|b| quickswap::policy::PolicyId::parse(b))
+        .transpose()?;
     if spec.paired {
         spec.paired_grid()?;
     }
@@ -208,19 +221,28 @@ fn sweep_grid_from(args: &Args, reps: u32) -> anyhow::Result<SweepSpec> {
     }
     let lambdas = args.f64_list("lambdas", &[4.0, 5.0, 6.0, 7.0, 7.5])?;
     let policies_s = args.str_or("policies", "msf,msfq:31,fcfs,first-fit");
-    let policies: Vec<&str> = policies_s.split(',').map(|s| s.trim()).collect();
+    let policies = policies_s
+        .split(',')
+        .map(|s| quickswap::policy::PolicyId::parse(s))
+        .collect::<anyhow::Result<Vec<_>>>()?;
     let cfg = sim_config_from(args)?;
     let seed = args.u64_or("seed", 1)?;
     let workload = match args.str_or("workload", "one_or_all").as_str() {
         "four_class" => WorkloadSpec::FourClass,
         "borg" => WorkloadSpec::Borg,
+        "multires" => WorkloadSpec::Multires {
+            k: args.u64_or("k", 32)? as u32,
+            mem: args.u64_or("mem", 128)? as u32,
+        },
         "one_or_all" => WorkloadSpec::OneOrAll {
             k: args.u64_or("k", 32)? as u32,
             p1: args.f64_or("p1", 0.9)?,
             mu1: args.f64_or("mu1", 1.0)?,
             muk: args.f64_or("muk", 1.0)?,
         },
-        other => anyhow::bail!("sweep workload must be one_or_all|four_class|borg, got {other}"),
+        other => {
+            anyhow::bail!("sweep workload must be one_or_all|four_class|borg|multires, got {other}")
+        }
     };
     Ok(SweepSpec::from_config(workload, &lambdas, &policies, &cfg, seed, reps))
 }
@@ -228,24 +250,11 @@ fn sweep_grid_from(args: &Args, reps: u32) -> anyhow::Result<SweepSpec> {
 fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
     match args.positional().first().map(|s| s.as_str()) {
         Some("run") => cmd_sweep_run(args),
-        Some("drive") => cmd_sweep_drive(args, None),
-        Some("work") => cmd_sweep_work(args, None),
+        Some("drive") => cmd_sweep_drive(args),
+        Some("work") => cmd_sweep_work(args),
         Some("status") => cmd_sweep_status(args),
         Some(other) => anyhow::bail!("unknown sweep subcommand '{other}' (run|drive|work|status)"),
-        None => {
-            // Legacy flag spellings, kept as hidden aliases for one
-            // release: `--worker ADDR` ≡ `work --addr ADDR`,
-            // `--driver ADDR` ≡ `drive --addr ADDR`, bare ≡ `run`.
-            if let Some(addr) = args.get("worker") {
-                let addr = addr.to_string();
-                return cmd_sweep_work(args, Some(addr));
-            }
-            if let Some(addr) = args.get("driver") {
-                let addr = addr.to_string();
-                return cmd_sweep_drive(args, Some(addr));
-            }
-            cmd_sweep_run(args)
-        }
+        None => anyhow::bail!("sweep needs a subcommand: run|drive|work|status"),
     }
 }
 
@@ -263,8 +272,8 @@ fn cmd_sweep_run(args: &Args) -> anyhow::Result<()> {
 
 /// `sweep drive`: serve a spec queue to TCP workers, optionally
 /// journaled for kill/resume durability.
-fn cmd_sweep_drive(args: &Args, legacy_addr: Option<String>) -> anyhow::Result<()> {
-    let addr = legacy_addr.unwrap_or_else(|| args.str_or("addr", "127.0.0.1:0"));
+fn cmd_sweep_drive(args: &Args) -> anyhow::Result<()> {
+    let addr = args.str_or("addr", "127.0.0.1:0");
     // Spec queue: `--figs 2,6,8` queues each figure's predefined grid
     // (paired flags apply to every queued spec); otherwise the single
     // ad-hoc/--fig spec, exactly as `sweep run` would build it.
@@ -277,7 +286,10 @@ fn cmd_sweep_drive(args: &Args, legacy_addr: Option<String>) -> anyhow::Result<(
                 let fig = FigureId::parse(f)?;
                 let mut spec = figures::default_spec(fig, scale)?;
                 spec.paired = args.flag("paired") || args.get("baseline").is_some();
-                spec.baseline = args.get("baseline").map(|b| b.to_string());
+                spec.baseline = args
+                    .get("baseline")
+                    .map(|b| quickswap::policy::PolicyId::parse(b))
+                    .transpose()?;
                 if spec.paired {
                     spec.paired_grid()?;
                 }
@@ -337,12 +349,9 @@ fn cmd_sweep_drive(args: &Args, legacy_addr: Option<String>) -> anyhow::Result<(
 
 /// `sweep work`: everything (grids, seeds, run lengths) comes from the
 /// driver; local grid args are ignored.
-fn cmd_sweep_work(args: &Args, legacy_addr: Option<String>) -> anyhow::Result<()> {
-    let addr = match legacy_addr {
-        Some(a) => a,
-        None => args.required("addr")?.to_string(),
-    };
-    let units = quickswap::sweep::run_worker(&addr)?;
+fn cmd_sweep_work(args: &Args) -> anyhow::Result<()> {
+    let addr = args.required("addr")?;
+    let units = quickswap::sweep::run_worker(addr)?;
     eprintln!("qs-sweep worker: completed {units} units");
     Ok(())
 }
@@ -536,8 +545,8 @@ fn cmd_fig(args: &Args) -> anyhow::Result<()> {
 
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let wl = workload_from(args)?;
-    let policy = args.str_or("policy", "msfq");
-    let pol = quickswap::policy::by_name(&policy, &wl)?;
+    let policy: quickswap::policy::PolicyId = args.str_or("policy", "msfq").parse()?;
+    let pol = quickswap::policy::build(&policy, &wl)?;
     let cfg = CoordinatorConfig {
         time_scale: args.f64_or("time-scale", 1e-3)?,
         autotune_every: args.u64_or("autotune-every", 0)?,

@@ -61,7 +61,7 @@ impl Policy for AdaptiveQuickswap {
                     self.draining = false; // queue empty: resume working
                 }
                 Some(c) => {
-                    if sys.needs[c] <= sys.free() {
+                    if sys.demand_fits(c) {
                         if let Some(id) = sys.queued_head(c) {
                             out.admit.push(id);
                             self.draining = false;
@@ -74,7 +74,10 @@ impl Policy for AdaptiveQuickswap {
         // Working phase. Fast path: if no queued job can fit (exact, via
         // the index) and the drain trigger cannot fire, the full consult
         // would admit nothing and change nothing — skip it.
-        if self.cache && sys.free() < sys.min_queued_need() && !self.trigger(sys) {
+        if self.cache
+            && !sys.queue_index().queued_demand_fits(&sys.free_vec())
+            && !self.trigger(sys)
+        {
             return;
         }
         // MSF-order admission.

@@ -31,21 +31,36 @@ impl Policy for Fcfs {
 
     fn schedule(&mut self, sys: &SysView<'_>, out: &mut Decision) {
         // Exact skip: the head of line blocks (or nothing is queued).
-        if sys.hol_queued_need() > sys.free() {
+        // At d=1 this is exactly `hol_queued_need() > free()`.
+        if !sys.hol_demand_fits() {
             return;
         }
-        let mut free = sys.free();
         let admit = &mut out.admit;
-        sys.for_each_queued_in_arrival_order(&mut |id, class| {
-            let need = sys.needs[class];
-            if need <= free {
-                admit.push(id);
-                free -= need;
-                true
-            } else {
-                false // head-of-line blocking: stop at first misfit
-            }
-        });
+        if sys.capacity.is_scalar() {
+            let mut free = sys.free();
+            sys.for_each_queued_in_arrival_order(&mut |id, class| {
+                let need = sys.needs[class];
+                if need <= free {
+                    admit.push(id);
+                    free -= need;
+                    true
+                } else {
+                    false // head-of-line blocking: stop at first misfit
+                }
+            });
+        } else {
+            let mut free = sys.free_vec();
+            sys.for_each_queued_in_arrival_order(&mut |id, class| {
+                let demand = sys.demands[class];
+                if demand.fits_in(&free) {
+                    admit.push(id);
+                    free.sub_assign(&demand);
+                    true
+                } else {
+                    false // head-of-line blocking: stop at first misfit
+                }
+            });
+        }
         debug_assert!(!admit.is_empty(), "HoL predicate admitted nothing");
     }
 }

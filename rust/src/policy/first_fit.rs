@@ -39,32 +39,56 @@ impl Policy for FirstFit {
     }
 
     fn schedule(&mut self, sys: &SysView<'_>, out: &mut Decision) {
-        let free0 = sys.free();
-        let idx = sys.queue_index();
-        // Need-weighted fitting mass: zero iff no queued job fits (the
-        // exact skip), and otherwise the scan's work bound.
-        let mut unseen_fit = idx.queued_need_fitting(free0);
-        if unseen_fit == 0 {
-            return;
-        }
-        let min_need = idx.min_queued_need();
-        let mut free = free0;
         let admit = &mut out.admit;
-        sys.for_each_queued_in_arrival_order(&mut |id, class| {
-            let need = sys.needs[class];
-            if need <= free0 {
-                // Part of the fitting mass whether or not it still fits
-                // after earlier admissions shrank `free`.
-                if need <= free {
-                    admit.push(id);
-                    free -= need;
-                }
-                unseen_fit -= need as u64;
+        let idx = sys.queue_index();
+        if sys.capacity.is_scalar() {
+            let free0 = sys.free();
+            // Need-weighted fitting mass: zero iff no queued job fits (the
+            // exact skip), and otherwise the scan's work bound.
+            let mut unseen_fit = idx.queued_need_fitting(free0);
+            if unseen_fit == 0 {
+                return;
             }
-            // Stop when all fitting mass is seen or nothing else could
-            // possibly fit in what's left.
-            unseen_fit > 0 && free >= min_need
-        });
+            let min_need = idx.min_queued_need();
+            let mut free = free0;
+            sys.for_each_queued_in_arrival_order(&mut |id, class| {
+                let need = sys.needs[class];
+                if need <= free0 {
+                    // Part of the fitting mass whether or not it still fits
+                    // after earlier admissions shrank `free`.
+                    if need <= free {
+                        admit.push(id);
+                        free -= need;
+                    }
+                    unseen_fit -= need as u64;
+                }
+                // Stop when all fitting mass is seen or nothing else could
+                // possibly fit in what's left.
+                unseen_fit > 0 && free >= min_need
+            });
+        } else {
+            // Vector twin: fitting mass (server-weighted, over jobs whose
+            // whole demand vector fits the initial free vector) is the
+            // exact skip and the scan bound; the per-job test is the
+            // component-wise fit.
+            let free0 = sys.free_vec();
+            let mut unseen_fit = idx.queued_mass_fitting(&free0);
+            if unseen_fit == 0 {
+                return;
+            }
+            let mut free = free0;
+            sys.for_each_queued_in_arrival_order(&mut |id, class| {
+                let demand = sys.demands[class];
+                if demand.fits_in(&free0) {
+                    if demand.fits_in(&free) {
+                        admit.push(id);
+                        free.sub_assign(&demand);
+                    }
+                    unseen_fit -= demand.servers() as u64;
+                }
+                unseen_fit > 0
+            });
+        }
         debug_assert!(!admit.is_empty(), "fitting-mass predicate admitted nothing");
     }
 }

@@ -44,6 +44,8 @@ pub mod test_support;
 pub mod first_fit;
 pub mod msf;
 pub mod msfq;
+pub mod msr_rand;
+pub mod msr_seq;
 pub mod nmsr;
 pub mod server_filling;
 pub mod static_qs;
@@ -53,11 +55,15 @@ pub use fcfs::Fcfs;
 pub use first_fit::FirstFit;
 pub use msf::Msf;
 pub use msfq::Msfq;
+pub use msr_rand::MsrRand;
+pub use msr_seq::MsrSeq;
 pub use nmsr::Nmsr;
 pub use server_filling::ServerFilling;
 pub use static_qs::StaticQuickswap;
 
-use crate::workload::Workload;
+use crate::workload::{ResourceVec, Workload};
+use std::fmt;
+use std::str::FromStr;
 
 pub type ClassId = usize;
 pub type JobId = u64;
@@ -72,12 +78,18 @@ pub type PhaseLabel = u8;
 /// tombstone filtering).
 pub struct SysView<'a> {
     pub now: f64,
-    /// Total servers.
+    /// Total servers (dimension 0 of `capacity`).
     pub k: u32,
-    /// Busy servers.
+    /// Busy servers (dimension 0 of `used_vec`).
     pub used: u32,
-    /// Server need per class.
+    /// Full resource capacity vector (d=1 in the scalar model).
+    pub capacity: ResourceVec,
+    /// Per-dimension resource usage.
+    pub used_vec: ResourceVec,
+    /// Server need per class (dimension-0 projection of `demands`).
     pub needs: &'a [u32],
+    /// Full demand vector per class.
+    pub demands: &'a [ResourceVec],
     /// Jobs waiting (not in service) per class.
     pub queued: &'a [u32],
     /// Jobs currently in service per class.
@@ -96,6 +108,35 @@ impl SysView<'_> {
     #[inline]
     pub fn free(&self) -> u32 {
         self.k - self.used
+    }
+
+    /// Resource dimensions (1 = the scalar model).
+    #[inline]
+    pub fn dims(&self) -> usize {
+        self.capacity.dims()
+    }
+
+    /// Free capacity per dimension (dimension 0 equals [`Self::free`]).
+    #[inline]
+    pub fn free_vec(&self) -> ResourceVec {
+        self.capacity.saturating_sub(&self.used_vec)
+    }
+
+    /// Class `c`'s full demand vector.
+    #[inline]
+    pub fn demand(&self, c: ClassId) -> ResourceVec {
+        self.demands[c]
+    }
+
+    /// True iff class `c`'s whole demand vector fits in the free
+    /// capacity — the vector admission predicate. At d=1 this is exactly
+    /// the scalar `needs[c] <= free()` comparison.
+    #[inline]
+    pub fn demand_fits(&self, c: ClassId) -> bool {
+        if self.capacity.is_scalar() {
+            return self.needs[c] <= self.free();
+        }
+        self.demands[c].fits_in(&self.free_vec())
     }
 
     /// The indexed queue summary — O(log C) fit queries and O(1)
@@ -123,6 +164,23 @@ impl SysView<'_> {
         match self.jobs.hol_queued_slot() {
             Some(slot) => self.jobs.need(self.jobs.id_at(slot)),
             None => u32::MAX,
+        }
+    }
+
+    /// True iff the head-of-line job's whole demand vector fits in the
+    /// free capacity — the exact FCFS admit predicate under the vector
+    /// model (at d=1 exactly `hol_queued_need() <= free()`).
+    #[inline]
+    pub fn hol_demand_fits(&self) -> bool {
+        if self.capacity.is_scalar() {
+            return self.hol_queued_need() <= self.free();
+        }
+        match self.jobs.hol_queued_slot() {
+            Some(slot) => {
+                let c = self.jobs.class(self.jobs.id_at(slot));
+                self.demands[c].fits_in(&self.free_vec())
+            }
+            None => false,
         }
     }
 
@@ -260,53 +318,232 @@ pub fn consult_cache_enabled() -> bool {
     !matches!(std::env::var("QS_NO_CONSULT_CACHE"), Ok(v) if !v.is_empty() && v != "0")
 }
 
-/// Construct a policy by name (CLI / config entry point).
-///
-/// Names: `fcfs`, `first-fit`, `msf`, `msfq[:ell]`, `static-qs[:ell]`,
-/// `adaptive-qs`, `nmsr[:cycle]`, `server-filling`.
-pub fn by_name(name: &str, wl: &Workload) -> anyhow::Result<Box<dyn Policy + Send>> {
-    let (base, arg) = match name.split_once(':') {
-        Some((b, a)) => (b, Some(a)),
-        None => (name, None),
-    };
-    let parse_u32 = |a: Option<&str>, d: u32| -> anyhow::Result<u32> {
-        Ok(match a {
-            Some(s) => s.parse()?,
-            None => d,
-        })
-    };
-    Ok(match base {
-        "fcfs" => Box::new(Fcfs::new()),
-        "first-fit" | "firstfit" | "ff" => Box::new(FirstFit::new()),
-        "msf" => Box::new(Msf::new()),
-        "msfq" => {
-            let ell = parse_u32(arg, wl.k.saturating_sub(1))?;
-            Box::new(Msfq::new(wl, ell)?)
+/// Typed policy identifier — the parse/Display twin of
+/// [`crate::experiments::FigureId`], replacing the former stringly
+/// `by_name(&str)` surface. A `PolicyId` carries the policy's optional
+/// argument (quickswap threshold ℓ, MSR cycle length), parses every
+/// spelling the CLI ever accepted, and `Display`s back to the canonical
+/// string (`"msfq:31"`, `"nmsr"`), which is what travels in
+/// [`SweepSpec`](crate::sweep::SweepSpec) wire JSON and CSV policy
+/// columns — so typed specs stay byte-compatible with stringly ones.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum PolicyId {
+    Fcfs,
+    FirstFit,
+    Msf,
+    /// MSFQ with an optional threshold ℓ (default k−1 at build time).
+    Msfq(Option<u32>),
+    /// Static Quickswap with an optional threshold ℓ (default k−1).
+    StaticQs(Option<u32>),
+    AdaptiveQs,
+    /// Nonpreemptive MSR with an optional cycle length (default 50.0).
+    Nmsr(Option<f64>),
+    ServerFilling,
+    /// Markovian Service Rate, deterministic-cycle chain (arXiv
+    /// 2412.08915) with an optional mean cycle length (default 50.0).
+    MsrSeq(Option<f64>),
+    /// Markovian Service Rate, uniform random-walk chain with an
+    /// optional mean cycle length (default 50.0).
+    MsrRand(Option<f64>),
+}
+
+impl PolicyId {
+    /// Canonical names of every policy, as listed in unknown-name
+    /// errors and the CLI help.
+    pub const ALL: &'static [&'static str] = &[
+        "fcfs",
+        "first-fit",
+        "msf",
+        "msfq[:ell]",
+        "static-qs[:ell]",
+        "adaptive-qs",
+        "nmsr[:cycle]",
+        "server-filling",
+        "msr-seq[:cycle]",
+        "msr-rand[:cycle]",
+    ];
+
+    /// Parse a policy name with optional `:arg`, accepting the historic
+    /// aliases (`ff`, `serverfilling`, ...). Unknown names error with
+    /// the full list of valid policies.
+    pub fn parse(s: &str) -> anyhow::Result<PolicyId> {
+        let s = s.trim();
+        let (base, arg) = match s.split_once(':') {
+            Some((b, a)) => (b, Some(a)),
+            None => (s, None),
+        };
+        let u32_arg = |what: &str| -> anyhow::Result<Option<u32>> {
+            arg.map(|a| {
+                a.parse::<u32>()
+                    .map_err(|_| anyhow::anyhow!("bad {what} '{a}' in policy '{s}'"))
+            })
+            .transpose()
+        };
+        let f64_arg = |what: &str| -> anyhow::Result<Option<f64>> {
+            arg.map(|a| {
+                a.parse::<f64>()
+                    .map_err(|_| anyhow::anyhow!("bad {what} '{a}' in policy '{s}'"))
+            })
+            .transpose()
+        };
+        let no_arg = |id: PolicyId| -> anyhow::Result<PolicyId> {
+            match arg {
+                Some(a) => anyhow::bail!("policy '{base}' takes no argument, got ':{a}'"),
+                None => Ok(id),
+            }
+        };
+        match base {
+            "fcfs" => no_arg(PolicyId::Fcfs),
+            "first-fit" | "firstfit" | "ff" => no_arg(PolicyId::FirstFit),
+            "msf" => no_arg(PolicyId::Msf),
+            "msfq" => Ok(PolicyId::Msfq(u32_arg("threshold")?)),
+            "static-qs" | "staticqs" => Ok(PolicyId::StaticQs(u32_arg("threshold")?)),
+            "adaptive-qs" | "adaptiveqs" => no_arg(PolicyId::AdaptiveQs),
+            "nmsr" => Ok(PolicyId::Nmsr(f64_arg("cycle")?)),
+            "server-filling" | "serverfilling" | "sf" => no_arg(PolicyId::ServerFilling),
+            "msr-seq" | "msrseq" => Ok(PolicyId::MsrSeq(f64_arg("cycle")?)),
+            "msr-rand" | "msrrand" => Ok(PolicyId::MsrRand(f64_arg("cycle")?)),
+            other => anyhow::bail!(
+                "unknown policy '{other}' (valid: {})",
+                PolicyId::ALL.join(", ")
+            ),
         }
-        "static-qs" | "staticqs" => {
-            let ell = parse_u32(arg, wl.k.saturating_sub(1))?;
-            Box::new(StaticQuickswap::new(wl, ell))
+    }
+
+    /// Canonical base name (no argument).
+    pub fn base(&self) -> &'static str {
+        match self {
+            PolicyId::Fcfs => "fcfs",
+            PolicyId::FirstFit => "first-fit",
+            PolicyId::Msf => "msf",
+            PolicyId::Msfq(_) => "msfq",
+            PolicyId::StaticQs(_) => "static-qs",
+            PolicyId::AdaptiveQs => "adaptive-qs",
+            PolicyId::Nmsr(_) => "nmsr",
+            PolicyId::ServerFilling => "server-filling",
+            PolicyId::MsrSeq(_) => "msr-seq",
+            PolicyId::MsrRand(_) => "msr-rand",
         }
-        "adaptive-qs" | "adaptiveqs" => Box::new(AdaptiveQuickswap::new()),
-        "nmsr" => {
-            let cycle: f64 = match arg {
-                Some(s) => s.parse()?,
-                None => 50.0,
-            };
-            Box::new(Nmsr::new(wl, cycle)?)
+    }
+
+    /// `MSFQ`-style suffix for per-policy environment overrides,
+    /// mirroring [`crate::experiments::FigureId::env_suffix`].
+    pub fn env_suffix(&self) -> String {
+        self.base().to_uppercase().replace('-', "_")
+    }
+
+    /// True for the policies the paper classifies as nonpreemptive.
+    pub fn is_nonpreemptive(&self) -> bool {
+        !matches!(self, PolicyId::ServerFilling)
+    }
+}
+
+/// Canonical spelling: base name plus `:arg` when one was given —
+/// `"msfq:31"` round-trips through parse/Display unchanged.
+impl fmt::Display for PolicyId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.base())?;
+        match self {
+            PolicyId::Msfq(Some(ell)) | PolicyId::StaticQs(Some(ell)) => write!(f, ":{ell}"),
+            PolicyId::Nmsr(Some(c)) | PolicyId::MsrSeq(Some(c)) | PolicyId::MsrRand(Some(c)) => {
+                write!(f, ":{c}")
+            }
+            _ => Ok(()),
         }
-        "server-filling" | "serverfilling" | "sf" => Box::new(ServerFilling::new()),
-        _ => anyhow::bail!("unknown policy '{name}'"),
+    }
+}
+
+impl FromStr for PolicyId {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> anyhow::Result<PolicyId> {
+        PolicyId::parse(s)
+    }
+}
+
+/// Instantiate a policy for a workload (CLI / config / sweep entry
+/// point). Workload-dependent validation (MSFQ's one-or-all requirement,
+/// threshold bounds) happens here, not at parse time.
+pub fn build(id: &PolicyId, wl: &Workload) -> anyhow::Result<Box<dyn Policy + Send>> {
+    Ok(match *id {
+        PolicyId::Fcfs => Box::new(Fcfs::new()),
+        PolicyId::FirstFit => Box::new(FirstFit::new()),
+        PolicyId::Msf => Box::new(Msf::new()),
+        PolicyId::Msfq(ell) => Box::new(Msfq::new(wl, ell.unwrap_or(wl.k.saturating_sub(1)))?),
+        PolicyId::StaticQs(ell) => {
+            Box::new(StaticQuickswap::new(wl, ell.unwrap_or(wl.k.saturating_sub(1))))
+        }
+        PolicyId::AdaptiveQs => Box::new(AdaptiveQuickswap::new()),
+        PolicyId::Nmsr(cycle) => Box::new(Nmsr::new(wl, cycle.unwrap_or(50.0))?),
+        PolicyId::ServerFilling => Box::new(ServerFilling::new()),
+        PolicyId::MsrSeq(cycle) => Box::new(MsrSeq::new(wl, cycle.unwrap_or(50.0))?),
+        PolicyId::MsrRand(cycle) => Box::new(MsrRand::new(wl, cycle.unwrap_or(50.0))?),
     })
 }
 
-/// All nonpreemptive policy names used across the paper's figures.
-pub const NONPREEMPTIVE: &[&str] = &[
-    "fcfs",
-    "first-fit",
-    "msf",
-    "msfq",
-    "static-qs",
-    "adaptive-qs",
-    "nmsr",
+/// All nonpreemptive policies used across the paper's figures.
+pub const NONPREEMPTIVE: &[PolicyId] = &[
+    PolicyId::Fcfs,
+    PolicyId::FirstFit,
+    PolicyId::Msf,
+    PolicyId::Msfq(None),
+    PolicyId::StaticQs(None),
+    PolicyId::AdaptiveQs,
+    PolicyId::Nmsr(None),
+    PolicyId::MsrSeq(None),
+    PolicyId::MsrRand(None),
 ];
+
+#[cfg(test)]
+mod tests {
+    use super::PolicyId;
+
+    #[test]
+    fn policy_id_parse_display_roundtrip() {
+        for s in [
+            "fcfs",
+            "first-fit",
+            "msf",
+            "msfq",
+            "msfq:31",
+            "static-qs",
+            "static-qs:7",
+            "adaptive-qs",
+            "nmsr",
+            "nmsr:50",
+            "server-filling",
+            "msr-seq",
+            "msr-seq:25",
+            "msr-rand",
+            "msr-rand:12.5",
+        ] {
+            let id = PolicyId::parse(s).unwrap();
+            assert_eq!(id.to_string(), s, "canonical spelling must round-trip");
+            assert_eq!(PolicyId::parse(&id.to_string()).unwrap(), id);
+        }
+        // Aliases parse to the canonical id.
+        assert_eq!(PolicyId::parse("ff").unwrap(), PolicyId::FirstFit);
+        assert_eq!(PolicyId::parse("sf").unwrap(), PolicyId::ServerFilling);
+        assert_eq!(PolicyId::parse("staticqs:3").unwrap(), PolicyId::StaticQs(Some(3)));
+        // FromStr mirrors parse.
+        assert_eq!("msfq:7".parse::<PolicyId>().unwrap(), PolicyId::Msfq(Some(7)));
+    }
+
+    #[test]
+    fn policy_id_errors_list_valid_policies() {
+        let err = PolicyId::parse("bogus").unwrap_err().to_string();
+        assert!(err.contains("unknown policy 'bogus'"), "{err}");
+        for name in PolicyId::ALL {
+            assert!(err.contains(name), "error must list {name}: {err}");
+        }
+        assert!(PolicyId::parse("msfq:abc").is_err());
+        assert!(PolicyId::parse("fcfs:3").is_err());
+    }
+
+    #[test]
+    fn policy_id_env_suffix() {
+        assert_eq!(PolicyId::Msfq(Some(31)).env_suffix(), "MSFQ");
+        assert_eq!(PolicyId::FirstFit.env_suffix(), "FIRST_FIT");
+        assert_eq!(PolicyId::MsrSeq(None).env_suffix(), "MSR_SEQ");
+    }
+}

@@ -29,21 +29,39 @@ impl Msf {
 /// entirely. Returns the number of admissions pushed.
 pub(crate) fn msf_admit(sys: &SysView<'_>, out: &mut Decision) -> usize {
     let idx = sys.queue_index();
-    let mut free = sys.free();
     let mut count = 0;
     let mut bound = idx.num_ranks();
     // Ranks decrease strictly, so each class is visited at most once and
     // the engine-maintained queued counts stay valid mid-consult.
-    while let Some(rank) = idx.max_fitting_rank_below(bound, free) {
-        let c = idx.class_at_rank(rank);
-        let need = idx.need_at_rank(rank);
-        let can_take = ((free / need) as usize).min(sys.queued[c] as usize);
-        for id in sys.queued_iter(c).take(can_take) {
-            out.admit.push(id);
-            free -= need;
-            count += 1;
+    if sys.capacity.is_scalar() {
+        let mut free = sys.free();
+        while let Some(rank) = idx.max_fitting_rank_below(bound, free) {
+            let c = idx.class_at_rank(rank);
+            let need = idx.need_at_rank(rank);
+            let can_take = ((free / need) as usize).min(sys.queued[c] as usize);
+            for id in sys.queued_iter(c).take(can_take) {
+                out.admit.push(id);
+                free -= need;
+                count += 1;
+            }
+            bound = rank;
         }
-        bound = rank;
+    } else {
+        // Vector twin: the same descending server-need walk, but each
+        // candidate class must fit its whole demand vector and the batch
+        // size comes from vector packing.
+        let mut free = sys.free_vec();
+        while let Some(rank) = idx.max_dominated_rank_below(bound, &free) {
+            let c = idx.class_at_rank(rank);
+            let demand = idx.demand_of(c);
+            let can_take = (demand.max_pack(&free) as usize).min(sys.queued[c] as usize);
+            for id in sys.queued_iter(c).take(can_take) {
+                out.admit.push(id);
+                free.sub_assign(&demand);
+                count += 1;
+            }
+            bound = rank;
+        }
     }
     count
 }
@@ -54,8 +72,10 @@ impl Policy for Msf {
     }
 
     fn schedule(&mut self, sys: &SysView<'_>, out: &mut Decision) {
-        if self.cache && sys.free() < sys.min_queued_need() {
-            return; // exact: no queued job fits, the consult is empty
+        // Exact: no queued job fits, the consult is empty. At d=1 this
+        // is the scalar `free() < min_queued_need()` watermark.
+        if self.cache && !sys.queue_index().queued_demand_fits(&sys.free_vec()) {
+            return;
         }
         msf_admit(sys, out);
     }

@@ -45,19 +45,24 @@ impl Msfq {
             "quickswap threshold ell={ell} must be < k={}",
             wl.k
         );
+        anyhow::ensure!(
+            wl.dims() == 1,
+            "MSFQ requires the scalar (servers-only) model, got {} resource dimensions",
+            wl.dims()
+        );
         let mut light = None;
         let mut heavy = None;
         for (c, cl) in wl.classes.iter().enumerate() {
-            if cl.need == 1 {
+            if cl.need() == 1 {
                 anyhow::ensure!(light.is_none(), "multiple light classes");
                 light = Some(c);
-            } else if cl.need == wl.k {
+            } else if cl.need() == wl.k {
                 anyhow::ensure!(heavy.is_none(), "multiple heavy classes");
                 heavy = Some(c);
             } else {
                 anyhow::bail!(
                     "MSFQ requires a one-or-all workload; class {c} needs {} of {}",
-                    cl.need,
+                    cl.need(),
                     wl.k
                 );
             }

@@ -1,27 +1,28 @@
-//! Nonpreemptive Markovian Service Rate (nMSR) policy, reimplemented from
-//! its description in [13] (Chen, Grosof & Berg 2025): precompute one
-//! saturated schedule per class (⌊k/need⌋ slots), and switch between
-//! schedules according to a continuous-time Markov chain that is
-//! *independent of queue lengths*. Because switching ignores the state,
-//! capacity is wasted whenever the active schedule's class has too few
-//! jobs — exactly the weakness Quickswap fixes.
+//! Random-walk Markovian Service Rate (MSR-Rand), after the MSR
+//! framework of [13] (Chen, Grosof & Berg): the same precomputed
+//! saturated configurations as [`crate::policy::MsrSeq`] (one per class,
+//! ⌊capacity/demand⌋ slots under the vector model), but the modulating
+//! chain is a genuine CTMC random walk — exponential holding times with
+//! a common mean, and the jump chain picking the next configuration
+//! **uniformly at random** among the other classes, independent of queue
+//! lengths. Switches are nonpreemptive: admissions stop, the outgoing
+//! configuration drains, then the sampled successor activates.
 //!
-//! Chain: cycle over schedules with exponential holding times whose means
-//! are proportional to each class's required capacity share
-//! s_i ∝ λ_i/(⌊k/need_i⌋·μ_i) (plus uniform slack), scaled by a nominal
-//! cycle length. When the timer fires the policy stops admitting, drains,
-//! and activates the next schedule.
+//! The chain runs on a dedicated fixed-seed policy-internal RNG, so a
+//! given policy instance's configuration trajectory is deterministic
+//! across runs and independent of the workload's arrival/size streams.
 
 use crate::policy::{ClassId, Decision, PhaseLabel, Policy, SysView};
 use crate::util::rng::Rng;
 use crate::workload::Workload;
 
 #[derive(Debug)]
-pub struct Nmsr {
-    order: Vec<ClassId>,
-    /// Mean holding time per schedule (exponential).
-    hold_mean: Vec<f64>,
-    cur: usize,
+pub struct MsrRand {
+    /// Number of configurations (= classes).
+    m: usize,
+    /// Mean exponential holding time per configuration.
+    hold_mean: f64,
+    cur: ClassId,
     switching: bool,
     timer_armed: bool,
     rng: Rng,
@@ -29,40 +30,30 @@ pub struct Nmsr {
     cache: bool,
 }
 
-impl Nmsr {
-    /// `cycle` = nominal total cycle duration (sum of mean holds).
-    pub fn new(wl: &Workload, cycle: f64) -> anyhow::Result<Nmsr> {
+impl MsrRand {
+    /// `cycle` = nominal full-tour duration: the mean holding time is
+    /// `cycle / num_classes`, matching MSR-Seq's total dwell per tour in
+    /// expectation.
+    pub fn new(wl: &Workload, cycle: f64) -> anyhow::Result<MsrRand> {
         anyhow::ensure!(cycle > 0.0, "cycle must be positive");
         let m = wl.num_classes();
-        // Required capacity share per class under its own schedule.
-        let mut share: Vec<f64> = wl
-            .classes
-            .iter()
-            .map(|c| {
-                let slots = c.demand.max_pack(&wl.capacity).max(1) as f64;
-                c.rate * c.size.mean() / slots
-            })
-            .collect();
-        let total: f64 = share.iter().sum();
-        anyhow::ensure!(total > 0.0, "workload has no load");
-        // Normalize and mix with uniform slack so every schedule gets
-        // strictly positive time even for tiny classes.
-        for s in share.iter_mut() {
-            *s = 0.9 * (*s / total) + 0.1 / m as f64;
-        }
-        Ok(Nmsr {
-            order: (0..m).collect(),
-            hold_mean: share.iter().map(|s| s * cycle).collect(),
+        anyhow::ensure!(
+            wl.classes.iter().any(|c| c.rate > 0.0),
+            "workload has no load"
+        );
+        Ok(MsrRand {
+            m,
+            hold_mean: cycle / m as f64,
             cur: 0,
             switching: false,
             timer_armed: false,
-            rng: Rng::new(0x6d73725f), // deterministic: policy-internal chain
+            rng: Rng::new(0x6d737272), // deterministic: policy-internal chain
             cache: false,
         })
     }
 
     fn admit_current(&self, sys: &SysView<'_>, out: &mut Decision) {
-        let c = self.order[self.cur];
+        let c = self.cur;
         let slots = sys.demands[c].max_pack(&sys.capacity);
         let can = (slots.saturating_sub(sys.running[c])).min(sys.queued[c]) as usize;
         // Capacity check: other classes may still be draining.
@@ -88,31 +79,40 @@ impl Nmsr {
             }
         }
     }
+
+    /// Jump chain: uniform over the other configurations (self-loops
+    /// excluded so every switch actually changes the service set; with a
+    /// single class the walk stays put).
+    fn next_config(&mut self) -> ClassId {
+        if self.m <= 1 {
+            return self.cur;
+        }
+        let step = 1 + self.rng.index(self.m - 1);
+        (self.cur + step) % self.m
+    }
 }
 
-impl Policy for Nmsr {
+impl Policy for MsrRand {
     fn name(&self) -> String {
-        "nMSR".into()
+        "MSR-Rand".into()
     }
 
     fn schedule(&mut self, sys: &SysView<'_>, out: &mut Decision) {
-        // Consult-cache fast path. Once the modulating chain is armed,
-        // a consult is a no-op (no admissions, no RNG draws, no state
-        // change) exactly when: mid-switch with the previous schedule
-        // still draining, or the active schedule cannot start a job
-        // (slots full, nothing queued, or draining classes hold the
-        // capacity). Unarmed and advance-the-chain consults fall
-        // through — they draw from the policy RNG, so skipping them
-        // would desynchronize cached and uncached trajectories.
+        // Consult-cache fast path. Once the modulating chain is armed, a
+        // consult is a no-op (no admissions, no RNG draws, no state
+        // change) exactly when mid-switch with the outgoing configuration
+        // still draining, or when the active configuration cannot start a
+        // job. Unarmed and advance-the-chain consults fall through — they
+        // draw from the policy RNG, so skipping them would desynchronize
+        // cached and uncached trajectories.
         if self.cache && self.timer_armed {
             if self.switching {
                 if sys.used > 0 {
                     return;
                 }
             } else {
-                // Fit check via the queue index's per-class counts.
                 let idx = sys.queue_index();
-                let c = self.order[self.cur];
+                let c = self.cur;
                 let slots = sys.demands[c].max_pack(&sys.capacity);
                 let can = slots.saturating_sub(idx.running_of(c)).min(idx.queued_of(c));
                 if can == 0 || !idx.can_admit_vec(c, &sys.free_vec()) {
@@ -123,17 +123,17 @@ impl Policy for Nmsr {
         if !self.timer_armed {
             // First consult: arm the modulating chain.
             self.timer_armed = true;
-            let hold = self.rng.exp(1.0 / self.hold_mean[self.cur]);
+            let hold = self.rng.exp(1.0 / self.hold_mean);
             out.set_timer = Some(sys.now + hold);
         }
         if self.switching {
-            // Wait for the previous schedule to drain completely.
+            // Wait for the previous configuration to drain completely.
             if sys.used > 0 {
                 return;
             }
             self.switching = false;
-            self.cur = (self.cur + 1) % self.order.len();
-            let hold = self.rng.exp(1.0 / self.hold_mean[self.cur]);
+            self.cur = self.next_config();
+            let hold = self.rng.exp(1.0 / self.hold_mean);
             out.set_timer = Some(sys.now + hold);
         }
         self.admit_current(sys, out);
@@ -174,43 +174,44 @@ mod tests {
     }
 
     #[test]
-    fn serves_only_active_schedule() {
+    fn serves_only_active_configuration() {
         let w = wl();
-        let mut p = Nmsr::new(&w, 10.0).unwrap();
+        let mut p = MsrRand::new(&w, 10.0).unwrap();
         let mut h = Harness::new(4, &[1, 4]);
         h.arrive(0, 0.0);
         h.arrive(1, 0.1);
         let adm = h.consult(&mut p);
-        // Schedule 0 = class 0 (need 1): only lights admitted.
         assert_eq!(adm.len(), 1);
         assert_eq!(h.running[0], 1);
-        assert_eq!(h.running[1], 0, "inactive schedule gets nothing");
+        assert_eq!(h.running[1], 0, "inactive configuration gets nothing");
     }
 
     #[test]
-    fn switch_drains_then_advances() {
+    fn switch_drains_then_jumps_elsewhere() {
         let w = wl();
-        let mut p = Nmsr::new(&w, 10.0).unwrap();
+        let mut p = MsrRand::new(&w, 10.0).unwrap();
         let mut h = Harness::new(4, &[1, 4]);
         let l = h.arrive(0, 0.0);
         let hv = h.arrive(1, 0.1);
         h.consult(&mut p);
-        // Chain fires: switching begins; no admissions until drain done.
         p.on_timer(1.0);
         h.arrive(0, 1.1);
-        assert!(h.consult(&mut p).is_empty());
+        assert!(h.consult(&mut p).is_empty(), "no admissions while draining");
         h.complete(l, 2.0);
-        // Drained → schedule advances to class 1 → heavy admitted.
+        // With two classes the self-loop-free walk must land on class 1.
         let adm = h.consult(&mut p);
         assert_eq!(adm, vec![hv]);
+        assert_eq!(p.cur, 1);
     }
 
     #[test]
-    fn share_sums_reasonable() {
+    fn chain_is_deterministic_per_instance() {
         let w = wl();
-        let p = Nmsr::new(&w, 10.0).unwrap();
-        let total: f64 = p.hold_mean.iter().sum();
-        assert!((total - 10.0).abs() < 1e-9);
-        assert!(p.hold_mean.iter().all(|&h| h > 0.0));
+        let mk = || MsrRand::new(&w, 10.0).unwrap();
+        let (mut a, mut b) = (mk(), mk());
+        let mut sequence = |p: &mut MsrRand| -> Vec<ClassId> {
+            (0..16).map(|_| p.next_config()).collect()
+        };
+        assert_eq!(sequence(&mut a), sequence(&mut b));
     }
 }

@@ -1,40 +1,41 @@
-//! Nonpreemptive Markovian Service Rate (nMSR) policy, reimplemented from
-//! its description in [13] (Chen, Grosof & Berg 2025): precompute one
-//! saturated schedule per class (⌊k/need⌋ slots), and switch between
-//! schedules according to a continuous-time Markov chain that is
-//! *independent of queue lengths*. Because switching ignores the state,
-//! capacity is wasted whenever the active schedule's class has too few
-//! jobs — exactly the weakness Quickswap fixes.
+//! Sequential Markovian Service Rate (MSR-Seq), after the MSR framework
+//! of [13] (Chen, Grosof & Berg): serve from a set of precomputed
+//! saturated configurations — one per class, ⌊capacity/demand⌋ slots
+//! under the vector model — and modulate which configuration is active
+//! by a process that is *independent of queue lengths*. MSR-Seq is the
+//! periodic member of the family: the configuration chain visits classes
+//! in a fixed cyclic order and dwells on each for a **deterministic**
+//! time proportional to the class's required capacity share (the
+//! degenerate CTMC whose holding distributions are point masses).
+//! Switches are nonpreemptive: admissions stop, the outgoing
+//! configuration drains, then the next activates.
 //!
-//! Chain: cycle over schedules with exponential holding times whose means
-//! are proportional to each class's required capacity share
-//! s_i ∝ λ_i/(⌊k/need_i⌋·μ_i) (plus uniform slack), scaled by a nominal
-//! cycle length. When the timer fires the policy stops admitting, drains,
-//! and activates the next schedule.
+//! Contrast [`crate::policy::Nmsr`] (exponential holding times over the
+//! same cycle) and [`crate::policy::MsrRand`] (uniform random-walk jump
+//! chain). All three waste capacity whenever the active configuration's
+//! class runs out of jobs — the weakness Quickswap repairs.
 
 use crate::policy::{ClassId, Decision, PhaseLabel, Policy, SysView};
-use crate::util::rng::Rng;
 use crate::workload::Workload;
 
 #[derive(Debug)]
-pub struct Nmsr {
+pub struct MsrSeq {
     order: Vec<ClassId>,
-    /// Mean holding time per schedule (exponential).
-    hold_mean: Vec<f64>,
+    /// Deterministic dwell time per configuration.
+    hold: Vec<f64>,
     cur: usize,
     switching: bool,
     timer_armed: bool,
-    rng: Rng,
     /// Incremental consult cache enabled (engine-driven).
     cache: bool,
 }
 
-impl Nmsr {
-    /// `cycle` = nominal total cycle duration (sum of mean holds).
-    pub fn new(wl: &Workload, cycle: f64) -> anyhow::Result<Nmsr> {
+impl MsrSeq {
+    /// `cycle` = total cycle duration (sum of the per-class dwells).
+    pub fn new(wl: &Workload, cycle: f64) -> anyhow::Result<MsrSeq> {
         anyhow::ensure!(cycle > 0.0, "cycle must be positive");
         let m = wl.num_classes();
-        // Required capacity share per class under its own schedule.
+        // Required capacity share per class under its own configuration.
         let mut share: Vec<f64> = wl
             .classes
             .iter()
@@ -45,18 +46,17 @@ impl Nmsr {
             .collect();
         let total: f64 = share.iter().sum();
         anyhow::ensure!(total > 0.0, "workload has no load");
-        // Normalize and mix with uniform slack so every schedule gets
-        // strictly positive time even for tiny classes.
+        // Normalize and mix with uniform slack so every configuration
+        // gets strictly positive time even for tiny classes.
         for s in share.iter_mut() {
             *s = 0.9 * (*s / total) + 0.1 / m as f64;
         }
-        Ok(Nmsr {
+        Ok(MsrSeq {
             order: (0..m).collect(),
-            hold_mean: share.iter().map(|s| s * cycle).collect(),
+            hold: share.iter().map(|s| s * cycle).collect(),
             cur: 0,
             switching: false,
             timer_armed: false,
-            rng: Rng::new(0x6d73725f), // deterministic: policy-internal chain
             cache: false,
         })
     }
@@ -90,27 +90,23 @@ impl Nmsr {
     }
 }
 
-impl Policy for Nmsr {
+impl Policy for MsrSeq {
     fn name(&self) -> String {
-        "nMSR".into()
+        "MSR-Seq".into()
     }
 
     fn schedule(&mut self, sys: &SysView<'_>, out: &mut Decision) {
-        // Consult-cache fast path. Once the modulating chain is armed,
-        // a consult is a no-op (no admissions, no RNG draws, no state
-        // change) exactly when: mid-switch with the previous schedule
-        // still draining, or the active schedule cannot start a job
-        // (slots full, nothing queued, or draining classes hold the
-        // capacity). Unarmed and advance-the-chain consults fall
-        // through — they draw from the policy RNG, so skipping them
-        // would desynchronize cached and uncached trajectories.
+        // Consult-cache fast path: once the modulating clock is armed, a
+        // consult is a no-op exactly when mid-switch with the outgoing
+        // configuration still draining, or when the active configuration
+        // cannot start a job. The chain itself is deterministic (no RNG),
+        // so skips can never desynchronize it.
         if self.cache && self.timer_armed {
             if self.switching {
                 if sys.used > 0 {
                     return;
                 }
             } else {
-                // Fit check via the queue index's per-class counts.
                 let idx = sys.queue_index();
                 let c = self.order[self.cur];
                 let slots = sys.demands[c].max_pack(&sys.capacity);
@@ -121,20 +117,18 @@ impl Policy for Nmsr {
             }
         }
         if !self.timer_armed {
-            // First consult: arm the modulating chain.
+            // First consult: arm the modulating clock.
             self.timer_armed = true;
-            let hold = self.rng.exp(1.0 / self.hold_mean[self.cur]);
-            out.set_timer = Some(sys.now + hold);
+            out.set_timer = Some(sys.now + self.hold[self.cur]);
         }
         if self.switching {
-            // Wait for the previous schedule to drain completely.
+            // Wait for the previous configuration to drain completely.
             if sys.used > 0 {
                 return;
             }
             self.switching = false;
             self.cur = (self.cur + 1) % self.order.len();
-            let hold = self.rng.exp(1.0 / self.hold_mean[self.cur]);
-            out.set_timer = Some(sys.now + hold);
+            out.set_timer = Some(sys.now + self.hold[self.cur]);
         }
         self.admit_current(sys, out);
     }
@@ -174,43 +168,67 @@ mod tests {
     }
 
     #[test]
-    fn serves_only_active_schedule() {
+    fn serves_only_active_configuration() {
         let w = wl();
-        let mut p = Nmsr::new(&w, 10.0).unwrap();
+        let mut p = MsrSeq::new(&w, 10.0).unwrap();
         let mut h = Harness::new(4, &[1, 4]);
         h.arrive(0, 0.0);
         h.arrive(1, 0.1);
         let adm = h.consult(&mut p);
-        // Schedule 0 = class 0 (need 1): only lights admitted.
+        // Configuration 0 = class 0 (need 1): only lights admitted.
         assert_eq!(adm.len(), 1);
         assert_eq!(h.running[0], 1);
-        assert_eq!(h.running[1], 0, "inactive schedule gets nothing");
+        assert_eq!(h.running[1], 0, "inactive configuration gets nothing");
     }
 
     #[test]
     fn switch_drains_then_advances() {
         let w = wl();
-        let mut p = Nmsr::new(&w, 10.0).unwrap();
+        let mut p = MsrSeq::new(&w, 10.0).unwrap();
         let mut h = Harness::new(4, &[1, 4]);
         let l = h.arrive(0, 0.0);
         let hv = h.arrive(1, 0.1);
         h.consult(&mut p);
-        // Chain fires: switching begins; no admissions until drain done.
+        // Clock fires: switching begins; no admissions until drain done.
         p.on_timer(1.0);
         h.arrive(0, 1.1);
         assert!(h.consult(&mut p).is_empty());
         h.complete(l, 2.0);
-        // Drained → schedule advances to class 1 → heavy admitted.
+        // Drained → configuration advances to class 1 → heavy admitted.
         let adm = h.consult(&mut p);
         assert_eq!(adm, vec![hv]);
     }
 
     #[test]
-    fn share_sums_reasonable() {
+    fn dwells_sum_to_cycle() {
         let w = wl();
-        let p = Nmsr::new(&w, 10.0).unwrap();
-        let total: f64 = p.hold_mean.iter().sum();
+        let p = MsrSeq::new(&w, 10.0).unwrap();
+        let total: f64 = p.hold.iter().sum();
         assert!((total - 10.0).abs() < 1e-9);
-        assert!(p.hold_mean.iter().all(|&h| h > 0.0));
+        assert!(p.hold.iter().all(|&h| h > 0.0));
+    }
+
+    /// On a 2-resource workload the configuration size comes from vector
+    /// packing: class demands (2, 8) into capacity (8, 16) → 2 slots,
+    /// bound by the memory dimension, not the 4 the servers alone allow.
+    #[test]
+    fn vector_configuration_uses_max_pack() {
+        use crate::workload::ResourceVec;
+        let w = Workload::with_capacity(
+            ResourceVec::new(&[8, 16]),
+            vec![ClassSpec::with_demand(
+                ResourceVec::new(&[2, 8]),
+                1.0,
+                Dist::exp_mean(1.0),
+            )],
+        );
+        let mut p = MsrSeq::new(&w, 10.0).unwrap();
+        let mut h = Harness::with_capacity(w.capacity, &w.demands());
+        for i in 0..4 {
+            h.arrive(0, i as f64 * 0.01);
+        }
+        let adm = h.consult(&mut p);
+        assert_eq!(adm.len(), 2, "memory dimension must cap the configuration");
+        assert_eq!(h.used(), 4);
     }
 }

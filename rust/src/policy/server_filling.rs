@@ -22,12 +22,12 @@
 //! (always, in driver operation: the prefix end is monotone in arrival
 //! order, so running jobs never fall out of it).
 
-use crate::policy::{Decision, JobId, PhaseLabel, Policy, SysView};
+use crate::policy::{ClassId, Decision, JobId, PhaseLabel, Policy, SysView};
 
 #[derive(Debug)]
 pub struct ServerFilling {
-    /// Scratch: candidate prefix (id, need, running, selected).
-    prefix: Vec<(JobId, u32, bool, bool)>,
+    /// Scratch: candidate prefix (id, class, running, selected).
+    prefix: Vec<(JobId, ClassId, bool, bool)>,
     /// Incremental consult cache enabled (engine-driven).
     cache: bool,
     /// Prefix version at the last full recompute (`u64::MAX` = none).
@@ -76,20 +76,35 @@ impl Policy for ServerFilling {
                 return false;
             }
             left -= 1;
-            prefix.push((id, sys.needs[class], running, false));
+            prefix.push((id, class, running, false));
             running_in_prefix += u32::from(running);
             left > 0
         });
         debug_assert_eq!(self.prefix.len() as u32, sys.jobs.prefix_len());
 
         // 2. Largest-need-first greedy fill within the prefix
-        //    (stable: arrival order breaks ties).
-        self.prefix.sort_by_key(|&(_, need, _, _)| std::cmp::Reverse(need));
-        let mut free = sys.k;
-        for e in self.prefix.iter_mut() {
-            if e.1 <= free {
-                e.3 = true;
-                free -= e.1;
+        //    (stable: arrival order breaks ties). Under the vector model
+        //    the order key stays the server need; the fit check is the
+        //    whole demand vector.
+        self.prefix
+            .sort_by_key(|&(_, class, _, _)| std::cmp::Reverse(sys.needs[class]));
+        if sys.capacity.is_scalar() {
+            let mut free = sys.k;
+            for e in self.prefix.iter_mut() {
+                let need = sys.needs[e.1];
+                if need <= free {
+                    e.3 = true;
+                    free -= need;
+                }
+            }
+        } else {
+            let mut free = sys.capacity;
+            for e in self.prefix.iter_mut() {
+                let demand = sys.demands[e.1];
+                if demand.fits_in(&free) {
+                    e.3 = true;
+                    free.sub_assign(&demand);
+                }
             }
         }
 

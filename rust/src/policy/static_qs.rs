@@ -61,7 +61,7 @@ impl Policy for StaticQuickswap {
             let idx = sys.queue_index();
             let c = self.cycle[self.cur];
             let need = sys.needs[c];
-            let slots = sys.k / need;
+            let slots = sys.demands[c].max_pack(&sys.capacity);
             if self.draining {
                 if idx.running_of(c) > 0 {
                     return;
@@ -78,7 +78,9 @@ impl Policy for StaticQuickswap {
         for _ in 0..=self.cycle.len() {
             let c = self.cycle[self.cur];
             let need = sys.needs[c];
-            let slots = sys.k / need;
+            // Exclusive service means `slots` copies of the class's whole
+            // demand vector always fit; at d=1 this is the scalar ⌊k/need⌋.
+            let slots = sys.demands[c].max_pack(&sys.capacity);
 
             if self.draining {
                 if sys.running[c] > 0 {

@@ -5,32 +5,50 @@
 
 use crate::policy::{Decision, JobId, Policy, SysView};
 use crate::sim::job::{ClassFifos, JobState, JobTable, QueueIndex};
+use crate::workload::ResourceVec;
 
 pub struct Harness {
     pub k: u32,
     pub needs: Vec<u32>,
+    /// Full demand vectors (dimension-0 projection == `needs`).
+    pub demands: Vec<ResourceVec>,
+    /// Full capacity vector (dimension 0 == `k`).
+    pub capacity: ResourceVec,
     pub jobs: JobTable,
     fifos: ClassFifos,
     index: QueueIndex,
     pub queued: Vec<u32>,
     pub running: Vec<u32>,
     used: u32,
+    used_vec: ResourceVec,
     pub now: f64,
 }
 
 impl Harness {
+    /// Scalar (servers-only) harness — the original model.
     pub fn new(k: u32, needs: &[u32]) -> Harness {
+        let demands: Vec<ResourceVec> = needs.iter().map(|&n| ResourceVec::scalar(n)).collect();
+        Harness::with_capacity(ResourceVec::scalar(k), &demands)
+    }
+
+    /// Multiresource harness over an explicit capacity vector.
+    pub fn with_capacity(capacity: ResourceVec, demands: &[ResourceVec]) -> Harness {
+        let k = capacity.servers();
+        let needs: Vec<u32> = demands.iter().map(|d| d.servers()).collect();
         let mut jobs = JobTable::new();
         jobs.set_prefix_threshold(k as u64);
         Harness {
             k,
-            needs: needs.to_vec(),
+            needs,
+            demands: demands.to_vec(),
+            capacity,
             jobs,
-            fifos: ClassFifos::new(needs.len()),
-            index: QueueIndex::new(needs),
-            queued: vec![0; needs.len()],
-            running: vec![0; needs.len()],
+            fifos: ClassFifos::new(demands.len()),
+            index: QueueIndex::with_demands(demands),
+            queued: vec![0; demands.len()],
+            running: vec![0; demands.len()],
             used: 0,
+            used_vec: ResourceVec::zero(capacity.dims()),
             now: 0.0,
         }
     }
@@ -42,7 +60,10 @@ impl Harness {
             now: self.now,
             k: self.k,
             used: self.used,
+            capacity: self.capacity,
+            used_vec: self.used_vec,
             needs: &self.needs,
+            demands: &self.demands,
             queued: &self.queued,
             running: &self.running,
             jobs: &self.jobs,
@@ -80,6 +101,7 @@ impl Harness {
         let class = self.jobs.class(id);
         let need = self.jobs.need(id);
         self.used -= need;
+        self.used_vec.sub_assign(&self.demands[class]);
         self.index.on_depart(class);
         self.running[class] -= 1;
         self.jobs.remove(id);
@@ -127,6 +149,7 @@ impl Harness {
         let class = self.jobs.class(id);
         let need = self.jobs.need(id);
         self.used -= need;
+        self.used_vec.sub_assign(&self.demands[class]);
         self.index.on_preempt(class);
         self.running[class] -= 1;
         self.queued[class] += 1;
@@ -138,9 +161,14 @@ impl Harness {
         let class = self.jobs.class(id);
         let need = self.jobs.need(id);
         assert!(self.used + need <= self.k, "capacity violated");
+        assert!(
+            self.demands[class].fits_in(&self.capacity.saturating_sub(&self.used_vec)),
+            "vector capacity violated"
+        );
         self.fifos.remove(class, JobTable::slot_of(id));
         self.jobs.start_service(id, self.now);
         self.used += need;
+        self.used_vec.add_assign(&self.demands[class]);
         self.index.on_admit(class);
         self.running[class] += 1;
         self.queued[class] -= 1;

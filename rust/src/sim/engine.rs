@@ -34,7 +34,7 @@ use crate::sim::phase::PhaseStats;
 use crate::sim::schedule::{EventScheduleKind, Schedule};
 use crate::sim::timeseries::{Timeseries, TimeseriesSpec};
 use crate::util::rng::Rng;
-use crate::workload::{Arrival, ArrivalSource, Workload};
+use crate::workload::{Arrival, ArrivalSource, ResourceVec, Workload};
 
 #[derive(Clone, Debug)]
 pub struct SimConfig {
@@ -100,6 +100,10 @@ impl SimConfig {
 pub struct Engine {
     k: u32,
     needs: Vec<u32>,
+    /// Full per-class demand vectors (`needs` is the dim-0 projection).
+    demands: Vec<ResourceVec>,
+    /// Resource capacity (dim 0 mirrors `k`).
+    capacity: ResourceVec,
     cfg: SimConfig,
     wl: Workload,
 
@@ -114,6 +118,8 @@ pub struct Engine {
     running: Vec<u32>,
     n_by_class: Vec<u32>,
     used: u32,
+    /// Per-dimension usage (dim 0 mirrors `used`).
+    used_vec: ResourceVec,
 
     events: Schedule,
     timer_seq: u64,
@@ -140,17 +146,20 @@ impl Engine {
         Engine {
             k: wl.k,
             needs: wl.needs(),
+            demands: wl.demands(),
+            capacity: wl.capacity,
             metrics: Metrics::new(nc, cfg.batch),
             cfg,
             wl: wl.clone(),
             now: 0.0,
             jobs,
             fifos: ClassFifos::new(nc),
-            index: QueueIndex::new(&wl.needs()),
+            index: QueueIndex::with_demands(&wl.demands()),
             queued: vec![0; nc],
             running: vec![0; nc],
             n_by_class: vec![0; nc],
             used: 0,
+            used_vec: ResourceVec::zero(wl.dims()),
             events: Schedule::new(schedule),
             timer_seq: 0,
             pending_arrival: None,
@@ -181,6 +190,7 @@ impl Engine {
             *n = 0;
         }
         self.used = 0;
+        self.used_vec = ResourceVec::zero(self.capacity.dims());
         self.events.clear();
         self.timer_seq = 0;
         self.pending_arrival = None;
@@ -213,7 +223,10 @@ impl Engine {
             now: self.now,
             k: self.k,
             used: self.used,
+            capacity: self.capacity,
+            used_vec: self.used_vec,
             needs: &self.needs,
+            demands: &self.demands,
             queued: &self.queued,
             running: &self.running,
             jobs: &self.jobs,
@@ -362,6 +375,7 @@ impl Engine {
         let need = self.jobs.need(id);
         let arrival = self.jobs.arrival(id);
         self.used -= need;
+        self.used_vec.sub_assign(&self.demands[class]);
         self.index.on_depart(class);
         self.running[class] -= 1;
         self.n_by_class[class] -= 1;
@@ -414,6 +428,7 @@ impl Engine {
         let class = self.jobs.class(id);
         let need = self.jobs.need(id);
         self.used -= need;
+        self.used_vec.sub_assign(&self.demands[class]);
         self.index.on_preempt(class);
         self.running[class] -= 1;
         self.queued[class] += 1;
@@ -431,19 +446,21 @@ impl Engine {
         );
         let class = self.jobs.class(id);
         let need = self.jobs.need(id);
+        let demand = self.demands[class];
         assert!(
-            self.used + need <= self.k,
-            "policy {} violated capacity: used={} need={} k={}",
+            demand.fits_in(&self.capacity.saturating_sub(&self.used_vec)),
+            "policy {} violated capacity: used={} demand={} capacity={}",
             policy.name(),
-            self.used,
-            need,
-            self.k
+            self.used_vec,
+            demand,
+            self.capacity
         );
         // O(1) removal from any FIFO position (intrusive links).
         self.fifos.remove(class, JobTable::slot_of(id));
         self.jobs.start_service(id, self.now);
         let depart_at = self.now + self.jobs.remaining(id);
         self.used += need;
+        self.used_vec.add_assign(&demand);
         self.index.on_admit(class);
         self.running[class] += 1;
         self.queued[class] -= 1;
@@ -513,7 +530,7 @@ mod tests {
             warmup_completions: 4_000,
             ..Default::default()
         };
-        let r = crate::sim::run_named(&wl, "server-filling", &cfg, 3).unwrap();
+        let r = crate::sim::run_policy(&wl, &"server-filling".parse().unwrap(), &cfg, 3).unwrap();
         assert_eq!(r.completed, 20_000);
         assert!(r.mean_t_all.is_finite() && r.mean_t_all > 0.0);
         assert!(r.utilization <= 1.0 + 1e-9);
@@ -532,7 +549,7 @@ mod tests {
         let run = |e: &mut Engine| {
             let mut src = SyntheticSource::new(wl.clone());
             let mut rng = Rng::new(42);
-            let mut p = crate::policy::by_name("msfq:3", &wl).unwrap();
+            let mut p = crate::policy::build(&"msfq:3".parse().unwrap(), &wl).unwrap();
             e.run(&mut src, p.as_mut(), &mut rng)
         };
         let a = run(&mut engine);

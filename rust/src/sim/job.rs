@@ -23,6 +23,7 @@
 //!   and backfilling policies admit from the middle constantly).
 
 use crate::policy::{ClassId, JobId};
+use crate::workload::ResourceVec;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum JobState {
@@ -177,10 +178,31 @@ impl FenwickSum {
 /// the post-event consult, these queries are **exact** at consult time —
 /// unlike the former conservative watermarks, they stay exact across
 /// admission batches and need no reset on swap epochs.
+///
+/// **Multiresource (d > 1) generalization — the dominance index.** Under
+/// the vector model a job fits iff its whole demand vector is dominated
+/// by the free vector. The scalar structures above stay authoritative
+/// for dimension 0 (servers), and each extra dimension gets its own
+/// rank order + Fenwick count tree. Vector queries then compose:
+///
+/// * **quick rejection** is exact — if any dimension's fitting count is
+///   zero (`prefix` over that dimension's ranks), no queued job can fit,
+///   no scan needed;
+/// * otherwise the query falls back to an exact O(C) scan over classes
+///   with queued jobs (C ≤ 26 in every shipped workload), so every
+///   consult-skip predicate stays **exact**, never conservative.
+///
+/// At d=1 the vector side is empty and every query routes through the
+/// unchanged scalar path — d=1 is bit-identical to the scalar model by
+/// construction (differential goldens in `tests/prop_dominance.rs`).
 #[derive(Debug, Default)]
 pub struct QueueIndex {
-    /// Class need per class id.
+    /// Class need per class id (dimension-0 projection of `demands`).
     needs: Vec<u32>,
+    /// Full per-class demand vectors.
+    demands: Vec<ResourceVec>,
+    /// Resource dimensions (1 = scalar model).
+    dims: usize,
     /// class id -> rank in (need asc, class id desc) order.
     rank_of: Vec<u32>,
     /// rank -> class id.
@@ -192,6 +214,13 @@ pub struct QueueIndex {
     /// Queued **need sums** per rank (the need-weighted Fenwick): bounds
     /// First-Fit's arrival-order scan by the total fitting mass.
     wtree: FenwickSum,
+    /// Per extra dimension j in 1..dims: class id -> rank in
+    /// (demand_j asc, class id desc) order. Empty at d=1.
+    dim_rank_of: Vec<Vec<u32>>,
+    /// Per extra dimension: rank -> demand_j (ascending in rank).
+    dim_need_of_rank: Vec<Vec<u32>>,
+    /// Per extra dimension: queued counts per rank.
+    dim_tree: Vec<Fenwick>,
     /// Per-class queued / running mirrors (authoritative for the index).
     queued: Vec<u32>,
     running: Vec<u32>,
@@ -204,22 +233,54 @@ pub struct QueueIndex {
 }
 
 impl QueueIndex {
+    /// Scalar (servers-only) index — the original model.
     pub fn new(needs: &[u32]) -> QueueIndex {
+        let demands: Vec<ResourceVec> = needs.iter().map(|&n| ResourceVec::scalar(n)).collect();
+        QueueIndex::with_demands(&demands)
+    }
+
+    /// Index over full demand vectors (all classes share a dimension
+    /// count). At d=1 this is exactly [`QueueIndex::new`].
+    pub fn with_demands(demands: &[ResourceVec]) -> QueueIndex {
+        let dims = demands.first().map_or(1, |d| d.dims());
+        debug_assert!(demands.iter().all(|d| d.dims() == dims));
+        let needs: Vec<u32> = demands.iter().map(|d| d.servers()).collect();
         let mut ranks: Vec<usize> = (0..needs.len()).collect();
         ranks.sort_by_key(|&c| (needs[c], std::cmp::Reverse(c)));
         let mut rank_of = vec![0u32; needs.len()];
         for (r, &c) in ranks.iter().enumerate() {
             rank_of[c] = r as u32;
         }
+        // Per extra dimension: the same (demand asc, class id desc)
+        // ranking keyed on that dimension's component.
+        let mut dim_rank_of = Vec::new();
+        let mut dim_need_of_rank = Vec::new();
+        let mut dim_tree = Vec::new();
+        for j in 1..dims {
+            let mut dranks: Vec<usize> = (0..demands.len()).collect();
+            dranks.sort_by_key(|&c| (demands[c].get(j), std::cmp::Reverse(c)));
+            let mut dr_of = vec![0u32; demands.len()];
+            for (r, &c) in dranks.iter().enumerate() {
+                dr_of[c] = r as u32;
+            }
+            dim_rank_of.push(dr_of);
+            dim_need_of_rank.push(dranks.iter().map(|&c| demands[c].get(j)).collect());
+            dim_tree.push(Fenwick::new(demands.len()));
+        }
         QueueIndex {
-            needs: needs.to_vec(),
+            needs,
+            demands: demands.to_vec(),
+            dims,
             rank_of,
-            need_of_rank: ranks.iter().map(|&c| needs[c]).collect(),
+            need_of_rank: ranks.iter().map(|&c| demands[c].servers()).collect(),
             class_of_rank: ranks.iter().map(|&c| c as u32).collect(),
-            tree: Fenwick::new(needs.len()),
-            wtree: FenwickSum::new(needs.len()),
-            queued: vec![0; needs.len()],
-            running: vec![0; needs.len()],
+            tree: Fenwick::new(demands.len()),
+            wtree: FenwickSum::new(demands.len()),
+            dim_rank_of,
+            dim_need_of_rank,
+            dim_tree,
+            queued: vec![0; demands.len()],
+            running: vec![0; demands.len()],
             total_queued: 0,
             total_running: 0,
             starving: 0,
@@ -231,6 +292,9 @@ impl QueueIndex {
     pub fn clear(&mut self) {
         self.tree.clear();
         self.wtree.clear();
+        for t in &mut self.dim_tree {
+            t.clear();
+        }
         self.queued.fill(0);
         self.running.fill(0);
         self.total_queued = 0;
@@ -263,11 +327,17 @@ impl QueueIndex {
             1 => {
                 self.tree.inc(self.rank_of[c] as usize);
                 self.wtree.add(self.rank_of[c] as usize, self.needs[c] as u64);
+                for (j, t) in self.dim_tree.iter_mut().enumerate() {
+                    t.inc(self.dim_rank_of[j][c] as usize);
+                }
                 self.total_queued += 1;
             }
             -1 => {
                 self.tree.dec(self.rank_of[c] as usize);
                 self.wtree.sub(self.rank_of[c] as usize, self.needs[c] as u64);
+                for (j, t) in self.dim_tree.iter_mut().enumerate() {
+                    t.dec(self.dim_rank_of[j][c] as usize);
+                }
                 self.total_queued -= 1;
             }
             _ => {}
@@ -404,6 +474,137 @@ impl QueueIndex {
         self.starving > 0 && self.backlogged == 0
     }
 
+    // ---- dominance index: vector-fit queries (exact at every d) ----
+
+    /// Resource dimensions this index was built over (1 = scalar).
+    #[inline]
+    pub fn dims(&self) -> usize {
+        self.dims
+    }
+
+    /// Class `c`'s full demand vector.
+    #[inline]
+    pub fn demand_of(&self, c: ClassId) -> ResourceVec {
+        self.demands[c]
+    }
+
+    /// Count of queued jobs whose dimension-`j` demand is ≤ `bound` —
+    /// the per-dimension Fenwick prefix, O(log C). Exact for every
+    /// dimension; the conjunction over dimensions upper-bounds (but does
+    /// not equal) the vector-fitting count, which is what makes it a
+    /// *rejection* certificate: any dimension at zero proves no fit.
+    #[inline]
+    pub fn dim_queued_fitting(&self, j: usize, bound: u32) -> u32 {
+        if j == 0 {
+            let hi = self.need_of_rank.partition_point(|&n| n <= bound);
+            self.tree.prefix(hi)
+        } else {
+            let hi = self.dim_need_of_rank[j - 1].partition_point(|&n| n <= bound);
+            self.dim_tree[j - 1].prefix(hi)
+        }
+    }
+
+    /// True iff some dimension proves no queued job fits in `free`
+    /// (fitting count 0 there). A `false` is inconclusive at d > 1; the
+    /// exact scans below resolve it.
+    #[inline]
+    fn rejected_by_some_dim(&self, free: &ResourceVec) -> bool {
+        (0..self.dims).any(|j| self.dim_queued_fitting(j, free.get(j)) == 0)
+    }
+
+    /// True iff some queued job's whole demand vector fits in `free` —
+    /// the exact admit-possible predicate of the vector model. At d=1
+    /// this is exactly `min_queued_need() <= free` (the scalar
+    /// watermark); at d > 1 it quick-rejects per dimension, then scans
+    /// the ≤ C queued classes.
+    #[inline]
+    pub fn queued_demand_fits(&self, free: &ResourceVec) -> bool {
+        if self.dims == 1 {
+            return self.min_queued_need() <= free.servers();
+        }
+        if self.rejected_by_some_dim(free) {
+            return false;
+        }
+        self.demands
+            .iter()
+            .zip(&self.queued)
+            .any(|(d, &q)| q > 0 && d.fits_in(free))
+    }
+
+    /// Smallest server need among queued classes whose whole demand
+    /// vector fits in `free` (`None` when nothing fits) — the
+    /// min-queued-dominated query generalizing [`Self::min_queued_need`].
+    pub fn min_queued_dominated(&self, free: &ResourceVec) -> Option<u32> {
+        if self.dims == 1 {
+            let min = self.min_queued_need();
+            return (min <= free.servers()).then_some(min);
+        }
+        if self.rejected_by_some_dim(free) {
+            return None;
+        }
+        self.demands
+            .iter()
+            .zip(&self.queued)
+            .filter(|(d, &q)| q > 0 && d.fits_in(free))
+            .map(|(d, _)| d.servers())
+            .min()
+    }
+
+    /// Total **server** need of queued jobs whose whole demand vector
+    /// fits in `free` — the fitting mass generalizing
+    /// [`Self::queued_need_fitting`], to which it is identical at d=1.
+    /// Zero iff nothing queued fits (the exact fit predicate); its main
+    /// use is bounding First-Fit's arrival-order scan.
+    pub fn queued_mass_fitting(&self, free: &ResourceVec) -> u64 {
+        if self.dims == 1 {
+            return self.queued_need_fitting(free.servers());
+        }
+        if self.rejected_by_some_dim(free) {
+            return 0;
+        }
+        self.demands
+            .iter()
+            .zip(&self.queued)
+            .filter(|(d, &q)| q > 0 && d.fits_in(free))
+            .map(|(d, &q)| d.servers() as u64 * q as u64)
+            .sum()
+    }
+
+    /// Largest rank `< bound` with a queued job whose whole demand
+    /// vector fits in `free` — the vector twin of
+    /// [`Self::max_fitting_rank_below`] (identical at d=1), so the MSF
+    /// descending-rank walk survives the vector model unchanged. At
+    /// d > 1 the scalar Fenwick supplies dimension-0-fitting candidates
+    /// in descending rank order and each is checked for full dominance —
+    /// at most C probes of O(log C).
+    pub fn max_dominated_rank_below(&self, bound: usize, free: &ResourceVec) -> Option<usize> {
+        if self.dims == 1 {
+            return self.max_fitting_rank_below(bound, free.servers());
+        }
+        if self.rejected_by_some_dim(free) {
+            return None;
+        }
+        let mut bound = bound;
+        while let Some(r) = self.max_fitting_rank_below(bound, free.servers()) {
+            if self.demands[self.class_at_rank(r)].fits_in(free) {
+                return Some(r);
+            }
+            bound = r;
+        }
+        None
+    }
+
+    /// True iff class `c` could start a job right now under the vector
+    /// model: something queued and its whole demand fits in `free`.
+    /// Identical to [`Self::can_admit`] at d=1.
+    #[inline]
+    pub fn can_admit_vec(&self, c: ClassId, free: &ResourceVec) -> bool {
+        if self.dims == 1 {
+            return self.can_admit(c, free.servers());
+        }
+        self.queued[c] > 0 && self.demands[c].fits_in(free)
+    }
+
     /// Debug-build consistency check against the driver's own counts.
     pub fn assert_consistent(&self, queued: &[u32], running: &[u32]) {
         debug_assert_eq!(self.queued, queued, "index queued counts diverged");
@@ -422,6 +623,14 @@ impl QueueIndex {
                 .sum::<u64>(),
             "weighted Fenwick total diverged"
         );
+        for (j, t) in self.dim_tree.iter().enumerate() {
+            debug_assert_eq!(
+                t.prefix(self.num_ranks()),
+                self.total_queued,
+                "dimension-{} Fenwick total diverged",
+                j + 1
+            );
+        }
     }
 }
 

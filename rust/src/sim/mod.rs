@@ -34,8 +34,15 @@ pub fn run(
     engine.run(&mut src, policy, &mut rng)
 }
 
-/// Convenience: simulate the named policy.
-pub fn run_named(wl: &Workload, policy: &str, cfg: &SimConfig, seed: u64) -> crate::Result<SimResult> {
-    let mut p = crate::policy::by_name(policy, wl)?;
+/// Convenience: simulate the policy identified by a typed
+/// [`PolicyId`](crate::policy::PolicyId) (the replacement for the former
+/// stringly `run_named`).
+pub fn run_policy(
+    wl: &Workload,
+    policy: &crate::policy::PolicyId,
+    cfg: &SimConfig,
+    seed: u64,
+) -> crate::Result<SimResult> {
+    let mut p = crate::policy::build(policy, wl)?;
     Ok(run(wl, p.as_mut(), cfg, seed))
 }

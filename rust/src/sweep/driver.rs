@@ -293,56 +293,6 @@ impl Driver {
         })
     }
 
-    /// Shim for the pre-builder API.
-    #[deprecated(note = "use DriverBuilder::new().spec(spec).bind_addr(addr).bind()")]
-    pub fn bind(spec: &SweepSpec, addr: &str) -> anyhow::Result<Driver> {
-        DriverBuilder::new().spec(spec).bind_addr(addr).bind()
-    }
-
-    /// Shim for the pre-builder API.
-    #[deprecated(note = "use DriverBuilder::unit_timeout")]
-    pub fn with_unit_timeout(mut self, timeout: Option<Duration>) -> Driver {
-        self.unit_timeout = timeout;
-        self
-    }
-
-    /// Shim for the pre-builder API.
-    #[deprecated(note = "use DriverBuilder::auth_token")]
-    pub fn with_auth_token(mut self, token: Option<String>) -> Driver {
-        self.auth_token = token.filter(|t| !t.is_empty());
-        self
-    }
-
-    /// Shim for the pre-builder API: serve a single marginal spec.
-    #[deprecated(note = "use Driver::serve and read ServeReport::outcomes")]
-    pub fn run(self) -> anyhow::Result<Vec<Point>> {
-        match self.serve()?.outcomes.into_iter().next() {
-            Some(SpecOutcome::Marginal(pts)) => Ok(pts),
-            Some(SpecOutcome::Paired(_)) => {
-                anyhow::bail!("spec is in paired mode; use Driver::serve")
-            }
-            None => anyhow::bail!("empty spec queue"),
-        }
-    }
-
-    /// Shim for the pre-builder API: serve a single paired spec.
-    #[deprecated(note = "use Driver::serve and read ServeReport::outcomes")]
-    pub fn run_paired(self) -> anyhow::Result<PairedSweep> {
-        // Match the old API's pre-serve validation: refuse before
-        // binding workers to a spec that cannot produce paired output.
-        if !self
-            .queue
-            .tasks()
-            .first()
-            .is_some_and(|t| t.paired.is_some())
-        {
-            anyhow::bail!("spec is not in paired mode");
-        }
-        match self.serve()?.outcomes.into_iter().next() {
-            Some(SpecOutcome::Paired(sweep)) => Ok(sweep),
-            _ => anyhow::bail!("spec is not in paired mode"),
-        }
-    }
 }
 
 /// Re-delivers recorded runs (journaled or freshly served) through the
@@ -745,7 +695,7 @@ fn spec_rows(task: &SpecTask, st: &State) -> Vec<Value> {
         None => {
             let grid = &task.grid;
             for (p, pt) in grid.pts.iter().enumerate() {
-                let (lambda, policy) = (pt.0, pt.1.as_str());
+                let (lambda, policy) = (pt.0, pt.1.to_string());
                 let base = task.offset + p * grid.reps;
                 if !(0..grid.reps).all(|r| st.delivered[base + r]) {
                     continue;
@@ -762,8 +712,8 @@ fn spec_rows(task: &SpecTask, st: &State) -> Vec<Value> {
                 if pool.replications() == 0 {
                     continue; // every replication failed on workers
                 }
-                let res = pool.result(display.as_deref().unwrap_or(policy), &wl);
-                rows.push(point_row(lambda, policy, &res, pool.replications()));
+                let res = pool.result(display.as_deref().unwrap_or(&policy), &wl);
+                rows.push(point_row(lambda, &policy, &res, pool.replications()));
             }
         }
         Some(pg) => {
@@ -774,6 +724,7 @@ fn spec_rows(task: &SpecTask, st: &State) -> Vec<Value> {
                 }
                 let wl = task.spec.workload.build(lambda);
                 for (pi, policy) in pg.policies.iter().enumerate() {
+                    let policy = policy.to_string();
                     let mut pool = ReplicationPool::new(wl.num_classes());
                     let mut display: Option<String> = None;
                     for r in 0..pg.reps {
@@ -787,8 +738,8 @@ fn spec_rows(task: &SpecTask, st: &State) -> Vec<Value> {
                     if pool.replications() == 0 {
                         continue;
                     }
-                    let res = pool.result(display.as_deref().unwrap_or(policy), &wl);
-                    rows.push(point_row(lambda, policy.as_str(), &res, pool.replications()));
+                    let res = pool.result(display.as_deref().unwrap_or(&policy), &wl);
+                    rows.push(point_row(lambda, &policy, &res, pool.replications()));
                 }
             }
         }

@@ -56,6 +56,7 @@ use crate::experiments::{
     sweep_paired_units, sweep_units, LocalThreads, PairedGrid, PairedRun, PairedSweep, Point,
     SweepGrid, UnitRun,
 };
+use crate::policy::PolicyId;
 use crate::sim::SimConfig;
 use crate::util::json::Value;
 use crate::workload::{borg::borg_workload, Workload};
@@ -66,6 +67,8 @@ pub enum WorkloadSpec {
     OneOrAll { k: u32, p1: f64, mu1: f64, muk: f64 },
     FourClass,
     Borg,
+    /// 2-resource (servers × memory) family; see [`Workload::multires`].
+    Multires { k: u32, mem: u32 },
 }
 
 impl WorkloadSpec {
@@ -77,6 +80,7 @@ impl WorkloadSpec {
             }
             WorkloadSpec::FourClass => Workload::four_class(lambda),
             WorkloadSpec::Borg => borg_workload(lambda),
+            WorkloadSpec::Multires { k, mem } => Workload::multires(k, mem, lambda),
         }
     }
 
@@ -92,6 +96,10 @@ impl WorkloadSpec {
             }
             WorkloadSpec::FourClass => Value::obj().set("kind", "four_class"),
             WorkloadSpec::Borg => Value::obj().set("kind", "borg"),
+            WorkloadSpec::Multires { k, mem } => Value::obj()
+                .set("kind", "multires")
+                .set("k", k)
+                .set("mem", mem),
         }
     }
 
@@ -101,21 +109,25 @@ impl WorkloadSpec {
                 .and_then(|x| x.as_f64())
                 .ok_or_else(|| anyhow::anyhow!("workload spec missing '{key}'"))
         };
+        let u32_of = |key: &str| {
+            v.get(key)
+                .and_then(|x| x.as_u64())
+                .map(|x| x as u32)
+                .ok_or_else(|| anyhow::anyhow!("workload spec missing '{key}'"))
+        };
         match v.get("kind").and_then(|k| k.as_str()) {
-            Some("one_or_all") => {
-                let k = v
-                    .get("k")
-                    .and_then(|x| x.as_u64())
-                    .ok_or_else(|| anyhow::anyhow!("workload spec missing 'k'"))?;
-                Ok(WorkloadSpec::OneOrAll {
-                    k: k as u32,
-                    p1: f64_of("p1")?,
-                    mu1: f64_of("mu1")?,
-                    muk: f64_of("muk")?,
-                })
-            }
+            Some("one_or_all") => Ok(WorkloadSpec::OneOrAll {
+                k: u32_of("k")?,
+                p1: f64_of("p1")?,
+                mu1: f64_of("mu1")?,
+                muk: f64_of("muk")?,
+            }),
             Some("four_class") => Ok(WorkloadSpec::FourClass),
             Some("borg") => Ok(WorkloadSpec::Borg),
+            Some("multires") => Ok(WorkloadSpec::Multires {
+                k: u32_of("k")?,
+                mem: u32_of("mem")?,
+            }),
             other => anyhow::bail!("unknown workload kind {other:?}"),
         }
     }
@@ -129,7 +141,7 @@ impl WorkloadSpec {
 pub struct SweepSpec {
     pub workload: WorkloadSpec,
     pub lambdas: Vec<f64>,
-    pub policies: Vec<String>,
+    pub policies: Vec<PolicyId>,
     pub target_completions: u64,
     pub warmup_completions: u64,
     /// Batch size for the batch-means CI.
@@ -140,9 +152,9 @@ pub struct SweepSpec {
     /// arrival stream per (λ, replication) and report paired Δ CIs
     /// against `baseline` alongside the marginal points.
     pub paired: bool,
-    /// Baseline policy name for paired Δs (must be one of `policies`;
-    /// None defaults to the first policy). Ignored unless `paired`.
-    pub baseline: Option<String>,
+    /// Baseline policy for paired Δs (must be one of `policies`; None
+    /// defaults to the first policy). Ignored unless `paired`.
+    pub baseline: Option<PolicyId>,
 }
 
 impl SweepSpec {
@@ -151,7 +163,7 @@ impl SweepSpec {
     pub fn from_config(
         workload: WorkloadSpec,
         lambdas: &[f64],
-        policies: &[&str],
+        policies: &[PolicyId],
         cfg: &SimConfig,
         seed: u64,
         replications: u32,
@@ -159,7 +171,7 @@ impl SweepSpec {
         SweepSpec {
             workload,
             lambdas: lambdas.to_vec(),
-            policies: policies.iter().map(|p| p.to_string()).collect(),
+            policies: policies.to_vec(),
             target_completions: cfg.target_completions,
             warmup_completions: cfg.warmup_completions,
             batch: cfg.batch,
@@ -182,10 +194,9 @@ impl SweepSpec {
 
     /// The spec's (point, replication) unit grid.
     pub fn grid(&self) -> SweepGrid {
-        let policies: Vec<&str> = self.policies.iter().map(|s| s.as_str()).collect();
         SweepGrid::new(
             &self.lambdas,
-            &policies,
+            &self.policies,
             &self.config(),
             self.seed,
             self.replications,
@@ -199,20 +210,19 @@ impl SweepSpec {
         if !self.paired {
             return Ok(None);
         }
-        let baseline = match &self.baseline {
+        let baseline = match self.baseline {
             None => 0,
-            Some(name) => self
+            Some(id) => self
                 .policies
                 .iter()
-                .position(|p| p == name)
+                .position(|&p| p == id)
                 .ok_or_else(|| {
-                    anyhow::anyhow!("baseline policy '{name}' is not in the policy list")
+                    anyhow::anyhow!("baseline policy '{id}' is not in the policy list")
                 })?,
         };
-        let policies: Vec<&str> = self.policies.iter().map(|s| s.as_str()).collect();
         Ok(Some(PairedGrid::new(
             &self.lambdas,
-            &policies,
+            &self.policies,
             baseline,
             &self.config(),
             self.seed,
@@ -228,7 +238,9 @@ impl SweepSpec {
 
     pub fn to_json(&self) -> Value {
         let lambdas: Vec<Value> = self.lambdas.iter().map(|&l| Value::Num(l)).collect();
-        let policies: Vec<Value> = self.policies.iter().map(|p| p.clone().into()).collect();
+        // Policies travel as their canonical names (PolicyId::Display),
+        // byte-identical to the former stringly wire form.
+        let policies: Vec<Value> = self.policies.iter().map(|p| p.to_string().into()).collect();
         // The seed is arbitrary user-provided bits: it travels as a
         // decimal string because Value::Num is f64-backed and would
         // silently round seeds above 2^53, breaking the sharded ==
@@ -246,8 +258,8 @@ impl SweepSpec {
         // form is byte-identical to what pre-paired builds emitted.
         if self.paired {
             v = v.set("paired", true);
-            if let Some(b) = &self.baseline {
-                v = v.set("baseline", b.clone());
+            if let Some(b) = self.baseline {
+                v = v.set("baseline", b.to_string());
             }
         }
         v
@@ -276,10 +288,10 @@ impl SweepSpec {
             .iter()
             .map(|p| {
                 p.as_str()
-                    .map(|s| s.to_string())
                     .ok_or_else(|| anyhow::anyhow!("non-string policy"))
+                    .and_then(PolicyId::parse)
             })
-            .collect::<anyhow::Result<Vec<String>>>()?;
+            .collect::<anyhow::Result<Vec<PolicyId>>>()?;
         let workload = v
             .get("workload")
             .ok_or_else(|| anyhow::anyhow!("sweep spec missing 'workload'"))
@@ -302,7 +314,8 @@ impl SweepSpec {
             baseline: v
                 .get("baseline")
                 .and_then(|b| b.as_str())
-                .map(|s| s.to_string()),
+                .map(PolicyId::parse)
+                .transpose()?,
         })
     }
 }
@@ -429,7 +442,7 @@ mod tests {
                 muk: 1.0,
             },
             lambdas: vec![2.0, 3.25, 0.1],
-            policies: vec!["msf".into(), "msfq:7".into()],
+            policies: vec![PolicyId::Msf, PolicyId::Msfq(Some(7))],
             target_completions: 6_000,
             warmup_completions: 1_200,
             batch: 1000,
@@ -472,19 +485,19 @@ mod tests {
                 muk: 1.0,
             },
             lambdas: vec![2.0, 3.0],
-            policies: vec!["msf".into(), "msfq:7".into(), "fcfs".into()],
+            policies: vec![PolicyId::Msf, PolicyId::Msfq(Some(7)), PolicyId::Fcfs],
             target_completions: 6_000,
             warmup_completions: 1_200,
             batch: 1000,
             seed: 42,
             replications: 3,
             paired: true,
-            baseline: Some("msfq:7".into()),
+            baseline: Some(PolicyId::Msfq(Some(7))),
         };
         let wire = spec.to_json().to_string();
         let back = SweepSpec::from_json(&Value::parse(&wire).unwrap()).unwrap();
         assert!(back.paired);
-        assert_eq!(back.baseline.as_deref(), Some("msfq:7"));
+        assert_eq!(back.baseline, Some(PolicyId::Msfq(Some(7))));
         let grid = back.paired_grid().unwrap().unwrap();
         assert_eq!(grid.baseline, 1);
         assert_eq!(grid.n_units(), 6);
@@ -492,8 +505,9 @@ mod tests {
         // Default baseline: first policy.
         spec.baseline = None;
         assert_eq!(spec.paired_grid().unwrap().unwrap().baseline, 0);
-        // Unknown baseline is an error, not a silent default.
-        spec.baseline = Some("nope".into());
+        // A baseline absent from the policy list is an error, not a
+        // silent default.
+        spec.baseline = Some(PolicyId::ServerFilling);
         assert!(spec.paired_grid().is_err());
         // Not paired: no grid.
         spec.paired = false;
@@ -510,7 +524,7 @@ mod tests {
                 muk: 1.0,
             },
             lambdas: lambdas.to_vec(),
-            policies: vec!["msf".into(), "fcfs".into()],
+            policies: vec![PolicyId::Msf, PolicyId::Fcfs],
             target_completions: 6_000,
             warmup_completions: 1_200,
             batch: 1000,
@@ -543,7 +557,7 @@ mod tests {
         }
         // Queue validation surfaces bad paired baselines up front.
         let mut bad = mk(&[2.0], true);
-        bad.baseline = Some("nope".into());
+        bad.baseline = Some(PolicyId::ServerFilling);
         assert!(SpecQueue::new(vec![bad]).is_err());
         // An empty queue is structurally valid (the builder rejects it).
         let empty = SpecQueue::new(Vec::new()).unwrap();
@@ -562,6 +576,10 @@ mod tests {
         assert_eq!(one.build(3.0).k, 16);
         assert_eq!(WorkloadSpec::FourClass.build(2.0).k, 15);
         assert_eq!(WorkloadSpec::Borg.build(2.0).num_classes(), 26);
+        let multi = WorkloadSpec::Multires { k: 16, mem: 64 };
+        assert_eq!(multi.build(3.0).dims(), 2);
+        let back = WorkloadSpec::from_json(&multi.to_json()).unwrap();
+        assert_eq!(back, multi);
         assert!(WorkloadSpec::from_json(&Value::obj().set("kind", "nope")).is_err());
     }
 }

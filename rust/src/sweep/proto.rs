@@ -238,7 +238,7 @@ mod tests {
         SweepSpec {
             workload: WorkloadSpec::FourClass,
             lambdas: vec![2.0],
-            policies: vec!["msf".into()],
+            policies: vec![crate::policy::PolicyId::Msf],
             target_completions: 1000,
             warmup_completions: 200,
             batch: 100,

@@ -122,7 +122,7 @@ mod tests {
         let wl = borg_workload(1.0);
         assert_eq!(wl.num_classes(), 26);
         assert_eq!(wl.k, 2048);
-        assert!(wl.classes.iter().all(|c| c.need <= wl.k && c.need >= 1));
+        assert!(wl.classes.iter().all(|c| c.need() <= wl.k && c.need() >= 1));
     }
 
     #[test]
@@ -140,7 +140,7 @@ mod tests {
         let heavy_jobs: f64 = wl
             .classes
             .iter()
-            .filter(|c| c.need >= HEAVY_NEED)
+            .filter(|c| c.need() >= HEAVY_NEED)
             .map(|c| c.rate)
             .sum::<f64>()
             / total_rate;
@@ -150,7 +150,7 @@ mod tests {
         );
         let rho_tot: f64 = (0..26).map(|c| wl.rho_class(c)).sum();
         let rho_heavy: f64 = (0..26)
-            .filter(|&c| wl.classes[c].need >= HEAVY_NEED)
+            .filter(|&c| wl.classes[c].need() >= HEAVY_NEED)
             .map(|c| wl.rho_class(c))
             .sum();
         let share = rho_heavy / rho_tot;

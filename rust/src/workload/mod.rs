@@ -1,29 +1,50 @@
 //! Workload specification and arrival sources.
 
 pub mod borg;
+pub mod resources;
 pub mod trace;
 
 use crate::dist::Dist;
 use crate::util::rng::Rng;
+pub use resources::{ResourceVec, MAX_RESOURCES};
 
-/// One job class: all class members need `need` servers; sizes are drawn
-/// i.i.d. from `size`; arrivals are Poisson with rate `rate`.
+/// One job class: all class members demand the same `demand` resource
+/// vector (dimension 0 = servers); sizes are drawn i.i.d. from `size`;
+/// arrivals are Poisson with rate `rate`.
 #[derive(Clone, Debug)]
 pub struct ClassSpec {
-    pub need: u32,
+    pub demand: ResourceVec,
     pub rate: f64,
     pub size: Dist,
     pub name: String,
 }
 
 impl ClassSpec {
+    /// A scalar (servers-only) class — the paper's original model.
     pub fn new(need: u32, rate: f64, size: Dist) -> ClassSpec {
         ClassSpec {
             name: format!("c{need}"),
-            need,
+            demand: ResourceVec::scalar(need),
             rate,
             size,
         }
+    }
+
+    /// A multiresource class demanding `demand` (dimension 0 = servers).
+    pub fn with_demand(demand: ResourceVec, rate: f64, size: Dist) -> ClassSpec {
+        ClassSpec {
+            name: format!("c{demand}"),
+            demand,
+            rate,
+            size,
+        }
+    }
+
+    /// Server demand: the dimension-0 projection of `demand` (the
+    /// scalar model's `need`).
+    #[inline]
+    pub fn need(&self) -> u32 {
+        self.demand.servers()
     }
 
     pub fn named(mut self, name: &str) -> ClassSpec {
@@ -32,21 +53,45 @@ impl ClassSpec {
     }
 }
 
-/// A multiserver-job workload: `k` servers and a set of job classes.
+/// A multiserver-job workload: a resource `capacity` (dimension 0 = the
+/// `k` servers) and a set of job classes. `k` is kept as the dimension-0
+/// mirror of `capacity` so the scalar model reads exactly as before.
 #[derive(Clone, Debug)]
 pub struct Workload {
     pub k: u32,
+    pub capacity: ResourceVec,
     pub classes: Vec<ClassSpec>,
 }
 
 impl Workload {
     pub fn new(k: u32, classes: Vec<ClassSpec>) -> Workload {
+        Workload::with_capacity(ResourceVec::scalar(k), classes)
+    }
+
+    /// A workload over a multiresource capacity vector. Every class
+    /// demand must share the capacity's dimension count, demand at
+    /// least one server, and fit the capacity per dimension.
+    pub fn with_capacity(capacity: ResourceVec, classes: Vec<ClassSpec>) -> Workload {
+        let k = capacity.servers();
         assert!(k >= 1);
         for c in &classes {
-            assert!(c.need >= 1 && c.need <= k, "class need must be in [1,k]");
+            assert_eq!(
+                c.demand.dims(),
+                capacity.dims(),
+                "class demand dimensions must match the capacity"
+            );
+            assert!(c.need() >= 1, "class must demand at least one server");
+            assert!(
+                c.demand.fits_in(&capacity),
+                "class demand must fit the capacity in every dimension"
+            );
             assert!(c.rate >= 0.0);
         }
-        Workload { k, classes }
+        Workload {
+            k,
+            capacity,
+            classes,
+        }
     }
 
     /// The paper's one-or-all workload: class-1 ("light") and class-k
@@ -77,12 +122,47 @@ impl Workload {
         )
     }
 
+    /// A 2-dimensional (servers × memory) demonstration family for the
+    /// multiresource model: `k` servers and `mem` memory units shared by
+    /// three classes — small jobs (1 server, 1 memory), CPU-bound jobs
+    /// (k/2 servers, mem/8 memory) and memory-bound jobs (k/8 servers,
+    /// mem/2 memory), with p = {0.7, 0.15, 0.15} and unit-mean
+    /// exponential sizes. Total arrival rate `lambda`.
+    pub fn multires(k: u32, mem: u32, lambda: f64) -> Workload {
+        assert!(k >= 8 && mem >= 8, "multires needs k >= 8 and mem >= 8");
+        let cap = ResourceVec::new(&[k, mem]);
+        let specs = [
+            (ResourceVec::new(&[1, 1]), 0.70, "small"),
+            (ResourceVec::new(&[k / 2, mem / 8]), 0.15, "cpu"),
+            (ResourceVec::new(&[k / 8, mem / 2]), 0.15, "mem"),
+        ];
+        Workload::with_capacity(
+            cap,
+            specs
+                .iter()
+                .map(|(d, p, name)| {
+                    ClassSpec::with_demand(*d, lambda * p, Dist::exp_mean(1.0)).named(name)
+                })
+                .collect(),
+        )
+    }
+
     pub fn num_classes(&self) -> usize {
         self.classes.len()
     }
 
+    /// Resource dimensions (1 for the scalar model).
+    pub fn dims(&self) -> usize {
+        self.capacity.dims()
+    }
+
     pub fn needs(&self) -> Vec<u32> {
-        self.classes.iter().map(|c| c.need).collect()
+        self.classes.iter().map(|c| c.need()).collect()
+    }
+
+    /// Per-class demand vectors.
+    pub fn demands(&self) -> Vec<ResourceVec> {
+        self.classes.iter().map(|c| c.demand).collect()
     }
 
     /// Total arrival rate λ.
@@ -95,15 +175,30 @@ impl Workload {
     /// time, *not* normalized by k); `rho_class` follows the paper.
     pub fn rho_class(&self, c: usize) -> f64 {
         let cl = &self.classes[c];
-        cl.need as f64 * cl.rate * cl.size.mean()
+        cl.need() as f64 * cl.rate * cl.size.mean()
     }
 
-    /// Normalized total system load ρ/k ∈ [0, 1) for stability.
-    pub fn load(&self) -> f64 {
-        (0..self.classes.len())
-            .map(|c| self.rho_class(c))
+    /// Load offered to resource dimension `j`, normalized by that
+    /// dimension's capacity: Σ_c demand_j(c)·λ_c·E[S_c] / capacity_j.
+    pub fn load_dim(&self, j: usize) -> f64 {
+        let cap = self.capacity.get(j);
+        if cap == 0 {
+            return 0.0;
+        }
+        self.classes
+            .iter()
+            .map(|c| c.demand.get(j) as f64 * c.rate * c.size.mean())
             .sum::<f64>()
-            / self.k as f64
+            / cap as f64
+    }
+
+    /// Normalized total system load ∈ [0, 1) for stability: the maximum
+    /// per-dimension load (dimension 0 alone in the scalar model, where
+    /// this is the paper's ρ/k).
+    pub fn load(&self) -> f64 {
+        (0..self.dims())
+            .map(|j| self.load_dim(j))
+            .fold(0.0, f64::max)
     }
 
     /// Upper bound on any policy's stability (Theorem 4 / Remark 1):
@@ -124,7 +219,7 @@ impl Workload {
         let denom: f64 = self
             .classes
             .iter()
-            .map(|c| c.rate * c.size.mean() / (self.k / c.need) as f64)
+            .map(|c| c.rate * c.size.mean() / c.demand.max_pack(&self.capacity) as f64)
             .sum();
         if denom <= 0.0 {
             f64::INFINITY
@@ -145,9 +240,13 @@ impl Workload {
         wl
     }
 
-    /// True if this is a one-or-all workload (needs ⊆ {1, k}).
+    /// True if this is a one-or-all workload (scalar, needs ⊆ {1, k}).
     pub fn is_one_or_all(&self) -> bool {
-        self.classes.iter().all(|c| c.need == 1 || c.need == self.k)
+        self.dims() == 1
+            && self
+                .classes
+                .iter()
+                .all(|c| c.need() == 1 || c.need() == self.k)
     }
 }
 
@@ -392,6 +491,34 @@ mod tests {
         let wl = Workload::four_class(1.0);
         assert!((wl.lambda_critical() - 5.0).abs() < 1e-9);
         assert!((wl.lambda_critical_floored() - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn multires_family_loads_and_capacity() {
+        let wl = Workload::multires(16, 64, 3.0);
+        assert_eq!(wl.dims(), 2);
+        assert_eq!(wl.k, 16);
+        assert_eq!(wl.capacity, ResourceVec::new(&[16, 64]));
+        assert_eq!(wl.num_classes(), 3);
+        assert!(wl.classes.iter().all(|c| c.demand.fits_in(&wl.capacity)));
+        assert!(!wl.is_one_or_all());
+        // The vector load is the max over per-dimension loads, and each
+        // dimension's load matches the hand-computed sum.
+        let dim0 = wl
+            .classes
+            .iter()
+            .map(|c| c.demand.get(0) as f64 * c.rate * c.size.mean())
+            .sum::<f64>()
+            / 16.0;
+        assert!((wl.load_dim(0) - dim0).abs() < 1e-12);
+        assert!((wl.load() - wl.load_dim(0).max(wl.load_dim(1))).abs() < 1e-12);
+        // Critical λ scales the max dimension to load 1.
+        let crit = wl.lambda_critical();
+        assert!((wl.with_total_rate(crit).load() - 1.0).abs() < 1e-9);
+        // d=1 workloads keep the scalar capacity mirror.
+        let scalar = Workload::one_or_all(8, 2.0, 0.9, 1.0, 1.0);
+        assert_eq!(scalar.capacity, ResourceVec::scalar(8));
+        assert_eq!(scalar.dims(), 1);
     }
 
     #[test]

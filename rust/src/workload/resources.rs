@@ -1,0 +1,244 @@
+//! d-dimensional resource demands.
+//!
+//! The paper's model is a scalar server demand; the companion MSR work
+//! (Chen/Grosof/Berg, arXiv 2412.08915) generalizes multiserver jobs to
+//! vectors of resources (servers, memory, GPUs, ...). [`ResourceVec`]
+//! is that demand/capacity type: a small fixed-capacity inline vector
+//! (`MAX_RESOURCES` dimensions) with **dimension 0 = servers**, so every
+//! scalar quantity in the original model is exactly the dimension-0
+//! projection of its vector generalization.
+//!
+//! The compatibility contract the whole crate leans on: a 1-dimensional
+//! `ResourceVec` behaves *bit-identically* to the old `need: u32` — all
+//! fitting predicates reduce to the single `u32` comparison the scalar
+//! code performed, and the vector-only index structures are never
+//! consulted at d=1.
+
+use std::fmt;
+use std::str::FromStr;
+
+/// Maximum number of resource dimensions (servers, memory, GPUs, ...).
+pub const MAX_RESOURCES: usize = 4;
+
+/// A demand or capacity vector over up to [`MAX_RESOURCES`] dimensions.
+/// Dimension 0 is always the server count; unused trailing dimensions
+/// are stored as zero so equality and hashing are well-defined.
+#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ResourceVec {
+    dims: u8,
+    v: [u32; MAX_RESOURCES],
+}
+
+impl ResourceVec {
+    /// A 1-dimensional (servers-only) vector — the scalar model.
+    #[inline]
+    pub const fn scalar(need: u32) -> ResourceVec {
+        ResourceVec {
+            dims: 1,
+            v: [need, 0, 0, 0],
+        }
+    }
+
+    /// A vector over `vals.len()` dimensions (1..=[`MAX_RESOURCES`]).
+    pub fn new(vals: &[u32]) -> ResourceVec {
+        assert!(
+            !vals.is_empty() && vals.len() <= MAX_RESOURCES,
+            "ResourceVec takes 1..={MAX_RESOURCES} dimensions, got {}",
+            vals.len()
+        );
+        let mut v = [0u32; MAX_RESOURCES];
+        v[..vals.len()].copy_from_slice(vals);
+        ResourceVec {
+            dims: vals.len() as u8,
+            v,
+        }
+    }
+
+    /// The all-zero vector over `dims` dimensions.
+    pub fn zero(dims: usize) -> ResourceVec {
+        assert!(dims >= 1 && dims <= MAX_RESOURCES);
+        ResourceVec {
+            dims: dims as u8,
+            v: [0; MAX_RESOURCES],
+        }
+    }
+
+    #[inline]
+    pub fn dims(&self) -> usize {
+        self.dims as usize
+    }
+
+    /// True for the scalar (servers-only) model.
+    #[inline]
+    pub fn is_scalar(&self) -> bool {
+        self.dims == 1
+    }
+
+    /// Component `j` (zero beyond `dims`, so padding never binds).
+    #[inline]
+    pub fn get(&self, j: usize) -> u32 {
+        self.v[j]
+    }
+
+    /// Dimension 0: the server demand — the scalar model's `need`.
+    #[inline]
+    pub fn servers(&self) -> u32 {
+        self.v[0]
+    }
+
+    #[inline]
+    pub fn as_slice(&self) -> &[u32] {
+        &self.v[..self.dims as usize]
+    }
+
+    /// Component-wise `self[j] <= avail[j]` over every dimension: the
+    /// fitting predicate. At d=1 this is exactly the scalar
+    /// `need <= free` comparison.
+    #[inline]
+    pub fn fits_in(&self, avail: &ResourceVec) -> bool {
+        debug_assert_eq!(self.dims, avail.dims);
+        if self.dims == 1 {
+            return self.v[0] <= avail.v[0];
+        }
+        self.as_slice()
+            .iter()
+            .zip(avail.as_slice())
+            .all(|(&d, &a)| d <= a)
+    }
+
+    /// Component-wise `self >= other` (dominance).
+    #[inline]
+    pub fn dominates(&self, other: &ResourceVec) -> bool {
+        other.fits_in(self)
+    }
+
+    /// Component-wise saturating `self - other` (free = capacity − used).
+    #[inline]
+    pub fn saturating_sub(&self, other: &ResourceVec) -> ResourceVec {
+        let mut out = *self;
+        for j in 0..self.dims as usize {
+            out.v[j] = out.v[j].saturating_sub(other.v[j]);
+        }
+        out
+    }
+
+    /// Component-wise in-place add (admission bookkeeping).
+    #[inline]
+    pub fn add_assign(&mut self, other: &ResourceVec) {
+        debug_assert_eq!(self.dims, other.dims);
+        for j in 0..self.dims as usize {
+            self.v[j] += other.v[j];
+        }
+    }
+
+    /// Component-wise in-place subtract; panics (overflow in debug) if
+    /// any component would go negative.
+    #[inline]
+    pub fn sub_assign(&mut self, other: &ResourceVec) {
+        debug_assert_eq!(self.dims, other.dims);
+        for j in 0..self.dims as usize {
+            debug_assert!(self.v[j] >= other.v[j], "resource usage underflow");
+            self.v[j] -= other.v[j];
+        }
+    }
+
+    /// How many copies of `self` pack into `cap`:
+    /// `min_j floor(cap[j] / self[j])` over dimensions with positive
+    /// demand. At d=1 this is the scalar `k / need`. Zero-demand
+    /// dimensions never bind; a vector with no positive dimension packs
+    /// `u32::MAX` copies (degenerate, excluded by workload validation).
+    pub fn max_pack(&self, cap: &ResourceVec) -> u32 {
+        let mut slots = u32::MAX;
+        for j in 0..self.dims as usize {
+            if self.v[j] > 0 {
+                slots = slots.min(cap.v[j] / self.v[j]);
+            }
+        }
+        slots
+    }
+}
+
+/// `8` for a scalar, `8x64x1` for a vector (dimensions joined by `x`).
+impl fmt::Display for ResourceVec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for (j, d) in self.as_slice().iter().enumerate() {
+            if j > 0 {
+                write!(f, "x")?;
+            }
+            write!(f, "{d}")?;
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for ResourceVec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "ResourceVec({self})")
+    }
+}
+
+/// Parses the `Display` form: `"8"` or `"8x64x1"`.
+impl FromStr for ResourceVec {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> anyhow::Result<ResourceVec> {
+        let parts: Vec<&str> = s.split('x').collect();
+        if parts.is_empty() || parts.len() > MAX_RESOURCES {
+            anyhow::bail!("resource vector needs 1..={MAX_RESOURCES} 'x'-separated dimensions");
+        }
+        let mut vals = Vec::with_capacity(parts.len());
+        for p in parts {
+            vals.push(
+                p.trim()
+                    .parse::<u32>()
+                    .map_err(|_| anyhow::anyhow!("bad resource component '{p}' in '{s}'"))?,
+            );
+        }
+        Ok(ResourceVec::new(&vals))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_is_dim0_projection() {
+        let r = ResourceVec::scalar(7);
+        assert_eq!(r.dims(), 1);
+        assert!(r.is_scalar());
+        assert_eq!(r.servers(), 7);
+        assert_eq!(r.as_slice(), &[7]);
+        assert!(ResourceVec::scalar(3).fits_in(&r));
+        assert!(!ResourceVec::scalar(8).fits_in(&r));
+        assert_eq!(r.max_pack(&ResourceVec::scalar(32)), 4);
+    }
+
+    #[test]
+    fn vector_fit_is_componentwise() {
+        let cap = ResourceVec::new(&[16, 64]);
+        assert!(ResourceVec::new(&[16, 64]).fits_in(&cap));
+        assert!(!ResourceVec::new(&[17, 1]).fits_in(&cap));
+        assert!(!ResourceVec::new(&[1, 65]).fits_in(&cap));
+        assert_eq!(ResourceVec::new(&[4, 8]).max_pack(&cap), 4);
+        assert_eq!(ResourceVec::new(&[1, 0]).max_pack(&cap), 16);
+        let mut used = ResourceVec::zero(2);
+        used.add_assign(&ResourceVec::new(&[4, 8]));
+        used.add_assign(&ResourceVec::new(&[1, 2]));
+        assert_eq!(used, ResourceVec::new(&[5, 10]));
+        assert_eq!(cap.saturating_sub(&used), ResourceVec::new(&[11, 54]));
+        used.sub_assign(&ResourceVec::new(&[4, 8]));
+        assert_eq!(used, ResourceVec::new(&[1, 2]));
+    }
+
+    #[test]
+    fn display_parse_roundtrip() {
+        for s in ["8", "8x64", "1x2x3x4"] {
+            let r: ResourceVec = s.parse().unwrap();
+            assert_eq!(r.to_string(), s);
+        }
+        assert!("".parse::<ResourceVec>().is_err());
+        assert!("1x2x3x4x5".parse::<ResourceVec>().is_err());
+        assert!("8xmem".parse::<ResourceVec>().is_err());
+    }
+}

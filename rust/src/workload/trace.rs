@@ -144,10 +144,11 @@ mod tests {
             warmup_completions: 0,
             ..Default::default()
         };
-        let r1 = crate::sim::run_named(&wl, "msfq:7", &cfg, 123).unwrap();
+        let id = "msfq:7".parse().unwrap();
+        let r1 = crate::sim::run_policy(&wl, &id, &cfg, 123).unwrap();
         let tr = Trace::generate(&wl, 40_000, 123);
         let mut src = TraceSource::new(wl.clone(), tr);
-        let mut pol = crate::policy::by_name("msfq:7", &wl).unwrap();
+        let mut pol = crate::policy::build(&id, &wl).unwrap();
         let mut eng = crate::sim::Engine::new(&wl, cfg);
         let mut rng = Rng::new(123);
         let r2 = eng.run(&mut src, pol.as_mut(), &mut rng);

@@ -2,8 +2,18 @@
 //! CTMC, DES simulation) must tell one consistent story.
 
 use quickswap::analysis::{analyze, best_threshold, MsfqCtmc, MsfqParams};
-use quickswap::sim::{run_named, SimConfig};
+use quickswap::sim::{run_policy, SimConfig, SimResult};
 use quickswap::workload::Workload;
+
+/// Parse-then-run, the typed replacement for the old `run_named`.
+fn run_named(
+    wl: &Workload,
+    policy: &str,
+    cfg: &SimConfig,
+    seed: u64,
+) -> quickswap::Result<SimResult> {
+    run_policy(wl, &policy.parse()?, cfg, seed)
+}
 
 /// Calculator vs near-exact CTMC at k=8 across loads: the Theorem-2
 /// approximation is accurate at moderate-to-high load (paper §5.2 notes

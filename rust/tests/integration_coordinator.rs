@@ -9,7 +9,7 @@ use std::net::TcpStream;
 use std::time::Duration;
 
 fn spawn(policy: &str, wl: &Workload, scale: f64) -> Coordinator {
-    let pol = quickswap::policy::by_name(policy, wl).unwrap();
+    let pol = quickswap::policy::build(&policy.parse().unwrap(), wl).unwrap();
     Coordinator::spawn(
         wl,
         pol,

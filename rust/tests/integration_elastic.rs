@@ -18,6 +18,7 @@ use quickswap::sweep::{
     proto, run_spec_local, run_spec_paired_local, run_worker, DriverBuilder, SpecOutcome, SweepSpec,
     WorkloadSpec,
 };
+use quickswap::policy::PolicyId;
 use quickswap::util::json::Value;
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
@@ -35,7 +36,7 @@ fn marginal_spec() -> SweepSpec {
             muk: 1.0,
         },
         lambdas: vec![2.0, 3.0],
-        policies: vec!["msf".into(), "msfq:7".into()],
+        policies: vec![PolicyId::Msf, PolicyId::Msfq(Some(7))],
         target_completions: 6_000,
         warmup_completions: 1_200,
         batch: 1000,
@@ -69,9 +70,9 @@ const GRID_ARGS: [&str; 16] = [
 /// The paired (CRN) variant (6 shared-stream units, 3 policies each).
 fn paired_spec() -> SweepSpec {
     SweepSpec {
-        policies: vec!["msf".into(), "msfq:7".into(), "fcfs".into()],
+        policies: vec![PolicyId::Msf, PolicyId::Msfq(Some(7)), PolicyId::Fcfs],
         paired: true,
-        baseline: Some("msf".into()),
+        baseline: Some(PolicyId::Msf),
         ..marginal_spec()
     }
 }

@@ -40,7 +40,7 @@ fn cfg(target: u64) -> SimConfig {
 fn replay_result(wl: &Workload, policy: &str, cfg: &SimConfig, seed: u64) -> SimResult {
     let mut engine = Engine::new(wl, cfg.clone());
     let mut stream = MaterializedStream::new(wl.clone(), seed);
-    let mut pol = quickswap::policy::by_name(policy, wl).unwrap();
+    let mut pol = quickswap::policy::build(&policy.parse().unwrap(), wl).unwrap();
     let mut rng = Rng::new(seed ^ 0xDEAD_BEEF_F00D); // junk on purpose
     let mut cursor = stream.cursor();
     engine.run(&mut cursor, pol.as_mut(), &mut rng)
@@ -83,21 +83,21 @@ fn replay_is_bit_identical_to_live_source_for_every_policy() {
     let fig5 = Workload::four_class(4.0);
     let c5 = cfg(15_000);
     for policy in multiclass {
-        let live = quickswap::sim::run_named(&fig5, policy, &c5, 1234).unwrap();
+        let live = quickswap::sim::run_policy(&fig5, &policy.parse().unwrap(), &c5, 1234).unwrap();
         let replay = replay_result(&fig5, policy, &c5, 1234);
         assert_result_bit_identical(policy, "fig5", &live, &replay);
     }
     let fig6 = borg_workload(4.0);
     let c6 = cfg(5_000);
     for policy in multiclass {
-        let live = quickswap::sim::run_named(&fig6, policy, &c6, 77).unwrap();
+        let live = quickswap::sim::run_policy(&fig6, &policy.parse().unwrap(), &c6, 77).unwrap();
         let replay = replay_result(&fig6, policy, &c6, 77);
         assert_result_bit_identical(policy, "fig6", &live, &replay);
     }
     let ooa = Workload::one_or_all(32, 7.5, 0.9, 1.0, 1.0);
     let c2 = cfg(12_000);
     for policy in ["fcfs", "first-fit", "msf", "msfq:31", "msfq:0", "server-filling"] {
-        let live = quickswap::sim::run_named(&ooa, policy, &c2, 7).unwrap();
+        let live = quickswap::sim::run_policy(&ooa, &policy.parse().unwrap(), &c2, 7).unwrap();
         let replay = replay_result(&ooa, policy, &c2, 7);
         assert_result_bit_identical(policy, "fig2-one-or-all", &live, &replay);
     }
@@ -161,14 +161,18 @@ fn paired_spec() -> SweepSpec {
             muk: 1.0,
         },
         lambdas: vec![2.0, 3.0],
-        policies: vec!["msf".into(), "msfq:7".into(), "fcfs".into()],
+        policies: vec![
+            quickswap::policy::PolicyId::Msf,
+            quickswap::policy::PolicyId::Msfq(Some(7)),
+            quickswap::policy::PolicyId::Fcfs,
+        ],
         target_completions: 6_000,
         warmup_completions: 1_200,
         batch: 1000,
         seed: 42,
         replications: 3,
         paired: true,
-        baseline: Some("msf".into()),
+        baseline: Some(quickswap::policy::PolicyId::Msf),
     }
 }
 
@@ -178,7 +182,7 @@ fn assert_points_bit_identical(a: &[Point], b: &[Point]) {
         let tag = format!("({}, {})", x.lambda, x.policy);
         assert_eq!(x.lambda.to_bits(), y.lambda.to_bits(), "{tag}");
         assert_eq!(x.policy, y.policy, "{tag}");
-        assert_result_bit_identical(&x.policy, "sharded-vs-local", &x.result, &y.result);
+        assert_result_bit_identical(&x.policy.to_string(), "sharded-vs-local", &x.result, &y.result);
     }
 }
 
@@ -243,14 +247,17 @@ fn paired_ci_is_at_least_3x_narrower_on_fig2_frontier() {
             muk: 1.0,
         },
         lambdas: vec![7.5],
-        policies: vec!["msf".into(), "msfq:31".into()],
+        policies: vec![
+            quickswap::policy::PolicyId::Msf,
+            quickswap::policy::PolicyId::Msfq(Some(31)),
+        ],
         target_completions: 40_000,
         warmup_completions: 8_000,
         batch: 1000,
         seed: 20250710,
         replications: 4,
         paired: true,
-        baseline: Some("msf".into()),
+        baseline: Some(quickswap::policy::PolicyId::Msf),
     };
     let sweep = run_spec_paired_local(&spec, 4).unwrap();
     assert_eq!(sweep.diffs.len(), 1);

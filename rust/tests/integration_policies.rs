@@ -3,11 +3,16 @@
 
 use quickswap::dist::Dist;
 use quickswap::policy::test_support::Harness;
-use quickswap::policy::{by_name, Policy};
+use quickswap::policy::{build, Policy, PolicyId};
 use quickswap::workload::{ClassSpec, Workload};
 
 fn one_or_all(k: u32) -> Workload {
     Workload::one_or_all(k, 1.0, 0.9, 1.0, 1.0)
+}
+
+/// Parse-then-build, the typed replacement for the old `by_name`.
+fn mk(name: &str, wl: &Workload) -> anyhow::Result<Box<dyn Policy + Send>> {
+    build(&name.parse::<PolicyId>()?, wl)
 }
 
 /// MSFQ never serves lights and heavies simultaneously (one-or-all
@@ -16,7 +21,7 @@ fn one_or_all(k: u32) -> Workload {
 fn msfq_never_mixes_classes() {
     let k = 6;
     let wl = one_or_all(k);
-    let mut p = by_name("msfq:5", &wl).unwrap();
+    let mut p = mk("msfq:5", &wl).unwrap();
     let mut h = Harness::new(k, &[1, k]);
     let mut running = Vec::new();
     // Deterministic stress: bursts of arrivals interleaved with
@@ -48,7 +53,7 @@ fn msfq_never_mixes_classes() {
 fn msfq_drain_is_sealed() {
     let k = 4;
     let wl = one_or_all(k);
-    let mut p = by_name("msfq:2", &wl).unwrap();
+    let mut p = mk("msfq:2", &wl).unwrap();
     let mut h = Harness::new(k, &[1, k]);
     let l: Vec<_> = (0..4).map(|i| h.arrive(0, i as f64 * 0.01)).collect();
     h.consult(p.as_mut());
@@ -70,7 +75,7 @@ fn msfq_drain_is_sealed() {
 #[test]
 fn static_qs_exclusivity() {
     let wl = Workload::four_class(1.0);
-    let mut p = by_name("static-qs", &wl).unwrap();
+    let mut p = mk("static-qs", &wl).unwrap();
     let mut h = Harness::new(15, &[1, 3, 5, 15]);
     for i in 0..5 {
         h.arrive(0, 0.01 * i as f64);
@@ -93,7 +98,7 @@ fn nmsr_wastes_capacity_by_design() {
             ClassSpec::new(4, 0.2, Dist::exp_mean(1.0)),
         ],
     );
-    let mut p = by_name("nmsr:1000", &wl).unwrap();
+    let mut p = mk("nmsr:1000", &wl).unwrap();
     let mut h = Harness::new(4, &[1, 4]);
     // Schedule 0 (class 0) is active for ~the whole long cycle; a heavy
     // arrives and must wait despite 4 idle servers.
@@ -119,8 +124,8 @@ fn fcfs_blocks_first_fit_backfills() {
         h.running[0]
     };
     let wl = one_or_all(k);
-    let mut fcfs = by_name("fcfs", &wl).unwrap();
-    let mut ff = by_name("first-fit", &wl).unwrap();
+    let mut fcfs = mk("fcfs", &wl).unwrap();
+    let mut ff = mk("first-fit", &wl).unwrap();
     assert_eq!(seq(fcfs.as_mut()), 1, "FCFS must block at the heavy");
     assert_eq!(seq(ff.as_mut()), 3, "First-Fit must backfill the lights");
 }
@@ -139,7 +144,7 @@ fn server_filling_full_utilization() {
             ClassSpec::new(8, 1.0, Dist::exp_mean(1.0)),
         ],
     );
-    let mut p = by_name("server-filling", &wl).unwrap();
+    let mut p = mk("server-filling", &wl).unwrap();
     let mut h = Harness::new(k, &[1, 2, 4, 8]);
     let mut rng = quickswap::util::rng::Rng::new(5);
     let mut in_service: Vec<quickswap::policy::JobId> = Vec::new();
@@ -169,10 +174,54 @@ fn server_filling_full_utilization() {
 #[test]
 fn constructor_validation() {
     let wl = one_or_all(8);
-    assert!(by_name("bogus", &wl).is_err());
-    assert!(by_name("msfq:8", &wl).is_err()); // ell must be < k
-    assert!(by_name("msfq:abc", &wl).is_err());
+    let unknown = "bogus".parse::<PolicyId>().unwrap_err().to_string();
+    assert!(
+        unknown.contains("unknown policy") && unknown.contains("msfq"),
+        "unknown-policy error must list the valid names, got: {unknown}"
+    );
+    assert!(mk("msfq:8", &wl).is_err()); // ell must be < k
+    assert!(mk("msfq:abc", &wl).is_err());
     let multi = Workload::four_class(1.0);
-    assert!(by_name("msfq:3", &multi).is_err()); // not one-or-all
-    assert!(by_name("msfq:7", &wl).is_ok());
+    assert!(mk("msfq:3", &multi).is_err()); // not one-or-all
+    assert!(mk("msfq:7", &wl).is_ok());
+    // MSFQ requires the scalar model; the MSR family accepts vectors.
+    let vec2 = Workload::multires(16, 64, 1.0);
+    assert!(mk("msfq:7", &vec2).is_err());
+    assert!(mk("msr-seq", &vec2).is_ok());
+    assert!(mk("msr-rand:25", &vec2).is_ok());
+    // Canonical Display round-trips through parse.
+    for id in [
+        PolicyId::Fcfs,
+        PolicyId::FirstFit,
+        PolicyId::Msf,
+        PolicyId::Msfq(Some(31)),
+        PolicyId::StaticQs(None),
+        PolicyId::AdaptiveQs,
+        PolicyId::Nmsr(Some(50.0)),
+        PolicyId::ServerFilling,
+        PolicyId::MsrSeq(None),
+        PolicyId::MsrRand(Some(25.0)),
+    ] {
+        let back: PolicyId = id.to_string().parse().unwrap();
+        assert_eq!(back, id);
+    }
+}
+
+/// MSR-Seq and MSR-Rand serve only their active configuration on the
+/// 2-resource workload, sized by vector packing (not servers alone).
+#[test]
+fn msr_family_vector_configurations() {
+    let wl = Workload::multires(16, 64, 1.0);
+    // Class 1 ("cpu") demands [8, 8] into capacity [16, 64] → 2 slots.
+    for name in ["msr-seq", "msr-rand"] {
+        let mut p = mk(name, &wl).unwrap();
+        let mut h = Harness::with_capacity(wl.capacity, &wl.demands());
+        // Active configuration is class 0 (small, [1,1]): its jobs are
+        // admitted, the queued cpu job is not.
+        let s = h.arrive(0, 0.0);
+        h.arrive(1, 0.1);
+        let adm = h.consult(p.as_mut());
+        assert_eq!(adm, vec![s], "{name} must serve only the active class");
+        assert_eq!(h.running[1], 0);
+    }
 }

@@ -4,9 +4,19 @@
 //! batch-means CIs must agree with the single-run path.
 
 use quickswap::experiments::{sweep_with, SweepOpts};
-use quickswap::sim::{run_named, Engine, SimConfig};
+use quickswap::sim::{run_policy, Engine, SimConfig, SimResult};
 use quickswap::util::rng::Rng;
 use quickswap::workload::{SyntheticSource, Workload};
+
+/// Parse-then-run, the typed replacement for the old `run_named`.
+fn run_named(
+    wl: &Workload,
+    policy: &str,
+    cfg: &SimConfig,
+    seed: u64,
+) -> quickswap::Result<SimResult> {
+    run_policy(wl, &policy.parse()?, cfg, seed)
+}
 
 fn quick(target: u64) -> SimConfig {
     SimConfig {
@@ -128,13 +138,13 @@ fn engine_reuse_bit_identical_to_fresh() {
     let mut engine = Engine::new(&wl, cfg);
     {
         // Dirty the engine with a different policy/seed first.
-        let mut p = quickswap::policy::by_name("msf", &wl).unwrap();
+        let mut p = quickswap::policy::build(&"msf".parse().unwrap(), &wl).unwrap();
         let mut src = SyntheticSource::new(wl.clone());
         let mut rng = Rng::new(5);
         let _ = engine.run(&mut src, p.as_mut(), &mut rng);
     }
     engine.reset();
-    let mut p = quickswap::policy::by_name("adaptive-qs", &wl).unwrap();
+    let mut p = quickswap::policy::build(&"adaptive-qs".parse().unwrap(), &wl).unwrap();
     let mut src = SyntheticSource::new(wl.clone());
     let mut rng = Rng::new(77);
     let reused = engine.run(&mut src, p.as_mut(), &mut rng);
@@ -166,8 +176,12 @@ fn replicated_sweep_deterministic_and_pooled() {
         replications: 3,
         threads: 1,
     };
-    let a = sweep_with(&wl_at, &[2.0, 3.0], &["msf", "msfq:7"], &cfg, 42, &opts_par);
-    let b = sweep_with(&wl_at, &[2.0, 3.0], &["msf", "msfq:7"], &cfg, 42, &opts_serial);
+    let pols = [
+        quickswap::policy::PolicyId::Msf,
+        quickswap::policy::PolicyId::Msfq(Some(7)),
+    ];
+    let a = sweep_with(&wl_at, &[2.0, 3.0], &pols, &cfg, 42, &opts_par);
+    let b = sweep_with(&wl_at, &[2.0, 3.0], &pols, &cfg, 42, &opts_serial);
     assert_eq!(a.len(), 4);
     assert_eq!(b.len(), 4);
     for (x, y) in a.iter().zip(&b) {
@@ -206,7 +220,7 @@ fn replications_use_distinct_streams() {
             replications: reps,
             threads: 2,
         };
-        sweep_with(&wl_at, &[3.0], &["msf"], &cfg, 9, &opts)
+        sweep_with(&wl_at, &[3.0], &[quickswap::policy::PolicyId::Msf], &cfg, 9, &opts)
             .pop()
             .unwrap()
             .result

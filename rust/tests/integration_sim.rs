@@ -3,8 +3,18 @@
 
 use quickswap::analysis::mmk;
 use quickswap::dist::Dist;
-use quickswap::sim::{run_named, SimConfig};
+use quickswap::sim::{run_policy, SimConfig, SimResult};
 use quickswap::workload::{ClassSpec, Workload};
+
+/// Parse-then-run, the typed replacement for the old `run_named`.
+fn run_named(
+    wl: &Workload,
+    policy: &str,
+    cfg: &SimConfig,
+    seed: u64,
+) -> quickswap::Result<SimResult> {
+    run_policy(wl, &policy.parse()?, cfg, seed)
+}
 
 fn quick() -> SimConfig {
     SimConfig {

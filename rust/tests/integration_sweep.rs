@@ -34,7 +34,10 @@ fn smoke_spec() -> SweepSpec {
             muk: 1.0,
         },
         lambdas: vec![2.0, 3.0],
-        policies: vec!["msf".into(), "msfq:7".into()],
+        policies: vec![
+            quickswap::policy::PolicyId::Msf,
+            quickswap::policy::PolicyId::Msfq(Some(7)),
+        ],
         target_completions: 6_000,
         warmup_completions: 1_200,
         batch: 1000,
@@ -103,7 +106,10 @@ fn spec_local_matches_closure_sweep() {
     let via_closure = sweep_with(
         &wl_at,
         &spec.lambdas,
-        &["msf", "msfq:7"],
+        &[
+            quickswap::policy::PolicyId::Msf,
+            quickswap::policy::PolicyId::Msfq(Some(7)),
+        ],
         &spec.config(),
         spec.seed,
         &SweepOpts {
@@ -338,27 +344,6 @@ fn open_driver_accepts_token_bearing_worker() {
     let addr = driver.local_addr().to_string();
     let dh = std::thread::spawn(move || serve_marginal(driver));
     let served = run_worker_with_token(&addr, Some("surplus-secret")).unwrap();
-    assert_eq!(served, spec.grid().n_units());
-    let pts = dh.join().unwrap();
-    assert_points_bit_identical(&base, &pts);
-}
-
-/// The pre-builder `Driver::bind`/`with_*`/`run` surface still works as
-/// deprecated shims for one release, producing the same bits as the
-/// builder path — the mechanical-migration guarantee for downstream
-/// call sites.
-#[test]
-#[allow(deprecated)]
-fn deprecated_driver_shims_still_serve() {
-    let spec = smoke_spec();
-    let base = run_spec_local(&spec, 4);
-    let driver = Driver::bind(&spec, "127.0.0.1:0")
-        .unwrap()
-        .with_unit_timeout(None)
-        .with_auth_token(Some("sesame".into()));
-    let addr = driver.local_addr().to_string();
-    let dh = std::thread::spawn(move || driver.run().unwrap());
-    let served = run_worker_with_token(&addr, Some("sesame")).unwrap();
     assert_eq!(served, spec.grid().n_units());
     let pts = dh.join().unwrap();
     assert_points_bit_identical(&base, &pts);

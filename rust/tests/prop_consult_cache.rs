@@ -8,10 +8,15 @@
 
 use quickswap::dist::Dist;
 use quickswap::policy::test_support::Harness;
-use quickswap::policy::{by_name, JobId, Policy};
+use quickswap::policy::{build, JobId, Policy, PolicyId};
 use quickswap::util::proptest::check;
 use quickswap::util::rng::Rng;
 use quickswap::workload::{ClassSpec, Workload};
+
+/// Parse-then-build, the typed replacement for the old `by_name`.
+fn by_name(name: &str, wl: &Workload) -> anyhow::Result<Box<dyn Policy + Send>> {
+    build(&name.parse::<PolicyId>()?, wl)
+}
 
 /// One step of a replayed schedule.
 #[derive(Debug, Clone, Copy)]

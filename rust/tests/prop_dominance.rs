@@ -1,0 +1,365 @@
+//! Property and differential tests for the dominance index — the
+//! vector-fit query layer that keeps the exact consult-skip predicates
+//! legal under the multiresource model.
+//!
+//! Three contracts:
+//! 1. Every vector-fit query (`queued_demand_fits`,
+//!    `min_queued_dominated`, `queued_mass_fitting`,
+//!    `max_dominated_rank_below`, `can_admit_vec`,
+//!    `dim_queued_fitting`) equals a naive scan over the class table,
+//!    at every dimension count, on arbitrary enqueue/admit/depart
+//!    sequences.
+//! 2. A d=1 `QueueIndex` built from demand vectors answers every query
+//!    bit-identically to the scalar constructor, and a d=2 index padded
+//!    with a never-binding dimension answers identically to the scalar
+//!    index on the fig5 and fig6 (Borg) class shapes.
+//! 3. Engine-level differential goldens: on the fig5/fig6/fig2 shapes,
+//!    a run over the scalar workload and a run over the same workload
+//!    padded to d=2 (demand 1 into capacity k on the extra dimension —
+//!    binding-equivalent, since at most k jobs can ever run) produce
+//!    bit-identical statistics for every vector-capable policy. MSFQ is
+//!    scalar-only by constructor contract, so its d=1 bit-identity is
+//!    the scalar path itself (covered by the existing golden tests).
+
+use quickswap::sim::{QueueIndex, SimConfig};
+use quickswap::util::proptest::check;
+use quickswap::util::rng::Rng;
+use quickswap::workload::{borg::borg_workload, ClassSpec, ResourceVec, Workload};
+
+// ---- 1. brute-force: every query vs a naive scan ----
+
+/// A random index scenario: class demand vectors under a capacity, and
+/// a script of (enqueue | admit | depart) ops with query probes.
+#[derive(Debug, Clone)]
+struct Scenario {
+    capacity: ResourceVec,
+    demands: Vec<ResourceVec>,
+    /// op ∈ {0: enqueue, 1: admit, 2: depart}, per-step class pick and
+    /// a free-vector probe drawn as per-dimension fractions of capacity.
+    script: Vec<(u8, usize, [u64; 4])>,
+}
+
+fn gen_scenario(r: &mut Rng) -> Scenario {
+    let dims = 1 + r.index(3); // 1..=3
+    let cap_vals: Vec<u32> = (0..dims).map(|_| 2 + r.below(30) as u32).collect();
+    let capacity = ResourceVec::new(&cap_vals);
+    let nclasses = 1 + r.index(6);
+    let demands: Vec<ResourceVec> = (0..nclasses)
+        .map(|_| {
+            let v: Vec<u32> = cap_vals
+                .iter()
+                .map(|&c| 1 + r.below(c as u64) as u32)
+                .collect();
+            ResourceVec::new(&v)
+        })
+        .collect();
+    let script = (0..120)
+        .map(|_| {
+            (
+                r.below(3) as u8,
+                r.index(nclasses),
+                [r.next_u64(), r.next_u64(), r.next_u64(), r.next_u64()],
+            )
+        })
+        .collect();
+    Scenario {
+        capacity,
+        demands,
+        script,
+    }
+}
+
+/// Naive reference model: plain per-class queued/running counts.
+struct Naive {
+    queued: Vec<u32>,
+    running: Vec<u32>,
+}
+
+fn check_queries(
+    ix: &QueueIndex,
+    n: &Naive,
+    demands: &[ResourceVec],
+    free: &ResourceVec,
+) -> Result<(), String> {
+    let fits = |c: usize| n.queued[c] > 0 && demands[c].fits_in(free);
+    let expect_fits = (0..demands.len()).any(fits);
+    if ix.queued_demand_fits(free) != expect_fits {
+        return Err(format!(
+            "queued_demand_fits({free}) = {}, naive {expect_fits}",
+            ix.queued_demand_fits(free)
+        ));
+    }
+    let expect_min = (0..demands.len())
+        .filter(|&c| fits(c))
+        .map(|c| demands[c].servers())
+        .min();
+    if ix.min_queued_dominated(free) != expect_min {
+        return Err(format!(
+            "min_queued_dominated({free}) = {:?}, naive {expect_min:?}",
+            ix.min_queued_dominated(free)
+        ));
+    }
+    let expect_mass: u64 = (0..demands.len())
+        .filter(|&c| fits(c))
+        .map(|c| demands[c].servers() as u64 * n.queued[c] as u64)
+        .sum();
+    if ix.queued_mass_fitting(free) != expect_mass {
+        return Err(format!(
+            "queued_mass_fitting({free}) = {}, naive {expect_mass}",
+            ix.queued_mass_fitting(free)
+        ));
+    }
+    // Rank walk: naive descending scan over the index's own rank order.
+    for bound in [demands.len(), demands.len() / 2 + 1] {
+        let expect_rank = (0..bound.min(ix.num_ranks()))
+            .rev()
+            .find(|&r| fits(ix.class_at_rank(r)));
+        if ix.max_dominated_rank_below(bound, free) != expect_rank {
+            return Err(format!(
+                "max_dominated_rank_below({bound}, {free}) = {:?}, naive {expect_rank:?}",
+                ix.max_dominated_rank_below(bound, free)
+            ));
+        }
+    }
+    for c in 0..demands.len() {
+        if ix.can_admit_vec(c, free) != fits(c) {
+            return Err(format!("can_admit_vec({c}, {free}) diverged"));
+        }
+    }
+    // Per-dimension prefix counts (the rejection certificates).
+    for j in 0..free.dims() {
+        let expect: u32 = (0..demands.len())
+            .filter(|&c| demands[c].get(j) <= free.get(j))
+            .map(|c| n.queued[c])
+            .sum();
+        if ix.dim_queued_fitting(j, free.get(j)) != expect {
+            return Err(format!(
+                "dim_queued_fitting({j}, {}) = {}, naive {expect}",
+                free.get(j),
+                ix.dim_queued_fitting(j, free.get(j))
+            ));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_vector_queries_match_naive_scan() {
+    check("dominance_vs_naive", gen_scenario, |sc| {
+        let mut ix = QueueIndex::with_demands(&sc.demands);
+        let mut n = Naive {
+            queued: vec![0; sc.demands.len()],
+            running: vec![0; sc.demands.len()],
+        };
+        for &(op, c, probe) in &sc.script {
+            match op {
+                0 => {
+                    ix.on_enqueue(c);
+                    n.queued[c] += 1;
+                }
+                1 if n.queued[c] > 0 => {
+                    ix.on_admit(c);
+                    n.queued[c] -= 1;
+                    n.running[c] += 1;
+                }
+                2 if n.running[c] > 0 => {
+                    ix.on_depart(c);
+                    n.running[c] -= 1;
+                }
+                _ => {}
+            }
+            let free_vals: Vec<u32> = (0..sc.capacity.dims())
+                .map(|j| (probe[j] % (sc.capacity.get(j) as u64 + 1)) as u32)
+                .collect();
+            let free = ResourceVec::new(&free_vals);
+            check_queries(&ix, &n, &sc.demands, &free)?;
+        }
+        Ok(())
+    });
+}
+
+// ---- 2. d=1 / padded-d2 differential replay on fig5 + fig6 shapes ----
+
+/// Replay one op script on (a) the scalar index, (b) the d=1 vector
+/// index, (c) a d=2 index padded with a never-binding dimension, and
+/// assert every query agrees at every step.
+fn replay_differential(k: u32, needs: &[u32], seed: u64) {
+    let d1: Vec<ResourceVec> = needs.iter().map(|&n| ResourceVec::scalar(n)).collect();
+    let d2: Vec<ResourceVec> = needs.iter().map(|&n| ResourceVec::new(&[n, 1])).collect();
+    let mut scalar = QueueIndex::new(needs);
+    let mut vec1 = QueueIndex::with_demands(&d1);
+    let mut vec2 = QueueIndex::with_demands(&d2);
+    let mut queued = vec![0u32; needs.len()];
+    let mut running = vec![0u32; needs.len()];
+    let mut r = Rng::new(seed);
+    for step in 0..400 {
+        let c = r.index(needs.len());
+        match r.below(3) {
+            0 => {
+                scalar.on_enqueue(c);
+                vec1.on_enqueue(c);
+                vec2.on_enqueue(c);
+                queued[c] += 1;
+            }
+            1 if queued[c] > 0 => {
+                scalar.on_admit(c);
+                vec1.on_admit(c);
+                vec2.on_admit(c);
+                queued[c] -= 1;
+                running[c] += 1;
+            }
+            2 if running[c] > 0 => {
+                scalar.on_depart(c);
+                vec1.on_depart(c);
+                vec2.on_depart(c);
+                running[c] -= 1;
+            }
+            _ => {}
+        }
+        let f = r.below(k as u64 + 1) as u32;
+        let f1 = ResourceVec::scalar(f);
+        // Padding never binds: dimension 1 holds k units and every job
+        // takes 1, so with ≤ k jobs runnable the probe carries full k.
+        let f2 = ResourceVec::new(&[f, k]);
+        assert_eq!(
+            scalar.queued_demand_fits(&f1),
+            vec2.queued_demand_fits(&f2),
+            "fits diverged at step {step} (free {f})"
+        );
+        assert_eq!(
+            scalar.min_queued_dominated(&f1),
+            vec2.min_queued_dominated(&f2),
+            "min diverged at step {step} (free {f})"
+        );
+        assert_eq!(
+            scalar.queued_need_fitting(f),
+            vec2.queued_mass_fitting(&f2),
+            "mass diverged at step {step} (free {f})"
+        );
+        for bound in [needs.len(), needs.len() / 2 + 1] {
+            assert_eq!(
+                scalar.max_fitting_rank_below(bound, f),
+                vec2.max_dominated_rank_below(bound, &f2),
+                "rank walk diverged at step {step} (bound {bound}, free {f})"
+            );
+        }
+        for c in 0..needs.len() {
+            assert_eq!(scalar.can_admit(c, f), vec2.can_admit_vec(c, &f2), "step {step}");
+            assert_eq!(scalar.can_admit(c, f), vec1.can_admit_vec(c, &f1), "step {step}");
+        }
+        // The d=1 vector index is the scalar index, query for query.
+        assert_eq!(scalar.queued_demand_fits(&f1), vec1.queued_demand_fits(&f1));
+        assert_eq!(scalar.min_queued_need(), vec1.min_queued_need());
+        assert_eq!(scalar.queued_need_fitting(f), vec1.queued_mass_fitting(&f1));
+    }
+}
+
+#[test]
+fn d1_and_padded_d2_index_replay_fig5_shape() {
+    // fig5: k=15, needs {1,3,5,15}.
+    replay_differential(15, &[1, 3, 5, 15], 0xF165);
+}
+
+#[test]
+fn d1_and_padded_d2_index_replay_fig6_shape() {
+    // fig6: the Borg shape (k=2048, 26 classes).
+    let wl = borg_workload(4.0);
+    let needs: Vec<u32> = wl.classes.iter().map(|c| c.need()).collect();
+    replay_differential(wl.k, &needs, 0xF166);
+}
+
+// ---- 3. engine-level differential goldens: scalar vs padded d=2 ----
+
+/// The scalar workload padded to d=2 with a never-binding dimension:
+/// every class demands 1 unit of a size-k resource. Since every job
+/// needs ≥ 1 server, at most k jobs run concurrently and the extra
+/// dimension can never reject an admission the scalar model allows.
+fn pad_to_d2(wl: &Workload) -> Workload {
+    let classes = wl
+        .classes
+        .iter()
+        .map(|c| ClassSpec {
+            demand: ResourceVec::new(&[c.need(), 1]),
+            rate: c.rate,
+            size: c.size.clone(),
+            name: c.name.clone(),
+        })
+        .collect();
+    Workload::with_capacity(ResourceVec::new(&[wl.k, wl.k]), classes)
+}
+
+fn assert_runs_bit_identical(policy: &str, tag: &str, scalar: &Workload, target: u64, seed: u64) {
+    let cfg = SimConfig {
+        target_completions: target,
+        warmup_completions: target / 5,
+        ..Default::default()
+    };
+    let id = policy.parse().unwrap();
+    let a = quickswap::sim::run_policy(scalar, &id, &cfg, seed).unwrap();
+    let b = quickswap::sim::run_policy(&pad_to_d2(scalar), &id, &cfg, seed).unwrap();
+    assert_eq!(a.completed, b.completed, "{tag}/{policy}");
+    assert_eq!(a.events, b.events, "{tag}/{policy}");
+    assert_eq!(a.mean_t_all.to_bits(), b.mean_t_all.to_bits(), "{tag}/{policy}");
+    assert_eq!(a.ci95.to_bits(), b.ci95.to_bits(), "{tag}/{policy}");
+    assert_eq!(a.utilization.to_bits(), b.utilization.to_bits(), "{tag}/{policy}");
+    assert_eq!(a.sim_time.to_bits(), b.sim_time.to_bits(), "{tag}/{policy}");
+    for c in 0..a.mean_t.len() {
+        assert_eq!(a.mean_t[c].to_bits(), b.mean_t[c].to_bits(), "{tag}/{policy} class {c}");
+        assert_eq!(a.mean_n[c].to_bits(), b.mean_n[c].to_bits(), "{tag}/{policy} class {c}");
+        assert_eq!(a.count[c], b.count[c], "{tag}/{policy} class {c}");
+    }
+}
+
+/// Every vector-capable policy, fig5/fig6/fig2 shapes: padding the
+/// workload with a never-binding dimension changes no statistic bit.
+/// (MSFQ rejects d > 1 by contract — its d=1 path is the scalar path.)
+#[test]
+fn padded_d2_runs_bit_identical_to_scalar() {
+    let multiclass = [
+        "fcfs",
+        "first-fit",
+        "msf",
+        "static-qs",
+        "adaptive-qs",
+        "nmsr",
+        "server-filling",
+    ];
+    let fig5 = Workload::four_class(4.0);
+    for policy in multiclass {
+        assert_runs_bit_identical(policy, "fig5", &fig5, 12_000, 1234);
+    }
+    let fig6 = borg_workload(4.0);
+    for policy in multiclass {
+        assert_runs_bit_identical(policy, "fig6", &fig6, 4_000, 77);
+    }
+    let fig2 = Workload::one_or_all(32, 7.5, 0.9, 1.0, 1.0);
+    for policy in ["fcfs", "first-fit", "msf", "server-filling"] {
+        assert_runs_bit_identical(policy, "fig2-one-or-all", &fig2, 10_000, 7);
+    }
+}
+
+/// The MSR family runs end-to-end on the genuinely 2-dimensional
+/// workload: both policies complete jobs of every class and produce
+/// finite, reproducible statistics.
+#[test]
+fn msr_policies_run_on_multires_workload() {
+    let wl = Workload::multires(16, 64, 3.0);
+    let cfg = SimConfig {
+        target_completions: 20_000,
+        warmup_completions: 4_000,
+        ..Default::default()
+    };
+    for policy in ["msr-seq", "msr-rand", "msr-seq:25", "msr-rand:100"] {
+        let id = policy.parse().unwrap();
+        let a = quickswap::sim::run_policy(&wl, &id, &cfg, 11).unwrap();
+        assert!(
+            a.mean_t_all.is_finite() && a.mean_t_all > 0.0,
+            "{policy}: E[T] = {}",
+            a.mean_t_all
+        );
+        assert!(a.count.iter().all(|&c| c > 0), "{policy}: starved a class: {:?}", a.count);
+        let b = quickswap::sim::run_policy(&wl, &id, &cfg, 11).unwrap();
+        assert_eq!(a.events, b.events, "{policy} must be deterministic");
+        assert_eq!(a.mean_t_all.to_bits(), b.mean_t_all.to_bits(), "{policy}");
+    }
+}

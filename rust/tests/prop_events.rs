@@ -541,7 +541,7 @@ fn run_engine(
         event_schedule: Some(kind),
         ..Default::default()
     };
-    quickswap::sim::run_named(wl, policy, &cfg, seed).unwrap()
+    quickswap::sim::run_policy(wl, &policy.parse().unwrap(), &cfg, seed).unwrap()
 }
 
 fn assert_bit_identical(
@@ -624,7 +624,7 @@ fn event_schedule_env_escape_hatch() {
         event_schedule: None, // follow the env default
         ..Default::default()
     };
-    let via_env = quickswap::sim::run_named(&wl, "msf", &cfg, 3).unwrap();
+    let via_env = quickswap::sim::run_policy(&wl, &"msf".parse().unwrap(), &cfg, 3).unwrap();
     std::env::remove_var("QS_EVENT_SCHEDULE");
     assert_bit_identical("msf", "env-hatch", &pinned, &via_env);
 }

@@ -5,10 +5,15 @@
 //! and asserts the structural invariants the analysis relies on.
 
 use quickswap::policy::test_support::Harness;
-use quickswap::policy::{by_name, JobId};
+use quickswap::policy::{build, JobId, Policy, PolicyId};
 use quickswap::util::proptest::check;
 use quickswap::util::rng::Rng;
 use quickswap::workload::Workload;
+
+/// Parse-then-build, the typed replacement for the old `by_name`.
+fn by_name(name: &str, wl: &Workload) -> anyhow::Result<Box<dyn Policy + Send>> {
+    build(&name.parse::<PolicyId>()?, wl)
+}
 
 /// A random scenario: class needs, arrival pattern, completion order.
 #[derive(Debug, Clone)]

@@ -6,9 +6,7 @@
 #      and as 1 driver + 2 localhost workers (`sweep drive` / `sweep
 #      work`) must produce byte-identical CSVs.
 #   2. Paired (CRN) leg: the same exercise with `--paired --baseline
-#      msf`, marginal + Δ CSVs both byte-identical — driven through the
-#      legacy `--driver`/bare-`sweep` spellings to smoke the hidden
-#      aliases.
+#      msf`, marginal + Δ CSVs both byte-identical.
 #   3. Kill-and-resume leg: a journaled driver is SIGKILLed after ≥5 of
 #      72 units, then restarted on the same journal with 2 workers; the
 #      resumed CSV must be byte-identical to an uninterrupted run and
@@ -116,17 +114,25 @@ run_sharded "$OUT/sweep_driver.log" \
 echo "== diff =="
 require_identical "$OUT/sweep_inproc.csv" "$OUT/sweep_sharded.csv"
 
-echo "== paired (CRN) in-process reference run (legacy bare-sweep alias) =="
-"$BIN" sweep "${GRID[@]}" --paired --baseline msf --out "$OUT/sweep_paired_inproc.csv"
+echo "== paired (CRN) in-process reference run =="
+"$BIN" sweep run "${GRID[@]}" --paired --baseline msf --out "$OUT/sweep_paired_inproc.csv"
 
-echo "== paired (CRN) sharded run: driver + 2 workers (legacy --driver alias) =="
+echo "== paired (CRN) sharded run: driver + 2 workers =="
 run_sharded "$OUT/sweep_paired_driver.log" \
-    "$BIN" sweep "${GRID[@]}" --paired --baseline msf --driver 127.0.0.1:0 \
+    "$BIN" sweep drive "${GRID[@]}" --paired --baseline msf --addr 127.0.0.1:0 \
     --out "$OUT/sweep_paired_sharded.csv"
 
 echo "== paired diff =="
 require_identical "$OUT/sweep_paired_inproc.csv" "$OUT/sweep_paired_sharded.csv"
 require_identical "$OUT/sweep_paired_inproc.diff.csv" "$OUT/sweep_paired_sharded.diff.csv"
+
+echo "== multiresource MSR leg: sweep run on the 2-dimension workload =="
+"$BIN" sweep run --workload multires --k 16 --mem 64 --lambdas 2.0,3.0 \
+    --policies msr-seq,msr-rand:50 --completions 4000 --seed 7 --reps 2 \
+    --out "$OUT/sweep_msr_multires.csv"
+grep -q 'msr-seq' "$OUT/sweep_msr_multires.csv"
+grep -q 'msr-rand:50' "$OUT/sweep_msr_multires.csv"
+echo "ok: MSR-Seq and MSR-Rand swept the multires workload to CSV"
 
 echo "== kill-and-resume leg: uninterrupted reference =="
 "$BIN" sweep run "${KGRID[@]}" --out "$OUT/sweep_kill_ref.csv"
