@@ -9,8 +9,57 @@
 
 use crate::coordinator::core::CoordinatorHandle;
 use crate::util::json::Value;
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
+use std::time::{Duration, Instant};
+
+/// Read one newline-terminated line from an untrusted peer, bounded in
+/// both time and space: `budget` is an *absolute* deadline covering the
+/// whole line (re-armed per `read` call, so a peer trickling one byte
+/// per second cannot extend it — `Some(10s)` means the full line within
+/// ten seconds, period; `None` blocks indefinitely), and `max_line`
+/// caps the accumulated bytes so a newline-less flood cannot grow the
+/// buffer without limit. Returns the line without its terminator, or
+/// `None` on timeout, overflow, EOF before any newline, or a socket
+/// error. Unlike `BufRead::read_line`, a line is consumed byte-by-byte
+/// from the `BufReader` so no bytes beyond the newline are stolen from
+/// subsequent reads.
+pub fn read_line_bounded(
+    reader: &mut BufReader<TcpStream>,
+    budget: Option<Duration>,
+    max_line: usize,
+) -> Option<String> {
+    let start = Instant::now();
+    let mut buf = Vec::new();
+    let mut byte = [0u8; 1];
+    loop {
+        if let Some(budget) = budget {
+            let left = budget.checked_sub(start.elapsed())?;
+            if reader.get_ref().set_read_timeout(Some(left)).is_err() {
+                return None;
+            }
+        }
+        match reader.read(&mut byte) {
+            Ok(0) | Err(_) => return None,
+            Ok(_) => {}
+        }
+        if byte[0] == b'\n' {
+            break;
+        }
+        if buf.len() >= max_line {
+            return None;
+        }
+        buf.push(byte[0]);
+    }
+    if budget.is_some() && reader.get_ref().set_read_timeout(None).is_err() {
+        return None;
+    }
+    let mut line = String::from_utf8(buf).ok()?;
+    if line.ends_with('\r') {
+        line.pop();
+    }
+    Some(line)
+}
 
 /// Serve the coordinator API on `addr` (e.g. "127.0.0.1:0"). Returns the
 /// bound address; the acceptor runs on a background thread until the
@@ -41,12 +90,11 @@ fn handle_conn(stream: TcpStream, handle: CoordinatorHandle) {
         Ok(w) => w,
         Err(_) => return,
     };
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let line = match line {
-            Ok(l) => l,
-            Err(_) => return,
-        };
+    let mut reader = BufReader::new(stream);
+    // Cap each request line at 1 MiB: no client request is anywhere
+    // near that, and an unbounded `lines()` would let a newline-less
+    // peer grow the buffer without limit.
+    while let Some(line) = read_line_bounded(&mut reader, None, 1 << 20) {
         if line.trim().is_empty() {
             continue;
         }

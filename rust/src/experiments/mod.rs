@@ -842,7 +842,12 @@ pub fn write_diff_csv(
     ];
     header.extend(class_names.iter().map(|n| format!("d_et_{n}")));
     let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
-    let mut w = crate::util::csv::CsvWriter::create(path, &header_refs)?;
+    // Atomic publish: rows accumulate in a same-directory temp file
+    // that only replaces `path` on a clean, synced finish — a crash (or
+    // injected fault) mid-write never leaves a torn CSV at the final
+    // name.
+    let tmp = crate::sweep::faultline::AtomicFile::create(std::path::Path::new(path))?;
+    let mut w = crate::util::csv::CsvWriter::new(tmp, &header_refs)?;
     for d in diffs {
         let mut row = vec![
             crate::util::csv::format_g(d.lambda),
@@ -858,7 +863,8 @@ pub fn write_diff_csv(
         }
         w.row(&row)?;
     }
-    w.flush()
+    w.flush()?;
+    w.into_inner().commit()
 }
 
 /// Pretty-print paired Δ rows grouped by λ.
@@ -934,7 +940,11 @@ pub fn write_sweep_csv(
     ];
     header.extend(class_names.iter().map(|n| format!("et_{n}")));
     let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
-    let mut w = crate::util::csv::CsvWriter::create(path, &header_refs)?;
+    // Atomic publish, as in write_diff_csv: temp file + rename, so the
+    // CSV at `path` is always either the old complete file or the new
+    // complete file.
+    let tmp = crate::sweep::faultline::AtomicFile::create(std::path::Path::new(path))?;
+    let mut w = crate::util::csv::CsvWriter::new(tmp, &header_refs)?;
     for p in points {
         let mut row = vec![
             crate::util::csv::format_g(p.lambda),
@@ -950,7 +960,8 @@ pub fn write_sweep_csv(
         }
         w.row(&row)?;
     }
-    w.flush()
+    w.flush()?;
+    w.into_inner().commit()
 }
 
 /// Pretty-print a sweep grouped by λ.

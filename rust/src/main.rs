@@ -15,7 +15,7 @@ use quickswap::config::parse_workload;
 use quickswap::coordinator::{serve_tcp, Coordinator, CoordinatorConfig};
 use quickswap::experiments::{figures, FigureId, Scale, SweepOpts};
 use quickswap::sim::SimConfig;
-use quickswap::sweep::{proto, DriverBuilder, SpecOutcome, SweepSpec, WorkloadSpec};
+use quickswap::sweep::{proto, DriverBuilder, SpecOutcome, SweepSpec, WorkerConfig, WorkerOutcome, WorkloadSpec};
 use quickswap::util::cli::{render_help, Args, OptSpec};
 use quickswap::util::json::Value;
 use quickswap::workload::{borg::borg_workload, trace::Trace, Workload};
@@ -80,6 +80,14 @@ fn help() -> String {
             OptSpec { name: "reps", help: "replications per sweep point", default: Some("QS_REPS or 4".into()) },
             OptSpec { name: "addr", help: "sweep drive|work|status: TCP address (\":0\" picks a port for drive); set QS_SWEEP_TOKEN to require/offer a shared secret", default: Some("127.0.0.1:0 for drive".into()) },
             OptSpec { name: "journal", help: "sweep drive: append-only JSONL checkpoint; a restarted driver pointed at the same journal resumes without rerunning finished units", default: None },
+            OptSpec { name: "fsync", help: "sweep drive (flag): sync_all every journal record to the device before acking (power-cut-safe); or set QS_JOURNAL_FSYNC=1", default: None },
+            OptSpec { name: "hb-timeout-secs", help: "sweep drive: requeue units whose worker has been silent this long (0 disables; QS_HEARTBEAT_TIMEOUT_SECS)", default: Some("30".into()) },
+            OptSpec { name: "max-conns", help: "sweep drive: connection cap — extra peers get a typed 'busy' and a clean close (QS_MAX_CONNS)", default: Some("256".into()) },
+            OptSpec { name: "fault-plan", help: "sweep drive|work: seeded deterministic fault plan, e.g. 'seed=7;disconnect@5;crash@3' (QS_FAULT_PLAN) — chaos testing", default: None },
+            OptSpec { name: "retries", help: "sweep work: reconnect attempts before declaring the driver lost (QS_WORKER_RETRIES)", default: Some("3".into()) },
+            OptSpec { name: "backoff-ms", help: "sweep work: base reconnect backoff, doubled per attempt with deterministic jitter (QS_WORKER_BACKOFF_MS)", default: Some("50".into()) },
+            OptSpec { name: "backoff-cap-ms", help: "sweep work: reconnect backoff ceiling (QS_WORKER_BACKOFF_CAP_MS)", default: Some("1000".into()) },
+            OptSpec { name: "heartbeat-secs", help: "sweep work: one-way ping interval so the driver can tell hung from busy (0 disables; QS_HEARTBEAT_SECS)", default: Some("2".into()) },
             OptSpec { name: "figs", help: "sweep drive: queue several figures' predefined grids in one sweep, e.g. --figs 2,6,8", default: None },
             OptSpec { name: "fig", help: "sweep: use a figure's predefined grid (2|3|5|6|8)", default: None },
             OptSpec { name: "paired", help: "sweep: common-random-number mode — all policies replay one shared arrival stream per (lambda, replication); prints paired-difference CIs", default: None },
@@ -306,6 +314,23 @@ fn cmd_sweep_drive(args: &Args) -> anyhow::Result<()> {
     if let Some(j) = args.get("journal") {
         builder = builder.journal(j);
     }
+    if args.flag("fsync") {
+        builder = builder.fsync(true);
+    }
+    if args.get("hb-timeout-secs").is_some() {
+        let secs = args.f64_or("hb-timeout-secs", 30.0)?;
+        let hb = (secs > 0.0 && secs.is_finite())
+            .then(|| std::time::Duration::from_secs_f64(secs));
+        builder = builder.heartbeat_timeout(hb);
+    }
+    if args.get("max-conns").is_some() {
+        builder = builder.max_conns(args.u64_or("max-conns", 256)? as usize);
+    }
+    if let Some(plan) = args.get("fault-plan") {
+        // Explicit CLI plans must parse — unlike the env default, a typo
+        // here is an error, not a warning.
+        builder = builder.fault_plan(Some(quickswap::sweep::faultline::FaultPlan::parse(plan)?));
+    }
     let driver = builder.bind()?;
     // Stderr, machine-parseable: scripts read the bound port from this
     // line (ports chosen with ":0").
@@ -333,6 +358,19 @@ fn cmd_sweep_drive(args: &Args) -> anyhow::Result<()> {
         "qs-sweep driver: {} units total, {} from journal, {} executed",
         report.units_total, report.units_from_journal, report.units_executed
     );
+    let l = report.liveness;
+    eprintln!(
+        "qs-sweep driver liveness: accepted={} shed={} pings={} hb_requeues={} \
+         timeout_requeues={} disconnect_requeues={} idle_drops={} duplicates={}",
+        l.conns_accepted,
+        l.conns_shed,
+        l.pings,
+        l.heartbeat_requeues,
+        l.timeout_requeues,
+        l.disconnect_requeues,
+        l.idle_drops,
+        l.duplicates
+    );
     let weighted = args.flag("weighted");
     for ((spec, label), outcome) in specs.iter().zip(&labels).zip(&report.outcomes) {
         let out = args.get("out").map(|o| {
@@ -348,11 +386,51 @@ fn cmd_sweep_drive(args: &Args) -> anyhow::Result<()> {
 }
 
 /// `sweep work`: everything (grids, seeds, run lengths) comes from the
-/// driver; local grid args are ignored.
+/// driver; local grid args are ignored. Self-healing knobs (reconnect
+/// retries, backoff, heartbeat cadence, fault plan) come from the
+/// environment with CLI overrides.
 fn cmd_sweep_work(args: &Args) -> anyhow::Result<()> {
     let addr = args.required("addr")?;
-    let units = quickswap::sweep::run_worker(addr)?;
-    eprintln!("qs-sweep worker: completed {units} units");
+    let mut cfg = WorkerConfig::from_env()?;
+    if args.get("retries").is_some() {
+        cfg.max_retries = args.u64_or("retries", cfg.max_retries as u64)? as u32;
+    }
+    if args.get("backoff-ms").is_some() {
+        cfg.backoff_base = std::time::Duration::from_millis(args.u64_or("backoff-ms", 50)?);
+    }
+    if args.get("backoff-cap-ms").is_some() {
+        cfg.backoff_cap = std::time::Duration::from_millis(args.u64_or("backoff-cap-ms", 1000)?);
+    }
+    if args.get("heartbeat-secs").is_some() {
+        let secs = args.f64_or("heartbeat-secs", 2.0)?;
+        cfg.heartbeat = (secs > 0.0 && secs.is_finite())
+            .then(|| std::time::Duration::from_secs_f64(secs));
+    }
+    if let Some(plan) = args.get("fault-plan") {
+        cfg.plan = Some(quickswap::sweep::faultline::FaultPlan::parse(plan)?);
+    }
+    let report = quickswap::sweep::run_worker_with(addr, &cfg)?;
+    if report.reconnects > 0 {
+        eprintln!(
+            "qs-sweep worker: {} reconnect(s), {} busy retr{} along the way",
+            report.reconnects,
+            report.busy_retries,
+            if report.busy_retries == 1 { "y" } else { "ies" }
+        );
+    }
+    match report.outcome {
+        WorkerOutcome::Done => {
+            eprintln!("qs-sweep worker: completed {} units", report.completed)
+        }
+        WorkerOutcome::DriverLost => eprintln!(
+            "qs-sweep worker: driver lost after {} completed units",
+            report.completed
+        ),
+        WorkerOutcome::Crashed => eprintln!(
+            "qs-sweep worker: stopped by injected crash after {} completed units",
+            report.completed
+        ),
+    }
     Ok(())
 }
 
@@ -372,6 +450,9 @@ fn cmd_sweep_status(args: &Args) -> anyhow::Result<()> {
     let first = proto::parse_line(&line)?;
     if let Some(msg) = proto::err_of(&first) {
         anyhow::bail!("driver rejected this status probe: {msg}");
+    }
+    if proto::op_of(&first) == Some("busy") {
+        anyhow::bail!("driver is at its connection cap (busy); try again shortly");
     }
     writeln!(writer, "{}", proto::msg_status_req())?;
     line.clear();

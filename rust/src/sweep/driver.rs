@@ -3,30 +3,46 @@
 //! [`Journal`], and pools the results per spec.
 //!
 //! Build with [`DriverBuilder`] (spec queue, bind address, auth token,
-//! unit timeout, journal path), then [`Driver::serve`]. The driver is
-//! "just another [`UnitSource`]": once every unit is resolved, the
-//! recorded runs are replayed per spec through the same
-//! [`sweep_units`] / [`sweep_paired_units`] pooling paths the local
-//! thread runner uses, so sharded, resumed, and multi-spec results are
-//! merged by exactly the same code, in the same (replication-order)
-//! sequence, as in-process results.
+//! unit timeout, journal path, durability and overload knobs), then
+//! [`Driver::serve`]. The driver is "just another [`UnitSource`]": once
+//! every unit is resolved, the recorded runs are replayed per spec
+//! through the same [`sweep_units`] / [`sweep_paired_units`] pooling
+//! paths the local thread runner uses, so sharded, resumed, and
+//! multi-spec results are merged by exactly the same code, in the same
+//! (replication-order) sequence, as in-process results.
 //!
 //! Fault model: a worker that disconnects with claimed-but-unreported
 //! units has them requeued; duplicate results for a unit id are ignored
-//! (first wins). The driver returns once every unit has been delivered
-//! or conclusively failed on a worker. A hung-but-connected worker
-//! stalls its unit indefinitely by default; setting
-//! `QS_UNIT_TIMEOUT_SECS` (or [`DriverBuilder::unit_timeout`]) arms an
-//! assignment deadline — a unit held past it is requeued to the next
-//! `next` request (heterogeneous worker pacing), with the usual
-//! dedupe-by-unit-id if the slow worker eventually reports anyway.
-//! Workers may join and leave at any point in the sweep's life.
+//! (first wins — reconnecting workers *resend* unacked results, so
+//! duplicates are a normal part of self-healing, not just a rogue-client
+//! concern). Three independent detectors reclaim stuck units:
 //!
-//! Durability: with a journal configured, every result is appended and
-//! flushed *before* the worker's ack, so a driver SIGKILLed mid-sweep
-//! and restarted on the same journal re-delivers finished units from
-//! disk (never rerunning them) and emits byte-identical CSVs to an
-//! uninterrupted run — see [`crate::sweep::journal`].
+//! * **disconnect** — the connection drops; its claimed units requeue
+//!   immediately;
+//! * **heartbeat staleness** — v4 workers ping between lockstep
+//!   exchanges; a connection silent past the heartbeat deadline
+//!   ([`DriverBuilder::heartbeat_timeout`], default 30 s) has its units
+//!   requeued even though the socket still looks open, and a connection
+//!   silent past 2× the deadline is dropped outright (which also bounds
+//!   slow-loris handshakers);
+//! * **unit timeout** — `QS_UNIT_TIMEOUT_SECS` /
+//!   [`DriverBuilder::unit_timeout`] arms an assignment deadline as
+//!   before (heterogeneous worker pacing), off by default.
+//!
+//! Overload: at the connection cap ([`DriverBuilder::max_conns`],
+//! default 256) new peers get a typed `busy` line and a clean close
+//! instead of a hung accept queue; workers back off and retry. All
+//! counters land in [`Liveness`] (on the [`ServeReport`] and the
+//! `status` endpoint).
+//!
+//! Durability: with a journal configured, every result is appended —
+//! and with [`DriverBuilder::fsync`], `sync_all`ed — *before* the
+//! worker's ack, so a driver SIGKILLed mid-sweep and restarted on the
+//! same journal re-delivers finished units from disk (never rerunning
+//! them) and emits byte-identical CSVs to an uninterrupted run — see
+//! [`crate::sweep::journal`]. A journal append *failure* is fatal: the
+//! unit is not acked, [`Driver::serve`] returns the error, and no state
+//! advances past what is durably recorded.
 //!
 //! Auth: with `QS_SWEEP_TOKEN` set (or [`DriverBuilder::auth_token`]),
 //! the driver requires every peer's opening `hello` to carry the
@@ -35,31 +51,52 @@
 //! loopback/test default). The read-only `status` op is available to
 //! any authenticated peer.
 
+use crate::coordinator::tcp::read_line_bounded;
 use crate::experiments::{
     sweep_paired_units, sweep_units, PairedGrid, PairedRun, PairedSweep, PairedUnitSource, Point,
     SweepGrid, UnitRun, UnitSource,
 };
 use crate::sim::{ReplicationPool, SimResult};
-use crate::sweep::journal::Journal;
+use crate::sweep::faultline::{FaultPlan, PlanState};
+use crate::sweep::journal::{Journal, JournalOptions};
 use crate::sweep::{proto, AnyRun, SpecQueue, SpecTask, SweepSpec};
 use crate::util::json::Value;
 use crate::workload::Workload;
-use std::collections::VecDeque;
-use std::io::{BufRead, BufReader, Write};
+use std::collections::{HashMap, VecDeque};
+use std::io::{BufReader, ErrorKind, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 /// Optional assignment deadline from the environment: fractional seconds
 /// in `QS_UNIT_TIMEOUT_SECS` (unset, empty, or non-positive = off).
 fn unit_timeout_from_env() -> Option<Duration> {
-    std::env::var("QS_UNIT_TIMEOUT_SECS")
+    env_secs("QS_UNIT_TIMEOUT_SECS").unwrap_or(None)
+}
+
+/// Heartbeat deadline from the environment (`QS_HEARTBEAT_TIMEOUT_SECS`,
+/// fractional seconds; ≤ 0 disables, unset = 30 s).
+fn heartbeat_timeout_from_env() -> Option<Duration> {
+    env_secs("QS_HEARTBEAT_TIMEOUT_SECS").unwrap_or(Some(Duration::from_secs(30)))
+}
+
+/// `Some(parsed)` when the variable is set and parseable, else `None`
+/// (caller supplies the default). Inner `None` = explicitly disabled.
+fn env_secs(key: &str) -> Option<Option<Duration>> {
+    let v = std::env::var(key).ok()?;
+    let s = v.trim().parse::<f64>().ok()?;
+    Some((s > 0.0 && s.is_finite()).then(|| Duration::from_secs_f64(s)))
+}
+
+/// Connection cap from the environment (`QS_MAX_CONNS`, default 256).
+fn max_conns_from_env() -> usize {
+    std::env::var("QS_MAX_CONNS")
         .ok()
-        .and_then(|v| v.trim().parse::<f64>().ok())
-        .filter(|&s| s > 0.0 && s.is_finite())
-        .map(Duration::from_secs_f64)
+        .and_then(|v| v.trim().parse::<usize>().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or(256)
 }
 
 /// Optional shared-secret token from the environment (`QS_SWEEP_TOKEN`;
@@ -71,10 +108,11 @@ pub(crate) fn auth_token_from_env() -> Option<String> {
 }
 
 /// Configures and binds a sweep [`Driver`]: the spec queue, bind
-/// address, shared-secret auth, assignment deadline, and checkpoint
-/// journal all live here, replacing the accreted
-/// `with_auth_token`/`with_unit_timeout` chain. `new` seeds the
-/// environment defaults (`QS_UNIT_TIMEOUT_SECS`, `QS_SWEEP_TOKEN`);
+/// address, shared-secret auth, assignment/heartbeat deadlines,
+/// checkpoint journal, durability, overload cap, and fault plan all
+/// live here. `new` seeds the environment defaults
+/// (`QS_UNIT_TIMEOUT_SECS`, `QS_SWEEP_TOKEN`, `QS_JOURNAL_FSYNC`,
+/// `QS_HEARTBEAT_TIMEOUT_SECS`, `QS_MAX_CONNS`, `QS_FAULT_PLAN`);
 /// explicit setters override them — tests pin values here so parallel
 /// tests never race on process-global env state.
 pub struct DriverBuilder {
@@ -83,16 +121,36 @@ pub struct DriverBuilder {
     unit_timeout: Option<Duration>,
     auth_token: Option<String>,
     journal: Option<PathBuf>,
+    fsync: bool,
+    heartbeat_timeout: Option<Duration>,
+    max_conns: usize,
+    fault_plan: Option<FaultPlan>,
 }
 
 impl DriverBuilder {
     pub fn new() -> DriverBuilder {
+        let fault_plan = match FaultPlan::from_env() {
+            Ok(p) => p,
+            Err(e) => {
+                eprintln!("qs-sweep driver: ignoring unparseable QS_FAULT_PLAN: {e}");
+                None
+            }
+        };
         DriverBuilder {
             specs: Vec::new(),
             addr: "127.0.0.1:0".to_string(),
             unit_timeout: unit_timeout_from_env(),
             auth_token: auth_token_from_env(),
             journal: None,
+            fsync: std::env::var("QS_JOURNAL_FSYNC")
+                .map(|v| {
+                    let v = v.trim();
+                    !(v.is_empty() || v == "0" || v.eq_ignore_ascii_case("false"))
+                })
+                .unwrap_or(false),
+            heartbeat_timeout: heartbeat_timeout_from_env(),
+            max_conns: max_conns_from_env(),
+            fault_plan,
         }
     }
 
@@ -122,6 +180,14 @@ impl DriverBuilder {
         self
     }
 
+    /// Override the heartbeat deadline: a connection silent this long
+    /// has its claimed units requeued; silent 2× this long, it is
+    /// dropped (`None` disables both).
+    pub fn heartbeat_timeout(mut self, timeout: Option<Duration>) -> DriverBuilder {
+        self.heartbeat_timeout = timeout;
+        self
+    }
+
     /// Override the shared-secret auth token (`None` or empty = accept
     /// any peer).
     pub fn auth_token(mut self, token: Option<String>) -> DriverBuilder {
@@ -134,6 +200,27 @@ impl DriverBuilder {
     /// resumes instead of rerunning finished units.
     pub fn journal<P: Into<PathBuf>>(mut self, path: P) -> DriverBuilder {
         self.journal = Some(path.into());
+        self
+    }
+
+    /// `sync_all` every journal record to the device before the
+    /// worker's ack (power-cut-safe; default is flush-to-OS only).
+    pub fn fsync(mut self, on: bool) -> DriverBuilder {
+        self.fsync = on;
+        self
+    }
+
+    /// Cap on concurrently served connections; peers past it get a
+    /// typed `busy` reply and a clean close.
+    pub fn max_conns(mut self, cap: usize) -> DriverBuilder {
+        self.max_conns = cap.max(1);
+        self
+    }
+
+    /// Inject storage faults (torn appends, fsync-dropped tails) from a
+    /// seeded plan — chaos tests only.
+    pub fn fault_plan(mut self, plan: Option<FaultPlan>) -> DriverBuilder {
+        self.fault_plan = plan;
         self
     }
 
@@ -154,6 +241,12 @@ impl DriverBuilder {
             unit_timeout: self.unit_timeout,
             auth_token: self.auth_token,
             journal_path: self.journal,
+            fsync: self.fsync,
+            heartbeat_timeout: self.heartbeat_timeout,
+            max_conns: self.max_conns,
+            faults: self
+                .fault_plan
+                .map(|p| Arc::new(Mutex::new(PlanState::new(p)))),
         })
     }
 }
@@ -187,15 +280,47 @@ impl SpecOutcome {
     }
 }
 
+/// Liveness and fault-handling counters for one serve: how many
+/// connections were accepted and shed, pings seen, and units requeued
+/// by each detector. Purely observational — none of it can affect
+/// result bits.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Liveness {
+    pub conns_accepted: u64,
+    pub conns_shed: u64,
+    pub pings: u64,
+    pub heartbeat_requeues: u64,
+    pub timeout_requeues: u64,
+    pub disconnect_requeues: u64,
+    pub idle_drops: u64,
+    pub duplicates: u64,
+}
+
+impl Liveness {
+    fn to_json(self) -> Value {
+        Value::obj()
+            .set("conns_accepted", self.conns_accepted)
+            .set("conns_shed", self.conns_shed)
+            .set("pings", self.pings)
+            .set("heartbeat_requeues", self.heartbeat_requeues)
+            .set("timeout_requeues", self.timeout_requeues)
+            .set("disconnect_requeues", self.disconnect_requeues)
+            .set("idle_drops", self.idle_drops)
+            .set("duplicates", self.duplicates)
+    }
+}
+
 /// What a [`Driver::serve`] call did: per-spec outcomes in queue order,
-/// plus unit accounting (`units_from_journal` + `units_executed` =
+/// unit accounting (`units_from_journal` + `units_executed` =
 /// `units_total` on a clean exit — the resume tests assert finished
-/// units were served from disk, not rerun).
+/// units were served from disk, not rerun), and the [`Liveness`]
+/// counters.
 pub struct ServeReport {
     pub outcomes: Vec<SpecOutcome>,
     pub units_total: usize,
     pub units_from_journal: usize,
     pub units_executed: usize,
+    pub liveness: Liveness,
 }
 
 /// A bound (but not yet serving) sweep driver — build one with
@@ -207,6 +332,10 @@ pub struct Driver {
     unit_timeout: Option<Duration>,
     auth_token: Option<String>,
     journal_path: Option<PathBuf>,
+    fsync: bool,
+    heartbeat_timeout: Option<Duration>,
+    max_conns: usize,
+    faults: Option<Arc<Mutex<PlanState>>>,
 }
 
 impl Driver {
@@ -221,13 +350,19 @@ impl Driver {
     /// [`run_spec_local`](crate::sweep::run_spec_local) /
     /// [`run_spec_paired_local`](crate::sweep::run_spec_paired_local)
     /// output bit for bit, regardless of worker count, assignment,
-    /// arrival order, or intervening driver kills.
+    /// arrival order, or intervening driver kills. Errors if a journal
+    /// append ever fails: nothing past the durable record is acked, so
+    /// a rerun on the same journal converges to the same bits.
     pub fn serve(self) -> anyhow::Result<ServeReport> {
         let total = self.queue.total_units();
         let mut journal = None;
         let mut entries = Vec::new();
         if let Some(path) = &self.journal_path {
-            let (j, e) = Journal::open(path, &self.queue)?;
+            let opts = JournalOptions {
+                fsync: self.fsync,
+                faults: self.faults.clone(),
+            };
+            let (j, e) = Journal::open_with(path, &self.queue, opts)?;
             journal = Some(j);
             entries = e;
         }
@@ -248,6 +383,8 @@ impl Driver {
         let svc = Service {
             queue: &self.queue,
             unit_timeout: self.unit_timeout,
+            heartbeat_timeout: self.heartbeat_timeout,
+            max_conns: self.max_conns,
             auth_token: self.auth_token.as_deref(),
             specs_line,
             state: Mutex::new(State {
@@ -256,10 +393,14 @@ impl Driver {
                 assigned: vec![None; total],
                 remaining,
                 conns: Vec::new(),
+                conn_seen: HashMap::new(),
+                active_conns: 0,
                 runs,
                 journal,
                 executed: 0,
                 from_journal,
+                fatal: None,
+                live: Liveness::default(),
             }),
             cv: Condvar::new(),
             done: AtomicBool::new(false),
@@ -270,7 +411,11 @@ impl Driver {
             svc.serve_loop(&self.listener, self.addr);
         }
         let st = svc.state.into_inner().unwrap();
+        if let Some(msg) = st.fatal {
+            anyhow::bail!("sweep serve aborted: {msg}");
+        }
         let executed = st.executed;
+        let liveness = st.live;
         let mut all = st.runs;
         let mut outcomes = Vec::with_capacity(self.queue.tasks().len());
         for task in self.queue.tasks() {
@@ -290,6 +435,7 @@ impl Driver {
             units_total: total,
             units_from_journal: from_journal,
             units_executed: executed,
+            liveness,
         })
     }
 
@@ -336,7 +482,9 @@ impl PairedUnitSource for Replay {
 
 /// Shared serving state, guarded by one mutex.
 struct State {
-    /// Global unit ids not currently assigned to any live connection.
+    /// Global unit ids not currently assigned to any live connection
+    /// (may contain stale entries for units delivered after a requeue;
+    /// the pop path skips them).
     pending: VecDeque<usize>,
     /// Per-unit "a result (success or failure) has been recorded".
     delivered: Vec<bool>,
@@ -345,8 +493,15 @@ struct State {
     assigned: Vec<Option<(u64, Instant)>>,
     /// Units still without a recorded result.
     remaining: usize,
-    /// Clones of every accepted connection, for shutdown at completion.
+    /// Clones of every accepted connection, for the teardown broadcast
+    /// and shutdown at completion.
     conns: Vec<TcpStream>,
+    /// Last instant each live connection was heard from (any op,
+    /// including heartbeat pings) — the staleness clock.
+    conn_seen: HashMap<u64, Instant>,
+    /// Connections currently being served (the overload cap compares
+    /// against this).
+    active_conns: usize,
     /// Recorded runs, slotted by global unit id (None = pending or
     /// conclusively failed).
     runs: Vec<Option<AnyRun>>,
@@ -357,22 +512,59 @@ struct State {
     executed: usize,
     /// Units pre-delivered from the journal at startup.
     from_journal: usize,
+    /// A condition no ack may advance past (journal append failure):
+    /// set once, wakes the main thread, aborts the serve.
+    fatal: Option<String>,
+    /// Liveness counters (see [`Liveness`]).
+    live: Liveness,
 }
 
 impl State {
-    /// Requeue every unit whose assignment deadline has passed. Runs at
-    /// `next`-request cadence, so a stalled worker's unit becomes
-    /// available exactly when some live worker asks for more work.
-    fn requeue_expired(&mut self, timeout: Duration, now: Instant) {
+    /// Requeue every unit whose worker is conclusively stuck: held past
+    /// the assignment deadline, or owned by a connection that has gone
+    /// silent past the heartbeat deadline. Runs at `next`-request
+    /// cadence, so a stalled worker's unit becomes available exactly
+    /// when some live worker asks for more work.
+    fn requeue_dead(
+        &mut self,
+        unit_timeout: Option<Duration>,
+        hb_timeout: Option<Duration>,
+        now: Instant,
+    ) {
         for u in 0..self.assigned.len() {
-            if let Some((_, t0)) = self.assigned[u] {
-                if !self.delivered[u] && now.duration_since(t0) > timeout {
+            let Some((conn, t0)) = self.assigned[u] else {
+                continue;
+            };
+            if self.delivered[u] {
+                continue;
+            }
+            if let Some(timeout) = unit_timeout {
+                if now.duration_since(t0) > timeout {
                     self.assigned[u] = None;
                     self.pending.push_back(u);
+                    self.live.timeout_requeues += 1;
                     eprintln!(
                         "qs-sweep driver: unit {u} held past the \
                          {}s assignment deadline; requeued",
                         timeout.as_secs_f64()
+                    );
+                    continue;
+                }
+            }
+            if let Some(hb) = hb_timeout {
+                // Silence is measured from the later of the claim and
+                // the last message — a unit claimed a while ago by a
+                // worker that pinged a second ago is healthy.
+                let last = self.conn_seen.get(&conn).copied().unwrap_or(t0);
+                let fresh = if last > t0 { last } else { t0 };
+                if now.duration_since(fresh) > hb {
+                    self.assigned[u] = None;
+                    self.pending.push_back(u);
+                    self.live.heartbeat_requeues += 1;
+                    eprintln!(
+                        "qs-sweep driver: unit {u}'s worker silent past the \
+                         {}s heartbeat deadline; requeued",
+                        hb.as_secs_f64()
                     );
                 }
             }
@@ -385,6 +577,8 @@ impl State {
 struct Service<'a> {
     queue: &'a SpecQueue,
     unit_timeout: Option<Duration>,
+    heartbeat_timeout: Option<Duration>,
+    max_conns: usize,
     auth_token: Option<&'a str>,
     specs_line: String,
     state: Mutex<State>,
@@ -410,9 +604,21 @@ fn parse_any(queue: &SpecQueue, v: &Value) -> anyhow::Result<(usize, Result<AnyR
     }
 }
 
+/// One pre-formatted line, one `write_all`: concurrent writers to the
+/// same socket (a handler thread and the teardown broadcast) interleave
+/// at whole-line granularity instead of tearing mid-line the way
+/// `writeln!`'s many small `write_fmt` calls can.
+fn write_line<W: Write>(w: &mut W, v: &Value) -> bool {
+    let mut line = v.to_string();
+    line.push('\n');
+    w.write_all(line.as_bytes()).is_ok()
+}
+
 impl Service<'_> {
     /// Accept connections and serve until every pending unit is
-    /// resolved, then shut every connection down.
+    /// resolved, then broadcast `done` and shut every connection down
+    /// (workers exit cleanly instead of entering their reconnect
+    /// dance).
     fn serve_loop(&self, listener: &TcpListener, addr: SocketAddr) {
         let conn_ids = AtomicU64::new(0);
         std::thread::scope(|s| {
@@ -422,19 +628,43 @@ impl Service<'_> {
                         break;
                     }
                     let Ok(stream) = conn else { break };
-                    if let Ok(clone) = stream.try_clone() {
-                        self.state.lock().unwrap().conns.push(clone);
+                    {
+                        let mut st = self.state.lock().unwrap();
+                        if st.active_conns >= self.max_conns {
+                            // Overload: shed with a typed reply instead
+                            // of serving (or silently dropping) the peer.
+                            st.live.conns_shed += 1;
+                            drop(st);
+                            let mut w = &stream;
+                            write_line(&mut w, &proto::msg_busy(250));
+                            let _ = stream.shutdown(Shutdown::Both);
+                            eprintln!(
+                                "qs-sweep driver: shed connection \
+                                 (at the {}-connection cap)",
+                                self.max_conns
+                            );
+                            continue;
+                        }
+                        st.active_conns += 1;
+                        st.live.conns_accepted += 1;
+                        if let Ok(clone) = stream.try_clone() {
+                            st.conns.push(clone);
+                        }
                     }
                     let conn_id = conn_ids.fetch_add(1, Ordering::Relaxed);
                     s.spawn(move || self.handle_conn(stream, conn_id));
                 }
             });
             let guard = self.state.lock().unwrap();
-            let guard = self.cv.wait_while(guard, |st| st.remaining > 0).unwrap();
+            let guard = self
+                .cv
+                .wait_while(guard, |st| st.remaining > 0 && st.fatal.is_none())
+                .unwrap();
             drop(guard);
             self.done.store(true, Ordering::SeqCst);
-            // Wake the acceptor, then unblock every connection thread
-            // still parked in a read (workers see EOF and exit). Connect
+            // Wake the acceptor, then tell every connection the sweep is
+            // over before unblocking its read: workers parked in the
+            // lockstep loop see `done` (or EOF) and exit cleanly. Connect
             // via loopback: the bound address may be the wildcard
             // 0.0.0.0, which is not connectable on every platform.
             let wake = SocketAddr::from(([127, 0, 0, 1], addr.port()));
@@ -442,15 +672,44 @@ impl Service<'_> {
                 let _ = TcpStream::connect(addr);
             }
             for c in &self.state.lock().unwrap().conns {
+                let mut w = c;
+                write_line(&mut w, &proto::msg_done());
                 let _ = c.shutdown(Shutdown::Both);
             }
         });
     }
 
     fn handle_conn(&self, stream: TcpStream, conn_id: u64) {
+        let claimed = self.conn_loop(stream, conn_id);
+        // Connection accounting + disconnect cleanup: requeue every
+        // claimed-but-unreported unit so other workers pick them up —
+        // unless a timeout/heartbeat detector already reissued it (the
+        // unit is then pending or owned by another connection, and
+        // requeueing again would double-enqueue it).
+        let mut st = self.state.lock().unwrap();
+        st.active_conns = st.active_conns.saturating_sub(1);
+        st.conn_seen.remove(&conn_id);
+        for u in claimed {
+            let owned = st.assigned[u].is_some_and(|(c, _)| c == conn_id);
+            if owned {
+                st.assigned[u] = None;
+                if !st.delivered[u] {
+                    st.pending.push_back(u);
+                    st.live.disconnect_requeues += 1;
+                    eprintln!(
+                        "qs-sweep driver: connection lost holding unit {u}; requeued"
+                    );
+                }
+            }
+        }
+    }
+
+    /// The per-connection protocol loop. Returns the units this
+    /// connection claimed but never reported (for requeueing).
+    fn conn_loop(&self, stream: TcpStream, conn_id: u64) -> Vec<usize> {
         let mut writer = match stream.try_clone() {
             Ok(w) => w,
-            Err(_) => return,
+            Err(_) => return Vec::new(),
         };
         let mut reader = BufReader::new(stream);
         // Handshake: the peer speaks first. The spec queue (workloads,
@@ -461,35 +720,41 @@ impl Service<'_> {
         // cannot extend it) and a byte cap: a silent, dribbling, or
         // newline-less connection cannot hold the handler thread or grow
         // the buffer.
-        let Some(line) = read_handshake_line(&mut reader, Duration::from_secs(10)) else {
-            let _ = writeln!(
-                writer,
-                "{}",
-                proto::msg_err("handshake timed out or too large")
-            );
-            return;
+        let Some(line) = read_line_bounded(&mut reader, Some(Duration::from_secs(10)), 4096)
+        else {
+            write_line(&mut writer, &proto::msg_err("handshake timed out or too large"));
+            return Vec::new();
         };
         let hello = proto::parse_line(&line).and_then(|m| proto::parse_hello(&m));
         let token = match hello {
             Ok(token) => token,
             Err(e) => {
-                let _ = writeln!(writer, "{}", proto::msg_err(&format!("bad hello: {e}")));
-                return;
+                write_line(&mut writer, &proto::msg_err(&format!("bad hello: {e}")));
+                return Vec::new();
             }
         };
         if let Some(expected) = self.auth_token {
             if !proto::token_matches(expected, token.as_deref()) {
                 eprintln!("qs-sweep driver: rejected worker (QS_SWEEP_TOKEN mismatch)");
-                let _ = writeln!(writer, "{}", proto::msg_err("auth failed"));
-                return;
+                write_line(&mut writer, &proto::msg_err("auth failed"));
+                return Vec::new();
             }
         }
-        // Authenticated: back to blocking reads for the lockstep loop (a
-        // slow-but-live worker is legitimate; the unit timeout handles
-        // stalled assignments).
-        let _ = reader.get_ref().set_read_timeout(None);
-        if writeln!(writer, "{}", self.specs_line).is_err() {
-            return;
+        // Authenticated: the lockstep loop's reads are bounded by 2× the
+        // heartbeat deadline (a live v4 worker pings well inside it; a
+        // connection silent that long is dead weight even if the unit
+        // detectors already requeued its work). With heartbeats disabled
+        // the read blocks indefinitely, as before.
+        let idle_deadline = self.heartbeat_timeout.map(|t| t * 2);
+        let _ = reader.get_ref().set_read_timeout(idle_deadline);
+        {
+            let mut st = self.state.lock().unwrap();
+            st.conn_seen.insert(conn_id, Instant::now());
+        }
+        let mut specs = self.specs_line.clone();
+        specs.push('\n');
+        if writer.write_all(specs.as_bytes()).is_err() {
+            return Vec::new();
         }
         // Units this connection has claimed but not yet reported. The
         // lockstep protocol implies at most one, but a pipelining (or
@@ -499,8 +764,19 @@ impl Service<'_> {
         let mut line = String::new();
         loop {
             line.clear();
+            use std::io::BufRead;
             match reader.read_line(&mut line) {
-                Ok(0) | Err(_) => break,
+                Ok(0) => break,
+                Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                    let mut st = self.state.lock().unwrap();
+                    st.live.idle_drops += 1;
+                    eprintln!(
+                        "qs-sweep driver: dropping idle connection \
+                         (silent past 2x the heartbeat deadline)"
+                    );
+                    break;
+                }
+                Err(_) => break,
                 Ok(_) => {}
             }
             if line.trim().is_empty() {
@@ -510,13 +786,40 @@ impl Service<'_> {
                 break;
             };
             match proto::op_of(&msg) {
+                Some("ping") => {
+                    // Heartbeat: refresh the staleness clock. Only echo
+                    // pings get a pong — worker heartbeats are one-way,
+                    // so the lockstep stream stays timing-independent.
+                    let echo = msg.get("echo").and_then(|e| e.as_bool()).unwrap_or(false);
+                    {
+                        let mut st = self.state.lock().unwrap();
+                        st.live.pings += 1;
+                        st.conn_seen.insert(conn_id, Instant::now());
+                    }
+                    if echo && !write_line(&mut writer, &proto::msg_pong()) {
+                        break;
+                    }
+                }
                 Some("next") => {
                     let reply = {
                         let mut st = self.state.lock().unwrap();
-                        if let Some(timeout) = self.unit_timeout {
-                            st.requeue_expired(timeout, Instant::now());
+                        st.conn_seen.insert(conn_id, Instant::now());
+                        st.requeue_dead(
+                            self.unit_timeout,
+                            self.heartbeat_timeout,
+                            Instant::now(),
+                        );
+                        // Skip stale pending entries: a requeued unit
+                        // delivered afterwards (resend, duplicate) stays
+                        // in the deque until popped here.
+                        let mut next = None;
+                        while let Some(u) = st.pending.pop_front() {
+                            if !st.delivered[u] {
+                                next = Some(u);
+                                break;
+                            }
                         }
-                        if let Some(u) = st.pending.pop_front() {
+                        if let Some(u) = next {
                             st.assigned[u] = Some((conn_id, Instant::now()));
                             claimed.push(u);
                             proto::msg_unit(u)
@@ -524,13 +827,13 @@ impl Service<'_> {
                             proto::msg_done()
                         } else {
                             // Everything is assigned elsewhere; poll
-                            // again — a disconnect (or an assignment
-                            // timeout) may requeue a unit.
+                            // again — a disconnect (or a detector)
+                            // may requeue a unit.
                             proto::msg_wait(25)
                         }
                     };
                     let closing = proto::op_of(&reply) == Some("done");
-                    if writeln!(writer, "{reply}").is_err() || closing {
+                    if !write_line(&mut writer, &reply) || closing {
                         break;
                     }
                 }
@@ -538,7 +841,12 @@ impl Service<'_> {
                     // Read-only: answer and keep the connection open so
                     // a monitor can poll over one socket.
                     let reply = self.status_line();
-                    if writeln!(writer, "{reply}").is_err() {
+                    self.state
+                        .lock()
+                        .unwrap()
+                        .conn_seen
+                        .insert(conn_id, Instant::now());
+                    if !write_line(&mut writer, &reply) {
                         break;
                     }
                 }
@@ -549,93 +857,91 @@ impl Service<'_> {
                     // One lock covers dedupe, journal append, slotting,
                     // and the `remaining` decrement: the main thread
                     // pools the instant it observes remaining == 0 and
-                    // must never see it before the run is slotted, and
-                    // the journal append must precede the ack below so
-                    // an acked unit is guaranteed on disk.
-                    let finished = {
+                    // must never see it before the run is slotted. The
+                    // journal append comes FIRST — before any state
+                    // mutation and before the ack — so an acked unit is
+                    // guaranteed durable and a failed append leaves no
+                    // trace of the unit having "happened".
+                    let acked_state = {
                         let mut st = self.state.lock().unwrap();
+                        st.conn_seen.insert(conn_id, Instant::now());
                         if id >= st.delivered.len() || st.delivered[id] {
-                            false // duplicate (first result won)
+                            st.live.duplicates += 1;
+                            Some(false) // duplicate (first result won); ack anyway
                         } else {
-                            st.delivered[id] = true;
-                            // Release the assignment slot only if this
-                            // connection still owns it — after a timeout
-                            // reissue it may belong to another worker.
-                            if st.assigned[id].is_some_and(|(c, _)| c == conn_id) {
-                                st.assigned[id] = None;
-                            }
                             let (si, lu) =
                                 self.queue.locate(id).expect("parse_any validated the id");
-                            match &outcome {
-                                Ok(run) => {
-                                    if let Some(j) = st.journal.as_mut() {
-                                        if let Err(e) = j.append_ok(si, lu, run) {
-                                            eprintln!(
-                                                "qs-sweep driver: journal write failed: {e}"
-                                            );
-                                        }
-                                    }
-                                }
+                            if let Err(e) = &outcome {
+                                eprintln!("sweep unit {id} failed on worker: {e}");
+                            }
+                            let jres = match (st.journal.as_mut(), &outcome) {
+                                (Some(j), Ok(run)) => j.append_ok(si, lu, run),
+                                (Some(j), Err(e)) => j.append_err(si, lu, e),
+                                (None, _) => Ok(()),
+                            };
+                            match jres {
                                 Err(e) => {
-                                    eprintln!("sweep unit {id} failed on worker: {e}");
-                                    if let Some(j) = st.journal.as_mut() {
-                                        if let Err(we) = j.append_err(si, lu, e) {
-                                            eprintln!(
-                                                "qs-sweep driver: journal write failed: {we}"
-                                            );
-                                        }
+                                    let msg = format!("journal write failed: {e}");
+                                    eprintln!("qs-sweep driver: {msg}");
+                                    st.fatal = Some(msg);
+                                    None // fatal: no ack
+                                }
+                                Ok(()) => {
+                                    st.delivered[id] = true;
+                                    // Release the assignment slot only if
+                                    // this connection still owns it —
+                                    // after a reissue it may belong to
+                                    // another worker.
+                                    if st.assigned[id].is_some_and(|(c, _)| c == conn_id) {
+                                        st.assigned[id] = None;
                                     }
+                                    if let Ok(run) = outcome {
+                                        st.runs[id] = Some(run);
+                                    }
+                                    st.executed += 1;
+                                    st.remaining -= 1;
+                                    Some(st.remaining == 0)
                                 }
                             }
-                            if let Ok(run) = outcome {
-                                st.runs[id] = Some(run);
-                            }
-                            st.executed += 1;
-                            st.remaining -= 1;
-                            st.remaining == 0
                         }
                     };
                     claimed.retain(|&u| u != id);
-                    // Ack BEFORE announcing completion: the worker must
-                    // see its last ack before the driver starts tearing
-                    // down connections.
-                    let acked = writeln!(writer, "{}", proto::msg_ok()).is_ok();
-                    if finished {
-                        self.cv.notify_all();
-                    }
-                    if !acked {
-                        break;
+                    match acked_state {
+                        None => {
+                            // Journal failure: wake the main thread to
+                            // abort the serve; the worker never sees an
+                            // ack for this unit, so nothing non-durable
+                            // is trusted anywhere.
+                            self.cv.notify_all();
+                            break;
+                        }
+                        Some(finished) => {
+                            // Ack BEFORE announcing completion: the
+                            // worker must see its last ack before the
+                            // driver starts tearing down connections.
+                            let acked = write_line(&mut writer, &proto::msg_ok());
+                            if finished {
+                                self.cv.notify_all();
+                            }
+                            if !acked {
+                                break;
+                            }
+                        }
                     }
                 }
                 _ => break,
             }
         }
-        // Disconnect cleanup: requeue every claimed-but-unreported unit
-        // so other workers pick them up — unless an assignment timeout
-        // already reissued it (the unit is then pending or owned by
-        // another connection, and requeueing again would double-enqueue
-        // it).
-        if !claimed.is_empty() {
-            let mut st = self.state.lock().unwrap();
-            for u in claimed {
-                let owned = st.assigned[u].is_some_and(|(c, _)| c == conn_id);
-                if owned {
-                    st.assigned[u] = None;
-                    if !st.delivered[u] {
-                        st.pending.push_back(u);
-                    }
-                }
-            }
-        }
+        claimed
     }
 
-    /// One JSON line of progress: top-level unit accounting plus a
-    /// per-spec `{index, paired, total, done, rows}` array, where
-    /// `rows` holds the pooled results of every point whose
-    /// replications are all delivered — the same replication-order
-    /// pooling the final CSVs use, computed on demand. Informational:
-    /// the determinism contract applies to the final CSVs, not to
-    /// mid-sweep snapshots.
+    /// One JSON line of progress: top-level unit accounting and
+    /// liveness counters plus a per-spec `{index, paired, total, done,
+    /// rows}` array, where `rows` holds the pooled results of every
+    /// point whose replications are all delivered — the same
+    /// replication-order pooling the final CSVs use, computed on
+    /// demand. Informational: the determinism contract applies to the
+    /// final CSVs, not to mid-sweep snapshots.
     fn status_line(&self) -> Value {
         let st = self.state.lock().unwrap();
         let mut specs = Vec::with_capacity(self.queue.tasks().len());
@@ -661,6 +967,7 @@ impl Service<'_> {
             .set("units_done", units_done)
             .set("units_executed", st.executed)
             .set("units_from_journal", st.from_journal)
+            .set("live", st.live.to_json())
     }
 }
 
@@ -745,44 +1052,4 @@ fn spec_rows(task: &SpecTask, st: &State) -> Vec<Value> {
         }
     }
     rows
-}
-
-/// Read one `\n`-terminated line from an **unauthenticated** peer under
-/// an absolute wall-clock deadline and a 4 KiB size cap. Returns None
-/// on timeout, disconnect, or an oversized line. The per-recv socket
-/// timeout is re-armed with the *remaining* time before every read, so
-/// a peer trickling one byte per poll cannot stretch the handshake
-/// beyond the deadline.
-fn read_handshake_line(reader: &mut BufReader<TcpStream>, budget: Duration) -> Option<String> {
-    const MAX_LINE: usize = 4096;
-    let deadline = Instant::now() + budget;
-    let mut line: Vec<u8> = Vec::new();
-    loop {
-        let now = Instant::now();
-        if now >= deadline || line.len() >= MAX_LINE {
-            return None;
-        }
-        if reader
-            .get_ref()
-            .set_read_timeout(Some(deadline - now))
-            .is_err()
-        {
-            return None;
-        }
-        let buf = match reader.fill_buf() {
-            Ok([]) | Err(_) => return None, // EOF, timeout, or error
-            Ok(b) => b,
-        };
-        if let Some(pos) = buf.iter().position(|&c| c == b'\n') {
-            if line.len() + pos + 1 > MAX_LINE {
-                return None;
-            }
-            line.extend_from_slice(&buf[..=pos]);
-            reader.consume(pos + 1);
-            return String::from_utf8(line).ok();
-        }
-        let take = buf.len().min(MAX_LINE - line.len());
-        line.extend_from_slice(&buf[..take]);
-        reader.consume(take);
-    }
 }

@@ -1,0 +1,784 @@
+//! `sweep::faultline` — deterministic, seeded fault injection at the
+//! sweep fabric's transport and storage boundaries.
+//!
+//! The elastic sweep service promises the PR-7 determinism contract
+//! *under fire*: workers may crash, connections may drop, journal
+//! appends may tear mid-line, and the final CSVs must still come out
+//! byte-identical to an undisturbed run at equal (seed, R). This module
+//! makes those failures injectable and replayable:
+//!
+//! - [`Transport`] is the narrow line-oriented interface the worker
+//!   speaks to the driver ([`TcpTransport`] is the real thing,
+//!   [`FaultTransport`] the fault-injecting wrapper).
+//! - [`Durable`] is the narrow append/sync interface the journal and
+//!   the atomic CSV sink write through ([`FileDurable`] real,
+//!   [`FaultDurable`] injecting torn appends and fsync-dropped tails).
+//! - [`AtomicFile`] is the crash-consistent CSV sink: writes land in a
+//!   sibling `*.tmp`, `commit()` fsyncs and renames — a crash at any
+//!   point leaves either the complete old file or the complete new one,
+//!   never a torn CSV.
+//! - [`FaultPlan`] is the plan itself: parsed from the `QS_FAULT_PLAN`
+//!   environment variable or built programmatically, carrying its own
+//!   RNG seed so every derived quantity (torn-write garbage, jitter) is
+//!   a pure function of the plan.
+//!
+//! ## Plan grammar
+//!
+//! `;`-separated directives, each firing **once**, with an optional
+//! leading `seed=S`:
+//!
+//! ```text
+//! seed=S                 RNG stream for derived randomness (default 0)
+//! disconnect@M           drop the connection at the Mth transport message
+//! delay@M:MS             stall the Mth transport message by MS milliseconds
+//! crash@U                die while holding the Uth claimed unit (worker)
+//! hang@U:MS              go silent for MS ms on claiming the Uth unit,
+//!                        heartbeats suppressed (worker)
+//! short-read@B           cap every transport read at B bytes (persistent)
+//! torn-append@R:F        Rth durable append writes only fraction F plus
+//!                        trailing garbage, then fails (storage)
+//! drop-sync@R            Rth durable append vanishes back to the last
+//!                        synced length, then fails — a power cut between
+//!                        write and fsync (storage)
+//! ```
+//!
+//! Message counts are a pure function of the protocol exchange: each
+//! `send_line`/`recv_line` through a [`FaultTransport`] increments one
+//! shared counter (heartbeat pings bypass the transport and pongs are
+//! never sent for them, so wall-clock timing cannot shift the count).
+//! Unit counts are the worker's claim ordinals; append counts are the
+//! journal's (or CSV sink's) record ordinals. Each process consumes the
+//! directives relevant to its own boundaries: workers act on
+//! disconnect/delay/crash/hang/short-read, the driver on
+//! torn-append/drop-sync — one plan string can therefore be exported
+//! once and handed to a whole fleet.
+
+use crate::util::rng::Rng;
+use std::fmt;
+use std::io::{self, Read, Write};
+use std::net::{Shutdown, TcpStream};
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Environment variable holding the fault-plan string.
+pub const ENV_PLAN: &str = "QS_FAULT_PLAN";
+
+/// One fault directive (see the module-level grammar).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Fault {
+    Disconnect { msg: u64 },
+    Delay { msg: u64, ms: u64 },
+    Crash { unit: u64 },
+    Hang { unit: u64, ms: u64 },
+    ShortRead { bytes: usize },
+    TornAppend { rec: u64, frac: f64 },
+    DropSync { rec: u64 },
+}
+
+impl fmt::Display for Fault {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Fault::Disconnect { msg } => write!(f, "disconnect@{msg}"),
+            Fault::Delay { msg, ms } => write!(f, "delay@{msg}:{ms}"),
+            Fault::Crash { unit } => write!(f, "crash@{unit}"),
+            Fault::Hang { unit, ms } => write!(f, "hang@{unit}:{ms}"),
+            Fault::ShortRead { bytes } => write!(f, "short-read@{bytes}"),
+            Fault::TornAppend { rec, frac } => write!(f, "torn-append@{rec}:{frac}"),
+            Fault::DropSync { rec } => write!(f, "drop-sync@{rec}"),
+        }
+    }
+}
+
+/// A seeded, replayable fault plan: an ordered set of one-shot
+/// directives plus the RNG seed every derived quantity flows from.
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct FaultPlan {
+    pub seed: u64,
+    pub faults: Vec<Fault>,
+}
+
+impl fmt::Display for FaultPlan {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "seed={}", self.seed)?;
+        for fault in &self.faults {
+            write!(f, ";{fault}")?;
+        }
+        Ok(())
+    }
+}
+
+impl FaultPlan {
+    pub fn new(seed: u64) -> FaultPlan {
+        FaultPlan { seed, faults: Vec::new() }
+    }
+
+    pub fn disconnect_at(mut self, msg: u64) -> FaultPlan {
+        self.faults.push(Fault::Disconnect { msg });
+        self
+    }
+
+    pub fn delay_at(mut self, msg: u64, ms: u64) -> FaultPlan {
+        self.faults.push(Fault::Delay { msg, ms });
+        self
+    }
+
+    pub fn crash_on_unit(mut self, unit: u64) -> FaultPlan {
+        self.faults.push(Fault::Crash { unit });
+        self
+    }
+
+    pub fn hang_on_unit(mut self, unit: u64, ms: u64) -> FaultPlan {
+        self.faults.push(Fault::Hang { unit, ms });
+        self
+    }
+
+    pub fn short_read_cap(mut self, bytes: usize) -> FaultPlan {
+        self.faults.push(Fault::ShortRead { bytes });
+        self
+    }
+
+    pub fn torn_append(mut self, rec: u64, frac: f64) -> FaultPlan {
+        self.faults.push(Fault::TornAppend { rec, frac });
+        self
+    }
+
+    pub fn drop_sync(mut self, rec: u64) -> FaultPlan {
+        self.faults.push(Fault::DropSync { rec });
+        self
+    }
+
+    /// The persistent read cap, if any `short-read` directive is set.
+    pub fn short_read(&self) -> Option<usize> {
+        self.faults.iter().find_map(|f| match f {
+            Fault::ShortRead { bytes } => Some((*bytes).max(1)),
+            _ => None,
+        })
+    }
+
+    /// Parse the `;`-grammar (see module docs). Unknown directives and
+    /// malformed arities are hard errors — a half-understood fault plan
+    /// would silently test less than the caller asked for.
+    pub fn parse(s: &str) -> anyhow::Result<FaultPlan> {
+        let mut plan = FaultPlan::new(0);
+        for part in s.split(';') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            if let Some(v) = part.strip_prefix("seed=") {
+                plan.seed = v
+                    .trim()
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("fault plan: bad seed '{v}'"))?;
+                continue;
+            }
+            let (name, rest) = part
+                .split_once('@')
+                .ok_or_else(|| anyhow::anyhow!("fault plan: '{part}' is not NAME@ARGS"))?;
+            let args: Vec<&str> = rest.split(':').collect();
+            let argn = |i: usize| -> anyhow::Result<u64> {
+                args.get(i)
+                    .and_then(|a| a.trim().parse().ok())
+                    .ok_or_else(|| anyhow::anyhow!("fault plan: '{part}' needs integer arg {i}"))
+            };
+            let fault = match (name.trim(), args.len()) {
+                ("disconnect", 1) => Fault::Disconnect { msg: argn(0)? },
+                ("delay", 2) => Fault::Delay { msg: argn(0)?, ms: argn(1)? },
+                ("crash", 1) => Fault::Crash { unit: argn(0)? },
+                ("hang", 2) => Fault::Hang { unit: argn(0)?, ms: argn(1)? },
+                ("short-read", 1) => Fault::ShortRead { bytes: argn(0)? as usize },
+                ("torn-append", 2) => {
+                    let frac: f64 = args[1]
+                        .trim()
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("fault plan: '{part}' needs a fraction"))?;
+                    if !(0.0..=1.0).contains(&frac) {
+                        anyhow::bail!("fault plan: '{part}' fraction must be in [0,1]");
+                    }
+                    Fault::TornAppend { rec: argn(0)?, frac }
+                }
+                ("drop-sync", 1) => Fault::DropSync { rec: argn(0)? },
+                _ => anyhow::bail!("fault plan: unknown directive '{part}'"),
+            };
+            plan.faults.push(fault);
+        }
+        Ok(plan)
+    }
+
+    /// The plan from `QS_FAULT_PLAN`, if set and non-empty. A present
+    /// but unparseable plan is a hard error, not a silent no-op.
+    pub fn from_env() -> anyhow::Result<Option<FaultPlan>> {
+        match std::env::var(ENV_PLAN) {
+            Ok(s) if !s.trim().is_empty() => Ok(Some(FaultPlan::parse(&s)?)),
+            _ => Ok(None),
+        }
+    }
+}
+
+/// Marker payload inside injected `io::Error`s, so callers (and tests)
+/// can tell an injected fault from a genuine I/O failure.
+#[derive(Debug)]
+pub struct InjectedFault(pub &'static str);
+
+impl fmt::Display for InjectedFault {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "faultline: injected {}", self.0)
+    }
+}
+
+impl std::error::Error for InjectedFault {}
+
+fn injected(what: &'static str) -> io::Error {
+    io::Error::other(InjectedFault(what))
+}
+
+/// Whether `e` was manufactured by this module.
+pub fn is_injected(e: &io::Error) -> bool {
+    e.get_ref().is_some_and(|r| r.is::<InjectedFault>())
+}
+
+/// What the fault plan wants done to one transport message.
+enum MsgAction {
+    Pass,
+    Delay(u64),
+    Disconnect,
+}
+
+/// Live state of one process's plan: fire-once bookkeeping plus the
+/// message/unit/append counters and the seeded RNG stream.
+pub struct PlanState {
+    plan: FaultPlan,
+    rng: Rng,
+    fired: Vec<bool>,
+    msgs: u64,
+    claims: u64,
+    appends: u64,
+}
+
+impl PlanState {
+    pub fn new(plan: FaultPlan) -> PlanState {
+        let rng = Rng::new(plan.seed);
+        let fired = vec![false; plan.faults.len()];
+        PlanState { plan, rng, fired, msgs: 0, claims: 0, appends: 0 }
+    }
+
+    fn next_msg(&mut self) -> MsgAction {
+        self.msgs += 1;
+        let m = self.msgs;
+        let mut action = MsgAction::Pass;
+        for (i, f) in self.plan.faults.iter().enumerate() {
+            if self.fired[i] {
+                continue;
+            }
+            match f {
+                Fault::Disconnect { msg } if *msg == m => {
+                    self.fired[i] = true;
+                    return MsgAction::Disconnect;
+                }
+                Fault::Delay { msg, ms } if *msg == m => {
+                    self.fired[i] = true;
+                    action = MsgAction::Delay(*ms);
+                }
+                _ => {}
+            }
+        }
+        action
+    }
+
+    /// Called by the worker on each unit claim. Returns
+    /// `(hang_ms, crash)` for this claim ordinal.
+    pub fn on_claim(&mut self) -> (Option<u64>, bool) {
+        self.claims += 1;
+        let u = self.claims;
+        let mut hang = None;
+        let mut crash = false;
+        for (i, f) in self.plan.faults.iter().enumerate() {
+            if self.fired[i] {
+                continue;
+            }
+            match f {
+                Fault::Hang { unit, ms } if *unit == u => {
+                    self.fired[i] = true;
+                    hang = Some(*ms);
+                }
+                Fault::Crash { unit } if *unit == u => {
+                    self.fired[i] = true;
+                    crash = true;
+                }
+                _ => {}
+            }
+        }
+        (hang, crash)
+    }
+
+    /// Called by [`FaultDurable`] per append: the fault to apply, if
+    /// any. Torn appends carry the keep-fraction; the garbage suffix is
+    /// drawn from the plan's RNG stream.
+    fn next_append(&mut self) -> Option<Fault> {
+        self.appends += 1;
+        let r = self.appends;
+        for (i, f) in self.plan.faults.iter().enumerate() {
+            if self.fired[i] {
+                continue;
+            }
+            match f {
+                Fault::TornAppend { rec, .. } | Fault::DropSync { rec } if *rec == r => {
+                    self.fired[i] = true;
+                    return Some(f.clone());
+                }
+                _ => {}
+            }
+        }
+        None
+    }
+
+    /// Deterministic garbage for a torn write: stale-disk bytes that are
+    /// printable (the journal reads itself as UTF-8) but never valid
+    /// JSON.
+    fn torn_garbage(&mut self) -> Vec<u8> {
+        let len = 4 + (self.rng.next_u64() % 21) as usize;
+        (0..len)
+            .map(|_| b'A' + (self.rng.next_u64() % 26) as u8)
+            .collect()
+    }
+}
+
+/// The worker's line transport to the driver. `recv_line` strips the
+/// newline; `Ok(None)` is a clean EOF.
+pub trait Transport: Send {
+    fn send_line(&mut self, line: &str) -> io::Result<()>;
+    fn recv_line(&mut self) -> io::Result<Option<String>>;
+    /// Abruptly close both directions (used when simulating crashes).
+    fn shutdown(&mut self);
+    /// Bound (or unbound) blocking reads — armed around the handshake.
+    fn set_read_deadline(&self, deadline: Option<Duration>);
+}
+
+/// A `Read` adapter that caps every read at `max` bytes — the kernel is
+/// always allowed to return short reads; this makes them mandatory so
+/// line-reassembly paths are exercised deterministically hard.
+pub struct ShortRead<R: Read> {
+    inner: R,
+    max: usize,
+}
+
+impl<R: Read> ShortRead<R> {
+    pub fn new(inner: R, max: usize) -> ShortRead<R> {
+        ShortRead { inner, max: max.max(1) }
+    }
+}
+
+impl<R: Read> Read for ShortRead<R> {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        let n = buf.len().min(self.max);
+        self.inner.read(&mut buf[..n])
+    }
+}
+
+/// The real TCP transport: one stream, a shared writer handle (the
+/// heartbeat thread writes pings through it, serialized by the mutex),
+/// and a buffered reader, optionally short-read-capped.
+pub struct TcpTransport {
+    stream: TcpStream,
+    writer: Arc<Mutex<TcpStream>>,
+    reader: io::BufReader<Box<dyn Read + Send>>,
+}
+
+impl TcpTransport {
+    pub fn connect(addr: &str, short_read: Option<usize>) -> io::Result<TcpTransport> {
+        let stream = TcpStream::connect(addr)?;
+        let writer = Arc::new(Mutex::new(stream.try_clone()?));
+        let rd: Box<dyn Read + Send> = match short_read {
+            Some(n) => Box::new(ShortRead::new(stream.try_clone()?, n)),
+            None => Box::new(stream.try_clone()?),
+        };
+        Ok(TcpTransport { stream, writer, reader: io::BufReader::new(rd) })
+    }
+
+    /// The writer handle the heartbeat thread shares with `send_line`.
+    pub fn shared_writer(&self) -> Arc<Mutex<TcpStream>> {
+        self.writer.clone()
+    }
+}
+
+impl Transport for TcpTransport {
+    fn send_line(&mut self, line: &str) -> io::Result<()> {
+        let mut buf = Vec::with_capacity(line.len() + 1);
+        buf.extend_from_slice(line.as_bytes());
+        buf.push(b'\n');
+        // One write_all per line: whole-line granularity on the wire.
+        let mut w = self.writer.lock().unwrap();
+        w.write_all(&buf)
+    }
+
+    fn recv_line(&mut self) -> io::Result<Option<String>> {
+        use io::BufRead;
+        let mut line = String::new();
+        if self.reader.read_line(&mut line)? == 0 {
+            return Ok(None);
+        }
+        while line.ends_with('\n') || line.ends_with('\r') {
+            line.pop();
+        }
+        Ok(Some(line))
+    }
+
+    fn shutdown(&mut self) {
+        let _ = self.stream.shutdown(Shutdown::Both);
+    }
+
+    fn set_read_deadline(&self, deadline: Option<Duration>) {
+        let _ = self.stream.set_read_timeout(deadline);
+    }
+}
+
+/// Fault-injecting transport wrapper. The message counter lives in the
+/// shared [`PlanState`], so it spans reconnections: `disconnect@9`
+/// means the 9th message of the worker's *life*, not of one socket.
+pub struct FaultTransport<T: Transport> {
+    inner: T,
+    state: Arc<Mutex<PlanState>>,
+}
+
+impl<T: Transport> FaultTransport<T> {
+    pub fn new(inner: T, state: Arc<Mutex<PlanState>>) -> FaultTransport<T> {
+        FaultTransport { inner, state }
+    }
+}
+
+impl<T: Transport> Transport for FaultTransport<T> {
+    fn send_line(&mut self, line: &str) -> io::Result<()> {
+        match self.state.lock().unwrap().next_msg() {
+            MsgAction::Pass => {}
+            MsgAction::Delay(ms) => std::thread::sleep(Duration::from_millis(ms)),
+            MsgAction::Disconnect => {
+                self.inner.shutdown();
+                return Err(injected("disconnect (on send)"));
+            }
+        }
+        self.inner.send_line(line)
+    }
+
+    fn recv_line(&mut self) -> io::Result<Option<String>> {
+        match self.state.lock().unwrap().next_msg() {
+            MsgAction::Pass => {}
+            MsgAction::Delay(ms) => std::thread::sleep(Duration::from_millis(ms)),
+            MsgAction::Disconnect => {
+                self.inner.shutdown();
+                return Err(injected("disconnect (on recv)"));
+            }
+        }
+        self.inner.recv_line()
+    }
+
+    fn shutdown(&mut self) {
+        self.inner.shutdown();
+    }
+
+    fn set_read_deadline(&self, deadline: Option<Duration>) {
+        self.inner.set_read_deadline(deadline);
+    }
+}
+
+/// Narrow durable-storage interface: append bytes, make them crash-safe.
+/// `flush` pushes to the OS (survives a process crash); `sync` pushes to
+/// the device (survives a power cut).
+pub trait Durable: Send {
+    fn append(&mut self, buf: &[u8]) -> io::Result<()>;
+    fn flush(&mut self) -> io::Result<()>;
+    fn sync(&mut self) -> io::Result<()>;
+}
+
+/// The real thing: a plain `File`.
+pub struct FileDurable {
+    file: std::fs::File,
+}
+
+impl FileDurable {
+    pub fn new(file: std::fs::File) -> FileDurable {
+        FileDurable { file }
+    }
+}
+
+impl Durable for FileDurable {
+    fn append(&mut self, buf: &[u8]) -> io::Result<()> {
+        self.file.write_all(buf)
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        self.file.flush()
+    }
+
+    fn sync(&mut self) -> io::Result<()> {
+        self.file.sync_all()
+    }
+}
+
+/// Fault-injecting durable sink: `torn-append@R:F` writes only the
+/// first `F` of record `R` plus deterministic garbage and fails (a
+/// crash mid-write); `drop-sync@R` rolls the file back to the last
+/// *synced* length and fails (a power cut before fsync — everything
+/// since the last `sync()` never happened).
+pub struct FaultDurable {
+    file: std::fs::File,
+    state: Arc<Mutex<PlanState>>,
+    len: u64,
+    synced_len: u64,
+}
+
+impl FaultDurable {
+    pub fn new(file: std::fs::File, state: Arc<Mutex<PlanState>>) -> io::Result<FaultDurable> {
+        let len = file.metadata()?.len();
+        // Pre-existing content (header, resumed records) counts as
+        // synced: drop-sync models losing the *unsynced* tail only.
+        Ok(FaultDurable { file, state, len, synced_len: len })
+    }
+}
+
+impl Durable for FaultDurable {
+    fn append(&mut self, buf: &[u8]) -> io::Result<()> {
+        let fault = self.state.lock().unwrap().next_append();
+        match fault {
+            None => {
+                self.file.write_all(buf)?;
+                self.len += buf.len() as u64;
+                Ok(())
+            }
+            Some(Fault::TornAppend { frac, .. }) => {
+                let keep = ((buf.len() as f64 * frac) as usize).min(buf.len().saturating_sub(1));
+                let garbage = self.state.lock().unwrap().torn_garbage();
+                self.file.write_all(&buf[..keep])?;
+                self.file.write_all(&garbage)?;
+                self.file.write_all(b"\n")?;
+                let _ = self.file.flush();
+                Err(injected("torn append"))
+            }
+            Some(Fault::DropSync { .. }) => {
+                self.file.set_len(self.synced_len)?;
+                Err(injected("fsync-dropped tail (power cut)"))
+            }
+            Some(_) => unreachable!("next_append only yields storage faults"),
+        }
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        self.file.flush()
+    }
+
+    fn sync(&mut self) -> io::Result<()> {
+        self.file.sync_all()?;
+        self.synced_len = self.len;
+        Ok(())
+    }
+}
+
+/// Crash-consistent file writer: all writes go to a sibling
+/// `<name>.<pid>.tmp`; `commit()` fsyncs and renames over the
+/// destination. Dropping without committing removes the temp file and
+/// leaves any previous destination untouched — a torn write can never
+/// surface as a half-written CSV.
+pub struct AtomicFile {
+    sink: Box<dyn Durable>,
+    tmp: PathBuf,
+    dest: PathBuf,
+    committed: bool,
+}
+
+impl AtomicFile {
+    pub fn create(dest: impl AsRef<Path>) -> io::Result<AtomicFile> {
+        Self::create_with(dest, |f| Box::new(FileDurable::new(f)))
+    }
+
+    /// `create` with the sink wrapped by `wrap` — chaos tests inject a
+    /// [`FaultDurable`] here.
+    pub fn create_with<F>(dest: impl AsRef<Path>, wrap: F) -> io::Result<AtomicFile>
+    where
+        F: FnOnce(std::fs::File) -> Box<dyn Durable>,
+    {
+        let dest = dest.as_ref().to_path_buf();
+        if let Some(dir) = dest.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        let mut name = dest.file_name().map(|n| n.to_os_string()).unwrap_or_default();
+        name.push(format!(".{}.tmp", std::process::id()));
+        let tmp = dest.with_file_name(name);
+        let file = std::fs::File::create(&tmp)?;
+        Ok(AtomicFile { sink: wrap(file), tmp, dest, committed: false })
+    }
+
+    /// Make the contents durable and atomically publish them at the
+    /// destination path.
+    pub fn commit(mut self) -> io::Result<()> {
+        self.sink.sync()?;
+        std::fs::rename(&self.tmp, &self.dest)?;
+        self.committed = true;
+        Ok(())
+    }
+}
+
+impl Write for AtomicFile {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        self.sink.append(buf)?;
+        Ok(buf.len())
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        self.sink.flush()
+    }
+}
+
+impl Drop for AtomicFile {
+    fn drop(&mut self) {
+        if !self.committed {
+            let _ = std::fs::remove_file(&self.tmp);
+        }
+    }
+}
+
+/// Reconnect backoff: capped exponential with deterministic jitter.
+/// `attempt` is 1-based; the delay is `min(cap, base·2^(attempt−1))`
+/// scaled into `[0.5, 1.0)` of itself by the RNG stream — two workers
+/// seeded differently never thundering-herd the driver, while the same
+/// seed replays the same schedule bit for bit.
+pub fn backoff_delay(attempt: u32, base: Duration, cap: Duration, rng: &mut Rng) -> Duration {
+    let exp = base.as_secs_f64() * 2f64.powi(attempt.saturating_sub(1).min(24) as i32);
+    let capped = exp.min(cap.as_secs_f64());
+    let jitter = 0.5 + 0.5 * rng.f64();
+    Duration::from_secs_f64(capped * jitter)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_grammar_round_trips() {
+        let plan = FaultPlan::new(42)
+            .disconnect_at(9)
+            .delay_at(3, 150)
+            .crash_on_unit(4)
+            .hang_on_unit(2, 800)
+            .short_read_cap(7)
+            .torn_append(5, 0.5)
+            .drop_sync(6);
+        let text = plan.to_string();
+        assert_eq!(
+            text,
+            "seed=42;disconnect@9;delay@3:150;crash@4;hang@2:800;\
+             short-read@7;torn-append@5:0.5;drop-sync@6"
+        );
+        let back = FaultPlan::parse(&text).unwrap();
+        assert_eq!(back, plan);
+        // Whitespace and empty segments are tolerated; garbage is not.
+        assert_eq!(FaultPlan::parse(" seed=7 ; crash@1 ; ").unwrap().seed, 7);
+        assert!(FaultPlan::parse("explode@3").is_err());
+        assert!(FaultPlan::parse("crash").is_err());
+        assert!(FaultPlan::parse("torn-append@1:1.5").is_err());
+        assert!(FaultPlan::parse("seed=abc").is_err());
+    }
+
+    #[test]
+    fn directives_fire_once_at_their_ordinal() {
+        let mut st = PlanState::new(FaultPlan::new(1).disconnect_at(3).delay_at(2, 10));
+        assert!(matches!(st.next_msg(), MsgAction::Pass));
+        assert!(matches!(st.next_msg(), MsgAction::Delay(10)));
+        assert!(matches!(st.next_msg(), MsgAction::Disconnect));
+        for _ in 0..10 {
+            assert!(matches!(st.next_msg(), MsgAction::Pass), "one-shot directives");
+        }
+        let mut st = PlanState::new(FaultPlan::new(1).crash_on_unit(2).hang_on_unit(1, 50));
+        assert_eq!(st.on_claim(), (Some(50), false));
+        assert_eq!(st.on_claim(), (None, true));
+        assert_eq!(st.on_claim(), (None, false));
+    }
+
+    #[test]
+    fn backoff_schedule_is_deterministic_capped_and_jittered() {
+        let base = Duration::from_millis(100);
+        let cap = Duration::from_secs(2);
+        let schedule = |seed: u64| -> Vec<Duration> {
+            let mut rng = Rng::new(seed);
+            (1..=8).map(|a| backoff_delay(a, base, cap, &mut rng)).collect()
+        };
+        let a = schedule(7);
+        let b = schedule(7);
+        assert_eq!(a, b, "same seed, same schedule, bit for bit");
+        let c = schedule(8);
+        assert_ne!(a, c, "different seed, different jitter");
+        for (i, d) in a.iter().enumerate() {
+            let envelope = (base.as_secs_f64() * 2f64.powi(i as i32)).min(cap.as_secs_f64());
+            let lo = 0.5 * envelope;
+            assert!(d.as_secs_f64() >= lo - 1e-12 && d.as_secs_f64() < envelope + 1e-12,
+                "attempt {} delay {:?} outside [{lo}, {envelope}]", i + 1, d);
+        }
+        // The cap binds: late attempts never exceed it.
+        assert!(a[7].as_secs_f64() <= cap.as_secs_f64());
+    }
+
+    #[test]
+    fn torn_garbage_is_seed_deterministic() {
+        let mut a = PlanState::new(FaultPlan::new(99));
+        let mut b = PlanState::new(FaultPlan::new(99));
+        assert_eq!(a.torn_garbage(), b.torn_garbage());
+        let mut c = PlanState::new(FaultPlan::new(100));
+        assert_ne!(a.torn_garbage(), c.torn_garbage());
+    }
+
+    #[test]
+    fn atomic_file_commit_and_abandon() {
+        let dir = std::env::temp_dir().join(format!("qs_faultline_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let dest = dir.join("out.csv");
+        // Commit publishes atomically.
+        let mut f = AtomicFile::create(&dest).unwrap();
+        f.write_all(b"a,b\n1,2\n").unwrap();
+        f.commit().unwrap();
+        assert_eq!(std::fs::read(&dest).unwrap(), b"a,b\n1,2\n");
+        // An abandoned write leaves the old contents and no temp litter.
+        {
+            let mut f = AtomicFile::create(&dest).unwrap();
+            f.write_all(b"torn").unwrap();
+        }
+        assert_eq!(std::fs::read(&dest).unwrap(), b"a,b\n1,2\n");
+        let leftovers: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().ends_with(".tmp"))
+            .collect();
+        assert!(leftovers.is_empty(), "temp files must not survive an abandon");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn fault_durable_torn_append_and_drop_sync() {
+        let dir = std::env::temp_dir().join(format!("qs_faultdur_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("j.jsonl");
+        let state = Arc::new(Mutex::new(PlanState::new(
+            FaultPlan::new(5).torn_append(2, 0.5),
+        )));
+        let file = std::fs::File::create(&path).unwrap();
+        let mut d = FaultDurable::new(file, state).unwrap();
+        d.append(b"record-one\n").unwrap();
+        d.sync().unwrap();
+        let err = d.append(b"record-two\n").unwrap_err();
+        assert!(is_injected(&err), "torn append is marked injected: {err}");
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("record-one\nrecor"), "half of record two: {text:?}");
+        assert!(text.ends_with('\n') && text.lines().count() == 2);
+
+        // drop-sync rolls back to the synced length.
+        let state = Arc::new(Mutex::new(PlanState::new(FaultPlan::new(5).drop_sync(2))));
+        let file = std::fs::File::create(&path).unwrap();
+        let mut d = FaultDurable::new(file, state).unwrap();
+        d.append(b"kept\n").unwrap();
+        d.sync().unwrap();
+        let err = d.append(b"lost\n").unwrap_err();
+        assert!(is_injected(&err));
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "kept\n");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -4,42 +4,67 @@
 //! it checkpoints —
 //!
 //! ```text
-//! {"journal":"qs-sweep","version":1,"specs":[...]}
+//! {"journal":"qs-sweep","version":2,"specs":[...]}
 //! ```
 //!
 //! — compared against the current queue by canonical serialization
 //! (byte-equal spec JSON, in order, or the resume refuses). Every
-//! subsequent line is one completed unit, `{"n":SEQ,"spec":S,"id":U,
-//! ...payload}`, where the payload reuses the wire result encoding
-//! ([`proto::msg_result`] / [`proto::msg_paired_result`] /
-//! [`proto::msg_result_err`]): `display`+`stats` for marginal units,
+//! subsequent line is one completed unit, `{"crc":"XXXXXXXX","n":SEQ,
+//! "spec":S,"id":U,...payload}`, where the payload reuses the wire
+//! result encoding ([`proto::msg_result`] / [`proto::msg_paired_result`]
+//! / [`proto::msg_result_err`]): `display`+`stats` for marginal units,
 //! `runs` for paired units, `err` for units that conclusively failed on
 //! a worker (journaled as delivered, exactly as a live sweep treats
 //! them). The statistics keep the bit-exact `f64_bits` encoding, so a
 //! driver resumed from the journal pools exactly the bits a worker
 //! shipped and its CSVs are byte-identical to an uninterrupted run.
 //!
-//! WAL semantics: records are flushed line-by-line as results arrive,
-//! *before* the worker's ack — once a worker has seen `ok`, the unit is
-//! on disk. A SIGKILL can therefore tear at most the final line (a
-//! partial write with no trailing newline). A torn tail is a crash
-//! artifact: it is warned about, truncated away, and its unit reruns —
-//! same bits either way. Anything else — mid-file garbage, an
-//! out-of-sequence or duplicate record, a unit outside the queue, a
-//! header mismatch — is a hard error: silently rerunning "finished"
-//! units over a corrupted journal would mask data loss.
+//! v2 adds a per-record CRC-32 (`crc`, hex, over the record's canonical
+//! serialization minus the `crc` field itself — sound because
+//! `Value::Obj` serializes with sorted keys). v1 journals (no CRCs) are
+//! still read.
+//!
+//! WAL semantics: records are written with one `write_all` per line as
+//! results arrive, *before* the worker's ack — once a worker has seen
+//! `ok`, the unit is recorded (and with fsync enabled, durable on the
+//! device). A crash can therefore tear at most the *final* record: a
+//! partial line with no trailing newline, or — if the crash landed
+//! mid-`write` inside the kernel — a final line whose tail is garbage.
+//! Both are detected structurally (unparseable JSON, a missing CRC on a
+//! v2 file, or a CRC mismatch), warned about, truncated away, and the
+//! unit reruns — same bits either way. The forgiveness is strictly
+//! tail-only: a structurally broken line *followed by* a structurally
+//! valid one cannot be a crash artifact of this append discipline, so
+//! it is a hard error, as is any semantic violation on an intact record
+//! (out-of-sequence, duplicate, a unit outside the queue, a shape
+//! mismatch, a header mismatch) — silently rerunning "finished" units
+//! over a corrupted journal would mask data loss.
 
+use crate::sweep::faultline::{Durable, FaultDurable, FileDurable, PlanState};
 use crate::sweep::{proto, AnyRun, SpecQueue};
+use crate::util::crc::crc32;
 use crate::util::json::Value;
 use std::fs::OpenOptions;
 use std::io::{Read, Seek, SeekFrom, Write};
 use std::path::Path;
+use std::sync::{Arc, Mutex};
 
 const MAGIC: &str = "qs-sweep";
-const VERSION: u64 = 1;
+const VERSION: u64 = 2;
 
 fn jerr(path: &Path, msg: String) -> anyhow::Error {
     anyhow::anyhow!("journal {}: {msg}", path.display())
+}
+
+/// Durability and fault-injection knobs for an open journal.
+#[derive(Default)]
+pub struct JournalOptions {
+    /// `sync_all` every record to the device before the worker's ack
+    /// (power-cut-safe WAL; default is flush-to-OS only).
+    pub fsync: bool,
+    /// Chaos-test hook: route appends through a
+    /// [`FaultDurable`] driven by this plan state.
+    pub faults: Option<Arc<Mutex<PlanState>>>,
 }
 
 /// One recorded unit result: spec index, local unit id, and the run
@@ -53,16 +78,46 @@ pub struct JournalEntry {
 
 /// An open journal, positioned for appending.
 pub struct Journal {
-    file: std::fs::File,
+    sink: Box<dyn Durable>,
+    fsync: bool,
     seq: u64,
 }
 
+/// Structural validity: does this line decode to an intact record at
+/// all? (Semantic checks — sequence, ranges, duplicates, shape — only
+/// apply to structurally intact lines.)
+fn check_structural(line: &str, file_version: u64) -> Result<Value, String> {
+    let v = Value::parse(line).map_err(|e| format!("unparseable ({e})"))?;
+    if file_version >= 2 {
+        let recorded = v
+            .get("crc")
+            .and_then(|c| c.as_str())
+            .ok_or_else(|| "missing crc".to_string())?
+            .to_string();
+        let computed = format!("{:08x}", crc32(v.without("crc").to_string().as_bytes()));
+        if recorded != computed {
+            return Err(format!("crc mismatch (recorded {recorded}, computed {computed})"));
+        }
+    }
+    Ok(v)
+}
+
 impl Journal {
+    /// [`Journal::open_with`] with default options (no fsync, no fault
+    /// injection).
+    pub fn open(path: &Path, queue: &SpecQueue) -> anyhow::Result<(Journal, Vec<JournalEntry>)> {
+        Self::open_with(path, queue, JournalOptions::default())
+    }
+
     /// Open (or create) the journal at `path` for `queue`, returning
     /// the journal plus every previously recorded entry in sequence
     /// order. A fresh (or empty) file gets the header written; an
     /// existing file must carry a byte-identical spec queue.
-    pub fn open(path: &Path, queue: &SpecQueue) -> anyhow::Result<(Journal, Vec<JournalEntry>)> {
+    pub fn open_with(
+        path: &Path,
+        queue: &SpecQueue,
+        opts: JournalOptions,
+    ) -> anyhow::Result<(Journal, Vec<JournalEntry>)> {
         let mut file = OpenOptions::new()
             .read(true)
             .write(true)
@@ -74,6 +129,9 @@ impl Journal {
         file.read_to_string(&mut text)
             .map_err(|e| jerr(path, e.to_string()))?;
 
+        // The header is written directly (not through the fault sink):
+        // record ordinals seen by a fault plan's `torn-append@R` start
+        // at the first *record*.
         if text.is_empty() {
             let specs: Vec<Value> = queue.tasks().iter().map(|t| t.spec.to_json()).collect();
             let header = Value::obj()
@@ -84,27 +142,41 @@ impl Journal {
             line.push('\n');
             file.write_all(line.as_bytes())
                 .map_err(|e| jerr(path, e.to_string()))?;
-            return Ok((Journal { file, seq: 0 }, Vec::new()));
+            if opts.fsync {
+                file.sync_all().map_err(|e| jerr(path, e.to_string()))?;
+            }
+            let sink = Self::wrap_sink(file, &opts).map_err(|e| jerr(path, e.to_string()))?;
+            return Ok((Journal { sink, fsync: opts.fsync, seq: 0 }, Vec::new()));
         }
 
-        // Split complete lines from a possibly-torn tail. A final
-        // segment without a newline is treated as torn even if it
+        // Split into complete lines (with their byte offsets, for
+        // truncation) plus a possibly-torn final segment. A final
+        // segment without a newline is structurally torn even if it
         // happens to parse — uniform rule, and the unit reruns to the
         // same bits anyway.
-        let mut lines: Vec<&str> = text.split('\n').collect();
-        let torn = if text.ends_with('\n') {
-            lines.pop(); // the empty segment after the final newline
-            None
-        } else {
-            lines.pop()
-        };
+        let mut lines: Vec<(usize, &str)> = Vec::new();
+        let mut torn_tail: Option<(usize, &str)> = None;
+        let mut offset = 0usize;
+        let mut iter = text.split('\n').peekable();
+        while let Some(seg) = iter.next() {
+            if iter.peek().is_none() {
+                // Last segment: empty iff the text ends with '\n'.
+                if !seg.is_empty() {
+                    torn_tail = Some((offset, seg));
+                }
+            } else {
+                lines.push((offset, seg));
+            }
+            offset += seg.len() + 1;
+        }
 
-        let header = Value::parse(lines.first().copied().unwrap_or(""))
+        let header = Value::parse(lines.first().map(|(_, l)| *l).unwrap_or(""))
             .map_err(|e| jerr(path, format!("corrupt header line ({e})")))?;
         if header.get("journal").and_then(|m| m.as_str()) != Some(MAGIC) {
             return Err(jerr(path, "not a qs-sweep journal (bad header magic)".into()));
         }
-        if header.get("version").and_then(|v| v.as_u64()) != Some(VERSION) {
+        let file_version = header.get("version").and_then(|v| v.as_u64()).unwrap_or(0);
+        if !(1..=VERSION).contains(&file_version) {
             return Err(jerr(path, "unsupported journal version".into()));
         }
         let header_specs = header
@@ -134,12 +206,46 @@ impl Journal {
             }
         }
 
+        // Structural pass over the record lines: find where (if
+        // anywhere) the file stops being intact.
+        let mut records: Vec<(usize, usize, Value)> = Vec::new(); // (lineno, offset, value)
+        let mut first_bad: Option<(usize, usize, String)> = None; // (lineno, offset, reason)
+        for (li, (off, line)) in lines.iter().enumerate().skip(1) {
+            let lineno = li + 1;
+            match check_structural(line, file_version) {
+                Ok(v) => {
+                    if let Some((bad_line, _, reason)) = &first_bad {
+                        // Intact records after a broken one: not a tail
+                        // tear, the file is corrupt in the middle.
+                        return Err(jerr(
+                            path,
+                            format!(
+                                "mid-file corruption: record on line {bad_line} is broken \
+                                 ({reason}) but line {lineno} after it is intact — \
+                                 refusing to resume over lost records"
+                            ),
+                        ));
+                    }
+                    records.push((lineno, *off, v));
+                }
+                Err(reason) => {
+                    if first_bad.is_none() {
+                        first_bad = Some((lineno, *off, reason));
+                    }
+                }
+            }
+        }
+        if let Some((off, tail)) = torn_tail {
+            if first_bad.is_none() {
+                first_bad = Some((lines.len() + 1, off, format!("torn ({} bytes, no newline)", tail.len())));
+            }
+        }
+
+        // Semantic pass over the intact prefix.
         let mut entries: Vec<JournalEntry> = Vec::new();
         let mut seen = std::collections::HashSet::new();
-        for (li, line) in lines.iter().enumerate().skip(1) {
-            let lineno = li + 1;
-            let v = Value::parse(line)
-                .map_err(|e| jerr(path, format!("corrupt record on line {lineno} ({e})")))?;
+        for (lineno, _, v) in &records {
+            let lineno = *lineno;
             let n = v
                 .get("n")
                 .and_then(|x| x.as_u64())
@@ -163,7 +269,7 @@ impl Journal {
                     format!("record on line {lineno} names spec {spec}, outside the queue"),
                 )
             })?;
-            let id = proto::id_of(&v)
+            let id = proto::id_of(v)
                 .map_err(|e| jerr(path, format!("record on line {lineno}: {e}")))?;
             if id >= task.n_units() {
                 return Err(jerr(
@@ -181,48 +287,60 @@ impl Journal {
             // paired payload on a marginal spec, or vice versa) surfaces
             // here as corruption.
             let run = if task.paired.is_some() {
-                let (_, r) = proto::parse_paired_result(&v).map_err(|e| {
+                let (_, r) = proto::parse_paired_result(v).map_err(|e| {
                     jerr(path, format!("corrupt paired record on line {lineno} ({e})"))
                 })?;
                 r.ok().map(AnyRun::Paired)
             } else {
-                let (_, r) = proto::parse_result(&v)
+                let (_, r) = proto::parse_result(v)
                     .map_err(|e| jerr(path, format!("corrupt record on line {lineno} ({e})")))?;
                 r.ok().map(AnyRun::Marginal)
             };
             entries.push(JournalEntry { spec, id, run });
         }
 
-        if let Some(t) = torn {
+        if let Some((lineno, off, reason)) = first_bad {
             eprintln!(
-                "qs-sweep journal {}: dropping torn final record ({} bytes, crash artifact); \
-                 the unit will rerun",
-                path.display(),
-                t.len()
+                "qs-sweep journal {}: dropping broken final record on line {lineno} \
+                 ({reason}; crash artifact); the unit will rerun",
+                path.display()
             );
-            // Truncate the tail away so appended records start on a
-            // clean line boundary.
-            file.set_len((text.len() - t.len()) as u64)
+            // Truncate so appended records start on a clean boundary.
+            file.set_len(off as u64)
                 .map_err(|e| jerr(path, e.to_string()))?;
         }
         file.seek(SeekFrom::End(0))
             .map_err(|e| jerr(path, e.to_string()))?;
         let seq = entries.len() as u64;
-        Ok((Journal { file, seq }, entries))
+        let sink = Self::wrap_sink(file, &opts).map_err(|e| jerr(path, e.to_string()))?;
+        Ok((Journal { sink, fsync: opts.fsync, seq }, entries))
+    }
+
+    fn wrap_sink(file: std::fs::File, opts: &JournalOptions) -> std::io::Result<Box<dyn Durable>> {
+        Ok(match &opts.faults {
+            Some(state) => Box::new(FaultDurable::new(file, state.clone())?),
+            None => Box::new(FileDurable::new(file)),
+        })
     }
 
     fn append(&mut self, payload: Value) -> std::io::Result<()> {
-        let mut line = payload.to_string();
+        // CRC over the canonical (sorted-key) serialization without the
+        // crc field — exactly what the reader recomputes.
+        let crc = crc32(payload.to_string().as_bytes());
+        let mut line = payload.set("crc", format!("{crc:08x}")).to_string();
         line.push('\n');
-        // One write_all per record (then a flush for symmetry with
-        // buffered writers): a crash tears at most the final line.
-        self.file.write_all(line.as_bytes())?;
-        self.file.flush()?;
+        // One write per record: a crash tears at most the final line.
+        self.sink.append(line.as_bytes())?;
+        if self.fsync {
+            self.sink.sync()?;
+        } else {
+            self.sink.flush()?;
+        }
         self.seq += 1;
         Ok(())
     }
 
-    /// Record a completed unit (flushed before the caller acks it).
+    /// Record a completed unit (durable before the caller acks it).
     pub fn append_ok(&mut self, spec: usize, id: usize, run: &AnyRun) -> std::io::Result<()> {
         let payload = match run {
             AnyRun::Marginal(r) => proto::msg_result(id, r),

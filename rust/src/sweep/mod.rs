@@ -43,14 +43,24 @@
 //! 2 workers on localhost, diffs against the in-process CSV, and
 //! SIGKILLs/resumes the driver mid-sweep; CI runs it as the
 //! `sweep-smoke` job.
+//!
+//! The self-healing pieces — worker reconnect with seeded backoff,
+//! protocol heartbeats, crash-consistent journal/CSV storage, and
+//! overload shedding — are exercised by the deterministic fault
+//! injection layer in [`faultline`] (`QS_FAULT_PLAN`), with the chaos
+//! matrix in `tests/integration_chaos.rs` asserting byte-identical CSVs
+//! under every plan.
 
 pub mod driver;
+pub mod faultline;
 pub mod journal;
 pub mod proto;
 pub mod worker;
 
-pub use driver::{Driver, DriverBuilder, ServeReport, SpecOutcome};
-pub use worker::{run_worker, run_worker_with_token};
+pub use driver::{Driver, DriverBuilder, Liveness, ServeReport, SpecOutcome};
+pub use worker::{
+    run_worker, run_worker_with, run_worker_with_token, WorkerConfig, WorkerOutcome, WorkerReport,
+};
 
 use crate::experiments::{
     sweep_paired_units, sweep_units, LocalThreads, PairedGrid, PairedRun, PairedSweep, Point,

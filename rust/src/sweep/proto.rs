@@ -1,7 +1,7 @@
 //! Sweep wire protocol: one JSON object per line over TCP (the same
 //! JSONL idiom as the coordinator's control API).
 //!
-//! Handshake (proto v3): on connect the **worker speaks first** with a
+//! Handshake (proto v4): on connect the **worker speaks first** with a
 //! `hello` line carrying the protocol version and, when configured, the
 //! shared secret (`QS_SWEEP_TOKEN`). The driver validates both before
 //! revealing anything: a mismatched token or version gets an `err` line
@@ -20,8 +20,9 @@
 //! drives a lockstep request/response loop:
 //!
 //! ```text
-//! worker → driver   {"op":"hello","proto":3[,"token":"..."]}
-//! driver → worker   {"op":"specs","proto":3,"specs":[...]} | {"op":"err","msg":"..."}
+//! worker → driver   {"op":"hello","proto":4[,"token":"..."]}
+//! driver → worker   {"op":"specs","proto":4,"specs":[...]}
+//!                   | {"op":"err","msg":"..."} | {"op":"busy","retry_ms":M}
 //! worker → driver   {"op":"next"}
 //! driver → worker   {"op":"unit","id":N} | {"op":"wait","ms":M} | {"op":"done"}
 //! worker → driver   {"op":"result","id":N,"display":...,"stats":{...}}
@@ -34,6 +35,21 @@
 //! point in the loop and gets one JSON line of per-spec progress and
 //! completed pooled rows back — the read-only endpoint `quickswap sweep
 //! status` uses this without ever claiming a unit.
+//!
+//! v4 adds three additive liveness/overload messages:
+//!
+//! * `{"op":"ping"}` — a worker's heartbeat. Its *heartbeat thread*
+//!   sends these between lockstep exchanges so the driver can tell a
+//!   hung-but-connected worker from a slow unit. Plain pings get **no
+//!   reply** (a pong would interleave with the lockstep stream and make
+//!   the worker's receive sequence timing-dependent); the driver just
+//!   refreshes the connection's liveness stamp. `{"op":"ping",
+//!   "echo":true}` — used by probes *outside* the lockstep loop —
+//!   gets `{"op":"pong"}` back.
+//! * `{"op":"busy","retry_ms":M}` — overload shedding: a driver at its
+//!   connection cap answers the handshake with `busy` and closes.
+//!   Workers back off (their own deterministic schedule; `retry_ms` is
+//!   an advisory hint) and reconnect instead of dying.
 //!
 //! Every statistic inside `stats` uses bit-exact f64 encoding
 //! ([`crate::util::json::f64_bits`]) — the determinism contract depends
@@ -50,7 +66,8 @@ use crate::util::json::Value;
 /// v2: worker-first `hello` handshake with the optional shared secret.
 /// v3: multi-spec queue (`specs` array reply, global unit ids) and the
 /// read-only `status` op.
-pub const PROTO_VERSION: u64 = 3;
+/// v4: `ping`/`pong` heartbeats and the `busy` overload-shed reply.
+pub const PROTO_VERSION: u64 = 4;
 
 /// The driver's handshake reply: the entire spec queue, in the order
 /// that defines global unit offsets.
@@ -114,6 +131,28 @@ pub fn token_matches(expected: &str, got: Option<&str>) -> bool {
 
 pub fn msg_next() -> Value {
     Value::obj().set("op", "next")
+}
+
+/// Heartbeat. `echo = false` is the worker heartbeat thread's one-way
+/// keepalive (never answered — see the module docs for why); `echo =
+/// true` requests a `pong` and is for probes outside the lockstep loop.
+pub fn msg_ping(echo: bool) -> Value {
+    let v = Value::obj().set("op", "ping");
+    if echo {
+        v.set("echo", true)
+    } else {
+        v
+    }
+}
+
+/// Reply to an echo ping.
+pub fn msg_pong() -> Value {
+    Value::obj().set("op", "pong")
+}
+
+/// Overload shed: the driver is at its connection cap; retry later.
+pub fn msg_busy(retry_ms: u64) -> Value {
+    Value::obj().set("op", "busy").set("retry_ms", retry_ms)
 }
 
 /// Read-only progress query (any authenticated peer, any time).
@@ -339,6 +378,19 @@ mod tests {
         assert!(!token_matches("abc", Some("ab")));
         assert!(!token_matches("abc", None));
         assert!(token_matches("", None), "unset on both sides matches");
+    }
+
+    #[test]
+    fn liveness_messages() {
+        let plain = parse_line(&msg_ping(false).to_string()).unwrap();
+        assert_eq!(op_of(&plain), Some("ping"));
+        assert!(plain.get("echo").is_none(), "plain pings carry no echo flag");
+        let echo = parse_line(&msg_ping(true).to_string()).unwrap();
+        assert_eq!(echo.get("echo").and_then(|e| e.as_bool()), Some(true));
+        assert_eq!(op_of(&msg_pong()), Some("pong"));
+        let busy = parse_line(&msg_busy(250).to_string()).unwrap();
+        assert_eq!(op_of(&busy), Some("busy"));
+        assert_eq!(busy.get("retry_ms").and_then(|m| m.as_u64()), Some(250));
     }
 
     #[test]

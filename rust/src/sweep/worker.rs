@@ -5,57 +5,390 @@
 //! unit ids resolve through the queue exactly as on the driver, so a
 //! worker can join an elastic sweep at any point in its life and pick
 //! up whichever spec's units are pending.
+//!
+//! Self-healing: a worker that loses its driver mid-sweep does not die.
+//! It reconnects with capped exponential backoff and deterministic
+//! jitter ([`backoff_delay`]), re-authenticates, verifies the spec
+//! queue is unchanged, resends any result the old connection never
+//! acked (the driver dedupes by unit id — identical bits anyway), and
+//! resumes claiming units. A `busy` handshake reply (overload shed)
+//! goes through the same backoff. A heartbeat thread sends one-way
+//! `ping` lines between lockstep exchanges so the driver can tell a
+//! slow unit from a hung worker; pings bypass the fault-injection
+//! transport and are never answered, so they cannot perturb the
+//! deterministic message ordinals a [`FaultPlan`] fires on. The
+//! [`WorkerReport`] distinguishes a clean `done` from a lost driver —
+//! silent exits were how real faults used to hide.
 
 use crate::experiments::{run_paired_unit, run_unit};
 use crate::sim::Engine;
+use crate::sweep::faultline::{
+    backoff_delay, FaultPlan, FaultTransport, PlanState, TcpTransport, Transport,
+};
 use crate::sweep::{proto, SpecQueue};
-use std::io::{BufRead, BufReader, Write};
+use crate::util::rng::Rng;
 use std::net::TcpStream;
-use std::time::Duration;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
-/// Serve one driver until it reports `done` (or disappears — once the
-/// handshake succeeded, a lost connection means the driver finished,
-/// died and will be resumed from its journal, or will reissue our unit
-/// elsewhere, so the worker exits cleanly either way), authenticating
-/// with the `QS_SWEEP_TOKEN` shared secret when set. Returns the number
-/// of units completed and acknowledged.
-pub fn run_worker(addr: &str) -> anyhow::Result<usize> {
-    let token = crate::sweep::driver::auth_token_from_env();
-    run_worker_with_token(addr, token.as_deref())
+/// Everything tunable about a worker's session behaviour. Execution
+/// knobs only — none of it can affect result bits.
+#[derive(Clone, Debug)]
+pub struct WorkerConfig {
+    /// Shared secret for the driver handshake (`QS_SWEEP_TOKEN`).
+    pub token: Option<String>,
+    /// Consecutive failed reconnect attempts (after a successful first
+    /// handshake, or while the driver sheds with `busy`) before giving
+    /// up with [`WorkerOutcome::DriverLost`].
+    pub max_retries: u32,
+    /// First backoff delay; doubles per attempt up to `backoff_cap`.
+    pub backoff_base: Duration,
+    pub backoff_cap: Duration,
+    /// Seed for the jitter stream — same seed, same schedule, bit for
+    /// bit (give each worker of a fleet its own).
+    pub backoff_seed: u64,
+    /// Heartbeat ping interval (None disables the heartbeat thread).
+    pub heartbeat: Option<Duration>,
+    /// Fault-injection plan for chaos runs (`QS_FAULT_PLAN`).
+    pub plan: Option<FaultPlan>,
 }
 
-/// [`run_worker`] with the auth token pinned explicitly (tests use this
-/// so parallel tests never race on process-global env state).
-pub fn run_worker_with_token(addr: &str, token: Option<&str>) -> anyhow::Result<usize> {
-    let stream = TcpStream::connect(addr)?;
-    let mut writer = stream.try_clone()?;
-    let mut reader = BufReader::new(stream);
-    // Handshake: hello (version + optional shared secret) before the
-    // driver reveals the spec queue; an `err` reply means rejection.
-    writeln!(writer, "{}", proto::msg_hello(token))?;
-    let mut line = String::new();
-    reader.read_line(&mut line)?;
-    let first = proto::parse_line(&line)?;
-    if let Some(msg) = proto::err_of(&first) {
-        anyhow::bail!("driver rejected this worker: {msg}");
+impl Default for WorkerConfig {
+    fn default() -> WorkerConfig {
+        WorkerConfig {
+            token: None,
+            max_retries: 3,
+            backoff_base: Duration::from_millis(50),
+            backoff_cap: Duration::from_secs(1),
+            backoff_seed: 0xB0FF,
+            heartbeat: Some(Duration::from_secs(2)),
+            plan: None,
+        }
     }
-    let queue = SpecQueue::new(proto::parse_specs(&first)?)?;
-    // Engine caches, one per spec: consecutive units of the same point
-    // reuse one engine's allocations (reset is bit-identical to fresh).
-    // Specs differ in workload/config, so caches never cross specs.
-    let mut caches: Vec<Option<(usize, Engine)>> = (0..queue.tasks().len()).map(|_| None).collect();
-    let mut completed = 0usize;
+}
+
+impl WorkerConfig {
+    /// Config from the environment: `QS_SWEEP_TOKEN`,
+    /// `QS_WORKER_RETRIES`, `QS_WORKER_BACKOFF_MS`,
+    /// `QS_WORKER_BACKOFF_CAP_MS`, `QS_HEARTBEAT_SECS` (≤ 0 disables),
+    /// `QS_FAULT_PLAN`. An unparseable fault plan is a hard error — a
+    /// chaos run that silently tests nothing is worse than one that
+    /// refuses to start.
+    pub fn from_env() -> anyhow::Result<WorkerConfig> {
+        let d = WorkerConfig::default();
+        let ms = |v: String| v.trim().parse::<u64>().ok().map(Duration::from_millis);
+        let heartbeat = match std::env::var("QS_HEARTBEAT_SECS") {
+            Ok(v) => match v.trim().parse::<f64>() {
+                Ok(s) if s > 0.0 => Some(Duration::from_secs_f64(s)),
+                Ok(_) => None,
+                Err(_) => d.heartbeat,
+            },
+            Err(_) => d.heartbeat,
+        };
+        Ok(WorkerConfig {
+            token: crate::sweep::driver::auth_token_from_env(),
+            max_retries: std::env::var("QS_WORKER_RETRIES")
+                .ok()
+                .and_then(|v| v.trim().parse().ok())
+                .unwrap_or(d.max_retries),
+            backoff_base: std::env::var("QS_WORKER_BACKOFF_MS")
+                .ok()
+                .and_then(ms)
+                .unwrap_or(d.backoff_base),
+            backoff_cap: std::env::var("QS_WORKER_BACKOFF_CAP_MS")
+                .ok()
+                .and_then(ms)
+                .unwrap_or(d.backoff_cap),
+            backoff_seed: d.backoff_seed,
+            heartbeat,
+            plan: FaultPlan::from_env()?,
+        })
+    }
+}
+
+/// How a worker's life ended.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WorkerOutcome {
+    /// The driver said `done`: the sweep is complete.
+    Done,
+    /// The driver disappeared and `max_retries` reconnect attempts
+    /// failed.
+    DriverLost,
+    /// An injected `crash@U` fired (chaos runs only).
+    Crashed,
+}
+
+/// What a worker did with its life: units completed *and acked*, how
+/// many times it had to reconnect, how often it was shed with `busy`,
+/// and how it ended.
+#[derive(Clone, Copy, Debug)]
+pub struct WorkerReport {
+    pub completed: usize,
+    pub reconnects: u32,
+    pub busy_retries: u32,
+    pub outcome: WorkerOutcome,
+}
+
+/// Serve one driver until it reports `done` (or is conclusively lost),
+/// configured from the environment (see [`WorkerConfig::from_env`]).
+pub fn run_worker(addr: &str) -> anyhow::Result<WorkerReport> {
+    run_worker_with(addr, &WorkerConfig::from_env()?)
+}
+
+/// [`run_worker`] with default config and the auth token pinned
+/// explicitly (tests use this so parallel tests never race on
+/// process-global env state).
+pub fn run_worker_with_token(addr: &str, token: Option<&str>) -> anyhow::Result<WorkerReport> {
+    let cfg = WorkerConfig {
+        token: token.map(|t| t.to_string()),
+        ..WorkerConfig::default()
+    };
+    run_worker_with(addr, &cfg)
+}
+
+/// Serve one driver with an explicit [`WorkerConfig`].
+///
+/// Errors are reserved for conditions retrying cannot fix: the very
+/// first connection failing (nothing is listening), an authentication
+/// rejection, a protocol mismatch, or the spec queue changing across a
+/// reconnect. Everything transient — disconnects, `busy` sheds —
+/// resolves internally into the returned [`WorkerReport`].
+pub fn run_worker_with(addr: &str, cfg: &WorkerConfig) -> anyhow::Result<WorkerReport> {
+    let plan = cfg
+        .plan
+        .clone()
+        .map(|p| Arc::new(Mutex::new(PlanState::new(p))));
+    let short_read = cfg.plan.as_ref().and_then(|p| p.short_read());
+    let mut rng = Rng::new(cfg.backoff_seed);
+    let mut report = WorkerReport {
+        completed: 0,
+        reconnects: 0,
+        busy_retries: 0,
+        outcome: WorkerOutcome::DriverLost,
+    };
+    // Session-spanning state: the queue and engine caches are built on
+    // the first handshake and reused (the specs line is checked for
+    // byte-equality on every reconnect, so they cannot go stale); an
+    // unacked result line survives a lost connection and is resent.
+    let mut specs_line: Option<String> = None;
+    let mut queue: Option<SpecQueue> = None;
+    let mut caches: Vec<Option<(usize, Engine)>> = Vec::new();
+    let mut unacked: Option<String> = None;
+    let mut ever_connected = false;
+    let mut failures = 0u32;
     loop {
-        if writeln!(writer, "{}", proto::msg_next()).is_err() {
-            break;
+        match open_session(addr, cfg, plan.clone(), short_read, &mut specs_line) {
+            Ok((mut tr, writer, fresh_specs)) => {
+                if ever_connected {
+                    report.reconnects += 1;
+                    eprintln!(
+                        "qs-sweep worker: reconnected to {addr} (reconnect #{}) ",
+                        report.reconnects
+                    );
+                }
+                ever_connected = true;
+                failures = 0;
+                if let Some(specs) = fresh_specs {
+                    let q = SpecQueue::new(specs)?;
+                    caches = (0..q.tasks().len()).map(|_| None).collect();
+                    queue = Some(q);
+                }
+                let q = queue.as_ref().expect("queue set on first handshake");
+                let hb = cfg.heartbeat.map(|iv| Heartbeat::start(writer, iv));
+                let hung = hb.as_ref().map(|h| h.hung.clone());
+                let end = run_session(
+                    tr.as_mut(),
+                    q,
+                    &mut caches,
+                    &mut unacked,
+                    &mut report.completed,
+                    plan.as_ref(),
+                    hung.as_ref(),
+                );
+                if let Some(hb) = hb {
+                    hb.stop();
+                }
+                match end? {
+                    SessionEnd::Done => {
+                        report.outcome = WorkerOutcome::Done;
+                        return Ok(report);
+                    }
+                    SessionEnd::Crashed => {
+                        report.outcome = WorkerOutcome::Crashed;
+                        return Ok(report);
+                    }
+                    SessionEnd::Lost => {} // fall through to the backoff
+                }
+            }
+            Err(OpenErr::Fatal(e)) => return Err(e),
+            Err(OpenErr::Busy(_hint_ms)) => {
+                // The driver is alive but shedding. Our own deterministic
+                // backoff schedule, not the advisory hint, paces retries.
+                report.busy_retries += 1;
+                ever_connected = true; // something is listening
+            }
+            Err(OpenErr::Lost(e)) => {
+                if !ever_connected {
+                    // Nothing has ever answered at this address: fail
+                    // fast (the driver may simply not be running).
+                    return Err(e);
+                }
+            }
         }
-        line.clear();
-        match reader.read_line(&mut line) {
-            Ok(0) | Err(_) => break,
-            Ok(_) => {}
+        failures += 1;
+        if failures > cfg.max_retries {
+            report.outcome = WorkerOutcome::DriverLost;
+            eprintln!(
+                "qs-sweep worker: driver lost ({} reconnect attempts failed)",
+                cfg.max_retries
+            );
+            return Ok(report);
         }
-        let Ok(msg) = proto::parse_line(&line) else {
-            break; // torn line mid-teardown: treat as driver gone
+        std::thread::sleep(backoff_delay(
+            failures,
+            cfg.backoff_base,
+            cfg.backoff_cap,
+            &mut rng,
+        ));
+    }
+}
+
+enum OpenErr {
+    /// Retrying cannot fix this (auth rejection, protocol mismatch,
+    /// spec queue changed).
+    Fatal(anyhow::Error),
+    /// Overload shed: the driver answered `busy` with a retry hint.
+    Busy(u64),
+    /// Transient: connect/handshake failed at the transport level.
+    Lost(anyhow::Error),
+}
+
+/// Connect, authenticate, and receive the spec queue. Returns the
+/// transport, the raw shared writer (for the heartbeat thread — pings
+/// must bypass the fault layer), and the parsed specs when this is the
+/// first successful handshake (`None` on reconnects, after the
+/// byte-equality check against the first session's specs line).
+fn open_session(
+    addr: &str,
+    cfg: &WorkerConfig,
+    plan: Option<Arc<Mutex<PlanState>>>,
+    short_read: Option<usize>,
+    specs_line: &mut Option<String>,
+) -> Result<(Box<dyn Transport>, Arc<Mutex<TcpStream>>, Option<Vec<crate::sweep::SweepSpec>>), OpenErr>
+{
+    let tcp = TcpTransport::connect(addr, short_read)
+        .map_err(|e| OpenErr::Lost(anyhow::anyhow!("connect {addr}: {e}")))?;
+    let writer = tcp.shared_writer();
+    let mut tr: Box<dyn Transport> = match plan {
+        Some(state) => Box::new(FaultTransport::new(tcp, state)),
+        None => Box::new(tcp),
+    };
+    // The handshake is deadline-bounded; the lockstep loop is not (a
+    // unit can legitimately take minutes, and the driver closing the
+    // socket gives us EOF either way).
+    tr.set_read_deadline(Some(Duration::from_secs(10)));
+    tr.send_line(&proto::msg_hello(cfg.token.as_deref()).to_string())
+        .map_err(|e| OpenErr::Lost(anyhow::anyhow!("handshake send: {e}")))?;
+    let line = match tr.recv_line() {
+        Ok(Some(l)) => l,
+        Ok(None) => return Err(OpenErr::Lost(anyhow::anyhow!("driver closed mid-handshake"))),
+        Err(e) => return Err(OpenErr::Lost(anyhow::anyhow!("handshake recv: {e}"))),
+    };
+    let first = proto::parse_line(&line)
+        .map_err(|e| OpenErr::Lost(anyhow::anyhow!("handshake reply: {e}")))?;
+    if let Some(msg) = proto::err_of(&first) {
+        return Err(OpenErr::Fatal(anyhow::anyhow!(
+            "driver rejected this worker: {msg}"
+        )));
+    }
+    if proto::op_of(&first) == Some("busy") {
+        let hint = first.get("retry_ms").and_then(|m| m.as_u64()).unwrap_or(0);
+        return Err(OpenErr::Busy(hint));
+    }
+    let fresh = match specs_line {
+        Some(prev) => {
+            // Reconnect: the queue must be the *same sweep*, or pooled
+            // results would silently mix experiments.
+            if *prev != line {
+                return Err(OpenErr::Fatal(anyhow::anyhow!(
+                    "driver spec queue changed across reconnect — refusing to mix sweeps"
+                )));
+            }
+            None
+        }
+        None => {
+            let specs = proto::parse_specs(&first).map_err(OpenErr::Fatal)?;
+            *specs_line = Some(line);
+            Some(specs)
+        }
+    };
+    tr.set_read_deadline(None);
+    Ok((tr, writer, fresh))
+}
+
+enum SessionEnd {
+    Done,
+    Lost,
+    Crashed,
+}
+
+/// Receive the next lockstep message, skipping any stray `pong`s (the
+/// driver only pongs echo pings, so none are expected — this is
+/// defense, not protocol). `None` = the connection is gone (EOF, error,
+/// or a line torn mid-teardown).
+fn recv_msg(tr: &mut dyn Transport) -> Option<crate::util::json::Value> {
+    loop {
+        let line = match tr.recv_line() {
+            Ok(Some(l)) => l,
+            Ok(None) | Err(_) => return None,
+        };
+        let Ok(v) = proto::parse_line(&line) else {
+            return None;
+        };
+        if proto::op_of(&v) == Some("pong") {
+            continue;
+        }
+        return Some(v);
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_session(
+    tr: &mut dyn Transport,
+    queue: &SpecQueue,
+    caches: &mut [Option<(usize, Engine)>],
+    unacked: &mut Option<String>,
+    completed: &mut usize,
+    plan: Option<&Arc<Mutex<PlanState>>>,
+    hung: Option<&Arc<AtomicBool>>,
+) -> anyhow::Result<SessionEnd> {
+    // A result the previous session sent (or tried to) without seeing
+    // the ack goes out again first: the driver either never got it
+    // (journals it now) or already did (dedupes) — identical bits, and
+    // `ok` either way.
+    if let Some(line) = unacked.clone() {
+        if tr.send_line(&line).is_err() {
+            return Ok(SessionEnd::Lost);
+        }
+        let Some(ack) = recv_msg(tr) else {
+            return Ok(SessionEnd::Lost);
+        };
+        match proto::op_of(&ack) {
+            Some("ok") => {
+                *completed += 1;
+                *unacked = None;
+            }
+            Some("done") => return Ok(SessionEnd::Done),
+            other => anyhow::bail!("unexpected ack {other:?} for a resent result"),
+        }
+    }
+    loop {
+        if tr.send_line(&proto::msg_next().to_string()).is_err() {
+            return Ok(SessionEnd::Lost);
+        }
+        let Some(msg) = recv_msg(tr) else {
+            return Ok(SessionEnd::Lost);
         };
         match proto::op_of(&msg) {
             Some("unit") => {
@@ -63,6 +396,27 @@ pub fn run_worker_with_token(addr: &str, token: Option<&str>) -> anyhow::Result<
                 let Some((si, u)) = queue.locate(g) else {
                     anyhow::bail!("driver assigned out-of-range unit {g}");
                 };
+                // Chaos hooks keyed on the claim ordinal: hang (go
+                // silent, heartbeats suppressed, then proceed) and
+                // crash (die holding the unit).
+                let (hang_ms, crash) = match plan {
+                    Some(p) => p.lock().unwrap().on_claim(),
+                    None => (None, false),
+                };
+                if let Some(ms) = hang_ms {
+                    if let Some(h) = hung {
+                        h.store(true, Ordering::SeqCst);
+                    }
+                    std::thread::sleep(Duration::from_millis(ms));
+                    if let Some(h) = hung {
+                        h.store(false, Ordering::SeqCst);
+                    }
+                }
+                if crash {
+                    eprintln!("qs-sweep worker: injected crash holding unit {g}");
+                    tr.shutdown();
+                    return Ok(SessionEnd::Crashed);
+                }
                 let task = &queue.tasks()[si];
                 let cache = &mut caches[si];
                 // Paired (CRN) specs use the (λ, replication) grid: one
@@ -88,22 +442,86 @@ pub fn run_worker_with_token(addr: &str, token: Option<&str>) -> anyhow::Result<
                         }
                     }
                 };
-                if writeln!(writer, "{reply}").is_err() {
-                    break;
+                let line = reply.to_string();
+                // Armed *before* the send: a failure anywhere between
+                // here and the ack leaves the result queued for resend.
+                *unacked = Some(line.clone());
+                if tr.send_line(&line).is_err() {
+                    return Ok(SessionEnd::Lost);
                 }
-                line.clear();
-                match reader.read_line(&mut line) {
-                    Ok(0) | Err(_) => break, // ack lost: driver gone
-                    Ok(_) => completed += 1,
+                let Some(ack) = recv_msg(tr) else {
+                    return Ok(SessionEnd::Lost);
+                };
+                match proto::op_of(&ack) {
+                    Some("ok") => {
+                        *completed += 1;
+                        *unacked = None;
+                    }
+                    Some("done") => return Ok(SessionEnd::Done),
+                    other => anyhow::bail!("unexpected ack {other:?} for a result"),
                 }
             }
             Some("wait") => {
                 let ms = msg.get("ms").and_then(|m| m.as_u64()).unwrap_or(25);
                 std::thread::sleep(Duration::from_millis(ms));
             }
-            Some("done") => break,
+            Some("done") => return Ok(SessionEnd::Done),
             other => anyhow::bail!("unexpected driver message {other:?}"),
         }
     }
-    Ok(completed)
+}
+
+/// The heartbeat thread: one-way `ping` lines through the *raw* shared
+/// writer (single `write_all` per line, serialized with the lockstep
+/// sends by the writer mutex; bypassing the fault transport keeps the
+/// plan's message ordinals ping-free). Suppressed while an injected
+/// hang is simulating a stuck worker — that is the very condition
+/// heartbeats exist to expose.
+struct Heartbeat {
+    stop: Arc<AtomicBool>,
+    hung: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Heartbeat {
+    fn start(writer: Arc<Mutex<TcpStream>>, interval: Duration) -> Heartbeat {
+        let stop = Arc::new(AtomicBool::new(false));
+        let hung = Arc::new(AtomicBool::new(false));
+        let (stop2, hung2) = (stop.clone(), hung.clone());
+        let mut line = proto::msg_ping(false).to_string();
+        line.push('\n');
+        let handle = std::thread::spawn(move || {
+            use std::io::Write;
+            let mut last = Instant::now();
+            loop {
+                std::thread::sleep(Duration::from_millis(25));
+                if stop2.load(Ordering::SeqCst) {
+                    break;
+                }
+                if hung2.load(Ordering::SeqCst) {
+                    last = Instant::now(); // a hung worker sends nothing
+                    continue;
+                }
+                if last.elapsed() >= interval {
+                    let sent = writer.lock().unwrap().write_all(line.as_bytes());
+                    if sent.is_err() {
+                        break; // connection gone; the session will notice
+                    }
+                    last = Instant::now();
+                }
+            }
+        });
+        Heartbeat {
+            stop,
+            hung,
+            handle: Some(handle),
+        }
+    }
+
+    fn stop(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
 }

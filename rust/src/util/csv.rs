@@ -44,6 +44,12 @@ impl<W: Write> CsvWriter<W> {
     pub fn flush(&mut self) -> std::io::Result<()> {
         self.w.flush()
     }
+
+    /// Hand back the underlying writer (e.g. to `commit()` an
+    /// [`AtomicFile`](crate::sweep::faultline::AtomicFile)).
+    pub fn into_inner(self) -> W {
+        self.w
+    }
 }
 
 /// Compact float formatting (up to 9 significant digits, no trailing zeros).

@@ -36,6 +36,22 @@ impl Value {
         }
     }
 
+    /// A copy of this object without `key` (non-objects come back
+    /// unchanged). The sweep journal uses this to compute a record's
+    /// CRC over its canonical serialization minus the `crc` field
+    /// itself — sound because `Obj` is a `BTreeMap`, so serialization
+    /// is key-sorted and parse → serialize is canonical.
+    pub fn without(&self, key: &str) -> Value {
+        match self {
+            Value::Obj(m) => {
+                let mut m = m.clone();
+                m.remove(key);
+                Value::Obj(m)
+            }
+            other => other.clone(),
+        }
+    }
+
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Value::Num(x) => Some(*x),

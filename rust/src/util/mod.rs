@@ -8,6 +8,7 @@
 
 pub mod bench;
 pub mod cli;
+pub mod crc;
 pub mod csv;
 pub mod json;
 pub mod proptest;

@@ -1,0 +1,408 @@
+//! Seeded fault-injection matrix for the self-healing sweep fabric:
+//! every plan here disturbs a sharded sweep — disconnects at exact
+//! message ordinals, worker crashes and hangs, torn journal appends,
+//! fsync-dropped tails, overload sheds — and every test's acceptance
+//! bar is the same: the run (after reconnects, requeues, and resumes)
+//! converges to CSV bytes identical to an undisturbed in-process run.
+//! Faults are deterministic, replayable functions of their plan seed
+//! (see `sweep::faultline`), so a failure here reproduces locally from
+//! the plan string alone.
+
+use quickswap::experiments::write_sweep_csv;
+use quickswap::sweep::faultline::{backoff_delay, AtomicFile, FaultDurable, FaultPlan, PlanState};
+use quickswap::sweep::{
+    run_spec_local, run_worker_with, DriverBuilder, ServeReport, SpecOutcome, SweepSpec,
+    WorkerConfig, WorkerOutcome, WorkerReport, WorkloadSpec,
+};
+use std::io::Write;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// The shared grid: 2 λ × 3 policies × 2 replications = 12 units, small
+/// enough that every chaos scenario runs in well under a second of
+/// simulated work.
+fn chaos_spec() -> SweepSpec {
+    SweepSpec {
+        workload: WorkloadSpec::OneOrAll {
+            k: 8,
+            p1: 0.9,
+            mu1: 1.0,
+            muk: 1.0,
+        },
+        lambdas: vec![2.0, 3.0],
+        policies: vec![
+            quickswap::policy::PolicyId::Msf,
+            quickswap::policy::PolicyId::Msfq(Some(7)),
+            quickswap::policy::PolicyId::Fcfs,
+        ],
+        target_completions: 3_000,
+        warmup_completions: 600,
+        batch: 500,
+        seed: 42,
+        replications: 2,
+        paired: false,
+        baseline: None,
+    }
+}
+
+fn tmp_path(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("qs-chaos-{}-{name}", std::process::id()))
+}
+
+/// Byte-compare a served outcome's CSV against the undisturbed
+/// in-process reference — the paper-facing artifact is the CSV, so the
+/// contract is stated (and checked) at the byte level, not the struct
+/// level.
+fn assert_csv_bytes_identical(spec: &SweepSpec, report: &ServeReport, tag: &str) {
+    let reference = run_spec_local(spec, 4);
+    let ref_csv = tmp_path(&format!("{tag}-ref.csv"));
+    let got_csv = tmp_path(&format!("{tag}-got.csv"));
+    write_sweep_csv(ref_csv.to_str().unwrap(), &reference, &spec.class_names()).unwrap();
+    let pts = match &report.outcomes[0] {
+        SpecOutcome::Marginal(pts) => pts,
+        _ => panic!("expected a marginal outcome"),
+    };
+    write_sweep_csv(got_csv.to_str().unwrap(), pts, &spec.class_names()).unwrap();
+    let a = std::fs::read(&ref_csv).unwrap();
+    let b = std::fs::read(&got_csv).unwrap();
+    assert!(!a.is_empty(), "{tag}: reference CSV is empty");
+    assert_eq!(a, b, "{tag}: CSV bytes differ from the undisturbed run");
+    let _ = std::fs::remove_file(&ref_csv);
+    let _ = std::fs::remove_file(&got_csv);
+}
+
+/// Run one worker with `plan` against a plain driver and require full
+/// convergence: the worker must self-heal (exactly `reconnects`
+/// reconnects), finish every unit, and the CSV must match the
+/// undisturbed bytes.
+fn run_one_worker_plan(plan: FaultPlan, want_reconnects: u32, tag: &str) {
+    let spec = chaos_spec();
+    let total = spec.grid().n_units();
+    let driver = DriverBuilder::new().spec(&spec).bind().unwrap();
+    let addr = driver.local_addr().to_string();
+    let dh = std::thread::spawn(move || driver.serve().unwrap());
+    let cfg = WorkerConfig {
+        plan: Some(plan),
+        ..WorkerConfig::default()
+    };
+    let report = run_worker_with(&addr, &cfg).unwrap();
+    let serve = dh.join().unwrap();
+    assert_eq!(report.outcome, WorkerOutcome::Done, "{tag}");
+    assert_eq!(report.reconnects, want_reconnects, "{tag}");
+    assert_eq!(report.completed, total, "{tag}: every unit acked to this worker");
+    assert_eq!(serve.units_executed, total, "{tag}");
+    assert_csv_bytes_identical(&spec, &serve, tag);
+}
+
+/// Plan 1 — transport loss mid-result: the connection dies on the very
+/// send carrying unit 0's result (message ordinal 5 = hello, specs,
+/// next, unit, then this send). The worker reconnects, *resends* the
+/// unacked result (the driver never saw it — it journals/delivers it
+/// now), and drains the sweep. `short-read@3` rides along so every
+/// recv also exercises the fragmented-read path.
+#[test]
+fn disconnect_during_result_send_resends_and_converges() {
+    let plan = FaultPlan::new(101).short_read_cap(3).disconnect_at(5);
+    run_one_worker_plan(plan, 1, "disconnect@result-send");
+}
+
+/// Plan 2 — transport loss on the ack: the result reached the driver
+/// but the `ok` never reached the worker (ordinal 6). On reconnect the
+/// resent result is a *duplicate*; the driver dedupes, acks, and the
+/// unit counts exactly once.
+#[test]
+fn disconnect_during_ack_recv_dedupes_resend() {
+    let plan = FaultPlan::new(102).disconnect_at(6);
+    let spec = chaos_spec();
+    let total = spec.grid().n_units();
+    let driver = DriverBuilder::new().spec(&spec).bind().unwrap();
+    let addr = driver.local_addr().to_string();
+    let dh = std::thread::spawn(move || driver.serve().unwrap());
+    let cfg = WorkerConfig {
+        plan: Some(plan),
+        ..WorkerConfig::default()
+    };
+    let report = run_worker_with(&addr, &cfg).unwrap();
+    let serve = dh.join().unwrap();
+    assert_eq!(report.outcome, WorkerOutcome::Done);
+    assert_eq!(report.reconnects, 1);
+    assert_eq!(report.completed, total);
+    assert_eq!(serve.units_executed, total, "the duplicate must not double-count");
+    assert_eq!(serve.liveness.duplicates, 1, "the resend is seen and deduped");
+    assert_csv_bytes_identical(&spec, &serve, "disconnect@ack-recv");
+}
+
+/// Plan 3 — injected worker crash while holding a unit: the driver
+/// requeues it on disconnect and a fresh worker (modeling a restarted
+/// process) finishes the sweep bit-identically.
+#[test]
+fn crashed_worker_unit_is_reissued_to_replacement() {
+    let spec = chaos_spec();
+    let total = spec.grid().n_units();
+    let driver = DriverBuilder::new().spec(&spec).bind().unwrap();
+    let addr = driver.local_addr().to_string();
+    let dh = std::thread::spawn(move || driver.serve().unwrap());
+    let cfg = WorkerConfig {
+        plan: Some(FaultPlan::new(103).crash_on_unit(3)),
+        ..WorkerConfig::default()
+    };
+    let crashed = run_worker_with(&addr, &cfg).unwrap();
+    assert_eq!(crashed.outcome, WorkerOutcome::Crashed);
+    assert_eq!(crashed.completed, 2, "crashed holding its 3rd claimed unit");
+    let replacement = run_worker_with(&addr, &WorkerConfig::default()).unwrap();
+    let serve = dh.join().unwrap();
+    assert_eq!(replacement.outcome, WorkerOutcome::Done);
+    assert_eq!(crashed.completed + replacement.completed, total);
+    assert!(serve.liveness.disconnect_requeues >= 1, "the held unit was requeued");
+    assert_csv_bytes_identical(&spec, &serve, "crash@3");
+}
+
+/// Plan 4 — torn journal append (simulated power cut mid-write, with
+/// fsync on): the 4th record is written only partially, followed by
+/// garbage. The serve aborts fatally WITHOUT acking the unit; a fresh
+/// driver on the same journal truncates the torn tail (3 intact records
+/// survive), reruns only the lost units, and the final CSV is
+/// byte-identical.
+#[test]
+fn torn_journal_append_aborts_then_resumes_truncated() {
+    let spec = chaos_spec();
+    let total = spec.grid().n_units();
+    let journal = tmp_path("torn.journal");
+    let _ = std::fs::remove_file(&journal);
+    {
+        let driver = DriverBuilder::new()
+            .spec(&spec)
+            .journal(&journal)
+            .fsync(true)
+            .fault_plan(Some(FaultPlan::new(104).torn_append(4, 0.5)))
+            .bind()
+            .unwrap();
+        let addr = driver.local_addr().to_string();
+        let wh = std::thread::spawn({
+            let addr = addr.clone();
+            move || run_worker_with(&addr, &WorkerConfig::default())
+        });
+        let err = driver.serve().unwrap_err();
+        assert!(
+            err.to_string().contains("journal write failed"),
+            "unexpected error: {err}"
+        );
+        wh.join().unwrap().unwrap(); // the worker must exit, not hang
+    }
+    // Resume on the torn journal: the broken final record is dropped,
+    // the 3 intact ones are served from disk, the rest rerun.
+    let driver = DriverBuilder::new()
+        .spec(&spec)
+        .journal(&journal)
+        .bind()
+        .unwrap();
+    let addr = driver.local_addr().to_string();
+    let dh = std::thread::spawn(move || driver.serve().unwrap());
+    run_worker_with(&addr, &WorkerConfig::default()).unwrap();
+    let serve = dh.join().unwrap();
+    assert_eq!(serve.units_from_journal, 3, "intact prefix served from disk");
+    assert_eq!(serve.units_executed, total - 3, "only lost units rerun");
+    assert_csv_bytes_identical(&spec, &serve, "torn-append");
+    let _ = std::fs::remove_file(&journal);
+}
+
+/// Plan 5 — fsync-dropped tail: the 6th append dies with its bytes
+/// dropped back to the last synced offset (the classic
+/// power-cut-after-write-before-sync artifact). Five durable records
+/// survive; the resume picks them up exactly.
+#[test]
+fn fsync_dropped_tail_resumes_from_synced_prefix() {
+    let spec = chaos_spec();
+    let total = spec.grid().n_units();
+    let journal = tmp_path("dropsync.journal");
+    let _ = std::fs::remove_file(&journal);
+    {
+        let driver = DriverBuilder::new()
+            .spec(&spec)
+            .journal(&journal)
+            .fsync(true)
+            .fault_plan(Some(FaultPlan::new(105).drop_sync(6)))
+            .bind()
+            .unwrap();
+        let addr = driver.local_addr().to_string();
+        let wh = std::thread::spawn({
+            let addr = addr.clone();
+            move || run_worker_with(&addr, &WorkerConfig::default())
+        });
+        let err = driver.serve().unwrap_err();
+        assert!(err.to_string().contains("journal write failed"), "{err}");
+        wh.join().unwrap().unwrap();
+    }
+    let driver = DriverBuilder::new()
+        .spec(&spec)
+        .journal(&journal)
+        .bind()
+        .unwrap();
+    let addr = driver.local_addr().to_string();
+    let dh = std::thread::spawn(move || driver.serve().unwrap());
+    run_worker_with(&addr, &WorkerConfig::default()).unwrap();
+    let serve = dh.join().unwrap();
+    assert_eq!(serve.units_from_journal, 5, "synced prefix served from disk");
+    assert_eq!(serve.units_executed, total - 5);
+    assert_csv_bytes_identical(&spec, &serve, "drop-sync");
+    let _ = std::fs::remove_file(&journal);
+}
+
+/// Plan 6 — hung-but-connected worker: `hang@2` goes silent (heartbeats
+/// suppressed) for 1.5 s while holding its 2nd unit. The driver's
+/// heartbeat detector (deadline 200 ms, well under the 400 ms idle
+/// drop) requeues the unit to the healthy worker long before any unit
+/// timeout could, and the sweep converges bit-identically.
+#[test]
+fn hung_worker_unit_is_requeued_by_heartbeat_detector() {
+    let spec = chaos_spec();
+    let driver = DriverBuilder::new()
+        .spec(&spec)
+        .heartbeat_timeout(Some(Duration::from_millis(200)))
+        .bind()
+        .unwrap();
+    let addr = driver.local_addr().to_string();
+    let dh = std::thread::spawn(move || driver.serve().unwrap());
+    let hung_cfg = WorkerConfig {
+        plan: Some(FaultPlan::new(106).hang_on_unit(2, 1500)),
+        heartbeat: Some(Duration::from_millis(50)),
+        ..WorkerConfig::default()
+    };
+    let hw = std::thread::spawn({
+        let addr = addr.clone();
+        move || run_worker_with(&addr, &hung_cfg)
+    });
+    // Give the hung worker first claim, then let the healthy one drain.
+    std::thread::sleep(Duration::from_millis(30));
+    let healthy_cfg = WorkerConfig {
+        heartbeat: Some(Duration::from_millis(50)),
+        ..WorkerConfig::default()
+    };
+    let healthy = run_worker_with(&addr, &healthy_cfg).unwrap();
+    let serve = dh.join().unwrap();
+    // The hung worker wakes into a torn-down sweep; any of its terminal
+    // outcomes is fine — the determinism contract is on the results.
+    let _: anyhow::Result<WorkerReport> = hw.join().unwrap();
+    assert_eq!(healthy.outcome, WorkerOutcome::Done);
+    assert!(
+        serve.liveness.heartbeat_requeues >= 1,
+        "the hung unit must be reclaimed by the heartbeat detector, \
+         liveness: {:?}",
+        serve.liveness
+    );
+    assert_csv_bytes_identical(&spec, &serve, "hang-heartbeat");
+}
+
+/// Plan 7 — overload shedding: with the connection cap at 1 and the
+/// only slot held by a half-open peer, a late worker is shed with a
+/// typed `busy`, backs off on its own schedule, and completes the
+/// whole sweep once the slot frees. Shedding is observable (counters)
+/// but not result-affecting.
+#[test]
+fn shed_worker_retries_after_busy_and_converges() {
+    let spec = chaos_spec();
+    let total = spec.grid().n_units();
+    let driver = DriverBuilder::new()
+        .spec(&spec)
+        .max_conns(1)
+        .bind()
+        .unwrap();
+    let addr = driver.local_addr().to_string();
+    let dh = std::thread::spawn(move || driver.serve().unwrap());
+    // Squatter: occupies the single slot without ever completing the
+    // handshake (the driver's handshake deadline would evict it in 10 s;
+    // we release it much sooner).
+    let squatter = std::net::TcpStream::connect(&addr).unwrap();
+    std::thread::sleep(Duration::from_millis(100));
+    let wh = std::thread::spawn({
+        let addr = addr.clone();
+        move || {
+            let cfg = WorkerConfig {
+                max_retries: 40,
+                backoff_base: Duration::from_millis(20),
+                backoff_cap: Duration::from_millis(60),
+                ..WorkerConfig::default()
+            };
+            run_worker_with(&addr, &cfg)
+        }
+    });
+    std::thread::sleep(Duration::from_millis(250));
+    drop(squatter);
+    let report = wh.join().unwrap().unwrap();
+    let serve = dh.join().unwrap();
+    assert_eq!(report.outcome, WorkerOutcome::Done);
+    assert!(report.busy_retries >= 1, "the worker was shed at least once");
+    assert_eq!(report.completed, total);
+    assert!(serve.liveness.conns_shed >= 1, "liveness: {:?}", serve.liveness);
+    assert_csv_bytes_identical(&spec, &serve, "overload-shed");
+}
+
+/// Plan 8 — atomic CSV publish: a fault mid-rewrite (torn append on the
+/// temp file) must leave the previously published CSV untouched at its
+/// final name, clean up its temp file, and a clean retry must produce
+/// the identical bytes.
+#[test]
+fn atomic_csv_survives_torn_rewrite() {
+    let spec = chaos_spec();
+    let pts = run_spec_local(&spec, 4);
+    let dest = tmp_path("atomic.csv");
+    let _ = std::fs::remove_file(&dest);
+    write_sweep_csv(dest.to_str().unwrap(), &pts, &spec.class_names()).unwrap();
+    let published = std::fs::read(&dest).unwrap();
+    assert!(!published.is_empty());
+
+    // Faulty rewrite: the second append to the temp file tears.
+    let state = Arc::new(Mutex::new(PlanState::new(
+        FaultPlan::new(107).torn_append(2, 0.6),
+    )));
+    let mut atomic = AtomicFile::create_with(&dest, move |f| {
+        Box::new(FaultDurable::new(f, state).unwrap())
+    })
+    .unwrap();
+    atomic.write_all(b"lambda,policy\n").unwrap();
+    let err = atomic.write_all(b"2,msf\n").unwrap_err();
+    assert!(err.to_string().contains("torn"), "unexpected error: {err}");
+    drop(atomic); // abandoned, not committed
+
+    // The published file is untouched and no temp litter remains.
+    assert_eq!(std::fs::read(&dest).unwrap(), published, "dest must be intact");
+    let dir = dest.parent().unwrap();
+    let tmp_litter = std::fs::read_dir(dir)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .filter(|e| {
+            let n = e.file_name().to_string_lossy().to_string();
+            n.starts_with("qs-chaos") && n.contains("atomic.csv") && n.ends_with(".tmp")
+        })
+        .count();
+    assert_eq!(tmp_litter, 0, "abandoned temp files must be cleaned up");
+
+    // A clean retry converges to the same bytes.
+    write_sweep_csv(dest.to_str().unwrap(), &pts, &spec.class_names()).unwrap();
+    assert_eq!(std::fs::read(&dest).unwrap(), published);
+    let _ = std::fs::remove_file(&dest);
+}
+
+/// The reconnect backoff schedule is a pure function of its seed:
+/// deterministic, capped, and jittered within [0.5, 1.0] of the nominal
+/// doubling curve — replayable chaos requires replayable waits.
+#[test]
+fn backoff_schedule_is_deterministic_capped_and_jittered() {
+    let base = Duration::from_millis(50);
+    let cap = Duration::from_secs(1);
+    let schedule = |seed: u64| -> Vec<Duration> {
+        let mut rng = quickswap::util::rng::Rng::new(seed);
+        (1..=12).map(|a| backoff_delay(a, base, cap, &mut rng)).collect()
+    };
+    assert_eq!(schedule(7), schedule(7), "same seed, same schedule");
+    assert_ne!(schedule(7), schedule(8), "different seeds must jitter apart");
+    for (i, d) in schedule(7).iter().enumerate() {
+        let nominal = std::cmp::min(cap, base * 2u32.saturating_pow(i as u32));
+        assert!(*d <= nominal, "attempt {i} exceeds its nominal ceiling");
+        assert!(
+            *d >= nominal / 2,
+            "attempt {i} jittered below half the nominal ({d:?} < {nominal:?}/2)"
+        );
+    }
+}

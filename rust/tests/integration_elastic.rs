@@ -333,7 +333,10 @@ fn multi_spec_queue_serves_and_resumes_fully_from_journal() {
         })
         .collect();
     let report = dh.join().unwrap();
-    let served: usize = workers.into_iter().map(|w| w.join().unwrap()).sum();
+    let served: usize = workers
+        .into_iter()
+        .map(|w| w.join().unwrap().completed)
+        .sum();
     assert_eq!(served, 18, "12 marginal + 6 paired units, each acked once");
     assert_eq!(report.units_total, 18);
     assert_eq!(report.units_executed, 18);
@@ -396,7 +399,7 @@ fn late_joining_worker_finishes_the_sweep() {
     // Fresh worker joins mid-life and drains the rest.
     let served = run_worker(&addr).unwrap();
     let report = dh.join().unwrap();
-    assert_eq!(served, total - half);
+    assert_eq!(served.completed, total - half);
     assert_eq!(report.units_executed, total);
     let pts = match report.outcomes.into_iter().next() {
         Some(SpecOutcome::Marginal(pts)) => pts,

@@ -225,7 +225,10 @@ fn sharded_paired_sweep_is_bit_identical_to_local() {
             })
             .collect();
         let sharded = dh.join().unwrap();
-        let served: usize = workers.into_iter().map(|w| w.join().unwrap()).sum();
+        let served: usize = workers
+            .into_iter()
+            .map(|w| w.join().unwrap().completed)
+            .sum();
         assert_eq!(served, 6, "every (λ, replication) unit acknowledged once");
         assert_points_bit_identical(&local.points, &sharded.points);
         assert_diffs_bit_identical(&local.diffs, &sharded.diffs);

@@ -138,7 +138,10 @@ fn sharded_matches_inprocess_across_worker_counts() {
             })
             .collect();
         let pts = dh.join().unwrap();
-        let served: usize = workers.into_iter().map(|w| w.join().unwrap()).sum();
+        let served: usize = workers
+            .into_iter()
+            .map(|w| w.join().unwrap().completed)
+            .sum();
         assert!(served >= 1, "workers served nothing");
         assert_points_bit_identical(&base, &pts);
     }
@@ -196,7 +199,7 @@ fn killed_worker_units_are_reissued() {
     let served = run_worker(&addr).unwrap();
     let pts = dh.join().unwrap();
     // The real worker ran the whole grid, including the reissued unit.
-    assert_eq!(served, spec.grid().n_units());
+    assert_eq!(served.completed, spec.grid().n_units());
     assert_points_bit_identical(&base, &pts);
 }
 
@@ -238,7 +241,7 @@ fn timed_out_units_are_reissued() {
     // polling (`next` → `wait` → `next`) picks up the reissued unit, so
     // it ends up serving the whole grid.
     let served = run_worker(&addr).unwrap();
-    assert_eq!(served, spec.grid().n_units());
+    assert_eq!(served.completed, spec.grid().n_units());
     let pts = dh.join().unwrap();
     assert_points_bit_identical(&base, &pts);
     drop((w, r, stall));
@@ -324,7 +327,7 @@ fn auth_token_gates_workers() {
 
     // The right token serves the whole grid, bit-identical as ever.
     let served = run_worker_with_token(&addr, Some("sesame")).unwrap();
-    assert_eq!(served, spec.grid().n_units());
+    assert_eq!(served.completed, spec.grid().n_units());
     let pts = dh.join().unwrap();
     assert_points_bit_identical(&base, &pts);
 }
@@ -344,7 +347,7 @@ fn open_driver_accepts_token_bearing_worker() {
     let addr = driver.local_addr().to_string();
     let dh = std::thread::spawn(move || serve_marginal(driver));
     let served = run_worker_with_token(&addr, Some("surplus-secret")).unwrap();
-    assert_eq!(served, spec.grid().n_units());
+    assert_eq!(served.completed, spec.grid().n_units());
     let pts = dh.join().unwrap();
     assert_points_bit_identical(&base, &pts);
 }

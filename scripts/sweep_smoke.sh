@@ -13,10 +13,17 @@
 #      the resume log must show units served from the journal. The
 #      `sweep status` endpoint is probed for totals and used to pace the
 #      kill.
+#   4. Chaos leg: a fsync'd journaled driver serves two workers running
+#      seeded fault plans (QS_FAULT_PLAN) — one crashes mid-sweep, one
+#      loses its connection and self-heals via reconnect/resend — and
+#      the surviving fabric must still converge to a CSV byte-identical
+#      to the undisturbed in-process run.
 #
-# CI runs this as the `sweep-smoke` job.
+# CI runs this as the `sweep-smoke` job, and the chaos leg alone as the
+# `chaos-smoke` job (QS_CHAOS_ONLY=1 skips legs 1–3).
 #
-# Usage: scripts/sweep_smoke.sh
+# Usage: scripts/sweep_smoke.sh          # all legs
+#        QS_CHAOS_ONLY=1 scripts/sweep_smoke.sh   # chaos leg only
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -103,6 +110,8 @@ require_identical() {
         exit 1
     fi
 }
+
+if [ "${QS_CHAOS_ONLY:-0}" != "1" ]; then
 
 echo "== in-process reference run =="
 "$BIN" sweep run "${GRID[@]}" --out "$OUT/sweep_inproc.csv"
@@ -192,7 +201,72 @@ if [ -z "$FROM_JOURNAL" ] || [ "$FROM_JOURNAL" -lt 5 ]; then
 fi
 echo "ok: resume served $FROM_JOURNAL units from the journal without rerunning them"
 
+fi # QS_CHAOS_ONLY
+
+# The chaos grid: 2 λ × 3 policies × 4 reps = 24 units with enough work
+# per unit that both fault plans fire while the sweep is genuinely
+# mid-flight.
+CGRID=(--workload one_or_all --k 8 --p1 0.9 --lambdas 2.0,3.0
+       --policies msf,msfq:7,fcfs --completions 20000 --seed 42 --reps 4)
+
+echo "== chaos leg: uninterrupted in-process reference =="
+"$BIN" sweep run "${CGRID[@]}" --out "$OUT/chaos_ref.csv"
+
+echo "== chaos leg: fsync'd journaled driver + crash worker + flaky worker =="
+CJOURNAL=$OUT/chaos.journal
+rm -f "$CJOURNAL" "$OUT/chaos_driver.log" "$OUT/chaos_w1.log" "$OUT/chaos_w2.log"
+"$BIN" sweep drive "${CGRID[@]}" --addr 127.0.0.1:0 --journal "$CJOURNAL" --fsync \
+    --out "$OUT/chaos_sharded.csv" 2> "$OUT/chaos_driver.log" &
+DRIVER_PID=$!
+ADDR=$(wait_for_addr "$OUT/chaos_driver.log" "$DRIVER_PID")
+echo "driver at $ADDR"
+# Worker 1 dies by injected crash while holding its 3rd claimed unit
+# (the driver requeues it); worker 2 reads in 7-byte fragments and loses
+# its connection on message 5 (its first result send), then reconnects
+# with backoff and resends. Plans are per-process env so the driver's
+# own QS_FAULT_PLAN stays unset.
+QS_FAULT_PLAN="seed=9;crash@3" "$BIN" sweep work --addr "$ADDR" \
+    2> "$OUT/chaos_w1.log" &
+W1_PID=$!
+QS_FAULT_PLAN="seed=9;short-read@7;disconnect@5" "$BIN" sweep work --addr "$ADDR" \
+    2> "$OUT/chaos_w2.log" &
+W2_PID=$!
+wait "$W1_PID" || true
+wait "$W2_PID" || true
+wait "$DRIVER_PID"
+DRIVER_PID=""
+
+echo "== chaos leg: fault evidence and convergence =="
+grep -q "injected crash" "$OUT/chaos_w1.log"
+echo "ok: worker 1 crashed by plan"
+grep -q "reconnected" "$OUT/chaos_w2.log"
+echo "ok: worker 2 reconnected after its injected disconnect"
+require_identical "$OUT/chaos_ref.csv" "$OUT/chaos_sharded.csv"
+LIVENESS=$(grep "liveness" "$OUT/chaos_driver.log" || true)
+echo "driver ${LIVENESS:-liveness line missing}"
+rm -f "$CJOURNAL"
+
+if [ -n "${GITHUB_STEP_SUMMARY:-}" ]; then
+    {
+        echo "### Chaos smoke"
+        echo ""
+        echo '```'
+        echo "plan w1: seed=9;crash@3"
+        echo "plan w2: seed=9;short-read@7;disconnect@5"
+        echo "${LIVENESS:-no liveness line}"
+        echo '```'
+        echo ""
+        echo "Crash + disconnect fault plans converged to a CSV" \
+             "byte-identical to the undisturbed run."
+    } >> "$GITHUB_STEP_SUMMARY"
+fi
+
 trap - EXIT
-echo "sweep smoke OK: sharded (2 workers) == in-process for the plain grid" \
-     "and the paired (CRN) grid, and a SIGKILLed journaled driver resumed" \
-     "to a byte-identical CSV"
+if [ "${QS_CHAOS_ONLY:-0}" = "1" ]; then
+    echo "chaos smoke OK: crashed and reconnecting workers converged" \
+         "to a byte-identical CSV"
+else
+    echo "sweep smoke OK: sharded (2 workers) == in-process for the plain grid" \
+         "and the paired (CRN) grid, a SIGKILLed journaled driver resumed" \
+         "to a byte-identical CSV, and the chaos leg converged under faults"
+fi
