@@ -140,6 +140,37 @@ fn main() {
         measured.push((format!("sim_{policy}"), rate));
     }
 
+    // Streaming trace replay: the same one_or_all stream recorded to a
+    // columnar `.qst` and replayed through the mmap-backed source under
+    // FCFS — block decode plus zero-allocation chunked refills are the
+    // only costs on top of the engine. bench_compare.sh holds this at
+    // >= 2M events/s absolute in addition to the ratio gate.
+    let trace_dir = std::env::temp_dir().join(format!("qs_bench_trace_{}", std::process::id()));
+    std::fs::create_dir_all(&trace_dir).expect("bench trace dir");
+    let trace_path = trace_dir.join("replay.qst");
+    quickswap::workload::trace::Trace::generate(&one_or_all, (completions * 2) as usize, 7)
+        .write_qst(
+            &trace_path,
+            one_or_all.num_classes(),
+            quickswap::workload::qst::DEFAULT_BLOCK,
+        )
+        .expect("write bench trace");
+    let mut rate = 0.0;
+    b.bench("sim_trace_replay", || {
+        engine.reset();
+        let mut pol = quickswap::policy::build(&"fcfs".parse().unwrap(), &one_or_all).unwrap();
+        let mut src =
+            quickswap::workload::trace::StreamingTraceSource::open(&trace_path, one_or_all.clone())
+                .expect("open bench trace");
+        let mut rng = Rng::new(7);
+        let r = engine.run(&mut src, pol.as_mut(), &mut rng);
+        rate = r.events as f64 / r.wall_s.max(1e-12);
+        black_box(rate);
+    });
+    println!("  -> trace replay (fcfs, qst): {:.2} M events/s", rate / 1e6);
+    measured.push(("sim_trace_replay".to_string(), rate));
+    std::fs::remove_file(&trace_path).ok();
+
     // CRN paired-replication throughput: the same four policies over ONE
     // materialized arrival stream (the paired-unit hot path) vs four
     // independent live-source runs. Replay samples arrivals once instead
@@ -350,6 +381,7 @@ fn main() {
         replications: 4,
         paired: true,
         baseline: Some(quickswap::policy::PolicyId::Msf),
+        trace: None,
     };
     let sweep = run_spec_paired_local(&crn_spec, 1).expect("paired sweep");
     let d = &sweep.diffs[0];

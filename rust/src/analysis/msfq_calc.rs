@@ -74,15 +74,28 @@ pub struct MsfqAnalysis {
     pub t3l: f64,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum CalcError {
-    #[error("system unstable: rho = {0:.4} >= 1 (Theorem 4)")]
     Unstable(f64),
-    #[error("invalid parameters: {0}")]
     Invalid(String),
-    #[error("fixed point did not converge after {0} iterations")]
     NoConvergence(usize),
 }
+
+impl std::fmt::Display for CalcError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CalcError::Unstable(rho) => {
+                write!(f, "system unstable: rho = {rho:.4} >= 1 (Theorem 4)")
+            }
+            CalcError::Invalid(msg) => write!(f, "invalid parameters: {msg}"),
+            CalcError::NoConvergence(iters) => {
+                write!(f, "fixed point did not converge after {iters} iterations")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CalcError {}
 
 /// Compute the Theorem-2 approximation of MSFQ mean response time.
 pub fn analyze(p: &MsfqParams) -> Result<MsfqAnalysis, CalcError> {

@@ -94,7 +94,7 @@ pub fn parse_workload(v: &Value) -> anyhow::Result<Workload> {
         .and_then(|x| x.as_str())
         .ok_or_else(|| anyhow::anyhow!("workload needs 'kind'"))?;
     let f = |key: &str, d: f64| v.get(key).and_then(|x| x.as_f64()).unwrap_or(d);
-    match kind {
+    let wl = match kind {
         "one_or_all" => {
             let k = v
                 .get("k")
@@ -193,6 +193,17 @@ pub fn parse_workload(v: &Value) -> anyhow::Result<Workload> {
             Ok(Workload::with_capacity(capacity, specs))
         }
         other => anyhow::bail!("unknown workload kind '{other}'"),
+    }?;
+    // Optional nonstationary arrival-rate curve, e.g.
+    // `"rate_curve": {"kind":"diurnal","period":24,"amp":0.5}`.
+    match v.get("rate_curve") {
+        Some(rc) => {
+            let curve = crate::workload::rate::rate_curve_from_json(rc)
+                .map_err(|e| anyhow::anyhow!("rate_curve: {e}"))?;
+            curve.validate().map_err(|e| anyhow::anyhow!("rate_curve: {e}"))?;
+            Ok(wl.with_rate_curve(curve))
+        }
+        None => Ok(wl),
     }
 }
 
@@ -265,6 +276,33 @@ mod tests {
         assert_eq!(wl.num_classes(), 2);
         assert!((wl.classes[0].size.scv() - 4.0).abs() < 1e-9);
         assert!((wl.classes[1].size.scv() - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn parses_rate_curve_and_rejects_invalid() {
+        let v = Value::parse(
+            r#"{"kind":"four_class","lambda":2.0,
+                "rate_curve":{"kind":"diurnal","period":24.0,"amp":0.5,"phase":0.0}}"#,
+        )
+        .unwrap();
+        let wl = parse_workload(&v).unwrap();
+        assert_eq!(
+            wl.rate_curve,
+            crate::workload::RateCurve::Diurnal { period: 24.0, amp: 0.5, phase: 0.0 }
+        );
+        // Without the field the workload stays homogeneous.
+        let plain = Value::parse(r#"{"kind":"four_class","lambda":2.0}"#).unwrap();
+        assert_eq!(
+            parse_workload(&plain).unwrap().rate_curve,
+            crate::workload::RateCurve::Constant
+        );
+        // amp >= 1 would make the rate go nonpositive: rejected.
+        let bad = Value::parse(
+            r#"{"kind":"four_class","lambda":2.0,
+                "rate_curve":{"kind":"diurnal","period":24.0,"amp":1.5}}"#,
+        )
+        .unwrap();
+        assert!(parse_workload(&bad).is_err());
     }
 
     #[test]

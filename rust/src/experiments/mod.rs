@@ -262,6 +262,20 @@ fn rep_seed(seed: u64, point: u64, rep: u64) -> u64 {
     SplitMix64::new(mixed).next_u64()
 }
 
+/// A `.qst` trace split into block-aligned shards: shard `r` of a
+/// `shards`-way split replays blocks `[r·nb/shards, (r+1)·nb/shards)`
+/// of the trace (planned from the footer index alone). In a trace
+/// sweep the replication axis *is* the shard axis — unit `(point, r)`
+/// replays shard `r` — so the elastic driver/worker fabric distributes
+/// a multi-million-job trace exactly like a figure grid, and the pooled
+/// batch-means statistics aggregate shards the way they aggregate
+/// independent replications.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceShards {
+    pub path: String,
+    pub shards: u32,
+}
+
 /// The complete (point, replication) unit grid of one sweep. Unit `u`
 /// maps to point `u / reps`, replication `u % reps` (point-major), and
 /// points enumerate λ-major then policy — the partition is a pure
@@ -277,6 +291,12 @@ pub struct SweepGrid {
     pub rep_cfg: SimConfig,
     /// Base seed feeding the per-unit seed stream.
     pub seed: u64,
+    /// Trace replay: each unit replays shard `rep` of this trace
+    /// through a [`StreamingTraceSource`](crate::workload::trace::StreamingTraceSource)
+    /// instead of sampling a
+    /// [`SyntheticSource`] (`reps` must equal `shards`; see
+    /// [`crate::sweep::SweepSpec::grid`]).
+    pub trace: Option<TraceShards>,
 }
 
 impl SweepGrid {
@@ -309,6 +329,7 @@ impl SweepGrid {
             reps,
             rep_cfg,
             seed,
+            trace: None,
         }
     }
 
@@ -344,9 +365,30 @@ pub fn run_unit(
     }
     match crate::policy::build(policy, wl) {
         Ok(mut pol) => {
-            let mut src = SyntheticSource::new(wl.clone());
+            // Trace sweeps replay shard `r` of the `.qst` file (the
+            // replication axis is the shard axis); synthetic sweeps
+            // sample a live source. Either way the engine sees one
+            // `ArrivalSource` and the unit stays a pure function of
+            // (grid, u).
+            let mut src: Box<dyn crate::workload::ArrivalSource> = match &grid.trace {
+                Some(tr) => {
+                    match crate::workload::trace::StreamingTraceSource::open_shard(
+                        &tr.path,
+                        wl.clone(),
+                        r as u32,
+                        grid.reps as u32,
+                    ) {
+                        Ok(s) => Box::new(s),
+                        Err(e) => {
+                            eprintln!("point ({lambda}, {policy}) shard {r}: {e}");
+                            return None;
+                        }
+                    }
+                }
+                None => Box::new(SyntheticSource::new(wl.clone())),
+            };
             let mut rng = Rng::new(rep_seed(grid.seed, p as u64, r as u64));
-            let result = engine.run(&mut src, pol.as_mut(), &mut rng);
+            let result = engine.run(src.as_mut(), pol.as_mut(), &mut rng);
             Some(UnitRun {
                 stats: UnitStats::from_metrics(
                     engine.metrics(),

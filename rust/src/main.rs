@@ -8,17 +8,19 @@
 //!   autotune   pick the best quickswap threshold ℓ for given rates
 //!   fig        reproduce a paper figure (1..8)
 //!   serve      start the coordinator daemon (TCP JSONL API)
-//!   trace      generate a workload trace CSV
+//!   trace      workload traces: generate | convert (csv -> qst) | stats
 
 use quickswap::analysis::{self, MsfqCtmc, MsfqParams};
 use quickswap::config::parse_workload;
 use quickswap::coordinator::{serve_tcp, Coordinator, CoordinatorConfig};
-use quickswap::experiments::{figures, FigureId, Scale, SweepOpts};
+use quickswap::experiments::{figures, FigureId, Scale, SweepOpts, TraceShards};
 use quickswap::sim::SimConfig;
 use quickswap::sweep::{proto, DriverBuilder, SpecOutcome, SweepSpec, WorkerConfig, WorkerOutcome, WorkloadSpec};
 use quickswap::util::cli::{render_help, Args, OptSpec};
 use quickswap::util::json::Value;
-use quickswap::workload::{borg::borg_workload, trace::Trace, Workload};
+use quickswap::workload::rate::parse_rate_curve;
+use quickswap::workload::trace::{StreamingTraceSource, Trace};
+use quickswap::workload::{borg::borg_workload, qst, Workload};
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -66,7 +68,7 @@ fn help() -> String {
             ("autotune", "best quickswap threshold for given rates"),
             ("fig", "reproduce a paper figure: --id 1..8"),
             ("serve", "start the coordinator daemon"),
-            ("trace", "generate a workload trace CSV"),
+            ("trace", "workload traces: generate (csv or .qst) | convert (csv -> .qst) | stats (footer-only summary)"),
         ],
         &[
             OptSpec { name: "workload", help: "one_or_all|four_class|borg|multires or JSON file", default: Some("one_or_all".into()) },
@@ -92,6 +94,13 @@ fn help() -> String {
             OptSpec { name: "fig", help: "sweep: use a figure's predefined grid (2|3|5|6|8)", default: None },
             OptSpec { name: "paired", help: "sweep: common-random-number mode — all policies replay one shared arrival stream per (lambda, replication); prints paired-difference CIs", default: None },
             OptSpec { name: "baseline", help: "sweep --paired: policy the differences are taken against (implies --paired)", default: Some("first policy in the list".into()) },
+            OptSpec { name: "rate-curve", help: "nonstationary arrivals: constant | diurnal:period=24,amp=0.5[,phase=0] | piecewise:0=1,10=2.5,...", default: Some("constant".into()) },
+            OptSpec { name: "trace", help: "simulate|sweep: replay a .qst trace instead of synthetic arrivals", default: None },
+            OptSpec { name: "shards", help: "sweep --trace: split the trace into N block-aligned shards (replaces the replication axis)", default: Some("1".into()) },
+            OptSpec { name: "in", help: "trace convert|stats: input file", default: None },
+            OptSpec { name: "classes", help: "trace convert: class count stamped into the .qst header", default: Some("from --workload".into()) },
+            OptSpec { name: "block", help: "trace generate|convert: arrivals per .qst block", default: Some("4096".into()) },
+            OptSpec { name: "buckets", help: "trace stats: buckets for the empirical lambda(t) table", default: Some("10".into()) },
         ],
     )
 }
@@ -99,7 +108,7 @@ fn help() -> String {
 fn workload_from(args: &Args) -> anyhow::Result<Workload> {
     let kind = args.str_or("workload", "one_or_all");
     let lambda = args.f64_or("lambda", 7.5)?;
-    match kind.as_str() {
+    let wl = match kind.as_str() {
         "one_or_all" => {
             let k = args.u64_or("k", 32)? as u32;
             Ok(Workload::one_or_all(
@@ -123,6 +132,15 @@ fn workload_from(args: &Args) -> anyhow::Result<Workload> {
             let wl = parse_workload(&v)?;
             Ok(wl.with_total_rate(lambda))
         }
+    };
+    // `--rate-curve` modulates arrivals in time (the CLI override wins
+    // over any curve a JSON workload file declares).
+    match args.get("rate-curve") {
+        Some(s) => {
+            let curve = parse_rate_curve(s).map_err(|e| anyhow::anyhow!("--rate-curve: {e}"))?;
+            Ok(wl?.with_rate_curve(curve))
+        }
+        None => wl,
     }
 }
 
@@ -138,7 +156,22 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     let cfg = sim_config_from(args)?;
     let seed = args.u64_or("seed", 1)?;
     let policy: quickswap::policy::PolicyId = args.str_or("policy", "msfq").parse()?;
-    let r = quickswap::sim::run_policy(&wl, &policy, &cfg, seed)?;
+    let r = if let Some(path) = args.get("trace") {
+        // Replay a `.qst` trace instead of drawing synthetic arrivals.
+        // Without an explicit --completions the whole trace is measured
+        // (the shard, not the target, ends the run).
+        let mut cfg = cfg;
+        if args.get("completions").is_none() {
+            cfg.target_completions = u64::MAX / 2;
+            cfg.warmup_completions = 0;
+        }
+        let mut src = StreamingTraceSource::open(path, wl.clone())?;
+        let mut pol = quickswap::policy::build(&policy, &wl)?;
+        let mut rng = quickswap::util::rng::Rng::new(seed);
+        quickswap::sim::Engine::new(&wl, cfg).run(&mut src, pol.as_mut(), &mut rng)
+    } else {
+        quickswap::sim::run_policy(&wl, &policy, &cfg, seed)?
+    };
     println!("{}", r.summary());
     for (c, cl) in wl.classes.iter().enumerate() {
         println!(
@@ -178,6 +211,14 @@ fn sweep_spec_from(args: &Args) -> anyhow::Result<SweepSpec> {
         .get("baseline")
         .map(|b| quickswap::policy::PolicyId::parse(b))
         .transpose()?;
+    // `--trace file.qst --shards N`: replay a recorded trace instead of
+    // synthetic arrivals; the shard axis replaces the replication axis.
+    if let Some(path) = args.get("trace") {
+        spec.trace = Some(TraceShards {
+            path: path.to_string(),
+            shards: args.u32_or("shards", 1)?.max(1),
+        });
+    }
     if spec.paired {
         spec.paired_grid()?;
     }
@@ -644,12 +685,106 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_trace(args: &Args) -> anyhow::Result<()> {
+    // Bare `trace` keeps its historical meaning (generate).
+    match args.positional().first().map(|s| s.as_str()) {
+        None | Some("generate") => cmd_trace_generate(args),
+        Some("convert") => cmd_trace_convert(args),
+        Some("stats") => cmd_trace_stats(args),
+        Some(other) => anyhow::bail!("unknown trace subcommand '{other}' (generate|convert|stats)"),
+    }
+}
+
+/// `trace generate`: draw `--n` arrivals from the workload (honouring
+/// `--rate-curve`) and write them as CSV, or as `.qst` when `--out`
+/// ends in `.qst`.
+fn cmd_trace_generate(args: &Args) -> anyhow::Result<()> {
     let wl = workload_from(args)?;
     let n = args.u64_or("n", 100_000)? as usize;
     let seed = args.u64_or("seed", 1)?;
     let out = args.str_or("out", "results/trace.csv");
     let tr = Trace::generate(&wl, n, seed);
-    tr.write_csv(&out)?;
-    println!("wrote {n} arrivals to {out}");
+    if out.ends_with(".qst") {
+        let block = args.u64_or("block", qst::DEFAULT_BLOCK as u64)? as usize;
+        let footer = tr.write_qst(&out, wl.num_classes(), block)?;
+        println!(
+            "wrote {n} arrivals to {out} ({} blocks, t in [{:.3}, {:.3}])",
+            footer.blocks.len(),
+            footer.t_first,
+            footer.t_last
+        );
+    } else {
+        tr.write_csv(&out)?;
+        println!("wrote {n} arrivals to {out}");
+    }
+    Ok(())
+}
+
+/// `trace convert`: one-pass CSV → `.qst`. Class count comes from
+/// `--classes`, or from the `--workload` family when omitted.
+fn cmd_trace_convert(args: &Args) -> anyhow::Result<()> {
+    let input = args.required("in")?;
+    let out = args.str_or("out", "results/trace.qst");
+    let classes = match args.get("classes") {
+        Some(_) => args.u64_or("classes", 0)? as usize,
+        None => workload_from(args)?.num_classes(),
+    };
+    let block = args.u64_or("block", qst::DEFAULT_BLOCK as u64)? as usize;
+    let footer = qst::convert_csv(input, &out, classes, block)?;
+    println!(
+        "converted {} arrivals to {out} ({} blocks of <= {block})",
+        footer.total,
+        footer.blocks.len()
+    );
+    Ok(())
+}
+
+/// `trace stats`: everything printed here comes from the footer — the
+/// blocks themselves are never decoded, so this is O(footer) even on a
+/// multi-gigabyte trace.
+fn cmd_trace_stats(args: &Args) -> anyhow::Result<()> {
+    let path = match args.positional().get(1) {
+        Some(p) => p.clone(),
+        None => args.required("in")?.to_string(),
+    };
+    let reader = qst::QstReader::open(&path)?;
+    let f = reader.footer();
+    let span = f.t_last - f.t_first;
+    println!("{path}: {} arrivals, {} classes, {} blocks", f.total, f.num_classes, f.blocks.len());
+    println!("  time span: [{:.4}, {:.4}] ({span:.4})", f.t_first, f.t_last);
+    for (c, &n) in f.class_counts.iter().enumerate() {
+        let frac = if f.total > 0 { n as f64 / f.total as f64 } else { 0.0 };
+        println!("  class {c:>3}: {n:>12} arrivals ({:>6.2}%)", 100.0 * frac);
+    }
+    // Empirical λ(t): bucket the span and attribute each block's count
+    // to buckets in proportion to its [t_min, t_max] overlap.
+    let buckets = args.u64_or("buckets", 10)? as usize;
+    if span > 0.0 && f.total > 0 && buckets > 0 {
+        let mut mass = vec![0.0f64; buckets];
+        let width = span / buckets as f64;
+        for b in &f.blocks {
+            let (lo, hi) = (b.t_min, b.t_max.max(b.t_min));
+            let dur = hi - lo;
+            for (i, m) in mass.iter_mut().enumerate() {
+                let (w0, w1) = (f.t_first + i as f64 * width, f.t_first + (i + 1) as f64 * width);
+                let overlap = (hi.min(w1) - lo.max(w0)).max(0.0);
+                // A block narrower than the resolution lands whole in
+                // the bucket holding its midpoint.
+                if dur > 0.0 {
+                    *m += b.n as f64 * overlap / dur;
+                } else if (lo + hi) / 2.0 >= w0 && ((lo + hi) / 2.0 < w1 || i + 1 == buckets) {
+                    *m += b.n as f64;
+                }
+            }
+        }
+        println!("  empirical lambda(t), {buckets} buckets of {width:.4}:");
+        for (i, m) in mass.iter().enumerate() {
+            println!(
+                "    [{:>10.3}, {:>10.3}): lambda = {:>9.4}",
+                f.t_first + i as f64 * width,
+                f.t_first + (i + 1) as f64 * width,
+                m / width
+            );
+        }
+    }
     Ok(())
 }

@@ -9,10 +9,15 @@
 //! Hot-path design (see sim/schedule.rs, sim/events.rs, sim/ladder.rs
 //! and sim/job.rs):
 //!
-//! * arrivals never enter the event heap: a pending-arrival cursor is
-//!   merged against the heap head each iteration, and batched sources
+//! * arrivals never enter the event heap: the engine holds a small
+//!   chunk of upcoming arrivals (refilled through
+//!   [`ArrivalSource::fill_arrivals`] — one virtual call per chunk, not
+//!   per arrival) whose head is merged against the heap head each
+//!   iteration; batched sources
 //!   ([`SyntheticSource`](crate::workload::SyntheticSource)) pre-generate
-//!   interarrivals per class in chunks;
+//!   interarrivals per class in chunks, and block sources
+//!   ([`StreamingTraceSource`](crate::workload::trace::StreamingTraceSource))
+//!   copy straight from decoded columns;
 //! * policies are notified of per-event state deltas (`on_arrival` /
 //!   `on_departure` / `on_swap_epoch`) and consult incrementally — see
 //!   the consult-cache protocol in [`crate::policy`];
@@ -35,6 +40,11 @@ use crate::sim::schedule::{EventScheduleKind, Schedule};
 use crate::sim::timeseries::{Timeseries, TimeseriesSpec};
 use crate::util::rng::Rng;
 use crate::workload::{Arrival, ArrivalSource, ResourceVec, Workload};
+
+/// Arrivals buffered per [`ArrivalSource::fill_arrivals`] refill. Small
+/// enough to stay cache-hot, large enough to amortize the dyn dispatch
+/// (and, for trace replay, the per-block bookkeeping) to noise.
+const ENGINE_ARRIVAL_CHUNK: usize = 64;
 
 #[derive(Clone, Debug)]
 pub struct SimConfig {
@@ -123,7 +133,12 @@ pub struct Engine {
 
     events: Schedule,
     timer_seq: u64,
-    pending_arrival: Option<Arrival>,
+    /// Upcoming arrivals, refilled in chunks of [`ENGINE_ARRIVAL_CHUNK`]
+    /// from the source; `arrivals[arrivals_pos]` is the pending cursor.
+    arrivals: Vec<Arrival>,
+    arrivals_pos: usize,
+    /// The source returned a short (or empty) chunk: no refills left.
+    src_done: bool,
 
     metrics: Metrics,
     phases: PhaseStats,
@@ -162,7 +177,9 @@ impl Engine {
             used_vec: ResourceVec::zero(wl.dims()),
             events: Schedule::new(schedule),
             timer_seq: 0,
-            pending_arrival: None,
+            arrivals: Vec::with_capacity(ENGINE_ARRIVAL_CHUNK),
+            arrivals_pos: 0,
+            src_done: false,
             phases: PhaseStats::new(),
             ts,
             events_processed: 0,
@@ -193,7 +210,9 @@ impl Engine {
         self.used_vec = ResourceVec::zero(self.capacity.dims());
         self.events.clear();
         self.timer_seq = 0;
-        self.pending_arrival = None;
+        self.arrivals.clear();
+        self.arrivals_pos = 0;
+        self.src_done = false;
         self.metrics.reset_full();
         self.phases = PhaseStats::new();
         if let Some(spec) = self.cfg.timeseries.as_ref() {
@@ -235,13 +254,35 @@ impl Engine {
         }
     }
 
+    /// Refill the arrival chunk from the source. One virtual call per
+    /// [`ENGINE_ARRIVAL_CHUNK`] arrivals; identical draw order to
+    /// one-at-a-time pulls because `fill_arrivals` consumes the RNG
+    /// exactly as repeated `next_arrival` would.
+    #[inline]
+    fn refill_arrivals(&mut self, src: &mut dyn ArrivalSource, rng: &mut Rng) {
+        self.arrivals.clear();
+        self.arrivals_pos = 0;
+        let n = src.fill_arrivals(rng, &mut self.arrivals, ENGINE_ARRIVAL_CHUNK);
+        if n < ENGINE_ARRIVAL_CHUNK {
+            self.src_done = true;
+        }
+    }
+
+    /// True once the source is exhausted and every buffered arrival has
+    /// been consumed (finite traces; a live synthetic source never is).
+    #[inline]
+    fn arrivals_exhausted(&self) -> bool {
+        self.src_done && self.arrivals_pos == self.arrivals.len()
+    }
+
     /// Run to completion; returns the aggregated result.
     ///
-    /// Arrivals bypass the event heap entirely: the next pending arrival
-    /// lives in a cursor merged against [`EventQueue::peek_t`] each
-    /// iteration (arrivals win exact-time ties — deterministic, and
-    /// measure-zero under continuous interarrivals), so the heap holds
-    /// only departures and policy timers.
+    /// Arrivals bypass the event heap entirely: the engine buffers a
+    /// chunk of upcoming arrivals and merges its head against
+    /// [`EventQueue::peek_t`] each iteration (arrivals win exact-time
+    /// ties — deterministic, and measure-zero under continuous
+    /// interarrivals), so the heap holds only departures and policy
+    /// timers and the source's virtual dispatch is paid once per chunk.
     pub fn run(
         &mut self,
         src: &mut dyn ArrivalSource,
@@ -259,21 +300,24 @@ impl Engine {
                 .unwrap_or_else(crate::policy::consult_cache_enabled),
         );
 
-        // Prime the arrival cursor.
-        self.pending_arrival = src.next_arrival(rng);
+        // Prime the arrival buffer.
+        self.src_done = false;
+        self.refill_arrivals(src, rng);
 
         let mut decision = Decision::default();
         loop {
             // `peek_t` is `&mut`: the ladder schedule refills its sorted
             // bottom tier lazily (a no-op for the heap).
             let heap_t = self.events.peek_t();
-            let take_arrival = match (&self.pending_arrival, heap_t) {
-                (Some(a), Some(ht)) => a.t <= ht,
+            let pending_t = self.arrivals.get(self.arrivals_pos).map(|a| a.t);
+            let take_arrival = match (pending_t, heap_t) {
+                (Some(at), Some(ht)) => at <= ht,
                 (Some(_), None) => true,
                 (None, _) => false,
             };
             if take_arrival {
-                let a = self.pending_arrival.take().expect("checked above");
+                let a = self.arrivals[self.arrivals_pos];
+                self.arrivals_pos += 1;
                 debug_assert!(a.t >= self.now - 1e-9);
                 if let Some(ts) = self.ts.as_mut() {
                     ts.advance(a.t, &self.n_by_class);
@@ -286,7 +330,9 @@ impl Engine {
                 let class = a.class;
                 self.apply_arrival(a);
                 policy.on_arrival(class, self.needs[class]);
-                self.pending_arrival = src.next_arrival(rng);
+                if self.arrivals_pos == self.arrivals.len() && !self.src_done {
+                    self.refill_arrivals(src, rng);
+                }
             } else {
                 let Some(ev) = self.events.pop() else {
                     break; // arrival stream exhausted and heap empty
@@ -315,6 +361,14 @@ impl Engine {
                     EventKind::PolicyTimer { seq } => {
                         if seq != self.timer_seq {
                             continue; // superseded timer
+                        }
+                        // A finite source has drained and no jobs remain:
+                        // a recurring policy timer (MSR's swap clock)
+                        // would otherwise spin virtual time forever.
+                        if self.arrivals_exhausted()
+                            && self.n_by_class.iter().all(|&n| n == 0)
+                        {
+                            break;
                         }
                         policy.on_timer(self.now);
                     }

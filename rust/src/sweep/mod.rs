@@ -64,7 +64,7 @@ pub use worker::{
 
 use crate::experiments::{
     sweep_paired_units, sweep_units, LocalThreads, PairedGrid, PairedRun, PairedSweep, Point,
-    SweepGrid, UnitRun,
+    SweepGrid, TraceShards, UnitRun,
 };
 use crate::policy::PolicyId;
 use crate::sim::SimConfig;
@@ -165,6 +165,13 @@ pub struct SweepSpec {
     /// Baseline policy for paired Δs (must be one of `policies`; None
     /// defaults to the first policy). Ignored unless `paired`.
     pub baseline: Option<PolicyId>,
+    /// Trace-replay mode: every unit replays one block-aligned shard of
+    /// this `.qst` trace instead of sampling a synthetic source. The
+    /// shard count takes over the replication axis (`replications` is
+    /// ignored), each shard runs to stream exhaustion with the spec's
+    /// warm-up discarded per shard, and the trace file must be readable
+    /// at this path on every worker.
+    pub trace: Option<TraceShards>,
 }
 
 impl SweepSpec {
@@ -189,6 +196,7 @@ impl SweepSpec {
             replications: replications.max(1),
             paired: false,
             baseline: None,
+            trace: None,
         }
     }
 
@@ -202,15 +210,28 @@ impl SweepSpec {
         }
     }
 
-    /// The spec's (point, replication) unit grid.
+    /// The spec's (point, replication) unit grid. In trace mode the
+    /// replication axis becomes the shard axis: `reps = shards`, every
+    /// shard runs to stream exhaustion (the completion target is
+    /// effectively unbounded — the engine stops when the finite source
+    /// drains), and the spec's warm-up is discarded per shard.
     pub fn grid(&self) -> SweepGrid {
-        SweepGrid::new(
+        let mut grid = SweepGrid::new(
             &self.lambdas,
             &self.policies,
             &self.config(),
             self.seed,
-            self.replications,
-        )
+            match &self.trace {
+                Some(tr) => tr.shards.max(1),
+                None => self.replications,
+            },
+        );
+        if let Some(tr) = &self.trace {
+            grid.rep_cfg.target_completions = u64::MAX / 2;
+            grid.rep_cfg.warmup_completions = self.warmup_completions;
+            grid.trace = Some(tr.clone());
+        }
+        grid
     }
 
     /// The spec's paired (λ, replication) unit grid, or None when the
@@ -219,6 +240,14 @@ impl SweepSpec {
     pub fn paired_grid(&self) -> anyhow::Result<Option<PairedGrid>> {
         if !self.paired {
             return Ok(None);
+        }
+        if self.trace.is_some() {
+            // CRN pairing shares one *sampled* stream across policies; a
+            // trace is already a fixed stream, so every policy replays
+            // it anyway and the paired machinery has nothing to pair.
+            anyhow::bail!(
+                "--paired and --trace are mutually exclusive (a trace is already a common stream)"
+            );
         }
         let baseline = match self.baseline {
             None => 0,
@@ -271,6 +300,16 @@ impl SweepSpec {
             if let Some(b) = self.baseline {
                 v = v.set("baseline", b.to_string());
             }
+        }
+        // Likewise additive: only trace sweeps carry the trace object,
+        // so synthetic specs stay byte-identical on the wire.
+        if let Some(tr) = &self.trace {
+            v = v.set(
+                "trace",
+                Value::obj()
+                    .set("path", tr.path.as_str())
+                    .set("shards", tr.shards),
+            );
         }
         v
     }
@@ -325,6 +364,23 @@ impl SweepSpec {
                 .get("baseline")
                 .and_then(|b| b.as_str())
                 .map(PolicyId::parse)
+                .transpose()?,
+            trace: v
+                .get("trace")
+                .map(|t| -> anyhow::Result<TraceShards> {
+                    Ok(TraceShards {
+                        path: t
+                            .get("path")
+                            .and_then(|p| p.as_str())
+                            .ok_or_else(|| anyhow::anyhow!("trace spec missing 'path'"))?
+                            .to_string(),
+                        shards: t
+                            .get("shards")
+                            .and_then(|s| s.as_u64())
+                            .ok_or_else(|| anyhow::anyhow!("trace spec missing 'shards'"))?
+                            as u32,
+                    })
+                })
                 .transpose()?,
         })
     }
@@ -461,6 +517,7 @@ mod tests {
             replications: 3,
             paired: false,
             baseline: None,
+            trace: None,
         };
         let wire = spec.to_json().to_string();
         let back = SweepSpec::from_json(&Value::parse(&wire).unwrap()).unwrap();
@@ -474,8 +531,10 @@ mod tests {
         assert!(!back.paired);
         assert!(back.baseline.is_none());
         // An unpaired spec's wire form carries no paired fields at all
-        // (wire compatibility with pre-paired builds).
+        // (wire compatibility with pre-paired builds), and a traceless
+        // spec carries no trace object (pre-trace builds).
         assert!(!wire.contains("paired") && !wire.contains("baseline"));
+        assert!(!wire.contains("trace"));
         // λ values round-trip bit-exactly (shortest-round-trip Display).
         for (a, b) in spec.lambdas.iter().zip(&back.lambdas) {
             assert_eq!(a.to_bits(), b.to_bits());
@@ -503,6 +562,7 @@ mod tests {
             replications: 3,
             paired: true,
             baseline: Some(PolicyId::Msfq(Some(7))),
+            trace: None,
         };
         let wire = spec.to_json().to_string();
         let back = SweepSpec::from_json(&Value::parse(&wire).unwrap()).unwrap();
@@ -542,6 +602,7 @@ mod tests {
             replications: 3,
             paired,
             baseline: None,
+            trace: None,
         };
         // Spec 0 (marginal): 2λ × 2 policies × 3 reps = 12 units.
         // Spec 1 (paired): 1λ × 3 reps = 3 units (all policies per unit).

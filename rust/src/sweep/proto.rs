@@ -285,6 +285,7 @@ mod tests {
             replications: 2,
             paired: false,
             baseline: None,
+            trace: None,
         }
     }
 

@@ -20,15 +20,24 @@ pub struct Args {
     positional: Vec<String>,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum CliError {
-    #[error("missing required option --{0}")]
     Missing(&'static str),
-    #[error("invalid value for --{0}: {1}")]
     Invalid(&'static str, String),
-    #[error("{0}")]
     Usage(String),
 }
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::Missing(name) => write!(f, "missing required option --{name}"),
+            CliError::Invalid(name, v) => write!(f, "invalid value for --{name}: {v}"),
+            CliError::Usage(msg) => write!(f, "{msg}"),
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
 
 impl Args {
     /// Parse a raw argv tail (after the subcommand name).

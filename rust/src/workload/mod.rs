@@ -1,11 +1,14 @@
 //! Workload specification and arrival sources.
 
 pub mod borg;
+pub mod qst;
+pub mod rate;
 pub mod resources;
 pub mod trace;
 
 use crate::dist::Dist;
 use crate::util::rng::Rng;
+pub use rate::{RateCurve, RateWarp};
 pub use resources::{ResourceVec, MAX_RESOURCES};
 
 /// One job class: all class members demand the same `demand` resource
@@ -61,6 +64,10 @@ pub struct Workload {
     pub k: u32,
     pub capacity: ResourceVec,
     pub classes: Vec<ClassSpec>,
+    /// Shared time-varying modulation of every class's arrival rate
+    /// ([`RateCurve::Constant`] = the homogeneous model, bit-identical
+    /// to the pre-curve source).
+    pub rate_curve: RateCurve,
 }
 
 impl Workload {
@@ -91,7 +98,18 @@ impl Workload {
             k,
             capacity,
             classes,
+            rate_curve: RateCurve::Constant,
         }
+    }
+
+    /// The same workload with its arrival rates modulated by `curve`
+    /// (validated; see [`rate::parse_rate_curve`] for the CLI grammar).
+    pub fn with_rate_curve(mut self, curve: RateCurve) -> Workload {
+        curve
+            .validate()
+            .unwrap_or_else(|e| panic!("invalid rate curve: {e}"));
+        self.rate_curve = curve;
+        self
     }
 
     /// The paper's one-or-all workload: class-1 ("light") and class-k
@@ -265,6 +283,27 @@ pub trait ArrivalSource {
     /// The next arrival at or after the previous one, or None when the
     /// stream is exhausted (finite traces).
     fn next_arrival(&mut self, rng: &mut Rng) -> Option<Arrival>;
+
+    /// Append up to `max` arrivals to `out`, returning how many were
+    /// appended (0 = exhausted). The engine refills its heap-external
+    /// arrival buffer through this, amortizing the virtual dispatch to
+    /// one call per chunk. The default delegates to
+    /// [`next_arrival`](ArrivalSource::next_arrival) in order, drawing
+    /// from `rng` identically — so any source is bit-identical whether
+    /// the engine pulls arrivals one at a time or in chunks. Block
+    /// sources ([`trace::StreamingTraceSource`]) override it with a
+    /// straight columnar copy.
+    fn fill_arrivals(&mut self, rng: &mut Rng, out: &mut Vec<Arrival>, max: usize) -> usize {
+        let start = out.len();
+        while out.len() - start < max {
+            match self.next_arrival(rng) {
+                Some(a) => out.push(a),
+                None => break,
+            }
+        }
+        out.len() - start
+    }
+
     fn workload(&self) -> &Workload;
 }
 
@@ -303,6 +342,13 @@ pub struct SyntheticSource {
     /// Per-class read position into the chunk buffers.
     pos: Vec<usize>,
     primed: bool,
+    /// Time warp realizing the workload's [`RateCurve`] (None for
+    /// `Constant`: the hot path carries no curve code at all). The
+    /// per-class cursors stay in homogeneous *virtual* time; only the
+    /// emitted timestamp is warped through `G⁻¹`, which is strictly
+    /// increasing — so the argmin merge order, the RNG stream layout,
+    /// and the constant-curve output are all exactly as before.
+    warp: Option<RateWarp>,
 }
 
 impl SyntheticSource {
@@ -316,6 +362,7 @@ impl SyntheticSource {
             sizes: (0..nc).map(|_| Vec::new()).collect(),
             pos: vec![0; nc],
             primed: false,
+            warp: RateWarp::new(&wl.rate_curve),
             wl,
         }
     }
@@ -370,11 +417,11 @@ impl ArrivalSource for SyntheticSource {
         let (gap, next_size) = self.take(class, rng);
         self.next_t[class] = best + gap;
         self.next_size[class] = next_size;
-        Some(Arrival {
-            t: best,
-            class,
-            size,
-        })
+        let t = match self.warp.as_mut() {
+            Some(w) => w.warp(best),
+            None => best,
+        };
+        Some(Arrival { t, class, size })
     }
 
     fn workload(&self) -> &Workload {
@@ -538,6 +585,61 @@ mod tests {
         let rate = n as f64 / last;
         assert!((rate - 4.0).abs() < 0.05, "rate={rate}");
         assert!((counts[0] as f64 / n as f64 - 0.5).abs() < 0.01);
+    }
+
+    /// An explicit `Constant` curve must leave the source bit-identical
+    /// to one that never heard of rate curves (no warp installed).
+    #[test]
+    fn constant_rate_curve_is_bit_identical() {
+        let wl = Workload::one_or_all(8, 4.0, 0.5, 1.0, 1.0);
+        let wl2 = wl.clone().with_rate_curve(RateCurve::Constant);
+        let mut a = SyntheticSource::new(wl);
+        let mut b = SyntheticSource::new(wl2);
+        let (mut ra, mut rb) = (Rng::new(5), Rng::new(5));
+        for _ in 0..10_000 {
+            let x = a.next_arrival(&mut ra).unwrap();
+            let y = b.next_arrival(&mut rb).unwrap();
+            assert_eq!(x.t.to_bits(), y.t.to_bits());
+            assert_eq!(x.class, y.class);
+            assert_eq!(x.size.to_bits(), y.size.to_bits());
+        }
+    }
+
+    /// A warped source stays monotone, preserves the class mix, and
+    /// concentrates arrivals where the curve says the rate is high.
+    #[test]
+    fn diurnal_rate_curve_modulates_arrivals() {
+        let wl = Workload::one_or_all(8, 4.0, 0.5, 1.0, 1.0).with_rate_curve(RateCurve::Diurnal {
+            period: 50.0,
+            amp: 0.9,
+            phase: 0.0,
+        });
+        let curve = wl.rate_curve.clone();
+        let mut src = SyntheticSource::new(wl);
+        let mut rng = Rng::new(2);
+        let mut last = 0.0;
+        let mut arrivals = Vec::new();
+        for _ in 0..200_000 {
+            let a = src.next_arrival(&mut rng).unwrap();
+            assert!(a.t >= last, "warped times must stay nondecreasing");
+            last = a.t;
+            arrivals.push(a.t);
+        }
+        // Count arrivals in the first high-rate half-period vs the
+        // following low-rate half-period: the ratio estimates
+        // ∫f(high)/∫f(low) = (25+45/π)/(25−45/π) ≈ 3.7.
+        let hi = arrivals.iter().filter(|&&t| t < 25.0).count() as f64;
+        let lo = arrivals
+            .iter()
+            .filter(|&&t| (25.0..50.0).contains(&t))
+            .count() as f64;
+        assert!(hi / lo > 3.0, "hi={hi} lo={lo}");
+        // The warp inverts the curve's cumulative: G(t_i) must be close
+        // to the homogeneous virtual times (rate-4 Poisson ⇒ the n-th
+        // virtual arrival sits near n/4).
+        let n = arrivals.len() as f64;
+        let g_last = curve.cumulative(last);
+        assert!((g_last - n / 4.0).abs() / (n / 4.0) < 0.05, "G(last)={g_last}");
     }
 
     #[test]

@@ -1,0 +1,774 @@
+//! `.qst` — the streaming columnar trace format.
+//!
+//! A trace is a sequence of independently decodable **blocks**, each
+//! holding up to `block_size` arrivals in columnar layout:
+//!
+//! ```text
+//! header   "QSTRACE1" | u32 version=1 | u32 num_classes
+//! block    payload | u32 crc32(payload)
+//!   payload: u32 n
+//!          | u64 first-arrival time bits (absolute)
+//!          | (n-1) × LEB128 varint deltas of successive time bit patterns
+//!          | n × u16 class id
+//!          | n × u64 size bits
+//! footer   u32 n_blocks
+//!          | per block: u64 offset, u32 payload_len, u32 n,
+//!                       u64 t_min bits, u64 t_max bits
+//!          | u32 num_classes | per class: u64 count
+//!          | u64 total | u64 t_first bits | u64 t_last bits
+//! tail     u64 footer_len | u32 crc32(footer) | "QSTEND01"
+//! ```
+//!
+//! All integers little-endian. Arrival times are nonnegative and
+//! nondecreasing, so their IEEE-754 bit patterns are nondecreasing `u64`s
+//! and successive deltas are nonnegative — delta-encoding the *bit
+//! patterns* (not the float values) keeps the format lossless and the
+//! replay bit-identical to the CSV path. Each block stores its first
+//! time absolutely, so any block decodes without its predecessors —
+//! that independence is what lets the sweep layer hand out block-aligned
+//! trace *shards* as units. The footer (reachable from the 20-byte tail
+//! without scanning the blocks) carries per-block time bounds and
+//! per-class counts, so `trace stats` and shard planning never touch
+//! block payloads. Block payloads and the footer are CRC-32 protected
+//! ([`crate::util::crc::crc32`]); torn or corrupted files hard-error at
+//! open, never silently replay garbage.
+
+use crate::util::crc::crc32;
+use crate::workload::trace::TraceError;
+use std::fs::File;
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+pub const MAGIC: &[u8; 8] = b"QSTRACE1";
+pub const TAIL_MAGIC: &[u8; 8] = b"QSTEND01";
+pub const VERSION: u32 = 1;
+/// Default arrivals per block: large enough to amortize per-block
+/// decode/CRC cost, small enough that a block's decoded columns stay in
+/// cache (~4096 × 18 B ≈ 72 KiB).
+pub const DEFAULT_BLOCK: usize = 4096;
+
+/// Read-only view of a file's bytes: mmap'd on unix (the kernel pages
+/// blocks in on demand — a multi-GiB trace never needs a resident
+/// copy), a plain read-to-Vec everywhere else.
+pub struct FileBytes {
+    #[cfg(unix)]
+    map: Option<(*const u8, usize)>,
+    buf: Vec<u8>,
+}
+
+#[cfg(unix)]
+extern "C" {
+    fn mmap(
+        addr: *mut core::ffi::c_void,
+        len: usize,
+        prot: i32,
+        flags: i32,
+        fd: i32,
+        offset: i64,
+    ) -> *mut core::ffi::c_void;
+    fn munmap(addr: *mut core::ffi::c_void, len: usize) -> i32;
+}
+
+// The mapping is PROT_READ/MAP_PRIVATE and never mutated.
+unsafe impl Send for FileBytes {}
+unsafe impl Sync for FileBytes {}
+
+impl FileBytes {
+    pub fn open(path: impl AsRef<Path>) -> std::io::Result<FileBytes> {
+        let mut f = File::open(path)?;
+        let len = f.metadata()?.len() as usize;
+        #[cfg(unix)]
+        {
+            if len > 0 {
+                use std::os::unix::io::AsRawFd;
+                const PROT_READ: i32 = 1;
+                const MAP_PRIVATE: i32 = 2;
+                let ptr = unsafe {
+                    mmap(
+                        std::ptr::null_mut(),
+                        len,
+                        PROT_READ,
+                        MAP_PRIVATE,
+                        f.as_raw_fd(),
+                        0,
+                    )
+                };
+                if ptr as isize != -1 && !ptr.is_null() {
+                    return Ok(FileBytes {
+                        map: Some((ptr as *const u8, len)),
+                        buf: Vec::new(),
+                    });
+                }
+                // mmap refused (exotic fs, resource limits): fall through
+                // to the read path.
+            }
+        }
+        let mut buf = Vec::with_capacity(len);
+        f.read_to_end(&mut buf)?;
+        Ok(FileBytes {
+            #[cfg(unix)]
+            map: None,
+            buf,
+        })
+    }
+
+    pub fn bytes(&self) -> &[u8] {
+        #[cfg(unix)]
+        if let Some((ptr, len)) = self.map {
+            return unsafe { std::slice::from_raw_parts(ptr, len) };
+        }
+        &self.buf
+    }
+}
+
+impl Drop for FileBytes {
+    fn drop(&mut self) {
+        #[cfg(unix)]
+        if let Some((ptr, len)) = self.map.take() {
+            unsafe {
+                munmap(ptr as *mut core::ffi::c_void, len);
+            }
+        }
+    }
+}
+
+/// Footer record for one block.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BlockMeta {
+    /// File offset of the payload's first byte.
+    pub offset: u64,
+    /// Payload length in bytes (CRC excluded).
+    pub len: u32,
+    /// Arrivals in the block.
+    pub n: u32,
+    pub t_min: f64,
+    pub t_max: f64,
+}
+
+/// The trace-wide index parsed from the footer — everything `trace
+/// stats` and shard planning need without touching block payloads.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Footer {
+    pub num_classes: u32,
+    pub blocks: Vec<BlockMeta>,
+    pub class_counts: Vec<u64>,
+    pub total: u64,
+    pub t_first: f64,
+    pub t_last: f64,
+}
+
+fn push_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn push_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn push_varint(out: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let b = (v & 0x7f) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(b);
+            break;
+        }
+        out.push(b | 0x80);
+    }
+}
+
+/// Bounds-checked little-endian reads over a byte slice.
+struct Cursor<'a> {
+    b: &'a [u8],
+    pos: usize,
+    block: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(b: &'a [u8], block: usize) -> Cursor<'a> {
+        Cursor { b, pos: 0, block }
+    }
+
+    fn err(&self, msg: &'static str) -> TraceError {
+        TraceError::Corrupt {
+            block: self.block,
+            msg,
+        }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], TraceError> {
+        if self.pos + n > self.b.len() {
+            return Err(self.err("truncated record"));
+        }
+        let s = &self.b[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32, TraceError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u16(&mut self) -> Result<u16, TraceError> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, TraceError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn varint(&mut self) -> Result<u64, TraceError> {
+        let mut v = 0u64;
+        let mut shift = 0u32;
+        loop {
+            let &b = self
+                .b
+                .get(self.pos)
+                .ok_or_else(|| self.err("truncated varint"))?;
+            self.pos += 1;
+            if shift >= 64 || (shift == 63 && b > 1) {
+                return Err(self.err("varint overflows u64"));
+            }
+            v |= ((b & 0x7f) as u64) << shift;
+            if b & 0x80 == 0 {
+                return Ok(v);
+            }
+            shift += 7;
+        }
+    }
+}
+
+/// One-pass `.qst` writer: arrivals are validated as they are pushed
+/// (finiteness, monotone times, class range — the row number in every
+/// error is the 0-based arrival index), buffered per block, and flushed
+/// columnar with a CRC. `finish` writes the footer and returns it.
+pub struct QstWriter<W: Write> {
+    out: W,
+    num_classes: u32,
+    block_size: usize,
+    // Pending block columns.
+    times: Vec<u64>,
+    classes: Vec<u16>,
+    sizes: Vec<u64>,
+    t_min: f64,
+    t_max: f64,
+    // Running file state.
+    offset: u64,
+    blocks: Vec<BlockMeta>,
+    class_counts: Vec<u64>,
+    total: u64,
+    last_t: f64,
+    t_first: f64,
+    t_last: f64,
+    scratch: Vec<u8>,
+}
+
+impl QstWriter<BufWriter<File>> {
+    pub fn create(
+        path: impl AsRef<Path>,
+        num_classes: usize,
+        block_size: usize,
+    ) -> Result<QstWriter<BufWriter<File>>, TraceError> {
+        QstWriter::new(BufWriter::new(File::create(path)?), num_classes, block_size)
+    }
+}
+
+impl<W: Write> QstWriter<W> {
+    pub fn new(
+        mut out: W,
+        num_classes: usize,
+        block_size: usize,
+    ) -> Result<QstWriter<W>, TraceError> {
+        if num_classes == 0 || num_classes > u16::MAX as usize {
+            return Err(TraceError::Format(format!(
+                "qst supports 1..={} classes, got {num_classes}",
+                u16::MAX
+            )));
+        }
+        if block_size == 0 {
+            return Err(TraceError::Format("block size must be >= 1".into()));
+        }
+        out.write_all(MAGIC)?;
+        out.write_all(&VERSION.to_le_bytes())?;
+        out.write_all(&(num_classes as u32).to_le_bytes())?;
+        Ok(QstWriter {
+            out,
+            num_classes: num_classes as u32,
+            block_size,
+            times: Vec::with_capacity(block_size),
+            classes: Vec::with_capacity(block_size),
+            sizes: Vec::with_capacity(block_size),
+            t_min: f64::INFINITY,
+            t_max: f64::NEG_INFINITY,
+            offset: (MAGIC.len() + 8) as u64,
+            blocks: Vec::new(),
+            class_counts: vec![0; num_classes],
+            total: 0,
+            last_t: f64::NEG_INFINITY,
+            t_first: 0.0,
+            t_last: 0.0,
+            scratch: Vec::new(),
+        })
+    }
+
+    /// Append one arrival. `row` in errors is the 0-based index of the
+    /// offending arrival in the stream pushed so far.
+    pub fn push(&mut self, t: f64, class: usize, size: f64) -> Result<(), TraceError> {
+        let row = self.total as usize;
+        if !t.is_finite() {
+            return Err(TraceError::NonFinite { row, field: "t" });
+        }
+        if !size.is_finite() {
+            return Err(TraceError::NonFinite { row, field: "size" });
+        }
+        if t < 0.0 {
+            return Err(TraceError::NegativeTime { row });
+        }
+        if size < 0.0 {
+            return Err(TraceError::NegativeSize { row });
+        }
+        if self.total > 0 && t < self.last_t {
+            return Err(TraceError::NonMonotonic {
+                row,
+                t,
+                last_t: self.last_t,
+            });
+        }
+        if class >= self.num_classes as usize {
+            return Err(TraceError::ClassOutOfRange {
+                row,
+                class,
+                num_classes: self.num_classes as usize,
+            });
+        }
+        if self.total == 0 {
+            self.t_first = t;
+        }
+        self.last_t = t;
+        self.t_last = t;
+        self.t_min = self.t_min.min(t);
+        self.t_max = self.t_max.max(t);
+        self.times.push(t.to_bits());
+        self.classes.push(class as u16);
+        self.sizes.push(size.to_bits());
+        self.class_counts[class] += 1;
+        self.total += 1;
+        if self.times.len() == self.block_size {
+            self.flush_block()?;
+        }
+        Ok(())
+    }
+
+    fn flush_block(&mut self) -> Result<(), TraceError> {
+        let n = self.times.len();
+        if n == 0 {
+            return Ok(());
+        }
+        let payload = &mut self.scratch;
+        payload.clear();
+        push_u32(payload, n as u32);
+        push_u64(payload, self.times[0]);
+        for i in 1..n {
+            // Nondecreasing nonnegative times have nondecreasing bit
+            // patterns, so the delta is a nonnegative u64.
+            push_varint(payload, self.times[i] - self.times[i - 1]);
+        }
+        for &c in &self.classes {
+            payload.extend_from_slice(&c.to_le_bytes());
+        }
+        for &s in &self.sizes {
+            push_u64(payload, s);
+        }
+        let crc = crc32(payload);
+        self.out.write_all(payload)?;
+        self.out.write_all(&crc.to_le_bytes())?;
+        self.blocks.push(BlockMeta {
+            offset: self.offset,
+            len: payload.len() as u32,
+            n: n as u32,
+            t_min: self.t_min,
+            t_max: self.t_max,
+        });
+        self.offset += payload.len() as u64 + 4;
+        self.times.clear();
+        self.classes.clear();
+        self.sizes.clear();
+        self.t_min = f64::INFINITY;
+        self.t_max = f64::NEG_INFINITY;
+        Ok(())
+    }
+
+    /// Flush the tail block, write the footer, and return the index.
+    pub fn finish(mut self) -> Result<Footer, TraceError> {
+        self.flush_block()?;
+        let mut footer = Vec::new();
+        push_u32(&mut footer, self.blocks.len() as u32);
+        for b in &self.blocks {
+            push_u64(&mut footer, b.offset);
+            push_u32(&mut footer, b.len);
+            push_u32(&mut footer, b.n);
+            push_u64(&mut footer, b.t_min.to_bits());
+            push_u64(&mut footer, b.t_max.to_bits());
+        }
+        push_u32(&mut footer, self.num_classes);
+        for &c in &self.class_counts {
+            push_u64(&mut footer, c);
+        }
+        push_u64(&mut footer, self.total);
+        push_u64(&mut footer, self.t_first.to_bits());
+        push_u64(&mut footer, self.t_last.to_bits());
+        let crc = crc32(&footer);
+        self.out.write_all(&footer)?;
+        self.out.write_all(&(footer.len() as u64).to_le_bytes())?;
+        self.out.write_all(&crc.to_le_bytes())?;
+        self.out.write_all(TAIL_MAGIC)?;
+        self.out.flush()?;
+        Ok(Footer {
+            num_classes: self.num_classes,
+            blocks: self.blocks,
+            class_counts: self.class_counts,
+            total: self.total,
+            t_first: self.t_first,
+            t_last: self.t_last,
+        })
+    }
+}
+
+/// Random-access `.qst` reader over an mmap'd (or read) file. `open`
+/// verifies the tail magic, footer CRC, and every block's CRC and
+/// structural bounds up front — a torn or bit-flipped file fails here,
+/// before any replay starts — but decodes block payloads only on demand
+/// via [`decode_block`](QstReader::decode_block).
+pub struct QstReader {
+    bytes: FileBytes,
+    footer: Footer,
+}
+
+impl QstReader {
+    pub fn open(path: impl AsRef<Path>) -> Result<QstReader, TraceError> {
+        let bytes = FileBytes::open(path)?;
+        let b = bytes.bytes();
+        let head = MAGIC.len() + 8;
+        let tail = 20; // u64 footer_len + u32 crc + 8-byte magic
+        if b.len() < head + tail || &b[..MAGIC.len()] != MAGIC {
+            return Err(TraceError::BadHeader);
+        }
+        let version = u32::from_le_bytes(b[8..12].try_into().unwrap());
+        if version != VERSION {
+            return Err(TraceError::Format(format!(
+                "unsupported qst version {version} (expected {VERSION})"
+            )));
+        }
+        let head_classes = u32::from_le_bytes(b[12..16].try_into().unwrap());
+        if &b[b.len() - 8..] != TAIL_MAGIC {
+            return Err(TraceError::Format(
+                "missing qst tail magic (truncated file?)".into(),
+            ));
+        }
+        let fl_at = b.len() - tail;
+        let footer_len = u64::from_le_bytes(b[fl_at..fl_at + 8].try_into().unwrap()) as usize;
+        let footer_crc = u32::from_le_bytes(b[fl_at + 8..fl_at + 12].try_into().unwrap());
+        if footer_len > fl_at - head {
+            return Err(TraceError::Format("qst footer overruns the file".into()));
+        }
+        let footer_bytes = &b[fl_at - footer_len..fl_at];
+        if crc32(footer_bytes) != footer_crc {
+            return Err(TraceError::Corrupt {
+                block: usize::MAX,
+                msg: "footer CRC mismatch",
+            });
+        }
+        let mut c = Cursor::new(footer_bytes, usize::MAX);
+        let n_blocks = c.u32()? as usize;
+        let mut blocks = Vec::with_capacity(n_blocks);
+        for _ in 0..n_blocks {
+            blocks.push(BlockMeta {
+                offset: c.u64()?,
+                len: c.u32()?,
+                n: c.u32()?,
+                t_min: f64::from_bits(c.u64()?),
+                t_max: f64::from_bits(c.u64()?),
+            });
+        }
+        let num_classes = c.u32()?;
+        if num_classes != head_classes {
+            return Err(TraceError::Format(format!(
+                "qst header says {head_classes} classes, footer says {num_classes}"
+            )));
+        }
+        let mut class_counts = Vec::with_capacity(num_classes as usize);
+        for _ in 0..num_classes {
+            class_counts.push(c.u64()?);
+        }
+        let footer = Footer {
+            num_classes,
+            blocks,
+            class_counts,
+            total: c.u64()?,
+            t_first: f64::from_bits(c.u64()?),
+            t_last: f64::from_bits(c.u64()?),
+        };
+        // Structural bounds + per-block CRC: the payloads stream through
+        // the CRC without being decoded or copied, so open cost is one
+        // sequential pass and corruption can never surface mid-replay.
+        for (i, blk) in footer.blocks.iter().enumerate() {
+            let start = blk.offset as usize;
+            let end = start
+                .checked_add(blk.len as usize + 4)
+                .filter(|&e| e <= fl_at - footer_len)
+                .ok_or(TraceError::Corrupt {
+                    block: i,
+                    msg: "block overruns the file",
+                })?;
+            let payload = &b[start..end - 4];
+            let crc = u32::from_le_bytes(b[end - 4..end].try_into().unwrap());
+            if crc32(payload) != crc {
+                return Err(TraceError::Corrupt {
+                    block: i,
+                    msg: "block CRC mismatch",
+                });
+            }
+        }
+        Ok(QstReader { bytes, footer })
+    }
+
+    pub fn footer(&self) -> &Footer {
+        &self.footer
+    }
+
+    pub fn num_blocks(&self) -> usize {
+        self.footer.blocks.len()
+    }
+
+    /// Decode block `i` into the caller's column buffers (cleared and
+    /// refilled — the buffers are reused across blocks, so steady-state
+    /// replay does zero allocation).
+    pub fn decode_block(
+        &self,
+        i: usize,
+        times: &mut Vec<f64>,
+        classes: &mut Vec<u16>,
+        sizes: &mut Vec<f64>,
+    ) -> Result<(), TraceError> {
+        let blk = self.footer.blocks[i];
+        let b = self.bytes.bytes();
+        let payload = &b[blk.offset as usize..blk.offset as usize + blk.len as usize];
+        let mut c = Cursor::new(payload, i);
+        let n = c.u32()? as usize;
+        if n != blk.n as usize {
+            return Err(c.err("block count disagrees with the footer"));
+        }
+        times.clear();
+        classes.clear();
+        sizes.clear();
+        times.reserve(n);
+        classes.reserve(n);
+        sizes.reserve(n);
+        if n == 0 {
+            return Ok(());
+        }
+        let mut bits = c.u64()?;
+        times.push(f64::from_bits(bits));
+        for _ in 1..n {
+            bits = bits
+                .checked_add(c.varint()?)
+                .ok_or_else(|| c.err("time delta overflows"))?;
+            times.push(f64::from_bits(bits));
+        }
+        for _ in 0..n {
+            classes.push(c.u16()?);
+        }
+        for _ in 0..n {
+            sizes.push(f64::from_bits(c.u64()?));
+        }
+        if c.pos != payload.len() {
+            return Err(c.err("trailing bytes in block payload"));
+        }
+        Ok(())
+    }
+}
+
+/// One-pass streaming CSV → `.qst` conversion: rows are validated,
+/// delta-encoded, and flushed block by block without ever materializing
+/// the trace (the CSV is read line by line, not loaded).
+pub fn convert_csv(
+    input: impl AsRef<Path>,
+    output: impl AsRef<Path>,
+    num_classes: usize,
+    block_size: usize,
+) -> Result<Footer, TraceError> {
+    use crate::util::csv::split_line;
+    let reader = BufReader::new(File::open(input)?);
+    let mut w = QstWriter::create(output, num_classes, block_size)?;
+    let mut lines = reader.lines();
+    let header = match lines.next() {
+        Some(line) => split_line(&line?),
+        None => return Err(TraceError::BadHeader),
+    };
+    if header != ["t", "class", "size"] {
+        return Err(TraceError::BadHeader);
+    }
+    for (row, line) in lines.enumerate() {
+        let line = line?;
+        if line.is_empty() {
+            continue;
+        }
+        let cells = split_line(&line);
+        let (t, class, size) = crate::workload::trace::parse_row(&cells, row)?;
+        w.push(t, class, size)?;
+    }
+    w.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(n: usize) -> Vec<(f64, usize, f64)> {
+        let mut t = 0.0;
+        (0..n)
+            .map(|i| {
+                t += 0.25 + (i % 7) as f64 * 0.125;
+                (t, i % 3, 1.0 + (i % 5) as f64)
+            })
+            .collect()
+    }
+
+    fn write_qst(path: &Path, rows: &[(f64, usize, f64)], block: usize) -> Footer {
+        let mut w = QstWriter::create(path, 3, block).unwrap();
+        for &(t, c, s) in rows {
+            w.push(t, c, s).unwrap();
+        }
+        w.finish().unwrap()
+    }
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("qs_qst_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn roundtrip_bitwise_across_block_sizes() {
+        let rows = sample(1000);
+        for block in [1usize, 7, 64, 4096] {
+            let path = tmp(&format!("rt_{block}.qst"));
+            let footer = write_qst(&path, &rows, block);
+            assert_eq!(footer.total, 1000);
+            assert_eq!(footer.blocks.len(), 1000usize.div_ceil(block));
+            let r = QstReader::open(&path).unwrap();
+            assert_eq!(r.footer(), &footer);
+            let (mut ts, mut cs, mut ss) = (Vec::new(), Vec::new(), Vec::new());
+            let mut got = Vec::new();
+            for i in 0..r.num_blocks() {
+                r.decode_block(i, &mut ts, &mut cs, &mut ss).unwrap();
+                for j in 0..ts.len() {
+                    got.push((ts[j], cs[j] as usize, ss[j]));
+                }
+            }
+            assert_eq!(got.len(), rows.len());
+            for (a, b) in got.iter().zip(rows.iter()) {
+                assert_eq!(a.0.to_bits(), b.0.to_bits());
+                assert_eq!(a.1, b.1);
+                assert_eq!(a.2.to_bits(), b.2.to_bits());
+            }
+            std::fs::remove_file(&path).ok();
+        }
+    }
+
+    #[test]
+    fn footer_counts_and_bounds() {
+        let rows = sample(100);
+        let path = tmp("footer.qst");
+        let footer = write_qst(&path, &rows, 16);
+        let mut counts = [0u64; 3];
+        for &(_, c, _) in &rows {
+            counts[c] += 1;
+        }
+        assert_eq!(footer.class_counts, counts);
+        assert_eq!(footer.t_first.to_bits(), rows[0].0.to_bits());
+        assert_eq!(footer.t_last.to_bits(), rows[99].0.to_bits());
+        for (i, b) in footer.blocks.iter().enumerate() {
+            let lo = rows[i * 16].0;
+            let hi = rows[(i * 16 + 15).min(99)].0;
+            assert_eq!(b.t_min.to_bits(), lo.to_bits());
+            assert_eq!(b.t_max.to_bits(), hi.to_bits());
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn corrupted_block_fails_open() {
+        let rows = sample(200);
+        let path = tmp("corrupt.qst");
+        let footer = write_qst(&path, &rows, 32);
+        let mut bytes = std::fs::read(&path).unwrap();
+        // Flip one byte inside the third block's payload.
+        let at = footer.blocks[2].offset as usize + 5;
+        bytes[at] ^= 0x40;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = QstReader::open(&path).unwrap_err();
+        assert!(
+            matches!(err, TraceError::Corrupt { block: 2, .. }),
+            "unexpected error: {err}"
+        );
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn truncated_file_fails_open() {
+        let rows = sample(200);
+        let path = tmp("torn.qst");
+        write_qst(&path, &rows, 32);
+        let bytes = std::fs::read(&path).unwrap();
+        // A torn write: the final 33 bytes (footer tail) never landed.
+        std::fs::write(&path, &bytes[..bytes.len() - 33]).unwrap();
+        assert!(QstReader::open(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn writer_validates_rows() {
+        let path = tmp("validate.qst");
+        let mut w = QstWriter::create(&path, 3, 64).unwrap();
+        w.push(1.0, 0, 1.0).unwrap();
+        assert!(matches!(
+            w.push(f64::NAN, 0, 1.0),
+            Err(TraceError::NonFinite { row: 1, field: "t" })
+        ));
+        assert!(matches!(
+            w.push(2.0, 0, f64::INFINITY),
+            Err(TraceError::NonFinite { row: 1, field: "size" })
+        ));
+        assert!(matches!(
+            w.push(0.5, 0, 1.0),
+            Err(TraceError::NonMonotonic { row: 1, .. })
+        ));
+        assert!(matches!(
+            w.push(2.0, 3, 1.0),
+            Err(TraceError::ClassOutOfRange { row: 1, class: 3, num_classes: 3 })
+        ));
+        assert!(matches!(
+            w.push(2.0, 0, -1.0),
+            Err(TraceError::NegativeSize { row: 1 })
+        ));
+        w.push(2.0, 2, 0.0).unwrap();
+        let f = w.finish().unwrap();
+        assert_eq!(f.total, 2);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn varint_roundtrip_extremes() {
+        let vals = [0u64, 1, 127, 128, 300, u32::MAX as u64, u64::MAX];
+        let mut buf = Vec::new();
+        for &v in &vals {
+            push_varint(&mut buf, v);
+        }
+        let mut c = Cursor::new(&buf, 0);
+        for &v in &vals {
+            assert_eq!(c.varint().unwrap(), v);
+        }
+        assert_eq!(c.pos, buf.len());
+    }
+}

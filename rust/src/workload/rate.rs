@@ -1,0 +1,406 @@
+//! Nonstationary arrival rates: modulated Poisson via time-warping.
+//!
+//! A [`RateCurve`] multiplies every class's base rate by a shared,
+//! time-varying factor `f(t) > 0` — the load *wave* of a real trace
+//! (diurnal cycles, stepped regimes) with the class mix fixed. The
+//! nonhomogeneous process is realized by **warping time**: with
+//! `G(t) = ∫₀ᵗ f(u) du`, a homogeneous arrival at virtual time `s`
+//! becomes a real arrival at `t = G⁻¹(s)` — the standard inversion
+//! construction for a nonhomogeneous Poisson process. The synthetic
+//! source keeps its per-class chunked sampling untouched in virtual
+//! time (the RNG stream layout is byte-for-byte the constant-rate one)
+//! and applies the warp only to emitted timestamps; since `G⁻¹` is
+//! strictly increasing, the per-class argmin merge order is preserved.
+//! [`RateCurve::Constant`] installs no warp at all, so the default path
+//! is bit-identical to the pre-curve source.
+
+/// A positive rate-modulation factor over time.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub enum RateCurve {
+    /// `f(t) = 1`: the homogeneous model, exactly as before.
+    #[default]
+    Constant,
+    /// Piecewise-constant: `factors[i]` applies on
+    /// `[times[i], times[i+1])` (and the last factor forever).
+    /// `times[0]` must be 0, times strictly increasing, factors > 0.
+    Piecewise { times: Vec<f64>, factors: Vec<f64> },
+    /// Sinusoidal diurnal wave: `f(t) = 1 + amp·sin(2πt/period + phase)`
+    /// with `0 ≤ amp < 1` (so `f > 0`).
+    Diurnal { period: f64, amp: f64, phase: f64 },
+}
+
+impl RateCurve {
+    /// Validate the curve's parameters.
+    pub fn validate(&self) -> Result<(), String> {
+        match self {
+            RateCurve::Constant => Ok(()),
+            RateCurve::Piecewise { times, factors } => {
+                if times.is_empty() || times.len() != factors.len() {
+                    return Err("piecewise curve needs equal, nonzero times/factors".into());
+                }
+                if times[0] != 0.0 {
+                    return Err("piecewise curve must start at t=0".into());
+                }
+                for w in times.windows(2) {
+                    if !w[1].is_finite() || w[1] <= w[0] {
+                        return Err(format!(
+                            "piecewise times must be finite and strictly increasing \
+                             ({} after {})",
+                            w[1], w[0]
+                        ));
+                    }
+                }
+                for &f in factors {
+                    if !f.is_finite() || f <= 0.0 {
+                        return Err(format!("piecewise factors must be positive, got {f}"));
+                    }
+                }
+                Ok(())
+            }
+            RateCurve::Diurnal { period, amp, phase } => {
+                if !period.is_finite() || *period <= 0.0 {
+                    return Err(format!("diurnal period must be positive, got {period}"));
+                }
+                if !(0.0..1.0).contains(amp) {
+                    return Err(format!("diurnal amp must be in [0, 1), got {amp}"));
+                }
+                if !phase.is_finite() {
+                    return Err(format!("diurnal phase must be finite, got {phase}"));
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// The modulation factor `f(t)`.
+    pub fn factor(&self, t: f64) -> f64 {
+        match self {
+            RateCurve::Constant => 1.0,
+            RateCurve::Piecewise { times, factors } => {
+                // partition_point: index of the first time > t.
+                let i = times.partition_point(|&x| x <= t);
+                factors[i.saturating_sub(1).min(factors.len() - 1)]
+            }
+            RateCurve::Diurnal { period, amp, phase } => {
+                1.0 + amp * (std::f64::consts::TAU * t / period + phase).sin()
+            }
+        }
+    }
+
+    /// Cumulative modulation `G(t) = ∫₀ᵗ f(u) du` (strictly increasing).
+    pub fn cumulative(&self, t: f64) -> f64 {
+        match self {
+            RateCurve::Constant => t,
+            RateCurve::Piecewise { times, factors } => {
+                let mut acc = 0.0;
+                for i in 0..times.len() {
+                    let seg_end = times.get(i + 1).copied().unwrap_or(f64::INFINITY);
+                    if t <= seg_end {
+                        return acc + factors[i] * (t - times[i]);
+                    }
+                    acc += factors[i] * (seg_end - times[i]);
+                }
+                unreachable!("segments cover [0, inf)")
+            }
+            RateCurve::Diurnal { period, amp, phase } => {
+                let omega = std::f64::consts::TAU / period;
+                t + amp / omega * (phase.cos() - (omega * t + phase).cos())
+            }
+        }
+    }
+
+    /// Inverse warp `G⁻¹(s)` for the diurnal curve: Newton from the
+    /// identity-warp guess, with a bisection fallback (f is bounded in
+    /// `[1−amp, 1+amp]`, so both converge fast).
+    fn invert_diurnal(&self, s: f64) -> f64 {
+        let RateCurve::Diurnal { amp, .. } = *self else {
+            unreachable!()
+        };
+        if s <= 0.0 {
+            return 0.0;
+        }
+        let mut t = s; // G(t) ≈ t globally (the wave integrates to 0).
+        for _ in 0..64 {
+            let g = self.cumulative(t) - s;
+            if g.abs() <= 1e-12 * s.max(1.0) {
+                return t.max(0.0);
+            }
+            t -= g / self.factor(t).max(1e-12);
+            if t < 0.0 {
+                t = 0.0;
+            }
+        }
+        // Newton cycled (can only happen deep in the float tail):
+        // bisect on the bracket implied by 1−amp ≤ f ≤ 1+amp.
+        let (mut lo, mut hi) = (s / (1.0 + amp), s / (1.0 - amp));
+        for _ in 0..200 {
+            let mid = 0.5 * (lo + hi);
+            if self.cumulative(mid) < s {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+            if hi - lo <= 1e-12 * s.max(1.0) {
+                break;
+            }
+        }
+        0.5 * (lo + hi)
+    }
+}
+
+/// The stateful warp a [`SyntheticSource`](crate::workload::SyntheticSource)
+/// applies to emitted timestamps. Emitted virtual times are
+/// nondecreasing, so the piecewise inverse keeps a forward segment
+/// cursor and is O(1) amortized.
+#[derive(Clone, Debug)]
+pub struct RateWarp {
+    curve: RateCurve,
+    /// Piecewise state: current segment index, and G at its left edge.
+    seg: usize,
+    seg_start_g: f64,
+}
+
+impl RateWarp {
+    /// `None` for the constant curve: the no-warp path stays
+    /// bit-identical to the pre-curve source by not existing.
+    pub fn new(curve: &RateCurve) -> Option<RateWarp> {
+        match curve {
+            RateCurve::Constant => None,
+            _ => Some(RateWarp {
+                curve: curve.clone(),
+                seg: 0,
+                seg_start_g: 0.0,
+            }),
+        }
+    }
+
+    /// Map a virtual (homogeneous) arrival time to real time: `G⁻¹(s)`.
+    pub fn warp(&mut self, s: f64) -> f64 {
+        match &self.curve {
+            RateCurve::Constant => s,
+            RateCurve::Diurnal { .. } => self.curve.invert_diurnal(s),
+            RateCurve::Piecewise { times, factors } => {
+                // Advance to the segment containing s (s nondecreasing
+                // across calls, so the cursor only moves forward).
+                loop {
+                    let seg_end = times.get(self.seg + 1).copied().unwrap_or(f64::INFINITY);
+                    let g_end = if seg_end.is_finite() {
+                        self.seg_start_g + factors[self.seg] * (seg_end - times[self.seg])
+                    } else {
+                        f64::INFINITY
+                    };
+                    if s <= g_end || self.seg + 1 >= times.len() {
+                        return times[self.seg] + (s - self.seg_start_g) / factors[self.seg];
+                    }
+                    self.seg_start_g = g_end;
+                    self.seg += 1;
+                }
+            }
+        }
+    }
+}
+
+/// Parse the CLI grammar:
+/// `constant` | `diurnal:period=24,amp=0.5[,phase=0]` |
+/// `piecewise:0=1,10=2.5,20=0.5` (time=factor breakpoints).
+pub fn parse_rate_curve(s: &str) -> Result<RateCurve, String> {
+    let s = s.trim();
+    if s.is_empty() || s == "constant" {
+        return Ok(RateCurve::Constant);
+    }
+    let (kind, body) = s.split_once(':').unwrap_or((s, ""));
+    let curve = match kind {
+        "diurnal" => {
+            let (mut period, mut amp, mut phase) = (None, None, 0.0);
+            for kv in body.split(',').filter(|p| !p.is_empty()) {
+                let (k, v) = kv
+                    .split_once('=')
+                    .ok_or_else(|| format!("expected key=value in rate curve, got {kv:?}"))?;
+                let v: f64 = v.parse().map_err(|_| format!("bad number {v:?} in rate curve"))?;
+                match k {
+                    "period" => period = Some(v),
+                    "amp" => amp = Some(v),
+                    "phase" => phase = v,
+                    _ => return Err(format!("unknown diurnal parameter {k:?}")),
+                }
+            }
+            RateCurve::Diurnal {
+                period: period.ok_or("diurnal curve needs period=")?,
+                amp: amp.ok_or("diurnal curve needs amp=")?,
+                phase,
+            }
+        }
+        "piecewise" => {
+            let (mut times, mut factors) = (Vec::new(), Vec::new());
+            for kv in body.split(',').filter(|p| !p.is_empty()) {
+                let (t, f) = kv
+                    .split_once('=')
+                    .ok_or_else(|| format!("expected time=factor in rate curve, got {kv:?}"))?;
+                times.push(t.parse::<f64>().map_err(|_| format!("bad time {t:?}"))?);
+                factors.push(f.parse::<f64>().map_err(|_| format!("bad factor {f:?}"))?);
+            }
+            RateCurve::Piecewise { times, factors }
+        }
+        _ => {
+            return Err(format!(
+                "unknown rate curve {kind:?} (expected constant, diurnal:…, piecewise:…)"
+            ))
+        }
+    };
+    curve.validate()?;
+    Ok(curve)
+}
+
+/// JSON wire form (workload files): `{"kind": "diurnal", ...}`.
+pub fn rate_curve_to_json(c: &RateCurve) -> crate::util::json::Value {
+    use crate::util::json::Value;
+    match c {
+        RateCurve::Constant => Value::obj().set("kind", "constant"),
+        RateCurve::Piecewise { times, factors } => Value::obj()
+            .set("kind", "piecewise")
+            .set("times", times.clone())
+            .set("factors", factors.clone()),
+        RateCurve::Diurnal { period, amp, phase } => Value::obj()
+            .set("kind", "diurnal")
+            .set("period", *period)
+            .set("amp", *amp)
+            .set("phase", *phase),
+    }
+}
+
+pub fn rate_curve_from_json(v: &crate::util::json::Value) -> Result<RateCurve, String> {
+    let kind = v
+        .get("kind")
+        .and_then(|k| k.as_str())
+        .ok_or("rate_curve needs a \"kind\"")?;
+    let curve = match kind {
+        "constant" => RateCurve::Constant,
+        "piecewise" => {
+            let nums = |key: &str| -> Result<Vec<f64>, String> {
+                v.get(key)
+                    .and_then(|a| a.as_arr())
+                    .ok_or_else(|| format!("piecewise rate_curve needs \"{key}\" array"))?
+                    .iter()
+                    .map(|x| x.as_f64().ok_or_else(|| format!("non-number in \"{key}\"")))
+                    .collect()
+            };
+            RateCurve::Piecewise {
+                times: nums("times")?,
+                factors: nums("factors")?,
+            }
+        }
+        "diurnal" => RateCurve::Diurnal {
+            period: v
+                .get("period")
+                .and_then(|x| x.as_f64())
+                .ok_or("diurnal rate_curve needs \"period\"")?,
+            amp: v
+                .get("amp")
+                .and_then(|x| x.as_f64())
+                .ok_or("diurnal rate_curve needs \"amp\"")?,
+            phase: v.get("phase").and_then(|x| x.as_f64()).unwrap_or(0.0),
+        },
+        _ => return Err(format!("unknown rate_curve kind {kind:?}")),
+    };
+    curve.validate()?;
+    Ok(curve)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_curve_installs_no_warp() {
+        assert!(RateWarp::new(&RateCurve::Constant).is_none());
+    }
+
+    #[test]
+    fn piecewise_warp_inverts_cumulative() {
+        let c = RateCurve::Piecewise {
+            times: vec![0.0, 10.0, 20.0],
+            factors: vec![1.0, 2.5, 0.5],
+        };
+        c.validate().unwrap();
+        let mut w = RateWarp::new(&c).unwrap();
+        // G(10)=10, G(20)=35; monotone probes across all segments.
+        for &t in &[0.0, 1.0, 5.0, 9.99, 10.0, 12.0, 19.5, 20.0, 30.0, 100.0] {
+            let s = c.cumulative(t);
+            let back = w.warp(s);
+            assert!((back - t).abs() < 1e-9, "t={t} s={s} back={back}");
+        }
+        assert!((c.cumulative(20.0) - 35.0).abs() < 1e-12);
+        assert_eq!(c.factor(15.0), 2.5);
+        assert_eq!(c.factor(25.0), 0.5);
+    }
+
+    #[test]
+    fn diurnal_warp_inverts_cumulative() {
+        let c = RateCurve::Diurnal {
+            period: 24.0,
+            amp: 0.8,
+            phase: 0.3,
+        };
+        c.validate().unwrap();
+        let mut w = RateWarp::new(&c).unwrap();
+        let mut last = -1.0;
+        for i in 0..500 {
+            let s = i as f64 * 0.37;
+            let t = w.warp(s);
+            assert!(t >= last, "warp must be monotone");
+            last = t;
+            let roundtrip = c.cumulative(t);
+            assert!(
+                (roundtrip - s).abs() < 1e-8 * s.max(1.0),
+                "s={s} t={t} G(t)={roundtrip}"
+            );
+        }
+    }
+
+    #[test]
+    fn grammar_parses_and_validates() {
+        assert_eq!(parse_rate_curve("constant").unwrap(), RateCurve::Constant);
+        assert_eq!(parse_rate_curve("").unwrap(), RateCurve::Constant);
+        assert_eq!(
+            parse_rate_curve("diurnal:period=24,amp=0.5").unwrap(),
+            RateCurve::Diurnal {
+                period: 24.0,
+                amp: 0.5,
+                phase: 0.0
+            }
+        );
+        assert_eq!(
+            parse_rate_curve("piecewise:0=1,10=2.5,20=0.5").unwrap(),
+            RateCurve::Piecewise {
+                times: vec![0.0, 10.0, 20.0],
+                factors: vec![1.0, 2.5, 0.5]
+            }
+        );
+        assert!(parse_rate_curve("diurnal:amp=0.5").is_err()); // no period
+        assert!(parse_rate_curve("diurnal:period=24,amp=1.5").is_err()); // amp ≥ 1
+        assert!(parse_rate_curve("piecewise:5=1").is_err()); // must start at 0
+        assert!(parse_rate_curve("piecewise:0=1,0=2").is_err()); // not increasing
+        assert!(parse_rate_curve("sawtooth:x=1").is_err());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        for c in [
+            RateCurve::Constant,
+            RateCurve::Diurnal {
+                period: 24.0,
+                amp: 0.5,
+                phase: 1.25,
+            },
+            RateCurve::Piecewise {
+                times: vec![0.0, 8.0, 16.0],
+                factors: vec![0.5, 2.0, 1.0],
+            },
+        ] {
+            let wire = rate_curve_to_json(&c).to_string();
+            let back =
+                rate_curve_from_json(&crate::util::json::Value::parse(&wire).unwrap()).unwrap();
+            assert_eq!(back, c, "wire: {wire}");
+        }
+    }
+}

@@ -1,16 +1,146 @@
 //! Workload traces: record/replay the arrival stream.
 //!
-//! Format: CSV with header `t,class,size` (absolute arrival time, class
-//! index into the accompanying workload, service requirement). Traces let
-//! the coordinator and simulator consume identical workloads, and make
-//! experiments reproducible across machines.
+//! Two on-disk forms share one validation surface ([`TraceError`]):
+//!
+//! * **CSV** (`t,class,size` — absolute arrival time, class index into
+//!   the accompanying workload, service requirement): human-readable
+//!   interchange, materialized by [`Trace::read_csv_file`].
+//! * **`.qst`** ([`crate::workload::qst`]): the streaming columnar
+//!   binary format. [`StreamingTraceSource`] replays it one block at a
+//!   time through an mmap — no per-arrival parsing, no materialized
+//!   `Vec<Arrival>` — and is bit-identical to replaying the equivalent
+//!   CSV through [`TraceSource`] (`tests/prop_trace.rs`).
+//!
+//! Class ids are validated against the workload *before* replay starts
+//! (`TraceSource::new` / `StreamingTraceSource::open`), so a foreign or
+//! mislabeled trace fails with a typed error naming the row instead of
+//! panicking mid-simulation.
 
 use crate::util::csv::{read_csv, CsvWriter};
 use crate::util::rng::Rng;
+use crate::workload::qst::{Footer, QstReader, QstWriter, DEFAULT_BLOCK};
 use crate::workload::{Arrival, ArrivalSource, SyntheticSource, Workload};
 use std::path::Path;
 
-/// A fully materialized arrival trace.
+/// Everything that can go wrong loading or replaying a trace. Row
+/// numbers are 0-based data-row indices (the CSV header line excluded).
+#[derive(Debug)]
+pub enum TraceError {
+    Io(std::io::Error),
+    /// The file does not start with the expected CSV header / qst magic.
+    BadHeader,
+    /// A row failed to parse (wrong cell count, non-numeric cell).
+    Malformed { row: usize, msg: String },
+    /// `t` or `size` is NaN or infinite (a NaN time would pass a
+    /// `t >= last_t` check and corrupt the event schedule).
+    NonFinite { row: usize, field: &'static str },
+    NonMonotonic { row: usize, t: f64, last_t: f64 },
+    NegativeTime { row: usize },
+    NegativeSize { row: usize },
+    /// The class id does not exist in the accompanying workload.
+    ClassOutOfRange {
+        row: usize,
+        class: usize,
+        num_classes: usize,
+    },
+    /// The trace was written for a different class count than the
+    /// workload replaying it.
+    ClassCountMismatch { file: usize, workload: usize },
+    /// CRC mismatch or structural damage in a `.qst` block
+    /// (`block == usize::MAX`: the footer itself).
+    Corrupt { block: usize, msg: &'static str },
+    Format(String),
+}
+
+impl std::fmt::Display for TraceError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TraceError::Io(e) => write!(f, "trace io error: {e}"),
+            TraceError::BadHeader => write!(f, "unexpected trace header"),
+            TraceError::Malformed { row, msg } => write!(f, "trace row {row} malformed: {msg}"),
+            TraceError::NonFinite { row, field } => {
+                write!(f, "non-finite {field} at trace row {row}")
+            }
+            TraceError::NonMonotonic { row, t, last_t } => write!(
+                f,
+                "trace times must be nondecreasing (row {row}: t={t} after {last_t})"
+            ),
+            TraceError::NegativeTime { row } => write!(f, "negative time at trace row {row}"),
+            TraceError::NegativeSize { row } => write!(f, "negative size at trace row {row}"),
+            TraceError::ClassOutOfRange {
+                row,
+                class,
+                num_classes,
+            } => write!(
+                f,
+                "class {class} at trace row {row} out of range for a \
+                 {num_classes}-class workload"
+            ),
+            TraceError::ClassCountMismatch { file, workload } => write!(
+                f,
+                "trace was written for {file} classes but the workload has {workload}"
+            ),
+            TraceError::Corrupt { block, msg } => {
+                if *block == usize::MAX {
+                    write!(f, "corrupt qst footer: {msg}")
+                } else {
+                    write!(f, "corrupt qst block {block}: {msg}")
+                }
+            }
+            TraceError::Format(msg) => write!(f, "{msg}"),
+        }
+    }
+}
+
+impl std::error::Error for TraceError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            TraceError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for TraceError {
+    fn from(e: std::io::Error) -> TraceError {
+        TraceError::Io(e)
+    }
+}
+
+/// Parse one CSV data row into `(t, class, size)`, rejecting malformed
+/// cells and non-finite numbers. Monotonicity/sign checks live with the
+/// consumer (they need running state).
+pub(crate) fn parse_row(cells: &[String], row: usize) -> Result<(f64, usize, f64), TraceError> {
+    if cells.len() != 3 {
+        return Err(TraceError::Malformed {
+            row,
+            msg: format!("expected 3 cells, got {}", cells.len()),
+        });
+    }
+    let t: f64 = cells[0].parse().map_err(|_| TraceError::Malformed {
+        row,
+        msg: format!("bad t {:?}", cells[0]),
+    })?;
+    let class: usize = cells[1].parse().map_err(|_| TraceError::Malformed {
+        row,
+        msg: format!("bad class {:?}", cells[1]),
+    })?;
+    let size: f64 = cells[2].parse().map_err(|_| TraceError::Malformed {
+        row,
+        msg: format!("bad size {:?}", cells[2]),
+    })?;
+    if !t.is_finite() {
+        return Err(TraceError::NonFinite { row, field: "t" });
+    }
+    if !size.is_finite() {
+        return Err(TraceError::NonFinite { row, field: "size" });
+    }
+    Ok((t, class, size))
+}
+
+/// A fully materialized arrival trace (small traces, tests, CSV
+/// interchange; Borg-scale replay goes through
+/// [`StreamingTraceSource`] instead).
 #[derive(Clone, Debug, Default)]
 pub struct Trace {
     pub arrivals: Vec<Arrival>,
@@ -35,23 +165,58 @@ impl Trace {
         w.flush()
     }
 
-    pub fn read_csv_file(path: impl AsRef<Path>) -> anyhow::Result<Trace> {
+    pub fn read_csv_file(path: impl AsRef<Path>) -> Result<Trace, TraceError> {
         let (header, rows) = read_csv(path)?;
-        anyhow::ensure!(
-            header == ["t", "class", "size"],
-            "unexpected trace header {header:?}"
-        );
+        if header != ["t", "class", "size"] {
+            return Err(TraceError::BadHeader);
+        }
         let mut arrivals = Vec::with_capacity(rows.len());
         let mut last_t = f64::NEG_INFINITY;
-        for (i, row) in rows.iter().enumerate() {
-            anyhow::ensure!(row.len() == 3, "trace row {i} malformed");
-            let t: f64 = row[0].parse()?;
-            let class: usize = row[1].parse()?;
-            let size: f64 = row[2].parse()?;
-            anyhow::ensure!(t >= last_t, "trace times must be nondecreasing (row {i})");
-            anyhow::ensure!(size >= 0.0, "negative size at row {i}");
+        for (row, cells) in rows.iter().enumerate() {
+            let (t, class, size) = parse_row(cells, row)?;
+            if t < 0.0 {
+                return Err(TraceError::NegativeTime { row });
+            }
+            if t < last_t {
+                return Err(TraceError::NonMonotonic { row, t, last_t });
+            }
+            if size < 0.0 {
+                return Err(TraceError::NegativeSize { row });
+            }
             last_t = t;
             arrivals.push(Arrival { t, class, size });
+        }
+        Ok(Trace { arrivals })
+    }
+
+    /// Write the trace in the columnar `.qst` format.
+    pub fn write_qst(
+        &self,
+        path: impl AsRef<Path>,
+        num_classes: usize,
+        block_size: usize,
+    ) -> Result<Footer, TraceError> {
+        let mut w = QstWriter::create(path, num_classes, block_size)?;
+        for a in &self.arrivals {
+            w.push(a.t, a.class, a.size)?;
+        }
+        w.finish()
+    }
+
+    /// Materialize a `.qst` file (tools and tests; replay should stream).
+    pub fn read_qst(path: impl AsRef<Path>) -> Result<Trace, TraceError> {
+        let r = QstReader::open(path)?;
+        let mut arrivals = Vec::with_capacity(r.footer().total as usize);
+        let (mut ts, mut cs, mut ss) = (Vec::new(), Vec::new(), Vec::new());
+        for i in 0..r.num_blocks() {
+            r.decode_block(i, &mut ts, &mut cs, &mut ss)?;
+            for j in 0..ts.len() {
+                arrivals.push(Arrival {
+                    t: ts[j],
+                    class: cs[j] as usize,
+                    size: ss[j],
+                });
+            }
         }
         Ok(Trace { arrivals })
     }
@@ -64,17 +229,35 @@ impl Trace {
         self.arrivals.is_empty()
     }
 
+    /// Every class id must exist in a `num_classes`-class workload; the
+    /// error names the first offending row.
+    pub fn validate_classes(&self, num_classes: usize) -> Result<(), TraceError> {
+        for (row, a) in self.arrivals.iter().enumerate() {
+            if a.class >= num_classes {
+                return Err(TraceError::ClassOutOfRange {
+                    row,
+                    class: a.class,
+                    num_classes,
+                });
+            }
+        }
+        Ok(())
+    }
+
     /// Empirical per-class arrival counts (sanity checks / reporting).
-    pub fn class_counts(&self, num_classes: usize) -> Vec<usize> {
+    pub fn class_counts(&self, num_classes: usize) -> Result<Vec<usize>, TraceError> {
+        self.validate_classes(num_classes)?;
         let mut c = vec![0usize; num_classes];
         for a in &self.arrivals {
             c[a.class] += 1;
         }
-        c
+        Ok(c)
     }
 }
 
-/// Replays a trace as an [`ArrivalSource`]; finite (returns None at end).
+/// Replays a materialized trace as an [`ArrivalSource`]; finite
+/// (returns None at end). Construction validates every class id against
+/// the workload.
 pub struct TraceSource {
     wl: Workload,
     trace: Trace,
@@ -82,8 +265,9 @@ pub struct TraceSource {
 }
 
 impl TraceSource {
-    pub fn new(wl: Workload, trace: Trace) -> TraceSource {
-        TraceSource { wl, trace, idx: 0 }
+    pub fn new(wl: Workload, trace: Trace) -> Result<TraceSource, TraceError> {
+        trace.validate_classes(wl.num_classes())?;
+        Ok(TraceSource { wl, trace, idx: 0 })
     }
 }
 
@@ -99,17 +283,153 @@ impl ArrivalSource for TraceSource {
     }
 }
 
+/// Streams a `.qst` trace (or a block-aligned shard of one) as an
+/// [`ArrivalSource`]: one block is decoded at a time from the mmap into
+/// reused column buffers, so replay of a multi-million-job trace holds
+/// a single block's columns plus the footer in memory — never the
+/// trace. The engine-supplied RNG is deliberately unused (the recorded
+/// stream is the randomness), mirroring
+/// [`ReplayCursor`](crate::workload::ReplayCursor)'s CRN contract.
+pub struct StreamingTraceSource {
+    wl: Workload,
+    reader: QstReader,
+    /// Next block to decode and one past the last (the shard's range).
+    next_block: usize,
+    end_block: usize,
+    times: Vec<f64>,
+    classes: Vec<u16>,
+    sizes: Vec<f64>,
+    pos: usize,
+}
+
+impl StreamingTraceSource {
+    /// Open the whole trace for replay.
+    pub fn open(path: impl AsRef<Path>, wl: Workload) -> Result<StreamingTraceSource, TraceError> {
+        StreamingTraceSource::open_shard(path, wl, 0, 1)
+    }
+
+    /// Open shard `shard` of `shards`: the block-aligned slice
+    /// `[shard·nb/shards, (shard+1)·nb/shards)` of the trace's blocks,
+    /// planned from the footer alone. The shard union over
+    /// `0..shards` is exactly the full trace, in order, with no overlap.
+    pub fn open_shard(
+        path: impl AsRef<Path>,
+        wl: Workload,
+        shard: u32,
+        shards: u32,
+    ) -> Result<StreamingTraceSource, TraceError> {
+        assert!(shards >= 1 && shard < shards, "shard {shard} of {shards}");
+        let reader = QstReader::open(path)?;
+        let file_classes = reader.footer().num_classes as usize;
+        if file_classes != wl.num_classes() {
+            return Err(TraceError::ClassCountMismatch {
+                file: file_classes,
+                workload: wl.num_classes(),
+            });
+        }
+        let nb = reader.num_blocks();
+        let next_block = (shard as usize * nb) / shards as usize;
+        let end_block = ((shard as usize + 1) * nb) / shards as usize;
+        Ok(StreamingTraceSource {
+            wl,
+            reader,
+            next_block,
+            end_block,
+            times: Vec::new(),
+            classes: Vec::new(),
+            sizes: Vec::new(),
+            pos: 0,
+        })
+    }
+
+    /// The footer index (shard planning, `trace stats`).
+    pub fn footer(&self) -> &Footer {
+        self.reader.footer()
+    }
+
+    /// Arrivals in this shard (from the footer, nothing decoded).
+    pub fn shard_len(&self) -> u64 {
+        self.reader.footer().blocks[self.next_block..self.end_block]
+            .iter()
+            .map(|b| b.n as u64)
+            .sum()
+    }
+
+    /// Decode the next block of the shard into the reused buffers.
+    /// Returns false at shard end. Corruption cannot surface here —
+    /// every block's CRC was verified at open — so decode failures
+    /// indicate the file changed underneath us and panic.
+    fn refill(&mut self) -> bool {
+        while self.next_block < self.end_block {
+            self.reader
+                .decode_block(self.next_block, &mut self.times, &mut self.classes, &mut self.sizes)
+                .expect("qst block decoded after CRC verification at open");
+            self.next_block += 1;
+            self.pos = 0;
+            if !self.times.is_empty() {
+                return true;
+            }
+        }
+        false
+    }
+}
+
+impl ArrivalSource for StreamingTraceSource {
+    #[inline]
+    fn next_arrival(&mut self, _rng: &mut Rng) -> Option<Arrival> {
+        if self.pos == self.times.len() && !self.refill() {
+            return None;
+        }
+        let i = self.pos;
+        self.pos += 1;
+        Some(Arrival {
+            t: self.times[i],
+            class: self.classes[i] as usize,
+            size: self.sizes[i],
+        })
+    }
+
+    fn fill_arrivals(&mut self, _rng: &mut Rng, out: &mut Vec<Arrival>, max: usize) -> usize {
+        let mut filled = 0;
+        while filled < max {
+            if self.pos == self.times.len() && !self.refill() {
+                break;
+            }
+            let take = (self.times.len() - self.pos).min(max - filled);
+            for i in self.pos..self.pos + take {
+                out.push(Arrival {
+                    t: self.times[i],
+                    class: self.classes[i] as usize,
+                    size: self.sizes[i],
+                });
+            }
+            self.pos += take;
+            filled += take;
+        }
+        filled
+    }
+
+    fn workload(&self) -> &Workload {
+        &self.wl
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    fn tmp_dir() -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("qs_trace_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
 
     #[test]
     fn generate_write_read_roundtrip() {
         let wl = Workload::one_or_all(8, 2.0, 0.8, 1.0, 1.0);
         let tr = Trace::generate(&wl, 500, 7);
         assert_eq!(tr.len(), 500);
-        let dir = std::env::temp_dir().join(format!("qs_trace_{}", std::process::id()));
-        std::fs::create_dir_all(&dir).unwrap();
+        let dir = tmp_dir();
         let path = dir.join("t.csv");
         tr.write_csv(&path).unwrap();
         let back = Trace::read_csv_file(&path).unwrap();
@@ -118,20 +438,118 @@ mod tests {
             assert!((a.t - b.t).abs() < 1e-9);
             assert_eq!(a.class, b.class);
         }
-        std::fs::remove_dir_all(&dir).ok();
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn qst_roundtrip_is_bitwise() {
+        let wl = Workload::four_class(4.0);
+        let tr = Trace::generate(&wl, 2_000, 11);
+        let dir = tmp_dir();
+        let path = dir.join("t.qst");
+        let footer = tr.write_qst(&path, wl.num_classes(), 64).unwrap();
+        assert_eq!(footer.total, 2_000);
+        let back = Trace::read_qst(&path).unwrap();
+        assert_eq!(back.len(), tr.len());
+        for (a, b) in tr.arrivals.iter().zip(back.arrivals.iter()) {
+            assert_eq!(a.t.to_bits(), b.t.to_bits());
+            assert_eq!(a.class, b.class);
+            assert_eq!(a.size.to_bits(), b.size.to_bits());
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn csv_rejects_nan_and_infinite_values() {
+        let dir = tmp_dir();
+        let path = dir.join("nan.csv");
+        std::fs::write(&path, "t,class,size\n1.0,0,2.0\nNaN,0,1.0\n").unwrap();
+        let err = Trace::read_csv_file(&path).unwrap_err();
+        assert!(
+            matches!(err, TraceError::NonFinite { row: 1, field: "t" }),
+            "unexpected error: {err}"
+        );
+        std::fs::write(&path, "t,class,size\n1.0,0,inf\n").unwrap();
+        let err = Trace::read_csv_file(&path).unwrap_err();
+        assert!(matches!(err, TraceError::NonFinite { row: 0, field: "size" }));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn class_validation_names_the_row() {
+        let wl = Workload::one_or_all(8, 2.0, 0.8, 1.0, 1.0);
+        let mut tr = Trace::generate(&wl, 10, 3);
+        tr.arrivals[7].class = 9;
+        let err = TraceSource::new(wl.clone(), tr.clone()).unwrap_err();
+        assert!(
+            matches!(err, TraceError::ClassOutOfRange { row: 7, class: 9, num_classes: 2 }),
+            "unexpected error: {err}"
+        );
+        assert!(tr.class_counts(2).is_err());
+        tr.arrivals[7].class = 1;
+        let counts = tr.class_counts(2).unwrap();
+        assert_eq!(counts.iter().sum::<usize>(), 10);
+        assert!(TraceSource::new(wl, tr).is_ok());
     }
 
     #[test]
     fn trace_source_replays_and_ends() {
         let wl = Workload::one_or_all(8, 2.0, 0.8, 1.0, 1.0);
         let tr = Trace::generate(&wl, 50, 9);
-        let mut src = TraceSource::new(wl, tr.clone());
+        let mut src = TraceSource::new(wl, tr.clone()).unwrap();
         let mut rng = Rng::new(0);
         for want in &tr.arrivals {
             let got = src.next_arrival(&mut rng).unwrap();
             assert_eq!(got.t, want.t);
         }
         assert!(src.next_arrival(&mut rng).is_none());
+    }
+
+    #[test]
+    fn streaming_source_matches_trace_source() {
+        let wl = Workload::one_or_all(8, 3.0, 0.9, 1.0, 1.0);
+        let tr = Trace::generate(&wl, 1_000, 17);
+        let dir = tmp_dir();
+        let path = dir.join("stream.qst");
+        tr.write_qst(&path, wl.num_classes(), 128).unwrap();
+        let mut src = StreamingTraceSource::open(&path, wl).unwrap();
+        assert_eq!(src.shard_len(), 1_000);
+        let mut rng = Rng::new(0);
+        for want in &tr.arrivals {
+            let got = src.next_arrival(&mut rng).unwrap();
+            assert_eq!(got.t.to_bits(), want.t.to_bits());
+            assert_eq!(got.class, want.class);
+            assert_eq!(got.size.to_bits(), want.size.to_bits());
+        }
+        assert!(src.next_arrival(&mut rng).is_none());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn shard_union_is_the_full_trace() {
+        let wl = Workload::four_class(4.0);
+        let tr = Trace::generate(&wl, 997, 23);
+        let dir = tmp_dir();
+        let path = dir.join("shards.qst");
+        tr.write_qst(&path, wl.num_classes(), 64).unwrap();
+        for shards in [1u32, 2, 3, 5] {
+            let mut got = Vec::new();
+            let mut rng = Rng::new(0);
+            for s in 0..shards {
+                let mut src =
+                    StreamingTraceSource::open_shard(&path, wl.clone(), s, shards).unwrap();
+                while let Some(a) = src.next_arrival(&mut rng) {
+                    got.push(a);
+                }
+            }
+            assert_eq!(got.len(), tr.len(), "shards={shards}");
+            for (a, b) in got.iter().zip(tr.arrivals.iter()) {
+                assert_eq!(a.t.to_bits(), b.t.to_bits());
+                assert_eq!(a.class, b.class);
+                assert_eq!(a.size.to_bits(), b.size.to_bits());
+            }
+        }
+        std::fs::remove_file(&path).ok();
     }
 
     /// Simulating from a replayed trace matches simulating from the
@@ -147,7 +565,7 @@ mod tests {
         let id = "msfq:7".parse().unwrap();
         let r1 = crate::sim::run_policy(&wl, &id, &cfg, 123).unwrap();
         let tr = Trace::generate(&wl, 40_000, 123);
-        let mut src = TraceSource::new(wl.clone(), tr);
+        let mut src = TraceSource::new(wl.clone(), tr).unwrap();
         let mut pol = crate::policy::build(&id, &wl).unwrap();
         let mut eng = crate::sim::Engine::new(&wl, cfg);
         let mut rng = Rng::new(123);

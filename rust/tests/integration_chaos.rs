@@ -43,6 +43,7 @@ fn chaos_spec() -> SweepSpec {
         replications: 2,
         paired: false,
         baseline: None,
+        trace: None,
     }
 }
 

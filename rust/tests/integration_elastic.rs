@@ -44,6 +44,7 @@ fn marginal_spec() -> SweepSpec {
         replications: 3,
         paired: false,
         baseline: None,
+        trace: None,
     }
 }
 

@@ -173,6 +173,7 @@ fn paired_spec() -> SweepSpec {
         replications: 3,
         paired: true,
         baseline: Some(quickswap::policy::PolicyId::Msf),
+        trace: None,
     }
 }
 
@@ -261,6 +262,7 @@ fn paired_ci_is_at_least_3x_narrower_on_fig2_frontier() {
         replications: 4,
         paired: true,
         baseline: Some(quickswap::policy::PolicyId::Msf),
+        trace: None,
     };
     let sweep = run_spec_paired_local(&spec, 4).unwrap();
     assert_eq!(sweep.diffs.len(), 1);

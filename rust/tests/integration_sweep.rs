@@ -45,6 +45,7 @@ fn smoke_spec() -> SweepSpec {
         replications: 3,
         paired: false,
         baseline: None,
+        trace: None,
     }
 }
 

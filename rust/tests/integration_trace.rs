@@ -1,0 +1,129 @@
+//! Sharded trace-replay sweeps: a `.qst`-backed sweep distributed over
+//! TCP workers must be bit-identical to the in-process run, and the
+//! trace field must ride the spec wire format additively (pre-trace
+//! drivers and workers never see it).
+
+use quickswap::experiments::{Point, TraceShards};
+use quickswap::sweep::{
+    run_spec_local, run_worker, Driver, DriverBuilder, SpecOutcome, SweepSpec, WorkloadSpec,
+};
+use quickswap::util::json::Value;
+use quickswap::workload::trace::Trace;
+use quickswap::workload::Workload;
+
+fn serve_marginal(driver: Driver) -> Vec<Point> {
+    let report = driver.serve().unwrap();
+    match report.outcomes.into_iter().next() {
+        Some(SpecOutcome::Marginal(pts)) => pts,
+        _ => panic!("expected one marginal outcome"),
+    }
+}
+
+/// A four_class trace on disk plus a spec that replays it in 2 shards.
+fn trace_spec(dir: &std::path::Path) -> SweepSpec {
+    let wl = Workload::four_class(4.0);
+    let tr = Trace::generate(&wl, 1_200, 11);
+    let path = dir.join("sweep.qst");
+    tr.write_qst(&path, wl.num_classes(), 64).unwrap();
+    SweepSpec {
+        workload: WorkloadSpec::FourClass,
+        lambdas: vec![4.0],
+        policies: vec![
+            quickswap::policy::PolicyId::Msf,
+            quickswap::policy::PolicyId::Msfq(Some(7)),
+            quickswap::policy::PolicyId::Fcfs,
+        ],
+        target_completions: 6_000,
+        warmup_completions: 0,
+        batch: 1000,
+        seed: 42,
+        replications: 3, // ignored: the shard axis takes over
+        paired: false,
+        baseline: None,
+        trace: Some(TraceShards {
+            path: path.to_string_lossy().into_owned(),
+            shards: 2,
+        }),
+    }
+}
+
+fn tmp_dir() -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("qs_trace_sweep_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn assert_points_bit_identical(a: &[Point], b: &[Point]) {
+    assert_eq!(a.len(), b.len(), "point count differs");
+    for (x, y) in a.iter().zip(b) {
+        let tag = format!("({}, {})", x.lambda, x.policy);
+        assert_eq!(x.policy, y.policy, "{tag}");
+        assert_eq!(x.result.completed, y.result.completed, "{tag}");
+        assert_eq!(x.result.events, y.result.events, "{tag}");
+        assert_eq!(x.result.mean_t_all.to_bits(), y.result.mean_t_all.to_bits(), "{tag}");
+        assert_eq!(x.result.ci95.to_bits(), y.result.ci95.to_bits(), "{tag}");
+        assert_eq!(x.result.weighted_t.to_bits(), y.result.weighted_t.to_bits(), "{tag}");
+        assert_eq!(x.result.sim_time.to_bits(), y.result.sim_time.to_bits(), "{tag}");
+        for c in 0..x.result.mean_t.len() {
+            assert_eq!(
+                x.result.mean_t[c].to_bits(),
+                y.result.mean_t[c].to_bits(),
+                "{tag} class {c}"
+            );
+            assert_eq!(x.result.count[c], y.result.count[c], "{tag} class {c}");
+        }
+    }
+}
+
+/// The acceptance invariant: driver + 2 TCP workers replaying a sharded
+/// trace produce exactly the in-process results — the shard grid is
+/// rebuilt identically from the spec on both sides.
+#[test]
+fn sharded_trace_sweep_is_bit_identical_to_local() {
+    let dir = tmp_dir();
+    let spec = trace_spec(&dir);
+    let base = run_spec_local(&spec, 4);
+    assert_eq!(base.len(), 3, "one pooled point per policy");
+    // Every unit replayed real trace jobs (1200 jobs over 2 shards, all
+    // of which complete).
+    for p in &base {
+        assert_eq!(p.result.completed, 1_200, "({}, {})", p.lambda, p.policy);
+    }
+    let driver = DriverBuilder::new().spec(&spec).bind().unwrap();
+    let addr = driver.local_addr().to_string();
+    let dh = std::thread::spawn(move || serve_marginal(driver));
+    let workers: Vec<_> = (0..2)
+        .map(|_| {
+            let a = addr.clone();
+            std::thread::spawn(move || run_worker(&a).unwrap())
+        })
+        .collect();
+    let pts = dh.join().unwrap();
+    let served: usize = workers.into_iter().map(|w| w.join().unwrap().completed).sum();
+    assert_eq!(served, spec.grid().n_units());
+    assert_points_bit_identical(&base, &pts);
+}
+
+/// Wire compatibility: the trace field round-trips when present, is
+/// absent from traceless wires, and a paired spec refuses to carry one.
+#[test]
+fn trace_spec_wire_roundtrip_and_grid() {
+    let dir = tmp_dir();
+    let mut spec = trace_spec(&dir);
+    let wire = spec.to_json().to_string();
+    assert!(wire.contains("trace"), "trace object missing from wire");
+    let back = SweepSpec::from_json(&Value::parse(&wire).unwrap()).unwrap();
+    assert_eq!(back.trace, spec.trace);
+    // The shard axis replaces the replication axis, and units run to
+    // trace exhaustion, not to the completion target.
+    let grid = back.grid();
+    assert_eq!(grid.reps, 2);
+    assert_eq!(grid.rep_cfg.target_completions, u64::MAX / 2);
+    assert_eq!(grid.trace, spec.trace);
+    // Pre-trace wire (no trace field) parses to a traceless spec.
+    let legacy = Value::parse(&wire).unwrap().without("trace");
+    assert!(SweepSpec::from_json(&legacy).unwrap().trace.is_none());
+    // CRN pairing and trace replay are mutually exclusive.
+    spec.paired = true;
+    assert!(spec.paired_grid().is_err());
+}

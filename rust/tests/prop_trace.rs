@@ -1,0 +1,223 @@
+//! Trace-pipeline properties: the streaming `.qst` replay must be
+//! bit-identical to the materialized path across block sizes and every
+//! policy in the family, the one-pass CSV converter must reproduce the
+//! direct writer's bytes, and torn or corrupted files must hard-error
+//! at open — never mid-replay.
+
+use quickswap::policy::PolicyId;
+use quickswap::sim::{Engine, SimConfig, SimResult};
+use quickswap::util::rng::Rng;
+use quickswap::workload::borg::borg_workload;
+use quickswap::workload::qst;
+use quickswap::workload::trace::{StreamingTraceSource, Trace, TraceError, TraceSource};
+use quickswap::workload::{ArrivalSource, RateCurve, Workload};
+
+/// Every named policy in the family (ISSUE: the replay equivalence must
+/// hold for all of them, not just the queueing-friendly ones).
+const ALL_POLICIES: [&str; 10] = [
+    "fcfs",
+    "first-fit",
+    "msf",
+    "msfq:7",
+    "static-qs:7",
+    "adaptive-qs",
+    "nmsr",
+    "server-filling",
+    "msr-seq",
+    "msr-rand",
+];
+
+fn tmp_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("qs_prop_trace_{}_{tag}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Replay `src` under `id` until the source is exhausted: the trace,
+/// not a completion target, ends the run (timer-driven policies rely on
+/// the engine's exhaustion break to terminate).
+fn replay(wl: &Workload, id: &PolicyId, src: &mut dyn ArrivalSource, seed: u64) -> SimResult {
+    let cfg = SimConfig {
+        target_completions: u64::MAX / 2,
+        warmup_completions: 0,
+        ..Default::default()
+    };
+    let mut pol = quickswap::policy::build(id, wl).unwrap();
+    let mut eng = Engine::new(wl, cfg);
+    let mut rng = Rng::new(seed);
+    eng.run(src, pol.as_mut(), &mut rng)
+}
+
+/// Every statistic downstream consumers read, compared to the bit.
+fn assert_results_bit_identical(a: &SimResult, b: &SimResult, tag: &str) {
+    assert_eq!(a.events, b.events, "{tag}: events");
+    assert_eq!(a.completed, b.completed, "{tag}: completed");
+    assert_eq!(a.mean_t_all.to_bits(), b.mean_t_all.to_bits(), "{tag}: mean_t_all");
+    assert_eq!(a.ci95.to_bits(), b.ci95.to_bits(), "{tag}: ci95");
+    assert_eq!(a.weighted_t.to_bits(), b.weighted_t.to_bits(), "{tag}: weighted_t");
+    assert_eq!(a.jain.to_bits(), b.jain.to_bits(), "{tag}: jain");
+    assert_eq!(a.utilization.to_bits(), b.utilization.to_bits(), "{tag}: utilization");
+    assert_eq!(a.sim_time.to_bits(), b.sim_time.to_bits(), "{tag}: sim_time");
+    assert_eq!(a.count, b.count, "{tag}: count");
+    for c in 0..a.mean_t.len() {
+        assert_eq!(a.mean_t[c].to_bits(), b.mean_t[c].to_bits(), "{tag}: mean_t[{c}]");
+        assert_eq!(a.mean_n[c].to_bits(), b.mean_n[c].to_bits(), "{tag}: mean_n[{c}]");
+    }
+}
+
+/// The tentpole equivalence: streaming mmap-backed replay == the
+/// materialized `TraceSource` path, bitwise, for every block size and
+/// every policy, on the fig5 (four_class) and fig6 (borg) shapes.
+#[test]
+fn streaming_replay_is_bit_identical_across_blocks_and_policies() {
+    let shapes: [(&str, Workload, usize); 2] = [
+        ("four_class", Workload::four_class(4.0), 2_000),
+        ("borg", borg_workload(3.0), 1_200),
+    ];
+    let dir = tmp_dir("bitident");
+    let blocks = [1usize, 7, 64, 4096];
+    for (name, wl, n) in shapes {
+        let tr = Trace::generate(&wl, n, 0x5eed_2026);
+        let paths: Vec<_> = blocks
+            .iter()
+            .map(|&block| {
+                let path = dir.join(format!("{name}_{block}.qst"));
+                tr.write_qst(&path, wl.num_classes(), block).unwrap();
+                (block, path)
+            })
+            .collect();
+        for pstr in ALL_POLICIES {
+            let id: PolicyId = pstr.parse().unwrap();
+            let mut base_src = TraceSource::new(wl.clone(), tr.clone()).unwrap();
+            let base = replay(&wl, &id, &mut base_src, 5);
+            assert!(base.completed > 0, "{name}/{pstr}: nothing completed");
+            for (block, path) in &paths {
+                let mut src = StreamingTraceSource::open(path, wl.clone()).unwrap();
+                let got = replay(&wl, &id, &mut src, 5);
+                assert_results_bit_identical(&base, &got, &format!("{name}/{pstr}/block={block}"));
+            }
+        }
+        for (_, path) in &paths {
+            std::fs::remove_file(path).ok();
+        }
+    }
+}
+
+/// The one-pass CSV converter and the in-memory writer produce the same
+/// bytes (CSV round-trips f64s via shortest-round-trip Display, so no
+/// precision is lost on the way through text).
+#[test]
+fn converter_bytes_match_writer_bytes() {
+    let wl = Workload::four_class(4.0);
+    let tr = Trace::generate(&wl, 1_234, 77);
+    let dir = tmp_dir("convert");
+    let csv = dir.join("t.csv");
+    let direct = dir.join("direct.qst");
+    let converted = dir.join("converted.qst");
+    tr.write_csv(&csv).unwrap();
+    let f1 = tr.write_qst(&direct, wl.num_classes(), 256).unwrap();
+    let f2 = qst::convert_csv(&csv, &converted, wl.num_classes(), 256).unwrap();
+    assert_eq!(f1, f2, "footers differ");
+    assert_eq!(
+        std::fs::read(&direct).unwrap(),
+        std::fs::read(&converted).unwrap(),
+        "converted bytes differ from directly written bytes"
+    );
+    for p in [&csv, &direct, &converted] {
+        std::fs::remove_file(p).ok();
+    }
+}
+
+/// Corruption is caught at open, with the failing block named; a torn
+/// (truncated) file of any cut length also refuses to open. Replay can
+/// therefore never observe a bad block.
+#[test]
+fn corrupted_and_torn_qst_hard_error_at_open() {
+    let wl = Workload::four_class(4.0);
+    let tr = Trace::generate(&wl, 600, 9);
+    let dir = tmp_dir("corrupt");
+    let path = dir.join("good.qst");
+    let footer = tr.write_qst(&path, wl.num_classes(), 64).unwrap();
+    let good = std::fs::read(&path).unwrap();
+
+    // Flip one byte inside block 3's payload.
+    let mut bytes = good.clone();
+    bytes[footer.blocks[3].offset as usize + 5] ^= 0x40;
+    let bad = dir.join("flipped.qst");
+    std::fs::write(&bad, &bytes).unwrap();
+    let err = StreamingTraceSource::open(&bad, wl.clone())
+        .err()
+        .expect("corrupted file must not open");
+    match err {
+        TraceError::Corrupt { block, .. } => assert_eq!(block, 3, "wrong block named"),
+        e => panic!("expected Corrupt, got: {e}"),
+    }
+
+    // Torn writes: cut through the tail magic, the footer CRC, the
+    // footer body, and half the file.
+    for cut in [1usize, 13, 21, 40, good.len() / 2] {
+        let torn = dir.join(format!("torn_{cut}.qst"));
+        std::fs::write(&torn, &good[..good.len() - cut]).unwrap();
+        assert!(
+            StreamingTraceSource::open(&torn, wl.clone()).is_err(),
+            "torn file (cut {cut}) opened"
+        );
+        std::fs::remove_file(&torn).ok();
+    }
+    std::fs::remove_file(&path).ok();
+    std::fs::remove_file(&bad).ok();
+}
+
+/// Block-aligned shards drain to natural exhaustion even under a
+/// timer-driven policy (the engine breaks the timer re-arm cycle once
+/// the shard is spent and the system is empty).
+#[test]
+fn sharded_replay_with_timer_policy_terminates_and_covers_the_trace() {
+    let wl = Workload::four_class(4.0);
+    let tr = Trace::generate(&wl, 900, 3);
+    let dir = tmp_dir("shards");
+    let path = dir.join("sharded.qst");
+    tr.write_qst(&path, wl.num_classes(), 32).unwrap();
+    let id: PolicyId = "msr-seq".parse().unwrap();
+    let mut total = 0;
+    for s in 0..3 {
+        let mut src = StreamingTraceSource::open_shard(&path, wl.clone(), s, 3).unwrap();
+        let expect = src.shard_len();
+        let r = replay(&wl, &id, &mut src, 1);
+        assert_eq!(r.completed, expect, "shard {s} left jobs behind");
+        total += r.completed;
+    }
+    assert_eq!(total, 900, "shards do not cover the trace");
+    std::fs::remove_file(&path).ok();
+}
+
+/// A nonstationary (diurnal) arrival stream recorded to `.qst` and
+/// replayed gives bit-identical results to simulating the live warped
+/// source — the rate curve survives the recording round trip.
+#[test]
+fn rate_curve_trace_roundtrip_matches_live_source() {
+    let wl = Workload::four_class(3.0).with_rate_curve(RateCurve::Diurnal {
+        period: 200.0,
+        amp: 0.6,
+        phase: 0.0,
+    });
+    let id: PolicyId = "msfq:7".parse().unwrap();
+    let cfg = SimConfig {
+        target_completions: 1_500,
+        warmup_completions: 0,
+        ..Default::default()
+    };
+    let live = quickswap::sim::run_policy(&wl, &id, &cfg, 99).unwrap();
+    // Ample trace: the target ends the run before the trace runs dry.
+    let tr = Trace::generate(&wl, 12_000, 99);
+    let dir = tmp_dir("ratecurve");
+    let path = dir.join("diurnal.qst");
+    tr.write_qst(&path, wl.num_classes(), 512).unwrap();
+    let mut src = StreamingTraceSource::open(&path, wl.clone()).unwrap();
+    let mut pol = quickswap::policy::build(&id, &wl).unwrap();
+    let mut eng = Engine::new(&wl, cfg);
+    let mut rng = Rng::new(99);
+    let replayed = eng.run(&mut src, pol.as_mut(), &mut rng);
+    assert_results_bit_identical(&live, &replayed, "diurnal live vs replay");
+    std::fs::remove_file(&path).ok();
+}

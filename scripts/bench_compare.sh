@@ -7,10 +7,13 @@
 # Gate: the headline targets (`sim_msfq:31`, `sim_borg_adaptive_qs`,
 # `sim_server_filling`, the ladder-schedule twins `sim_fcfs:ladder` /
 # `sim_borg_adaptive_qs:ladder`, the CRN shared-stream target
-# `sim_paired_shared_stream`, and the unitless `paired_ci_width_ratio`)
+# `sim_paired_shared_stream`, the streaming `.qst` replay target
+# `sim_trace_replay`, and the unitless `paired_ci_width_ratio`)
 # fail the run when they regress >30% below the committed baseline, or
 # when they are missing from the fresh artifact entirely (a dropped
-# scenario must not pass silently); everything else — and the
+# scenario must not pass silently); `sim_trace_replay` additionally
+# carries an absolute >= 2M events/s acceptance floor independent of the
+# committed baseline; everything else — and the
 # [0.70, 1.0) band on the gated targets — is warn-only, because
 # smoke-scale numbers on shared CI runners jitter. The committed
 # baseline carries measured rates from a CI artifact, so the band is
@@ -47,7 +50,12 @@ if committed.get("scale") != fresh.get("scale"):
 
 GATED = ("sim_msfq:31", "sim_borg_adaptive_qs", "sim_server_filling",
          "sim_fcfs:ladder", "sim_borg_adaptive_qs:ladder",
-         "sim_paired_shared_stream", "paired_ci_width_ratio")
+         "sim_paired_shared_stream", "sim_trace_replay",
+         "paired_ci_width_ratio")
+# Absolute floors (same unit as the artifact), enforced on top of the
+# ratio gate: the streaming replay target has a hard acceptance number
+# from the trace-pipeline PR, not just a no-regression requirement.
+FLOORS = {"sim_trace_replay": 2.0e6}
 missing = [g for g in GATED if g not in new]
 if missing:
     sys.exit("error: gated bench target(s) missing from the fresh artifact: "
@@ -70,6 +78,9 @@ for name in sorted(set(base) | set(new)):
         failures.append(f"{name} at {ratio:.2f}x of baseline")
     elif ratio < 1.0:
         flag = "  (below baseline - warn only)"
+    if name in FLOORS and new[name] < FLOORS[name]:
+        flag = f"  <-- FAIL: below the {FLOORS[name]:.1e} absolute floor"
+        failures.append(f"{name} at {new[name]:.3e} (floor {FLOORS[name]:.1e})")
     print(f"  {name:<32} {new[name]:.3e} vs {base[name]:.3e}  ({ratio:.2f}x){flag}")
 if failures:
     sys.exit("error: perf trajectory regression: " + "; ".join(failures))

@@ -14,7 +14,9 @@
 #   * the consult cache or the CRN shared-stream replay is a net
 #     slowdown, or CRN pairing widens the Δ CI (paired_ci_width_ratio
 #     below 1.0 — the acceptance value is asserted at 3.0 by
-#     rust/tests/integration_paired.rs).
+#     rust/tests/integration_paired.rs),
+#   * the streaming .qst replay (sim_trace_replay) falls below its
+#     absolute 2M events/s acceptance floor.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -84,6 +86,14 @@ if crn is not None:
     print(f"paired_ci_width_ratio (unpaired / paired Δ CI, fig2 frontier): {crn:.2f}x")
     if crn < 1.0:
         failures.append(f"paired_ci_width_ratio {crn:.2f}x - CRN pairing widened the Δ CI")
+# Streaming .qst replay: the acceptance floor is absolute (>= 2M
+# events/s), independent of the committed trajectory baseline.
+replay = results.get("sim_trace_replay")
+if replay is not None:
+    marker = "" if replay >= 2.0e6 else "  <-- below the 2M events/s floor"
+    print(f"sim_trace_replay (streaming .qst, fcfs): {replay / 1e6:.2f} M events/s{marker}")
+    if replay < 2.0e6:
+        failures.append(f"sim_trace_replay at {replay:.3e} events/s (floor 2.0e6)")
 if failures:
     sys.exit("error: perf smoke gate: " + "; ".join(failures))
 PYEOF

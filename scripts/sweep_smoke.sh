@@ -13,7 +13,12 @@
 #      the resume log must show units served from the journal. The
 #      `sweep status` endpoint is probed for totals and used to pace the
 #      kill.
-#   4. Chaos leg: a fsync'd journaled driver serves two workers running
+#   4. Trace leg: generate a 1M-job four_class trace, convert it to the
+#      columnar `.qst` format, probe the footer-only `trace stats`, then
+#      replay it as a 4-shard sweep — in-process under a < 64 MiB
+#      resident-set assertion (the streaming source never materializes
+#      the trace), and as driver + 2 workers with a byte-identical CSV.
+#   5. Chaos leg: a fsync'd journaled driver serves two workers running
 #      seeded fault plans (QS_FAULT_PLAN) — one crashes mid-sweep, one
 #      loses its connection and self-heals via reconnect/resend — and
 #      the surviving fabric must still converge to a CSV byte-identical
@@ -201,6 +206,45 @@ if [ -z "$FROM_JOURNAL" ] || [ "$FROM_JOURNAL" -lt 5 ]; then
 fi
 echo "ok: resume served $FROM_JOURNAL units from the journal without rerunning them"
 
+echo "== trace leg: generate -> convert -> stats =="
+TRACE_CSV=$OUT/trace_smoke.csv
+TRACE_QST=$OUT/trace_smoke.qst
+"$BIN" trace generate --workload four_class --lambda 4.0 --n 1000000 --seed 42 \
+    --out "$TRACE_CSV"
+"$BIN" trace convert --in "$TRACE_CSV" --out "$TRACE_QST" --workload four_class
+"$BIN" trace stats "$TRACE_QST" | tee "$OUT/trace_stats.txt"
+grep -q '1000000 arrivals' "$OUT/trace_stats.txt"
+echo "ok: footer-only stats report the full trace"
+
+# The trace grid: 1 λ × 3 policies × 4 shards = 12 units, each replaying
+# its block-aligned quarter of the 1M-job trace to exhaustion.
+TGRID=(--workload four_class --lambdas 4.0 --policies msf,msfq:7,fcfs
+       --seed 42 --trace "$TRACE_QST" --shards 4)
+
+echo "== trace leg: in-process streaming replay (RSS-bounded) =="
+if /usr/bin/time -v true >/dev/null 2>&1; then
+    /usr/bin/time -v "$BIN" sweep run "${TGRID[@]}" --out "$OUT/trace_inproc.csv" \
+        2> "$OUT/trace_time.log"
+    RSS_KB=$(sed -n 's/.*Maximum resident set size (kbytes): //p' "$OUT/trace_time.log")
+    if [ -z "$RSS_KB" ] || [ "$RSS_KB" -ge 65536 ]; then
+        echo "error: 1M-job streaming replay peaked at ${RSS_KB:-?} kB resident (>= 64 MiB)" >&2
+        cat "$OUT/trace_time.log" >&2
+        exit 1
+    fi
+    echo "ok: 1M-job streaming replay peaked at $RSS_KB kB resident (< 64 MiB)"
+else
+    echo "warning: GNU time unavailable — streaming-replay RSS bound not asserted"
+    "$BIN" sweep run "${TGRID[@]}" --out "$OUT/trace_inproc.csv"
+fi
+
+echo "== trace leg: sharded run, driver + 2 workers =="
+run_sharded "$OUT/trace_driver.log" \
+    "$BIN" sweep drive "${TGRID[@]}" --addr 127.0.0.1:0 --out "$OUT/trace_sharded.csv"
+
+echo "== trace diff =="
+require_identical "$OUT/trace_inproc.csv" "$OUT/trace_sharded.csv"
+rm -f "$TRACE_CSV"
+
 fi # QS_CHAOS_ONLY
 
 # The chaos grid: 2 λ × 3 policies × 4 reps = 24 units with enough work
@@ -266,7 +310,8 @@ if [ "${QS_CHAOS_ONLY:-0}" = "1" ]; then
     echo "chaos smoke OK: crashed and reconnecting workers converged" \
          "to a byte-identical CSV"
 else
-    echo "sweep smoke OK: sharded (2 workers) == in-process for the plain grid" \
-         "and the paired (CRN) grid, a SIGKILLed journaled driver resumed" \
+    echo "sweep smoke OK: sharded (2 workers) == in-process for the plain grid," \
+         "the paired (CRN) grid, and the 1M-job sharded trace replay" \
+         "(< 64 MiB resident); a SIGKILLed journaled driver resumed" \
          "to a byte-identical CSV, and the chaos leg converged under faults"
 fi
